@@ -1,0 +1,72 @@
+//! Multitenancy (paper §4.5, Figure 5): run the VWW person detector and
+//! the hotword model from ONE shared arena — persistent sections stack,
+//! the non-persistent section is shared and sized to the larger model.
+//!
+//! Compares the shared-arena total against the two-separate-arenas total
+//! (the Figure 5 saving) and demonstrates interleaved invocations.
+//!
+//! ```text
+//! cargo run --release --example multi_model
+//! ```
+
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::{MicroInterpreter, SharedArena};
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::Model;
+use tfmicro::testutil::Rng;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let vww = Model::from_file("artifacts/vww.tmf")?;
+    let hotword = Model::from_file("artifacts/hotword.tmf")?;
+    let resolver = OpResolver::with_optimized_ops();
+
+    // --- baseline: one arena per model ----------------------------------
+    let mut arena_v = Arena::new(256 * 1024);
+    let interp_v = MicroInterpreter::new(&vww, &resolver, &mut arena_v)?;
+    let use_v = interp_v.arena_usage();
+    drop(interp_v);
+
+    let mut arena_h = Arena::new(64 * 1024);
+    let interp_h = MicroInterpreter::new(&hotword, &resolver, &mut arena_h)?;
+    let use_h = interp_h.arena_usage();
+    drop(interp_h);
+
+    let separate_total = use_v.total + use_h.total;
+    println!("separate arenas: vww {}B + hotword {}B = {}B", use_v.total, use_h.total, separate_total);
+
+    // --- shared arena (Figure 5) -----------------------------------------
+    let shared = SharedArena::new(256 * 1024);
+    let mut tenant_v = MicroInterpreter::new_shared(&vww, &resolver, &shared)?;
+    let mut tenant_h = MicroInterpreter::new_shared(&hotword, &resolver, &shared)?;
+    println!(
+        "shared arena:   {}B persistent (stacked) + {}B non-persistent (max) = {}B",
+        shared.persistent_used(),
+        shared.nonpersistent_used(),
+        shared.total_used()
+    );
+    let saving = separate_total.saturating_sub(shared.total_used());
+    println!(
+        "multitenancy saving: {}B ({:.1}%)",
+        saving,
+        saving as f64 / separate_total as f64 * 100.0
+    );
+
+    // --- interleaved execution (sequential, per §4.5's precondition) ----
+    let mut rng = Rng::seeded(5);
+    let mut img = vec![0i8; 96 * 96 * 3];
+    let mut audio = vec![0i8; 392];
+    for round in 0..3 {
+        rng.fill_i8(&mut img);
+        tenant_v.input_mut(0)?.copy_from_i8(&img)?;
+        tenant_v.invoke()?;
+        let person = tenant_v.output(0)?.as_i8()?.to_vec();
+
+        rng.fill_i8(&mut audio);
+        tenant_h.input_mut(0)?.copy_from_i8(&audio)?;
+        tenant_h.invoke()?;
+        let word = tenant_h.output(0)?.as_i8()?.to_vec();
+
+        println!("round {round}: vww scores {person:?}, hotword scores {word:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the complete TF Micro-style application life cycle in ~40
+//! lines (paper §4.1's four steps).
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::Model;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Step 0: load the serialized model (on an MCU this is a flash array;
+    // here it is the exporter's conv_ref artifact).
+    let model = Model::from_file("artifacts/conv_ref.tmf")?;
+    println!("model: {} ({} bytes of flash)", model.description(), model.serialized_size());
+
+    // Step 1: build an op resolver. Registering only what the model needs
+    // keeps dead kernels out of the binary; `with_optimized_ops` is the
+    // kitchen-sink + vendor-optimized variant.
+    let resolver = OpResolver::with_optimized_ops();
+
+    // Step 2: supply the memory arena. All allocation happens at init.
+    let mut arena = Arena::new(32 * 1024);
+
+    // Step 3: create the interpreter (allocates tensors, prepares kernels,
+    // plans memory, seals the arena).
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena)?;
+    let usage = interp.arena_usage();
+    println!(
+        "arena: {} persistent + {} non-persistent = {} of {} bytes",
+        usage.persistent, usage.nonpersistent, usage.total, usage.capacity
+    );
+
+    // Step 4: populate inputs, invoke, read outputs.
+    let input_len = interp.input(0)?.meta.num_elements();
+    let pixels: Vec<i8> = (0..input_len).map(|i| ((i * 7) % 256) as u8 as i8).collect();
+    interp.input_mut(0)?.copy_from_i8(&pixels)?;
+    interp.invoke()?;
+
+    let out = interp.output(0)?;
+    println!("class scores (i8): {:?}", out.as_i8()?);
+    println!("class probabilities: {:?}", out.dequantized()?);
+    Ok(())
+}

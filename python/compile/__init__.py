@@ -1,0 +1,5 @@
+"""Build-time Python: model authoring, quantization, export, AOT lowering.
+
+Never imported at run time — the Rust binary consumes only the files this
+package writes into ``artifacts/``.
+"""

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX/Pallas computations -> HLO text artifacts for the
+Rust PJRT runtime (Layer 2/1 -> Layer 3 bridge).
+
+Python runs ONCE, here; the Rust binary is self-contained afterwards.
+
+Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (``make artifacts`` -> artifacts/):
+  hotword_f32.hlo.txt       whole float hotword model — the
+                            interpreter-vs-compiled ablation baseline
+  conv_ref_pallas.hlo.txt   whole float conv_ref model with its first conv
+                            routed through the Layer-1 Pallas kernel
+  fc_int8.hlo.txt           the Pallas int8 requantized matmul kernel at
+                            hotword-fc1 shape — the "vendor accelerated
+                            kernel" the Rust resolver can register
+  hotword_f32_golden.bin    f32 golden I/O for the runtime integration test
+                            (u32 in_len, u32 out_len, f32 in[], f32 out[])
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import build_params, conv_ref_spec, float_forward, hotword_spec, jax_forward
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: elided literals (`constant({...})`)
+    # silently become garbage on the Rust-side text parser.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def emit_hotword_f32(out_dir: str) -> None:
+    spec = hotword_spec()
+    params = build_params(spec)
+    fwd = jax_forward(spec, params)
+    x_spec = jax.ShapeDtypeStruct(spec.input_shape, jnp.float32)
+    text = to_hlo_text(jax.jit(fwd).lower(x_spec))
+    with open(os.path.join(out_dir, "hotword_f32.hlo.txt"), "w") as f:
+        f.write(text)
+
+    # Golden I/O for the Rust runtime test, from the numpy float oracle.
+    rng = np.random.default_rng(11)
+    x = rng.normal(0, 1, spec.input_shape).astype(np.float32)
+    y = float_forward(spec, params, x).astype(np.float32)
+    with open(os.path.join(out_dir, "hotword_f32_golden.bin"), "wb") as f:
+        f.write(struct.pack("<II", x.size, y.size))
+        f.write(x.tobytes())
+        f.write(y.tobytes())
+    print(f"hotword_f32.hlo.txt: {len(text)} chars, golden {x.size}->{y.size}")
+
+
+def emit_conv_ref_pallas(out_dir: str) -> None:
+    spec = conv_ref_spec()
+    params = build_params(spec)
+    fwd = jax_forward(spec, params, use_pallas=True)
+    x_spec = jax.ShapeDtypeStruct(spec.input_shape, jnp.float32)
+    text = to_hlo_text(jax.jit(fwd).lower(x_spec))
+    with open(os.path.join(out_dir, "conv_ref_pallas.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"conv_ref_pallas.hlo.txt: {len(text)} chars")
+
+
+def emit_fc_int8_kernel(out_dir: str) -> None:
+    """The Layer-1 int8 matmul kernel at hotword-fc1 shape, as its own
+    loadable executable (the per-op vendor-kernel artifact)."""
+    from .kernels.conv_pallas import matmul_int8_pallas
+
+    m, k, n = 1, 392, 32
+
+    def fn(a, b, bias, mult, shift):
+        return (matmul_int8_pallas(a, b, bias, mult, shift,
+                                   in_offset=0, out_offset=0),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.int8),
+        jax.ShapeDtypeStruct((n, k), jnp.int8),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "fc_int8.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"fc_int8.hlo.txt: {len(text)} chars")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    emit_hotword_f32(args.out)
+    emit_conv_ref_pallas(args.out)
+    emit_fc_int8_kernel(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""Exporter: float JAX/numpy models -> quantized TMF files + golden vectors.
+
+This is the repo's analog of the TensorFlow Lite conversion tool chain the
+paper builds on (§3.3, Figure 1): take a trained (here: seeded) float
+model, post-training-quantize it to int8 against a calibration set, and
+serialize a deployable model file. On top of that, it runs the quantized
+graph through the numpy reference kernels (``qref.py``) to produce golden
+input/output vectors that pin the Rust interpreter's numerics.
+
+Usage:  python -m compile.export --out ../artifacts [--models conv_ref,...]
+
+Outputs per model NAME:
+  NAME.tmf          — the serialized model
+  NAME_golden.bin   — header(u32 n_cases, u32 in_len, u32 out_len) then
+                      n_cases * (in i8[in_len] + out i8[out_len])
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+
+import numpy as np
+
+from . import qref, tmf
+from .model import ALL_SPECS, ModelSpec, build_params, float_forward
+from .quantize import (QParams, SOFTMAX_OUT, activation_qparams,
+                       activation_range_int8, quantize_bias,
+                       quantize_multiplier, quantize_weights,
+                       weight_qparams_per_channel, weight_qparams_per_tensor)
+
+ACT_TAG = {"none": tmf.ACT_NONE, "relu": tmf.ACT_RELU, "relu6": tmf.ACT_RELU6}
+
+
+def calibration_batch(spec: ModelSpec, seed: int = 100, n: int = 8) -> np.ndarray:
+    """Seeded synthetic calibration data in a sensor-plausible range."""
+    rng = np.random.default_rng(seed)
+    shape = (n,) + spec.input_shape[1:]
+    if len(spec.input_shape) == 4:
+        # Images: [0, 1) pixels with a planted bright blob in half the
+        # samples (the synthetic "person" pattern; DESIGN.md §6.4).
+        x = rng.uniform(0.0, 1.0, shape).astype(np.float32)
+        for i in range(0, n, 2):
+            h0 = rng.integers(0, shape[1] // 2)
+            w0 = rng.integers(0, shape[2] // 2)
+            x[i, h0:h0 + shape[1] // 3, w0:w0 + shape[2] // 3, :] *= 2.0
+        return np.clip(x, 0.0, 1.0)
+    # Audio-feature vectors: roughly standardized.
+    return rng.normal(0.0, 1.0, shape).astype(np.float32)
+
+
+def _effective_mults(in_scale, w_scales, out_scale):
+    """Per-channel (mult, shift) arrays exactly as the Rust prepare phase
+    computes them: f64 products of f32 scales."""
+    mults, shifts = [], []
+    for ws in np.atleast_1d(w_scales):
+        real = float(np.float32(in_scale)) * float(np.float32(ws)) / float(np.float32(out_scale))
+        m, s = quantize_multiplier(real)
+        mults.append(m)
+        shifts.append(s)
+    return np.array(mults, dtype=np.int64), np.array(shifts, dtype=np.int64)
+
+
+class QuantizedModel:
+    """A PTQ'd model: per-layer tensors + quantization params, able to run
+    int8 inference (golden engine) and serialize to TMF."""
+
+    def __init__(self, spec: ModelSpec, seed: int = 0, calib_seed: int = 100):
+        self.spec = spec
+        self.params = build_params(spec, seed)
+        calib = calibration_batch(spec, calib_seed)
+        _, acts = float_forward(spec, self.params, calib, collect=True)
+
+        # Per-layer-output activation params; index 0 is the model input.
+        self.act_q: list[QParams] = [activation_qparams(acts[0].min(), acts[0].max())]
+        for layer, a in zip(spec.layers, acts[1:]):
+            if layer.kind == "softmax":
+                self.act_q.append(SOFTMAX_OUT)
+            elif layer.kind in ("maxpool",):
+                self.act_q.append(self.act_q[-1])  # pooling keeps quantization
+            else:
+                self.act_q.append(activation_qparams(a.min(), a.max()))
+
+        # Quantize weights/biases.
+        self.qweights = []
+        for layer, p in zip(spec.layers, self.params):
+            if layer.kind == "conv":
+                wq = weight_qparams_per_channel(p["w"], axis=0)
+            elif layer.kind == "dwconv":
+                wq = weight_qparams_per_channel(p["w"], axis=3)
+            elif layer.kind == "fc":
+                wq = weight_qparams_per_tensor(p["w"])
+            else:
+                self.qweights.append(None)
+                continue
+            w_int = quantize_weights(p["w"], wq)
+            self.qweights.append({"qp": wq, "w": w_int})
+
+        # Biases depend on each layer's *input* activation scale.
+        for i, (layer, p) in enumerate(zip(spec.layers, self.params)):
+            if self.qweights[i] is None:
+                continue
+            in_scale = self.act_q[i].scale
+            wq = self.qweights[i]["qp"]
+            self.qweights[i]["b"] = quantize_bias(p["b"], in_scale, wq.scales)
+
+    # ---- int8 inference via the numpy reference kernels ----------------
+
+    def run_int8(self, x_i8: np.ndarray) -> np.ndarray:
+        spec = self.spec
+        h = x_i8.reshape(spec.input_shape)
+        for i, layer in enumerate(spec.layers):
+            in_q, out_q = self.act_q[i], self.act_q[i + 1]
+            if layer.kind in ("conv", "dwconv"):
+                qw = self.qweights[i]
+                mults, shifts = _effective_mults(in_q.scale, qw["qp"].scales, out_q.scale)
+                lo, hi = activation_range_int8(layer.act, out_q.scale, out_q.zero_point)
+                fn = qref.conv2d_int8 if layer.kind == "conv" else qref.depthwise_conv2d_int8
+                h = fn(h, qw["w"], qw["b"], layer.stride, layer.padding,
+                       in_q.zero_point, out_q.zero_point, mults, shifts, lo, hi)
+            elif layer.kind == "maxpool":
+                h = qref.max_pool_int8(h, layer.k, layer.stride, "VALID")
+            elif layer.kind == "mean":
+                h = qref.mean_int8(h, (1, 2), in_q.scale, in_q.zero_point,
+                                   out_q.scale, out_q.zero_point)
+            elif layer.kind == "fc":
+                qw = self.qweights[i]
+                mults, shifts = _effective_mults(in_q.scale, qw["qp"].scales, out_q.scale)
+                lo, hi = activation_range_int8(layer.act, out_q.scale, out_q.zero_point)
+                h = qref.fully_connected_int8(h.reshape(h.shape[0], -1), qw["w"],
+                                              qw["b"], in_q.zero_point,
+                                              out_q.zero_point, mults[0], shifts[0],
+                                              lo, hi)
+            elif layer.kind == "softmax":
+                h = qref.softmax_int8(h, in_q.scale)
+        return h
+
+    # ---- serialization ---------------------------------------------------
+
+    def to_tmf(self) -> bytes:
+        spec = self.spec
+        b = tmf.ModelBuilder(spec.description or spec.name)
+        shape = list(spec.input_shape)
+        in_q = self.act_q[0]
+        t_prev = b.add_tensor("input", tmf.I8, shape, scales=[in_q.scale],
+                              zero_points=[in_q.zero_point])
+        b_inputs = [t_prev]
+
+        for i, layer in enumerate(spec.layers):
+            out_q = self.act_q[i + 1]
+            if layer.kind in ("conv", "dwconv"):
+                qw = self.qweights[i]
+                w = qw["w"]
+                wbuf = b.add_buffer(w.tobytes())
+                waxis = 0 if layer.kind == "conv" else 3
+                t_w = b.add_tensor(f"w{i}", tmf.I8, list(w.shape), buffer=wbuf,
+                                   scales=list(qw["qp"].scales),
+                                   zero_points=[0] * len(qw["qp"].scales),
+                                   quant_axis=waxis)
+                bias = qw["b"]
+                bbuf = b.add_buffer(bias.tobytes())
+                t_b = b.add_tensor(f"b{i}", tmf.I32, [len(bias)], buffer=bbuf)
+                if layer.kind == "conv":
+                    oh = _out_dim(shape[1], layer)
+                    ow = _out_dim(shape[2], layer)
+                    shape = [1, oh, ow, w.shape[0]]
+                    opts = tmf.conv_options(
+                        tmf.PAD_SAME if layer.padding == "SAME" else tmf.PAD_VALID,
+                        ACT_TAG[layer.act], layer.stride, layer.stride)
+                    opcode = tmf.CONV_2D
+                else:
+                    oh = _out_dim(shape[1], layer)
+                    ow = _out_dim(shape[2], layer)
+                    shape = [1, oh, ow, w.shape[3]]
+                    opts = tmf.conv_options(
+                        tmf.PAD_SAME if layer.padding == "SAME" else tmf.PAD_VALID,
+                        ACT_TAG[layer.act], layer.stride, layer.stride,
+                        depth_multiplier=1)
+                    opcode = tmf.DEPTHWISE_CONV_2D
+                t_out = b.add_tensor(f"act{i}", tmf.I8, shape,
+                                     scales=[out_q.scale],
+                                     zero_points=[out_q.zero_point])
+                b.add_op(opcode, [t_prev, t_w, t_b], [t_out], opts)
+                t_prev = t_out
+            elif layer.kind == "maxpool":
+                shape = [1, shape[1] // layer.stride, shape[2] // layer.stride, shape[3]]
+                t_out = b.add_tensor(f"act{i}", tmf.I8, shape,
+                                     scales=[out_q.scale],
+                                     zero_points=[out_q.zero_point])
+                b.add_op(tmf.MAX_POOL_2D, [t_prev], [t_out],
+                         tmf.pool_options(tmf.PAD_VALID, tmf.ACT_NONE,
+                                          layer.stride, layer.stride,
+                                          layer.k, layer.k))
+                t_prev = t_out
+            elif layer.kind == "mean":
+                axes = np.array([1, 2], dtype=np.int32)
+                abuf = b.add_buffer(axes.tobytes())
+                t_axes = b.add_tensor(f"axes{i}", tmf.I32, [2], buffer=abuf)
+                shape = [1, shape[3]]
+                t_out = b.add_tensor(f"act{i}", tmf.I8, shape,
+                                     scales=[out_q.scale],
+                                     zero_points=[out_q.zero_point])
+                b.add_op(tmf.MEAN, [t_prev, t_axes], [t_out], tmf.mean_options(False))
+                t_prev = t_out
+            elif layer.kind == "fc":
+                qw = self.qweights[i]
+                flat = int(np.prod(shape[1:]))
+                if len(shape) > 2:
+                    in_q_layer = self.act_q[i]
+                    t_flat = b.add_tensor(f"flat{i}", tmf.I8, [1, flat],
+                                          scales=[in_q_layer.scale],
+                                          zero_points=[in_q_layer.zero_point])
+                    b.add_op(tmf.RESHAPE, [t_prev], [t_flat])
+                    t_prev = t_flat
+                w = qw["w"]
+                wbuf = b.add_buffer(w.tobytes())
+                t_w = b.add_tensor(f"w{i}", tmf.I8, list(w.shape), buffer=wbuf,
+                                   scales=[float(qw["qp"].scales[0])],
+                                   zero_points=[0])
+                bias = qw["b"]
+                bbuf = b.add_buffer(bias.tobytes())
+                t_b = b.add_tensor(f"b{i}", tmf.I32, [len(bias)], buffer=bbuf)
+                shape = [1, w.shape[0]]
+                t_out = b.add_tensor(f"act{i}", tmf.I8, shape,
+                                     scales=[out_q.scale],
+                                     zero_points=[out_q.zero_point])
+                b.add_op(tmf.FULLY_CONNECTED, [t_prev, t_w, t_b], [t_out],
+                         tmf.fully_connected_options(ACT_TAG[layer.act]))
+                t_prev = t_out
+            elif layer.kind == "softmax":
+                t_out = b.add_tensor(f"act{i}", tmf.I8, shape,
+                                     scales=[out_q.scale],
+                                     zero_points=[out_q.zero_point])
+                b.add_op(tmf.SOFTMAX, [t_prev], [t_out], tmf.softmax_options(1.0))
+                t_prev = t_out
+
+        b.set_io(b_inputs, [t_prev])
+        return b.finish()
+
+    # ---- goldens ----------------------------------------------------------
+
+    def golden_cases(self, n: int = 4, seed: int = 7):
+        """(input_i8, output_i8) pairs: random, all-zero-point, extremes."""
+        rng = np.random.default_rng(seed)
+        in_len = int(np.prod(self.spec.input_shape))
+        cases = []
+        zp = self.act_q[0].zero_point
+        specials = [np.full(in_len, zp, dtype=np.int8),
+                    np.full(in_len, 127, dtype=np.int8)]
+        for i in range(n):
+            if i < len(specials):
+                x = specials[i]
+            else:
+                x = rng.integers(-128, 128, in_len).astype(np.int8)
+            y = self.run_int8(x.reshape(self.spec.input_shape))
+            cases.append((x, y.reshape(-1).astype(np.int8)))
+        return cases
+
+
+def _out_dim(size, layer):
+    if layer.padding == "SAME":
+        return -(-size // layer.stride)
+    return (size - layer.k) // layer.stride + 1
+
+
+def write_golden(path: str, cases):
+    with open(path, "wb") as f:
+        in_len = len(cases[0][0])
+        out_len = len(cases[0][1])
+        f.write(struct.pack("<III", len(cases), in_len, out_len))
+        for x, y in cases:
+            f.write(x.tobytes())
+            f.write(y.tobytes())
+
+
+def export_all(out_dir: str, models=None, n_golden: int = 4):
+    os.makedirs(out_dir, exist_ok=True)
+    results = {}
+    for name, spec_fn in ALL_SPECS.items():
+        if models and name not in models:
+            continue
+        qm = QuantizedModel(spec_fn())
+        blob = qm.to_tmf()
+        with open(os.path.join(out_dir, f"{name}.tmf"), "wb") as f:
+            f.write(blob)
+        cases = qm.golden_cases(n_golden)
+        write_golden(os.path.join(out_dir, f"{name}_golden.bin"), cases)
+        results[name] = (len(blob), len(cases))
+        print(f"exported {name}: {len(blob)} bytes, {len(cases)} golden cases")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--golden", type=int, default=4)
+    args = ap.parse_args()
+    export_all(args.out, args.models.split(",") if args.models else None,
+               args.golden)

@@ -1,0 +1,183 @@
+"""Layer-1 Pallas kernels: the conv hot spot re-thought for TPU.
+
+CMSIS-NN's Cortex-M4 trick is on-the-fly im2col into SRAM scratch plus a
+dual-MAC inner loop. The TPU re-think (DESIGN.md §7 Hardware Adaptation):
+
+  * im2col patch tiles stream HBM->VMEM via BlockSpec (the SRAM scratch
+    analog) — the patch matrix never materializes in HBM per tile;
+  * the inner product becomes an MXU-shaped ``dot_general`` with
+    ``preferred_element_type=int32`` (the SMLAD analog, 128x128 systolic
+    instead of dual 16-bit MAC);
+  * the TFLite per-channel requantization (fixed-point multiplier + POT
+    shift) runs fused in the kernel epilogue so only int8 leaves VMEM.
+
+Kernels here run ``interpret=True`` — mandatory for CPU-PJRT execution;
+real-TPU lowering emits a Mosaic custom call the CPU plugin cannot run.
+Correctness is pinned against ``ref.py`` (pure jnp) and against
+``python/compile/qref.py`` (the exporter's numpy golden engine) by
+``python/tests/test_pallas_kernels.py``, including a hypothesis sweep.
+
+Tiling (for the DESIGN.md §Perf VMEM/MXU estimate): TILE_M = 128 output
+pixels per grid step; weights/bias/requant tables are small enough for
+our models to sit whole in VMEM (<= 128 output channels).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)  # int64 needed by the requant math
+
+TILE_M = 128
+
+
+# --------------------------------------------------------------------------
+# Fixed-point requantization in jnp (bit-exact twin of quantize.py / Rust).
+# --------------------------------------------------------------------------
+
+def _srdhm(a, b):
+    ab = a.astype(jnp.int64) * b.astype(jnp.int64)
+    nudge = jnp.where(ab >= 0, jnp.int64(1) << 30, jnp.int64(1) - (jnp.int64(1) << 30))
+    v = ab + nudge
+    return jnp.sign(v) * (jnp.abs(v) >> 31)
+
+
+def _rdbp(x, exponent):
+    mask = (jnp.int64(1) << exponent) - 1
+    remainder = x & mask
+    threshold = (mask >> 1) + (x < 0)
+    return (x >> exponent) + (remainder > threshold)
+
+
+def mbqm_jnp(x, mult, shift):
+    """MultiplyByQuantizedMultiplier; x int32 [..., N], mult/shift int32 [N]."""
+    left = jnp.maximum(shift, 0)
+    right = jnp.maximum(-shift, 0)
+    shifted = (x.astype(jnp.int64) << left.astype(jnp.int64)).astype(jnp.int32)
+    return _rdbp(_srdhm(shifted, mult), right.astype(jnp.int64)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# int8 matmul kernel (the FC / im2col-conv workhorse).
+# --------------------------------------------------------------------------
+
+def _matmul_int8_kernel(a_ref, b_ref, bias_ref, mult_ref, shift_ref, o_ref, *,
+                        in_offset, out_offset, act_min, act_max):
+    a = a_ref[...].astype(jnp.int32) + in_offset          # [TILE_M, K]
+    b = b_ref[...].astype(jnp.int32)                      # [N, K]
+    acc = jax.lax.dot_general(
+        a, b, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                 # [TILE_M, N] on MXU
+    acc = acc + bias_ref[...][None, :]
+    out = mbqm_jnp(acc, mult_ref[...], shift_ref[...]) + out_offset
+    o_ref[...] = jnp.clip(out, act_min, act_max).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("in_offset", "out_offset",
+                                             "act_min", "act_max"))
+def matmul_int8_pallas(a, b, bias, mult, shift, *, in_offset=0, out_offset=0,
+                       act_min=-128, act_max=127):
+    """Requantized int8 matmul: rows of ``a`` [M,K] against ``b`` [N,K].
+
+    Returns int8 [M, N]. Grid tiles M by ``TILE_M`` (M padded up); weights
+    stay resident across grid steps (the VMEM-resident operand).
+    """
+    m, k = a.shape
+    n, kb = b.shape
+    assert k == kb, (k, kb)
+    m_pad = (TILE_M - m % TILE_M) % TILE_M
+    a_p = jnp.pad(a, ((0, m_pad), (0, 0)))
+    grid = (a_p.shape[0] // TILE_M,)
+    out = pl.pallas_call(
+        functools.partial(_matmul_int8_kernel, in_offset=in_offset,
+                          out_offset=out_offset, act_min=act_min,
+                          act_max=act_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], n), jnp.int8),
+        interpret=True,
+    )(a_p, b, bias, mult, shift)
+    return out[:m]
+
+
+def conv2d_int8_pallas(x, w, bias, stride, padding, *, in_zp, out_zp, mult,
+                       shift, act_min=-128, act_max=127):
+    """int8 conv2d = jnp im2col (the HBM->VMEM streaming stage) + the
+    Pallas matmul kernel. x [N,H,W,Cin] i8, w [Cout,KH,KW,Cin] i8."""
+    from ..qref import conv_out_shape  # geometry shared with the exporter
+    n, h, ww_, cin = x.shape
+    cout, kh, kw, _ = w.shape
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    oh, ow, pt, pl_ = conv_out_shape((h, ww_), (kh, kw), (sh, sw), padding)
+    padded = jnp.full((n, h + kh, ww_ + kw, cin), jnp.int8(in_zp), dtype=jnp.int8)
+    padded = padded.at[:, pt:pt + h, pl_:pl_ + ww_, :].set(x)
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(padded[:, ky:ky + oh * sh:sh, kx:kx + ow * sw:sw, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(n * oh * ow, kh * kw * cin)
+    wmat = w.reshape(cout, kh * kw * cin)
+    out = matmul_int8_pallas(patches, wmat, bias, mult, shift,
+                             in_offset=-in_zp, out_offset=out_zp,
+                             act_min=act_min, act_max=act_max)
+    return out.reshape(n, oh, ow, cout)
+
+
+# --------------------------------------------------------------------------
+# f32 twin (wired into the AOT'd whole-model graph, model.py use_pallas).
+# --------------------------------------------------------------------------
+
+def _matmul_f32_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def matmul_f32_pallas(a, b):
+    """f32 matmul a [M,K] x b [N,K]^T via the same tiling as the int8 path."""
+    m, k = a.shape
+    n, _ = b.shape
+    m_pad = (TILE_M - m % TILE_M) % TILE_M
+    a_p = jnp.pad(a, ((0, m_pad), (0, 0)))
+    out = pl.pallas_call(
+        _matmul_f32_kernel,
+        grid=(a_p.shape[0] // TILE_M,),
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], n), jnp.float32),
+        interpret=True,
+    )(a_p, b)
+    return out[:m]
+
+
+def conv2d_f32_pallas(x, w, stride, padding):
+    """f32 conv via im2col + the Pallas f32 matmul (no bias/act: the caller
+    fuses those, matching model.py's layer structure)."""
+    from ..qref import conv_out_shape
+    n, h, ww_, cin = x.shape
+    cout, kh, kw, _ = w.shape
+    sh = sw = stride
+    oh, ow, pt, pl_ = conv_out_shape((h, ww_), (kh, kw), (sh, sw), padding)
+    padded = jnp.zeros((n, h + kh, ww_ + kw, cin), dtype=x.dtype)
+    padded = padded.at[:, pt:pt + h, pl_:pl_ + ww_, :].set(x)
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(padded[:, ky:ky + oh * sh:sh, kx:kx + ow * sw:sw, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(n * oh * ow, kh * kw * cin)
+    out = matmul_f32_pallas(patches, w.reshape(cout, -1))
+    return out.reshape(n, oh, ow, cout)

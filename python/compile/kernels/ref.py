@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+The CORE correctness contract: every Pallas kernel in this package must
+match its oracle here bit-exactly (int8 paths) or to float tolerance (f32
+paths) across the shape/dtype sweep in
+``python/tests/test_pallas_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .conv_pallas import mbqm_jnp  # the requant twin is shared on purpose
+
+
+def matmul_int8_ref(a, b, bias, mult, shift, *, in_offset=0, out_offset=0,
+                    act_min=-128, act_max=127):
+    """Reference for ``matmul_int8_pallas``: plain jnp, no tiling."""
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32) + in_offset, b.astype(jnp.int32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc = acc + bias[None, :]
+    out = mbqm_jnp(acc, mult, shift) + out_offset
+    return jnp.clip(out, act_min, act_max).astype(jnp.int8)
+
+
+def matmul_f32_ref(a, b):
+    """Reference for ``matmul_f32_pallas``."""
+    return a @ b.T
+
+
+def conv2d_f32_ref(x, w, stride, padding):
+    """Reference conv for ``conv2d_f32_pallas`` via lax conv."""
+    wt = jnp.transpose(w, (1, 2, 3, 0))
+    return jax.lax.conv_general_dilated(
+        x, wt, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,304 @@
+"""Layer-2 model definitions: the paper's three benchmark models (§5.1,
+§5.3) as declarative specs with seeded-random weights, plus float forward
+passes in numpy (for PTQ calibration) and JAX (for AOT lowering).
+
+Models:
+  * ``vww_spec``      — MobileNet-v1 width-0.25, 96x96x3 input, 2 classes:
+                        the architecture of the paper's Visual Wake Words
+                        person-detection model (Chowdhery et al. 2019).
+  * ``hotword_spec``  — small bottlenecked FC net over 392 audio features,
+                        2 classes; the Google Hotword stand-in. The paper
+                        itself used scrambled weights, so seeded-random
+                        weights preserve the benchmark's meaning
+                        (cycle counts and memory are weight-independent).
+  * ``conv_ref_spec`` — the §5.3 "Convolutional Reference" model: two conv
+                        layers, a max-pool, a dense layer, an activation.
+
+The JAX forward is the computation that ``aot.py`` lowers to HLO text for
+the Rust PJRT runtime (whole-model compiled baseline); its first conv can
+route through the Pallas kernel (Layer 1) via ``use_pallas=True``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Layer:
+    """One layer of a model spec."""
+
+    kind: str  # conv | dwconv | maxpool | fc | mean | softmax
+    cout: int = 0
+    k: int = 1
+    stride: int = 1
+    padding: str = "SAME"
+    act: str = "none"  # none | relu | relu6
+
+
+@dataclass
+class ModelSpec:
+    """A benchmark model: name, input shape, layer list."""
+
+    name: str
+    input_shape: tuple  # NHWC (N=1) or (1, features)
+    layers: list = field(default_factory=list)
+    description: str = ""
+
+
+def conv_ref_spec() -> ModelSpec:
+    """The paper §5.3 convolutional reference model."""
+    return ModelSpec(
+        name="conv_ref",
+        input_shape=(1, 16, 16, 1),
+        layers=[
+            Layer("conv", cout=8, k=3, stride=1, padding="SAME", act="relu"),
+            Layer("conv", cout=16, k=3, stride=2, padding="SAME", act="relu"),
+            Layer("maxpool", k=2, stride=2),
+            Layer("fc", cout=10),
+            Layer("softmax"),
+        ],
+        description="convolutional reference model (paper 5.3)",
+    )
+
+
+def hotword_spec() -> ModelSpec:
+    """Google-Hotword-class tiny FC net (scrambled/seeded weights)."""
+    return ModelSpec(
+        name="hotword",
+        input_shape=(1, 392),  # 49 frames x 8 mel bins, subsampled
+        layers=[
+            Layer("fc", cout=32, act="relu"),
+            Layer("fc", cout=32, act="relu"),
+            Layer("fc", cout=16, act="relu"),
+            Layer("fc", cout=2),
+            Layer("softmax"),
+        ],
+        description="hotword keyword-spotting model (scrambled weights)",
+    )
+
+
+def vww_spec() -> ModelSpec:
+    """MobileNet-v1 0.25x @ 96x96x3, 2 classes (the VWW model)."""
+    def c(ch):
+        return max(8, int(ch * 0.25))
+
+    layers = [Layer("conv", cout=c(32), k=3, stride=2, act="relu6")]
+    # (stride, base_channels) per depthwise-separable block of MobileNet-v1.
+    plan = [
+        (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+        (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024), (1, 1024),
+    ]
+    for stride, ch in plan:
+        layers.append(Layer("dwconv", k=3, stride=stride, act="relu6"))
+        layers.append(Layer("conv", cout=c(ch), k=1, stride=1, act="relu6"))
+    layers += [
+        Layer("mean"),  # global average pool over H, W
+        Layer("fc", cout=2),
+        Layer("softmax"),
+    ]
+    return ModelSpec(
+        name="vww",
+        input_shape=(1, 96, 96, 3),
+        layers=layers,
+        description="visual wake words person detection (MobileNet-v1 0.25/96)",
+    )
+
+
+ALL_SPECS = {"conv_ref": conv_ref_spec, "hotword": hotword_spec, "vww": vww_spec}
+
+
+# --------------------------------------------------------------------------
+# Weights.
+# --------------------------------------------------------------------------
+
+def build_params(spec: ModelSpec, seed: int = 0) -> list:
+    """Seeded He-normal weights per layer: list of dicts (or None)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    shape = spec.input_shape
+    for layer in spec.layers:
+        if layer.kind == "conv":
+            cin = shape[3]
+            fan_in = layer.k * layer.k * cin
+            w = rng.normal(0, np.sqrt(2.0 / fan_in),
+                           (layer.cout, layer.k, layer.k, cin)).astype(np.float32)
+            b = rng.normal(0, 0.05, layer.cout).astype(np.float32)
+            params.append({"w": w, "b": b})
+            shape = (1, _out(shape[1], layer), _out(shape[2], layer), layer.cout)
+        elif layer.kind == "dwconv":
+            cin = shape[3]
+            w = rng.normal(0, np.sqrt(2.0 / (layer.k * layer.k)),
+                           (1, layer.k, layer.k, cin)).astype(np.float32)
+            b = rng.normal(0, 0.05, cin).astype(np.float32)
+            params.append({"w": w, "b": b})
+            shape = (1, _out(shape[1], layer), _out(shape[2], layer), cin)
+        elif layer.kind == "maxpool":
+            params.append(None)
+            shape = (1, shape[1] // layer.stride, shape[2] // layer.stride, shape[3])
+        elif layer.kind == "mean":
+            params.append(None)
+            shape = (1, shape[3])
+        elif layer.kind == "fc":
+            cin = int(np.prod(shape[1:]))
+            w = rng.normal(0, np.sqrt(2.0 / cin), (layer.cout, cin)).astype(np.float32)
+            b = rng.normal(0, 0.05, layer.cout).astype(np.float32)
+            params.append({"w": w, "b": b})
+            shape = (1, layer.cout)
+        elif layer.kind == "softmax":
+            params.append(None)
+        else:
+            raise ValueError(f"unknown layer kind {layer.kind}")
+    return params
+
+
+def _out(size, layer):
+    if layer.padding == "SAME":
+        return -(-size // layer.stride)
+    return (size - layer.k) // layer.stride + 1
+
+
+def _act_np(x, act):
+    if act == "relu":
+        return np.maximum(x, 0.0)
+    if act == "relu6":
+        return np.clip(x, 0.0, 6.0)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Float forward (numpy) — the calibration oracle.
+# --------------------------------------------------------------------------
+
+def _conv2d_f32(x, w, b, stride, padding):
+    from .qref import conv_out_shape
+    cout, kh, kw, cin = w.shape
+    oh, ow, pt, pl = conv_out_shape(x.shape[1:3], (kh, kw), (stride, stride), padding)
+    n, h, ww_, c = x.shape
+    padded = np.zeros((n, h + kh, ww_ + kw, c), dtype=np.float32)
+    padded[:, pt:pt + h, pl:pl + ww_, :] = x
+    cols = np.empty((n, oh, ow, kh * kw * c), dtype=np.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = padded[:, ky:ky + oh * stride:stride, kx:kx + ow * stride:stride, :]
+            cols[..., (ky * kw + kx) * c:(ky * kw + kx + 1) * c] = sl
+    return np.einsum("nhwk,ok->nhwo", cols, w.reshape(cout, -1)) + b
+
+
+def _dwconv2d_f32(x, w, b, stride, padding):
+    from .qref import conv_out_shape
+    _, kh, kw, c = w.shape
+    oh, ow, pt, pl = conv_out_shape(x.shape[1:3], (kh, kw), (stride, stride), padding)
+    n, h, ww_, _ = x.shape
+    padded = np.zeros((n, h + kh, ww_ + kw, c), dtype=np.float32)
+    padded[:, pt:pt + h, pl:pl + ww_, :] = x
+    out = np.zeros((n, oh, ow, c), dtype=np.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = padded[:, ky:ky + oh * stride:stride, kx:kx + ow * stride:stride, :]
+            out += sl * w[0, ky, kx, :]
+    return out + b
+
+
+def float_forward(spec: ModelSpec, params, x: np.ndarray, collect=False):
+    """Run the float model; optionally collect per-layer activations
+    (the calibration trace). Input x is NHWC float32."""
+    acts = [x]
+    for layer, p in zip(spec.layers, params):
+        if layer.kind == "conv":
+            x = _act_np(_conv2d_f32(x, p["w"], p["b"], layer.stride, layer.padding), layer.act)
+        elif layer.kind == "dwconv":
+            x = _act_np(_dwconv2d_f32(x, p["w"], p["b"], layer.stride, layer.padding), layer.act)
+        elif layer.kind == "maxpool":
+            n, h, w_, c = x.shape
+            s = layer.stride
+            x = x[:, :h - h % s, :w_ - w_ % s, :]
+            x = x.reshape(n, h // s, s, w_ // s, s, c).max(axis=(2, 4))
+        elif layer.kind == "mean":
+            x = x.mean(axis=(1, 2))
+        elif layer.kind == "fc":
+            flat = x.reshape(x.shape[0], -1)
+            x = _act_np(flat @ p["w"].T + p["b"], layer.act)
+        elif layer.kind == "softmax":
+            e = np.exp(x - x.max(axis=-1, keepdims=True))
+            x = e / e.sum(axis=-1, keepdims=True)
+        acts.append(x)
+    return (x, acts) if collect else x
+
+
+# --------------------------------------------------------------------------
+# JAX forward — the Layer-2 computation aot.py lowers to HLO.
+# --------------------------------------------------------------------------
+
+def jax_forward(spec: ModelSpec, params, use_pallas: bool = False):
+    """Return a jax function x -> (output,) for AOT lowering.
+
+    With ``use_pallas=True`` the first spatial conv routes through the
+    Layer-1 Pallas matmul kernel (interpret mode) so the lowered HLO
+    exercises the Pallas path end to end.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def fwd(x):
+        h = x
+        pallas_used = False
+        for layer, p in zip(spec.layers, params):
+            if layer.kind == "conv":
+                w = jnp.asarray(p["w"])  # [cout, kh, kw, cin]
+                if use_pallas and not pallas_used and layer.k > 1:
+                    from .kernels.conv_pallas import conv2d_f32_pallas
+                    h = conv2d_f32_pallas(h, w, layer.stride, layer.padding)
+                    pallas_used = True
+                else:
+                    h = _jax_conv(h, w, layer.stride, layer.padding)
+                h = _act_jnp(h + jnp.asarray(p["b"]), layer.act)
+            elif layer.kind == "dwconv":
+                h = _jax_dwconv(h, jnp.asarray(p["w"]), layer.stride, layer.padding)
+                h = _act_jnp(h + jnp.asarray(p["b"]), layer.act)
+            elif layer.kind == "maxpool":
+                import jax.lax as lax
+                s = layer.stride
+                h = lax.reduce_window(h, -jnp.inf, lax.max,
+                                      (1, layer.k, layer.k, 1), (1, s, s, 1), "VALID")
+            elif layer.kind == "mean":
+                h = h.mean(axis=(1, 2))
+            elif layer.kind == "fc":
+                h = h.reshape(h.shape[0], -1)
+                h = _act_jnp(h @ jnp.asarray(p["w"]).T + jnp.asarray(p["b"]), layer.act)
+            elif layer.kind == "softmax":
+                h = jax.nn.softmax(h, axis=-1)
+        return (h,)
+
+    return fwd
+
+
+def _act_jnp(x, act):
+    import jax.numpy as jnp
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    return x
+
+
+def _jax_conv(x, w, stride, padding):
+    import jax.lax as lax
+    # w [cout, kh, kw, cin] -> HWIO for NHWC conv.
+    wt = w.transpose(1, 2, 3, 0)
+    return lax.conv_general_dilated(
+        x, wt, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _jax_dwconv(x, w, stride, padding):
+    import jax.lax as lax
+    # w [1, kh, kw, c] -> [kh, kw, 1, c] with feature_group_count = c.
+    c = w.shape[3]
+    wt = w.transpose(1, 2, 0, 3)
+    return lax.conv_general_dilated(
+        x, wt, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)

@@ -1,0 +1,194 @@
+"""Vectorized numpy implementations of the int8 reference kernels.
+
+These mirror ``rust/src/ops/ref_ops`` operation-for-operation and are used
+by the exporter to compute golden input/output vectors: the Rust
+interpreter must reproduce these outputs exactly (pure-integer ops) or to
+within 1 LSB (softmax/logistic, which go through float `exp`).
+
+All ops take NHWC numpy arrays. Convs use im2col + int32 matmul so the
+Python side stays fast enough to run the VWW model during export.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .quantize import multiply_by_quantized_multiplier as mbqm
+
+
+def _pair(v):
+    return v if isinstance(v, tuple) else (v, v)
+
+
+def _same_pad(in_size, filt, stride, dil=1):
+    eff = (filt - 1) * dil + 1
+    out = -(-in_size // stride)  # ceil
+    pad = max(0, (out - 1) * stride + eff - in_size)
+    return out, pad // 2
+
+
+def conv_out_shape(in_hw, k_hw, stride, padding, dil=(1, 1)):
+    """(out_h, out_w, pad_top, pad_left) for SAME/VALID (TFLite rules)."""
+    if padding == "SAME":
+        oh, pt = _same_pad(in_hw[0], k_hw[0], stride[0], dil[0])
+        ow, pl = _same_pad(in_hw[1], k_hw[1], stride[1], dil[1])
+    else:
+        eff_h = (k_hw[0] - 1) * dil[0] + 1
+        eff_w = (k_hw[1] - 1) * dil[1] + 1
+        oh = (in_hw[0] - eff_h) // stride[0] + 1
+        ow = (in_hw[1] - eff_w) // stride[1] + 1
+        pt = pl = 0
+    return oh, ow, pt, pl
+
+
+def _im2col(x_i32, k_hw, stride, out_hw, pad_tl, pad_value):
+    """[N,H,W,C] -> [N, OH, OW, KH*KW*C] patches (int32)."""
+    n, h, w, c = x_i32.shape
+    kh, kw = k_hw
+    oh, ow = out_hw
+    pt, pl = pad_tl
+    padded = np.full((n, h + kh, w + kw, c), pad_value, dtype=np.int32)
+    padded[:, pt:pt + h, pl:pl + w, :] = x_i32
+    cols = np.empty((n, oh, ow, kh * kw * c), dtype=np.int32)
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = padded[:, ky:ky + oh * stride[0]:stride[0],
+                        kx:kx + ow * stride[1]:stride[1], :]
+            cols[..., (ky * kw + kx) * c:(ky * kw + kx + 1) * c] = sl
+    return cols
+
+
+def conv2d_int8(x, w, bias, stride, padding, in_zp, out_zp, mults, shifts,
+                act_min=-128, act_max=127):
+    """int8 conv. x [N,H,W,Cin] i8; w [Cout,KH,KW,Cin] i8; bias i32 or None.
+    mults/shifts: per-channel fixed-point requantization arrays."""
+    stride = _pair(stride)
+    cout, kh, kw, cin = w.shape
+    oh, ow, pt, pl = conv_out_shape(x.shape[1:3], (kh, kw), stride, padding)
+    # Pad with in_zp so padded taps contribute (zp - zp) = 0.
+    cols = _im2col(x.astype(np.int32), (kh, kw), stride, (oh, ow), (pt, pl),
+                   pad_value=in_zp)
+    cols = cols - in_zp  # input offset applied to every (incl. pad) tap
+    wmat = w.reshape(cout, -1).astype(np.int32)
+    acc = np.einsum("nhwk,ok->nhwo", cols, wmat, dtype=np.int64).astype(np.int32)
+    if bias is not None:
+        acc = acc + bias.astype(np.int32)
+    out = np.empty_like(acc)
+    for oc in range(cout):
+        out[..., oc] = mbqm(acc[..., oc], int(mults[oc]), int(shifts[oc]))
+    out = out + out_zp
+    return np.clip(out, act_min, act_max).astype(np.int8)
+
+
+def depthwise_conv2d_int8(x, w, bias, stride, padding, in_zp, out_zp, mults,
+                          shifts, act_min=-128, act_max=127):
+    """int8 depthwise conv, multiplier 1. w [1,KH,KW,C]."""
+    stride = _pair(stride)
+    _, kh, kw, c = w.shape
+    assert x.shape[3] == c, "depthwise multiplier != 1 not needed here"
+    oh, ow, pt, pl = conv_out_shape(x.shape[1:3], (kh, kw), stride, padding)
+    cols = _im2col(x.astype(np.int32), (kh, kw), stride, (oh, ow), (pt, pl),
+                   pad_value=in_zp)
+    n = x.shape[0]
+    cols = (cols - in_zp).reshape(n, oh, ow, kh * kw, c)
+    wmat = w.reshape(kh * kw, c).astype(np.int32)
+    acc = np.einsum("nhwkc,kc->nhwc", cols, wmat, dtype=np.int64).astype(np.int32)
+    if bias is not None:
+        acc = acc + bias.astype(np.int32)
+    out = np.empty_like(acc)
+    for ch in range(c):
+        out[..., ch] = mbqm(acc[..., ch], int(mults[ch]), int(shifts[ch]))
+    out = out + out_zp
+    return np.clip(out, act_min, act_max).astype(np.int8)
+
+
+def fully_connected_int8(x, w, bias, in_zp, out_zp, mult, shift,
+                         act_min=-128, act_max=127):
+    """int8 dense. x [B, In]; w [Out, In]; per-tensor requant."""
+    acc = (x.astype(np.int32) - in_zp) @ w.astype(np.int32).T
+    if bias is not None:
+        acc = acc + bias.astype(np.int32)
+    out = mbqm(acc, int(mult), int(shift)) + out_zp
+    return np.clip(out, act_min, act_max).astype(np.int8)
+
+
+def max_pool_int8(x, window, stride, padding="VALID", act_min=-128, act_max=127):
+    """int8 max pool over NHWC."""
+    window = _pair(window)
+    stride = _pair(stride)
+    oh, ow, pt, pl = conv_out_shape(x.shape[1:3], window, stride, padding)
+    n, h, w_, c = x.shape
+    padded = np.full((n, h + window[0], w_ + window[1], c), -128, dtype=np.int8)
+    padded[:, pt:pt + h, pl:pl + w_, :] = x
+    out = np.full((n, oh, ow, c), -128, dtype=np.int32)
+    for ky in range(window[0]):
+        for kx in range(window[1]):
+            sl = padded[:, ky:ky + oh * stride[0]:stride[0],
+                        kx:kx + ow * stride[1]:stride[1], :].astype(np.int32)
+            out = np.maximum(out, sl)
+    return np.clip(out, act_min, act_max).astype(np.int8)
+
+
+def avg_pool_int8(x, window, stride, padding="VALID", act_min=-128, act_max=127):
+    """int8 average pool (rounds to nearest, pad cells excluded)."""
+    window = _pair(window)
+    stride = _pair(stride)
+    oh, ow, pt, pl = conv_out_shape(x.shape[1:3], window, stride, padding)
+    n, h, w_, c = x.shape
+    padded = np.zeros((n, h + window[0], w_ + window[1], c), dtype=np.int32)
+    counts = np.zeros((n, h + window[0], w_ + window[1], 1), dtype=np.int32)
+    padded[:, pt:pt + h, pl:pl + w_, :] = x.astype(np.int32)
+    counts[:, pt:pt + h, pl:pl + w_, :] = 1
+    s = np.zeros((n, oh, ow, c), dtype=np.int32)
+    cnt = np.zeros((n, oh, ow, 1), dtype=np.int32)
+    for ky in range(window[0]):
+        for kx in range(window[1]):
+            s += padded[:, ky:ky + oh * stride[0]:stride[0],
+                        kx:kx + ow * stride[1]:stride[1], :]
+            cnt += counts[:, ky:ky + oh * stride[0]:stride[0],
+                          kx:kx + ow * stride[1]:stride[1], :]
+    cnt = np.maximum(cnt, 1)
+    out = np.where(s >= 0, (s + cnt // 2) // cnt, -((-s + cnt // 2) // cnt))
+    return np.clip(out, act_min, act_max).astype(np.int8)
+
+
+def mean_int8(x, axes, in_scale, in_zp, out_scale, out_zp):
+    """int8 mean over axes (global-average-pool tail)."""
+    from .quantize import quantize_multiplier
+    count = int(np.prod([x.shape[a] for a in axes]))
+    s = x.astype(np.int64).sum(axis=tuple(axes))
+    corrected = (s - count * in_zp).astype(np.int32)
+    mult, shift = quantize_multiplier(in_scale / (out_scale * count))
+    out = mbqm(corrected, mult, shift) + out_zp
+    return np.clip(out, -128, 127).astype(np.int8)
+
+
+def softmax_int8(x, in_scale, beta=1.0, out_scale=1.0 / 256.0, out_zp=-128):
+    """int8 softmax over the last axis (float-exp formulation, matching the
+    Rust reference kernel; outputs may differ from Rust by <=1 LSB)."""
+    q = x.astype(np.int32)
+    m = q.max(axis=-1, keepdims=True)
+    e = np.exp((q - m).astype(np.float32) * np.float32(beta * in_scale))
+    p = e / e.sum(axis=-1, keepdims=True)
+    out = np.round(p / out_scale).astype(np.int32) + out_zp
+    return np.clip(out, -128, 127).astype(np.int8)
+
+
+def logistic_int8(x, in_scale, in_zp, out_scale=1.0 / 256.0, out_zp=-128):
+    """int8 sigmoid."""
+    real = (x.astype(np.int32) - in_zp).astype(np.float32) * np.float32(in_scale)
+    sig = 1.0 / (1.0 + np.exp(-real))
+    out = np.round(sig / out_scale).astype(np.int32) + out_zp
+    return np.clip(out, -128, 127).astype(np.int8)
+
+
+def relu_int8(x, zp, scale, max6=False):
+    """int8 relu/relu6 (no rescale)."""
+    lo = zp
+    hi = min(127, int(round(6.0 / scale)) + zp) if max6 else 127
+    return np.clip(x.astype(np.int32), lo, hi).astype(np.int8)
+
+
+def pad_int8(x, pads, zp):
+    """int8 zero-point padding; pads [[before, after], ...] per dim."""
+    return np.pad(x, pads, mode="constant", constant_values=zp)

@@ -1,0 +1,181 @@
+"""TFLite-spec int8 quantization: fixed-point math mirror + post-training
+quantization (PTQ).
+
+The integer helpers here are bit-exact mirrors of
+``rust/src/tensor/quant.rs`` (which mirrors gemmlowp/TFLite); golden
+vectors produced by the exporter are only meaningful if Python and Rust
+round identically, so the Rust unit tests and ``python/tests/test_quant.py``
+pin the same values on both sides.
+
+PTQ follows the TFLite int8 spec:
+  * activations: per-tensor asymmetric int8 from calibration min/max
+  * conv/depthwise weights: per-output-channel symmetric int8 (zp = 0)
+  * fc weights: per-tensor symmetric int8
+  * biases: int32 with scale = input_scale * weight_scale[c]
+  * softmax/logistic outputs pinned to scale 1/256, zp -128
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Fixed-point mirrors (must match rust/src/tensor/quant.rs bit-for-bit).
+# --------------------------------------------------------------------------
+
+def quantize_multiplier(real: float) -> tuple[int, int]:
+    """TFLite QuantizeMultiplier: real -> (Q0.31 multiplier, shift)."""
+    if real == 0.0:
+        return 0, 0
+    q, shift = math.frexp(real)
+    q_fixed = round(q * (1 << 31))
+    assert q_fixed <= (1 << 31)
+    if q_fixed == (1 << 31):
+        q_fixed //= 2
+        shift += 1
+    if shift < -31:
+        return 0, 0
+    return int(q_fixed), int(shift)
+
+
+def srdhm(a, b):
+    """gemmlowp SaturatingRoundingDoublingHighMul, vectorized (int64-safe).
+
+    NB: C++ `/` truncates toward zero; Python `//` floors — hence the
+    sign/abs dance.
+    """
+    a = np.asarray(a, dtype=np.int64)
+    ab = a * np.int64(b)
+    nudge = np.where(ab >= 0, np.int64(1) << 30, (np.int64(1) - (np.int64(1) << 30)))
+    v = ab + nudge
+    result = np.sign(v) * (np.abs(v) >> 31)
+    overflow = (a == np.iinfo(np.int32).min) & (np.int64(b) == np.iinfo(np.int32).min)
+    return np.where(overflow, np.int64(np.iinfo(np.int32).max), result)
+
+
+def rounding_divide_by_pot(x, exponent: int):
+    """gemmlowp RoundingDivideByPOT, vectorized."""
+    x = np.asarray(x, dtype=np.int64)
+    mask = (np.int64(1) << exponent) - 1
+    remainder = x & mask
+    threshold = (mask >> 1) + (x < 0)
+    return (x >> exponent) + (remainder > threshold)
+
+
+def multiply_by_quantized_multiplier(x, multiplier: int, shift: int):
+    """TFLite MultiplyByQuantizedMultiplier, vectorized over int32 accs."""
+    left = max(shift, 0)
+    right = max(-shift, 0)
+    x = np.asarray(x, dtype=np.int64) << left
+    # Wrap to i32 like Rust's wrapping_shl before the high-mul.
+    x = x.astype(np.int32, copy=False).astype(np.int64)
+    return rounding_divide_by_pot(srdhm(x, multiplier), right)
+
+
+# --------------------------------------------------------------------------
+# PTQ parameter selection.
+# --------------------------------------------------------------------------
+
+class QParams:
+    """Per-tensor or per-axis affine quantization parameters."""
+
+    def __init__(self, scales, zero_points, axis=-1):
+        self.scales = np.atleast_1d(np.asarray(scales, dtype=np.float32))
+        self.zero_points = np.atleast_1d(np.asarray(zero_points, dtype=np.int32))
+        self.axis = axis
+
+    @property
+    def scale(self) -> float:
+        return float(self.scales[0])
+
+    @property
+    def zero_point(self) -> int:
+        return int(self.zero_points[0])
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        """Quantize float data (per-tensor params only)."""
+        q = np.round(x / self.scale) + self.zero_point
+        return np.clip(q, -128, 127).astype(np.int8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return self.scale * (q.astype(np.float32) - self.zero_point)
+
+    def __repr__(self):
+        return f"QParams(scale={self.scales}, zp={self.zero_points}, axis={self.axis})"
+
+
+def activation_qparams(vmin: float, vmax: float) -> QParams:
+    """Asymmetric int8 params from a calibration range (TFLite rules:
+    the range must include zero; scale from the 255-step grid)."""
+    vmin = min(0.0, float(vmin))
+    vmax = max(0.0, float(vmax))
+    if vmax == vmin:
+        vmax = vmin + 1e-6
+    scale = (vmax - vmin) / 255.0
+    zp = int(round(-128 - vmin / scale))
+    zp = max(-128, min(127, zp))
+    return QParams([scale], [zp])
+
+
+def weight_qparams_per_channel(w: np.ndarray, axis: int) -> QParams:
+    """Symmetric per-channel int8 weight params (zp = 0)."""
+    moved = np.moveaxis(w, axis, 0).reshape(w.shape[axis], -1)
+    absmax = np.maximum(np.abs(moved).max(axis=1), 1e-9)
+    scales = absmax / 127.0
+    return QParams(scales, np.zeros(len(scales), dtype=np.int32), axis=axis)
+
+
+def weight_qparams_per_tensor(w: np.ndarray) -> QParams:
+    """Symmetric per-tensor int8 weight params (zp = 0)."""
+    absmax = max(float(np.abs(w).max()), 1e-9)
+    return QParams([absmax / 127.0], [0])
+
+
+def quantize_weights(w: np.ndarray, qp: QParams) -> np.ndarray:
+    """Quantize a weight tensor with per-tensor or per-axis params."""
+    if qp.axis < 0 or len(qp.scales) == 1:
+        q = np.round(w / qp.scale)
+    else:
+        shape = [1] * w.ndim
+        shape[qp.axis] = -1
+        q = np.round(w / qp.scales.reshape(shape))
+    return np.clip(q, -127, 127).astype(np.int8)  # symmetric: keep -128 free
+
+
+def quantize_bias(b: np.ndarray, input_scale: float, weight_scales) -> np.ndarray:
+    """int32 bias at scale input_scale * weight_scale[c]."""
+    scales = input_scale * np.atleast_1d(np.asarray(weight_scales, dtype=np.float64))
+    q = np.round(b.astype(np.float64) / scales)
+    return np.clip(q, np.iinfo(np.int32).min, np.iinfo(np.int32).max).astype(np.int32)
+
+
+SOFTMAX_OUT = QParams([1.0 / 256.0], [-128])
+
+
+def round_away(x):
+    """Round half away from zero — Rust's f32::round / TFLite's rounding.
+
+    numpy/python round are banker's rounding; activation-range and
+    zero-point computations must match the Rust prepare phase exactly.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    return (np.sign(x) * np.floor(np.abs(x) + 0.5)).astype(np.int64)
+
+
+def activation_range_int8(act: str, out_scale: float, out_zp: int):
+    """Mirror of rust ops::common::activation_range_i8."""
+    def q(v):
+        # f32 division first, like the Rust code, then round half-away.
+        t = np.float32(v) / np.float32(out_scale)
+        return int(round_away(np.float64(t))) + out_zp
+
+    if act == "relu":
+        lo, hi = max(q(0.0), -128), 127
+    elif act == "relu6":
+        lo, hi = max(q(0.0), -128), min(q(6.0), 127)
+    else:
+        lo, hi = -128, 127
+    return lo, max(hi, lo)

@@ -1,0 +1,267 @@
+"""TMF ("Tiny Model Format") writer — the authoritative exporter.
+
+Byte-for-byte the same layout as the Rust reader/writer in
+``rust/src/schema/`` (see that module's docs for the design rationale:
+TMF replaces TFLite's FlatBuffer schema while preserving zero-copy access,
+a topologically sorted operator list, and a metadata section for offline
+memory plans).
+
+Layout (little-endian, absolute offsets):
+
+    header (76 B) | tensor records (40 B each) | op records (40 B each)
+    | buffer records (16 B each) | meta records (16 B each)
+    | inputs i32[] | outputs i32[] | blob heap | 16-aligned buffer data
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+
+MAGIC = b"TMF1"
+VERSION = 1
+HEADER_SIZE = 76
+TENSOR_RECORD_SIZE = 40
+OP_RECORD_SIZE = 40
+BUFFER_RECORD_SIZE = 16
+META_RECORD_SIZE = 16
+NO_BUFFER = 0xFFFFFFFF
+BUFFER_ALIGN = 16
+OFFLINE_PLAN_KEY = "OfflineMemoryAllocation"
+
+# DType tags (rust/src/tensor/dtype.rs).
+F32, I8, U8, I32, I64, BOOL, I16 = 1, 2, 3, 4, 5, 6, 7
+
+# Opcodes (rust/src/schema/format.rs).
+CONV_2D = 1
+DEPTHWISE_CONV_2D = 2
+FULLY_CONNECTED = 3
+MAX_POOL_2D = 4
+AVERAGE_POOL_2D = 5
+SOFTMAX = 6
+RELU = 7
+RELU6 = 8
+LOGISTIC = 9
+ADD = 10
+MUL = 11
+RESHAPE = 12
+PAD = 13
+MEAN = 14
+CONCATENATION = 15
+QUANTIZE = 16
+DEQUANTIZE = 17
+CUSTOM = 18
+SUB = 19
+MAXIMUM = 20
+MINIMUM = 21
+TANH = 22
+
+# Padding / activation tags.
+PAD_SAME, PAD_VALID = 0, 1
+ACT_NONE, ACT_RELU, ACT_RELU6 = 0, 1, 2
+
+
+def conv_options(padding, activation, stride_h, stride_w, dil_h=1, dil_w=1,
+                 depth_multiplier=None):
+    """Pack conv / depthwise-conv options."""
+    data = struct.pack("<BBxxIIII", padding, activation, stride_h, stride_w,
+                       dil_h, dil_w)
+    if depth_multiplier is not None:
+        data += struct.pack("<I", depth_multiplier)
+    return data
+
+
+def pool_options(padding, activation, stride_h, stride_w, filter_h, filter_w):
+    """Pack pooling options."""
+    return struct.pack("<BBxxIIII", padding, activation, stride_h, stride_w,
+                       filter_h, filter_w)
+
+
+def fully_connected_options(activation):
+    """Pack fully-connected options."""
+    return struct.pack("<Bxxx", activation)
+
+
+def softmax_options(beta=1.0):
+    """Pack softmax options."""
+    return struct.pack("<f", beta)
+
+
+def elementwise_options(activation):
+    """Pack add/mul options."""
+    return struct.pack("<Bxxx", activation)
+
+
+def concat_options(axis, activation=ACT_NONE):
+    """Pack concatenation options."""
+    return struct.pack("<iBxxx", axis, activation)
+
+
+def mean_options(keep_dims):
+    """Pack mean options."""
+    return struct.pack("<Bxxx", 1 if keep_dims else 0)
+
+
+@dataclass
+class _Tensor:
+    name: str
+    dtype: int
+    dims: list
+    buffer: int | None
+    scales: list = field(default_factory=list)
+    zero_points: list = field(default_factory=list)
+    quant_axis: int = -1
+    is_variable: bool = False
+
+
+@dataclass
+class _Op:
+    opcode: int
+    inputs: list
+    outputs: list
+    options: bytes
+    custom_name: str | None = None
+
+
+class ModelBuilder:
+    """Python twin of ``rust/src/schema/writer.rs::ModelBuilder``."""
+
+    def __init__(self, description=""):
+        self.description = description
+        self.tensors: list[_Tensor] = []
+        self.buffers: list[bytes] = [b""]  # buffer 0 is always empty
+        self.ops: list[_Op] = []
+        self.inputs: list[int] = []
+        self.outputs: list[int] = []
+        self.metadata: list[tuple[str, bytes]] = []
+
+    def add_buffer(self, data: bytes) -> int:
+        self.buffers.append(bytes(data))
+        return len(self.buffers) - 1
+
+    def add_tensor(self, name, dtype, dims, buffer=None, scales=None,
+                   zero_points=None, quant_axis=-1, is_variable=False) -> int:
+        self.tensors.append(_Tensor(
+            name=name, dtype=dtype, dims=list(int(d) for d in dims),
+            buffer=buffer,
+            scales=list(float(s) for s in (scales or [])),
+            zero_points=list(int(z) for z in (zero_points or [])),
+            quant_axis=quant_axis, is_variable=is_variable))
+        return len(self.tensors) - 1
+
+    def add_op(self, opcode, inputs, outputs, options=b"", custom_name=None):
+        self.ops.append(_Op(opcode, list(inputs), list(outputs),
+                            bytes(options), custom_name))
+
+    def set_io(self, inputs, outputs):
+        self.inputs = list(inputs)
+        self.outputs = list(outputs)
+
+    def add_metadata(self, key: str, value: bytes):
+        self.metadata.append((key, bytes(value)))
+
+    def set_offline_plan(self, offsets):
+        """Attach an offline memory plan (§4.4.2): one i32 arena offset per
+        plannable tensor in planner request order; -1 floats."""
+        self.add_metadata(OFFLINE_PLAN_KEY,
+                          b"".join(struct.pack("<i", int(o)) for o in offsets))
+
+    def finish(self) -> bytes:
+        tensors_off = HEADER_SIZE
+        ops_off = tensors_off + len(self.tensors) * TENSOR_RECORD_SIZE
+        bufrec_off = ops_off + len(self.ops) * OP_RECORD_SIZE
+        meta_off = bufrec_off + len(self.buffers) * BUFFER_RECORD_SIZE
+        inputs_off = meta_off + len(self.metadata) * META_RECORD_SIZE
+        outputs_off = inputs_off + len(self.inputs) * 4
+        blob_base = outputs_off + len(self.outputs) * 4
+
+        blob = bytearray()
+
+        def put(data: bytes):
+            off = blob_base + len(blob)
+            blob.extend(data)
+            return off, len(data)
+
+        tensor_records = []
+        for t in self.tensors:
+            name_off, name_len = put(t.name.encode())
+            dims_off, _ = put(b"".join(struct.pack("<i", d) for d in t.dims))
+            qcount = len(t.scales)
+            if qcount:
+                qs_off, _ = put(b"".join(struct.pack("<f", s) for s in t.scales))
+                qz_off, _ = put(b"".join(struct.pack("<i", z) for z in t.zero_points))
+            else:
+                qs_off = qz_off = 0
+            rec = struct.pack(
+                "<IIBBxxIIIIIIi",
+                name_off, name_len, t.dtype, 1 if t.is_variable else 0,
+                len(t.dims), dims_off,
+                NO_BUFFER if t.buffer is None else t.buffer,
+                qcount, qs_off, qz_off, t.quant_axis)
+            assert len(rec) == TENSOR_RECORD_SIZE, len(rec)
+            tensor_records.append(rec)
+
+        op_records = []
+        for op in self.ops:
+            in_off, _ = put(b"".join(struct.pack("<i", i) for i in op.inputs))
+            out_off, _ = put(b"".join(struct.pack("<i", i) for i in op.outputs))
+            opt_off, opt_len = put(op.options)
+            if op.custom_name:
+                cn_off, cn_len = put(op.custom_name.encode())
+            else:
+                cn_off = cn_len = 0
+            rec = struct.pack(
+                "<IIIIIIIII4x",
+                op.opcode, len(op.inputs), in_off, len(op.outputs), out_off,
+                opt_off, opt_len, cn_off, cn_len)
+            assert len(rec) == OP_RECORD_SIZE, len(rec)
+            op_records.append(rec)
+
+        meta_records = []
+        for key, value in self.metadata:
+            ko, kl = put(key.encode())
+            vo, vl = put(value)
+            meta_records.append(struct.pack("<IIII", ko, kl, vo, vl))
+
+        desc_off, desc_len = put(self.description.encode())
+
+        # Aligned buffer data region.
+        buf_data_base = blob_base + len(blob)
+        buffer_records = []
+        buffer_region = bytearray()
+        for b in self.buffers:
+            pad = (BUFFER_ALIGN - buf_data_base % BUFFER_ALIGN) % BUFFER_ALIGN
+            buffer_region.extend(b"\0" * pad)
+            buf_data_base += pad
+            buffer_records.append(struct.pack("<QQ", buf_data_base, len(b)))
+            buffer_region.extend(b)
+            buf_data_base += len(b)
+
+        header = MAGIC + struct.pack(
+            "<IIIIIIIIIIIIIIIIII",
+            VERSION, 0, blob_base, len(blob),
+            tensors_off, len(self.tensors),
+            bufrec_off, len(self.buffers),
+            ops_off, len(self.ops),
+            inputs_off, len(self.inputs),
+            outputs_off, len(self.outputs),
+            meta_off, len(self.metadata),
+            desc_off, desc_len)
+        assert len(header) == HEADER_SIZE, len(header)
+
+        out = bytearray(header)
+        for rec in tensor_records:
+            out.extend(rec)
+        for rec in op_records:
+            out.extend(rec)
+        for rec in buffer_records:
+            out.extend(rec)
+        for rec in meta_records:
+            out.extend(rec)
+        for i in self.inputs:
+            out.extend(struct.pack("<i", i))
+        for o in self.outputs:
+            out.extend(struct.pack("<i", o))
+        out.extend(blob)
+        out.extend(buffer_region)
+        return bytes(out)

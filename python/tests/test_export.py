@@ -1,0 +1,134 @@
+"""Exporter tests: model specs, quantization sanity, TMF structure, golden
+self-consistency, int8-vs-float agreement."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import tmf
+from compile.export import QuantizedModel, calibration_batch, write_golden
+from compile.model import (ALL_SPECS, build_params, conv_ref_spec,
+                           float_forward, hotword_spec, vww_spec)
+
+
+@pytest.fixture(scope="module")
+def qm_conv_ref():
+    return QuantizedModel(conv_ref_spec())
+
+
+@pytest.fixture(scope="module")
+def qm_hotword():
+    return QuantizedModel(hotword_spec())
+
+
+def test_specs_shapes_propagate():
+    for name, fn in ALL_SPECS.items():
+        spec = fn()
+        params = build_params(spec)
+        x = calibration_batch(spec, n=2)
+        y = float_forward(spec, params, x)
+        assert y.shape[0] == 2, name
+        assert y.shape[-1] in (2, 10), name
+        np.testing.assert_allclose(y.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_vww_is_mobilenet_sized():
+    spec = vww_spec()
+    params = build_params(spec)
+    n_params = sum(p["w"].size + p["b"].size for p in params if p)
+    assert 150_000 < n_params < 400_000, n_params  # 0.25x MobileNet class
+    assert len([l for l in spec.layers if l.kind == "dwconv"]) == 13
+
+
+def test_int8_agrees_with_float_model(qm_conv_ref):
+    """Quantized inference must track the float model on calibration-like
+    data (argmax agreement + bounded probability error)."""
+    spec = qm_conv_ref.spec
+    x_f = calibration_batch(spec, seed=999, n=6)
+    in_q = qm_conv_ref.act_q[0]
+    agree = 0
+    for i in range(6):
+        xi = in_q.quantize(x_f[i:i + 1])
+        y_q = qm_conv_ref.run_int8(xi)
+        probs_q = (y_q.astype(np.float32) + 128) / 256.0
+        y_f = float_forward(spec, qm_conv_ref.params, x_f[i:i + 1])
+        if np.argmax(probs_q) == np.argmax(y_f):
+            agree += 1
+        assert np.abs(probs_q - y_f).max() < 0.25
+    assert agree >= 5, f"argmax agreement {agree}/6"
+
+
+def test_hotword_int8_agrees_with_float(qm_hotword):
+    spec = qm_hotword.spec
+    x_f = calibration_batch(spec, seed=321, n=6)
+    in_q = qm_hotword.act_q[0]
+    for i in range(6):
+        xi = in_q.quantize(x_f[i:i + 1])
+        y_q = qm_hotword.run_int8(xi)
+        probs_q = (y_q.astype(np.float32) + 128) / 256.0
+        y_f = float_forward(spec, qm_hotword.params, x_f[i:i + 1])
+        assert np.abs(probs_q - y_f).max() < 0.2
+
+
+def test_tmf_structure(qm_conv_ref):
+    blob = qm_conv_ref.to_tmf()
+    assert blob[:4] == tmf.MAGIC
+    version, = struct.unpack_from("<I", blob, 4)
+    assert version == tmf.VERSION
+    # Sections counted: 5 layers -> conv, conv, maxpool, reshape+fc, softmax.
+    n_ops, = struct.unpack_from("<I", blob, 40)
+    assert n_ops == 6
+    n_tensors, = struct.unpack_from("<I", blob, 24)
+    assert n_tensors > 6
+
+
+def test_tmf_buffers_are_aligned(qm_conv_ref):
+    blob = qm_conv_ref.to_tmf()
+    bufrec_off, n_buffers = struct.unpack_from("<II", blob, 28)
+    for i in range(n_buffers):
+        off, ln = struct.unpack_from("<QQ", blob, bufrec_off + 16 * i)
+        assert off % 16 == 0
+        assert off + ln <= len(blob)
+
+
+def test_golden_cases_deterministic(qm_hotword):
+    a = qm_hotword.golden_cases(3)
+    b = qm_hotword.golden_cases(3)
+    for (xa, ya), (xb, yb) in zip(a, b):
+        np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_array_equal(ya, yb)
+
+
+def test_golden_file_round_trip(tmp_path, qm_hotword):
+    cases = qm_hotword.golden_cases(2)
+    path = tmp_path / "g.bin"
+    write_golden(str(path), cases)
+    raw = path.read_bytes()
+    n, in_len, out_len = struct.unpack_from("<III", raw, 0)
+    assert n == 2
+    assert in_len == cases[0][0].size
+    assert out_len == cases[0][1].size
+    x0 = np.frombuffer(raw, dtype=np.int8, count=in_len, offset=12)
+    np.testing.assert_array_equal(x0, cases[0][0])
+
+
+def test_softmax_outputs_pinned(qm_conv_ref):
+    out_q = qm_conv_ref.act_q[-1]
+    assert abs(out_q.scale - 1.0 / 256.0) < 1e-9
+    assert out_q.zero_point == -128
+
+
+def test_pooling_keeps_quantization(qm_conv_ref):
+    # maxpool layer output qparams == its input qparams (index 2 -> 3).
+    spec = qm_conv_ref.spec
+    pool_idx = next(i for i, l in enumerate(spec.layers) if l.kind == "maxpool")
+    assert qm_conv_ref.act_q[pool_idx + 1].scale == qm_conv_ref.act_q[pool_idx].scale
+    assert qm_conv_ref.act_q[pool_idx + 1].zero_point == qm_conv_ref.act_q[pool_idx].zero_point
+
+
+def test_weights_are_per_channel_for_conv(qm_conv_ref):
+    conv_idx = 0
+    qw = qm_conv_ref.qweights[conv_idx]
+    assert len(qw["qp"].scales) == qm_conv_ref.spec.layers[conv_idx].cout
+    assert np.all(qw["qp"].zero_points == 0)

@@ -1,0 +1,153 @@
+"""qref (the numpy golden engine) vs brute-force loop oracles.
+
+The exported goldens are only as trustworthy as qref; these tests pin the
+vectorized implementations against direct per-element loops on small
+shapes, with the same fixed-point helpers.
+"""
+
+import numpy as np
+import pytest
+
+from compile import qref
+from compile.quantize import multiply_by_quantized_multiplier as mbqm
+from compile.quantize import quantize_multiplier
+
+
+def brute_conv(x, w, bias, stride, padding, in_zp, out_zp, mults, shifts,
+               act_min=-128, act_max=127):
+    """Direct 7-loop int8 conv, mirroring the Rust reference kernel."""
+    oh, ow, pt, pl = qref.conv_out_shape(x.shape[1:3], w.shape[1:3],
+                                         (stride, stride), padding)
+    n, h, w_, cin = x.shape
+    cout, kh, kw, _ = w.shape
+    out = np.zeros((n, oh, ow, cout), dtype=np.int8)
+    for b in range(n):
+        for oy in range(oh):
+            for ox in range(ow):
+                for oc in range(cout):
+                    acc = int(bias[oc]) if bias is not None else 0
+                    for ky in range(kh):
+                        for kx in range(kw):
+                            iy = oy * stride + ky - pt
+                            ix = ox * stride + kx - pl
+                            if 0 <= iy < h and 0 <= ix < w_:
+                                for ic in range(cin):
+                                    acc += (int(x[b, iy, ix, ic]) - in_zp) * int(w[oc, ky, kx, ic])
+                    v = int(mbqm(np.array([acc]), int(mults[oc]), int(shifts[oc]))[0]) + out_zp
+                    out[b, oy, ox, oc] = np.clip(v, act_min, act_max)
+    return out
+
+
+def _quants(rng, n):
+    ms, ss = [], []
+    for _ in range(n):
+        m, s = quantize_multiplier(float(rng.uniform(0.001, 0.9)))
+        ms.append(m)
+        ss.append(s)
+    return np.array(ms), np.array(ss)
+
+
+@pytest.mark.parametrize("padding,stride", [("SAME", 1), ("VALID", 1),
+                                            ("SAME", 2), ("VALID", 2)])
+def test_conv2d_int8_vs_brute(padding, stride):
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, (1, 6, 5, 2)).astype(np.int8)
+    w = rng.integers(-128, 128, (3, 3, 3, 2)).astype(np.int8)
+    bias = rng.integers(-200, 200, 3).astype(np.int32)
+    mults, shifts = _quants(rng, 3)
+    in_zp = int(rng.integers(-100, 100))
+    got = qref.conv2d_int8(x, w, bias, stride, padding, in_zp, -7, mults, shifts)
+    want = brute_conv(x, w, bias, stride, padding, in_zp, -7, mults, shifts)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_depthwise_int8_vs_brute():
+    rng = np.random.default_rng(1)
+    c = 3
+    x = rng.integers(-128, 128, (1, 5, 5, c)).astype(np.int8)
+    w = rng.integers(-128, 128, (1, 3, 3, c)).astype(np.int8)
+    bias = rng.integers(-200, 200, c).astype(np.int32)
+    mults, shifts = _quants(rng, c)
+    in_zp = 11
+    got = qref.depthwise_conv2d_int8(x, w, bias, 1, "SAME", in_zp, 2, mults, shifts)
+    # Brute force: depthwise = conv where each output channel sees one input
+    # channel. Build the equivalent sparse full conv filter.
+    wfull = np.zeros((c, 3, 3, c), dtype=np.int8)
+    for ch in range(c):
+        wfull[ch, :, :, ch] = w[0, :, :, ch]
+    want = brute_conv(x, wfull, bias, 1, "SAME", in_zp, 2, mults, shifts)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fc_int8_vs_brute():
+    rng = np.random.default_rng(2)
+    x = rng.integers(-128, 128, (2, 9)).astype(np.int8)
+    w = rng.integers(-128, 128, (4, 9)).astype(np.int8)
+    bias = rng.integers(-300, 300, 4).astype(np.int32)
+    m, s = quantize_multiplier(0.037)
+    got = qref.fully_connected_int8(x, w, bias, in_zp=5, out_zp=-3, mult=m, shift=s)
+    want = np.zeros((2, 4), dtype=np.int8)
+    for b in range(2):
+        for o in range(4):
+            acc = int(bias[o])
+            for i in range(9):
+                acc += (int(x[b, i]) - 5) * int(w[o, i])
+            v = int(mbqm(np.array([acc]), m, s)[0]) - 3
+            want[b, o] = np.clip(v, -128, 127)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_max_and_avg_pool_vs_brute():
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (1, 6, 6, 2)).astype(np.int8)
+    got_max = qref.max_pool_int8(x, 2, 2)
+    got_avg = qref.avg_pool_int8(x, 2, 2)
+    for oy in range(3):
+        for ox in range(3):
+            for c in range(2):
+                win = x[0, oy * 2:oy * 2 + 2, ox * 2:ox * 2 + 2, c].astype(np.int64)
+                assert got_max[0, oy, ox, c] == win.max()
+                s = int(win.sum())
+                want = (s + 2) // 4 if s >= 0 else -((-s + 2) // 4)
+                assert got_avg[0, oy, ox, c] == want, (oy, ox, c, s)
+
+
+def test_mean_int8_vs_float_mean():
+    rng = np.random.default_rng(4)
+    x = rng.integers(-128, 128, (1, 4, 4, 8)).astype(np.int8)
+    in_scale, in_zp = 0.05, -4
+    out_scale, out_zp = 0.05, -4
+    got = qref.mean_int8(x, (1, 2), in_scale, in_zp, out_scale, out_zp)
+    real = in_scale * (x.astype(np.float64) - in_zp)
+    want_real = real.mean(axis=(1, 2))
+    back = out_scale * (got.astype(np.float64) - out_zp)
+    np.testing.assert_allclose(back, want_real, atol=out_scale)
+
+
+def test_softmax_int8_rows_sum_to_one():
+    rng = np.random.default_rng(5)
+    x = rng.integers(-128, 128, (3, 10)).astype(np.int8)
+    got = qref.softmax_int8(x, in_scale=0.1)
+    probs = (got.astype(np.float64) + 128) / 256.0
+    np.testing.assert_allclose(probs.sum(axis=-1), 1.0, atol=0.05)
+    # Monotone: larger logits -> larger probabilities.
+    for r in range(3):
+        order = np.argsort(x[r])
+        assert got[r, order[-1]] >= got[r, order[0]]
+
+
+def test_pad_int8_uses_zero_point():
+    x = np.array([[1, 2], [3, 4]], dtype=np.int8).reshape(1, 2, 2, 1)
+    out = qref.pad_int8(x, [(0, 0), (1, 1), (1, 1), (0, 0)], zp=-9)
+    assert out.shape == (1, 4, 4, 1)
+    assert out[0, 0, 0, 0] == -9
+    assert out[0, 1, 1, 0] == 1
+    assert out[0, 2, 2, 0] == 4
+
+
+def test_relu_int8_clamps_at_zero_point():
+    x = np.arange(-8, 8, dtype=np.int8)
+    out = qref.relu_int8(x, zp=2, scale=1.0)
+    assert out.min() == 2
+    out6 = qref.relu_int8(x, zp=0, scale=1.0, max6=True)
+    assert out6.max() == 6

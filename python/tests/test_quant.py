@@ -1,0 +1,97 @@
+"""Pin the fixed-point math to the exact values the Rust side pins
+(rust/src/tensor/quant.rs tests) — both sides must agree bit-for-bit."""
+
+import numpy as np
+import pytest
+
+from compile.quantize import (QParams, activation_qparams,
+                              activation_range_int8, multiply_by_quantized_multiplier,
+                              quantize_bias, quantize_multiplier,
+                              quantize_weights, rounding_divide_by_pot, round_away,
+                              srdhm, weight_qparams_per_channel,
+                              weight_qparams_per_tensor)
+
+
+def test_quantize_multiplier_known_values():
+    assert quantize_multiplier(0.5) == (1 << 30, 0)
+    assert quantize_multiplier(1.0) == (1 << 30, 1)
+    assert quantize_multiplier(0.0) == (0, 0)
+
+
+def test_srdhm_matches_rust_pins():
+    assert srdhm(1000, 1 << 30) == 500
+    assert srdhm(-1000, 1 << 30) == -500
+    imin = np.iinfo(np.int32).min
+    assert srdhm(imin, imin) == np.iinfo(np.int32).max
+
+
+def test_rdbp_matches_rust_pins():
+    assert rounding_divide_by_pot(5, 1) == 3
+    assert rounding_divide_by_pot(4, 1) == 2
+    assert rounding_divide_by_pot(-5, 1) == -3
+    assert rounding_divide_by_pot(-6, 2) == -2
+    assert rounding_divide_by_pot(-7, 2) == -2
+    assert rounding_divide_by_pot(7, 0) == 7
+
+
+@pytest.mark.parametrize("real", [0.0003921568, 0.0117647, 0.25, 0.5, 0.9999,
+                                  1.5, 2.0 / 3.0])
+def test_mbqm_close_to_real_arithmetic(real):
+    mult, shift = quantize_multiplier(real)
+    xs = np.array([-100000, -12345, -1, 0, 1, 7, 12345, 100000, 1 << 20])
+    got = multiply_by_quantized_multiplier(xs, mult, shift)
+    want = np.round(xs * real)
+    assert np.all(np.abs(got - want) <= 1)
+
+
+def test_round_away_vs_bankers():
+    assert round_away(0.5) == 1
+    assert round_away(1.5) == 2  # banker's would give 2 as well
+    assert round_away(2.5) == 3  # banker's would give 2 — this must be 3
+    assert round_away(-2.5) == -3
+
+
+def test_activation_range_mirror():
+    # Rust test: scale 0.1, zp -10 -> relu6 clamps to [-10, 50].
+    assert activation_range_int8("relu6", 0.1, -10) == (-10, 50)
+    assert activation_range_int8("relu", 0.1, -10) == (-10, 127)
+    assert activation_range_int8("none", 0.1, -10) == (-128, 127)
+
+
+def test_activation_qparams_include_zero():
+    qp = activation_qparams(0.5, 3.0)  # min forced to 0
+    assert qp.quantize(np.array([0.0]))[0] == qp.zero_point
+    qp = activation_qparams(-1.0, 1.0)
+    deq = qp.dequantize(qp.quantize(np.array([0.7])))
+    assert abs(deq[0] - 0.7) < qp.scale
+
+
+def test_weight_quantization_round_trip():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.2, (4, 3, 3, 2)).astype(np.float32)
+    qp = weight_qparams_per_channel(w, axis=0)
+    wq = qp.scales.reshape(-1, 1, 1, 1) * quantize_weights(w, qp).astype(np.float32)
+    assert np.abs(wq - w).max() < qp.scales.max()
+    # Symmetric: zero maps to zero.
+    assert np.all(qp.zero_points == 0)
+
+
+def test_per_tensor_weight_scale():
+    w = np.array([[1.0, -2.0], [0.5, 127.0]], dtype=np.float32)
+    qp = weight_qparams_per_tensor(w)
+    assert abs(qp.scale - 1.0) < 1e-6
+    q = quantize_weights(w, qp)
+    assert q[1, 1] == 127
+
+
+def test_bias_quantization_scale():
+    b = np.array([1.0, -1.0], dtype=np.float32)
+    q = quantize_bias(b, input_scale=0.5, weight_scales=[0.01, 0.02])
+    assert q[0] == round(1.0 / (0.5 * 0.01))
+    assert q[1] == round(-1.0 / (0.5 * 0.02))
+
+
+def test_qparams_quantize_clamps():
+    qp = QParams([0.01], [0])
+    assert qp.quantize(np.array([100.0]))[0] == 127
+    assert qp.quantize(np.array([-100.0]))[0] == -128

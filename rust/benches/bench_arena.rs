@@ -1,0 +1,65 @@
+//! **Figure 3 substrate bench**: two-stack allocator throughput and the
+//! init-time cost structure (§4.4.1). Also measures interpreter
+//! construction time per model — the "memory planning at run time incurs
+//! more overhead during model preparation" trade-off (§4.4.2), which is
+//! the cost the offline planner eliminates.
+
+use std::time::Instant;
+use tfmicro::arena::TwoStackAllocator;
+use tfmicro::interpreter::{MicroInterpreter, Options, PlannerChoice};
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::Model;
+use tfmicro::testutil::{black_box, Bencher};
+
+fn main() {
+    let bench = Bencher::default();
+
+    println!("== Two-stack allocator microbenchmark ==");
+    let stats = bench.run(|| {
+        let mut a = TwoStackAllocator::new(1 << 20);
+        for i in 0..64 {
+            black_box(a.alloc_head(128 + i, 16).unwrap());
+            black_box(a.alloc_tail(64 + i, 16).unwrap());
+        }
+        a.reset_head();
+    });
+    println!("  128 allocations + reset: {}", stats.summary());
+
+    println!("\n== Interpreter construction (allocate + prepare + plan) ==");
+    println!(
+        "{:<12} {:>14} {:>14} {:>10}",
+        "Model", "greedy init", "linear init", "ops"
+    );
+    for name in ["conv_ref", "hotword", "vww"] {
+        let Ok(model) = Model::from_file(format!("artifacts/{name}.tmf")) else {
+            eprintln!("SKIP {name}: run `make artifacts`");
+            continue;
+        };
+        let resolver = OpResolver::with_reference_ops();
+        let time_init = |planner: PlannerChoice| {
+            let iters = 50;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let mut arena = tfmicro::arena::Arena::new(512 * 1024);
+                let interp = MicroInterpreter::with_options(
+                    &model,
+                    &resolver,
+                    arena.as_mut_slice(),
+                    Options { planner },
+                )
+                .unwrap();
+                black_box(interp.op_count());
+            }
+            t0.elapsed() / iters
+        };
+        let greedy = time_init(PlannerChoice::Greedy);
+        let linear = time_init(PlannerChoice::Linear);
+        println!(
+            "{:<12} {:>14.2?} {:>14.2?} {:>10}",
+            name,
+            greedy,
+            linear,
+            model.operators().len()
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! **§4.2 ablation: interpreter vs ahead-of-time compilation.**
+//!
+//! The paper argues the interpreter's overhead is negligible because ML
+//! run time is dominated by linear algebra — so an interpreted model
+//! should be competitive with a fully compiled one (the GLOW/TinyEngine
+//! approach, §6). This bench runs the hotword model both ways:
+//!
+//!  * interpreted: the int8 TMF model through `MicroInterpreter`;
+//!  * compiled:    the float model AOT-lowered by JAX and executed as one
+//!                 XLA/PJRT executable (zero interpretation).
+//!
+//! The comparison is structural (dispatch overhead), not numeric parity —
+//! int8 vs f32 differ in arithmetic cost. The interpreter's *overhead*
+//! (total - calc) is the number to compare against the compiled call's
+//! fixed cost.
+
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::ops::OpResolver;
+use tfmicro::profiler::measure_overhead;
+use tfmicro::runtime::XlaRuntime;
+use tfmicro::schema::Model;
+use tfmicro::testutil::{black_box, Bencher, Rng};
+
+fn main() {
+    let Ok(model) = Model::from_file("artifacts/hotword.tmf") else {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    };
+    println!("== Interpreter vs compiled execution (hotword) ==");
+
+    // Interpreted int8.
+    let resolver = OpResolver::with_optimized_ops();
+    let mut arena = Arena::new(64 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    let mut rng = Rng::seeded(3);
+    {
+        let mut inp = interp.input_mut(0).unwrap();
+        rng.fill_i8(inp.as_i8_mut().unwrap());
+    }
+    let bench = Bencher::default();
+    let interp_stats = bench.run(|| {
+        interp.invoke().unwrap();
+        black_box(interp.output(0).unwrap().bytes());
+    });
+    let overhead = measure_overhead(&mut interp, 199).unwrap();
+    println!(
+        "interpreted (int8):  median {:?}  (interpreter overhead {:?} = {:.2}%)",
+        interp_stats.median, overhead.overhead, overhead.overhead_pct
+    );
+
+    // Compiled f32 via PJRT.
+    let rt = XlaRuntime::cpu().expect("PJRT");
+    let exe = rt.load_hlo_text("artifacts/hotword_f32.hlo.txt").expect("compile");
+    let mut rngf = Rng::seeded(3);
+    let x: Vec<f32> = (0..392).map(|_| rngf.range_f32(-1.0, 1.0)).collect();
+    let compiled_stats = bench.run(|| {
+        let out = exe.run_f32(&[(&x, &[1, 392])]).unwrap();
+        black_box(out);
+    });
+    println!("compiled (f32, XLA): median {:?}", compiled_stats.median);
+
+    println!(
+        "\ninterpreter dispatch overhead per invoke: {:?} over {} ops ({:?}/op)",
+        overhead.overhead,
+        interp.op_count(),
+        overhead.overhead / interp.op_count().max(1) as u32
+    );
+    println!(
+        "paper's claim holds if the overhead is a small fraction of either \
+         execution mode's total: overhead/interpreted = {:.2}%, overhead/compiled = {:.2}%",
+        overhead.overhead.as_secs_f64() / interp_stats.median.as_secs_f64() * 100.0,
+        overhead.overhead.as_secs_f64() / compiled_stats.median.as_secs_f64() * 100.0
+    );
+}

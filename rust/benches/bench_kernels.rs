@@ -1,0 +1,142 @@
+//! **§5.2 kernel-level speedups**: reference vs optimized kernel bodies on
+//! the paper's dominant op shapes (VWW's convs, Hotword's FCs), measured
+//! on the host. The per-op ratios are what feed the platform cycle model's
+//! structure; the paper's platform-level 4x / 7.7x arise from these.
+
+use tfmicro::ops::common::ChannelQuant;
+use tfmicro::ops::opt_ops::{self};
+use tfmicro::ops::ref_ops::{
+    conv2d_i8, depthwise_conv2d_i8, fully_connected_i8, ConvQuant, ConvShape, FcQuant,
+};
+use tfmicro::tensor::QuantizedMultiplier;
+use tfmicro::testutil::{black_box, Bencher, Rng};
+
+fn quant(n: usize) -> Vec<ChannelQuant> {
+    vec![ChannelQuant { mult: QuantizedMultiplier::from_real(0.0117) }; n]
+}
+
+fn conv_quant(pc: &[ChannelQuant]) -> ConvQuant<'_> {
+    ConvQuant { input_offset: 12, output_offset: -3, per_channel: pc, act_min: -128, act_max: 127 }
+}
+
+fn main() {
+    let mut rng = Rng::seeded(0xBE);
+    let bench = Bencher::default();
+
+    println!("== Kernel microbenchmarks: reference vs optimized (host) ==");
+    println!(
+        "{:<38} {:>12} {:>12} {:>8}",
+        "Kernel @ shape", "Reference", "Optimized", "Speedup"
+    );
+
+    // --- conv shapes from VWW (first conv + a mid pointwise conv) -------
+    let conv_cases = [
+        ("conv 3x3 s2 96x96x3->48x48x8", ConvShape {
+            batch: 1, in_h: 96, in_w: 96, in_c: 3, out_h: 48, out_w: 48, out_c: 8,
+            kh: 3, kw: 3, stride_h: 2, stride_w: 2, dil_h: 1, dil_w: 1, pad_top: 0, pad_left: 0,
+        }),
+        ("conv 1x1 24x24x32->24x24x64", ConvShape {
+            batch: 1, in_h: 24, in_w: 24, in_c: 32, out_h: 24, out_w: 24, out_c: 64,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1, pad_top: 0, pad_left: 0,
+        }),
+        ("conv 3x3 s1 16x16x1->16x16x8", ConvShape {
+            batch: 1, in_h: 16, in_w: 16, in_c: 1, out_h: 16, out_w: 16, out_c: 8,
+            kh: 3, kw: 3, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1, pad_top: 1, pad_left: 1,
+        }),
+    ];
+    for (label, s) in conv_cases {
+        let k = s.kh * s.kw * s.in_c;
+        let mut input = vec![0i8; s.batch * s.in_h * s.in_w * s.in_c];
+        rng.fill_i8(&mut input);
+        let mut filter = vec![0i8; s.out_c * k];
+        rng.fill_i8(&mut filter);
+        let bias: Vec<i32> = (0..s.out_c).map(|_| rng.range_i32(-500, 500)).collect();
+        let pc = quant(s.out_c);
+        let q = conv_quant(&pc);
+        let n_out = s.batch * s.out_h * s.out_w * s.out_c;
+        let mut out = vec![0i8; n_out];
+        let mut patch = vec![0i8; s.out_w * k];
+
+        let r = bench.run(|| {
+            conv2d_i8(&s, &q, &input, &filter, Some(&bias), &mut out);
+            black_box(&out);
+        });
+        let o = bench.run(|| {
+            opt_ops::conv2d_i8_im2col(&s, &q, &input, &filter, Some(&bias), &mut patch, &mut out);
+            black_box(&out);
+        });
+        println!(
+            "{:<38} {:>12.2?} {:>12.2?} {:>7.2}x",
+            label,
+            r.median,
+            o.median,
+            r.median.as_secs_f64() / o.median.as_secs_f64()
+        );
+    }
+
+    // --- depthwise from VWW ------------------------------------------------
+    let s = ConvShape {
+        batch: 1, in_h: 48, in_w: 48, in_c: 8, out_h: 48, out_w: 48, out_c: 8,
+        kh: 3, kw: 3, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1, pad_top: 1, pad_left: 1,
+    };
+    let mut input = vec![0i8; 48 * 48 * 8];
+    rng.fill_i8(&mut input);
+    let mut filter = vec![0i8; 3 * 3 * 8];
+    rng.fill_i8(&mut filter);
+    let bias: Vec<i32> = (0..8).map(|_| rng.range_i32(-500, 500)).collect();
+    let pc = quant(8);
+    let q = conv_quant(&pc);
+    let mut out = vec![0i8; 48 * 48 * 8];
+    let r = bench.run(|| {
+        depthwise_conv2d_i8(&s, 1, &q, &input, &filter, Some(&bias), &mut out);
+        black_box(&out);
+    });
+    let o = bench.run(|| {
+        opt_ops::depthwise_conv2d_i8_opt(&s, 1, &q, &input, &filter, Some(&bias), &mut out);
+        black_box(&out);
+    });
+    println!(
+        "{:<38} {:>12.2?} {:>12.2?} {:>7.2}x",
+        "dwconv 3x3 48x48x8",
+        r.median,
+        o.median,
+        r.median.as_secs_f64() / o.median.as_secs_f64()
+    );
+
+    // --- fully connected from Hotword ---------------------------------------
+    for (label, in_dim, out_dim) in
+        [("fc 392->32 (hotword L1)", 392usize, 32usize), ("fc 64->10", 64, 10)]
+    {
+        let mut input = vec![0i8; in_dim];
+        rng.fill_i8(&mut input);
+        let mut filter = vec![0i8; out_dim * in_dim];
+        rng.fill_i8(&mut filter);
+        let bias: Vec<i32> = (0..out_dim).map(|_| rng.range_i32(-500, 500)).collect();
+        let q = FcQuant {
+            input_offset: 4,
+            filter_offset: 0,
+            output_offset: -2,
+            mult: QuantizedMultiplier::from_real(0.0117),
+            act_min: -128,
+            act_max: 127,
+        };
+        let mut out = vec![0i8; out_dim];
+        let r = bench.run(|| {
+            fully_connected_i8(1, in_dim, out_dim, &q, &input, &filter, Some(&bias), &mut out);
+            black_box(&out);
+        });
+        let o = bench.run(|| {
+            opt_ops::fully_connected_i8_blocked(
+                1, in_dim, out_dim, &q, &input, &filter, Some(&bias), &mut out,
+            );
+            black_box(&out);
+        });
+        println!(
+            "{:<38} {:>12.2?} {:>12.2?} {:>7.2}x",
+            label,
+            r.median,
+            o.median,
+            r.median.as_secs_f64() / o.median.as_secs_f64()
+        );
+    }
+}

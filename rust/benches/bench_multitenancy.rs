@@ -1,0 +1,78 @@
+//! **Figure 5 ablation: multitenancy memory reuse (§4.5).**
+//!
+//! Measures total arena demand for VWW + Hotword as (a) two separate
+//! arenas vs (b) one shared arena where persistent sections stack and the
+//! non-persistent section is sized to the max — the paper's multitenancy
+//! strategy. Also times interleaved execution to show the sharing is free
+//! at invoke time.
+
+use std::time::Instant;
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::{MicroInterpreter, SharedArena};
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::Model;
+use tfmicro::testutil::{fmt_kb, Rng};
+
+fn main() {
+    let Ok(vww) = Model::from_file("artifacts/vww.tmf") else {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    };
+    let hotword = Model::from_file("artifacts/hotword.tmf").unwrap();
+    let conv_ref = Model::from_file("artifacts/conv_ref.tmf").unwrap();
+    let resolver = OpResolver::with_optimized_ops();
+
+    println!("== Figure 5: single-model arenas vs shared arena ==");
+    let mut separate_total = 0usize;
+    for (name, model) in [("vww", &vww), ("hotword", &hotword), ("conv_ref", &conv_ref)] {
+        let mut arena = Arena::new(512 * 1024);
+        let interp = MicroInterpreter::new(model, &resolver, &mut arena).unwrap();
+        let u = interp.arena_usage();
+        separate_total += u.total;
+        println!(
+            "  {name:<10} persistent {:>10}  nonpersistent {:>10}  total {:>10}",
+            fmt_kb(u.persistent),
+            fmt_kb(u.nonpersistent),
+            fmt_kb(u.total)
+        );
+    }
+    println!("  separate arenas total: {}", fmt_kb(separate_total));
+
+    let shared = SharedArena::new(512 * 1024);
+    let mut t_vww = MicroInterpreter::new_shared(&vww, &resolver, &shared).unwrap();
+    let mut t_hot = MicroInterpreter::new_shared(&hotword, &resolver, &shared).unwrap();
+    let mut t_conv = MicroInterpreter::new_shared(&conv_ref, &resolver, &shared).unwrap();
+    println!(
+        "  shared arena:  persistent(stacked) {:>10}  nonpersistent(max) {:>10}  total {:>10}",
+        fmt_kb(shared.persistent_used()),
+        fmt_kb(shared.nonpersistent_used()),
+        fmt_kb(shared.total_used())
+    );
+    let saving = separate_total.saturating_sub(shared.total_used());
+    println!(
+        "  multitenancy saving: {} ({:.1}%)",
+        fmt_kb(saving),
+        saving as f64 / separate_total as f64 * 100.0
+    );
+
+    // Interleaved-invoke timing: sharing must not tax the hot path.
+    let mut rng = Rng::seeded(9);
+    let mut img = vec![0i8; 96 * 96 * 3];
+    let mut audio = vec![0i8; 392];
+    let mut pix = vec![0i8; 16 * 16];
+    rng.fill_i8(&mut img);
+    rng.fill_i8(&mut audio);
+    rng.fill_i8(&mut pix);
+    t_vww.input_mut(0).unwrap().copy_from_i8(&img).unwrap();
+    t_hot.input_mut(0).unwrap().copy_from_i8(&audio).unwrap();
+    t_conv.input_mut(0).unwrap().copy_from_i8(&pix).unwrap();
+    let rounds = 20;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        t_vww.invoke().unwrap();
+        t_hot.invoke().unwrap();
+        t_conv.invoke().unwrap();
+    }
+    let per_round = t0.elapsed() / rounds;
+    println!("  interleaved round (vww+hotword+conv_ref): {per_round:.2?}");
+}

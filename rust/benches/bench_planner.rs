@@ -1,0 +1,101 @@
+//! **Figure 4 ablation: intermediate-allocation strategies.**
+//!
+//! Per model, compares the non-persistent region size under the naive
+//! no-reuse planner (Figure 4a), the greedy first-fit-decreasing planner
+//! (Figure 4b, the paper's production strategy), and the offline plan
+//! (§4.4.2), plus planning wall time (the "more overhead during model
+//! preparation" trade-off) and distance from the liveness lower bound.
+
+use std::time::Instant;
+use tfmicro::planner::{
+    analyze_lifetimes, plan_lower_bound, GreedyPlanner, LinearPlanner, MemoryPlanner,
+    OfflinePlanner,
+};
+use tfmicro::schema::Model;
+use tfmicro::testutil::fmt_kb;
+
+fn main() {
+    println!("== Figure 4: memory-planner ablation (non-persistent region) ==");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "Model", "Linear", "Greedy-FFD", "Offline", "LowerBound", "Saving", "PlanTime"
+    );
+    for name in ["conv_ref", "hotword", "vww"] {
+        let Ok(model) = Model::from_file(format!("artifacts/{name}.tmf")) else {
+            eprintln!("SKIP {name}: run `make artifacts`");
+            continue;
+        };
+        let info = analyze_lifetimes(&model);
+        let reqs = &info.requests;
+
+        let linear = LinearPlanner.plan(reqs, 16).unwrap();
+        let t0 = Instant::now();
+        let greedy = GreedyPlanner.plan(reqs, 16).unwrap();
+        let greedy_time = t0.elapsed();
+
+        // Offline: precompute on the "host" then apply (near-zero work).
+        let fixed = OfflinePlanner::precompute(reqs, 16).unwrap();
+        let off_planner = OfflinePlanner::new(fixed);
+        let t0 = Instant::now();
+        let offline = off_planner.plan(reqs, 16).unwrap();
+        let offline_time = t0.elapsed();
+
+        let lb = plan_lower_bound(reqs);
+        let saving = 100.0 * (1.0 - greedy.arena_size as f64 / linear.arena_size.max(1) as f64);
+        println!(
+            "{:<12} {:>12} {:>12} {:>12} {:>12} {:>9.1}% {:>12}",
+            name,
+            fmt_kb(linear.arena_size),
+            fmt_kb(greedy.arena_size),
+            fmt_kb(offline.arena_size),
+            fmt_kb(lb),
+            saving,
+            format!("{greedy_time:.1?}/{offline_time:.1?}")
+        );
+        assert!(greedy.arena_size <= linear.arena_size);
+        assert!(greedy.arena_size >= lb);
+    }
+
+    // Planner quality on adversarial synthetic lifetime patterns.
+    println!("\n== Synthetic lifetime patterns (greedy vs naive vs bound) ==");
+    use tfmicro::planner::BufferRequest;
+    use tfmicro::testutil::Rng;
+    let mut rng = Rng::seeded(0xF16);
+    for (label, gen) in [
+        ("chain", 0usize),
+        ("pyramid", 1),
+        ("random", 2),
+    ] {
+        let reqs: Vec<BufferRequest> = match gen {
+            0 => (0..40)
+                .map(|i| BufferRequest { size: 1024, first_use: i, last_use: i + 1 })
+                .collect(),
+            1 => (0..40)
+                .map(|i| {
+                    let half = if i < 20 { i } else { 39 - i };
+                    BufferRequest { size: (half + 1) * 256, first_use: i, last_use: i + 1 }
+                })
+                .collect(),
+            _ => (0..40)
+                .map(|_| {
+                    let first = rng.below(32);
+                    BufferRequest {
+                        size: 64 + rng.below(4096),
+                        first_use: first,
+                        last_use: first + rng.below(8),
+                    }
+                })
+                .collect(),
+        };
+        let linear = LinearPlanner.plan(&reqs, 16).unwrap();
+        let greedy = GreedyPlanner.plan(&reqs, 16).unwrap();
+        let lb = plan_lower_bound(&reqs);
+        println!(
+            "  {label:<8} linear {:>9}  greedy {:>9}  bound {:>9}  (greedy/bound {:.2}x)",
+            fmt_kb(linear.arena_size),
+            fmt_kb(greedy.arena_size),
+            fmt_kb(lb),
+            greedy.arena_size as f64 / lb.max(1) as f64
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! **Serving scalability**: throughput/latency of the end-to-end driver vs
+//! worker count (the §4.6 threading model: one interpreter + arena per
+//! worker, zero shared mutable state — throughput should scale until the
+//! cores run out).
+
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::Model;
+use tfmicro::serving::{make_requests, run_closed_loop, ServingConfig};
+use tfmicro::testutil::Rng;
+
+fn main() {
+    let Ok(model) = Model::from_file("artifacts/vww.tmf") else {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    };
+    let resolver = OpResolver::with_optimized_ops();
+    let in_len = model.tensors()[model.inputs()[0] as usize].num_elements();
+    let out_len = model.tensors()[model.outputs()[0] as usize].num_elements();
+
+    println!("== Serving throughput vs workers (VWW, 64 requests) ==");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "workers", "req/s", "p50", "p95", "p99"
+    );
+    let mut baseline = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let mut rng = Rng::seeded(42);
+        let requests = make_requests(64, |_| {
+            let mut v = vec![0i8; in_len];
+            rng.fill_i8(&mut v);
+            v
+        });
+        let cfg = ServingConfig { workers, queue_depth: 16, arena_bytes: 256 * 1024 };
+        let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
+        if workers == 1 {
+            baseline = report.throughput_rps;
+        }
+        println!(
+            "{:>8} {:>12.1} {:>12.2?} {:>12.2?} {:>12.2?}   ({:.2}x vs 1 worker)",
+            workers,
+            report.throughput_rps,
+            report.latency_p50,
+            report.latency_p95,
+            report.latency_p99,
+            report.throughput_rps / baseline
+        );
+    }
+
+    println!("\n== Hotword (tiny model): dispatch-bound regime ==");
+    let model = Model::from_file("artifacts/hotword.tmf").unwrap();
+    let in_len = model.tensors()[model.inputs()[0] as usize].num_elements();
+    let out_len = model.tensors()[model.outputs()[0] as usize].num_elements();
+    for workers in [1usize, 4] {
+        let mut rng = Rng::seeded(42);
+        let requests = make_requests(2000, |_| {
+            let mut v = vec![0i8; in_len];
+            rng.fill_i8(&mut v);
+            v
+        });
+        let cfg = ServingConfig { workers, queue_depth: 64, arena_bytes: 64 * 1024 };
+        let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
+        println!("  workers={workers}: {}", report.summary());
+    }
+}

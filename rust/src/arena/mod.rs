@@ -1,0 +1,68 @@
+//! Static memory management from a caller-supplied arena (§4.4).
+//!
+//! The framework performs **no heap allocation after initialization**: the
+//! application hands the interpreter one contiguous memory arena, all
+//! buffers (runtime tensors, persistent metadata, scratch) are carved out
+//! of it during `allocate_tensors`, and any allocation attempted during
+//! `invoke` is an error. This mirrors the paper exactly (§4.4.1): arenas
+//! avoid heap fragmentation killing long-running always-on applications.
+//!
+//! The allocator is the paper's **two-stack scheme** (Figure 3): one stack
+//! grows up from the lowest address for *function-lifetime* data (the
+//! "head": intermediate tensors, init-time temporaries), one grows down
+//! from the highest address for *interpreter-lifetime* data (the "tail":
+//! tensor metadata, variable tensors, persistent scratch). The space
+//! between the stacks serves temporary allocations during memory planning.
+//! When the pointers cross, the arena is exhausted and an application-level
+//! error is raised.
+
+mod two_stack;
+
+pub use two_stack::{ArenaUsage, Section, TwoStackAllocator, DEFAULT_ALIGN};
+
+/// An owned, heap-backed arena buffer (host-side convenience — on a real
+/// MCU the application supplies a static array instead; every framework
+/// API also accepts a plain `&mut [u8]`).
+pub struct Arena {
+    buf: Vec<u8>,
+}
+
+impl Arena {
+    /// Allocate a zeroed arena of `size` bytes.
+    pub fn new(size: usize) -> Self {
+        Arena { buf: vec![0u8; size] }
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Mutable view of the backing storage.
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+
+    /// Immutable view of the backing storage.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Arena({} bytes)", self.buf.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_is_zeroed() {
+        let a = Arena::new(64);
+        assert_eq!(a.capacity(), 64);
+        assert!(a.as_slice().iter().all(|&b| b == 0));
+    }
+}

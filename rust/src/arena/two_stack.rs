@@ -1,0 +1,383 @@
+//! The two-stack arena allocator (paper §4.4.1, Figure 3).
+//!
+//! The allocator tracks **offsets only** — it never holds references into
+//! the arena storage. The interpreter combines the offsets it returns with
+//! the caller's `&mut [u8]` to address tensor data; keeping the allocator
+//! reference-free sidesteps aliasing headaches and matches how the C++
+//! original works (pointer arithmetic over a `uint8_t*`).
+//!
+//! Lifetimes, as in the paper:
+//!
+//! * **Tail** (grows down from the top): interpreter-lifetime data —
+//!   decoded tensor metadata, kernel user data, variable tensors,
+//!   persistent scratch. Never freed.
+//! * **Head** (grows up from the bottom): function-lifetime data — the
+//!   planned intermediate-tensor region lives here; an application may
+//!   reuse the head between invocations (§4.4.1 last ¶).
+//! * **Temp** (between the stacks): allocations alive only during memory
+//!   planning; must be reset before initialization finishes.
+//!
+//! When head and tail would cross, allocation fails with an
+//! application-level `Error::ArenaExhausted`.
+
+use crate::error::{Error, Result};
+
+/// Default buffer alignment, matching TF Micro's 16-byte arena alignment.
+pub const DEFAULT_ALIGN: usize = 16;
+
+/// Which arena section an allocation targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Section {
+    /// Function-lifetime stack (grows up).
+    Head,
+    /// Interpreter-lifetime stack (grows down).
+    Tail,
+    /// Planning-time temporaries between the stacks.
+    Temp,
+}
+
+/// Arena accounting snapshot — the numbers Table 2 of the paper reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArenaUsage {
+    /// Bytes allocated with interpreter lifetime (tail stack).
+    pub persistent: usize,
+    /// Bytes allocated with function lifetime (head high watermark).
+    pub nonpersistent: usize,
+    /// Peak simultaneous use (head watermark + tail watermark).
+    pub total: usize,
+    /// Arena capacity.
+    pub capacity: usize,
+}
+
+/// Offset-based two-stack allocator over a fixed capacity.
+#[derive(Debug, Clone)]
+pub struct TwoStackAllocator {
+    capacity: usize,
+    /// First free byte of the head stack (grows up).
+    head: usize,
+    /// First used byte of the tail stack (grows down).
+    tail: usize,
+    /// Current temp allocation cursor (grows up from `head`); `head` itself
+    /// is not moved by temp allocations.
+    temp: usize,
+    /// Number of outstanding temp allocations.
+    temp_count: usize,
+    /// High watermark of the head stack.
+    head_watermark: usize,
+    /// High watermark of head+temp (planning-time peak).
+    temp_watermark: usize,
+    /// Low watermark of the tail stack.
+    tail_watermark: usize,
+    /// Set once initialization completes; further allocation is an error.
+    sealed: bool,
+}
+
+fn align_up(v: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    (v + align - 1) & !(align - 1)
+}
+
+fn align_down(v: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    v & !(align - 1)
+}
+
+impl TwoStackAllocator {
+    /// Create an allocator over `capacity` bytes.
+    pub fn new(capacity: usize) -> Self {
+        TwoStackAllocator {
+            capacity,
+            head: 0,
+            tail: capacity,
+            temp: 0,
+            temp_count: 0,
+            head_watermark: 0,
+            temp_watermark: 0,
+            tail_watermark: capacity,
+            sealed: false,
+        }
+    }
+
+    fn exhausted(&self, requested: usize, section: &'static str) -> Error {
+        Error::ArenaExhausted {
+            requested,
+            available: self.tail.saturating_sub(self.head.max(self.temp)),
+            capacity: self.capacity,
+            section,
+        }
+    }
+
+    /// Allocate `size` bytes with interpreter lifetime (tail stack).
+    pub fn alloc_tail(&mut self, size: usize, align: usize) -> Result<usize> {
+        if self.sealed {
+            return Err(Error::AllocAfterInit("tail allocation"));
+        }
+        let new_tail = align_down(self.tail.checked_sub(size).ok_or_else(|| self.exhausted(size, "tail"))?, align);
+        if new_tail < self.head.max(self.temp) {
+            return Err(self.exhausted(size, "tail"));
+        }
+        self.tail = new_tail;
+        self.tail_watermark = self.tail_watermark.min(new_tail);
+        Ok(new_tail)
+    }
+
+    /// Allocate `size` bytes with function lifetime (head stack).
+    pub fn alloc_head(&mut self, size: usize, align: usize) -> Result<usize> {
+        if self.sealed {
+            return Err(Error::AllocAfterInit("head allocation"));
+        }
+        if self.temp_count > 0 {
+            return Err(Error::PlanFailed(
+                "head allocation while temp allocations are outstanding".into(),
+            ));
+        }
+        let off = align_up(self.head, align);
+        let end = off.checked_add(size).ok_or_else(|| self.exhausted(size, "head"))?;
+        if end > self.tail {
+            return Err(self.exhausted(size, "head"));
+        }
+        self.head = end;
+        self.temp = self.temp.max(end);
+        self.head_watermark = self.head_watermark.max(end);
+        self.temp_watermark = self.temp_watermark.max(end);
+        Ok(off)
+    }
+
+    /// Ensure the head section spans at least `size` bytes, without
+    /// assigning individual offsets (used for the planner-managed
+    /// intermediate-tensor region).
+    pub fn reserve_head(&mut self, size: usize, align: usize) -> Result<usize> {
+        self.alloc_head(size, align)
+    }
+
+    /// Reset the head stack, discarding all function-lifetime allocations
+    /// (legal between invocations; the paper's "reuse the arena's
+    /// function-lifetime section in between evaluation calls").
+    pub fn reset_head(&mut self) {
+        self.head = 0;
+        self.temp = 0;
+    }
+
+    /// Allocate a planning-time temporary in the gap between the stacks.
+    pub fn alloc_temp(&mut self, size: usize, align: usize) -> Result<usize> {
+        if self.sealed {
+            return Err(Error::AllocAfterInit("temp allocation"));
+        }
+        let off = align_up(self.temp.max(self.head), align);
+        let end = off.checked_add(size).ok_or_else(|| self.exhausted(size, "temp"))?;
+        if end > self.tail {
+            return Err(self.exhausted(size, "temp"));
+        }
+        self.temp = end;
+        self.temp_count += 1;
+        self.temp_watermark = self.temp_watermark.max(end);
+        Ok(off)
+    }
+
+    /// Release all temporaries (they deallocate together, stack-style).
+    pub fn reset_temp(&mut self) {
+        self.temp = self.head;
+        self.temp_count = 0;
+    }
+
+    /// Seal the allocator at the end of initialization: all further
+    /// allocation attempts fail (§4.4.1: "No allocation ... is possible
+    /// during model invocation").
+    pub fn seal(&mut self) {
+        self.sealed = true;
+    }
+
+    /// True once sealed.
+    pub fn is_sealed(&self) -> bool {
+        self.sealed
+    }
+
+    /// Bytes remaining between the stacks.
+    pub fn available(&self) -> usize {
+        self.tail.saturating_sub(self.head.max(self.temp))
+    }
+
+    /// Current head cursor.
+    pub fn head_used(&self) -> usize {
+        self.head
+    }
+
+    /// Bytes allocated from the tail (persistent section size).
+    pub fn tail_used(&self) -> usize {
+        self.capacity - self.tail
+    }
+
+    /// Usage snapshot (Table 2 numbers).
+    pub fn usage(&self) -> ArenaUsage {
+        ArenaUsage {
+            persistent: self.capacity - self.tail_watermark,
+            nonpersistent: self.head_watermark,
+            total: self.head_watermark + (self.capacity - self.tail_watermark),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Peak use including planning-time temporaries — the minimum arena
+    /// size that would have succeeded.
+    pub fn peak_including_temp(&self) -> usize {
+        self.temp_watermark + (self.capacity - self.tail_watermark)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_grows_up_tail_grows_down() {
+        let mut a = TwoStackAllocator::new(1024);
+        let h0 = a.alloc_head(100, 16).unwrap();
+        let h1 = a.alloc_head(50, 16).unwrap();
+        assert_eq!(h0, 0);
+        assert_eq!(h1, 112); // 100 aligned up to 112
+        let t0 = a.alloc_tail(64, 16).unwrap();
+        let t1 = a.alloc_tail(32, 16).unwrap();
+        assert!(t0 > t1, "tail allocations move downward");
+        assert_eq!(t0 % 16, 0);
+        assert_eq!(t1 % 16, 0);
+        assert_eq!(t0, 1024 - 64);
+    }
+
+    #[test]
+    fn crossing_pointers_exhaust() {
+        let mut a = TwoStackAllocator::new(256);
+        a.alloc_head(128, 16).unwrap();
+        a.alloc_tail(64, 16).unwrap();
+        let err = a.alloc_head(128, 16).unwrap_err();
+        assert!(matches!(err, Error::ArenaExhausted { .. }), "{err}");
+        // Tail exhaustion too.
+        let err = a.alloc_tail(128, 16).unwrap_err();
+        assert!(matches!(err, Error::ArenaExhausted { .. }));
+    }
+
+    #[test]
+    fn head_reset_reuses_space() {
+        let mut a = TwoStackAllocator::new(256);
+        a.alloc_head(200, 16).unwrap();
+        assert!(a.alloc_head(200, 16).is_err());
+        a.reset_head();
+        assert!(a.alloc_head(200, 16).is_ok());
+        // Watermark remembers the peak.
+        assert_eq!(a.usage().nonpersistent, 200);
+    }
+
+    #[test]
+    fn temp_allocations_between_stacks() {
+        let mut a = TwoStackAllocator::new(1024);
+        a.alloc_head(100, 16).unwrap();
+        a.alloc_tail(100, 16).unwrap();
+        let t = a.alloc_temp(200, 16).unwrap();
+        assert!(t >= 100 && t + 200 <= 924);
+        // Head allocation while temps outstanding is a planning bug.
+        assert!(a.alloc_head(16, 16).is_err());
+        a.reset_temp();
+        assert!(a.alloc_head(16, 16).is_ok());
+        // Temp peak is visible in peak_including_temp but not in usage().
+        assert!(a.peak_including_temp() >= 300);
+        // head cursor was 100, aligned to 112, +16 = 128 watermark.
+        assert_eq!(a.usage().nonpersistent, 128);
+    }
+
+    #[test]
+    fn temp_exhaustion() {
+        let mut a = TwoStackAllocator::new(128);
+        a.alloc_tail(64, 16).unwrap();
+        assert!(a.alloc_temp(128, 16).is_err());
+    }
+
+    #[test]
+    fn sealed_rejects_all_allocation() {
+        let mut a = TwoStackAllocator::new(256);
+        a.alloc_head(16, 16).unwrap();
+        a.seal();
+        assert!(matches!(a.alloc_head(1, 1), Err(Error::AllocAfterInit(_))));
+        assert!(matches!(a.alloc_tail(1, 1), Err(Error::AllocAfterInit(_))));
+        assert!(matches!(a.alloc_temp(1, 1), Err(Error::AllocAfterInit(_))));
+    }
+
+    #[test]
+    fn usage_snapshot() {
+        let mut a = TwoStackAllocator::new(1000);
+        a.alloc_head(100, 4).unwrap();
+        a.alloc_tail(200, 4).unwrap();
+        let u = a.usage();
+        assert_eq!(u.nonpersistent, 100);
+        assert_eq!(u.persistent, 200);
+        assert_eq!(u.total, 300);
+        assert_eq!(u.capacity, 1000);
+    }
+
+    #[test]
+    fn zero_sized_allocations_are_fine() {
+        let mut a = TwoStackAllocator::new(64);
+        let h = a.alloc_head(0, 16).unwrap();
+        let t = a.alloc_tail(0, 16).unwrap();
+        assert_eq!(h, 0);
+        assert_eq!(t, 64);
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let mut a = TwoStackAllocator::new(4096);
+        for align in [1usize, 2, 4, 8, 16, 32, 64] {
+            let h = a.alloc_head(3, align).unwrap();
+            assert_eq!(h % align, 0, "head align {align}");
+            let t = a.alloc_tail(3, align).unwrap();
+            assert_eq!(t % align, 0, "tail align {align}");
+        }
+    }
+
+    // Property-style test: random interleavings never violate invariants.
+    #[test]
+    fn property_random_interleavings_preserve_invariants() {
+        let mut rng = crate::testutil::Rng::seeded(0xA1EA);
+        for _ in 0..200 {
+            let capacity = 64 + (rng.next_usize() % 4096);
+            let mut a = TwoStackAllocator::new(capacity);
+            let mut temps_live = false;
+            for _ in 0..64 {
+                let size = rng.next_usize() % 256;
+                let align = 1usize << (rng.next_usize() % 6);
+                match rng.next_usize() % 5 {
+                    0 if !temps_live => {
+                        if let Ok(off) = a.alloc_head(size, align) {
+                            assert_eq!(off % align, 0);
+                            assert!(off + size <= capacity);
+                        }
+                    }
+                    1 => {
+                        if let Ok(off) = a.alloc_tail(size, align) {
+                            assert_eq!(off % align, 0);
+                            assert!(off + size <= capacity);
+                        }
+                    }
+                    2 => {
+                        if let Ok(off) = a.alloc_temp(size, align) {
+                            temps_live = true;
+                            assert_eq!(off % align, 0);
+                            assert!(off + size <= capacity);
+                        }
+                    }
+                    3 => {
+                        a.reset_temp();
+                        temps_live = false;
+                    }
+                    _ => {
+                        if !temps_live {
+                            a.reset_head();
+                        }
+                    }
+                }
+                // Core invariant: stacks never cross.
+                assert!(a.head_used() <= capacity - a.tail_used());
+                let u = a.usage();
+                assert!(u.total <= u.capacity + u.nonpersistent); // watermarks are monotone
+            }
+        }
+    }
+}

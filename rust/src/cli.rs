@@ -1,0 +1,283 @@
+//! `tfmicro` command-line interface.
+//!
+//! Hand-rolled argument parsing (no clap in the offline registry —
+//! DESIGN.md §6.6; also in the spirit of §3.1's minimal dependencies).
+//!
+//! ```text
+//! tfmicro inspect  <model.tmf>
+//! tfmicro run      <model.tmf> [--kernels ref|opt] [--iters N] [--profile] [--arena-kb N]
+//! tfmicro mem      <model.tmf> [--planner greedy|linear|auto]
+//! tfmicro overhead <model.tmf> [--kernels ref|opt] [--iters N]
+//! tfmicro simulate <model.tmf> [--platform m4|dsp]
+//! tfmicro serve    <model.tmf> [--workers N] [--requests N]
+//! ```
+
+use crate::error::{Error, Result};
+use crate::interpreter::{MicroInterpreter, Options, PlannerChoice};
+use crate::ops::{KernelFlavor, OpResolver};
+use crate::platform::{simulate, Platform};
+use crate::profiler::{measure_overhead, MicroProfiler};
+use crate::schema::Model;
+use crate::serving::{make_requests, run_closed_loop, ServingConfig};
+use crate::testutil::{fmt_kb, fmt_kcycles, Rng};
+
+/// Tiny flag parser: positional args + `--key value` / `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((name.to_string(), value));
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n == name).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn resolver_for(kind: Option<&str>) -> Result<OpResolver> {
+    match kind.unwrap_or("opt") {
+        "ref" | "reference" => Ok(OpResolver::with_reference_ops()),
+        "opt" | "optimized" => Ok(OpResolver::with_optimized_ops()),
+        other => Err(Error::Serving(format!("unknown kernel family '{other}' (ref|opt)"))),
+    }
+}
+
+fn load(path: &str) -> Result<Model> {
+    Model::from_file(path)
+}
+
+fn fill_random_input(interp: &mut MicroInterpreter, seed: u64) -> Result<()> {
+    let mut rng = Rng::seeded(seed);
+    let mut view = interp.input_mut(0)?;
+    match view.meta.dtype {
+        crate::tensor::DType::I8 => {
+            for v in view.as_i8_mut()? {
+                *v = rng.next_i8();
+            }
+        }
+        crate::tensor::DType::F32 => {
+            for v in view.as_f32_mut()? {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+        }
+        other => return Err(Error::Serving(format!("unsupported input dtype {other}"))),
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve> <model.tmf> [flags]
+  inspect   print model structure
+  run       execute with random inputs (--kernels ref|opt, --iters N, --profile, --arena-kb N)
+  mem       arena accounting, Table 2 style (--planner greedy|linear|auto, --kernels ref|opt)
+  overhead  measured interpreter overhead, Figure 6 methodology (--iters N)
+  simulate  cycle-model Figure 6 row (--platform m4|dsp)
+  serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N)";
+
+/// CLI entry; returns a process exit code.
+pub fn main_with_args(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    let model_path = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Serving(format!("missing model path\n{USAGE}")))?;
+
+    match cmd.as_str() {
+        "inspect" => {
+            let model = load(model_path)?;
+            println!("model: {} ({} bytes serialized)", model.description(), model.serialized_size());
+            println!("tensors: {}   operators: {}", model.tensors().len(), model.operators().len());
+            println!("inputs: {:?}   outputs: {:?}", model.inputs(), model.outputs());
+            for (i, op) in model.operators().iter().enumerate() {
+                println!("  #{i:<3} {:<20} in={:?} out={:?}", op.key(), op.inputs, op.outputs);
+            }
+            for (i, t) in model.tensors().iter().enumerate() {
+                let kind = if t.buffer.is_some() { "const" } else if t.is_variable { "var" } else { "act" };
+                println!("  t{i:<3} {:<24} {} {} {}", t.name, t.dtype, t.shape, kind);
+            }
+            if model.offline_plan().is_some() {
+                println!("carries an offline memory plan");
+            }
+        }
+        "run" => {
+            let model = load(model_path)?;
+            let resolver = resolver_for(args.get("kernels"))?;
+            let mut arena = crate::arena::Arena::new(args.usize_or("arena-kb", 512) * 1024);
+            let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena)?;
+            fill_random_input(&mut interp, 42)?;
+            let iters = args.usize_or("iters", 10);
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                interp.invoke()?;
+            }
+            let per = t0.elapsed() / iters as u32;
+            println!("{iters} invocations, {per:.3?} each");
+            if args.has("profile") {
+                let mut prof = MicroProfiler::new();
+                interp.invoke_observed(&mut prof)?;
+                print!("{}", prof.report());
+            }
+            let out = interp.output(0)?;
+            match out.meta.dtype {
+                crate::tensor::DType::I8 => println!("output[0] = {:?}", &out.as_i8()?[..out.as_i8()?.len().min(16)]),
+                crate::tensor::DType::F32 => println!("output[0] = {:?}", &out.as_f32()?[..out.as_f32()?.len().min(16)]),
+                _ => {}
+            }
+        }
+        "mem" => {
+            let model = load(model_path)?;
+            let resolver = resolver_for(args.get("kernels"))?;
+            let planner = match args.get("planner").unwrap_or("greedy") {
+                "greedy" => PlannerChoice::Greedy,
+                "linear" => PlannerChoice::Linear,
+                "auto" => PlannerChoice::Auto,
+                "offline" => PlannerChoice::Offline,
+                other => return Err(Error::Serving(format!("unknown planner '{other}'"))),
+            };
+            let mut arena = crate::arena::Arena::new(args.usize_or("arena-kb", 2048) * 1024);
+            let interp = MicroInterpreter::with_options(
+                &model,
+                &resolver,
+                arena.as_mut_slice(),
+                Options { planner },
+            )?;
+            let u = interp.arena_usage();
+            println!("model: {}", model.description());
+            println!("persistent:    {}", fmt_kb(u.persistent));
+            println!("nonpersistent: {}", fmt_kb(u.nonpersistent));
+            println!("total:         {}", fmt_kb(u.total));
+            println!("flash (model): {}", fmt_kb(model.serialized_size()));
+            if args.has("detail") {
+                println!("{}", interp.arena_usage_detail().report());
+            }
+        }
+        "overhead" => {
+            let model = load(model_path)?;
+            let resolver = resolver_for(args.get("kernels"))?;
+            let mut arena = crate::arena::Arena::new(args.usize_or("arena-kb", 512) * 1024);
+            let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena)?;
+            fill_random_input(&mut interp, 42)?;
+            let rep = measure_overhead(&mut interp, args.usize_or("iters", 30))?;
+            println!("total:       {:?}", rep.total);
+            println!("calculation: {:?}", rep.calculation);
+            println!("overhead:    {:?} ({:.2}%)", rep.overhead, rep.overhead_pct);
+        }
+        "simulate" => {
+            let model = load(model_path)?;
+            let platform = match args.get("platform").unwrap_or("m4") {
+                "m4" | "cortex-m4" => Platform::cortex_m4_like(),
+                "dsp" | "hifi" => Platform::hifi_mini_like(),
+                other => return Err(Error::Serving(format!("unknown platform '{other}'"))),
+            };
+            println!("platform: {} ({}, {} MHz)", platform.name, platform.processor, platform.clock_hz / 1_000_000);
+            for (label, flavor) in [("reference", KernelFlavor::Reference), ("optimized", KernelFlavor::Optimized)] {
+                let r = simulate(&model, flavor, &platform);
+                println!(
+                    "{label:<10} total {:>12}  calc {:>12}  overhead {}  ({:.1} ms)",
+                    fmt_kcycles(r.total_cycles),
+                    fmt_kcycles(r.calc_cycles),
+                    if r.overhead_pct < 0.1 { "< 0.1%".to_string() } else { format!("{:.1}%", r.overhead_pct) },
+                    r.wall_ms,
+                );
+            }
+        }
+        "serve" => {
+            let model = load(model_path)?;
+            let resolver = resolver_for(args.get("kernels"))?;
+            let in_len = model.tensors()[model.inputs()[0] as usize].num_elements();
+            let out_len = model.tensors()[model.outputs()[0] as usize].num_elements();
+            let cfg = ServingConfig {
+                workers: args.usize_or("workers", 2),
+                queue_depth: args.usize_or("queue", 32),
+                arena_bytes: args.usize_or("arena-kb", 512) * 1024,
+            };
+            let n = args.usize_or("requests", 256);
+            let mut rng = Rng::seeded(7);
+            let requests = make_requests(n, |_| {
+                let mut v = vec![0i8; in_len];
+                rng.fill_i8(&mut v);
+                v
+            });
+            let report = run_closed_loop(&model, &resolver, cfg, requests, out_len)?;
+            println!("{}", report.summary());
+            println!("per-worker: {:?}", report.per_worker);
+        }
+        other => {
+            return Err(Error::Serving(format!("unknown command '{other}'\n{USAGE}")));
+        }
+    }
+    Ok(())
+}
+
+/// Entrypoint used by `rust/src/main.rs`.
+pub fn cli_main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(main_with_args(argv));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let argv: Vec<String> =
+            ["model.tmf", "--iters", "5", "--profile", "--kernels", "ref"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["model.tmf"]);
+        assert_eq!(a.usize_or("iters", 1), 5);
+        assert!(a.has("profile"));
+        assert_eq!(a.get("kernels"), Some("ref"));
+        assert_eq!(a.usize_or("missing", 9), 9);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert_eq!(main_with_args(vec!["bogus".into(), "x.tmf".into()]), 1);
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert_eq!(main_with_args(vec![]), 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Error type for the whole framework.
+//!
+//! TF Micro reports failures through application-level status codes rather
+//! than aborting (paper §4.4.1: "If an allocation takes up too much space,
+//! we raise an application-level error"). We mirror that with a single
+//! non-panicking error enum; the interpreter never unwinds across the
+//! kernel boundary.
+
+use thiserror::Error;
+
+/// Framework-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// All failure modes surfaced by the framework.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// The caller-supplied arena could not satisfy an allocation.
+    /// Mirrors the paper's arena-exhaustion application error (§4.4.1).
+    #[error("arena exhausted: requested {requested} bytes ({section}), {available} available of {capacity}")]
+    ArenaExhausted {
+        /// Bytes requested by the failing allocation.
+        requested: usize,
+        /// Bytes still unallocated in the arena.
+        available: usize,
+        /// Total arena capacity.
+        capacity: usize,
+        /// Which arena section the allocation targeted ("head", "tail", "temp").
+        section: &'static str,
+    },
+
+    /// Allocation was attempted outside the initialization phase
+    /// (the framework forbids allocation during `invoke`, §4.4.1).
+    #[error("allocation attempted after initialization phase: {0}")]
+    AllocAfterInit(&'static str),
+
+    /// The serialized model failed validation.
+    #[error("malformed model: {0}")]
+    MalformedModel(String),
+
+    /// The model references an operator the resolver does not provide
+    /// (the OpResolver links only registered kernels, §4.1).
+    #[error("unsupported operator: {0} (not registered in the OpResolver)")]
+    UnsupportedOp(String),
+
+    /// The resolver's fixed capacity was exceeded.
+    #[error("op resolver full: capacity {0}")]
+    ResolverFull(usize),
+
+    /// A kernel rejected its inputs during the prepare phase.
+    #[error("prepare failed for op #{op_index} ({op_name}): {reason}")]
+    PrepareFailed {
+        /// Index of the failing operation in the model's execution order.
+        op_index: usize,
+        /// Builtin name of the failing operator.
+        op_name: &'static str,
+        /// Human-readable description of the rejection.
+        reason: String,
+    },
+
+    /// A kernel failed during evaluation.
+    #[error("invoke failed for op #{op_index} ({op_name}): {reason}")]
+    InvokeFailed {
+        /// Index of the failing operation in the model's execution order.
+        op_index: usize,
+        /// Builtin name of the failing operator.
+        op_name: &'static str,
+        /// Human-readable description of the failure.
+        reason: String,
+    },
+
+    /// Tensor index out of range or of the wrong type.
+    #[error("invalid tensor access: {0}")]
+    InvalidTensor(String),
+
+    /// Shape or dtype mismatch.
+    #[error("shape/type mismatch: {0}")]
+    ShapeMismatch(String),
+
+    /// The memory planner could not produce a plan.
+    #[error("memory planning failed: {0}")]
+    PlanFailed(String),
+
+    /// Error from the XLA/PJRT runtime (optimized-kernel path only;
+    /// the pure-interpreter path never touches this).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// The serving layer rejected or dropped a request.
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    /// I/O error loading a model or artifact from disk (host-side tooling
+    /// only; the embedded-style API works from in-memory byte slices).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand used by schema validation code.
+    pub fn malformed(msg: impl Into<String>) -> Self {
+        Error::MalformedModel(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_error_displays_fields() {
+        let e = Error::ArenaExhausted { requested: 128, available: 64, capacity: 1024, section: "head" };
+        let s = e.to_string();
+        assert!(s.contains("128"));
+        assert!(s.contains("64"));
+        assert!(s.contains("head"));
+    }
+
+    #[test]
+    fn malformed_helper() {
+        let e = Error::malformed("bad magic");
+        assert!(matches!(e, Error::MalformedModel(_)));
+        assert!(e.to_string().contains("bad magic"));
+    }
+}

@@ -1,0 +1,564 @@
+//! The TF Micro interpreter (§4.1, §4.2).
+//!
+//! Life cycle, exactly as the paper lays out:
+//!
+//! 1. the application builds an [`crate::ops::OpResolver`] (which controls
+//!    which kernels link into the binary),
+//! 2. supplies a contiguous memory **arena**,
+//! 3. constructs a `MicroInterpreter`, which performs *all* allocation up
+//!    front: kernel `prepare` calls communicate scratch needs, lifetimes
+//!    are analyzed, the memory planner places every intermediate tensor,
+//!    and the arena is sealed — no allocation can happen afterwards,
+//! 4. per inference: populate input views, call [`MicroInterpreter::invoke`]
+//!    (a simple blocking loop over the topologically sorted op list), read
+//!    output views.
+//!
+//! The interpreter keeps **no state outside the arena + its own struct**,
+//! which is what makes multiple interpreters on multiple cores safe
+//! (§4.6) and shared-arena multitenancy possible (§4.5, [`SharedArena`]).
+
+mod shared;
+mod views;
+
+pub use shared::SharedArena;
+pub use views::{TensorView, TensorViewMut};
+
+use crate::arena::{Arena, ArenaUsage, TwoStackAllocator, DEFAULT_ALIGN};
+use crate::error::{Error, Result};
+use crate::ops::{DataLoc, Kernel, OpContext, OpData, OpResolver, PrepareContext};
+use crate::planner::{
+    analyze_lifetimes, BufferRequest, GreedyPlanner, LinearPlanner, MemoryPlanner, OfflinePlanner,
+};
+use crate::schema::Model;
+use crate::tensor::DType;
+
+/// Which memory planner the interpreter should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlannerChoice {
+    /// First-fit-decreasing bin packing (the production default, §4.4.2).
+    #[default]
+    Greedy,
+    /// No-reuse baseline (Figure 4a; ablation only).
+    Linear,
+    /// Use the offline plan carried in model metadata; error if absent.
+    Offline,
+    /// Offline plan if the model carries one, else greedy (TF Micro's
+    /// actual behaviour).
+    Auto,
+}
+
+/// Interpreter construction options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Options {
+    /// Memory-planning strategy.
+    pub planner: PlannerChoice,
+}
+
+/// Observer of per-op invoke events (implemented by the profiler; the
+/// no-op impl on `()` keeps the fast path free of indirection costs when
+/// unused).
+pub trait InvokeObserver {
+    /// An op is about to run.
+    fn begin_op(&mut self, op_index: usize, key: &str);
+    /// The op finished.
+    fn end_op(&mut self, op_index: usize);
+}
+
+impl InvokeObserver for () {
+    #[inline]
+    fn begin_op(&mut self, _: usize, _: &str) {}
+    #[inline]
+    fn end_op(&mut self, _: usize) {}
+}
+
+enum Backing<'a> {
+    Exclusive { base: *mut u8, len: usize, alloc: TwoStackAllocator },
+    Shared { arena: &'a SharedArena, persistent: usize, head_size: usize },
+}
+
+// SAFETY: the Exclusive variant's pointer derives from a `&'a mut [u8]`
+// held exclusively for 'a; Shared is !Sync by construction (SharedArena
+// contains Cells) and the interpreter is then not Send either via the
+// &SharedArena field.
+unsafe impl<'a> Send for Backing<'a> {}
+
+impl<'a> Backing<'a> {
+    fn alloc_tail(&mut self, size: usize, align: usize) -> Result<usize> {
+        match self {
+            Backing::Exclusive { alloc, .. } => alloc.alloc_tail(size, align),
+            Backing::Shared { arena, persistent, .. } => {
+                let off = arena.alloc_tail(size, align)?;
+                *persistent = arena.persistent_used();
+                Ok(off)
+            }
+        }
+    }
+
+    fn reserve_head(&mut self, size: usize) -> Result<usize> {
+        match self {
+            Backing::Exclusive { alloc, .. } => alloc.reserve_head(size, DEFAULT_ALIGN),
+            Backing::Shared { arena, head_size, .. } => {
+                let off = arena.reserve_head(size)?;
+                *head_size = size;
+                Ok(off)
+            }
+        }
+    }
+
+    fn seal(&mut self) {
+        if let Backing::Exclusive { alloc, .. } = self {
+            alloc.seal();
+        }
+    }
+
+    fn base_ptr(&self) -> *mut u8 {
+        match self {
+            Backing::Exclusive { base, .. } => *base,
+            Backing::Shared { arena, .. } => arena.base_ptr(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Backing::Exclusive { len, .. } => *len,
+            Backing::Shared { arena, .. } => arena.capacity(),
+        }
+    }
+}
+
+/// Per-category arena accounting — the `RecordingMicroAllocator` analog
+/// behind the paper's Table 2 analysis (§5.3): where exactly the
+/// persistent and non-persistent bytes go.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaUsageDetail {
+    /// Interpreter-lifetime runtime structures (tensor locs, kernel
+    /// bindings, scratch tables) — tail.
+    pub runtime_structs: usize,
+    /// Prepared per-op kernel state (requant tables etc.) — tail.
+    pub op_data: usize,
+    /// Variable tensors (persistent state) — tail.
+    pub variables: usize,
+    /// The planned non-persistent region (activations + scratch) — head.
+    pub activation_plan: usize,
+    /// Sum of activation tensor sizes inside the plan (pre-compaction).
+    pub tensors_sum: usize,
+    /// Sum of kernel scratch sizes inside the plan.
+    pub scratch_sum: usize,
+}
+
+impl ArenaUsageDetail {
+    /// Multi-line report (used by `tfmicro mem --detail`).
+    pub fn report(&self) -> String {
+        format!(
+            "persistent:\n  runtime structs {:>8} B\n  op data         {:>8} B\n  variables       {:>8} B\nnon-persistent (planned) {} B\n  activations sum {:>8} B (compaction saves {} B)\n  scratch sum     {:>8} B",
+            self.runtime_structs,
+            self.op_data,
+            self.variables,
+            self.activation_plan,
+            self.tensors_sum,
+            (self.tensors_sum + self.scratch_sum).saturating_sub(self.activation_plan),
+            self.scratch_sum,
+        )
+    }
+}
+
+/// The interpreter. See module docs for the life cycle.
+pub struct MicroInterpreter<'m, 'a> {
+    model: &'m Model,
+    backing: Backing<'a>,
+    locs: Vec<DataLoc>,
+    kernels: Vec<&'m dyn Kernel>,
+    op_data: Vec<OpData>,
+    op_scratch: Vec<Vec<(usize, usize)>>,
+    usage: ArenaUsage,
+    detail: ArenaUsageDetail,
+    invocations: u64,
+}
+
+impl<'m, 'a> std::fmt::Debug for MicroInterpreter<'m, 'a> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MicroInterpreter")
+            .field("model", &self.model.description())
+            .field("ops", &self.kernels.len())
+            .field("usage", &self.usage)
+            .field("invocations", &self.invocations)
+            .finish()
+    }
+}
+
+impl<'m, 'a> MicroInterpreter<'m, 'a> {
+    /// Construct over an exclusive arena with default options.
+    pub fn new(model: &'m Model, resolver: &'m OpResolver, arena: &'a mut Arena) -> Result<Self> {
+        Self::with_options(model, resolver, arena.as_mut_slice(), Options::default())
+    }
+
+    /// Construct over an exclusive byte buffer (what an MCU build uses).
+    pub fn from_slice(
+        model: &'m Model,
+        resolver: &'m OpResolver,
+        arena: &'a mut [u8],
+    ) -> Result<Self> {
+        Self::with_options(model, resolver, arena, Options::default())
+    }
+
+    /// Construct over an exclusive byte buffer with explicit options.
+    pub fn with_options(
+        model: &'m Model,
+        resolver: &'m OpResolver,
+        arena: &'a mut [u8],
+        options: Options,
+    ) -> Result<Self> {
+        let backing = Backing::Exclusive {
+            base: arena.as_mut_ptr(),
+            len: arena.len(),
+            alloc: TwoStackAllocator::new(arena.len()),
+        };
+        Self::build(model, resolver, backing, options)
+    }
+
+    /// Construct as a tenant of a [`SharedArena`] (§4.5).
+    pub fn new_shared(
+        model: &'m Model,
+        resolver: &'m OpResolver,
+        arena: &'a SharedArena,
+    ) -> Result<Self> {
+        Self::new_shared_with(model, resolver, arena, Options::default())
+    }
+
+    /// Shared-arena construction with explicit options.
+    pub fn new_shared_with(
+        model: &'m Model,
+        resolver: &'m OpResolver,
+        arena: &'a SharedArena,
+        options: Options,
+    ) -> Result<Self> {
+        let backing = Backing::Shared { arena, persistent: 0, head_size: 0 };
+        Self::build(model, resolver, backing, options)
+    }
+
+    fn build(
+        model: &'m Model,
+        resolver: &'m OpResolver,
+        mut backing: Backing<'a>,
+        options: Options,
+    ) -> Result<Self> {
+        crate::schema::validate::validate(model)?;
+        let n_tensors = model.tensors().len();
+        let n_ops = model.operators().len();
+
+        // --- persistent runtime structures (tail) -----------------------
+        // On an MCU these structs live in the arena tail; on the host they
+        // live in this struct, but we charge the arena identically so the
+        // Table 2 accounting is faithful.
+        let meta_bytes = n_tensors * std::mem::size_of::<DataLoc>()
+            + n_ops
+                * (std::mem::size_of::<&dyn Kernel>()
+                    + std::mem::size_of::<OpData>()
+                    + std::mem::size_of::<Vec<(usize, usize)>>());
+        backing.alloc_tail(meta_bytes, DEFAULT_ALIGN)?;
+        let mut detail = ArenaUsageDetail { runtime_structs: meta_bytes, ..Default::default() };
+
+        // --- resolve kernels (fails fast on unregistered ops, §4.1) -----
+        let mut kernels: Vec<&'m dyn Kernel> = Vec::with_capacity(n_ops);
+        for op in model.operators() {
+            kernels.push(resolver.find(op.key())?);
+        }
+
+        // --- tensor data locations --------------------------------------
+        let mut locs = vec![DataLoc::Arena { off: 0, len: 0 }; n_tensors];
+        let mut variable_tensors = Vec::new();
+        for (ti, t) in model.tensors().iter().enumerate() {
+            if let Some(b) = t.buffer {
+                let (off, len) = model.buffer_range(b)?;
+                if len != t.num_bytes() {
+                    return Err(Error::malformed(format!(
+                        "tensor {ti} ('{}'): buffer is {len} bytes, expected {}",
+                        t.name,
+                        t.num_bytes()
+                    )));
+                }
+                locs[ti] = DataLoc::Const { off, len };
+            } else if t.is_variable {
+                // Variables persist across invokes: interpreter lifetime.
+                let off = backing.alloc_tail(t.num_bytes(), DEFAULT_ALIGN)?;
+                locs[ti] = DataLoc::Arena { off, len: t.num_bytes() };
+                detail.variables += t.num_bytes();
+                variable_tensors.push(ti);
+            }
+        }
+
+        // --- prepare phase (kernels request scratch, store op data) -----
+        let mut op_data: Vec<OpData> = (0..n_ops).map(|_| OpData::None).collect();
+        let mut scratch_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+        let mut persistent_opdata = 0usize;
+        for (i, op) in model.operators().iter().enumerate() {
+            let mut sizes = Vec::new();
+            let mut ctx = PrepareContext::new(
+                i,
+                op,
+                model,
+                &mut sizes,
+                &mut op_data[i],
+                &mut persistent_opdata,
+            );
+            kernels[i].prepare(&mut ctx)?;
+            scratch_sizes_per_op.push(sizes);
+        }
+        backing.alloc_tail(persistent_opdata, DEFAULT_ALIGN)?;
+        detail.op_data = persistent_opdata;
+
+        // --- lifetime analysis + planning --------------------------------
+        let info = analyze_lifetimes(model);
+        let mut requests: Vec<BufferRequest> = info.requests.clone();
+        detail.tensors_sum = requests.iter().map(|r| r.size).sum();
+        // Scratch buffers live exactly during their op.
+        let mut scratch_req_index: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+        for (i, sizes) in scratch_sizes_per_op.iter().enumerate() {
+            let mut idxs = Vec::with_capacity(sizes.len());
+            for &sz in sizes {
+                idxs.push(requests.len());
+                requests.push(BufferRequest { size: sz, first_use: i, last_use: i });
+            }
+            scratch_req_index.push(idxs);
+        }
+        detail.scratch_sum = requests[info.requests.len()..].iter().map(|r| r.size).sum();
+
+        let plan = match options.planner {
+            PlannerChoice::Greedy => GreedyPlanner.plan(&requests, DEFAULT_ALIGN)?,
+            PlannerChoice::Linear => LinearPlanner.plan(&requests, DEFAULT_ALIGN)?,
+            PlannerChoice::Offline | PlannerChoice::Auto => {
+                match model.offline_plan() {
+                    Some(mut fixed) => {
+                        // The model's plan covers its tensors; scratch
+                        // entries float (-1).
+                        fixed.resize(requests.len(), -1);
+                        OfflinePlanner::new(fixed).plan(&requests, DEFAULT_ALIGN)?
+                    }
+                    None if options.planner == PlannerChoice::Auto => {
+                        GreedyPlanner.plan(&requests, DEFAULT_ALIGN)?
+                    }
+                    None => {
+                        return Err(Error::PlanFailed(
+                            "offline planner requested but model carries no plan".into(),
+                        ))
+                    }
+                }
+            }
+        };
+        debug_assert!(crate::planner::verify_plan(&requests, &plan).is_ok());
+
+        // --- reserve the non-persistent region and bind offsets ----------
+        detail.activation_plan = plan.arena_size;
+        let head_base = backing.reserve_head(plan.arena_size)?;
+        for (k, &ti) in info.tensor_indices.iter().enumerate() {
+            locs[ti] = DataLoc::Arena {
+                off: head_base + plan.offsets[k],
+                len: model.tensors()[ti].num_bytes(),
+            };
+        }
+        let mut op_scratch: Vec<Vec<(usize, usize)>> = Vec::with_capacity(n_ops);
+        for (i, idxs) in scratch_req_index.iter().enumerate() {
+            op_scratch.push(
+                idxs.iter()
+                    .map(|&ri| (head_base + plan.offsets[ri], requests[ri].size))
+                    .collect(),
+            );
+            let _ = i;
+        }
+
+        backing.seal();
+
+        let usage = match &backing {
+            Backing::Exclusive { alloc, .. } => alloc.usage(),
+            Backing::Shared { arena, persistent, head_size } => ArenaUsage {
+                persistent: *persistent,
+                nonpersistent: *head_size,
+                total: *persistent + *head_size,
+                capacity: arena.capacity(),
+            },
+        };
+
+        let mut interp = MicroInterpreter {
+            model,
+            backing,
+            locs,
+            kernels,
+            op_data,
+            op_scratch,
+            usage,
+            detail,
+            invocations: 0,
+        };
+        // Variables start at their zero representation.
+        for ti in variable_tensors {
+            interp.reset_tensor(ti)?;
+        }
+        Ok(interp)
+    }
+
+    // --- data access -----------------------------------------------------
+
+    fn view_bytes(&self, ti: usize) -> Result<&[u8]> {
+        match self.locs[ti] {
+            DataLoc::Const { off, len } => Ok(&self.model.data()[off..off + len]),
+            DataLoc::Arena { off, len } => {
+                // SAFETY: planned range inside the arena (see OpContext docs).
+                Ok(unsafe { std::slice::from_raw_parts(self.backing.base_ptr().add(off), len) })
+            }
+        }
+    }
+
+    fn view_bytes_mut(&mut self, ti: usize) -> Result<&mut [u8]> {
+        match self.locs[ti] {
+            DataLoc::Const { .. } => {
+                Err(Error::InvalidTensor("cannot mutate constant tensor".into()))
+            }
+            DataLoc::Arena { off, len } => {
+                // SAFETY: exclusive &mut self; planned range inside the arena.
+                Ok(unsafe { std::slice::from_raw_parts_mut(self.backing.base_ptr().add(off), len) })
+            }
+        }
+    }
+
+    /// Read-only view of graph input `i`.
+    pub fn input(&self, i: usize) -> Result<TensorView<'_>> {
+        let ti = *self
+            .model
+            .inputs()
+            .get(i)
+            .ok_or_else(|| Error::InvalidTensor(format!("input {i} out of range")))?
+            as usize;
+        Ok(TensorView { meta: &self.model.tensors()[ti], bytes: self.view_bytes(ti)? })
+    }
+
+    /// Mutable view of graph input `i` (populate before `invoke`).
+    pub fn input_mut(&mut self, i: usize) -> Result<TensorViewMut<'_>> {
+        let ti = *self
+            .model
+            .inputs()
+            .get(i)
+            .ok_or_else(|| Error::InvalidTensor(format!("input {i} out of range")))?
+            as usize;
+        let meta = &self.model.tensors()[ti];
+        match self.locs[ti] {
+            DataLoc::Const { .. } => Err(Error::InvalidTensor("input is constant".into())),
+            DataLoc::Arena { off, len } => Ok(TensorViewMut {
+                meta,
+                // SAFETY: as in view_bytes_mut (split borrows of self).
+                bytes: unsafe {
+                    std::slice::from_raw_parts_mut(self.backing.base_ptr().add(off), len)
+                },
+            }),
+        }
+    }
+
+    /// Read-only view of graph output `i`.
+    pub fn output(&self, i: usize) -> Result<TensorView<'_>> {
+        let ti = *self
+            .model
+            .outputs()
+            .get(i)
+            .ok_or_else(|| Error::InvalidTensor(format!("output {i} out of range")))?
+            as usize;
+        Ok(TensorView { meta: &self.model.tensors()[ti], bytes: self.view_bytes(ti)? })
+    }
+
+    /// Read-only view of an arbitrary tensor (debugging / tests).
+    pub fn tensor_view(&self, ti: usize) -> Result<TensorView<'_>> {
+        if ti >= self.model.tensors().len() {
+            return Err(Error::InvalidTensor(format!("tensor {ti} out of range")));
+        }
+        Ok(TensorView { meta: &self.model.tensors()[ti], bytes: self.view_bytes(ti)? })
+    }
+
+    /// Reset a variable tensor to its zero representation.
+    fn reset_tensor(&mut self, ti: usize) -> Result<()> {
+        let zero = match self.model.tensors()[ti].dtype {
+            DType::I8 => self.model.tensors()[ti].quant.as_ref().map(|q| q.zero_points[0] as i8).unwrap_or(0) as u8,
+            _ => 0u8,
+        };
+        self.view_bytes_mut(ti)?.fill(zero);
+        Ok(())
+    }
+
+    /// Reset all variable tensors (e.g. between unrelated sequences).
+    pub fn reset_variables(&mut self) -> Result<()> {
+        for ti in 0..self.model.tensors().len() {
+            if self.model.tensors()[ti].is_variable {
+                self.reset_tensor(ti)?;
+            }
+        }
+        Ok(())
+    }
+
+    // --- execution ---------------------------------------------------------
+
+    /// Run one inference: a simple blocking loop over the sorted op list.
+    pub fn invoke(&mut self) -> Result<()> {
+        self.invoke_observed(&mut ())
+    }
+
+    /// Run one inference with per-op begin/end callbacks (profiling,
+    /// §5.4's instrumentation hooks).
+    pub fn invoke_observed(&mut self, obs: &mut dyn InvokeObserver) -> Result<()> {
+        if let Backing::Shared { arena, .. } = &self.backing {
+            arena.acquire()?;
+        }
+        let base = self.backing.base_ptr();
+        let len = self.backing.len();
+        let result = (|| -> Result<()> {
+            for (i, op) in self.model.operators().iter().enumerate() {
+                obs.begin_op(i, op.key());
+                let ctx = OpContext::new(
+                    i,
+                    op,
+                    self.model.tensors(),
+                    &self.locs,
+                    self.model.data(),
+                    base,
+                    len,
+                    &self.op_scratch[i],
+                    &self.op_data[i],
+                );
+                self.kernels[i].invoke(&ctx)?;
+                obs.end_op(i);
+            }
+            Ok(())
+        })();
+        if let Backing::Shared { arena, .. } = &self.backing {
+            arena.release();
+        }
+        self.invocations += 1;
+        result
+    }
+
+    // --- introspection ----------------------------------------------------
+
+    /// Arena accounting (Table 2's persistent/non-persistent/total).
+    pub fn arena_usage(&self) -> ArenaUsage {
+        match &self.backing {
+            Backing::Exclusive { alloc, .. } => alloc.usage(),
+            Backing::Shared { .. } => self.usage,
+        }
+    }
+
+    /// Per-category arena breakdown (the RecordingMicroAllocator view).
+    pub fn arena_usage_detail(&self) -> ArenaUsageDetail {
+        self.detail
+    }
+
+    /// Number of completed invocations.
+    pub fn invocations(&self) -> u64 {
+        self.invocations
+    }
+
+    /// Number of operations in the execution list.
+    pub fn op_count(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// The loaded model.
+    pub fn model(&self) -> &'m Model {
+        self.model
+    }
+}

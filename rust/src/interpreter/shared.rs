@@ -1,0 +1,171 @@
+//! Shared arena for multitenancy (§4.5, Figure 5).
+//!
+//! "TF Micro supports memory-arena reuse by enabling the multiple model
+//! interpreters to allocate memory from a single arena. We allow
+//! interpreter-lifetime areas to stack on each other in the arena and
+//! reuse the function-lifetime section for model evaluation. The reusable
+//! (nonpersistent) part is set to the largest requirement."
+//!
+//! Layout over one buffer:
+//!
+//! ```text
+//! | shared non-persistent (max over models) | free | B tail | A tail |
+//! ^ head grows per-invoke                              persistent stacks
+//! ```
+//!
+//! Interpreters over a [`SharedArena`] must not invoke concurrently (the
+//! paper's precondition: models "need not run simultaneously"); a runtime
+//! busy flag turns violations into an error instead of data corruption.
+//! For concurrent execution use one exclusive arena per interpreter
+//! (§4.6), as the serving layer does.
+
+use crate::error::{Error, Result};
+use std::cell::{Cell, UnsafeCell};
+
+/// A memory arena shareable by several interpreters (single-threaded).
+pub struct SharedArena {
+    buf: UnsafeCell<Box<[u8]>>,
+    /// Bytes consumed from the top by interpreter-lifetime (tail) data,
+    /// cumulative across all tenant interpreters.
+    tail_used: Cell<usize>,
+    /// Largest non-persistent (head) requirement across tenants.
+    head_high: Cell<usize>,
+    /// True while some tenant is mid-invoke.
+    busy: Cell<bool>,
+}
+
+impl SharedArena {
+    /// Allocate a zeroed shared arena.
+    pub fn new(size: usize) -> Self {
+        SharedArena {
+            buf: UnsafeCell::new(vec![0u8; size].into_boxed_slice()),
+            tail_used: Cell::new(0),
+            head_high: Cell::new(0),
+            busy: Cell::new(false),
+        }
+    }
+
+    /// Total capacity.
+    pub fn capacity(&self) -> usize {
+        // SAFETY: reading the length only.
+        unsafe { (&*self.buf.get()).len() }
+    }
+
+    /// Base pointer (interpreter-internal).
+    pub(crate) fn base_ptr(&self) -> *mut u8 {
+        // SAFETY: pointer derivation only; access discipline is enforced
+        // by the busy flag + allocation bookkeeping.
+        unsafe { (*self.buf.get()).as_mut_ptr() }
+    }
+
+    /// Reserve `size` bytes of interpreter-lifetime (tail) storage.
+    /// Returns the byte offset. Tails from successive tenants stack
+    /// downward, as in Figure 5.
+    pub(crate) fn alloc_tail(&self, size: usize, align: usize) -> Result<usize> {
+        let cap = self.capacity();
+        let new_used = self.tail_used.get() + size;
+        let off = cap
+            .checked_sub(new_used)
+            .ok_or(Error::ArenaExhausted {
+                requested: size,
+                available: cap.saturating_sub(self.head_high.get() + self.tail_used.get()),
+                capacity: cap,
+                section: "shared-tail",
+            })?
+            & !(align - 1);
+        let used = cap - off;
+        if self.head_high.get() + used > cap {
+            return Err(Error::ArenaExhausted {
+                requested: size,
+                available: cap.saturating_sub(self.head_high.get() + self.tail_used.get()),
+                capacity: cap,
+                section: "shared-tail",
+            });
+        }
+        self.tail_used.set(used);
+        Ok(off)
+    }
+
+    /// Reserve the shared non-persistent (head) region: grows to the max
+    /// requirement over all tenants and returns offset 0.
+    pub(crate) fn reserve_head(&self, size: usize) -> Result<usize> {
+        let cap = self.capacity();
+        if size + self.tail_used.get() > cap {
+            return Err(Error::ArenaExhausted {
+                requested: size,
+                available: cap.saturating_sub(self.tail_used.get() + self.head_high.get()),
+                capacity: cap,
+                section: "shared-head",
+            });
+        }
+        self.head_high.set(self.head_high.get().max(size));
+        Ok(0)
+    }
+
+    /// Mark an invoke in flight; fails if one already is.
+    pub(crate) fn acquire(&self) -> Result<()> {
+        if self.busy.replace(true) {
+            return Err(Error::Serving(
+                "shared-arena interpreters must not run concurrently (§4.5)".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Release the invoke flag.
+    pub(crate) fn release(&self) {
+        self.busy.set(false);
+    }
+
+    /// Total persistent bytes consumed by all tenants.
+    pub fn persistent_used(&self) -> usize {
+        self.tail_used.get()
+    }
+
+    /// Size of the shared non-persistent region (max over tenants).
+    pub fn nonpersistent_used(&self) -> usize {
+        self.head_high.get()
+    }
+
+    /// Peak total = stacked tails + shared head (the Figure 5 number).
+    pub fn total_used(&self) -> usize {
+        self.tail_used.get() + self.head_high.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tails_stack_heads_share() {
+        let a = SharedArena::new(1000);
+        let t1 = a.alloc_tail(100, 16).unwrap();
+        let t2 = a.alloc_tail(50, 16).unwrap();
+        assert!(t2 < t1, "second tenant's tail sits below the first");
+        a.reserve_head(300).unwrap();
+        a.reserve_head(200).unwrap(); // smaller tenant: no growth
+        assert_eq!(a.nonpersistent_used(), 300);
+        a.reserve_head(400).unwrap(); // bigger tenant: grows to max
+        assert_eq!(a.nonpersistent_used(), 400);
+        assert!(a.persistent_used() >= 150);
+        assert!(a.total_used() <= 1000);
+    }
+
+    #[test]
+    fn exhaustion_detected() {
+        let a = SharedArena::new(256);
+        a.alloc_tail(200, 16).unwrap();
+        assert!(a.reserve_head(100).is_err());
+        assert!(a.alloc_tail(100, 16).is_err());
+    }
+
+    #[test]
+    fn busy_flag_blocks_concurrent_invoke() {
+        let a = SharedArena::new(64);
+        a.acquire().unwrap();
+        assert!(a.acquire().is_err());
+        a.release();
+        assert!(a.acquire().is_ok());
+    }
+}

@@ -1,0 +1,150 @@
+//! Typed views over a tensor's storage, returned by the interpreter's
+//! input/output accessors (§4.1 step 4: "the application retrieves
+//! pointers to the memory regions that represent the model inputs and
+//! populates them with values").
+
+use crate::error::{Error, Result};
+use crate::ops::{cast_f32, cast_f32_mut, cast_i8, cast_i8_mut, cast_i32};
+use crate::tensor::{DType, TensorMeta};
+
+/// Read-only view of one tensor.
+pub struct TensorView<'a> {
+    /// Tensor metadata (shape, dtype, quantization).
+    pub meta: &'a TensorMeta,
+    pub(crate) bytes: &'a [u8],
+}
+
+impl<'a> TensorView<'a> {
+    /// Raw storage bytes.
+    pub fn bytes(&self) -> &'a [u8] {
+        self.bytes
+    }
+
+    /// View as i8 elements.
+    pub fn as_i8(&self) -> Result<&'a [i8]> {
+        self.expect(DType::I8)?;
+        Ok(cast_i8(self.bytes))
+    }
+
+    /// View as f32 elements.
+    pub fn as_f32(&self) -> Result<&'a [f32]> {
+        self.expect(DType::F32)?;
+        cast_f32(self.bytes)
+    }
+
+    /// View as i32 elements.
+    pub fn as_i32(&self) -> Result<&'a [i32]> {
+        self.expect(DType::I32)?;
+        cast_i32(self.bytes)
+    }
+
+    /// Dequantize an i8 tensor into a fresh Vec (host-side convenience).
+    pub fn dequantized(&self) -> Result<Vec<f32>> {
+        let q = self
+            .meta
+            .quant
+            .as_ref()
+            .ok_or_else(|| Error::InvalidTensor(format!("'{}' is not quantized", self.meta.name)))?;
+        Ok(self.as_i8()?.iter().map(|&v| q.dequantize_i8(v)).collect())
+    }
+
+    fn expect(&self, want: DType) -> Result<()> {
+        if self.meta.dtype != want {
+            return Err(Error::ShapeMismatch(format!(
+                "tensor '{}' is {}, requested {}",
+                self.meta.name, self.meta.dtype, want
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Mutable view of one tensor.
+pub struct TensorViewMut<'a> {
+    /// Tensor metadata.
+    pub meta: &'a TensorMeta,
+    pub(crate) bytes: &'a mut [u8],
+}
+
+impl<'a> TensorViewMut<'a> {
+    /// Raw mutable storage bytes.
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        self.bytes
+    }
+
+    /// Mutable i8 elements.
+    pub fn as_i8_mut(&mut self) -> Result<&mut [i8]> {
+        self.expect(DType::I8)?;
+        Ok(cast_i8_mut(self.bytes))
+    }
+
+    /// Mutable f32 elements.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        self.expect(DType::F32)?;
+        cast_f32_mut(self.bytes)
+    }
+
+    /// Copy i8 data in, checking the length.
+    pub fn copy_from_i8(&mut self, src: &[i8]) -> Result<()> {
+        let dst = self.as_i8_mut()?;
+        if dst.len() != src.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "copy_from_i8: {} elements into tensor of {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Copy f32 data in, checking the length.
+    pub fn copy_from_f32(&mut self, src: &[f32]) -> Result<()> {
+        let dst = self.as_f32_mut()?;
+        if dst.len() != src.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "copy_from_f32: {} elements into tensor of {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Fill an i8 tensor with one value.
+    pub fn fill_i8(&mut self, v: i8) {
+        self.bytes.fill(v as u8);
+    }
+
+    /// Quantize float data in using the tensor's own parameters.
+    pub fn quantize_from_f32(&mut self, src: &[f32]) -> Result<()> {
+        let q = self
+            .meta
+            .quant
+            .clone()
+            .ok_or_else(|| Error::InvalidTensor(format!("'{}' is not quantized", self.meta.name)))?;
+        let dst = self.as_i8_mut()?;
+        if dst.len() != src.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "quantize_from_f32: {} elements into tensor of {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = q.quantize_f32(v);
+        }
+        Ok(())
+    }
+
+    fn expect(&self, want: DType) -> Result<()> {
+        if self.meta.dtype != want {
+            return Err(Error::ShapeMismatch(format!(
+                "tensor '{}' is {}, requested {}",
+                self.meta.name, self.meta.dtype, want
+            )));
+        }
+        Ok(())
+    }
+}

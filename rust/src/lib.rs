@@ -1,0 +1,67 @@
+//! # tfmicro — an interpreter-based TinyML inference framework
+//!
+//! A Rust reproduction of *TensorFlow Lite Micro: Embedded Machine Learning
+//! on TinyML Systems* (David et al., 2020). The crate provides the complete
+//! framework the paper describes:
+//!
+//! * a portable, zero-copy serialized model format ([`schema`], the
+//!   FlatBuffer-schema analog — "TMF"),
+//! * static memory management from a caller-supplied arena with a
+//!   two-stack allocator ([`arena`], paper §4.4.1 / Figure 3),
+//! * a greedy bin-packing memory planner for intermediate tensors plus a
+//!   naive baseline and an offline-planned mode ([`planner`], §4.4.2 /
+//!   Figure 4),
+//! * an operator registry with an `OpResolver` that links only the kernels
+//!   a model needs, and reference vs. platform-optimized kernel variants
+//!   ([`ops`], §4.1/§4.7/§4.8),
+//! * the interpreter itself — allocate once, then `invoke()` with no
+//!   further allocation ([`interpreter`], §4.1/§4.2),
+//! * multitenancy over a shared arena (§4.5 / Figure 5),
+//! * profiling hooks and simulated embedded-platform cycle models
+//!   ([`profiler`], [`platform`], §5),
+//! * an XLA/PJRT runtime that loads AOT-compiled JAX/Pallas kernels as the
+//!   "vendor optimized library" path ([`runtime`]),
+//! * and a small std-only serving layer used by the end-to-end examples
+//!   ([`serving`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tfmicro::prelude::*;
+//!
+//! let bytes = std::fs::read("artifacts/conv_ref.tmf").unwrap();
+//! let model = Model::from_bytes(&bytes).unwrap();
+//! let resolver = OpResolver::with_reference_ops();
+//! let mut arena = Arena::new(64 * 1024);
+//! let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+//! interp.input_mut(0).unwrap().fill_i8(0);
+//! interp.invoke().unwrap();
+//! let out = interp.output(0).unwrap();
+//! println!("scores = {:?}", out.as_i8().unwrap());
+//! ```
+
+pub mod arena;
+pub mod cli;
+pub mod error;
+pub mod interpreter;
+pub mod ops;
+pub mod planner;
+pub mod platform;
+pub mod profiler;
+pub mod runtime;
+pub mod schema;
+pub mod serving;
+pub mod tensor;
+pub mod testutil;
+
+/// Convenient re-exports of the types most applications need.
+pub mod prelude {
+    pub use crate::arena::Arena;
+    pub use crate::error::{Error, Result};
+    pub use crate::interpreter::MicroInterpreter;
+    pub use crate::ops::resolver::OpResolver;
+    pub use crate::schema::model::Model;
+    pub use crate::tensor::{DType, QuantParams};
+}
+
+pub use cli::cli_main;

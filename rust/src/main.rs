@@ -1,0 +1,4 @@
+//! `tfmicro` CLI — run, inspect, benchmark, and serve TMF models.
+fn main() {
+    tfmicro::cli_main();
+}

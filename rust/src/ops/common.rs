@@ -1,0 +1,297 @@
+//! Shared kernel machinery: padding arithmetic, fused-activation ranges,
+//! and prepared quantization state.
+//!
+//! Everything here mirrors TFLite's kernel_util definitions so that int8
+//! inference is bit-exact with the TFLite quantization spec the paper's
+//! benchmark models use (§5.1: "Our benchmarks are INT8 TensorFlow Lite
+//! models").
+
+use crate::error::Result;
+use crate::schema::format::{Activation, Padding};
+use crate::tensor::{QuantizedMultiplier, TensorMeta};
+
+/// Computed spatial padding for one dimension pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PaddingValues {
+    /// Zero rows added above.
+    pub top: i32,
+    /// Zero columns added to the left.
+    pub left: i32,
+}
+
+/// Output spatial extent for a conv/pool dimension (TFLite semantics).
+pub fn compute_out_size(padding: Padding, in_size: i32, filter: i32, stride: i32, dilation: i32) -> i32 {
+    let effective = (filter - 1) * dilation + 1;
+    match padding {
+        Padding::Same => (in_size + stride - 1) / stride,
+        Padding::Valid => (in_size - effective + stride) / stride,
+    }
+}
+
+/// Padding offset (top/left) for one dimension (TFLite `ComputePadding`).
+pub fn compute_padding(stride: i32, dilation: i32, in_size: i32, filter: i32, out_size: i32) -> i32 {
+    let effective = (filter - 1) * dilation + 1;
+    let padding = ((out_size - 1) * stride + effective - in_size) / 2;
+    padding.max(0)
+}
+
+/// Clamp range implied by a fused activation on f32 data.
+pub fn activation_range_f32(act: Activation) -> (f32, f32) {
+    match act {
+        Activation::None => (f32::NEG_INFINITY, f32::INFINITY),
+        Activation::Relu => (0.0, f32::INFINITY),
+        Activation::Relu6 => (0.0, 6.0),
+    }
+}
+
+/// Clamp range implied by a fused activation on int8 data, in the output's
+/// quantized domain (TFLite `CalculateActivationRangeQuantized`).
+pub fn activation_range_i8(act: Activation, out: &TensorMeta) -> Result<(i32, i32)> {
+    let scale = out.scale()?;
+    let zp = out.zero_point()?;
+    let quantize = |v: f32| -> i32 { (v / scale).round() as i32 + zp };
+    let (lo, hi) = match act {
+        Activation::None => (i8::MIN as i32, i8::MAX as i32),
+        Activation::Relu => (quantize(0.0).max(i8::MIN as i32), i8::MAX as i32),
+        Activation::Relu6 => (
+            quantize(0.0).max(i8::MIN as i32),
+            quantize(6.0).min(i8::MAX as i32),
+        ),
+    };
+    Ok((lo, hi.max(lo)))
+}
+
+/// Prepared per-output-channel requantization entry.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChannelQuant {
+    /// Fixed-point output multiplier for this channel.
+    pub mult: QuantizedMultiplier,
+}
+
+/// Prepared state for conv-style kernels.
+#[derive(Debug, Default)]
+pub struct ConvData {
+    /// Computed padding offsets.
+    pub pad: PaddingValues,
+    /// Output spatial height.
+    pub out_h: i32,
+    /// Output spatial width.
+    pub out_w: i32,
+    /// Per-output-channel requantization multipliers (len = out channels;
+    /// per-tensor quantization repeats one entry).
+    pub per_channel: Vec<ChannelQuant>,
+    /// -input zero point, applied to each input element.
+    pub input_offset: i32,
+    /// Output zero point.
+    pub output_offset: i32,
+    /// Quantized activation clamp (min, max).
+    pub act_min: i32,
+    /// Quantized activation clamp max.
+    pub act_max: i32,
+    /// Float activation clamp, for f32 models.
+    pub fact: (f32, f32),
+}
+
+/// Prepared state for fully-connected kernels.
+#[derive(Debug, Default)]
+pub struct FcData {
+    /// Requantization multiplier (per-tensor).
+    pub mult: QuantizedMultiplier,
+    /// -input zero point.
+    pub input_offset: i32,
+    /// -filter zero point.
+    pub filter_offset: i32,
+    /// Output zero point.
+    pub output_offset: i32,
+    /// Quantized activation clamp min.
+    pub act_min: i32,
+    /// Quantized activation clamp max.
+    pub act_max: i32,
+    /// Float activation clamp.
+    pub fact: (f32, f32),
+}
+
+/// Prepared state for pooling kernels.
+#[derive(Debug, Default)]
+pub struct PoolData {
+    /// Computed padding offsets.
+    pub pad: PaddingValues,
+    /// Output spatial height.
+    pub out_h: i32,
+    /// Output spatial width.
+    pub out_w: i32,
+    /// Quantized activation clamp min.
+    pub act_min: i32,
+    /// Quantized activation clamp max.
+    pub act_max: i32,
+    /// Float activation clamp.
+    pub fact: (f32, f32),
+}
+
+/// Prepared state for softmax (int8 path uses scaled-diff exponent table
+/// semantics; we precompute the input scaling).
+#[derive(Debug, Default)]
+pub struct SoftmaxData {
+    /// beta * input_scale, folded for the exp argument.
+    pub beta_scale: f32,
+    /// Output scale (for quantizing the result).
+    pub out_scale: f32,
+    /// Output zero point.
+    pub out_zp: i32,
+}
+
+/// Prepared state for quantized elementwise add/mul.
+#[derive(Debug, Default)]
+pub struct ArithData {
+    /// Left shift applied before per-input rescaling (TFLite uses 20).
+    pub left_shift: i32,
+    /// Input-1 rescale.
+    pub mult1: QuantizedMultiplier,
+    /// Input-2 rescale.
+    pub mult2: QuantizedMultiplier,
+    /// Output rescale.
+    pub mult_out: QuantizedMultiplier,
+    /// -input1 zero point.
+    pub offset1: i32,
+    /// -input2 zero point.
+    pub offset2: i32,
+    /// Output zero point.
+    pub offset_out: i32,
+    /// Quantized activation clamp min.
+    pub act_min: i32,
+    /// Quantized activation clamp max.
+    pub act_max: i32,
+    /// Float activation clamp.
+    pub fact: (f32, f32),
+}
+
+/// Prepared state for quantize/requantize.
+#[derive(Debug, Default)]
+pub struct RequantData {
+    /// effective scale in/out as a fixed-point multiplier.
+    pub mult: QuantizedMultiplier,
+    /// Input zero point.
+    pub in_zp: i32,
+    /// Output zero point.
+    pub out_zp: i32,
+    /// Input scale (float → int8 path).
+    pub in_scale: f32,
+    /// Output scale.
+    pub out_scale: f32,
+}
+
+/// Prepared state for mean reduction.
+#[derive(Debug, Default)]
+pub struct MeanData {
+    /// Resolved (non-negative) axes to reduce.
+    pub axes: Vec<usize>,
+    /// Number of elements reduced per output element.
+    pub divisor: i32,
+    /// Requantization multiplier folding in/out scales and the divisor.
+    pub mult: QuantizedMultiplier,
+    /// Input zero point.
+    pub in_zp: i32,
+    /// Output zero point.
+    pub out_zp: i32,
+}
+
+/// Build per-channel conv requantization state.
+///
+/// effective_scale[c] = input_scale * filter_scale[c] / output_scale,
+/// quantized to (multiplier, shift) pairs at prepare time.
+pub fn conv_per_channel(
+    input: &TensorMeta,
+    filter: &TensorMeta,
+    output: &TensorMeta,
+    out_channels: usize,
+) -> Result<Vec<ChannelQuant>> {
+    let in_scale = input.scale()? as f64;
+    let out_scale = output.scale()? as f64;
+    let fq = filter
+        .quant
+        .as_ref()
+        .ok_or_else(|| crate::error::Error::InvalidTensor("filter not quantized".into()))?;
+    let mut v = Vec::with_capacity(out_channels);
+    for c in 0..out_channels {
+        let fs = if fq.scales.len() == 1 { fq.scales[0] } else { fq.scales[c] } as f64;
+        v.push(ChannelQuant { mult: QuantizedMultiplier::from_real(in_scale * fs / out_scale) });
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, QuantParams, Shape};
+
+    fn quant_meta(scale: f32, zp: i32) -> TensorMeta {
+        TensorMeta {
+            name: "t".into(),
+            dtype: DType::I8,
+            shape: Shape::new(vec![1]),
+            buffer: None,
+            quant: Some(QuantParams::per_tensor(scale, zp)),
+            is_variable: false,
+        }
+    }
+
+    #[test]
+    fn out_size_same_vs_valid() {
+        // 96x96 input, 3x3 filter, stride 2 (first VWW conv).
+        assert_eq!(compute_out_size(Padding::Same, 96, 3, 2, 1), 48);
+        assert_eq!(compute_out_size(Padding::Valid, 96, 3, 2, 1), 47);
+        // stride 1.
+        assert_eq!(compute_out_size(Padding::Same, 10, 3, 1, 1), 10);
+        assert_eq!(compute_out_size(Padding::Valid, 10, 3, 1, 1), 8);
+    }
+
+    #[test]
+    fn padding_offsets() {
+        // SAME 3x3 stride 1 over 10 -> pad 1.
+        assert_eq!(compute_padding(1, 1, 10, 3, 10), 1);
+        // SAME 3x3 stride 2 over 96 -> out 48, pad floor(((48-1)*2+3-96)/2)=0
+        assert_eq!(compute_padding(2, 1, 96, 3, 48), 0);
+        // VALID never needs padding.
+        assert_eq!(compute_padding(1, 1, 10, 3, 8), 0);
+    }
+
+    #[test]
+    fn activation_ranges_f32() {
+        assert_eq!(activation_range_f32(Activation::Relu6), (0.0, 6.0));
+        let (lo, hi) = activation_range_f32(Activation::None);
+        assert!(lo.is_infinite() && hi.is_infinite());
+    }
+
+    #[test]
+    fn activation_ranges_i8() {
+        // scale 0.1, zp -10: relu6 clamps to [q(0), q(6)] = [-10, 50].
+        let out = quant_meta(0.1, -10);
+        assert_eq!(activation_range_i8(Activation::Relu6, &out).unwrap(), (-10, 50));
+        assert_eq!(activation_range_i8(Activation::Relu, &out).unwrap(), (-10, 127));
+        assert_eq!(activation_range_i8(Activation::None, &out).unwrap(), (-128, 127));
+    }
+
+    #[test]
+    fn per_channel_multipliers() {
+        let input = quant_meta(0.5, 0);
+        let output = quant_meta(0.25, 0);
+        let mut filter = quant_meta(1.0, 0);
+        filter.quant = Some(QuantParams::per_axis(vec![0.5, 1.0], vec![0, 0], 0));
+        let pc = conv_per_channel(&input, &filter, &output, 2).unwrap();
+        // effective scales: 0.5*0.5/0.25 = 1.0 and 0.5*1.0/0.25 = 2.0.
+        assert_eq!(pc[0].mult.apply(100), 100);
+        assert_eq!(pc[1].mult.apply(100), 200);
+    }
+
+    #[test]
+    fn per_tensor_filter_broadcasts() {
+        let input = quant_meta(1.0, 0);
+        let output = quant_meta(1.0, 0);
+        let filter = quant_meta(0.5, 0);
+        let pc = conv_per_channel(&input, &filter, &output, 4).unwrap();
+        assert_eq!(pc.len(), 4);
+        for c in &pc {
+            assert_eq!(c.mult.apply(64), 32);
+        }
+    }
+}

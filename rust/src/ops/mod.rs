@@ -1,0 +1,513 @@
+//! Operators: the calculation units of the graph (§4.7).
+//!
+//! Kernels follow TF Micro's two-phase protocol:
+//!
+//! 1. **prepare** — called once per op during interpreter initialization.
+//!    The kernel validates shapes/dtypes, precomputes quantization state
+//!    (fixed-point multipliers, activation ranges), requests scratch
+//!    memory, and stores per-op data. All allocation happens here.
+//! 2. **invoke** — called on every inference. Pure computation over
+//!    tensor views; no allocation (the arena is sealed by then).
+//!
+//! The boundary is intentionally narrow — the kernel sees only
+//! [`PrepareContext`] / [`OpContext`], never interpreter internals —
+//! which is the crate's analog of the paper's C-API boundary ("to ensure
+//! operator implementations are modular and independent of the
+//! interpreter", §4.1). Swapping a reference kernel for a vendor-optimized
+//! one is a registration change, not an interpreter change (§4.8).
+//!
+//! Kernel families:
+//! * [`ref_ops`] — portable reference implementations, readability first
+//!   (the paper's reference kernels).
+//! * [`opt_ops`] — host-optimized implementations (the CMSIS-NN analog;
+//!   see DESIGN.md §6.2).
+//! * XLA/PJRT-backed kernels live in [`crate::runtime`] and register
+//!   through the same [`resolver::OpResolver`].
+
+pub mod common;
+pub mod opt_ops;
+pub mod ref_ops;
+pub mod resolver;
+
+pub use resolver::OpResolver;
+
+use crate::error::{Error, Result};
+use crate::schema::{Model, Operator};
+use crate::tensor::{DType, TensorMeta};
+
+/// Where a tensor's storage lives at run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataLoc {
+    /// Constant data inside the serialized model (zero-copy weights).
+    Const {
+        /// Byte offset into the model data.
+        off: usize,
+        /// Length in bytes.
+        len: usize,
+    },
+    /// Arena-resident data at a planner-assigned offset.
+    Arena {
+        /// Byte offset into the arena.
+        off: usize,
+        /// Length in bytes.
+        len: usize,
+    },
+}
+
+/// Which implementation family a kernel belongs to (used by benches and
+/// the platform cycle model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFlavor {
+    /// Simple, portable, readable (paper's reference kernels).
+    Reference,
+    /// Platform-optimized Rust (the CMSIS-NN analog).
+    Optimized,
+    /// Offloaded to an AOT-compiled XLA executable via PJRT
+    /// (the vendor-library analog, DESIGN.md §6.2).
+    Accelerated,
+}
+
+/// Handle to a scratch buffer requested during prepare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScratchHandle(pub(crate) usize);
+
+/// Per-op state computed during prepare and read during invoke.
+///
+/// A concrete enum (rather than `dyn Any`) keeps invoke-path access
+/// branch-cheap; `Custom` is the escape hatch for out-of-tree kernels.
+#[derive(Debug)]
+pub enum OpData {
+    /// No prepared state.
+    None,
+    /// Conv / depthwise-conv prepared state.
+    Conv(common::ConvData),
+    /// Fully-connected prepared state.
+    FullyConnected(common::FcData),
+    /// Pooling prepared state.
+    Pool(common::PoolData),
+    /// Softmax prepared state.
+    Softmax(common::SoftmaxData),
+    /// Quantized elementwise add/mul prepared state.
+    Arith(common::ArithData),
+    /// Quantize/requantize prepared state.
+    Requant(common::RequantData),
+    /// Mean-reduction prepared state.
+    Mean(common::MeanData),
+    /// Out-of-tree kernel state.
+    Custom(Box<dyn std::any::Any + Send + Sync>),
+}
+
+impl OpData {
+    /// Approximate arena footprint of this state, charged against the
+    /// persistent (tail) section so Table 2 accounting stays honest even
+    /// though host builds keep the state on the heap.
+    pub fn arena_bytes(&self) -> usize {
+        let heap = match self {
+            OpData::Conv(c) => c.per_channel.len() * 8,
+            OpData::Custom(_) => 64, // conservative flat charge
+            _ => 0,
+        };
+        std::mem::size_of::<OpData>() + heap
+    }
+}
+
+/// A kernel implementation registered for one operator type.
+pub trait Kernel: Send + Sync {
+    /// Implementation family (reference / optimized / accelerated).
+    fn flavor(&self) -> KernelFlavor {
+        KernelFlavor::Reference
+    }
+
+    /// Validate and precompute; called once at initialization.
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()>;
+
+    /// Execute; called per inference, allocation-free.
+    fn invoke(&self, ctx: &OpContext) -> Result<()>;
+}
+
+/// Prepare-phase view of one op, handed to [`Kernel::prepare`].
+pub struct PrepareContext<'m, 'i> {
+    /// Index of this op in execution order.
+    pub op_index: usize,
+    /// The op's schema record (inputs/outputs/options).
+    pub operator: &'m Operator,
+    model: &'m Model,
+    scratch_sizes: &'i mut Vec<usize>,
+    op_data: &'i mut OpData,
+    persistent_bytes: &'i mut usize,
+}
+
+impl<'m, 'i> PrepareContext<'m, 'i> {
+    /// Construct (interpreter-internal, but public for kernel unit tests).
+    pub fn new(
+        op_index: usize,
+        operator: &'m Operator,
+        model: &'m Model,
+        scratch_sizes: &'i mut Vec<usize>,
+        op_data: &'i mut OpData,
+        persistent_bytes: &'i mut usize,
+    ) -> Self {
+        PrepareContext { op_index, operator, model, scratch_sizes, op_data, persistent_bytes }
+    }
+
+    /// Number of declared inputs (including omitted optionals).
+    pub fn num_inputs(&self) -> usize {
+        self.operator.inputs.len()
+    }
+
+    /// True if optional input `i` is present.
+    pub fn has_input(&self, i: usize) -> bool {
+        self.operator.inputs.get(i).map(|&t| t != -1).unwrap_or(false)
+    }
+
+    fn tensor_index(&self, list: &[i32], i: usize, what: &str) -> Result<usize> {
+        let t = *list.get(i).ok_or_else(|| {
+            Error::InvalidTensor(format!("{what} {i} out of range (op has {})", list.len()))
+        })?;
+        if t == -1 {
+            return Err(Error::InvalidTensor(format!("{what} {i} is omitted")));
+        }
+        Ok(t as usize)
+    }
+
+    /// Metadata of input `i`.
+    pub fn input(&self, i: usize) -> Result<&'m TensorMeta> {
+        let t = self.tensor_index(&self.operator.inputs, i, "input")?;
+        self.model.tensor(t)
+    }
+
+    /// Metadata of output `i`.
+    pub fn output(&self, i: usize) -> Result<&'m TensorMeta> {
+        let t = self.tensor_index(&self.operator.outputs, i, "output")?;
+        self.model.tensor(t)
+    }
+
+    /// Constant data of input `i` (prepare-time access to weight/param
+    /// tensors, e.g. `Pad` paddings or `Mean` axes).
+    pub fn input_const(&self, i: usize) -> Result<&'m [u8]> {
+        let t = self.tensor_index(&self.operator.inputs, i, "input")?;
+        self.model.tensor_data(t)?.ok_or_else(|| {
+            Error::InvalidTensor(format!("input {i} of op {} is not constant", self.op_index))
+        })
+    }
+
+    /// Constant i32 data of input `i`.
+    pub fn input_const_i32(&self, i: usize) -> Result<Vec<i32>> {
+        let raw = self.input_const(i)?;
+        if raw.len() % 4 != 0 {
+            return Err(Error::InvalidTensor(format!("input {i}: not an i32 array")));
+        }
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Request an invoke-time scratch buffer of `bytes`; its storage is
+    /// planned into the non-persistent arena section with a lifetime of
+    /// exactly this op (TF Micro's `RequestScratchBufferInArena`).
+    pub fn request_scratch(&mut self, bytes: usize) -> ScratchHandle {
+        self.scratch_sizes.push(bytes);
+        ScratchHandle(self.scratch_sizes.len() - 1)
+    }
+
+    /// Store prepared per-op state; charged to the persistent section.
+    pub fn set_op_data(&mut self, data: OpData) {
+        *self.persistent_bytes += data.arena_bytes();
+        *self.op_data = data;
+    }
+
+    /// Convenience: error with this op's identity attached.
+    pub fn fail(&self, reason: impl Into<String>) -> Error {
+        Error::PrepareFailed {
+            op_index: self.op_index,
+            op_name: self.operator.opcode.name(),
+            reason: reason.into(),
+        }
+    }
+}
+
+/// Invoke-phase view of one op, handed to [`Kernel::invoke`].
+///
+/// Data access goes through raw base pointers so a kernel can hold several
+/// input slices and an output slice simultaneously.
+///
+/// # Safety invariants (upheld by the interpreter)
+/// * Arena tensor ranges for simultaneously-live tensors are disjoint
+///   (verified memory plan), so an op's inputs never alias its outputs.
+/// * Scratch ranges are disjoint from all live tensor ranges.
+/// * Constant ranges live in the immutable model bytes and are never
+///   handed out mutably.
+///
+/// # Kernel contract
+/// A kernel must not request the same tensor as both an input and an
+/// output slice.
+pub struct OpContext<'r> {
+    /// Index of this op in execution order.
+    pub op_index: usize,
+    /// The op's schema record.
+    pub operator: &'r Operator,
+    tensors: &'r [TensorMeta],
+    locs: &'r [DataLoc],
+    model_data: &'r [u8],
+    arena: *mut u8,
+    arena_len: usize,
+    /// (offset, len) of each scratch buffer this op requested.
+    scratch: &'r [(usize, usize)],
+    op_data: &'r OpData,
+}
+
+// SAFETY: `arena` points into memory exclusively borrowed (&mut) by the
+// interpreter for its own lifetime; OpContext is only created inside
+// `invoke` stack frames.
+unsafe impl<'r> Send for OpContext<'r> {}
+
+impl<'r> OpContext<'r> {
+    /// Construct (interpreter-internal, public for kernel unit tests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        op_index: usize,
+        operator: &'r Operator,
+        tensors: &'r [TensorMeta],
+        locs: &'r [DataLoc],
+        model_data: &'r [u8],
+        arena: *mut u8,
+        arena_len: usize,
+        scratch: &'r [(usize, usize)],
+        op_data: &'r OpData,
+    ) -> Self {
+        OpContext {
+            op_index,
+            operator,
+            tensors,
+            locs,
+            model_data,
+            arena,
+            arena_len,
+            scratch,
+            op_data,
+        }
+    }
+
+    /// Prepared per-op state.
+    pub fn op_data(&self) -> &'r OpData {
+        self.op_data
+    }
+
+    /// True if optional input `i` is present.
+    pub fn has_input(&self, i: usize) -> bool {
+        self.operator.inputs.get(i).map(|&t| t != -1).unwrap_or(false)
+    }
+
+    fn tensor_idx(&self, list: &[i32], i: usize, what: &str) -> Result<usize> {
+        let t = *list.get(i).ok_or_else(|| {
+            Error::InvalidTensor(format!("{what} {i} out of range (op has {})", list.len()))
+        })?;
+        if t == -1 {
+            return Err(Error::InvalidTensor(format!("{what} {i} is omitted")));
+        }
+        Ok(t as usize)
+    }
+
+    /// Metadata of input `i`.
+    pub fn input(&self, i: usize) -> Result<&'r TensorMeta> {
+        Ok(&self.tensors[self.tensor_idx(&self.operator.inputs, i, "input")?])
+    }
+
+    /// Metadata of output `i`.
+    pub fn output(&self, i: usize) -> Result<&'r TensorMeta> {
+        Ok(&self.tensors[self.tensor_idx(&self.operator.outputs, i, "output")?])
+    }
+
+    fn bytes_at(&self, loc: DataLoc) -> Result<&'r [u8]> {
+        match loc {
+            DataLoc::Const { off, len } => self
+                .model_data
+                .get(off..off + len)
+                .ok_or_else(|| Error::InvalidTensor("const range out of bounds".into())),
+            DataLoc::Arena { off, len } => {
+                if off + len > self.arena_len {
+                    return Err(Error::InvalidTensor("arena range out of bounds".into()));
+                }
+                // SAFETY: range is inside the arena; see type-level invariants.
+                Ok(unsafe { std::slice::from_raw_parts(self.arena.add(off), len) })
+            }
+        }
+    }
+
+    fn bytes_at_mut(&self, loc: DataLoc) -> Result<&'r mut [u8]> {
+        match loc {
+            DataLoc::Const { .. } => {
+                Err(Error::InvalidTensor("cannot mutably access constant tensor".into()))
+            }
+            DataLoc::Arena { off, len } => {
+                if off + len > self.arena_len {
+                    return Err(Error::InvalidTensor("arena range out of bounds".into()));
+                }
+                // SAFETY: range is inside the arena and disjoint from every
+                // other live tensor per the verified memory plan.
+                Ok(unsafe { std::slice::from_raw_parts_mut(self.arena.add(off), len) })
+            }
+        }
+    }
+
+    /// Raw bytes of input `i`.
+    pub fn input_bytes(&self, i: usize) -> Result<&'r [u8]> {
+        let t = self.tensor_idx(&self.operator.inputs, i, "input")?;
+        self.bytes_at(self.locs[t])
+    }
+
+    /// Raw mutable bytes of output `i`.
+    pub fn output_bytes(&self, i: usize) -> Result<&'r mut [u8]> {
+        let t = self.tensor_idx(&self.operator.outputs, i, "output")?;
+        self.bytes_at_mut(self.locs[t])
+    }
+
+    /// Typed input slice.
+    pub fn input_i8(&self, i: usize) -> Result<&'r [i8]> {
+        self.check_dtype(self.input(i)?, DType::I8, "input", i)?;
+        Ok(cast_i8(self.input_bytes(i)?))
+    }
+
+    /// Typed input slice.
+    pub fn input_f32(&self, i: usize) -> Result<&'r [f32]> {
+        self.check_dtype(self.input(i)?, DType::F32, "input", i)?;
+        cast_f32(self.input_bytes(i)?)
+    }
+
+    /// Typed input slice.
+    pub fn input_i32(&self, i: usize) -> Result<&'r [i32]> {
+        self.check_dtype(self.input(i)?, DType::I32, "input", i)?;
+        cast_i32(self.input_bytes(i)?)
+    }
+
+    /// Typed output slice.
+    pub fn output_i8(&self, i: usize) -> Result<&'r mut [i8]> {
+        self.check_dtype(self.output(i)?, DType::I8, "output", i)?;
+        Ok(cast_i8_mut(self.output_bytes(i)?))
+    }
+
+    /// Typed output slice.
+    pub fn output_f32(&self, i: usize) -> Result<&'r mut [f32]> {
+        self.check_dtype(self.output(i)?, DType::F32, "output", i)?;
+        cast_f32_mut(self.output_bytes(i)?)
+    }
+
+    /// Typed output slice.
+    pub fn output_i32(&self, i: usize) -> Result<&'r mut [i32]> {
+        self.check_dtype(self.output(i)?, DType::I32, "output", i)?;
+        cast_i32_mut(self.output_bytes(i)?)
+    }
+
+    fn check_dtype(&self, meta: &TensorMeta, want: DType, what: &str, i: usize) -> Result<()> {
+        if meta.dtype != want {
+            return Err(Error::ShapeMismatch(format!(
+                "op #{} ({}): {what} {i} is {}, kernel expects {}",
+                self.op_index,
+                self.operator.key(),
+                meta.dtype,
+                want
+            )));
+        }
+        Ok(())
+    }
+
+    /// Scratch buffer requested during prepare.
+    pub fn scratch_bytes(&self, h: ScratchHandle) -> Result<&'r mut [u8]> {
+        let &(off, len) = self
+            .scratch
+            .get(h.0)
+            .ok_or_else(|| Error::InvalidTensor(format!("scratch handle {} out of range", h.0)))?;
+        self.bytes_at_mut(DataLoc::Arena { off, len })
+    }
+
+    /// Convenience: error with this op's identity attached.
+    pub fn fail(&self, reason: impl Into<String>) -> Error {
+        Error::InvokeFailed {
+            op_index: self.op_index,
+            op_name: self.operator.opcode.name(),
+            reason: reason.into(),
+        }
+    }
+}
+
+// ---- checked byte <-> typed-slice casts -------------------------------
+
+/// Reinterpret bytes as i8 (always valid).
+pub fn cast_i8(b: &[u8]) -> &[i8] {
+    // SAFETY: i8 and u8 have identical layout.
+    unsafe { std::slice::from_raw_parts(b.as_ptr() as *const i8, b.len()) }
+}
+
+/// Reinterpret bytes as mutable i8.
+pub fn cast_i8_mut(b: &mut [u8]) -> &mut [i8] {
+    // SAFETY: i8 and u8 have identical layout.
+    unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut i8, b.len()) }
+}
+
+macro_rules! checked_cast {
+    ($name:ident, $name_mut:ident, $ty:ty) => {
+        /// Reinterpret bytes as a typed slice, checking alignment and size.
+        pub fn $name(b: &[u8]) -> Result<&[$ty]> {
+            let size = std::mem::size_of::<$ty>();
+            if b.len() % size != 0 || b.as_ptr() as usize % std::mem::align_of::<$ty>() != 0 {
+                return Err(Error::ShapeMismatch(format!(
+                    "byte slice (len {}, addr {:p}) cannot view as {}",
+                    b.len(),
+                    b.as_ptr(),
+                    stringify!($ty)
+                )));
+            }
+            // SAFETY: alignment and size checked above.
+            Ok(unsafe { std::slice::from_raw_parts(b.as_ptr() as *const $ty, b.len() / size) })
+        }
+
+        /// Mutable variant of the checked cast.
+        pub fn $name_mut(b: &mut [u8]) -> Result<&mut [$ty]> {
+            let size = std::mem::size_of::<$ty>();
+            if b.len() % size != 0 || b.as_ptr() as usize % std::mem::align_of::<$ty>() != 0 {
+                return Err(Error::ShapeMismatch(format!(
+                    "byte slice (len {}, addr {:p}) cannot view as {}",
+                    b.len(),
+                    b.as_ptr(),
+                    stringify!($ty)
+                )));
+            }
+            // SAFETY: alignment and size checked above.
+            Ok(unsafe {
+                std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut $ty, b.len() / size)
+            })
+        }
+    };
+}
+
+checked_cast!(cast_f32, cast_f32_mut, f32);
+checked_cast!(cast_i32, cast_i32_mut, i32);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i8_cast_is_total() {
+        let b = [0u8, 255, 128];
+        let s = cast_i8(&b);
+        assert_eq!(s, &[0i8, -1, -128]);
+    }
+
+    #[test]
+    fn f32_cast_checks_size() {
+        let v = [0u8; 9];
+        assert!(cast_f32(&v[..9]).is_err()); // bad size always fails
+        let fv = [1.0f32, 2.0];
+        // SAFETY: viewing f32s as bytes is always valid.
+        let bytes = unsafe { std::slice::from_raw_parts(fv.as_ptr() as *const u8, 8) };
+        assert_eq!(cast_f32(bytes).unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn opdata_charges_conv_tables() {
+        let d = OpData::Conv(common::ConvData {
+            per_channel: vec![Default::default(); 8],
+            ..Default::default()
+        });
+        assert!(d.arena_bytes() >= 64);
+    }
+}

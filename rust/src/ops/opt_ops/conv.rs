@@ -1,0 +1,257 @@
+//! Optimized int8 Conv2d: im2col + blocked integer GEMM.
+//!
+//! Structure mirrors CMSIS-NN's `arm_convolve_s8`: one output row of
+//! patches is gathered into a scratch buffer (padding cells filled with
+//! the input zero point so they contribute exactly zero after the input
+//! offset), then a register-blocked GEMM computes all output channels for
+//! that row. The inner K loop is 4-way unrolled; bounds checks are hoisted
+//! by slicing.
+
+use crate::error::Result;
+use crate::ops::ref_ops::{conv2d_f32, ConvQuant, ConvShape};
+use crate::ops::ref_ops::conv::{conv_shape, prepare_conv};
+use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext, ScratchHandle};
+use crate::tensor::DType;
+
+/// Optimized Conv2d kernel.
+pub struct OptConvKernel;
+
+/// im2col + GEMM int8 conv; `patch` must hold `out_w * k` i8 elements
+/// where `k = kh*kw*in_c`.
+pub fn conv2d_i8_im2col(
+    s: &ConvShape,
+    q: &ConvQuant,
+    input: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    patch: &mut [i8],
+    output: &mut [i8],
+) {
+    let k = s.kh * s.kw * s.in_c;
+    let pad_value = (-q.input_offset) as i8; // the input zero point
+    debug_assert!(patch.len() >= s.out_w * k);
+
+    // Perf fast path (EXPERIMENTS.md §Perf): a 1x1 stride-1 conv IS a GEMM
+    // over the input rows — skip the im2col gather entirely.
+    if s.kh == 1 && s.kw == 1 && s.stride_h == 1 && s.stride_w == 1 && s.dil_h == 1 && s.dil_w == 1
+    {
+        let rows = s.batch * s.out_h * s.out_w;
+        // Channel-outer loop: Σf (the input-offset correction — the int8
+        // spec fixes the filter zero point at 0, so Σ(x+io)·f = Σx·f +
+        // io·Σf) and the requant constants are computed once per channel,
+        // and the filter row stays hot in cache across all pixels.
+        for oc in 0..s.out_c {
+            let frow = &filter[oc * s.in_c..(oc + 1) * s.in_c];
+            let f_sum: i32 = frow.iter().map(|&v| v as i32).sum();
+            let base_acc = bias
+                .map(|bv| bv[oc])
+                .unwrap_or(0)
+                .wrapping_add(q.input_offset.wrapping_mul(f_sum));
+            let mult = q.per_channel[oc].mult;
+            for r in 0..rows {
+                let row = &input[r * s.in_c..(r + 1) * s.in_c];
+                let mut dot = 0i32;
+                for (&iv, &fv) in row.iter().zip(frow) {
+                    // i8 x i8 always fits i16; the widening-mul form lets
+                    // LLVM emit pmaddwd-style SIMD (perf iteration 3).
+                    dot = dot.wrapping_add((iv as i16 * fv as i16) as i32);
+                }
+                let scaled = mult.apply(base_acc.wrapping_add(dot)) + q.output_offset;
+                output[r * s.out_c + oc] = scaled.clamp(q.act_min, q.act_max) as i8;
+            }
+        }
+        return;
+    }
+
+    for b in 0..s.batch {
+        let in_batch = &input[b * s.in_h * s.in_w * s.in_c..(b + 1) * s.in_h * s.in_w * s.in_c];
+        for oy in 0..s.out_h {
+            // ---- gather: one row of output pixels -> patch matrix ----
+            let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+            for ox in 0..s.out_w {
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                let row = &mut patch[ox * k..(ox + 1) * k];
+                let mut w = 0usize;
+                for ky in 0..s.kh {
+                    let iy = origin_y + (ky * s.dil_h) as isize;
+                    if iy < 0 || iy >= s.in_h as isize {
+                        row[w..w + s.kw * s.in_c].fill(pad_value);
+                        w += s.kw * s.in_c;
+                        continue;
+                    }
+                    let line = &in_batch[(iy as usize * s.in_w) * s.in_c..];
+                    for kx in 0..s.kw {
+                        let ix = origin_x + (kx * s.dil_w) as isize;
+                        if ix < 0 || ix >= s.in_w as isize {
+                            row[w..w + s.in_c].fill(pad_value);
+                        } else {
+                            let src = &line[ix as usize * s.in_c..ix as usize * s.in_c + s.in_c];
+                            row[w..w + s.in_c].copy_from_slice(src);
+                        }
+                        w += s.in_c;
+                    }
+                }
+            }
+            // ---- GEMM: patch [out_w, k] x filter [out_c, k]^T ----
+            // Channel-outer: the input-offset correction io·Σf is hoisted
+            // per channel (valid for padded cells too: they hold the zero
+            // point, so (pad + io)·f = 0 both ways), leaving a raw i8·i8
+            // dot that LLVM vectorizes.
+            let out_row_base = (b * s.out_h + oy) * s.out_w * s.out_c;
+            for oc in 0..s.out_c {
+                let frow = &filter[oc * k..(oc + 1) * k];
+                let f_sum: i32 = frow.iter().map(|&v| v as i32).sum();
+                let base_acc = bias
+                    .map(|bv| bv[oc])
+                    .unwrap_or(0)
+                    .wrapping_add(q.input_offset.wrapping_mul(f_sum));
+                let mult = q.per_channel[oc].mult;
+                for ox in 0..s.out_w {
+                    let row = &patch[ox * k..(ox + 1) * k];
+                    let mut dot = 0i32;
+                    for (&pv, &fv) in row.iter().zip(frow) {
+                        dot = dot.wrapping_add((pv as i16 * fv as i16) as i32);
+                    }
+                    let scaled = mult.apply(base_acc.wrapping_add(dot)) + q.output_offset;
+                    output[out_row_base + ox * s.out_c + oc] =
+                        scaled.clamp(q.act_min, q.act_max) as i8;
+                }
+            }
+        }
+    }
+}
+
+impl Kernel for OptConvKernel {
+    fn flavor(&self) -> KernelFlavor {
+        KernelFlavor::Optimized
+    }
+
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        prepare_conv(ctx)?;
+        // Scratch: one output row of im2col patches.
+        let input = ctx.input(0)?;
+        let filter = ctx.input(1)?;
+        let output = ctx.output(0)?;
+        if input.dtype == DType::I8 {
+            let (_, kh, kw, in_c) = filter.shape.as_nhwc()?;
+            let (_, _, out_w, _) = output.shape.as_nhwc()?;
+            ctx.request_scratch(out_w * kh * kw * in_c);
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Conv(data) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let s = conv_shape(ctx, data)?;
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let q = ConvQuant {
+                    input_offset: data.input_offset,
+                    output_offset: data.output_offset,
+                    per_channel: &data.per_channel,
+                    act_min: data.act_min,
+                    act_max: data.act_max,
+                };
+                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                let patch = crate::ops::cast_i8_mut(ctx.scratch_bytes(ScratchHandle(0))?);
+                conv2d_i8_im2col(&s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, patch, ctx.output_i8(0)?);
+            }
+            DType::F32 => {
+                // Float path: reference loops are adequate (the paper's
+                // platforms are int8-dominated); kept for completeness.
+                let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
+                conv2d_f32(&s, data.fact, ctx.input_f32(0)?, ctx.input_f32(1)?, bias, ctx.output_f32(0)?);
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::common::ChannelQuant;
+    use crate::ops::ref_ops::conv2d_i8;
+    use crate::tensor::QuantizedMultiplier;
+    use crate::testutil::{check, Cases, Rng};
+
+    /// Exact equivalence with the reference kernel over random shapes —
+    /// the "tests and benchmarks" support vendors get (§3.2).
+    #[test]
+    fn property_matches_reference_exactly() {
+        check(Cases::n(60), |rng: &mut Rng| {
+            let s = random_shape(rng);
+            let k = s.kh * s.kw * s.in_c;
+            let n_in = s.batch * s.in_h * s.in_w * s.in_c;
+            let n_f = s.out_c * k;
+            let n_out = s.batch * s.out_h * s.out_w * s.out_c;
+
+            let mut input = vec![0i8; n_in];
+            rng.fill_i8(&mut input);
+            let mut filter = vec![0i8; n_f];
+            rng.fill_i8(&mut filter);
+            let bias: Vec<i32> = (0..s.out_c).map(|_| rng.range_i32(-1000, 1000)).collect();
+            let pc: Vec<ChannelQuant> = (0..s.out_c)
+                .map(|_| ChannelQuant {
+                    mult: QuantizedMultiplier::from_real(rng.range_f32(0.001, 0.9) as f64),
+                })
+                .collect();
+            let q = ConvQuant {
+                input_offset: rng.range_i32(-128, 127),
+                output_offset: rng.range_i32(-20, 20),
+                per_channel: &pc,
+                act_min: -128,
+                act_max: 127,
+            };
+
+            let mut want = vec![0i8; n_out];
+            conv2d_i8(&s, &q, &input, &filter, Some(&bias), &mut want);
+            let mut got = vec![0i8; n_out];
+            let mut patch = vec![0i8; s.out_w * k];
+            conv2d_i8_im2col(&s, &q, &input, &filter, Some(&bias), &mut patch, &mut got);
+
+            if want != got {
+                return Err(format!("mismatch for shape {s:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    fn random_shape(rng: &mut Rng) -> ConvShape {
+        let kh = 1 + rng.below(3);
+        let kw = 1 + rng.below(3);
+        let stride = 1 + rng.below(2);
+        let in_h = kh + rng.below(6);
+        let in_w = kw + rng.below(6);
+        let same = rng.chance(0.5);
+        let (out_h, out_w, pad_top, pad_left) = if same {
+            let oh = in_h.div_ceil(stride);
+            let ow = in_w.div_ceil(stride);
+            let pt = (((oh - 1) * stride + kh).saturating_sub(in_h)) / 2;
+            let pl = (((ow - 1) * stride + kw).saturating_sub(in_w)) / 2;
+            (oh, ow, pt, pl)
+        } else {
+            ((in_h - kh) / stride + 1, (in_w - kw) / stride + 1, 0, 0)
+        };
+        ConvShape {
+            batch: 1 + rng.below(2),
+            in_h,
+            in_w,
+            in_c: 1 + rng.below(8),
+            out_h,
+            out_w,
+            out_c: 1 + rng.below(8),
+            kh,
+            kw,
+            stride_h: stride,
+            stride_w: stride,
+            dil_h: 1,
+            dil_w: 1,
+            pad_top,
+            pad_left,
+        }
+    }
+}

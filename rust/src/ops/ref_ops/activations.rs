@@ -1,0 +1,200 @@
+//! Standalone activation kernels: ReLU, ReLU6, Logistic (sigmoid).
+//!
+//! In int8 the clamp bounds live in the quantized domain; logistic fixes
+//! the output quantization at scale 1/256, zero point -128 (TFLite spec),
+//! but we honour whatever the exporter wrote.
+
+use crate::error::Result;
+use crate::ops::common::SoftmaxData;
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::tensor::DType;
+
+/// Reference ReLU / ReLU6 kernel.
+pub struct ReluKernel {
+    max6: bool,
+}
+
+impl ReluKernel {
+    /// Plain max(0, x).
+    pub fn relu() -> Self {
+        ReluKernel { max6: false }
+    }
+
+    /// min(6, max(0, x)).
+    pub fn relu6() -> Self {
+        ReluKernel { max6: true }
+    }
+}
+
+impl Kernel for ReluKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.shape != output.shape || input.dtype != output.dtype {
+            return Err(ctx.fail("relu requires identical input/output shape and dtype"));
+        }
+        if input.dtype == DType::I8 {
+            // ReLU does not rescale.
+            if input.zero_point()? != output.zero_point()?
+                || (input.scale()? - output.scale()?).abs() > 1e-7
+            {
+                return Err(ctx.fail("relu requires identical input/output quantization"));
+            }
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let meta = ctx.input(0)?;
+                let zp = meta.zero_point()?;
+                let scale = meta.scale()?;
+                let lo = zp; // q(0)
+                let hi = if self.max6 {
+                    ((6.0 / scale).round() as i32 + zp).min(i8::MAX as i32)
+                } else {
+                    i8::MAX as i32
+                };
+                let input = ctx.input_i8(0)?;
+                let output = ctx.output_i8(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    *o = (v as i32).clamp(lo, hi) as i8;
+                }
+            }
+            DType::F32 => {
+                let hi = if self.max6 { 6.0 } else { f32::INFINITY };
+                let input = ctx.input_f32(0)?;
+                let output = ctx.output_f32(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    *o = v.clamp(0.0, hi);
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+/// Reference Tanh kernel (int8 path fixes output at scale 1/128, zp 0 —
+/// the TFLite spec — but honours whatever the exporter wrote).
+pub struct TanhKernel;
+
+impl Kernel for TanhKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.shape.num_elements() != output.shape.num_elements() {
+            return Err(ctx.fail("tanh requires matching element counts"));
+        }
+        if input.dtype == DType::I8 {
+            ctx.set_op_data(OpData::Softmax(SoftmaxData {
+                beta_scale: input.scale()?,
+                out_scale: output.scale()?,
+                out_zp: output.zero_point()?,
+            }));
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let OpData::Softmax(d) = ctx.op_data() else {
+                    return Err(ctx.fail("op data missing"));
+                };
+                let in_zp = ctx.input(0)?.zero_point()?;
+                let input = ctx.input_i8(0)?;
+                let output = ctx.output_i8(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    let x = d.beta_scale * (v as i32 - in_zp) as f32;
+                    let t = x.tanh();
+                    let q = (t / d.out_scale).round() as i32 + d.out_zp;
+                    *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                }
+            }
+            DType::F32 => {
+                let input = ctx.input_f32(0)?;
+                let output = ctx.output_f32(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    *o = v.tanh();
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+/// Reference Logistic (sigmoid) kernel.
+pub struct LogisticKernel;
+
+impl Kernel for LogisticKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.shape.num_elements() != output.shape.num_elements() {
+            return Err(ctx.fail("logistic requires matching element counts"));
+        }
+        if input.dtype == DType::I8 {
+            ctx.set_op_data(OpData::Softmax(SoftmaxData {
+                beta_scale: input.scale()?,
+                out_scale: output.scale()?,
+                out_zp: output.zero_point()?,
+            }));
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let OpData::Softmax(d) = ctx.op_data() else {
+                    return Err(ctx.fail("op data missing"));
+                };
+                let in_zp = ctx.input(0)?.zero_point()?;
+                let input = ctx.input_i8(0)?;
+                let output = ctx.output_i8(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    let x = d.beta_scale * (v as i32 - in_zp) as f32;
+                    let sig = 1.0 / (1.0 + (-x).exp());
+                    let q = (sig / d.out_scale).round() as i32 + d.out_zp;
+                    *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                }
+            }
+            DType::F32 => {
+                let input = ctx.input_f32(0)?;
+                let output = ctx.output_f32(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    *o = 1.0 / (1.0 + (-v).exp());
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Relu/logistic math is exercised end-to-end through interpreter
+    // integration tests; here we pin the pure math used by the i8 path.
+
+    #[test]
+    fn sigmoid_reference_values() {
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        assert!((sig(0.0) - 0.5).abs() < 1e-6);
+        assert!(sig(10.0) > 0.9999);
+        assert!(sig(-10.0) < 0.0001);
+    }
+
+    #[test]
+    fn relu6_quantized_bounds() {
+        // scale 0.1, zp -10: q(0) = -10, q(6) = 50.
+        let scale = 0.1f32;
+        let zp = -10i32;
+        let lo = zp;
+        let hi = (6.0 / scale).round() as i32 + zp;
+        assert_eq!((lo, hi), (-10, 50));
+    }
+}

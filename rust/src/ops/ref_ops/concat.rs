@@ -1,0 +1,116 @@
+//! Concatenation along an axis, reference implementation.
+//!
+//! Quantized inputs must share the output's (scale, zero point) — the
+//! exporter guarantees this, and prepare enforces it so the invoke path is
+//! a pure interleaved copy.
+
+use crate::error::Result;
+use crate::ops::{Kernel, OpContext, PrepareContext};
+use crate::schema::format::OpOptions;
+use crate::tensor::DType;
+
+/// Reference Concatenation kernel.
+pub struct ConcatKernel;
+
+fn resolve_axis(axis: i32, rank: usize) -> usize {
+    if axis < 0 {
+        (axis + rank as i32) as usize
+    } else {
+        axis as usize
+    }
+}
+
+impl Kernel for ConcatKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let OpOptions::Concat { axis, .. } = ctx.operator.options else {
+            return Err(ctx.fail("missing concat options"));
+        };
+        let out = ctx.output(0)?;
+        let rank = out.shape.rank();
+        let ax = resolve_axis(axis, rank);
+        if ax >= rank {
+            return Err(ctx.fail(format!("axis {axis} out of range for rank {rank}")));
+        }
+        let mut axis_total = 0i32;
+        for i in 0..ctx.num_inputs() {
+            let input = ctx.input(i)?;
+            if input.shape.rank() != rank {
+                return Err(ctx.fail(format!("input {i} rank mismatch")));
+            }
+            for d in 0..rank {
+                if d != ax && input.shape.dim(d) != out.shape.dim(d) {
+                    return Err(ctx.fail(format!("input {i} dim {d} mismatch")));
+                }
+            }
+            axis_total += input.shape.dim(ax);
+            if input.dtype == DType::I8
+                && ((input.scale()? - out.scale()?).abs() > 1e-7
+                    || input.zero_point()? != out.zero_point()?)
+                {
+                    return Err(ctx.fail(format!(
+                        "input {i} quantization must match output (requantize first)"
+                    )));
+                }
+        }
+        if axis_total != out.shape.dim(ax) {
+            return Err(ctx.fail(format!(
+                "concat axis extent {} != sum of inputs {axis_total}",
+                out.shape.dim(ax)
+            )));
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpOptions::Concat { axis, .. } = ctx.operator.options else {
+            return Err(ctx.fail("missing concat options"));
+        };
+        let out_meta = ctx.output(0)?;
+        let rank = out_meta.shape.rank();
+        let ax = resolve_axis(axis, rank);
+        let elem = out_meta.dtype.size_of();
+
+        // outer = product of dims before the axis; per input, the chunk
+        // copied per outer step is axis_extent * inner * elem bytes.
+        let outer: usize =
+            out_meta.shape.dims()[..ax].iter().map(|&d| d as usize).product::<usize>().max(1);
+        let inner: usize = out_meta.shape.dims()[ax + 1..]
+            .iter()
+            .map(|&d| d as usize)
+            .product::<usize>()
+            .max(1);
+
+        let out_bytes = ctx.output_bytes(0)?;
+        let out_step = out_meta.shape.dim(ax) as usize * inner * elem;
+        let mut dst_base = 0usize;
+        for i in 0..ctx.num_inputs_runtime() {
+            let in_meta = ctx.input(i)?;
+            let in_bytes = ctx.input_bytes(i)?;
+            let chunk = in_meta.shape.dim(ax) as usize * inner * elem;
+            for o in 0..outer {
+                let src = o * chunk;
+                let dst = o * out_step + dst_base;
+                out_bytes[dst..dst + chunk].copy_from_slice(&in_bytes[src..src + chunk]);
+            }
+            dst_base += chunk;
+        }
+        Ok(())
+    }
+}
+
+impl<'r> OpContext<'r> {
+    /// Number of inputs at invoke time (concat is variadic).
+    pub fn num_inputs_runtime(&self) -> usize {
+        self.operator.inputs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn axis_resolution() {
+        assert_eq!(super::resolve_axis(-1, 4), 3);
+        assert_eq!(super::resolve_axis(2, 4), 2);
+        assert_eq!(super::resolve_axis(-4, 4), 0);
+    }
+}

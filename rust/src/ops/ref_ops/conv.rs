@@ -1,0 +1,402 @@
+//! 2-D convolution, reference implementation.
+//!
+//! Layouts follow TFLite: input NHWC `[n, h, w, cin]`, filter
+//! `[cout, kh, kw, cin]`, bias `[cout]` (i32 for the quantized path),
+//! output `[n, oh, ow, cout]`. The int8 path implements the TFLite int8
+//! quantization spec with per-output-channel filter scales; all arithmetic
+//! after prepare is integer-only.
+
+use crate::error::Result;
+use crate::ops::common::{
+    activation_range_f32, activation_range_i8, compute_out_size, compute_padding, conv_per_channel,
+    ChannelQuant, ConvData, PaddingValues,
+};
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::schema::format::OpOptions;
+use crate::tensor::DType;
+
+/// Geometry of one conv invocation (shared by ref/opt/depthwise kernels).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ConvShape {
+    /// Batch size.
+    pub batch: usize,
+    /// Input spatial height.
+    pub in_h: usize,
+    /// Input spatial width.
+    pub in_w: usize,
+    /// Input channels.
+    pub in_c: usize,
+    /// Output spatial height.
+    pub out_h: usize,
+    /// Output spatial width.
+    pub out_w: usize,
+    /// Output channels.
+    pub out_c: usize,
+    /// Filter height.
+    pub kh: usize,
+    /// Filter width.
+    pub kw: usize,
+    /// Vertical stride.
+    pub stride_h: usize,
+    /// Horizontal stride.
+    pub stride_w: usize,
+    /// Vertical dilation.
+    pub dil_h: usize,
+    /// Horizontal dilation.
+    pub dil_w: usize,
+    /// Zero rows added above.
+    pub pad_top: usize,
+    /// Zero columns added left.
+    pub pad_left: usize,
+}
+
+/// Quantization parameters of one int8 conv invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvQuant<'a> {
+    /// Added to every input element (= -input zero point).
+    pub input_offset: i32,
+    /// Added to every requantized output (= output zero point).
+    pub output_offset: i32,
+    /// Per-output-channel requantization multipliers.
+    pub per_channel: &'a [ChannelQuant],
+    /// Output clamp low (fused activation).
+    pub act_min: i32,
+    /// Output clamp high.
+    pub act_max: i32,
+}
+
+/// int8 conv2d over plain slices (the readable 7-loop form).
+pub fn conv2d_i8(
+    s: &ConvShape,
+    q: &ConvQuant,
+    input: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    output: &mut [i8],
+) {
+    for b in 0..s.batch {
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                for oc in 0..s.out_c {
+                    let mut acc: i32 = bias.map(|bv| bv[oc]).unwrap_or(0);
+                    for ky in 0..s.kh {
+                        let iy = origin_y + (ky * s.dil_h) as isize;
+                        if iy < 0 || iy >= s.in_h as isize {
+                            continue; // zero padding contributes nothing
+                        }
+                        for kx in 0..s.kw {
+                            let ix = origin_x + (kx * s.dil_w) as isize;
+                            if ix < 0 || ix >= s.in_w as isize {
+                                continue;
+                            }
+                            let in_base =
+                                ((b * s.in_h + iy as usize) * s.in_w + ix as usize) * s.in_c;
+                            let f_base = ((oc * s.kh + ky) * s.kw + kx) * s.in_c;
+                            for ic in 0..s.in_c {
+                                let iv = input[in_base + ic] as i32 + q.input_offset;
+                                let fv = filter[f_base + ic] as i32;
+                                // Wrapping: defined overflow for hostile models.
+                                acc = acc.wrapping_add(iv * fv);
+                            }
+                        }
+                    }
+                    let scaled = q.per_channel[oc].mult.apply(acc) + q.output_offset;
+                    let out_idx = ((b * s.out_h + oy) * s.out_w + ox) * s.out_c + oc;
+                    output[out_idx] = scaled.clamp(q.act_min, q.act_max) as i8;
+                }
+            }
+        }
+    }
+}
+
+/// f32 conv2d over plain slices.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32(
+    s: &ConvShape,
+    act: (f32, f32),
+    input: &[f32],
+    filter: &[f32],
+    bias: Option<&[f32]>,
+    output: &mut [f32],
+) {
+    for b in 0..s.batch {
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                for oc in 0..s.out_c {
+                    let mut acc: f32 = bias.map(|bv| bv[oc]).unwrap_or(0.0);
+                    for ky in 0..s.kh {
+                        let iy = origin_y + (ky * s.dil_h) as isize;
+                        if iy < 0 || iy >= s.in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = origin_x + (kx * s.dil_w) as isize;
+                            if ix < 0 || ix >= s.in_w as isize {
+                                continue;
+                            }
+                            let in_base =
+                                ((b * s.in_h + iy as usize) * s.in_w + ix as usize) * s.in_c;
+                            let f_base = ((oc * s.kh + ky) * s.kw + kx) * s.in_c;
+                            for ic in 0..s.in_c {
+                                acc += input[in_base + ic] * filter[f_base + ic];
+                            }
+                        }
+                    }
+                    let out_idx = ((b * s.out_h + oy) * s.out_w + ox) * s.out_c + oc;
+                    output[out_idx] = acc.clamp(act.0, act.1);
+                }
+            }
+        }
+    }
+}
+
+/// Shared prepare logic for Conv2d (also reused by the optimized kernel).
+pub(crate) fn prepare_conv(ctx: &mut PrepareContext) -> Result<()> {
+    let OpOptions::Conv(opts) = ctx.operator.options else {
+        return Err(ctx.fail("missing conv options"));
+    };
+    let input = ctx.input(0)?;
+    let filter = ctx.input(1)?;
+    let output = ctx.output(0)?;
+    let (_, in_h, in_w, in_c) = input.shape.as_nhwc()?;
+    let (out_c, kh, kw, f_ic) = filter.shape.as_nhwc()?;
+    if f_ic != in_c {
+        return Err(ctx.fail(format!("filter channels {f_ic} != input channels {in_c}")));
+    }
+    let (_, out_h, out_w, o_c) = output.shape.as_nhwc()?;
+    if o_c != out_c {
+        return Err(ctx.fail(format!("output channels {o_c} != filter count {out_c}")));
+    }
+    let want_h = compute_out_size(opts.padding, in_h as i32, kh as i32, opts.stride_h as i32, opts.dilation_h as i32);
+    let want_w = compute_out_size(opts.padding, in_w as i32, kw as i32, opts.stride_w as i32, opts.dilation_w as i32);
+    if (want_h, want_w) != (out_h as i32, out_w as i32) {
+        return Err(ctx.fail(format!(
+            "output spatial {out_h}x{out_w} does not match computed {want_h}x{want_w} ({:?})",
+            opts.padding
+        )));
+    }
+    let pad = PaddingValues {
+        top: compute_padding(opts.stride_h as i32, opts.dilation_h as i32, in_h as i32, kh as i32, out_h as i32),
+        left: compute_padding(opts.stride_w as i32, opts.dilation_w as i32, in_w as i32, kw as i32, out_w as i32),
+    };
+
+    let mut data = ConvData {
+        pad,
+        out_h: out_h as i32,
+        out_w: out_w as i32,
+        fact: activation_range_f32(opts.activation),
+        ..Default::default()
+    };
+    if input.dtype == DType::I8 {
+        data.per_channel = conv_per_channel(input, filter, output, out_c)?;
+        data.input_offset = -input.zero_point()?;
+        data.output_offset = output.zero_point()?;
+        let (lo, hi) = activation_range_i8(opts.activation, output)?;
+        data.act_min = lo;
+        data.act_max = hi;
+    }
+    ctx.set_op_data(OpData::Conv(data));
+    Ok(())
+}
+
+/// Decode the invoke-time geometry from context + prepared data.
+pub(crate) fn conv_shape(ctx: &OpContext, data: &ConvData) -> Result<ConvShape> {
+    let OpOptions::Conv(opts) = ctx.operator.options else {
+        return Err(ctx.fail("missing conv options"));
+    };
+    let (batch, in_h, in_w, in_c) = ctx.input(0)?.shape.as_nhwc()?;
+    let (out_c, kh, kw, _) = ctx.input(1)?.shape.as_nhwc()?;
+    Ok(ConvShape {
+        batch,
+        in_h,
+        in_w,
+        in_c,
+        out_h: data.out_h as usize,
+        out_w: data.out_w as usize,
+        out_c,
+        kh,
+        kw,
+        stride_h: opts.stride_h as usize,
+        stride_w: opts.stride_w as usize,
+        dil_h: opts.dilation_h as usize,
+        dil_w: opts.dilation_w as usize,
+        pad_top: data.pad.top as usize,
+        pad_left: data.pad.left as usize,
+    })
+}
+
+/// Reference Conv2d kernel.
+pub struct ConvKernel;
+
+impl Kernel for ConvKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        prepare_conv(ctx)
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Conv(data) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let s = conv_shape(ctx, data)?;
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let q = ConvQuant {
+                    input_offset: data.input_offset,
+                    output_offset: data.output_offset,
+                    per_channel: &data.per_channel,
+                    act_min: data.act_min,
+                    act_max: data.act_max,
+                };
+                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                conv2d_i8(&s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+            }
+            DType::F32 => {
+                let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
+                conv2d_f32(&s, data.fact, ctx.input_f32(0)?, ctx.input_f32(1)?, bias, ctx.output_f32(0)?);
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::QuantizedMultiplier;
+
+    fn identity_quant(out_c: usize) -> Vec<ChannelQuant> {
+        vec![ChannelQuant { mult: QuantizedMultiplier::from_real(1.0) }; out_c]
+    }
+
+    #[test]
+    fn i8_identity_1x1() {
+        // 1x1 conv with weight 1, no offsets: output == input.
+        let s = ConvShape {
+            batch: 1, in_h: 2, in_w: 2, in_c: 1,
+            out_h: 2, out_w: 2, out_c: 1,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let pc = identity_quant(1);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let input = [1i8, -2, 3, -4];
+        let filter = [1i8];
+        let mut out = [0i8; 4];
+        conv2d_i8(&s, &q, &input, &filter, None, &mut out);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn i8_3x3_valid_sum() {
+        // 3x3 all-ones filter over a 3x3 all-ones image, VALID: sum = 9.
+        let s = ConvShape {
+            batch: 1, in_h: 3, in_w: 3, in_c: 1,
+            out_h: 1, out_w: 1, out_c: 1,
+            kh: 3, kw: 3, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let pc = identity_quant(1);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let input = [1i8; 9];
+        let filter = [1i8; 9];
+        let mut out = [0i8; 1];
+        conv2d_i8(&s, &q, &input, &filter, None, &mut out);
+        assert_eq!(out[0], 9);
+    }
+
+    #[test]
+    fn i8_same_padding_border() {
+        // SAME 3x3 over 2x2 ones: corner output sees 4 taps (2x2 window).
+        let s = ConvShape {
+            batch: 1, in_h: 2, in_w: 2, in_c: 1,
+            out_h: 2, out_w: 2, out_c: 1,
+            kh: 3, kw: 3, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 1, pad_left: 1,
+        };
+        let pc = identity_quant(1);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let input = [1i8; 4];
+        let filter = [1i8; 9];
+        let mut out = [0i8; 4];
+        conv2d_i8(&s, &q, &input, &filter, None, &mut out);
+        // Every output sees the full 2x2 input (window covers it all).
+        assert_eq!(out, [4i8; 4]);
+    }
+
+    #[test]
+    fn i8_bias_offsets_and_clamp() {
+        let s = ConvShape {
+            batch: 1, in_h: 1, in_w: 1, in_c: 1,
+            out_h: 1, out_w: 1, out_c: 2,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        // channel 0: scale 1.0, channel 1: scale 0.5
+        let pc = vec![
+            ChannelQuant { mult: QuantizedMultiplier::from_real(1.0) },
+            ChannelQuant { mult: QuantizedMultiplier::from_real(0.5) },
+        ];
+        let q = ConvQuant { input_offset: 10, output_offset: -5, per_channel: &pc, act_min: -20, act_max: 20 };
+        let input = [0i8]; // effective input value = 0 + 10
+        let filter = [2i8, 4];
+        let bias = [1i32, 100];
+        let mut out = [0i8; 2];
+        conv2d_i8(&s, &q, &input, &filter, Some(&bias), &mut out);
+        // ch0: acc = 1 + 10*2 = 21 -> *1.0 = 21 - 5 = 16
+        // ch1: acc = 100 + 10*4 = 140 -> *0.5 = 70 - 5 = 65 -> clamp 20
+        assert_eq!(out, [16, 20]);
+    }
+
+    #[test]
+    fn i8_stride_and_dilation() {
+        // 5-wide row, filter [1, 1] with dilation 2 sums x[i] + x[i+2].
+        let s = ConvShape {
+            batch: 1, in_h: 1, in_w: 5, in_c: 1,
+            out_h: 1, out_w: 2, out_c: 1,
+            kh: 1, kw: 2, stride_h: 1, stride_w: 2, dil_h: 1, dil_w: 2,
+            pad_top: 0, pad_left: 0,
+        };
+        let pc = identity_quant(1);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let input = [1i8, 2, 3, 4, 5];
+        let filter = [1i8, 1];
+        let mut out = [0i8; 2];
+        conv2d_i8(&s, &q, &input, &filter, None, &mut out);
+        assert_eq!(out, [1 + 3, 3 + 5]);
+    }
+
+    #[test]
+    fn f32_matches_manual() {
+        let s = ConvShape {
+            batch: 1, in_h: 2, in_w: 2, in_c: 2,
+            out_h: 1, out_w: 1, out_c: 1,
+            kh: 2, kw: 2, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let input: Vec<f32> = (1..=8).map(|v| v as f32).collect();
+        let filter = vec![0.5f32; 8];
+        let mut out = [0f32; 1];
+        conv2d_f32(&s, (f32::NEG_INFINITY, f32::INFINITY), &input, &filter, Some(&[1.0]), &mut out);
+        assert_eq!(out[0], 1.0 + 36.0 * 0.5);
+    }
+
+    #[test]
+    fn f32_relu6_clamps() {
+        let s = ConvShape {
+            batch: 1, in_h: 1, in_w: 1, in_c: 1,
+            out_h: 1, out_w: 1, out_c: 1,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let mut out = [0f32; 1];
+        conv2d_f32(&s, (0.0, 6.0), &[10.0], &[10.0], None, &mut out);
+        assert_eq!(out[0], 6.0);
+        conv2d_f32(&s, (0.0, 6.0), &[-10.0], &[10.0], None, &mut out);
+        assert_eq!(out[0], 0.0);
+    }
+}

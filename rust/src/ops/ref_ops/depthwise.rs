@@ -1,0 +1,300 @@
+//! Depthwise 2-D convolution, reference implementation.
+//!
+//! TFLite layout: input NHWC `[n, h, w, cin]`, filter `[1, kh, kw, cout]`
+//! with `cout = cin * depth_multiplier`; output channel `oc = ic * m + k`
+//! reads only input channel `ic`. Per-channel quantization is over the
+//! last filter axis.
+
+use crate::error::Result;
+use crate::ops::common::ConvData;
+use crate::ops::ref_ops::conv::{ConvQuant, ConvShape};
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::schema::format::OpOptions;
+use crate::tensor::DType;
+
+/// int8 depthwise conv over plain slices.
+pub fn depthwise_conv2d_i8(
+    s: &ConvShape,
+    depth_multiplier: usize,
+    q: &ConvQuant,
+    input: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    output: &mut [i8],
+) {
+    for b in 0..s.batch {
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                for ic in 0..s.in_c {
+                    for m in 0..depth_multiplier {
+                        let oc = ic * depth_multiplier + m;
+                        let mut acc: i32 = bias.map(|bv| bv[oc]).unwrap_or(0);
+                        for ky in 0..s.kh {
+                            let iy = origin_y + (ky * s.dil_h) as isize;
+                            if iy < 0 || iy >= s.in_h as isize {
+                                continue;
+                            }
+                            for kx in 0..s.kw {
+                                let ix = origin_x + (kx * s.dil_w) as isize;
+                                if ix < 0 || ix >= s.in_w as isize {
+                                    continue;
+                                }
+                                let iv = input
+                                    [((b * s.in_h + iy as usize) * s.in_w + ix as usize) * s.in_c + ic]
+                                    as i32
+                                    + q.input_offset;
+                                let fv = filter[(ky * s.kw + kx) * s.out_c + oc] as i32;
+                                acc = acc.wrapping_add(iv * fv);
+                            }
+                        }
+                        let scaled = q.per_channel[oc].mult.apply(acc) + q.output_offset;
+                        let out_idx = ((b * s.out_h + oy) * s.out_w + ox) * s.out_c + oc;
+                        output[out_idx] = scaled.clamp(q.act_min, q.act_max) as i8;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// f32 depthwise conv over plain slices.
+pub fn depthwise_conv2d_f32(
+    s: &ConvShape,
+    depth_multiplier: usize,
+    act: (f32, f32),
+    input: &[f32],
+    filter: &[f32],
+    bias: Option<&[f32]>,
+    output: &mut [f32],
+) {
+    for b in 0..s.batch {
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                for ic in 0..s.in_c {
+                    for m in 0..depth_multiplier {
+                        let oc = ic * depth_multiplier + m;
+                        let mut acc: f32 = bias.map(|bv| bv[oc]).unwrap_or(0.0);
+                        for ky in 0..s.kh {
+                            let iy = origin_y + (ky * s.dil_h) as isize;
+                            if iy < 0 || iy >= s.in_h as isize {
+                                continue;
+                            }
+                            for kx in 0..s.kw {
+                                let ix = origin_x + (kx * s.dil_w) as isize;
+                                if ix < 0 || ix >= s.in_w as isize {
+                                    continue;
+                                }
+                                acc += input
+                                    [((b * s.in_h + iy as usize) * s.in_w + ix as usize) * s.in_c + ic]
+                                    * filter[(ky * s.kw + kx) * s.out_c + oc];
+                            }
+                        }
+                        let out_idx = ((b * s.out_h + oy) * s.out_w + ox) * s.out_c + oc;
+                        output[out_idx] = acc.clamp(act.0, act.1);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build the invoke-time geometry for a depthwise conv.
+pub(crate) fn depthwise_shape(ctx: &OpContext, data: &ConvData) -> Result<(ConvShape, usize)> {
+    let OpOptions::Conv(opts) = ctx.operator.options else {
+        return Err(ctx.fail("missing conv options"));
+    };
+    let (batch, in_h, in_w, in_c) = ctx.input(0)?.shape.as_nhwc()?;
+    let (_, kh, kw, out_c) = ctx.input(1)?.shape.as_nhwc()?;
+    Ok((
+        ConvShape {
+            batch,
+            in_h,
+            in_w,
+            in_c,
+            out_h: data.out_h as usize,
+            out_w: data.out_w as usize,
+            out_c,
+            kh,
+            kw,
+            stride_h: opts.stride_h as usize,
+            stride_w: opts.stride_w as usize,
+            dil_h: opts.dilation_h as usize,
+            dil_w: opts.dilation_w as usize,
+            pad_top: data.pad.top as usize,
+            pad_left: data.pad.left as usize,
+        },
+        opts.depth_multiplier as usize,
+    ))
+}
+
+/// Shared prepare for depthwise conv.
+pub(crate) fn prepare_depthwise(ctx: &mut PrepareContext) -> Result<()> {
+    use crate::ops::common::*;
+    let OpOptions::Conv(opts) = ctx.operator.options else {
+        return Err(ctx.fail("missing conv options"));
+    };
+    let input = ctx.input(0)?;
+    let filter = ctx.input(1)?;
+    let output = ctx.output(0)?;
+    let (_, in_h, in_w, in_c) = input.shape.as_nhwc()?;
+    let (one, kh, kw, out_c) = filter.shape.as_nhwc()?;
+    if one != 1 {
+        return Err(ctx.fail(format!("depthwise filter dim0 must be 1, got {one}")));
+    }
+    if out_c != in_c * opts.depth_multiplier as usize {
+        return Err(ctx.fail(format!(
+            "filter channels {out_c} != in_c {in_c} * multiplier {}",
+            opts.depth_multiplier
+        )));
+    }
+    let (_, out_h, out_w, o_c) = output.shape.as_nhwc()?;
+    if o_c != out_c {
+        return Err(ctx.fail(format!("output channels {o_c} != {out_c}")));
+    }
+    let want_h = compute_out_size(opts.padding, in_h as i32, kh as i32, opts.stride_h as i32, opts.dilation_h as i32);
+    let want_w = compute_out_size(opts.padding, in_w as i32, kw as i32, opts.stride_w as i32, opts.dilation_w as i32);
+    if (want_h, want_w) != (out_h as i32, out_w as i32) {
+        return Err(ctx.fail(format!(
+            "output spatial {out_h}x{out_w} does not match computed {want_h}x{want_w}"
+        )));
+    }
+    let mut data = ConvData {
+        pad: PaddingValues {
+            top: compute_padding(opts.stride_h as i32, opts.dilation_h as i32, in_h as i32, kh as i32, out_h as i32),
+            left: compute_padding(opts.stride_w as i32, opts.dilation_w as i32, in_w as i32, kw as i32, out_w as i32),
+        },
+        out_h: out_h as i32,
+        out_w: out_w as i32,
+        fact: activation_range_f32(opts.activation),
+        ..Default::default()
+    };
+    if input.dtype == DType::I8 {
+        data.per_channel = conv_per_channel(input, filter, output, out_c)?;
+        data.input_offset = -input.zero_point()?;
+        data.output_offset = output.zero_point()?;
+        let (lo, hi) = activation_range_i8(opts.activation, output)?;
+        data.act_min = lo;
+        data.act_max = hi;
+    }
+    ctx.set_op_data(OpData::Conv(data));
+    Ok(())
+}
+
+/// Reference DepthwiseConv2d kernel.
+pub struct DepthwiseConvKernel;
+
+impl Kernel for DepthwiseConvKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        prepare_depthwise(ctx)
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Conv(data) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let (s, mult) = depthwise_shape(ctx, data)?;
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let q = ConvQuant {
+                    input_offset: data.input_offset,
+                    output_offset: data.output_offset,
+                    per_channel: &data.per_channel,
+                    act_min: data.act_min,
+                    act_max: data.act_max,
+                };
+                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                depthwise_conv2d_i8(&s, mult, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+            }
+            DType::F32 => {
+                let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
+                depthwise_conv2d_f32(&s, mult, data.fact, ctx.input_f32(0)?, ctx.input_f32(1)?, bias, ctx.output_f32(0)?);
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::common::ChannelQuant;
+    use crate::tensor::QuantizedMultiplier;
+
+    fn unit_quant(n: usize) -> Vec<ChannelQuant> {
+        vec![ChannelQuant { mult: QuantizedMultiplier::from_real(1.0) }; n]
+    }
+
+    #[test]
+    fn channels_stay_independent() {
+        // 2 input channels, multiplier 1, 1x1 filter [2, 3]:
+        // each output channel scales only its own input channel.
+        let s = ConvShape {
+            batch: 1, in_h: 1, in_w: 2, in_c: 2,
+            out_h: 1, out_w: 2, out_c: 2,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let pc = unit_quant(2);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let input = [1i8, 10, 2, 20]; // (x=0: ch[1,10]), (x=1: ch[2,20])
+        let filter = [2i8, 3]; // per-channel weights
+        let mut out = [0i8; 4];
+        depthwise_conv2d_i8(&s, 1, &q, &input, &filter, None, &mut out);
+        assert_eq!(out, [2, 30, 4, 60]);
+    }
+
+    #[test]
+    fn depth_multiplier_fans_out() {
+        // 1 input channel, multiplier 2: two outputs from one input.
+        let s = ConvShape {
+            batch: 1, in_h: 1, in_w: 1, in_c: 1,
+            out_h: 1, out_w: 1, out_c: 2,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let pc = unit_quant(2);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let input = [5i8];
+        let filter = [3i8, -2];
+        let mut out = [0i8; 2];
+        depthwise_conv2d_i8(&s, 2, &q, &input, &filter, None, &mut out);
+        assert_eq!(out, [15, -10]);
+    }
+
+    #[test]
+    fn spatial_window_sums() {
+        // 3x3 window of ones over 3x3 ones input, one channel: 9.
+        let s = ConvShape {
+            batch: 1, in_h: 3, in_w: 3, in_c: 1,
+            out_h: 1, out_w: 1, out_c: 1,
+            kh: 3, kw: 3, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let pc = unit_quant(1);
+        let q = ConvQuant { input_offset: 0, output_offset: 0, per_channel: &pc, act_min: -128, act_max: 127 };
+        let mut out = [0i8; 1];
+        depthwise_conv2d_i8(&s, 1, &q, &[1i8; 9], &[1i8; 9], None, &mut out);
+        assert_eq!(out[0], 9);
+    }
+
+    #[test]
+    fn f32_path_with_bias() {
+        let s = ConvShape {
+            batch: 1, in_h: 1, in_w: 1, in_c: 2,
+            out_h: 1, out_w: 1, out_c: 2,
+            kh: 1, kw: 1, stride_h: 1, stride_w: 1, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let mut out = [0f32; 2];
+        depthwise_conv2d_f32(
+            &s, 1, (f32::NEG_INFINITY, f32::INFINITY),
+            &[2.0, 3.0], &[10.0, 100.0], Some(&[1.0, -1.0]), &mut out,
+        );
+        assert_eq!(out, [21.0, 299.0]);
+    }
+}

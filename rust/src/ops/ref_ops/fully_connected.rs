@@ -1,0 +1,224 @@
+//! Fully-connected (dense) layer, reference implementation.
+//!
+//! TFLite layout: input `[batch, in]` (higher-rank inputs flatten to a
+//! matrix), filter `[out, in]`, bias `[out]`. Quantization is per-tensor
+//! on the filter (the TFLite int8 FC spec).
+
+use crate::error::Result;
+use crate::ops::common::{activation_range_f32, activation_range_i8, FcData};
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::schema::format::OpOptions;
+use crate::tensor::{DType, QuantizedMultiplier};
+
+/// Quantization parameters of one int8 FC invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct FcQuant {
+    /// Added to each input element (= -input zero point).
+    pub input_offset: i32,
+    /// Added to each filter element (= -filter zero point, normally 0).
+    pub filter_offset: i32,
+    /// Added to each requantized output.
+    pub output_offset: i32,
+    /// Requantization multiplier.
+    pub mult: QuantizedMultiplier,
+    /// Output clamp low.
+    pub act_min: i32,
+    /// Output clamp high.
+    pub act_max: i32,
+}
+
+/// int8 fully-connected over plain slices.
+#[allow(clippy::too_many_arguments)]
+pub fn fully_connected_i8(
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    q: &FcQuant,
+    input: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    output: &mut [i8],
+) {
+    for b in 0..batch {
+        for o in 0..out_dim {
+            let mut acc: i32 = bias.map(|bv| bv[o]).unwrap_or(0);
+            let in_base = b * in_dim;
+            let f_base = o * in_dim;
+            for i in 0..in_dim {
+                // Wrapping: defined overflow semantics (matches numpy i32
+                // and C++ release builds); valid models never overflow.
+                acc = acc.wrapping_add(
+                    (input[in_base + i] as i32 + q.input_offset)
+                        * (filter[f_base + i] as i32 + q.filter_offset),
+                );
+            }
+            let scaled = q.mult.apply(acc) + q.output_offset;
+            output[b * out_dim + o] = scaled.clamp(q.act_min, q.act_max) as i8;
+        }
+    }
+}
+
+/// f32 fully-connected over plain slices.
+#[allow(clippy::too_many_arguments)]
+pub fn fully_connected_f32(
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    act: (f32, f32),
+    input: &[f32],
+    filter: &[f32],
+    bias: Option<&[f32]>,
+    output: &mut [f32],
+) {
+    for b in 0..batch {
+        for o in 0..out_dim {
+            let mut acc: f32 = bias.map(|bv| bv[o]).unwrap_or(0.0);
+            let in_base = b * in_dim;
+            let f_base = o * in_dim;
+            for i in 0..in_dim {
+                acc += input[in_base + i] * filter[f_base + i];
+            }
+            output[b * out_dim + o] = acc.clamp(act.0, act.1);
+        }
+    }
+}
+
+/// Shared prepare for FC (reused by the optimized kernel).
+pub(crate) fn prepare_fc(ctx: &mut PrepareContext) -> Result<()> {
+    let OpOptions::FullyConnected { activation } = ctx.operator.options else {
+        return Err(ctx.fail("missing fully-connected options"));
+    };
+    let input = ctx.input(0)?;
+    let filter = ctx.input(1)?;
+    let output = ctx.output(0)?;
+    let (_, in_dim) = input.shape.as_matrix();
+    let (out_dim, f_in) = filter.shape.as_matrix();
+    if f_in != in_dim {
+        return Err(ctx.fail(format!("filter inner dim {f_in} != input dim {in_dim}")));
+    }
+    let (_, o_dim) = output.shape.as_matrix();
+    if o_dim != out_dim {
+        return Err(ctx.fail(format!("output dim {o_dim} != filter rows {out_dim}")));
+    }
+    let mut data = FcData { fact: activation_range_f32(activation), ..Default::default() };
+    if input.dtype == DType::I8 {
+        let real = input.scale()? as f64 * filter.scale()? as f64 / output.scale()? as f64;
+        data.mult = QuantizedMultiplier::from_real(real);
+        data.input_offset = -input.zero_point()?;
+        data.filter_offset = -filter.zero_point()?;
+        data.output_offset = output.zero_point()?;
+        let (lo, hi) = activation_range_i8(activation, output)?;
+        data.act_min = lo;
+        data.act_max = hi;
+    }
+    ctx.set_op_data(OpData::FullyConnected(data));
+    Ok(())
+}
+
+/// Reference FullyConnected kernel.
+pub struct FullyConnectedKernel;
+
+impl Kernel for FullyConnectedKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        prepare_fc(ctx)
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::FullyConnected(data) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
+        let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let q = FcQuant {
+                    input_offset: data.input_offset,
+                    filter_offset: data.filter_offset,
+                    output_offset: data.output_offset,
+                    mult: data.mult,
+                    act_min: data.act_min,
+                    act_max: data.act_max,
+                };
+                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                fully_connected_i8(batch, in_dim, out_dim, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+            }
+            DType::F32 => {
+                let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
+                fully_connected_f32(batch, in_dim, out_dim, data.fact, ctx.input_f32(0)?, ctx.input_f32(1)?, bias, ctx.output_f32(0)?);
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_q() -> FcQuant {
+        FcQuant {
+            input_offset: 0,
+            filter_offset: 0,
+            output_offset: 0,
+            mult: QuantizedMultiplier::from_real(1.0),
+            act_min: -128,
+            act_max: 127,
+        }
+    }
+
+    #[test]
+    fn i8_identity_matrix() {
+        let filter = [1i8, 0, 0, 1]; // 2x2 identity
+        let input = [7i8, -3];
+        let mut out = [0i8; 2];
+        fully_connected_i8(1, 2, 2, &unit_q(), &input, &filter, None, &mut out);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn i8_batched() {
+        let filter = [1i8, 1]; // 1x2 summing row
+        let input = [1i8, 2, 3, 4]; // batch 2
+        let mut out = [0i8; 2];
+        fully_connected_i8(2, 2, 1, &unit_q(), &input, &filter, None, &mut out);
+        assert_eq!(out, [3, 7]);
+    }
+
+    #[test]
+    fn i8_offsets_bias_scale() {
+        let mut q = unit_q();
+        q.input_offset = 1;
+        q.output_offset = -2;
+        q.mult = QuantizedMultiplier::from_real(0.5);
+        let input = [9i8]; // effective 10
+        let filter = [4i8];
+        let bias = [10i32];
+        let mut out = [0i8; 1];
+        fully_connected_i8(1, 1, 1, &q, &input, &filter, Some(&bias), &mut out);
+        // acc = 10 + 10*4 = 50; *0.5 = 25; -2 = 23.
+        assert_eq!(out, [23]);
+    }
+
+    #[test]
+    fn i8_act_clamps() {
+        let mut q = unit_q();
+        q.act_min = 0;
+        q.act_max = 6;
+        let mut out = [0i8; 2];
+        fully_connected_i8(1, 1, 2, &q, &[10], &[3, -3], None, &mut out);
+        assert_eq!(out, [6, 0]);
+    }
+
+    #[test]
+    fn f32_matmul() {
+        let input = [1.0f32, 2.0];
+        let filter = [3.0f32, 4.0, 5.0, 6.0]; // rows: [3,4],[5,6]
+        let mut out = [0f32; 2];
+        fully_connected_f32(
+            1, 2, 2, (f32::NEG_INFINITY, f32::INFINITY),
+            &input, &filter, Some(&[0.5, -0.5]), &mut out,
+        );
+        assert_eq!(out, [11.5, 16.5]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Mean reduction (MEAN), reference implementation.
+//!
+//! Input 1 is a constant i32 tensor of axes. The common TinyML case is the
+//! global-average-pool tail of MobileNet (`axes = [1, 2]` over NHWC). The
+//! int8 path sums in i32 and folds `in_scale / (out_scale * count)` plus
+//! both zero points into one fixed-point multiply.
+
+use crate::error::Result;
+use crate::ops::common::MeanData;
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::tensor::{DType, QuantizedMultiplier};
+
+/// Reference Mean kernel.
+pub struct MeanKernel;
+
+/// Decompose a flat index over the extents of `axes` (row-major over that
+/// axis subset) into an element offset using the full-tensor `strides`.
+fn offset_for(flat: usize, axes: &[usize], dims: &[usize], strides: &[usize]) -> usize {
+    let mut off = 0usize;
+    let mut rem = flat;
+    // Row-major over the subset: later axes vary fastest.
+    for (i, &a) in axes.iter().enumerate() {
+        let inner: usize = axes[i + 1..].iter().map(|&x| dims[x]).product::<usize>().max(1);
+        let coord = rem / inner;
+        rem %= inner;
+        off += coord * strides[a];
+    }
+    off
+}
+
+impl Kernel for MeanKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        let rank = input.shape.rank();
+        let mut axes: Vec<usize> = ctx
+            .input_const_i32(1)?
+            .iter()
+            .map(|&a| if a < 0 { (a + rank as i32) as usize } else { a as usize })
+            .collect();
+        axes.sort_unstable();
+        axes.dedup();
+        for &a in &axes {
+            if a >= rank {
+                return Err(ctx.fail(format!("axis {a} out of range for rank {rank}")));
+            }
+        }
+        let divisor: i32 = axes.iter().map(|&a| input.shape.dim(a)).product();
+        let kept: usize = (0..rank)
+            .filter(|d| !axes.contains(d))
+            .map(|d| input.shape.dim(d) as usize)
+            .product();
+        if output.shape.num_elements() != kept {
+            return Err(ctx.fail(format!(
+                "output has {} elements, expected {kept}",
+                output.shape.num_elements()
+            )));
+        }
+        let mut data = MeanData { axes, divisor, ..Default::default() };
+        if input.dtype == DType::I8 {
+            data.in_zp = input.zero_point()?;
+            data.out_zp = output.zero_point()?;
+            data.mult = QuantizedMultiplier::from_real(
+                input.scale()? as f64 / (output.scale()? as f64 * divisor as f64),
+            );
+        }
+        ctx.set_op_data(OpData::Mean(data));
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Mean(d) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let in_meta = ctx.input(0)?;
+        let rank = in_meta.shape.rank();
+        let dims: Vec<usize> = in_meta.shape.dims().iter().map(|&v| v as usize).collect();
+        let strides = in_meta.shape.strides();
+        let kept: Vec<usize> = (0..rank).filter(|x| !d.axes.contains(x)).collect();
+        let out_count: usize = kept.iter().map(|&a| dims[a]).product::<usize>().max(1);
+        let red_count: usize = d.axes.iter().map(|&a| dims[a]).product::<usize>().max(1);
+
+        match in_meta.dtype {
+            DType::I8 => {
+                let input = ctx.input_i8(0)?;
+                let output = ctx.output_i8(0)?;
+                for (oi, o) in output.iter_mut().enumerate().take(out_count) {
+                    let base = offset_for(oi, &kept, &dims, &strides);
+                    let mut sum: i32 = 0;
+                    for ri in 0..red_count {
+                        sum += input[base + offset_for(ri, &d.axes, &dims, &strides)] as i32;
+                    }
+                    // mean_real = in_scale*(sum - n*zp_in)/n, requantized.
+                    let q = d.mult.apply(sum - d.divisor * d.in_zp) + d.out_zp;
+                    *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                }
+            }
+            DType::F32 => {
+                let input = ctx.input_f32(0)?;
+                let output = ctx.output_f32(0)?;
+                for (oi, o) in output.iter_mut().enumerate().take(out_count) {
+                    let base = offset_for(oi, &kept, &dims, &strides);
+                    let mut sum = 0f32;
+                    for ri in 0..red_count {
+                        sum += input[base + offset_for(ri, &d.axes, &dims, &strides)];
+                    }
+                    *o = sum / red_count as f32;
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offset_decomposition_row_major() {
+        // Shape [2, 3, 4], strides [12, 4, 1].
+        let dims = [2usize, 3, 4];
+        let strides = [12usize, 4, 1];
+        // Reducing axes [1, 2]: flat index ri enumerates (a1, a2) row-major.
+        assert_eq!(offset_for(0, &[1, 2], &dims, &strides), 0);
+        assert_eq!(offset_for(1, &[1, 2], &dims, &strides), 1);
+        assert_eq!(offset_for(4, &[1, 2], &dims, &strides), 4); // (1, 0)
+        assert_eq!(offset_for(11, &[1, 2], &dims, &strides), 11); // (2, 3)
+        // Kept axis [0]: steps by stride 12.
+        assert_eq!(offset_for(1, &[0], &dims, &strides), 12);
+    }
+
+    #[test]
+    fn quantized_mean_formula() {
+        // 4 values at scale 0.5, zp 0 -> real [1, 2, 3, 4]; mean 2.5.
+        // out scale 0.5, zp 0 -> q_out = 5.
+        let q_in = [2i8, 4, 6, 8];
+        let sum: i32 = q_in.iter().map(|&v| v as i32).sum();
+        let mult = QuantizedMultiplier::from_real(0.5 / (0.5 * 4.0));
+        assert_eq!(mult.apply(sum), 5);
+    }
+
+    #[test]
+    fn zero_point_correction() {
+        // scale 1, zp 10: q [11, 13] = real [1, 3]; mean 2 -> q_out 12.
+        let sum = 11 + 13;
+        let corrected = sum - 2 * 10;
+        let mult = QuantizedMultiplier::from_real(1.0 / (1.0 * 2.0));
+        assert_eq!(mult.apply(corrected) + 10, 12);
+    }
+}

@@ -1,0 +1,96 @@
+//! Elementwise Maximum / Minimum, reference implementation.
+//!
+//! Like pooling, MAX/MIN do not rescale: TFLite requires both inputs and
+//! the output to share quantization, which prepare enforces, leaving the
+//! invoke path a pure elementwise compare. The second operand may be a
+//! scalar (clipping patterns).
+
+use crate::error::Result;
+use crate::ops::{Kernel, OpContext, PrepareContext};
+use crate::tensor::DType;
+
+/// Max or Min.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MinMaxMode {
+    /// Elementwise maximum.
+    Max,
+    /// Elementwise minimum.
+    Min,
+}
+
+/// Reference Maximum/Minimum kernel.
+pub struct MinMaxKernel {
+    mode: MinMaxMode,
+}
+
+impl MinMaxKernel {
+    /// MAXIMUM kernel.
+    pub fn max() -> Self {
+        MinMaxKernel { mode: MinMaxMode::Max }
+    }
+
+    /// MINIMUM kernel.
+    pub fn min() -> Self {
+        MinMaxKernel { mode: MinMaxMode::Min }
+    }
+}
+
+impl Kernel for MinMaxKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let a = ctx.input(0)?;
+        let b = ctx.input(1)?;
+        let out = ctx.output(0)?;
+        if a.shape.num_elements() != out.shape.num_elements() {
+            return Err(ctx.fail("output element count must match first input"));
+        }
+        let b_n = b.shape.num_elements();
+        if b_n != a.shape.num_elements() && b_n != 1 {
+            return Err(ctx.fail("second input must match first or be scalar"));
+        }
+        if a.dtype == DType::I8 {
+            for (t, what) in [(a, "input 0"), (b, "input 1")] {
+                if (t.scale()? - out.scale()?).abs() > 1e-7
+                    || t.zero_point()? != out.zero_point()?
+                {
+                    return Err(ctx.fail(format!(
+                        "{what} quantization must match output (max/min do not rescale)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let a = ctx.input_i8(0)?;
+                let b = ctx.input_i8(1)?;
+                let out = ctx.output_i8(0)?;
+                let scalar_b = b.len() == 1;
+                for (i, o) in out.iter_mut().enumerate() {
+                    let vb = b[if scalar_b { 0 } else { i }];
+                    *o = match self.mode {
+                        MinMaxMode::Max => a[i].max(vb),
+                        MinMaxMode::Min => a[i].min(vb),
+                    };
+                }
+            }
+            DType::F32 => {
+                let a = ctx.input_f32(0)?;
+                let b = ctx.input_f32(1)?;
+                let out = ctx.output_f32(0)?;
+                let scalar_b = b.len() == 1;
+                for (i, o) in out.iter_mut().enumerate() {
+                    let vb = b[if scalar_b { 0 } else { i }];
+                    *o = match self.mode {
+                        MinMaxMode::Max => a[i].max(vb),
+                        MinMaxMode::Min => a[i].min(vb),
+                    };
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,66 @@
+//! Reference kernels: portable, readability-first implementations of every
+//! builtin operator (the paper's "reference kernels ... designed for
+//! readability rather than performance", §5.2).
+//!
+//! Each kernel is a thin adapter from [`crate::ops::OpContext`] onto a
+//! pure free function over plain slices; the free functions are shared
+//! with [`crate::ops::opt_ops`] test oracles and unit-tested directly.
+
+pub mod activations;
+pub mod concat;
+pub mod conv;
+pub mod depthwise;
+pub mod elementwise;
+pub mod fully_connected;
+pub mod mean;
+pub mod minmax;
+pub mod pad;
+pub mod pooling;
+pub mod quantize;
+pub mod reshape;
+pub mod softmax;
+
+pub use activations::{LogisticKernel, ReluKernel, TanhKernel};
+pub use concat::ConcatKernel;
+pub use conv::{conv2d_f32, conv2d_i8, ConvKernel, ConvQuant, ConvShape};
+pub use depthwise::{depthwise_conv2d_f32, depthwise_conv2d_i8, DepthwiseConvKernel};
+pub use elementwise::ArithKernel;
+pub use fully_connected::{fully_connected_f32, fully_connected_i8, FcQuant, FullyConnectedKernel};
+pub use mean::MeanKernel;
+pub use minmax::MinMaxKernel;
+pub use pad::PadKernel;
+pub use pooling::{avg_pool_i8, max_pool_i8, PoolKernel};
+pub use quantize::{DequantizeKernel, QuantizeKernel};
+pub use reshape::ReshapeKernel;
+pub use softmax::SoftmaxKernel;
+
+use super::OpResolver;
+use crate::error::Result;
+use crate::schema::BuiltinOp;
+use std::sync::Arc;
+
+/// Register every builtin reference kernel into `resolver`.
+pub fn register_all(resolver: &mut OpResolver) -> Result<()> {
+    resolver.register(BuiltinOp::Conv2d, Arc::new(ConvKernel))?;
+    resolver.register(BuiltinOp::DepthwiseConv2d, Arc::new(DepthwiseConvKernel))?;
+    resolver.register(BuiltinOp::FullyConnected, Arc::new(FullyConnectedKernel))?;
+    resolver.register(BuiltinOp::MaxPool2d, Arc::new(PoolKernel::max()))?;
+    resolver.register(BuiltinOp::AvgPool2d, Arc::new(PoolKernel::avg()))?;
+    resolver.register(BuiltinOp::Softmax, Arc::new(SoftmaxKernel))?;
+    resolver.register(BuiltinOp::Relu, Arc::new(ReluKernel::relu()))?;
+    resolver.register(BuiltinOp::Relu6, Arc::new(ReluKernel::relu6()))?;
+    resolver.register(BuiltinOp::Logistic, Arc::new(LogisticKernel))?;
+    resolver.register(BuiltinOp::Add, Arc::new(ArithKernel::add()))?;
+    resolver.register(BuiltinOp::Mul, Arc::new(ArithKernel::mul()))?;
+    resolver.register(BuiltinOp::Reshape, Arc::new(ReshapeKernel))?;
+    resolver.register(BuiltinOp::Pad, Arc::new(PadKernel))?;
+    resolver.register(BuiltinOp::Mean, Arc::new(MeanKernel))?;
+    resolver.register(BuiltinOp::Concat, Arc::new(ConcatKernel))?;
+    resolver.register(BuiltinOp::Quantize, Arc::new(QuantizeKernel))?;
+    resolver.register(BuiltinOp::Dequantize, Arc::new(DequantizeKernel))?;
+    resolver.register(BuiltinOp::Sub, Arc::new(ArithKernel::sub()))?;
+    resolver.register(BuiltinOp::Maximum, Arc::new(MinMaxKernel::max()))?;
+    resolver.register(BuiltinOp::Minimum, Arc::new(MinMaxKernel::min()))?;
+    resolver.register(BuiltinOp::Tanh, Arc::new(TanhKernel))?;
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Zero padding (PAD), reference implementation.
+//!
+//! Input 1 is a constant `[rank, 2]` i32 tensor of (before, after) pads.
+//! Quantized tensors pad with the zero point (the representation of real
+//! 0.0), floats with 0.0 — TFLite semantics.
+
+use crate::error::Result;
+use crate::ops::{Kernel, OpContext, PrepareContext};
+use crate::tensor::DType;
+
+/// Reference Pad kernel.
+pub struct PadKernel;
+
+impl Kernel for PadKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        let pads = ctx.input_const_i32(1)?;
+        let rank = input.shape.rank();
+        if pads.len() != rank * 2 {
+            return Err(ctx.fail(format!(
+                "paddings must be [{rank}, 2], got {} values",
+                pads.len()
+            )));
+        }
+        for d in 0..rank {
+            let want = input.shape.dim(d) + pads[d * 2] + pads[d * 2 + 1];
+            if output.shape.dim(d) != want {
+                return Err(ctx.fail(format!(
+                    "output dim {d} is {}, expected {want}",
+                    output.shape.dim(d)
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let in_meta = ctx.input(0)?;
+        let out_meta = ctx.output(0)?;
+        let pads = ctx.input_i32(1)?;
+        let rank = in_meta.shape.rank();
+        let elem = in_meta.dtype.size_of();
+
+        // Fill with the pad value, then copy the input block row by row.
+        let out_bytes = ctx.output_bytes(0)?;
+        match in_meta.dtype {
+            DType::I8 => {
+                let zp = in_meta.zero_point()? as i8;
+                out_bytes.fill(zp as u8);
+            }
+            _ => out_bytes.fill(0),
+        }
+
+        let in_bytes = ctx.input_bytes(0)?;
+        let in_dims: Vec<usize> = in_meta.shape.dims().iter().map(|&d| d as usize).collect();
+        let out_strides = out_meta.shape.strides();
+
+        // Iterate over all input elements in row-major order, copying
+        // contiguous innermost runs.
+        let inner = *in_dims.last().unwrap_or(&1);
+        let outer: usize = in_dims[..rank.saturating_sub(1)].iter().product();
+        let mut idx = vec![0usize; rank.saturating_sub(1)];
+        for o in 0..outer {
+            // Destination offset: shift each coordinate by its before-pad.
+            let mut dst_elem = pads[(rank - 1) * 2] as usize; // innermost before-pad
+            for (d, &i) in idx.iter().enumerate() {
+                dst_elem += (i + pads[d * 2] as usize) * out_strides[d];
+            }
+            let src_off = o * inner * elem;
+            let dst_off = dst_elem * elem;
+            out_bytes[dst_off..dst_off + inner * elem]
+                .copy_from_slice(&in_bytes[src_off..src_off + inner * elem]);
+            // Increment the multi-index.
+            for d in (0..idx.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < in_dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The inner copy logic is covered end-to-end by interpreter
+    // integration tests (tests/interpreter_ops.rs: pad cases) because it
+    // needs planned tensor storage; the stride math is pinned here.
+
+    #[test]
+    fn destination_offset_math() {
+        // 2x2 input padded by 1 on each side -> 4x4 output (rank 2).
+        let out_strides = [4usize, 1];
+        let pads = [1i32, 1, 1, 1];
+        // Input element (1, 0) lands at (2, 1) = offset 9.
+        let dst = (1 + pads[0] as usize) * out_strides[0] + (pads[2] as usize);
+        assert_eq!(dst, 9);
+    }
+}

@@ -1,0 +1,308 @@
+//! Max / average pooling, reference implementations.
+//!
+//! Pooling operates per channel over NHWC; average pooling in int8 rounds
+//! to nearest (TFLite semantics) and both apply the fused-activation clamp.
+
+use crate::error::Result;
+use crate::ops::common::{
+    activation_range_f32, activation_range_i8, compute_out_size, compute_padding, PaddingValues,
+    PoolData,
+};
+use crate::ops::ref_ops::conv::ConvShape;
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::schema::format::OpOptions;
+use crate::tensor::DType;
+
+/// Pooling mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Maximum over the window.
+    Max,
+    /// Rounded average over the (unpadded part of the) window.
+    Avg,
+}
+
+/// int8 max pool over plain slices. `s.kh/kw` carry the window size.
+pub fn max_pool_i8(s: &ConvShape, act: (i32, i32), input: &[i8], output: &mut [i8]) {
+    pool_i8(s, PoolMode::Max, act, input, output)
+}
+
+/// int8 average pool over plain slices.
+pub fn avg_pool_i8(s: &ConvShape, act: (i32, i32), input: &[i8], output: &mut [i8]) {
+    pool_i8(s, PoolMode::Avg, act, input, output)
+}
+
+fn pool_i8(s: &ConvShape, mode: PoolMode, act: (i32, i32), input: &[i8], output: &mut [i8]) {
+    for b in 0..s.batch {
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                for c in 0..s.in_c {
+                    let mut max_v = i32::MIN;
+                    let mut sum: i32 = 0;
+                    let mut count: i32 = 0;
+                    for ky in 0..s.kh {
+                        let iy = origin_y + ky as isize;
+                        if iy < 0 || iy >= s.in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = origin_x + kx as isize;
+                            if ix < 0 || ix >= s.in_w as isize {
+                                continue;
+                            }
+                            let v = input
+                                [((b * s.in_h + iy as usize) * s.in_w + ix as usize) * s.in_c + c]
+                                as i32;
+                            max_v = max_v.max(v);
+                            sum += v;
+                            count += 1;
+                        }
+                    }
+                    let v = match mode {
+                        PoolMode::Max => max_v,
+                        PoolMode::Avg => {
+                            // Round-to-nearest integer division.
+                            if count == 0 {
+                                0
+                            } else if sum >= 0 {
+                                (sum + count / 2) / count
+                            } else {
+                                (sum - count / 2) / count
+                            }
+                        }
+                    };
+                    let out_idx = ((b * s.out_h + oy) * s.out_w + ox) * s.in_c + c;
+                    output[out_idx] = v.clamp(act.0, act.1) as i8;
+                }
+            }
+        }
+    }
+}
+
+fn pool_f32(s: &ConvShape, mode: PoolMode, act: (f32, f32), input: &[f32], output: &mut [f32]) {
+    for b in 0..s.batch {
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                for c in 0..s.in_c {
+                    let mut max_v = f32::NEG_INFINITY;
+                    let mut sum = 0f32;
+                    let mut count = 0f32;
+                    for ky in 0..s.kh {
+                        let iy = origin_y + ky as isize;
+                        if iy < 0 || iy >= s.in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = origin_x + kx as isize;
+                            if ix < 0 || ix >= s.in_w as isize {
+                                continue;
+                            }
+                            let v = input
+                                [((b * s.in_h + iy as usize) * s.in_w + ix as usize) * s.in_c + c];
+                            max_v = max_v.max(v);
+                            sum += v;
+                            count += 1.0;
+                        }
+                    }
+                    let v = match mode {
+                        PoolMode::Max => max_v,
+                        PoolMode::Avg => {
+                            if count == 0.0 {
+                                0.0
+                            } else {
+                                sum / count
+                            }
+                        }
+                    };
+                    let out_idx = ((b * s.out_h + oy) * s.out_w + ox) * s.in_c + c;
+                    output[out_idx] = v.clamp(act.0, act.1);
+                }
+            }
+        }
+    }
+}
+
+/// Reference pooling kernel, parameterized by mode.
+pub struct PoolKernel {
+    mode: PoolMode,
+}
+
+impl PoolKernel {
+    /// Max-pool kernel.
+    pub fn max() -> Self {
+        PoolKernel { mode: PoolMode::Max }
+    }
+
+    /// Average-pool kernel.
+    pub fn avg() -> Self {
+        PoolKernel { mode: PoolMode::Avg }
+    }
+}
+
+fn pool_shape(ctx: &OpContext, data: &PoolData) -> Result<ConvShape> {
+    let OpOptions::Pool(opts) = ctx.operator.options else {
+        return Err(ctx.fail("missing pool options"));
+    };
+    let (batch, in_h, in_w, in_c) = ctx.input(0)?.shape.as_nhwc()?;
+    Ok(ConvShape {
+        batch,
+        in_h,
+        in_w,
+        in_c,
+        out_h: data.out_h as usize,
+        out_w: data.out_w as usize,
+        out_c: in_c,
+        kh: opts.filter_h as usize,
+        kw: opts.filter_w as usize,
+        stride_h: opts.stride_h as usize,
+        stride_w: opts.stride_w as usize,
+        dil_h: 1,
+        dil_w: 1,
+        pad_top: data.pad.top as usize,
+        pad_left: data.pad.left as usize,
+    })
+}
+
+impl Kernel for PoolKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let OpOptions::Pool(opts) = ctx.operator.options else {
+            return Err(ctx.fail("missing pool options"));
+        };
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        let (_, in_h, in_w, in_c) = input.shape.as_nhwc()?;
+        let (_, out_h, out_w, o_c) = output.shape.as_nhwc()?;
+        if o_c != in_c {
+            return Err(ctx.fail(format!("pooling cannot change channels ({in_c} -> {o_c})")));
+        }
+        let want_h = compute_out_size(opts.padding, in_h as i32, opts.filter_h as i32, opts.stride_h as i32, 1);
+        let want_w = compute_out_size(opts.padding, in_w as i32, opts.filter_w as i32, opts.stride_w as i32, 1);
+        if (want_h, want_w) != (out_h as i32, out_w as i32) {
+            return Err(ctx.fail(format!(
+                "output spatial {out_h}x{out_w} does not match computed {want_h}x{want_w}"
+            )));
+        }
+        let mut data = PoolData {
+            pad: PaddingValues {
+                top: compute_padding(opts.stride_h as i32, 1, in_h as i32, opts.filter_h as i32, out_h as i32),
+                left: compute_padding(opts.stride_w as i32, 1, in_w as i32, opts.filter_w as i32, out_w as i32),
+            },
+            out_h: out_h as i32,
+            out_w: out_w as i32,
+            fact: activation_range_f32(opts.activation),
+            act_min: i8::MIN as i32,
+            act_max: i8::MAX as i32,
+        };
+        if input.dtype == DType::I8 {
+            // Pooling does not rescale; in/out quantization must agree.
+            if (input.scale()? - output.scale()?).abs() > 1e-7
+                || input.zero_point()? != output.zero_point()?
+            {
+                return Err(ctx.fail("pooling requires identical input/output quantization"));
+            }
+            let (lo, hi) = activation_range_i8(opts.activation, output)?;
+            data.act_min = lo;
+            data.act_max = hi;
+        }
+        ctx.set_op_data(OpData::Pool(data));
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Pool(data) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let s = pool_shape(ctx, data)?;
+        match ctx.input(0)?.dtype {
+            DType::I8 => pool_i8(&s, self.mode, (data.act_min, data.act_max), ctx.input_i8(0)?, ctx.output_i8(0)?),
+            DType::F32 => pool_f32(&s, self.mode, data.fact, ctx.input_f32(0)?, ctx.output_f32(0)?),
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape_2x2_window(in_h: usize, in_w: usize) -> ConvShape {
+        ConvShape {
+            batch: 1, in_h, in_w, in_c: 1,
+            out_h: in_h / 2, out_w: in_w / 2, out_c: 1,
+            kh: 2, kw: 2, stride_h: 2, stride_w: 2, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        }
+    }
+
+    #[test]
+    fn max_pool_picks_max() {
+        let s = shape_2x2_window(2, 2);
+        let input = [1i8, 5, -3, 2];
+        let mut out = [0i8; 1];
+        max_pool_i8(&s, (-128, 127), &input, &mut out);
+        assert_eq!(out[0], 5);
+    }
+
+    #[test]
+    fn avg_pool_rounds_to_nearest() {
+        let s = shape_2x2_window(2, 2);
+        // sum 7, count 4 -> 1.75 -> rounds to 2.
+        let mut out = [0i8; 1];
+        avg_pool_i8(&s, (-128, 127), &[1, 2, 2, 2], &mut out);
+        assert_eq!(out[0], 2);
+        // Negative: sum -7 -> -1.75 -> -2.
+        avg_pool_i8(&s, (-128, 127), &[-1, -2, -2, -2], &mut out);
+        assert_eq!(out[0], -2);
+    }
+
+    #[test]
+    fn padding_region_excluded_from_average() {
+        // SAME 2x2 stride 2 over 3x3: bottom-right window covers 1 cell.
+        let s = ConvShape {
+            batch: 1, in_h: 3, in_w: 3, in_c: 1,
+            out_h: 2, out_w: 2, out_c: 1,
+            kh: 2, kw: 2, stride_h: 2, stride_w: 2, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        let input = [4i8, 4, 8, 4, 4, 8, 8, 8, 100];
+        let mut out = [0i8; 4];
+        avg_pool_i8(&s, (-128, 127), &input, &mut out);
+        assert_eq!(out, [4, 8, 8, 100], "corner average must divide by visible count only");
+    }
+
+    #[test]
+    fn activation_clamps_output() {
+        let s = shape_2x2_window(2, 2);
+        let mut out = [0i8; 1];
+        max_pool_i8(&s, (0, 6), &[-10, -20, -30, -40], &mut out);
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn f32_avg() {
+        let s = shape_2x2_window(2, 2);
+        let mut out = [0f32; 1];
+        pool_f32(&s, PoolMode::Avg, (f32::NEG_INFINITY, f32::INFINITY), &[1.0, 2.0, 3.0, 4.0], &mut out);
+        assert_eq!(out[0], 2.5);
+    }
+
+    #[test]
+    fn multi_channel_independence() {
+        let s = ConvShape {
+            batch: 1, in_h: 2, in_w: 2, in_c: 2,
+            out_h: 1, out_w: 1, out_c: 2,
+            kh: 2, kw: 2, stride_h: 2, stride_w: 2, dil_h: 1, dil_w: 1,
+            pad_top: 0, pad_left: 0,
+        };
+        // channel 0: [1, 3, 5, 7] -> max 7; channel 1: [2, 4, 6, 8] -> max 8.
+        let input = [1i8, 2, 3, 4, 5, 6, 7, 8];
+        let mut out = [0i8; 2];
+        max_pool_i8(&s, (-128, 127), &input, &mut out);
+        assert_eq!(out, [7, 8]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Quantize (f32→i8 or i8→i8 requantize) and Dequantize (i8→f32).
+//!
+//! These are the model's entry/exit adapters between float application
+//! data and the int8 interior (Figure 1's conversion pipeline at run time).
+
+use crate::error::Result;
+use crate::ops::common::RequantData;
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::tensor::{DType, QuantizedMultiplier};
+
+/// Reference Quantize kernel (f32→i8, or i8→i8 rescale).
+pub struct QuantizeKernel;
+
+impl Kernel for QuantizeKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.shape.num_elements() != output.shape.num_elements() {
+            return Err(ctx.fail("quantize requires matching element counts"));
+        }
+        if output.dtype != DType::I8 {
+            return Err(ctx.fail(format!("quantize output must be i8, got {}", output.dtype)));
+        }
+        let mut data = RequantData {
+            out_zp: output.zero_point()?,
+            out_scale: output.scale()?,
+            ..Default::default()
+        };
+        match input.dtype {
+            DType::F32 => {}
+            DType::I8 => {
+                data.in_zp = input.zero_point()?;
+                data.in_scale = input.scale()?;
+                data.mult = QuantizedMultiplier::from_real(
+                    input.scale()? as f64 / output.scale()? as f64,
+                );
+            }
+            other => return Err(ctx.fail(format!("unsupported input dtype {other}"))),
+        }
+        ctx.set_op_data(OpData::Requant(data));
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Requant(d) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        match ctx.input(0)?.dtype {
+            DType::F32 => {
+                let input = ctx.input_f32(0)?;
+                let output = ctx.output_i8(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    let q = (v / d.out_scale).round() as i32 + d.out_zp;
+                    *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                }
+            }
+            DType::I8 => {
+                let input = ctx.input_i8(0)?;
+                let output = ctx.output_i8(0)?;
+                for (o, &v) in output.iter_mut().zip(input) {
+                    let q = d.mult.apply(v as i32 - d.in_zp) + d.out_zp;
+                    *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+/// Reference Dequantize kernel (i8→f32).
+pub struct DequantizeKernel;
+
+impl Kernel for DequantizeKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.shape.num_elements() != output.shape.num_elements() {
+            return Err(ctx.fail("dequantize requires matching element counts"));
+        }
+        if input.dtype != DType::I8 || output.dtype != DType::F32 {
+            return Err(ctx.fail("dequantize is i8 -> f32"));
+        }
+        ctx.set_op_data(OpData::Requant(RequantData {
+            in_zp: input.zero_point()?,
+            in_scale: input.scale()?,
+            ..Default::default()
+        }));
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Requant(d) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let input = ctx.input_i8(0)?;
+        let output = ctx.output_f32(0)?;
+        for (o, &v) in output.iter_mut().zip(input) {
+            *o = d.in_scale * (v as i32 - d.in_zp) as f32;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_quantization_formula() {
+        // scale 0.5, zp -1: 2.0 -> 4 + (-1) = 3.
+        let q = (2.0f32 / 0.5).round() as i32 + (-1);
+        assert_eq!(q, 3);
+    }
+
+    #[test]
+    fn requantize_doubles_scale() {
+        // in scale 0.5 -> out scale 1.0 halves the quantized magnitude.
+        let mult = QuantizedMultiplier::from_real(0.5 / 1.0);
+        assert_eq!(mult.apply(100), 50);
+    }
+
+    #[test]
+    fn dequantize_formula() {
+        let v = 0.25f32 * (7 - (-3)) as f32;
+        assert_eq!(v, 2.5);
+    }
+}

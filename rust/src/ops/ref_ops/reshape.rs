@@ -1,0 +1,40 @@
+//! Reshape: metadata-only in principle, a byte copy in practice.
+//!
+//! TF Micro copies rather than aliasing so the planner keeps one
+//! owner per buffer (aliasing would complicate lifetime analysis for a
+//! negligible win at these tensor sizes). The new shape is carried by the
+//! output tensor's static dims.
+
+use crate::error::Result;
+use crate::ops::{Kernel, OpContext, PrepareContext};
+
+/// Reference Reshape kernel.
+pub struct ReshapeKernel;
+
+impl Kernel for ReshapeKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.num_bytes() != output.num_bytes() {
+            return Err(ctx.fail(format!(
+                "reshape cannot change byte size ({} -> {})",
+                input.num_bytes(),
+                output.num_bytes()
+            )));
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let input = ctx.input_bytes(0)?;
+        let output = ctx.output_bytes(0)?;
+        output.copy_from_slice(input);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised through interpreter integration tests (reshape needs real
+    // tensor storage to be meaningful).
+}

@@ -1,0 +1,113 @@
+//! Softmax over the last dimension, reference implementation.
+//!
+//! The int8 path computes the numerically-stable softmax in float from the
+//! dequantized inputs and requantizes to the output parameters (TFLite
+//! fixes softmax output at scale 1/256, zero point -128; the exporter
+//! writes those). The Python oracle (`python/compile/ref.py`) implements
+//! the identical formula, so golden tests tolerate at most 1 LSB of
+//! rounding skew from `exp` differences.
+
+use crate::error::Result;
+use crate::ops::common::SoftmaxData;
+use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
+use crate::schema::format::OpOptions;
+use crate::tensor::DType;
+
+/// Reference Softmax kernel.
+pub struct SoftmaxKernel;
+
+impl Kernel for SoftmaxKernel {
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        let OpOptions::Softmax { beta } = ctx.operator.options else {
+            return Err(ctx.fail("missing softmax options"));
+        };
+        let input = ctx.input(0)?;
+        let output = ctx.output(0)?;
+        if input.shape.num_elements() != output.shape.num_elements() {
+            return Err(ctx.fail("softmax requires matching element counts"));
+        }
+        if input.dtype == DType::I8 {
+            ctx.set_op_data(OpData::Softmax(SoftmaxData {
+                beta_scale: beta * input.scale()?,
+                out_scale: output.scale()?,
+                out_zp: output.zero_point()?,
+            }));
+        } else {
+            ctx.set_op_data(OpData::Softmax(SoftmaxData {
+                beta_scale: beta,
+                ..Default::default()
+            }));
+        }
+        Ok(())
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Softmax(d) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let (rows, cols) = ctx.input(0)?.shape.as_matrix();
+        match ctx.input(0)?.dtype {
+            DType::I8 => {
+                let input = ctx.input_i8(0)?;
+                let output = ctx.output_i8(0)?;
+                for r in 0..rows {
+                    let row = &input[r * cols..(r + 1) * cols];
+                    let max_q = row.iter().copied().max().unwrap_or(0) as i32;
+                    // exp((q - max) * beta*scale); zero point cancels in the diff.
+                    let mut sum = 0f32;
+                    for &v in row {
+                        sum += ((v as i32 - max_q) as f32 * d.beta_scale).exp();
+                    }
+                    for (c, &v) in row.iter().enumerate() {
+                        let p = ((v as i32 - max_q) as f32 * d.beta_scale).exp() / sum;
+                        let q = (p / d.out_scale).round() as i32 + d.out_zp;
+                        output[r * cols + c] = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                    }
+                }
+            }
+            DType::F32 => {
+                let input = ctx.input_f32(0)?;
+                let output = ctx.output_f32(0)?;
+                for r in 0..rows {
+                    let row = &input[r * cols..(r + 1) * cols];
+                    let max_v = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0f32;
+                    for &v in row {
+                        sum += ((v - max_v) * d.beta_scale).exp();
+                    }
+                    for (c, &v) in row.iter().enumerate() {
+                        output[r * cols + c] = ((v - max_v) * d.beta_scale).exp() / sum;
+                    }
+                }
+            }
+            other => return Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    /// Pin the f32 math the kernel uses (full paths are integration-tested).
+    #[test]
+    fn stable_softmax_sums_to_one() {
+        let row = [1.0f32, 2.0, 3.0];
+        let max_v = 3.0f32;
+        let exps: Vec<f32> = row.iter().map(|v| (v - max_v).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|e| e / sum).collect();
+        let total: f32 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!(probs[2] > probs[1] && probs[1] > probs[0]);
+    }
+
+    #[test]
+    fn int8_requantization_lands_in_range() {
+        // p in [0,1], out scale 1/256, zp -128 -> q in [-128, 127].
+        for p in [0.0f32, 0.25, 0.5, 0.999, 1.0] {
+            let q = (p / (1.0 / 256.0)).round() as i32 - 128;
+            assert!((-128..=128).contains(&q));
+            assert!(q.clamp(-128, 127) <= 127);
+        }
+    }
+}

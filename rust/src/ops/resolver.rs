@@ -1,0 +1,182 @@
+//! The OpResolver: maps serialized operator types to kernel
+//! implementations (§4.1).
+//!
+//! "The application developer produces an 'operator resolver' object
+//! through the client API. The OpResolver API controls which operators
+//! link to the final binary, minimizing executable size." In Rust the
+//! linker argument becomes: only the kernels you `register` are
+//! reachable, so everything else is dead-code-eliminated from the binary.
+//! The resolver has a fixed capacity set at construction, like
+//! `MicroMutableOpResolver<N>`.
+//!
+//! Vendors swap in optimized kernels by registering a different
+//! implementation for the same opcode — no interpreter change (§4.8).
+
+use super::{Kernel, KernelFlavor};
+use crate::error::{Error, Result};
+use crate::schema::BuiltinOp;
+use std::sync::Arc;
+
+/// Default resolver capacity (ample for the builtin set).
+pub const DEFAULT_CAPACITY: usize = 28;
+
+/// Maps operator keys (builtin names or custom-op names) to kernels.
+pub struct OpResolver {
+    entries: Vec<(String, Arc<dyn Kernel>)>,
+    capacity: usize,
+}
+
+impl OpResolver {
+    /// Empty resolver with the default capacity.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Empty resolver bounded at `capacity` registrations.
+    pub fn with_capacity(capacity: usize) -> Self {
+        OpResolver { entries: Vec::with_capacity(capacity), capacity }
+    }
+
+    /// Resolver with every builtin reference kernel registered — the
+    /// "kitchen sink" (`AllOpsResolver` in TF Micro). Production
+    /// deployments should register only what their model needs.
+    pub fn with_reference_ops() -> Self {
+        let mut r = Self::with_capacity(BuiltinOp::ALL.len());
+        super::ref_ops::register_all(&mut r).expect("capacity sized for all builtins");
+        r
+    }
+
+    /// Resolver preferring optimized kernels, falling back to reference
+    /// implementations for ops without an optimized version — exactly how
+    /// a CMSIS-NN build composes (§4.8).
+    pub fn with_optimized_ops() -> Self {
+        let mut r = Self::with_capacity(BuiltinOp::ALL.len());
+        super::ref_ops::register_all(&mut r).expect("capacity sized for all builtins");
+        super::opt_ops::register_all(&mut r).expect("re-registration needs no capacity");
+        r
+    }
+
+    /// Register a kernel for a builtin op. Re-registering an op replaces
+    /// the previous kernel (that is the vendor-override mechanism).
+    pub fn register(&mut self, op: BuiltinOp, kernel: Arc<dyn Kernel>) -> Result<()> {
+        self.register_key(op.name(), kernel)
+    }
+
+    /// Register a kernel for a custom op name.
+    pub fn register_custom(&mut self, name: &str, kernel: Arc<dyn Kernel>) -> Result<()> {
+        self.register_key(name, kernel)
+    }
+
+    fn register_key(&mut self, key: &str, kernel: Arc<dyn Kernel>) -> Result<()> {
+        if let Some(slot) = self.entries.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = kernel;
+            return Ok(());
+        }
+        if self.entries.len() >= self.capacity {
+            return Err(Error::ResolverFull(self.capacity));
+        }
+        self.entries.push((key.to_string(), kernel));
+        Ok(())
+    }
+
+    /// Look up the kernel for an operator key.
+    pub fn find(&self, key: &str) -> Result<&dyn Kernel> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_ref())
+            .ok_or_else(|| Error::UnsupportedOp(key.to_string()))
+    }
+
+    /// Flavor of the registered kernel for `key` (bench introspection).
+    pub fn flavor_of(&self, key: &str) -> Option<KernelFlavor> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v.flavor())
+    }
+
+    /// Number of registered kernels.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for OpResolver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{OpContext, PrepareContext};
+
+    struct NopKernel(KernelFlavor);
+    impl Kernel for NopKernel {
+        fn flavor(&self) -> KernelFlavor {
+            self.0
+        }
+        fn prepare(&self, _: &mut PrepareContext) -> Result<()> {
+            Ok(())
+        }
+        fn invoke(&self, _: &OpContext) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn register_and_find() {
+        let mut r = OpResolver::with_capacity(2);
+        r.register(BuiltinOp::Relu, Arc::new(NopKernel(KernelFlavor::Reference))).unwrap();
+        assert!(r.find("RELU").is_ok());
+        assert!(matches!(r.find("CONV_2D"), Err(Error::UnsupportedOp(_))));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut r = OpResolver::with_capacity(1);
+        r.register(BuiltinOp::Relu, Arc::new(NopKernel(KernelFlavor::Reference))).unwrap();
+        let err = r.register(BuiltinOp::Relu6, Arc::new(NopKernel(KernelFlavor::Reference)));
+        assert!(matches!(err, Err(Error::ResolverFull(1))));
+    }
+
+    #[test]
+    fn reregistration_overrides_without_capacity() {
+        let mut r = OpResolver::with_capacity(1);
+        r.register(BuiltinOp::Conv2d, Arc::new(NopKernel(KernelFlavor::Reference))).unwrap();
+        assert_eq!(r.flavor_of("CONV_2D"), Some(KernelFlavor::Reference));
+        // Vendor override: same op, optimized kernel, still capacity 1.
+        r.register(BuiltinOp::Conv2d, Arc::new(NopKernel(KernelFlavor::Optimized))).unwrap();
+        assert_eq!(r.flavor_of("CONV_2D"), Some(KernelFlavor::Optimized));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn custom_ops_resolved_by_name() {
+        let mut r = OpResolver::with_capacity(2);
+        r.register_custom("MY_VENDOR_OP", Arc::new(NopKernel(KernelFlavor::Accelerated)))
+            .unwrap();
+        assert!(r.find("MY_VENDOR_OP").is_ok());
+        assert_eq!(r.flavor_of("MY_VENDOR_OP"), Some(KernelFlavor::Accelerated));
+    }
+
+    #[test]
+    fn full_reference_resolver_covers_all_builtins() {
+        let r = OpResolver::with_reference_ops();
+        for op in BuiltinOp::ALL {
+            assert!(r.find(op.name()).is_ok(), "missing reference kernel for {}", op.name());
+        }
+    }
+
+    #[test]
+    fn optimized_resolver_prefers_optimized_conv() {
+        let r = OpResolver::with_optimized_ops();
+        assert_eq!(r.flavor_of("CONV_2D"), Some(KernelFlavor::Optimized));
+        // Ops without an optimized version keep the reference kernel.
+        assert_eq!(r.flavor_of("RESHAPE"), Some(KernelFlavor::Reference));
+    }
+}

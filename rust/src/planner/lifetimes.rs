@@ -1,0 +1,144 @@
+//! Tensor lifetime analysis over the sorted operator list (§4.4.2).
+//!
+//! Because the operator list is topologically sorted and shapes are
+//! static, lifetimes fall out of a single pass: an activation tensor must
+//! exist from the op that produces it through the last op that reads it.
+//! Graph inputs are live from "before op 0" (step 0); graph outputs stay
+//! live through the final op so the application can read them after
+//! `invoke` returns.
+
+use super::BufferRequest;
+use crate::schema::Model;
+
+/// Lifetime analysis result for one model.
+#[derive(Debug, Clone)]
+pub struct LifetimeInfo {
+    /// Indices (into `model.tensors()`) of the arena-resident,
+    /// non-variable tensors that need planning, in request order.
+    pub tensor_indices: Vec<usize>,
+    /// One request per entry of `tensor_indices`.
+    pub requests: Vec<BufferRequest>,
+}
+
+/// Compute buffer requests for every plannable tensor in `model`.
+///
+/// Variable tensors (persistent state) and constants are excluded — the
+/// interpreter gives variables interpreter-lifetime (tail) storage and
+/// constants live in the serialized model.
+pub fn analyze_lifetimes(model: &Model) -> LifetimeInfo {
+    let n_tensors = model.tensors().len();
+    let n_ops = model.operators().len();
+    let mut first = vec![usize::MAX; n_tensors];
+    let mut last = vec![0usize; n_tensors];
+
+    for &t in model.inputs() {
+        first[t as usize] = 0;
+    }
+    for (op_idx, op) in model.operators().iter().enumerate() {
+        for &t in op.inputs.iter().chain(op.outputs.iter()) {
+            if t == -1 {
+                continue;
+            }
+            let ti = t as usize;
+            first[ti] = first[ti].min(op_idx);
+            last[ti] = last[ti].max(op_idx);
+        }
+    }
+    // Outputs must survive past the last op.
+    let final_step = n_ops.saturating_sub(1);
+    for &t in model.outputs() {
+        last[t as usize] = last[t as usize].max(final_step);
+    }
+
+    let mut tensor_indices = Vec::new();
+    let mut requests = Vec::new();
+    for (ti, meta) in model.tensors().iter().enumerate() {
+        if !meta.needs_arena() || meta.is_variable {
+            continue;
+        }
+        if first[ti] == usize::MAX {
+            // Dead tensor (never referenced): still give it zero-cost
+            // placement so indexing stays simple.
+            first[ti] = 0;
+        }
+        tensor_indices.push(ti);
+        requests.push(BufferRequest {
+            size: meta.num_bytes(),
+            first_use: first[ti],
+            last_use: last[ti].max(first[ti]),
+        });
+    }
+    LifetimeInfo { tensor_indices, requests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::{BuiltinOp, Model, ModelBuilder};
+    use crate::tensor::DType;
+
+    /// in -> relu -> mid -> relu -> out, with a constant weight on the side.
+    fn chain_model() -> Model {
+        let mut b = ModelBuilder::new("chain");
+        let t_in = b.add_tensor("in", DType::F32, &[4], None);
+        let t_mid = b.add_tensor("mid", DType::F32, &[4], None);
+        let t_out = b.add_tensor("out", DType::F32, &[4], None);
+        let buf = b.add_buffer(&[0u8; 16]);
+        let _t_w = b.add_tensor("w", DType::F32, &[4], Some(buf));
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_mid], vec![]);
+        b.add_op(BuiltinOp::Relu, &[t_mid], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        Model::from_bytes(&b.finish()).unwrap()
+    }
+
+    #[test]
+    fn chain_lifetimes() {
+        let m = chain_model();
+        let info = analyze_lifetimes(&m);
+        // Constants are excluded: only in, mid, out.
+        assert_eq!(info.tensor_indices, vec![0, 1, 2]);
+        let [r_in, r_mid, r_out] = info.requests[..] else { panic!() };
+        assert_eq!((r_in.first_use, r_in.last_use), (0, 0));
+        assert_eq!((r_mid.first_use, r_mid.last_use), (0, 1));
+        assert_eq!((r_out.first_use, r_out.last_use), (1, 1));
+    }
+
+    #[test]
+    fn outputs_live_to_end() {
+        // Output produced early must stay live through the last op.
+        let mut b = ModelBuilder::new("early-out");
+        let t_in = b.add_tensor("in", DType::F32, &[4], None);
+        let t_early = b.add_tensor("early", DType::F32, &[4], None);
+        let t_late = b.add_tensor("late", DType::F32, &[4], None);
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_early], vec![]);
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_late], vec![]);
+        b.set_io(&[t_in], &[t_early, t_late]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let info = analyze_lifetimes(&m);
+        let early = &info.requests[1];
+        assert_eq!(early.last_use, 1, "graph output must survive to the final op");
+    }
+
+    #[test]
+    fn variables_excluded() {
+        let mut b = ModelBuilder::new("var");
+        let t_in = b.add_tensor("in", DType::F32, &[4], None);
+        let t_state = b.add_tensor("state", DType::F32, &[4], None);
+        b.set_variable(t_state);
+        let t_out = b.add_tensor("out", DType::F32, &[4], None);
+        b.add_op(BuiltinOp::Add, &[t_in, t_state], &[t_out], crate::schema::writer::elementwise_options(Default::default()));
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let info = analyze_lifetimes(&m);
+        assert!(!info.tensor_indices.contains(&(t_state as usize)));
+    }
+
+    #[test]
+    fn sizes_match_tensor_bytes() {
+        let m = chain_model();
+        let info = analyze_lifetimes(&m);
+        for (&ti, r) in info.tensor_indices.iter().zip(&info.requests) {
+            assert_eq!(r.size, m.tensors()[ti].num_bytes());
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Naive no-reuse planner — the Figure 4a baseline.
+//!
+//! Every buffer gets its own slice of the region regardless of lifetime.
+//! This is what the paper's "simplistic approach" (§4.4.1) amounts to for
+//! intermediates, kept as the ablation baseline for
+//! `benches/bench_planner.rs`; the delta versus [`super::GreedyPlanner`]
+//! is the Figure 4 memory saving.
+
+use super::{BufferRequest, MemoryPlan, MemoryPlanner};
+use crate::error::Result;
+
+/// Allocates every buffer disjointly (no temporal reuse).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LinearPlanner;
+
+impl MemoryPlanner for LinearPlanner {
+    fn plan(&self, requests: &[BufferRequest], align: usize) -> Result<MemoryPlan> {
+        assert!(align.is_power_of_two());
+        let mut offsets = Vec::with_capacity(requests.len());
+        let mut cursor = 0usize;
+        for r in requests {
+            offsets.push(cursor);
+            cursor = (cursor + r.size + align - 1) & !(align - 1);
+        }
+        Ok(MemoryPlan { offsets, arena_size: cursor })
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::verify_plan;
+
+    #[test]
+    fn no_reuse_sums_sizes() {
+        let reqs = vec![
+            BufferRequest { size: 100, first_use: 0, last_use: 1 },
+            BufferRequest { size: 100, first_use: 5, last_use: 6 }, // could share, doesn't
+        ];
+        let plan = LinearPlanner.plan(&reqs, 16).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        assert_eq!(plan.offsets, vec![0, 112]);
+        assert_eq!(plan.arena_size, 224);
+    }
+
+    #[test]
+    fn always_valid_by_construction() {
+        let reqs: Vec<BufferRequest> = (0..20)
+            .map(|i| BufferRequest { size: 10 * i + 1, first_use: 0, last_use: 100 })
+            .collect();
+        let plan = LinearPlanner.plan(&reqs, 4).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+    }
+}

@@ -1,0 +1,144 @@
+//! Offline-planned tensor allocation (§4.4.2).
+//!
+//! "We allow the user to create a memory layout on a host before run time.
+//! The memory layout is stored as model FlatBuffer metadata and contains an
+//! array of fixed memory-arena offsets for an arbitrary number of variable
+//! tensors." TMF carries the same array under
+//! [`crate::schema::OFFLINE_PLAN_KEY`]: entry *i* is the fixed offset of
+//! request *i*, or `-1` to let the fallback planner place it.
+//!
+//! Benefits reproduced here (and measured in `benches/bench_planner.rs`):
+//! near-zero on-device planning work, user ownership of layout, and the
+//! ability to pin specific tensors (e.g. to a faster memory bank).
+
+use super::{BufferRequest, GreedyPlanner, MemoryPlan, MemoryPlanner};
+use crate::error::{Error, Result};
+
+/// Planner that applies host-computed fixed offsets, delegating unpinned
+/// requests to [`GreedyPlanner`].
+#[derive(Debug, Clone)]
+pub struct OfflinePlanner {
+    /// Offset per request; `-1` = let the fallback place it.
+    pub fixed_offsets: Vec<i32>,
+}
+
+impl OfflinePlanner {
+    /// Build from the model-metadata array.
+    pub fn new(fixed_offsets: Vec<i32>) -> Self {
+        OfflinePlanner { fixed_offsets }
+    }
+
+    /// Compute an offline plan on the host: run the greedy planner and
+    /// freeze its offsets. This is the "host side" half of the feature
+    /// (what `python/compile/export.py --offline-plan` does).
+    pub fn precompute(requests: &[BufferRequest], align: usize) -> Result<Vec<i32>> {
+        let plan = GreedyPlanner.plan(requests, align)?;
+        Ok(plan.offsets.iter().map(|&o| o as i32).collect())
+    }
+}
+
+impl MemoryPlanner for OfflinePlanner {
+    fn plan(&self, requests: &[BufferRequest], align: usize) -> Result<MemoryPlan> {
+        if self.fixed_offsets.len() != requests.len() {
+            return Err(Error::PlanFailed(format!(
+                "offline plan has {} entries for {} buffers",
+                self.fixed_offsets.len(),
+                requests.len()
+            )));
+        }
+        let mut offsets = vec![0usize; requests.len()];
+        let mut arena_size = 0usize;
+        let mut unpinned: Vec<usize> = Vec::new();
+        for (i, &fo) in self.fixed_offsets.iter().enumerate() {
+            if fo < 0 {
+                unpinned.push(i);
+            } else {
+                offsets[i] = fo as usize;
+                arena_size = arena_size.max(fo as usize + requests[i].size);
+            }
+        }
+
+        // Place unpinned buffers above the pinned region with greedy reuse
+        // among themselves (simple and always valid; pinned regions stay
+        // authoritative).
+        if !unpinned.is_empty() {
+            let base = (arena_size + align - 1) & !(align - 1);
+            let sub: Vec<BufferRequest> = unpinned.iter().map(|&i| requests[i]).collect();
+            let sub_plan = GreedyPlanner.plan(&sub, align)?;
+            for (k, &i) in unpinned.iter().enumerate() {
+                offsets[i] = base + sub_plan.offsets[k];
+            }
+            arena_size = arena_size.max(base + sub_plan.arena_size);
+        }
+
+        let plan = MemoryPlan { offsets, arena_size };
+        // A corrupted or stale offline plan must fail loudly, not corrupt
+        // memory: validate against lifetimes before accepting.
+        super::verify_plan(requests, &plan)
+            .map_err(|e| Error::PlanFailed(format!("offline plan rejected: {e}")))?;
+        Ok(plan)
+    }
+
+    fn name(&self) -> &'static str {
+        "offline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::verify_plan;
+
+    fn req(size: usize, first: usize, last: usize) -> BufferRequest {
+        BufferRequest { size, first_use: first, last_use: last }
+    }
+
+    #[test]
+    fn precomputed_plan_round_trips() {
+        let reqs = vec![req(100, 0, 1), req(200, 1, 2), req(100, 2, 3)];
+        let fixed = OfflinePlanner::precompute(&reqs, 16).unwrap();
+        let planner = OfflinePlanner::new(fixed);
+        let plan = planner.plan(&reqs, 16).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        // Offline should equal what greedy computed on the host.
+        let greedy = GreedyPlanner.plan(&reqs, 16).unwrap();
+        assert_eq!(plan.offsets, greedy.offsets);
+    }
+
+    #[test]
+    fn corrupt_plan_rejected() {
+        let reqs = vec![req(100, 0, 2), req(100, 1, 3)];
+        // Both pinned to offset 0 while alive simultaneously: invalid.
+        let planner = OfflinePlanner::new(vec![0, 0]);
+        assert!(planner.plan(&reqs, 16).is_err());
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let reqs = vec![req(100, 0, 2)];
+        let planner = OfflinePlanner::new(vec![0, 0]);
+        assert!(planner.plan(&reqs, 16).is_err());
+    }
+
+    #[test]
+    fn mixed_pinned_and_unpinned() {
+        let reqs = vec![req(128, 0, 1), req(64, 1, 2), req(32, 2, 3)];
+        // Pin the first at a deliberate offset; let the rest float.
+        let planner = OfflinePlanner::new(vec![256, -1, -1]);
+        let plan = planner.plan(&reqs, 16).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        assert_eq!(plan.offsets[0], 256);
+        assert!(plan.arena_size >= 256 + 128);
+    }
+
+    #[test]
+    fn user_can_pin_to_memory_banks() {
+        // The paper's motivation: pin big tensors to a specific bank
+        // (here: offset 0) and keep small ones elsewhere.
+        let reqs = vec![req(1024, 0, 3), req(64, 0, 3)];
+        let planner = OfflinePlanner::new(vec![0, 1024]);
+        let plan = planner.plan(&reqs, 16).unwrap();
+        assert_eq!(plan.offsets, vec![0, 1024]);
+        assert_eq!(plan.arena_size, 1088);
+    }
+}

@@ -1,0 +1,191 @@
+//! Profiling hooks and the interpreter-overhead measurement (§5.4).
+//!
+//! `MicroProfiler` implements [`InvokeObserver`] and records one timed
+//! event per op, mirroring TF Micro's `MicroProfiler` (developers
+//! "instrument specific code sections ... and examine a model's
+//! performance-critical paths").
+//!
+//! [`measure_overhead`] reproduces the paper's headline methodology
+//! (Figure 6): *total* time is a plain unobserved `invoke`; *calculation*
+//! time is the sum of per-kernel times; the difference, as a fraction, is
+//! the interpreter overhead. Both are medians over many runs on the same
+//! machine, so the ratio is robust to host noise.
+
+use crate::error::Result;
+use crate::interpreter::{InvokeObserver, MicroInterpreter};
+use std::time::{Duration, Instant};
+
+/// One timed op execution.
+#[derive(Debug, Clone)]
+pub struct OpEvent {
+    /// Index in execution order.
+    pub op_index: usize,
+    /// Operator key (builtin or custom name).
+    pub key: String,
+    /// Wall time of the kernel's invoke.
+    pub duration: Duration,
+}
+
+/// Per-op profiler; attach with [`MicroInterpreter::invoke_observed`].
+#[derive(Debug, Default)]
+pub struct MicroProfiler {
+    events: Vec<OpEvent>,
+    started: Option<(usize, Instant)>,
+}
+
+impl MicroProfiler {
+    /// Fresh profiler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Recorded events (all invocations, in order).
+    pub fn events(&self) -> &[OpEvent] {
+        &self.events
+    }
+
+    /// Total kernel ("calculation") time across recorded events.
+    pub fn calculation_time(&self) -> Duration {
+        self.events.iter().map(|e| e.duration).sum()
+    }
+
+    /// Aggregate time per op key, descending — the §5.4 bottleneck view.
+    pub fn by_key(&self) -> Vec<(String, Duration, usize)> {
+        let mut agg: Vec<(String, Duration, usize)> = Vec::new();
+        for e in &self.events {
+            match agg.iter_mut().find(|(k, _, _)| *k == e.key) {
+                Some((_, d, n)) => {
+                    *d += e.duration;
+                    *n += 1;
+                }
+                None => agg.push((e.key.clone(), e.duration, 1)),
+            }
+        }
+        agg.sort_by(|a, b| b.1.cmp(&a.1));
+        agg
+    }
+
+    /// Drop recorded events.
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// Render a per-op table (used by `tfmicro run --profile`).
+    pub fn report(&self) -> String {
+        let mut s = String::from("op                        calls      total        mean\n");
+        for (key, total, calls) in self.by_key() {
+            s.push_str(&format!(
+                "{key:<24} {calls:>6} {total:>10.3?} {:>11.3?}\n",
+                total / calls as u32
+            ));
+        }
+        s
+    }
+}
+
+impl InvokeObserver for MicroProfiler {
+    fn begin_op(&mut self, op_index: usize, key: &str) {
+        self.events.push(OpEvent {
+            op_index,
+            key: key.to_string(),
+            duration: Duration::ZERO,
+        });
+        self.started = Some((op_index, Instant::now()));
+    }
+
+    fn end_op(&mut self, op_index: usize) {
+        if let Some((started_idx, t0)) = self.started.take() {
+            debug_assert_eq!(started_idx, op_index);
+            if let Some(e) = self.events.last_mut() {
+                e.duration = t0.elapsed();
+            }
+        }
+    }
+}
+
+/// Result of the Figure 6 methodology on the host.
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadReport {
+    /// Median wall time of one unobserved `invoke`.
+    pub total: Duration,
+    /// Median summed kernel time of one observed `invoke`.
+    pub calculation: Duration,
+    /// `max(total - calculation, 0)`.
+    pub overhead: Duration,
+    /// Overhead as a percentage of total.
+    pub overhead_pct: f64,
+}
+
+/// Measure interpreter overhead on the host: median total invoke time vs
+/// median calculation (summed kernel) time over `iters` runs each.
+pub fn measure_overhead(
+    interp: &mut MicroInterpreter,
+    iters: usize,
+) -> Result<OverheadReport> {
+    assert!(iters >= 3);
+    // Warmup.
+    for _ in 0..3.min(iters) {
+        interp.invoke()?;
+    }
+    // Total: unobserved invokes.
+    let mut totals = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        interp.invoke()?;
+        totals.push(t0.elapsed());
+    }
+    totals.sort();
+    let total = totals[totals.len() / 2];
+
+    // Calculation: per-op sums under the profiler.
+    let mut calcs = Vec::with_capacity(iters);
+    let mut prof = MicroProfiler::new();
+    for _ in 0..iters {
+        prof.clear();
+        interp.invoke_observed(&mut prof)?;
+        calcs.push(prof.calculation_time());
+    }
+    calcs.sort();
+    let calculation = calcs[calcs.len() / 2];
+
+    let overhead = total.saturating_sub(calculation);
+    let overhead_pct = if total.is_zero() {
+        0.0
+    } else {
+        overhead.as_secs_f64() / total.as_secs_f64() * 100.0
+    };
+    Ok(OverheadReport { total, calculation, overhead, overhead_pct })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiler_aggregates_by_key() {
+        let mut p = MicroProfiler::new();
+        p.begin_op(0, "CONV_2D");
+        std::thread::sleep(Duration::from_micros(200));
+        p.end_op(0);
+        p.begin_op(1, "SOFTMAX");
+        p.end_op(1);
+        p.begin_op(2, "CONV_2D");
+        p.end_op(2);
+        assert_eq!(p.events().len(), 3);
+        let agg = p.by_key();
+        assert_eq!(agg[0].0, "CONV_2D");
+        assert_eq!(agg[0].2, 2);
+        assert!(p.calculation_time() >= Duration::from_micros(200));
+        assert!(p.report().contains("CONV_2D"));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut p = MicroProfiler::new();
+        p.begin_op(0, "RELU");
+        p.end_op(0);
+        p.clear();
+        assert!(p.events().is_empty());
+        assert_eq!(p.calculation_time(), Duration::ZERO);
+    }
+}

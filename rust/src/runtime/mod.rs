@@ -1,0 +1,119 @@
+//! XLA/PJRT runtime: loads AOT-compiled artifacts from the Python build
+//! path and executes them from Rust (DESIGN.md §6.2).
+//!
+//! This is the repo's "vendor optimized library" analog: the Pallas/JAX
+//! kernels authored in `python/compile/` are lowered **once** at build
+//! time to HLO text (`make artifacts`), and this module compiles and runs
+//! them through the PJRT CPU client. Python is never on the request path —
+//! the Rust binary is self-contained once `artifacts/` exists.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod xla_kernel;
+
+pub use xla_kernel::XlaFcKernel;
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A PJRT client wrapper (CPU).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(XlaRuntime { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<CompiledComputation> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Xla("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))?;
+        Ok(CompiledComputation { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled executable (one model variant / kernel).
+pub struct CompiledComputation {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl CompiledComputation {
+    /// Artifact name (diagnostics).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with prepared literals, returning the (tuple) result
+    /// literal (internal helper shared with the accelerated kernels).
+    pub(crate) fn execute_literals(&self, inputs: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+
+    /// Execute with f32 inputs; expects the computation to return a tuple
+    /// (jax lowering convention `return_tuple=True`) and flattens every
+    /// tuple element to a f32 vec.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| Error::Xla(e.to_string()))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Xla(format!("execute {}: {e}", self.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let tuple = out.to_tuple().map_err(|e| Error::Xla(e.to_string()))?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            vecs.push(t.to_vec::<f32>().map_err(|e| Error::Xla(e.to_string()))?);
+        }
+        Ok(vecs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Requires artifacts/ to exist (make artifacts); skipped otherwise so
+    // `cargo test` works on a fresh checkout. The make-driven integration
+    // test in rust/tests/ covers the full path.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = XlaRuntime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}

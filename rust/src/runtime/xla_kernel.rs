@@ -1,0 +1,180 @@
+//! An XLA/PJRT-backed FullyConnected kernel — the full "vendor ships an
+//! opaque optimized library" flow (§4.7/§4.8, DESIGN.md §6.2).
+//!
+//! The kernel wraps the AOT-compiled Layer-1 Pallas int8 matmul
+//! (`artifacts/fc_int8.hlo.txt`, fixed at the hotword-fc1 shape with
+//! zero I/O offsets). It registers through the standard [`OpResolver`]
+//! like any vendor kernel: `prepare` is the shared FC validation, and
+//! `invoke` offloads to the compiled executable when the op matches the
+//! artifact's contract, falling back to the optimized Rust body otherwise
+//! — exactly how CMSIS-NN kernels bail to reference code on unsupported
+//! parameter combinations.
+//!
+//! The requantization multiplier/shift/bias are *runtime inputs* of the
+//! compiled computation, so one artifact serves any quantization
+//! parameters at that shape.
+
+use super::{CompiledComputation, XlaRuntime};
+use crate::error::{Error, Result};
+use crate::ops::opt_ops::fully_connected_i8_blocked;
+use crate::ops::ref_ops::fully_connected::{fully_connected_f32, prepare_fc, FcQuant};
+use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
+use crate::tensor::DType;
+
+/// FullyConnected kernel backed by an AOT XLA executable.
+///
+/// Owns its own PJRT client + executable, all accessed under one mutex.
+pub struct XlaFcKernel {
+    // Runtime kept alive alongside the executable (the executable holds an
+    // Rc into the client); both confined behind the Mutex.
+    inner: std::sync::Mutex<(XlaRuntime, CompiledComputation)>,
+    /// The artifact's fixed (batch, in_dim, out_dim).
+    shape: (usize, usize, usize),
+}
+
+// SAFETY: the xla crate's types are !Send/!Sync only because of raw
+// pointers and an internal Rc shared between client and executable. Both
+// halves of that Rc are owned by `inner` and every touch (execute,
+// literal transfer, drop) happens under the Mutex, so the Rc counts and
+// the underlying PJRT objects are never accessed concurrently. The PJRT C
+// API itself is thread-compatible under external synchronization.
+unsafe impl Send for XlaFcKernel {}
+unsafe impl Sync for XlaFcKernel {}
+
+impl XlaFcKernel {
+    /// Load the artifact and build the kernel (creates a private PJRT CPU
+    /// client). `shape` must match what
+    /// `python/compile/aot.py::emit_fc_int8_kernel` baked in.
+    pub fn load(
+        path: impl AsRef<std::path::Path>,
+        shape: (usize, usize, usize),
+    ) -> Result<Self> {
+        let runtime = XlaRuntime::cpu()?;
+        let exe = runtime.load_hlo_text(path)?;
+        Ok(XlaFcKernel { inner: std::sync::Mutex::new((runtime, exe)), shape })
+    }
+
+    /// True if this op instance can be offloaded: shape matches and the
+    /// zero points are 0 (the artifact bakes in_offset = out_offset = 0)
+    /// and no fused activation narrows the clamp.
+    fn offloadable(&self, batch: usize, in_dim: usize, out_dim: usize, d: &crate::ops::common::FcData) -> bool {
+        (batch, in_dim, out_dim) == self.shape
+            && d.input_offset == 0
+            && d.output_offset == 0
+            && d.filter_offset == 0
+            && d.act_min == i8::MIN as i32
+            && d.act_max == i8::MAX as i32
+    }
+}
+
+impl Kernel for XlaFcKernel {
+    fn flavor(&self) -> KernelFlavor {
+        KernelFlavor::Accelerated
+    }
+
+    fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
+        prepare_fc(ctx)
+    }
+
+    fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::FullyConnected(d) = ctx.op_data() else {
+            return Err(ctx.fail("op data missing"));
+        };
+        let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
+        let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
+        match ctx.input(0)?.dtype {
+            DType::I8 if self.offloadable(batch, in_dim, out_dim, d) => {
+                let (m, k, n) = self.shape;
+                let a = ctx.input_i8(0)?;
+                let w = ctx.input_i8(1)?;
+                let bias: Vec<i32> = if ctx.has_input(2) {
+                    ctx.input_i32(2)?.to_vec()
+                } else {
+                    vec![0; n]
+                };
+                let mult = vec![d.mult.multiplier; n];
+                let shift = vec![d.mult.shift; n];
+                let out = {
+                    let guard = self.inner.lock().map_err(|_| ctx.fail("xla kernel poisoned"))?;
+                    guard
+                        .1
+                        .run_i8_matmul(a, &[m, k], w, &[n, k], &bias, &mult, &shift)
+                        .map_err(|e| ctx.fail(format!("xla offload failed: {e}")))?
+                };
+                let output = ctx.output_i8(0)?;
+                if out.len() != output.len() {
+                    return Err(ctx.fail(format!(
+                        "xla returned {} elements, expected {}",
+                        out.len(),
+                        output.len()
+                    )));
+                }
+                output.copy_from_slice(&out);
+                Ok(())
+            }
+            DType::I8 => {
+                // Unsupported parameter combination: vendor fallback.
+                let q = FcQuant {
+                    input_offset: d.input_offset,
+                    filter_offset: d.filter_offset,
+                    output_offset: d.output_offset,
+                    mult: d.mult,
+                    act_min: d.act_min,
+                    act_max: d.act_max,
+                };
+                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                fully_connected_i8_blocked(batch, in_dim, out_dim, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+                Ok(())
+            }
+            DType::F32 => {
+                let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
+                fully_connected_f32(batch, in_dim, out_dim, d.fact, ctx.input_f32(0)?, ctx.input_f32(1)?, bias, ctx.output_f32(0)?);
+                Ok(())
+            }
+            other => Err(ctx.fail(format!("unsupported dtype {other}"))),
+        }
+    }
+}
+
+impl CompiledComputation {
+    /// Execute the int8 matmul artifact: a [m,k] i8, b [n,k] i8, bias/mult/
+    /// shift [n] i32 -> [m,n] i8.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_i8_matmul(
+        &self,
+        a: &[i8],
+        a_dims: &[usize],
+        b: &[i8],
+        b_dims: &[usize],
+        bias: &[i32],
+        mult: &[i32],
+        shift: &[i32],
+    ) -> Result<Vec<i8>> {
+        let lit_i8 = |data: &[i8], dims: &[usize]| -> Result<xla::Literal> {
+            // i8 lacks a NativeType impl in the crate; build from raw bytes.
+            // SAFETY: i8 and u8 have identical layout.
+            let raw: &[u8] =
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, raw)
+                .map_err(|e| Error::Xla(e.to_string()))
+        };
+        let lit_i32 = |data: &[i32]| -> Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(&[data.len() as i64])
+                .map_err(|e| Error::Xla(e.to_string()))
+        };
+        let inputs = vec![
+            lit_i8(a, a_dims)?,
+            lit_i8(b, b_dims)?,
+            lit_i32(bias)?,
+            lit_i32(mult)?,
+            lit_i32(shift)?,
+        ];
+        let result = self
+            .execute_literals(&inputs)
+            .map_err(|e| Error::Xla(format!("execute {}: {e}", self.name())))?;
+        let tuple = result.to_tuple().map_err(|e| Error::Xla(e.to_string()))?;
+        let first = tuple.into_iter().next().ok_or_else(|| Error::Xla("empty tuple".into()))?;
+        first.to_vec::<i8>().map_err(|e| Error::Xla(e.to_string()))
+    }
+}

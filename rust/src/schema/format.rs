@@ -1,0 +1,430 @@
+//! Operator codes and builtin-option layouts.
+//!
+//! Mirrors TFLite's builtin-operator enum and per-op option tables
+//! (§4.3.2: "it abstracts operator parameters from the arguments, which
+//! later pass to the functions that implement those operations"). Options
+//! are stored as small packed little-endian structs in the blob heap; each
+//! op spends "a few code lines executed at run time" decoding them —
+//! exactly the run-time-processing trade-off the paper describes.
+
+use crate::error::{Error, Result};
+
+/// Builtin operator codes. The numeric values are part of the TMF format
+/// and must stay in sync with `python/compile/tmf.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u32)]
+pub enum BuiltinOp {
+    /// 2-D convolution (NHWC).
+    Conv2d = 1,
+    /// Depthwise 2-D convolution.
+    DepthwiseConv2d = 2,
+    /// Fully connected / dense matmul.
+    FullyConnected = 3,
+    /// 2-D max pooling.
+    MaxPool2d = 4,
+    /// 2-D average pooling.
+    AvgPool2d = 5,
+    /// Softmax over the last dimension.
+    Softmax = 6,
+    /// Rectified linear unit.
+    Relu = 7,
+    /// ReLU clamped to 6.
+    Relu6 = 8,
+    /// Sigmoid.
+    Logistic = 9,
+    /// Elementwise add with broadcasting.
+    Add = 10,
+    /// Elementwise multiply with broadcasting.
+    Mul = 11,
+    /// Reshape (metadata-only; copies or aliases data).
+    Reshape = 12,
+    /// Zero padding (paddings supplied as an i32 tensor input).
+    Pad = 13,
+    /// Mean reduction over axes (axes supplied as an i32 tensor input).
+    Mean = 14,
+    /// Concatenation along an axis.
+    Concat = 15,
+    /// Float -> quantized conversion.
+    Quantize = 16,
+    /// Quantized -> float conversion.
+    Dequantize = 17,
+    /// Custom operator (resolved by name).
+    Custom = 18,
+    /// Elementwise subtract with broadcasting.
+    Sub = 19,
+    /// Elementwise maximum.
+    Maximum = 20,
+    /// Elementwise minimum.
+    Minimum = 21,
+    /// Hyperbolic tangent.
+    Tanh = 22,
+}
+
+impl BuiltinOp {
+    /// Decode a serialized opcode.
+    pub fn from_u32(v: u32) -> Result<Self> {
+        Ok(match v {
+            1 => BuiltinOp::Conv2d,
+            2 => BuiltinOp::DepthwiseConv2d,
+            3 => BuiltinOp::FullyConnected,
+            4 => BuiltinOp::MaxPool2d,
+            5 => BuiltinOp::AvgPool2d,
+            6 => BuiltinOp::Softmax,
+            7 => BuiltinOp::Relu,
+            8 => BuiltinOp::Relu6,
+            9 => BuiltinOp::Logistic,
+            10 => BuiltinOp::Add,
+            11 => BuiltinOp::Mul,
+            12 => BuiltinOp::Reshape,
+            13 => BuiltinOp::Pad,
+            14 => BuiltinOp::Mean,
+            15 => BuiltinOp::Concat,
+            16 => BuiltinOp::Quantize,
+            17 => BuiltinOp::Dequantize,
+            18 => BuiltinOp::Custom,
+            19 => BuiltinOp::Sub,
+            20 => BuiltinOp::Maximum,
+            21 => BuiltinOp::Minimum,
+            22 => BuiltinOp::Tanh,
+            _ => return Err(Error::malformed(format!("unknown opcode {v}"))),
+        })
+    }
+
+    /// Stable builtin name (diagnostics, resolver keys for custom ops).
+    pub const fn name(self) -> &'static str {
+        match self {
+            BuiltinOp::Conv2d => "CONV_2D",
+            BuiltinOp::DepthwiseConv2d => "DEPTHWISE_CONV_2D",
+            BuiltinOp::FullyConnected => "FULLY_CONNECTED",
+            BuiltinOp::MaxPool2d => "MAX_POOL_2D",
+            BuiltinOp::AvgPool2d => "AVERAGE_POOL_2D",
+            BuiltinOp::Softmax => "SOFTMAX",
+            BuiltinOp::Relu => "RELU",
+            BuiltinOp::Relu6 => "RELU6",
+            BuiltinOp::Logistic => "LOGISTIC",
+            BuiltinOp::Add => "ADD",
+            BuiltinOp::Mul => "MUL",
+            BuiltinOp::Reshape => "RESHAPE",
+            BuiltinOp::Pad => "PAD",
+            BuiltinOp::Mean => "MEAN",
+            BuiltinOp::Concat => "CONCATENATION",
+            BuiltinOp::Quantize => "QUANTIZE",
+            BuiltinOp::Dequantize => "DEQUANTIZE",
+            BuiltinOp::Custom => "CUSTOM",
+            BuiltinOp::Sub => "SUB",
+            BuiltinOp::Maximum => "MAXIMUM",
+            BuiltinOp::Minimum => "MINIMUM",
+            BuiltinOp::Tanh => "TANH",
+        }
+    }
+
+    /// All builtin (non-custom) ops, used to register full resolvers.
+    pub const ALL: [BuiltinOp; 21] = [
+        BuiltinOp::Conv2d,
+        BuiltinOp::DepthwiseConv2d,
+        BuiltinOp::FullyConnected,
+        BuiltinOp::MaxPool2d,
+        BuiltinOp::AvgPool2d,
+        BuiltinOp::Softmax,
+        BuiltinOp::Relu,
+        BuiltinOp::Relu6,
+        BuiltinOp::Logistic,
+        BuiltinOp::Add,
+        BuiltinOp::Mul,
+        BuiltinOp::Reshape,
+        BuiltinOp::Pad,
+        BuiltinOp::Mean,
+        BuiltinOp::Concat,
+        BuiltinOp::Quantize,
+        BuiltinOp::Dequantize,
+        BuiltinOp::Sub,
+        BuiltinOp::Maximum,
+        BuiltinOp::Minimum,
+        BuiltinOp::Tanh,
+    ];
+}
+
+/// Spatial padding scheme (TFLite semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Padding {
+    /// Output spatial extent = ceil(input / stride); zero-pad as needed.
+    #[default]
+    Same = 0,
+    /// No padding; output = floor((input - filter) / stride) + 1.
+    Valid = 1,
+}
+
+impl Padding {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Padding::Same,
+            1 => Padding::Valid,
+            _ => return Err(Error::malformed(format!("unknown padding tag {v}"))),
+        })
+    }
+}
+
+/// Fused activation function (TFLite semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Activation {
+    /// No clamping beyond the dtype range.
+    #[default]
+    None = 0,
+    /// max(0, x).
+    Relu = 1,
+    /// min(6, max(0, x)).
+    Relu6 = 2,
+}
+
+impl Activation {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Activation::None,
+            1 => Activation::Relu,
+            2 => Activation::Relu6,
+            _ => return Err(Error::malformed(format!("unknown activation tag {v}"))),
+        })
+    }
+}
+
+/// Options for conv-style ops (Conv2d, DepthwiseConv2d).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvOptions {
+    /// Padding scheme.
+    pub padding: Padding,
+    /// Fused activation.
+    pub activation: Activation,
+    /// Vertical stride.
+    pub stride_h: u32,
+    /// Horizontal stride.
+    pub stride_w: u32,
+    /// Vertical dilation.
+    pub dilation_h: u32,
+    /// Horizontal dilation.
+    pub dilation_w: u32,
+    /// Depthwise only: output channels per input channel.
+    pub depth_multiplier: u32,
+}
+
+/// Options for pooling ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolOptions {
+    /// Padding scheme.
+    pub padding: Padding,
+    /// Fused activation.
+    pub activation: Activation,
+    /// Vertical stride.
+    pub stride_h: u32,
+    /// Horizontal stride.
+    pub stride_w: u32,
+    /// Pooling window height.
+    pub filter_h: u32,
+    /// Pooling window width.
+    pub filter_w: u32,
+}
+
+/// Decoded builtin options for one operator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpOptions {
+    /// Conv2d / DepthwiseConv2d.
+    Conv(ConvOptions),
+    /// MaxPool2d / AvgPool2d.
+    Pool(PoolOptions),
+    /// FullyConnected.
+    FullyConnected {
+        /// Fused activation.
+        activation: Activation,
+    },
+    /// Softmax.
+    Softmax {
+        /// Exponent scaling factor.
+        beta: f32,
+    },
+    /// Add / Mul.
+    Elementwise {
+        /// Fused activation.
+        activation: Activation,
+    },
+    /// Concatenation.
+    Concat {
+        /// Concat axis (may be negative, TFLite-style).
+        axis: i32,
+        /// Fused activation.
+        activation: Activation,
+    },
+    /// Mean reduction.
+    Mean {
+        /// Keep reduced dimensions as size-1.
+        keep_dims: bool,
+    },
+    /// Ops with no options.
+    None,
+}
+
+fn rd_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+impl OpOptions {
+    /// Decode the packed options blob for `op`.
+    pub fn decode(op: BuiltinOp, raw: &[u8]) -> Result<OpOptions> {
+        let need = |n: usize| -> Result<()> {
+            if raw.len() < n {
+                Err(Error::malformed(format!(
+                    "options for {} too short: {} < {n}",
+                    op.name(),
+                    raw.len()
+                )))
+            } else {
+                Ok(())
+            }
+        };
+        Ok(match op {
+            BuiltinOp::Conv2d | BuiltinOp::DepthwiseConv2d => {
+                let n = if op == BuiltinOp::DepthwiseConv2d { 24 } else { 20 };
+                need(n)?;
+                OpOptions::Conv(ConvOptions {
+                    padding: Padding::from_u8(raw[0])?,
+                    activation: Activation::from_u8(raw[1])?,
+                    stride_h: rd_u32(raw, 4),
+                    stride_w: rd_u32(raw, 8),
+                    dilation_h: rd_u32(raw, 12),
+                    dilation_w: rd_u32(raw, 16),
+                    depth_multiplier: if op == BuiltinOp::DepthwiseConv2d {
+                        rd_u32(raw, 20)
+                    } else {
+                        1
+                    },
+                })
+            }
+            BuiltinOp::MaxPool2d | BuiltinOp::AvgPool2d => {
+                need(20)?;
+                OpOptions::Pool(PoolOptions {
+                    padding: Padding::from_u8(raw[0])?,
+                    activation: Activation::from_u8(raw[1])?,
+                    stride_h: rd_u32(raw, 4),
+                    stride_w: rd_u32(raw, 8),
+                    filter_h: rd_u32(raw, 12),
+                    filter_w: rd_u32(raw, 16),
+                })
+            }
+            BuiltinOp::FullyConnected => {
+                need(4)?;
+                OpOptions::FullyConnected { activation: Activation::from_u8(raw[0])? }
+            }
+            BuiltinOp::Softmax => {
+                need(4)?;
+                OpOptions::Softmax { beta: f32::from_le_bytes(raw[0..4].try_into().unwrap()) }
+            }
+            BuiltinOp::Add | BuiltinOp::Mul | BuiltinOp::Sub => {
+                need(4)?;
+                OpOptions::Elementwise { activation: Activation::from_u8(raw[0])? }
+            }
+            BuiltinOp::Concat => {
+                need(8)?;
+                OpOptions::Concat {
+                    axis: rd_u32(raw, 0) as i32,
+                    activation: Activation::from_u8(raw[4])?,
+                }
+            }
+            BuiltinOp::Mean => {
+                need(4)?;
+                OpOptions::Mean { keep_dims: raw[0] != 0 }
+            }
+            _ => OpOptions::None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_round_trip() {
+        for op in BuiltinOp::ALL {
+            assert_eq!(BuiltinOp::from_u32(op as u32).unwrap(), op);
+        }
+        assert_eq!(BuiltinOp::from_u32(18).unwrap(), BuiltinOp::Custom);
+        assert!(BuiltinOp::from_u32(0).is_err());
+        assert!(BuiltinOp::from_u32(999).is_err());
+    }
+
+    #[test]
+    fn conv_options_decode() {
+        let mut raw = vec![0u8; 20];
+        raw[0] = 1; // valid
+        raw[1] = 2; // relu6
+        raw[4..8].copy_from_slice(&2u32.to_le_bytes());
+        raw[8..12].copy_from_slice(&2u32.to_le_bytes());
+        raw[12..16].copy_from_slice(&1u32.to_le_bytes());
+        raw[16..20].copy_from_slice(&1u32.to_le_bytes());
+        let OpOptions::Conv(c) = OpOptions::decode(BuiltinOp::Conv2d, &raw).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(c.padding, Padding::Valid);
+        assert_eq!(c.activation, Activation::Relu6);
+        assert_eq!((c.stride_h, c.stride_w), (2, 2));
+        assert_eq!(c.depth_multiplier, 1);
+    }
+
+    #[test]
+    fn depthwise_reads_multiplier() {
+        let mut raw = vec![0u8; 24];
+        raw[4..8].copy_from_slice(&1u32.to_le_bytes());
+        raw[8..12].copy_from_slice(&1u32.to_le_bytes());
+        raw[12..16].copy_from_slice(&1u32.to_le_bytes());
+        raw[16..20].copy_from_slice(&1u32.to_le_bytes());
+        raw[20..24].copy_from_slice(&4u32.to_le_bytes());
+        let OpOptions::Conv(c) = OpOptions::decode(BuiltinOp::DepthwiseConv2d, &raw).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(c.depth_multiplier, 4);
+    }
+
+    #[test]
+    fn softmax_beta() {
+        let raw = 1.5f32.to_le_bytes();
+        let OpOptions::Softmax { beta } = OpOptions::decode(BuiltinOp::Softmax, &raw).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(beta, 1.5);
+    }
+
+    #[test]
+    fn concat_negative_axis() {
+        let mut raw = vec![0u8; 8];
+        raw[0..4].copy_from_slice(&(-1i32 as u32).to_le_bytes());
+        let OpOptions::Concat { axis, .. } = OpOptions::decode(BuiltinOp::Concat, &raw).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(axis, -1);
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(OpOptions::decode(BuiltinOp::Conv2d, &[0u8; 4]).is_err());
+        assert!(OpOptions::decode(BuiltinOp::Softmax, &[]).is_err());
+    }
+
+    #[test]
+    fn optionless_ops() {
+        assert_eq!(OpOptions::decode(BuiltinOp::Reshape, &[]).unwrap(), OpOptions::None);
+        assert_eq!(OpOptions::decode(BuiltinOp::Quantize, &[]).unwrap(), OpOptions::None);
+    }
+
+    #[test]
+    fn bad_enum_tags_rejected() {
+        let mut raw = vec![0u8; 20];
+        raw[0] = 9;
+        assert!(OpOptions::decode(BuiltinOp::Conv2d, &raw).is_err());
+        let mut raw = vec![0u8; 20];
+        raw[1] = 7;
+        assert!(OpOptions::decode(BuiltinOp::Conv2d, &raw).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! TMF ("Tiny Model Format") — the serialized model schema.
+//!
+//! The paper reuses TensorFlow Lite's FlatBuffer schema (§4.3) for its
+//! properties: memory-mapped zero-copy access, an accessor footprint of a
+//! couple of kilobytes, and a **topologically sorted operator list** so
+//! that execution is a single loop rather than graph scheduling (§4.3.2).
+//! FlatBuffers itself is unavailable in this environment, so TMF is a
+//! purpose-built binary format preserving exactly those properties
+//! (DESIGN.md §6.5):
+//!
+//! * little-endian, fixed-size records, absolute offsets — a reader needs
+//!   no unpacking step and no heap beyond the decoded metadata;
+//! * weights are 16-byte-aligned slices referenced in place;
+//! * a metadata section carries auxiliary blobs such as the offline
+//!   memory plan (§4.4.2).
+//!
+//! The Python writer lives in `python/compile/tmf.py`; the layouts here
+//! and there must match byte-for-byte (checked by round-trip tests and
+//! the exported-model integration tests).
+
+pub mod format;
+pub mod model;
+pub mod reader;
+pub mod validate;
+pub mod writer;
+
+pub use format::{Activation, BuiltinOp, OpOptions, Padding};
+pub use model::{Model, Operator};
+pub use writer::ModelBuilder;
+
+/// File magic: "TMF1".
+pub const MAGIC: [u8; 4] = *b"TMF1";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_SIZE: usize = 76;
+/// Fixed tensor record size in bytes.
+pub const TENSOR_RECORD_SIZE: usize = 40;
+/// Fixed operator record size in bytes.
+pub const OP_RECORD_SIZE: usize = 40;
+/// Fixed buffer record size in bytes.
+pub const BUFFER_RECORD_SIZE: usize = 16;
+/// Fixed metadata record size in bytes.
+pub const META_RECORD_SIZE: usize = 16;
+/// Sentinel buffer index meaning "no constant data" (activation tensor).
+pub const NO_BUFFER: u32 = u32::MAX;
+/// Alignment guaranteed for buffer (weight) data within the file.
+pub const BUFFER_ALIGN: usize = 16;
+/// Metadata key under which the offline memory plan is stored (§4.4.2).
+pub const OFFLINE_PLAN_KEY: &str = "OfflineMemoryAllocation";

@@ -1,0 +1,372 @@
+//! The in-memory model: decoded metadata over zero-copy weight bytes.
+//!
+//! `Model` owns the serialized bytes and decodes the *metadata* (tensor
+//! records, operator list, I/O indices) once at load time — the analog of
+//! FlatBuffer accessor structs. Weight buffers are **never copied**: they
+//! are handed to kernels as slices into the original bytes, matching the
+//! paper's memory-mapped model representation (§4.3.1: models compile into
+//! the binary as C arrays and are referenced in place).
+
+use super::format::{BuiltinOp, OpOptions};
+use super::reader::ByteReader;
+use super::{
+    BUFFER_RECORD_SIZE, HEADER_SIZE, MAGIC, META_RECORD_SIZE, NO_BUFFER, OFFLINE_PLAN_KEY,
+    OP_RECORD_SIZE, TENSOR_RECORD_SIZE, VERSION,
+};
+use crate::error::{Error, Result};
+use crate::tensor::{DType, QuantParams, Shape, TensorMeta};
+
+/// One operation in the model's (topologically sorted) execution list.
+#[derive(Debug, Clone)]
+pub struct Operator {
+    /// Builtin opcode.
+    pub opcode: BuiltinOp,
+    /// Input tensor indices; `-1` marks an omitted optional input.
+    pub inputs: Vec<i32>,
+    /// Output tensor indices.
+    pub outputs: Vec<i32>,
+    /// Decoded builtin options.
+    pub options: OpOptions,
+    /// Name for `BuiltinOp::Custom` operators.
+    pub custom_name: Option<String>,
+}
+
+impl Operator {
+    /// The resolver key: builtin name, or the custom name.
+    pub fn key(&self) -> &str {
+        self.custom_name.as_deref().unwrap_or(self.opcode.name())
+    }
+}
+
+/// Location of one weight buffer inside the serialized bytes.
+#[derive(Debug, Clone, Copy)]
+struct BufferLoc {
+    off: usize,
+    len: usize,
+}
+
+/// A loaded model.
+pub struct Model {
+    data: Vec<u8>,
+    tensors: Vec<TensorMeta>,
+    operators: Vec<Operator>,
+    inputs: Vec<i32>,
+    outputs: Vec<i32>,
+    buffers: Vec<BufferLoc>,
+    metadata: Vec<(String, (usize, usize))>,
+    description: String,
+}
+
+impl Model {
+    /// Load a model, copying the bytes (use [`Model::from_vec`] to avoid
+    /// the copy when you already own the data).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Self::from_vec(bytes.to_vec())
+    }
+
+    /// Load a model file from disk (host-side convenience).
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_vec(std::fs::read(path)?)
+    }
+
+    /// Load a model from owned bytes without copying.
+    pub fn from_vec(data: Vec<u8>) -> Result<Self> {
+        let r = ByteReader::new(&data);
+        if r.len() < HEADER_SIZE {
+            return Err(Error::malformed(format!("file too small: {} bytes", r.len())));
+        }
+        if r.bytes(0, 4)? != MAGIC {
+            return Err(Error::malformed("bad magic (expected \"TMF1\")"));
+        }
+        let version = r.u32(4)?;
+        if version != VERSION {
+            return Err(Error::malformed(format!("unsupported version {version}")));
+        }
+        // Header field pairs: (offset, count/len) per section.
+        let (tensors_off, n_tensors) = (r.u32(20)? as usize, r.u32(24)? as usize);
+        let (buffers_off, n_buffers) = (r.u32(28)? as usize, r.u32(32)? as usize);
+        let (ops_off, n_ops) = (r.u32(36)? as usize, r.u32(40)? as usize);
+        let (inputs_off, n_inputs) = (r.u32(44)? as usize, r.u32(48)? as usize);
+        let (outputs_off, n_outputs) = (r.u32(52)? as usize, r.u32(56)? as usize);
+        let (meta_off, n_meta) = (r.u32(60)? as usize, r.u32(64)? as usize);
+        let (desc_off, desc_len) = (r.u32(68)? as usize, r.u32(72)? as usize);
+
+        // Sanity: every section's record array must fit inside the file
+        // BEFORE any `Vec::with_capacity` — a corrupted count must become
+        // an error, not an allocation abort (found by fuzzing).
+        let check_section = |off: usize, count: usize, rec: usize, what: &str| -> Result<()> {
+            let end = count
+                .checked_mul(rec)
+                .and_then(|sz| off.checked_add(sz))
+                .ok_or_else(|| Error::malformed(format!("{what} section size overflow")))?;
+            if end > r.len() {
+                return Err(Error::malformed(format!(
+                    "{what} section ({count} records at {off}) exceeds file size {}",
+                    r.len()
+                )));
+            }
+            Ok(())
+        };
+        check_section(tensors_off, n_tensors, TENSOR_RECORD_SIZE, "tensor")?;
+        check_section(buffers_off, n_buffers, BUFFER_RECORD_SIZE, "buffer")?;
+        check_section(ops_off, n_ops, OP_RECORD_SIZE, "operator")?;
+        check_section(inputs_off, n_inputs, 4, "input")?;
+        check_section(outputs_off, n_outputs, 4, "output")?;
+        check_section(meta_off, n_meta, META_RECORD_SIZE, "metadata")?;
+        check_section(desc_off, desc_len, 1, "description")?;
+
+        // Buffers.
+        let mut buffers = Vec::with_capacity(n_buffers);
+        for i in 0..n_buffers {
+            let base = buffers_off + i * BUFFER_RECORD_SIZE;
+            let off = r.u64(base)? as usize;
+            let len = r.u64(base + 8)? as usize;
+            // Validate range up front so kernel access can't fail later.
+            r.bytes(off, len)?;
+            buffers.push(BufferLoc { off, len });
+        }
+
+        // Tensors.
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for i in 0..n_tensors {
+            let base = tensors_off + i * TENSOR_RECORD_SIZE;
+            let name_off = r.u32(base)? as usize;
+            let name_len = r.u32(base + 4)? as usize;
+            let dtype = DType::from_u8(r.u8(base + 8)?)?;
+            let flags = r.u8(base + 9)?;
+            let ndim = r.u32(base + 12)? as usize;
+            let dims_off = r.u32(base + 16)? as usize;
+            let buffer = r.u32(base + 20)?;
+            let qcount = r.u32(base + 24)? as usize;
+            let qscales_off = r.u32(base + 28)? as usize;
+            let qzps_off = r.u32(base + 32)? as usize;
+            let qaxis = r.i32(base + 36)?;
+
+            if ndim > 8 {
+                return Err(Error::malformed(format!("tensor {i}: rank {ndim} > 8")));
+            }
+            let dims = r.i32_array(dims_off, ndim)?;
+            let shape = Shape::checked(dims)
+                .map_err(|e| Error::malformed(format!("tensor {i}: {e}")))?;
+            let quant = if qcount > 0 {
+                let scales = r.f32_array(qscales_off, qcount)?;
+                let zero_points = r.i32_array(qzps_off, qcount)?;
+                // Corrupted quant params must not reach kernels: scales
+                // must be finite/positive, zero points in the 16-bit range
+                // (covers every quantized dtype; found by fuzzing).
+                for &s in &scales {
+                    if !s.is_finite() || s <= 0.0 {
+                        return Err(Error::malformed(format!(
+                            "tensor {i}: invalid quant scale {s}"
+                        )));
+                    }
+                }
+                for &z in &zero_points {
+                    if !(-32768..=32767).contains(&z) {
+                        return Err(Error::malformed(format!(
+                            "tensor {i}: zero point {z} out of range"
+                        )));
+                    }
+                }
+                if qaxis >= 0 && qcount > 1 {
+                    Some(QuantParams::per_axis(scales, zero_points, qaxis as usize))
+                } else {
+                    Some(QuantParams { scales, zero_points, axis: None })
+                }
+            } else {
+                None
+            };
+            let buffer = if buffer == NO_BUFFER {
+                None
+            } else {
+                if buffer as usize >= n_buffers {
+                    return Err(Error::malformed(format!(
+                        "tensor {i}: buffer index {buffer} out of range ({n_buffers} buffers)"
+                    )));
+                }
+                Some(buffer)
+            };
+            tensors.push(TensorMeta {
+                name: r.string(name_off, name_len)?,
+                dtype,
+                shape,
+                buffer,
+                quant,
+                is_variable: flags & 1 != 0,
+            });
+        }
+
+        // Operators (the topologically sorted execution list).
+        let mut operators = Vec::with_capacity(n_ops);
+        for i in 0..n_ops {
+            let base = ops_off + i * OP_RECORD_SIZE;
+            let opcode = BuiltinOp::from_u32(r.u32(base)?)?;
+            let n_in = r.u32(base + 4)? as usize;
+            let in_off = r.u32(base + 8)? as usize;
+            let n_out = r.u32(base + 12)? as usize;
+            let out_off = r.u32(base + 16)? as usize;
+            let opt_off = r.u32(base + 20)? as usize;
+            let opt_len = r.u32(base + 24)? as usize;
+            let cname_off = r.u32(base + 28)? as usize;
+            let cname_len = r.u32(base + 32)? as usize;
+
+            let inputs = r.i32_array(in_off, n_in)?;
+            let outputs = r.i32_array(out_off, n_out)?;
+            for (&t, what) in inputs.iter().zip(std::iter::repeat("input")).chain(
+                outputs.iter().zip(std::iter::repeat("output")),
+            ) {
+                if t != -1 && (t < 0 || t as usize >= n_tensors) {
+                    return Err(Error::malformed(format!(
+                        "op {i} ({}): {what} tensor index {t} out of range",
+                        opcode.name()
+                    )));
+                }
+            }
+            let options = OpOptions::decode(opcode, r.bytes(opt_off, opt_len)?)?;
+            let custom_name = if cname_len > 0 {
+                Some(r.string(cname_off, cname_len)?)
+            } else {
+                None
+            };
+            operators.push(Operator { opcode, inputs, outputs, options, custom_name });
+        }
+
+        let inputs = r.i32_array(inputs_off, n_inputs)?;
+        let outputs = r.i32_array(outputs_off, n_outputs)?;
+        for &t in inputs.iter().chain(outputs.iter()) {
+            if t < 0 || t as usize >= n_tensors {
+                return Err(Error::malformed(format!("graph I/O tensor index {t} out of range")));
+            }
+        }
+
+        let mut metadata = Vec::with_capacity(n_meta);
+        for i in 0..n_meta {
+            let base = meta_off + i * META_RECORD_SIZE;
+            let key = r.string(r.u32(base)? as usize, r.u32(base + 4)? as usize)?;
+            let val_off = r.u32(base + 8)? as usize;
+            let val_len = r.u32(base + 12)? as usize;
+            r.bytes(val_off, val_len)?;
+            metadata.push((key, (val_off, val_len)));
+        }
+        let description = r.string(desc_off, desc_len)?;
+
+        Ok(Model { data, tensors, operators, inputs, outputs, buffers, metadata, description })
+    }
+
+    /// Tensor metadata table.
+    pub fn tensors(&self) -> &[TensorMeta] {
+        &self.tensors
+    }
+
+    /// One tensor's metadata.
+    pub fn tensor(&self, idx: usize) -> Result<&TensorMeta> {
+        self.tensors
+            .get(idx)
+            .ok_or_else(|| Error::InvalidTensor(format!("tensor index {idx} out of range")))
+    }
+
+    /// The topologically sorted operator list.
+    pub fn operators(&self) -> &[Operator] {
+        &self.operators
+    }
+
+    /// Graph input tensor indices.
+    pub fn inputs(&self) -> &[i32] {
+        &self.inputs
+    }
+
+    /// Graph output tensor indices.
+    pub fn outputs(&self) -> &[i32] {
+        &self.outputs
+    }
+
+    /// Model description string.
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    /// Raw serialized bytes (used by the interpreter to precompute
+    /// constant-tensor data locations).
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Offset and length of a weight buffer within [`Model::data`].
+    pub fn buffer_range(&self, idx: u32) -> Result<(usize, usize)> {
+        let loc = self
+            .buffers
+            .get(idx as usize)
+            .ok_or_else(|| Error::InvalidTensor(format!("buffer index {idx} out of range")))?;
+        Ok((loc.off, loc.len))
+    }
+
+    /// Zero-copy access to a weight buffer.
+    pub fn buffer(&self, idx: u32) -> Result<&[u8]> {
+        let loc = self
+            .buffers
+            .get(idx as usize)
+            .ok_or_else(|| Error::InvalidTensor(format!("buffer index {idx} out of range")))?;
+        Ok(&self.data[loc.off..loc.off + loc.len])
+    }
+
+    /// Constant data for a tensor, if it has any.
+    pub fn tensor_data(&self, idx: usize) -> Result<Option<&[u8]>> {
+        let t = self.tensor(idx)?;
+        match t.buffer {
+            Some(b) => {
+                let data = self.buffer(b)?;
+                if data.len() != t.num_bytes() {
+                    return Err(Error::malformed(format!(
+                        "tensor {idx} ('{}'): buffer is {} bytes, expected {}",
+                        t.name,
+                        data.len(),
+                        t.num_bytes()
+                    )));
+                }
+                Ok(Some(data))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Look up a metadata blob by key.
+    pub fn metadata(&self, key: &str) -> Option<&[u8]> {
+        self.metadata
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|&(_, (off, len))| &self.data[off..off + len])
+    }
+
+    /// All metadata keys.
+    pub fn metadata_keys(&self) -> impl Iterator<Item = &str> {
+        self.metadata.iter().map(|(k, _)| k.as_str())
+    }
+
+    /// The offline memory plan (one i32 arena offset per tensor, `-1` for
+    /// tensors the runtime should plan itself), if the model carries one.
+    pub fn offline_plan(&self) -> Option<Vec<i32>> {
+        let raw = self.metadata(OFFLINE_PLAN_KEY)?;
+        if raw.len() % 4 != 0 {
+            return None;
+        }
+        Some(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Size of the serialized model in bytes (the "flash" footprint).
+    pub fn serialized_size(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl std::fmt::Debug for Model {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Model")
+            .field("description", &self.description)
+            .field("tensors", &self.tensors.len())
+            .field("operators", &self.operators.len())
+            .field("inputs", &self.inputs)
+            .field("outputs", &self.outputs)
+            .field("bytes", &self.data.len())
+            .finish()
+    }
+}

@@ -1,0 +1,136 @@
+//! Bounds-checked little-endian readers over the raw model bytes.
+//!
+//! All offsets in TMF are absolute file offsets; every access is checked so
+//! a truncated or corrupted model yields `Error::MalformedModel` instead of
+//! a panic (the framework must never crash the host application, §4.4.1).
+
+use crate::error::{Error, Result};
+
+/// A bounds-checked view over the serialized model bytes.
+#[derive(Clone, Copy)]
+pub struct ByteReader<'a> {
+    data: &'a [u8],
+}
+
+impl<'a> ByteReader<'a> {
+    /// Wrap a byte slice.
+    pub fn new(data: &'a [u8]) -> Self {
+        ByteReader { data }
+    }
+
+    /// Total length.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Fetch `len` bytes at `off`.
+    pub fn bytes(&self, off: usize, len: usize) -> Result<&'a [u8]> {
+        let end = off.checked_add(len).ok_or_else(|| Error::malformed("offset overflow"))?;
+        self.data
+            .get(off..end)
+            .ok_or_else(|| Error::malformed(format!("range {off}..{end} out of bounds (len {})", self.data.len())))
+    }
+
+    /// Read a u8.
+    pub fn u8(&self, off: usize) -> Result<u8> {
+        Ok(self.bytes(off, 1)?[0])
+    }
+
+    /// Read a little-endian u16.
+    pub fn u16(&self, off: usize) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(off, 2)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u32.
+    pub fn u32(&self, off: usize) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(off, 4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian i32.
+    pub fn i32(&self, off: usize) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(off, 4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u64.
+    pub fn u64(&self, off: usize) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(off, 8)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian f32.
+    pub fn f32(&self, off: usize) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(off, 4)?.try_into().unwrap()))
+    }
+
+    /// Read `count` little-endian i32s.
+    pub fn i32_array(&self, off: usize, count: usize) -> Result<Vec<i32>> {
+        let raw = self.bytes(off, count.checked_mul(4).ok_or_else(|| Error::malformed("array size overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read `count` little-endian f32s.
+    pub fn f32_array(&self, off: usize, count: usize) -> Result<Vec<f32>> {
+        let raw = self.bytes(off, count.checked_mul(4).ok_or_else(|| Error::malformed("array size overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read a UTF-8 string (lossy: invalid bytes are replaced, names are
+    /// diagnostic-only).
+    pub fn string(&self, off: usize, len: usize) -> Result<String> {
+        Ok(String::from_utf8_lossy(self.bytes(off, len)?).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_reads() {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x01020304u32.to_le_bytes());
+        b.extend_from_slice(&(-7i32).to_le_bytes());
+        b.extend_from_slice(&2.5f32.to_le_bytes());
+        b.extend_from_slice(&0xA1B2C3D4E5F60718u64.to_le_bytes());
+        let r = ByteReader::new(&b);
+        assert_eq!(r.u32(0).unwrap(), 0x01020304);
+        assert_eq!(r.i32(4).unwrap(), -7);
+        assert_eq!(r.f32(8).unwrap(), 2.5);
+        assert_eq!(r.u64(12).unwrap(), 0xA1B2C3D4E5F60718);
+        assert_eq!(r.u8(0).unwrap(), 0x04);
+        assert_eq!(r.u16(0).unwrap(), 0x0304);
+    }
+
+    #[test]
+    fn out_of_bounds_is_error_not_panic() {
+        let r = ByteReader::new(&[0u8; 4]);
+        assert!(r.u32(1).is_err());
+        assert!(r.u64(0).is_err());
+        assert!(r.bytes(4, 1).is_err());
+        assert!(r.bytes(usize::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn arrays() {
+        let mut b = Vec::new();
+        for v in [1i32, -2, 3] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        let r = ByteReader::new(&b);
+        assert_eq!(r.i32_array(0, 3).unwrap(), vec![1, -2, 3]);
+        assert!(r.i32_array(0, 4).is_err());
+        assert!(r.f32_array(4, usize::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn strings() {
+        let r = ByteReader::new(b"hello");
+        assert_eq!(r.string(0, 5).unwrap(), "hello");
+        assert_eq!(r.string(1, 3).unwrap(), "ell");
+        assert!(r.string(0, 6).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Structural model validation beyond what loading enforces.
+//!
+//! Loading (`Model::from_bytes`) already guarantees memory safety: every
+//! offset is bounds-checked and every tensor index is in range. This module
+//! checks *graph-level* invariants the interpreter relies on:
+//!
+//! * the operator list is topologically consistent — every non-constant
+//!   op input is either a graph input, a variable, or produced by an
+//!   **earlier** op (the paper's sorted-list representation, §4.3.2);
+//! * no tensor is written by two ops;
+//! * graph outputs are actually produced;
+//! * constant tensors are never written.
+
+use super::model::Model;
+use crate::error::{Error, Result};
+
+/// A validation report; `issues` is empty for a well-formed model.
+#[derive(Debug, Default)]
+pub struct ValidationReport {
+    /// Human-readable descriptions of each violated invariant.
+    pub issues: Vec<String>,
+}
+
+impl ValidationReport {
+    /// True when no invariant was violated.
+    pub fn is_ok(&self) -> bool {
+        self.issues.is_empty()
+    }
+}
+
+/// Validate graph-level invariants. Returns an error carrying the first
+/// issue if any check fails; use [`validate_report`] for the full list.
+pub fn validate(model: &Model) -> Result<()> {
+    let report = validate_report(model);
+    match report.issues.first() {
+        None => Ok(()),
+        Some(first) => Err(Error::malformed(format!(
+            "{first} ({} issue(s) total)",
+            report.issues.len()
+        ))),
+    }
+}
+
+/// Run all graph-level checks and collect every violation.
+pub fn validate_report(model: &Model) -> ValidationReport {
+    let mut report = ValidationReport::default();
+    let n = model.tensors().len();
+
+    // Tensor availability state as we walk the sorted op list.
+    let mut available = vec![false; n];
+    let mut written_by: Vec<Option<usize>> = vec![None; n];
+
+    for &i in model.inputs() {
+        available[i as usize] = true;
+    }
+    for (idx, t) in model.tensors().iter().enumerate() {
+        if t.buffer.is_some() || t.is_variable {
+            available[idx] = true;
+        }
+    }
+
+    for (op_idx, op) in model.operators().iter().enumerate() {
+        for &t in &op.inputs {
+            if t == -1 {
+                continue; // omitted optional input
+            }
+            if !available[t as usize] {
+                report.issues.push(format!(
+                    "op #{op_idx} ({}) reads tensor {t} ('{}') before it is produced — \
+                     operator list is not topologically sorted",
+                    op.key(),
+                    model.tensors()[t as usize].name
+                ));
+            }
+        }
+        for &t in &op.outputs {
+            let ti = t as usize;
+            let meta = &model.tensors()[ti];
+            if meta.buffer.is_some() {
+                report.issues.push(format!(
+                    "op #{op_idx} ({}) writes constant tensor {t} ('{}')",
+                    op.key(),
+                    meta.name
+                ));
+            }
+            if let Some(prev) = written_by[ti] {
+                if !meta.is_variable {
+                    report.issues.push(format!(
+                        "tensor {t} ('{}') written by both op #{prev} and op #{op_idx}",
+                        meta.name
+                    ));
+                }
+            }
+            written_by[ti] = Some(op_idx);
+            available[ti] = true;
+        }
+    }
+
+    for &t in model.outputs() {
+        if !available[t as usize] {
+            report.issues.push(format!(
+                "graph output tensor {t} ('{}') is never produced",
+                model.tensors()[t as usize].name
+            ));
+        }
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::schema::{BuiltinOp, Model, ModelBuilder};
+    use crate::tensor::DType;
+
+    fn relu_chain(order_swapped: bool) -> Model {
+        let mut b = ModelBuilder::new("chain");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("mid", DType::F32, &[4], None);
+        let t2 = b.add_tensor("out", DType::F32, &[4], None);
+        if order_swapped {
+            b.add_op(BuiltinOp::Relu, &[t1], &[t2], vec![]);
+            b.add_op(BuiltinOp::Relu, &[t0], &[t1], vec![]);
+        } else {
+            b.add_op(BuiltinOp::Relu, &[t0], &[t1], vec![]);
+            b.add_op(BuiltinOp::Relu, &[t1], &[t2], vec![]);
+        }
+        b.set_io(&[t0], &[t2]);
+        Model::from_bytes(&b.finish()).unwrap()
+    }
+
+    #[test]
+    fn sorted_chain_validates() {
+        assert!(super::validate(&relu_chain(false)).is_ok());
+    }
+
+    #[test]
+    fn unsorted_chain_rejected() {
+        let err = super::validate(&relu_chain(true)).unwrap_err();
+        assert!(err.to_string().contains("topologically"), "{err}");
+    }
+
+    #[test]
+    fn double_write_detected() {
+        let mut b = ModelBuilder::new("dw");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("mid", DType::F32, &[4], None);
+        b.add_op(BuiltinOp::Relu, &[t0], &[t1], vec![]);
+        b.add_op(BuiltinOp::Relu6, &[t0], &[t1], vec![]);
+        b.set_io(&[t0], &[t1]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let report = super::validate_report(&m);
+        assert_eq!(report.issues.len(), 1);
+        assert!(report.issues[0].contains("written by both"));
+    }
+
+    #[test]
+    fn unproduced_output_detected() {
+        let mut b = ModelBuilder::new("uo");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("never", DType::F32, &[4], None);
+        b.set_io(&[t0], &[t1]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(super::validate(&m).is_err());
+    }
+
+    #[test]
+    fn constant_write_detected() {
+        let mut b = ModelBuilder::new("cw");
+        let buf = b.add_buffer(&[0u8; 16]);
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("const", DType::F32, &[4], Some(buf));
+        b.add_op(BuiltinOp::Relu, &[t0], &[t1], vec![]);
+        b.set_io(&[t0], &[t1]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let report = super::validate_report(&m);
+        assert!(report.issues.iter().any(|s| s.contains("constant")));
+    }
+
+    #[test]
+    fn optional_inputs_allowed() {
+        let mut b = ModelBuilder::new("opt");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("out", DType::F32, &[4], None);
+        b.add_op(BuiltinOp::Relu, &[t0, -1], &[t1], vec![]);
+        b.set_io(&[t0], &[t1]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(super::validate(&m).is_ok());
+    }
+}

@@ -1,0 +1,498 @@
+//! TMF writer — builds serialized models in memory.
+//!
+//! Host-side tooling only (tests, benches, synthetic workload generators);
+//! the embedded-style runtime never serializes. The authoritative exporter
+//! is `python/compile/tmf.py`; this writer emits the identical layout so
+//! round-trip tests in Rust pin the format independent of Python.
+
+use super::format::{Activation, BuiltinOp, Padding};
+use super::{
+    BUFFER_ALIGN, BUFFER_RECORD_SIZE, HEADER_SIZE, MAGIC, META_RECORD_SIZE, NO_BUFFER,
+    OP_RECORD_SIZE, TENSOR_RECORD_SIZE, VERSION,
+};
+use crate::tensor::{DType, QuantParams};
+
+/// Tensor under construction.
+struct TensorSpec {
+    name: String,
+    dtype: DType,
+    dims: Vec<i32>,
+    buffer: Option<u32>,
+    quant: Option<QuantParams>,
+    is_variable: bool,
+}
+
+/// Operator under construction.
+struct OpSpec {
+    opcode: BuiltinOp,
+    inputs: Vec<i32>,
+    outputs: Vec<i32>,
+    options: Vec<u8>,
+    custom_name: Option<String>,
+}
+
+/// Builder for serialized TMF models.
+///
+/// ```
+/// use tfmicro::schema::{ModelBuilder, BuiltinOp};
+/// use tfmicro::tensor::DType;
+///
+/// let mut b = ModelBuilder::new("tiny");
+/// let w = b.add_buffer(&[1i8 as u8; 4]);
+/// let t0 = b.add_tensor("in", DType::F32, &[1, 4], None);
+/// let _ = b.add_tensor("w", DType::I8, &[4], Some(w));
+/// let t2 = b.add_tensor("out", DType::F32, &[1, 4], None);
+/// b.add_op(BuiltinOp::Relu, &[t0], &[t2], vec![]);
+/// b.set_io(&[t0], &[t2]);
+/// let bytes = b.finish();
+/// assert!(tfmicro::schema::Model::from_bytes(&bytes).is_ok());
+/// ```
+pub struct ModelBuilder {
+    description: String,
+    tensors: Vec<TensorSpec>,
+    buffers: Vec<Vec<u8>>,
+    ops: Vec<OpSpec>,
+    inputs: Vec<i32>,
+    outputs: Vec<i32>,
+    metadata: Vec<(String, Vec<u8>)>,
+}
+
+impl ModelBuilder {
+    /// Start a new model.
+    pub fn new(description: &str) -> Self {
+        ModelBuilder {
+            description: description.to_string(),
+            tensors: Vec::new(),
+            // Buffer 0 is always the empty buffer, mirroring TFLite.
+            buffers: vec![Vec::new()],
+            ops: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            metadata: Vec::new(),
+        }
+    }
+
+    /// Add a constant-data buffer; returns its index.
+    pub fn add_buffer(&mut self, data: &[u8]) -> u32 {
+        self.buffers.push(data.to_vec());
+        (self.buffers.len() - 1) as u32
+    }
+
+    /// Add a tensor; returns its index.
+    pub fn add_tensor(&mut self, name: &str, dtype: DType, dims: &[i32], buffer: Option<u32>) -> i32 {
+        self.tensors.push(TensorSpec {
+            name: name.to_string(),
+            dtype,
+            dims: dims.to_vec(),
+            buffer,
+            quant: None,
+            is_variable: false,
+        });
+        (self.tensors.len() - 1) as i32
+    }
+
+    /// Add a quantized tensor; returns its index.
+    pub fn add_quant_tensor(
+        &mut self,
+        name: &str,
+        dtype: DType,
+        dims: &[i32],
+        buffer: Option<u32>,
+        quant: QuantParams,
+    ) -> i32 {
+        let idx = self.add_tensor(name, dtype, dims, buffer);
+        self.tensors[idx as usize].quant = Some(quant);
+        idx
+    }
+
+    /// Mark a tensor as a variable (state persists across invokes).
+    pub fn set_variable(&mut self, tensor: i32) {
+        self.tensors[tensor as usize].is_variable = true;
+    }
+
+    /// Append an operator to the execution list (order = execution order).
+    pub fn add_op(&mut self, opcode: BuiltinOp, inputs: &[i32], outputs: &[i32], options: Vec<u8>) {
+        self.ops.push(OpSpec {
+            opcode,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            options,
+            custom_name: None,
+        });
+    }
+
+    /// Append a custom operator resolved by `name`.
+    pub fn add_custom_op(&mut self, name: &str, inputs: &[i32], outputs: &[i32], options: Vec<u8>) {
+        self.ops.push(OpSpec {
+            opcode: BuiltinOp::Custom,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            options,
+            custom_name: Some(name.to_string()),
+        });
+    }
+
+    /// Set the graph inputs and outputs.
+    pub fn set_io(&mut self, inputs: &[i32], outputs: &[i32]) {
+        self.inputs = inputs.to_vec();
+        self.outputs = outputs.to_vec();
+    }
+
+    /// Attach a metadata blob.
+    pub fn add_metadata(&mut self, key: &str, value: &[u8]) {
+        self.metadata.push((key.to_string(), value.to_vec()));
+    }
+
+    /// Serialize.
+    pub fn finish(self) -> Vec<u8> {
+        // Layout: header | tensor records | op records | buffer records |
+        //         meta records | io arrays | blob heap | aligned buffers.
+        let tensors_off = HEADER_SIZE;
+        let ops_off = tensors_off + self.tensors.len() * TENSOR_RECORD_SIZE;
+        let bufrec_off = ops_off + self.ops.len() * OP_RECORD_SIZE;
+        let meta_off = bufrec_off + self.buffers.len() * BUFFER_RECORD_SIZE;
+        let inputs_off = meta_off + self.metadata.len() * META_RECORD_SIZE;
+        let outputs_off = inputs_off + self.inputs.len() * 4;
+        let blob_base = outputs_off + self.outputs.len() * 4;
+
+        // Build the blob heap, tracking (absolute_off, len) per insert.
+        let mut blob: Vec<u8> = Vec::new();
+        let put = |blob: &mut Vec<u8>, data: &[u8]| -> (u32, u32) {
+            let off = (blob_base + blob.len()) as u32;
+            blob.extend_from_slice(data);
+            (off, data.len() as u32)
+        };
+
+        let mut tensor_records = Vec::with_capacity(self.tensors.len());
+        for t in &self.tensors {
+            let (name_off, name_len) = put(&mut blob, t.name.as_bytes());
+            let dims_bytes: Vec<u8> = t.dims.iter().flat_map(|d| d.to_le_bytes()).collect();
+            let (dims_off, _) = put(&mut blob, &dims_bytes);
+            let (qcount, qs_off, qz_off, qaxis) = match &t.quant {
+                Some(q) => {
+                    let sb: Vec<u8> = q.scales.iter().flat_map(|s| s.to_le_bytes()).collect();
+                    let zb: Vec<u8> = q.zero_points.iter().flat_map(|z| z.to_le_bytes()).collect();
+                    let (so, _) = put(&mut blob, &sb);
+                    let (zo, _) = put(&mut blob, &zb);
+                    (q.scales.len() as u32, so, zo, q.axis.map(|a| a as i32).unwrap_or(-1))
+                }
+                None => (0, 0, 0, -1),
+            };
+            let mut rec = Vec::with_capacity(TENSOR_RECORD_SIZE);
+            rec.extend_from_slice(&name_off.to_le_bytes());
+            rec.extend_from_slice(&name_len.to_le_bytes());
+            rec.push(t.dtype as u8);
+            rec.push(u8::from(t.is_variable));
+            rec.extend_from_slice(&[0u8; 2]);
+            rec.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            rec.extend_from_slice(&dims_off.to_le_bytes());
+            rec.extend_from_slice(&t.buffer.unwrap_or(NO_BUFFER).to_le_bytes());
+            rec.extend_from_slice(&qcount.to_le_bytes());
+            rec.extend_from_slice(&qs_off.to_le_bytes());
+            rec.extend_from_slice(&qz_off.to_le_bytes());
+            rec.extend_from_slice(&qaxis.to_le_bytes());
+            debug_assert_eq!(rec.len(), TENSOR_RECORD_SIZE);
+            tensor_records.push(rec);
+        }
+
+        let mut op_records = Vec::with_capacity(self.ops.len());
+        for op in &self.ops {
+            let in_bytes: Vec<u8> = op.inputs.iter().flat_map(|i| i.to_le_bytes()).collect();
+            let out_bytes: Vec<u8> = op.outputs.iter().flat_map(|i| i.to_le_bytes()).collect();
+            let (in_off, _) = put(&mut blob, &in_bytes);
+            let (out_off, _) = put(&mut blob, &out_bytes);
+            let (opt_off, opt_len) = put(&mut blob, &op.options);
+            let (cn_off, cn_len) = match &op.custom_name {
+                Some(n) => put(&mut blob, n.as_bytes()),
+                None => (0, 0),
+            };
+            let mut rec = Vec::with_capacity(OP_RECORD_SIZE);
+            rec.extend_from_slice(&(op.opcode as u32).to_le_bytes());
+            rec.extend_from_slice(&(op.inputs.len() as u32).to_le_bytes());
+            rec.extend_from_slice(&in_off.to_le_bytes());
+            rec.extend_from_slice(&(op.outputs.len() as u32).to_le_bytes());
+            rec.extend_from_slice(&out_off.to_le_bytes());
+            rec.extend_from_slice(&opt_off.to_le_bytes());
+            rec.extend_from_slice(&opt_len.to_le_bytes());
+            rec.extend_from_slice(&cn_off.to_le_bytes());
+            rec.extend_from_slice(&cn_len.to_le_bytes());
+            rec.extend_from_slice(&[0u8; 4]);
+            debug_assert_eq!(rec.len(), OP_RECORD_SIZE);
+            op_records.push(rec);
+        }
+
+        let mut meta_records = Vec::with_capacity(self.metadata.len());
+        for (k, v) in &self.metadata {
+            let (ko, kl) = put(&mut blob, k.as_bytes());
+            let (vo, vl) = put(&mut blob, v);
+            let mut rec = Vec::with_capacity(META_RECORD_SIZE);
+            rec.extend_from_slice(&ko.to_le_bytes());
+            rec.extend_from_slice(&kl.to_le_bytes());
+            rec.extend_from_slice(&vo.to_le_bytes());
+            rec.extend_from_slice(&vl.to_le_bytes());
+            meta_records.push(rec);
+        }
+
+        let (desc_off, desc_len) = put(&mut blob, self.description.as_bytes());
+
+        // Aligned buffer data region follows the blob heap.
+        let mut buf_data_base = blob_base + blob.len();
+        let mut buffer_records = Vec::with_capacity(self.buffers.len());
+        let mut buffer_region: Vec<u8> = Vec::new();
+        for b in &self.buffers {
+            // Align each buffer start.
+            let pad = (BUFFER_ALIGN - (buf_data_base % BUFFER_ALIGN)) % BUFFER_ALIGN;
+            buffer_region.extend(std::iter::repeat_n(0u8, pad));
+            buf_data_base += pad;
+            let mut rec = Vec::with_capacity(BUFFER_RECORD_SIZE);
+            rec.extend_from_slice(&(buf_data_base as u64).to_le_bytes());
+            rec.extend_from_slice(&(b.len() as u64).to_le_bytes());
+            buffer_records.push(rec);
+            buffer_region.extend_from_slice(b);
+            buf_data_base += b.len();
+        }
+
+        // Assemble.
+        let mut out = Vec::with_capacity(buf_data_base);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // flags
+        out.extend_from_slice(&(blob_base as u32).to_le_bytes());
+        out.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(tensors_off as u32).to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(bufrec_off as u32).to_le_bytes());
+        out.extend_from_slice(&(self.buffers.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(ops_off as u32).to_le_bytes());
+        out.extend_from_slice(&(self.ops.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(inputs_off as u32).to_le_bytes());
+        out.extend_from_slice(&(self.inputs.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(outputs_off as u32).to_le_bytes());
+        out.extend_from_slice(&(self.outputs.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(meta_off as u32).to_le_bytes());
+        out.extend_from_slice(&(self.metadata.len() as u32).to_le_bytes());
+        out.extend_from_slice(&desc_off.to_le_bytes());
+        out.extend_from_slice(&desc_len.to_le_bytes());
+        debug_assert_eq!(out.len(), HEADER_SIZE);
+
+        for rec in tensor_records {
+            out.extend_from_slice(&rec);
+        }
+        for rec in op_records {
+            out.extend_from_slice(&rec);
+        }
+        for rec in buffer_records {
+            out.extend_from_slice(&rec);
+        }
+        for rec in meta_records {
+            out.extend_from_slice(&rec);
+        }
+        for i in &self.inputs {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for o in &self.outputs {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        out.extend_from_slice(&blob);
+        out.extend_from_slice(&buffer_region);
+        out
+    }
+}
+
+/// Encode conv/depthwise-conv options (see `format.rs` for the layout).
+pub fn conv_options(
+    padding: Padding,
+    activation: Activation,
+    stride: (u32, u32),
+    dilation: (u32, u32),
+    depth_multiplier: Option<u32>,
+) -> Vec<u8> {
+    let mut v = vec![padding as u8, activation as u8, 0, 0];
+    v.extend_from_slice(&stride.0.to_le_bytes());
+    v.extend_from_slice(&stride.1.to_le_bytes());
+    v.extend_from_slice(&dilation.0.to_le_bytes());
+    v.extend_from_slice(&dilation.1.to_le_bytes());
+    if let Some(m) = depth_multiplier {
+        v.extend_from_slice(&m.to_le_bytes());
+    }
+    v
+}
+
+/// Encode pooling options.
+pub fn pool_options(
+    padding: Padding,
+    activation: Activation,
+    stride: (u32, u32),
+    filter: (u32, u32),
+) -> Vec<u8> {
+    let mut v = vec![padding as u8, activation as u8, 0, 0];
+    v.extend_from_slice(&stride.0.to_le_bytes());
+    v.extend_from_slice(&stride.1.to_le_bytes());
+    v.extend_from_slice(&filter.0.to_le_bytes());
+    v.extend_from_slice(&filter.1.to_le_bytes());
+    v
+}
+
+/// Encode fully-connected options.
+pub fn fully_connected_options(activation: Activation) -> Vec<u8> {
+    vec![activation as u8, 0, 0, 0]
+}
+
+/// Encode softmax options.
+pub fn softmax_options(beta: f32) -> Vec<u8> {
+    beta.to_le_bytes().to_vec()
+}
+
+/// Encode add/mul options.
+pub fn elementwise_options(activation: Activation) -> Vec<u8> {
+    vec![activation as u8, 0, 0, 0]
+}
+
+/// Encode concat options.
+pub fn concat_options(axis: i32, activation: Activation) -> Vec<u8> {
+    let mut v = axis.to_le_bytes().to_vec();
+    v.push(activation as u8);
+    v.extend_from_slice(&[0u8; 3]);
+    v
+}
+
+/// Encode mean options.
+pub fn mean_options(keep_dims: bool) -> Vec<u8> {
+    vec![u8::from(keep_dims), 0, 0, 0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::Model;
+
+    #[test]
+    fn empty_model_round_trips() {
+        let b = ModelBuilder::new("empty");
+        let bytes = b.finish();
+        let m = Model::from_bytes(&bytes).unwrap();
+        assert_eq!(m.description(), "empty");
+        assert_eq!(m.tensors().len(), 0);
+        assert_eq!(m.operators().len(), 0);
+    }
+
+    #[test]
+    fn full_round_trip() {
+        let mut b = ModelBuilder::new("round-trip");
+        let wdata: Vec<u8> = (0..12).map(|i| i as u8).collect();
+        let wbuf = b.add_buffer(&wdata);
+        let t_in = b.add_quant_tensor(
+            "input",
+            DType::I8,
+            &[1, 2, 2, 3],
+            None,
+            QuantParams::per_tensor(0.5, -1),
+        );
+        let t_w = b.add_quant_tensor(
+            "weights",
+            DType::I8,
+            &[1, 2, 2, 3],
+            Some(wbuf),
+            QuantParams::per_axis(vec![0.1, 0.2], vec![0, 0], 0),
+        );
+        let t_out = b.add_tensor("output", DType::I8, &[1, 1, 1, 1], None);
+        b.add_op(
+            BuiltinOp::Conv2d,
+            &[t_in, t_w, -1],
+            &[t_out],
+            conv_options(Padding::Valid, Activation::Relu, (1, 1), (1, 1), None),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        b.add_metadata("note", b"hello");
+
+        let bytes = b.finish();
+        let m = Model::from_bytes(&bytes).unwrap();
+
+        assert_eq!(m.tensors().len(), 3);
+        assert_eq!(m.tensor(0).unwrap().name, "input");
+        assert_eq!(m.tensor(0).unwrap().quant.as_ref().unwrap().scales, vec![0.5]);
+        let wq = m.tensor(1).unwrap().quant.as_ref().unwrap();
+        assert_eq!(wq.axis, Some(0));
+        assert_eq!(wq.scales, vec![0.1, 0.2]);
+        assert_eq!(m.tensor_data(1).unwrap().unwrap(), &wdata[..]);
+        assert!(m.tensor_data(0).unwrap().is_none());
+
+        let op = &m.operators()[0];
+        assert_eq!(op.opcode, BuiltinOp::Conv2d);
+        assert_eq!(op.inputs, vec![0, 1, -1]);
+        assert_eq!(op.outputs, vec![2]);
+        assert_eq!(m.inputs(), &[0]);
+        assert_eq!(m.outputs(), &[2]);
+        assert_eq!(m.metadata("note").unwrap(), b"hello");
+        assert!(m.metadata("missing").is_none());
+    }
+
+    #[test]
+    fn buffers_are_aligned() {
+        let mut b = ModelBuilder::new("align");
+        let buf = b.add_buffer(&[1, 2, 3, 4, 5]);
+        let _t = b.add_tensor("w", DType::I8, &[5], Some(buf));
+        // Buffer record offsets must be 16-byte aligned for every buffer.
+        let bytes = b.finish();
+        let m = Model::from_bytes(&bytes).unwrap();
+        let data = m.buffer(buf).unwrap();
+        let base = data.as_ptr() as usize - bytes.as_ptr() as usize;
+        // Offset within the file must be aligned (the owned Vec's base
+        // pointer is at least 16-aligned in practice for len>16 but only
+        // the file-relative alignment is the format guarantee).
+        let file_off = base;
+        assert_eq!(file_off % 16, 0, "buffer file offset {file_off} not 16-aligned");
+    }
+
+    #[test]
+    fn custom_op_round_trip() {
+        let mut b = ModelBuilder::new("custom");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("out", DType::F32, &[4], None);
+        b.add_custom_op("MY_OP", &[t0], &[t1], vec![7, 7]);
+        b.set_io(&[t0], &[t1]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let op = &m.operators()[0];
+        assert_eq!(op.opcode, BuiltinOp::Custom);
+        assert_eq!(op.custom_name.as_deref(), Some("MY_OP"));
+        assert_eq!(op.key(), "MY_OP");
+    }
+
+    #[test]
+    fn truncated_model_rejected() {
+        let mut b = ModelBuilder::new("trunc");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        b.set_io(&[t0], &[t0]);
+        let bytes = b.finish();
+        for cut in [0, 3, HEADER_SIZE - 1, bytes.len() - 1] {
+            assert!(Model::from_bytes(&bytes[..cut]).is_err(), "cut={cut} should fail");
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = ModelBuilder::new("x").finish();
+        bytes[0] = b'X';
+        assert!(Model::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_tensor_index_rejected() {
+        let mut b = ModelBuilder::new("bad-idx");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        b.add_op(BuiltinOp::Relu, &[t0], &[99], vec![]);
+        b.set_io(&[t0], &[t0]);
+        assert!(Model::from_bytes(&b.finish()).is_err());
+    }
+
+    #[test]
+    fn offline_plan_metadata() {
+        let mut b = ModelBuilder::new("plan");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        b.set_io(&[t0], &[t0]);
+        let plan: Vec<u8> = [-1i32, 0, 128].iter().flat_map(|v| v.to_le_bytes()).collect();
+        b.add_metadata(crate::schema::OFFLINE_PLAN_KEY, &plan);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert_eq!(m.offline_plan().unwrap(), vec![-1, 0, 128]);
+    }
+}

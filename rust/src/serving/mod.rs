@@ -1,0 +1,255 @@
+//! Always-on serving layer: the end-to-end driver substrate.
+//!
+//! TF Micro itself stops at `invoke()` by design (§3.1: "the design should
+//! exclude any other function"); the applications the paper motivates —
+//! always-on keyword spotting, person detection — run a sensor loop around
+//! the interpreter. This module is that loop, generalized: a bounded
+//! request queue with backpressure, N worker threads each owning a
+//! **private** interpreter + arena (the §4.6 threading model: all state in
+//! the arena, one interpreter per task, no shared mutable state), and
+//! latency/throughput accounting for the examples and benches.
+//!
+//! std-only (threads + mpsc): the offline registry has no tokio, and the
+//! paper's no-dependency ethos makes that the right call anyway
+//! (DESIGN.md §6.6).
+
+use crate::arena::Arena;
+use crate::error::{Error, Result};
+use crate::interpreter::MicroInterpreter;
+use crate::ops::OpResolver;
+use crate::schema::Model;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingConfig {
+    /// Worker threads (one interpreter + arena each).
+    pub workers: usize,
+    /// Bound of the request queue; senders block when full (backpressure).
+    pub queue_depth: usize,
+    /// Arena size per worker, bytes.
+    pub arena_bytes: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { workers: 2, queue_depth: 32, arena_bytes: 256 * 1024 }
+    }
+}
+
+/// One inference request: raw i8 input plus an id.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller-assigned id, echoed in the response.
+    pub id: u64,
+    /// Input tensor data (i8 models).
+    pub input: Vec<i8>,
+    /// Enqueue timestamp (set by `submit`).
+    pub enqueued: Instant,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Output tensor data.
+    pub output: Vec<i8>,
+    /// Queue + execution latency.
+    pub latency: Duration,
+    /// Which worker served it.
+    pub worker: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Requests completed.
+    pub completed: usize,
+    /// Wall time of the whole run.
+    pub wall: Duration,
+    /// Throughput in requests/second.
+    pub throughput_rps: f64,
+    /// Latency percentiles (p50, p95, p99).
+    pub latency_p50: Duration,
+    /// 95th percentile latency.
+    pub latency_p95: Duration,
+    /// 99th percentile latency.
+    pub latency_p99: Duration,
+    /// Per-worker completion counts.
+    pub per_worker: Vec<usize>,
+}
+
+impl ServingReport {
+    /// One-line summary for logs and EXPERIMENTS.md.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} req in {:.2?}  {:.1} req/s  p50 {:?}  p95 {:?}  p99 {:?}",
+            self.completed, self.wall, self.throughput_rps, self.latency_p50, self.latency_p95,
+            self.latency_p99
+        )
+    }
+}
+
+/// Run a closed-loop serving session: feed `requests` through `workers`
+/// interpreters and collect responses. Returns when all requests are done.
+///
+/// Each worker builds its own interpreter over its own arena (the §4.6
+/// model); the executable code (model bytes, kernels) is shared read-only.
+pub fn run_closed_loop(
+    model: &Model,
+    resolver: &OpResolver,
+    cfg: ServingConfig,
+    requests: Vec<Request>,
+    expected_out_len: usize,
+) -> Result<ServingReport> {
+    if cfg.workers == 0 {
+        return Err(Error::Serving("need at least one worker".into()));
+    }
+    let n = requests.len();
+    let (req_tx, req_rx): (SyncSender<Request>, Receiver<Request>) =
+        sync_channel(cfg.queue_depth);
+    let req_rx = Mutex::new(req_rx);
+    let (resp_tx, resp_rx) = sync_channel::<Response>(cfg.queue_depth.max(n));
+    let errors = AtomicUsize::new(0);
+
+    let t0 = Instant::now();
+    let report = std::thread::scope(|scope| -> Result<ServingReport> {
+        // Workers.
+        for w in 0..cfg.workers {
+            let req_rx = &req_rx;
+            let resp_tx = resp_tx.clone();
+            let errors = &errors;
+            scope.spawn(move || {
+                let mut arena = Arena::new(cfg.arena_bytes);
+                let mut interp = match MicroInterpreter::new(model, resolver, &mut arena) {
+                    Ok(i) => i,
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                        return;
+                    }
+                };
+                loop {
+                    // Pull one request; lock is held only for the recv.
+                    let req = {
+                        let rx = req_rx.lock().expect("rx poisoned");
+                        rx.recv()
+                    };
+                    let Ok(req) = req else { break };
+                    let ok = (|| -> Result<Response> {
+                        interp.input_mut(0)?.copy_from_i8(&req.input)?;
+                        interp.invoke()?;
+                        let out = interp.output(0)?.as_i8()?.to_vec();
+                        Ok(Response {
+                            id: req.id,
+                            output: out,
+                            latency: req.enqueued.elapsed(),
+                            worker: w,
+                        })
+                    })();
+                    match ok {
+                        Ok(resp) => {
+                            if resp_tx.send(resp).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+            });
+        }
+        drop(resp_tx);
+
+        // Feeder (blocks on the bounded queue: natural backpressure).
+        scope.spawn(move || {
+            for mut r in requests {
+                r.enqueued = Instant::now();
+                if req_tx.send(r).is_err() {
+                    break;
+                }
+            }
+            // Dropping req_tx closes the queue; workers drain and exit.
+        });
+
+        // Collector.
+        let mut latencies = Vec::with_capacity(n);
+        let mut per_worker = vec![0usize; cfg.workers];
+        let mut completed = 0usize;
+        for resp in resp_rx.iter() {
+            if resp.output.len() != expected_out_len {
+                return Err(Error::Serving(format!(
+                    "response {} has {} outputs, expected {expected_out_len}",
+                    resp.id,
+                    resp.output.len()
+                )));
+            }
+            latencies.push(resp.latency);
+            per_worker[resp.worker] += 1;
+            completed += 1;
+        }
+        let wall = t0.elapsed();
+        if errors.load(Ordering::SeqCst) > 0 {
+            return Err(Error::Serving(format!(
+                "{} request(s) failed",
+                errors.load(Ordering::SeqCst)
+            )));
+        }
+        latencies.sort();
+        let pick = |p: f64| -> Duration {
+            if latencies.is_empty() {
+                Duration::ZERO
+            } else {
+                latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
+            }
+        };
+        Ok(ServingReport {
+            completed,
+            wall,
+            throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+            latency_p50: pick(0.50),
+            latency_p95: pick(0.95),
+            latency_p99: pick(0.99),
+            per_worker,
+        })
+    })?;
+    Ok(report)
+}
+
+/// Build a batch of identical-shape requests from a generator closure.
+pub fn make_requests(count: usize, mut gen: impl FnMut(u64) -> Vec<i8>) -> Vec<Request> {
+    (0..count as u64)
+        .map(|id| Request { id, input: gen(id), enqueued: Instant::now() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration coverage lives in rust/tests/serving.rs (needs a real
+    // model); unit-level sanity for the helpers here.
+    use super::*;
+
+    #[test]
+    fn make_requests_assigns_ids() {
+        let reqs = make_requests(4, |id| vec![id as i8; 2]);
+        assert_eq!(reqs.len(), 4);
+        assert_eq!(reqs[3].id, 3);
+        assert_eq!(reqs[2].input, vec![2i8, 2]);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        // Construct a trivial model to exercise the early error path.
+        let mut b = crate::schema::ModelBuilder::new("t");
+        let t0 = b.add_tensor("in", crate::tensor::DType::I8, &[1], None);
+        b.set_io(&[t0], &[t0]);
+        let m = crate::schema::Model::from_bytes(&b.finish()).unwrap();
+        let r = crate::ops::OpResolver::with_reference_ops();
+        let cfg = ServingConfig { workers: 0, ..Default::default() };
+        assert!(run_closed_loop(&m, &r, cfg, vec![], 1).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Element types supported by the framework.
+
+use crate::error::{Error, Result};
+
+/// Element type of a tensor.
+///
+/// The numeric discriminants are part of the TMF serialization format and
+/// must stay in sync with `python/compile/tmf.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum DType {
+    /// 32-bit IEEE float.
+    F32 = 1,
+    /// Signed 8-bit integer (the primary quantized activation/weight type).
+    I8 = 2,
+    /// Unsigned 8-bit integer (raw sensor data, legacy quantization).
+    U8 = 3,
+    /// Signed 32-bit integer (biases, shapes, indices).
+    I32 = 4,
+    /// Signed 64-bit integer.
+    I64 = 5,
+    /// Boolean, one byte per element.
+    Bool = 6,
+    /// Signed 16-bit integer (16x8 quantization activations).
+    I16 = 7,
+}
+
+impl DType {
+    /// Decode a serialized dtype tag.
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => DType::F32,
+            2 => DType::I8,
+            3 => DType::U8,
+            4 => DType::I32,
+            5 => DType::I64,
+            6 => DType::Bool,
+            7 => DType::I16,
+            _ => return Err(Error::malformed(format!("unknown dtype tag {v}"))),
+        })
+    }
+
+    /// Size of one element in bytes.
+    pub const fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 | DType::Bool => 1,
+            DType::I64 => 8,
+            DType::I16 => 2,
+        }
+    }
+
+    /// Human-readable name, used in error messages and bench output.
+    pub const fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::U8 => "u8",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::Bool => "bool",
+            DType::I16 => "i16",
+        }
+    }
+
+    /// True for the quantized-integer activation types.
+    pub const fn is_quantized_int(self) -> bool {
+        matches!(self, DType::I8 | DType::U8 | DType::I16)
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_tags() {
+        for tag in 1..=7u8 {
+            let d = DType::from_u8(tag).unwrap();
+            assert_eq!(d as u8, tag);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_tags() {
+        assert!(DType::from_u8(0).is_err());
+        assert!(DType::from_u8(8).is_err());
+        assert!(DType::from_u8(255).is_err());
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_of(), 4);
+        assert_eq!(DType::I8.size_of(), 1);
+        assert_eq!(DType::I16.size_of(), 2);
+        assert_eq!(DType::I64.size_of(), 8);
+    }
+
+    #[test]
+    fn quantized_classification() {
+        assert!(DType::I8.is_quantized_int());
+        assert!(DType::U8.is_quantized_int());
+        assert!(DType::I16.is_quantized_int());
+        assert!(!DType::F32.is_quantized_int());
+        assert!(!DType::I32.is_quantized_int());
+    }
+}

@@ -1,0 +1,119 @@
+//! Tensor metadata: dtypes, shapes, and quantization parameters.
+//!
+//! Mirrors the TensorFlow Lite tensor model the paper reuses (§4.3.2):
+//! tensors carry a dtype, a static shape (dynamic shapes are unsupported,
+//! §4.4.2), and optional affine quantization parameters — per-tensor for
+//! activations, optionally per-axis (per-output-channel) for weights, as
+//! in the TFLite int8 quantization spec.
+
+mod dtype;
+mod quant;
+mod shape;
+
+pub use dtype::DType;
+pub use quant::{QuantParams, QuantizedMultiplier};
+pub use shape::Shape;
+
+use crate::error::{Error, Result};
+
+/// Static description of one tensor in a model graph.
+///
+/// This is the runtime-friendly decoding of a schema tensor record; the
+/// interpreter builds one per tensor at initialization time and never
+/// mutates it afterward.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    /// Tensor name (diagnostic only; empty string if the model omitted it).
+    pub name: String,
+    /// Element type.
+    pub dtype: DType,
+    /// Static shape. A scalar has an empty dims list.
+    pub shape: Shape,
+    /// Index into the model buffer table; `None` for activations
+    /// (tensors whose storage the memory planner assigns in the arena).
+    pub buffer: Option<u32>,
+    /// Affine quantization parameters, if the tensor is quantized.
+    pub quant: Option<QuantParams>,
+    /// Variable tensors persist across invocations (e.g. RNN state).
+    pub is_variable: bool,
+}
+
+impl TensorMeta {
+    /// Total number of elements.
+    pub fn num_elements(&self) -> usize {
+        self.shape.num_elements()
+    }
+
+    /// Storage size in bytes.
+    pub fn num_bytes(&self) -> usize {
+        self.num_elements() * self.dtype.size_of()
+    }
+
+    /// True if this tensor's storage lives in the arena (an activation or
+    /// variable tensor) rather than in the serialized model (weights).
+    pub fn needs_arena(&self) -> bool {
+        self.buffer.is_none()
+    }
+
+    /// Returns the per-tensor scale, failing on unquantized tensors.
+    pub fn scale(&self) -> Result<f32> {
+        self.quant
+            .as_ref()
+            .map(|q| q.scales[0])
+            .ok_or_else(|| Error::InvalidTensor(format!("tensor '{}' is not quantized", self.name)))
+    }
+
+    /// Returns the per-tensor zero point, failing on unquantized tensors.
+    pub fn zero_point(&self) -> Result<i32> {
+        self.quant
+            .as_ref()
+            .map(|q| q.zero_points[0])
+            .ok_or_else(|| Error::InvalidTensor(format!("tensor '{}' is not quantized", self.name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(dtype: DType, dims: &[i32]) -> TensorMeta {
+        TensorMeta {
+            name: "t".into(),
+            dtype,
+            shape: Shape::new(dims.to_vec()),
+            buffer: None,
+            quant: None,
+            is_variable: false,
+        }
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(meta(DType::F32, &[2, 3]).num_bytes(), 24);
+        assert_eq!(meta(DType::I8, &[2, 3]).num_bytes(), 6);
+        assert_eq!(meta(DType::I32, &[]).num_bytes(), 4); // scalar
+    }
+
+    #[test]
+    fn arena_residency() {
+        let mut m = meta(DType::I8, &[4]);
+        assert!(m.needs_arena());
+        m.buffer = Some(3);
+        assert!(!m.needs_arena());
+    }
+
+    #[test]
+    fn quant_accessors_fail_unquantized() {
+        let m = meta(DType::I8, &[4]);
+        assert!(m.scale().is_err());
+        assert!(m.zero_point().is_err());
+    }
+
+    #[test]
+    fn quant_accessors_read_first_entry() {
+        let mut m = meta(DType::I8, &[4]);
+        m.quant = Some(QuantParams::per_tensor(0.5, -3));
+        assert_eq!(m.scale().unwrap(), 0.5);
+        assert_eq!(m.zero_point().unwrap(), -3);
+    }
+}

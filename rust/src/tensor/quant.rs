@@ -1,0 +1,262 @@
+//! Affine quantization parameters and TFLite-compatible fixed-point math.
+//!
+//! The paper's models are INT8 TensorFlow Lite models (§5.1); the kernels
+//! therefore implement the TFLite quantization spec: `real = scale *
+//! (q - zero_point)`, with requantization done in pure integer arithmetic
+//! via a 32-bit fixed-point multiplier and a power-of-two shift — no float
+//! on the inference path, matching hardware without an FPU (§2.1).
+//!
+//! The fixed-point helpers mirror gemmlowp/TFLite bit-for-bit
+//! (`SaturatingRoundingDoublingHighMul`, `RoundingDivideByPOT`,
+//! `MultiplyByQuantizedMultiplier`); the Python exporter uses the same
+//! definitions when producing golden vectors, so Rust inference must match
+//! them exactly.
+
+/// Affine quantization parameters for a tensor.
+///
+/// Per-tensor quantization stores one (scale, zero_point) pair; per-axis
+/// (per-output-channel weight) quantization stores one pair per slice of
+/// `axis`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantParams {
+    /// One scale per quantized slice (length 1 for per-tensor).
+    pub scales: Vec<f32>,
+    /// One zero point per quantized slice (same length as `scales`).
+    pub zero_points: Vec<i32>,
+    /// Quantized dimension for per-axis quantization; `None` = per-tensor.
+    pub axis: Option<usize>,
+}
+
+impl QuantParams {
+    /// Per-tensor parameters.
+    pub fn per_tensor(scale: f32, zero_point: i32) -> Self {
+        QuantParams { scales: vec![scale], zero_points: vec![zero_point], axis: None }
+    }
+
+    /// Per-axis parameters (e.g. conv weights quantized per output channel).
+    pub fn per_axis(scales: Vec<f32>, zero_points: Vec<i32>, axis: usize) -> Self {
+        debug_assert_eq!(scales.len(), zero_points.len());
+        QuantParams { scales, zero_points, axis: Some(axis) }
+    }
+
+    /// True if this is per-axis quantization.
+    pub fn is_per_axis(&self) -> bool {
+        self.axis.is_some() && self.scales.len() > 1
+    }
+
+    /// Quantize one real value with the per-tensor parameters (index 0).
+    pub fn quantize_f32(&self, v: f32) -> i8 {
+        let q = (v / self.scales[0]).round() as i32 + self.zero_points[0];
+        q.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+    }
+
+    /// Dequantize one i8 value with the per-tensor parameters (index 0).
+    pub fn dequantize_i8(&self, q: i8) -> f32 {
+        self.scales[0] * (q as i32 - self.zero_points[0]) as f32
+    }
+}
+
+/// A real multiplier encoded as TFLite's 32-bit fixed-point
+/// `multiplier * 2^shift` pair, precomputed at prepare time so the invoke
+/// path is integer-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QuantizedMultiplier {
+    /// Fixed-point mantissa in Q0.31.
+    pub multiplier: i32,
+    /// Power-of-two exponent; positive = left shift.
+    pub shift: i32,
+}
+
+impl QuantizedMultiplier {
+    /// Encode a real multiplier. Mirrors TFLite's `QuantizeMultiplier`.
+    pub fn from_real(real: f64) -> Self {
+        if real == 0.0 {
+            return QuantizedMultiplier { multiplier: 0, shift: 0 };
+        }
+        let (q, mut shift) = frexp(real);
+        let mut q_fixed = (q * ((1i64 << 31) as f64)).round() as i64;
+        debug_assert!(q_fixed <= 1i64 << 31);
+        if q_fixed == 1i64 << 31 {
+            q_fixed /= 2;
+            shift += 1;
+        }
+        if shift < -31 {
+            // Underflow: the multiplier rounds to zero.
+            shift = 0;
+            q_fixed = 0;
+        }
+        QuantizedMultiplier { multiplier: q_fixed as i32, shift }
+    }
+
+    /// Apply to an i32 accumulator: `round(x * multiplier * 2^shift)` with
+    /// TFLite round-to-nearest-ties-away-from-zero-ish semantics.
+    #[inline]
+    pub fn apply(self, x: i32) -> i32 {
+        multiply_by_quantized_multiplier(x, self.multiplier, self.shift)
+    }
+}
+
+/// `frexp` for f64: returns `(frac, exp)` with `value = frac * 2^exp` and
+/// `|frac|` in `[0.5, 1)`. Implemented from bits since libm isn't linked.
+pub(crate) fn frexp(value: f64) -> (f64, i32) {
+    if value == 0.0 || value.is_nan() || value.is_infinite() {
+        return (value, 0);
+    }
+    let bits = value.to_bits();
+    let exp_bits = ((bits >> 52) & 0x7ff) as i64;
+    if exp_bits == 0 {
+        // Subnormal: scale up by 2^64 first.
+        let scaled = value * (2f64).powi(64);
+        let (f, e) = frexp(scaled);
+        return (f, e - 64);
+    }
+    let exp = exp_bits - 1022; // unbiased such that frac in [0.5, 1)
+    let frac_bits = (bits & !(0x7ffu64 << 52)) | (1022u64 << 52);
+    (f64::from_bits(frac_bits), exp as i32)
+}
+
+/// gemmlowp `SaturatingRoundingDoublingHighMul`.
+#[inline]
+pub fn saturating_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    let overflow = a == b && a == i32::MIN;
+    let ab = a as i64 * b as i64;
+    let nudge: i64 = if ab >= 0 { 1 << 30 } else { 1 - (1i64 << 30) };
+    // NB: C++ `/` truncates toward zero (gemmlowp divides, it does not
+    // shift); Rust `>>` would floor and skew every negative accumulator.
+    let result = ((ab + nudge) / (1i64 << 31)) as i32;
+    if overflow {
+        i32::MAX
+    } else {
+        result
+    }
+}
+
+/// gemmlowp `RoundingDivideByPOT` (round-to-nearest, ties up for
+/// non-negative, matching TFLite).
+#[inline]
+pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    let mask = (1i64 << exponent) - 1;
+    let remainder = x as i64 & mask;
+    let threshold = (mask >> 1) + if x < 0 { 1 } else { 0 };
+    ((x as i64 >> exponent) + i64::from(remainder > threshold)) as i32
+}
+
+/// TFLite `MultiplyByQuantizedMultiplier`.
+#[inline]
+pub fn multiply_by_quantized_multiplier(x: i32, multiplier: i32, shift: i32) -> i32 {
+    let left_shift = shift.max(0);
+    let right_shift = (-shift).max(0);
+    rounding_divide_by_pot(
+        saturating_rounding_doubling_high_mul(x.wrapping_shl(left_shift as u32), multiplier),
+        right_shift,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frexp_basic() {
+        let (f, e) = frexp(8.0);
+        assert_eq!((f, e), (0.5, 4));
+        let (f, e) = frexp(0.75);
+        assert_eq!((f, e), (0.75, 0));
+        let (f, e) = frexp(-3.0);
+        assert_eq!((f, e), (-0.75, 2));
+        let (f, e) = frexp(0.0);
+        assert_eq!((f, e), (0.0, 0));
+    }
+
+    #[test]
+    fn frexp_reconstructs() {
+        for &v in &[1e-8, 0.3, 1.0, 7.25, 123456.789, 1e12] {
+            let (f, e) = frexp(v);
+            assert!((0.5..1.0).contains(&f.abs()), "frac {f} for {v}");
+            assert!((f * (2f64).powi(e) - v).abs() < v * 1e-15);
+        }
+    }
+
+    #[test]
+    fn quantize_multiplier_known_values() {
+        // multiplier for 0.5 is exactly 2^30 in Q0.31 with shift 0.
+        let q = QuantizedMultiplier::from_real(0.5);
+        assert_eq!(q.multiplier, 1 << 30);
+        assert_eq!(q.shift, 0);
+        // 1.0 saturates the mantissa and bumps the shift.
+        let q = QuantizedMultiplier::from_real(1.0);
+        assert_eq!(q.multiplier, 1 << 30);
+        assert_eq!(q.shift, 1);
+        // Zero.
+        let q = QuantizedMultiplier::from_real(0.0);
+        assert_eq!((q.multiplier, q.shift), (0, 0));
+    }
+
+    #[test]
+    fn apply_matches_real_arithmetic() {
+        // For a range of multipliers and accumulators the fixed-point result
+        // must be within 1 ulp of round(x * real).
+        let reals = [0.0003921568, 0.0117647, 0.25, 0.5, 0.9999, 1.5, 2.0 / 3.0];
+        let xs = [-100000, -12345, -1, 0, 1, 7, 12345, 100000, 1 << 20];
+        for &r in &reals {
+            let qm = QuantizedMultiplier::from_real(r);
+            for &x in &xs {
+                let got = qm.apply(x);
+                let want = (x as f64 * r).round() as i64;
+                assert!(
+                    (got as i64 - want).abs() <= 1,
+                    "real={r} x={x} got={got} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn srdhm_saturates_min_times_min() {
+        assert_eq!(saturating_rounding_doubling_high_mul(i32::MIN, i32::MIN), i32::MAX);
+    }
+
+    #[test]
+    fn srdhm_identity_with_half() {
+        // (1<<30) in Q0.31 represents 0.5; doubling-high-mul by it halves.
+        assert_eq!(saturating_rounding_doubling_high_mul(1000, 1 << 30), 500);
+        assert_eq!(saturating_rounding_doubling_high_mul(-1000, 1 << 30), -500);
+    }
+
+    #[test]
+    fn rdbp_rounds_to_nearest() {
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3 (ties up)
+        assert_eq!(rounding_divide_by_pot(4, 1), 2);
+        // gemmlowp semantics for negatives (threshold gets +1):
+        assert_eq!(rounding_divide_by_pot(-5, 1), -3); // -2.5 -> -3 (away)
+        assert_eq!(rounding_divide_by_pot(-6, 2), -2); // -1.5 -> -2 (away)
+        assert_eq!(rounding_divide_by_pot(-7, 2), -2); // -1.75 -> -2
+        assert_eq!(rounding_divide_by_pot(7, 0), 7);
+    }
+
+    #[test]
+    fn per_tensor_round_trip() {
+        let q = QuantParams::per_tensor(0.05, -10);
+        for v in [-5.0f32, -0.3, 0.0, 0.72, 4.9] {
+            let quantized = q.quantize_f32(v);
+            let back = q.dequantize_i8(quantized);
+            assert!((back - v).abs() <= 0.05, "v={v} back={back}");
+        }
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        let q = QuantParams::per_tensor(0.01, 0);
+        assert_eq!(q.quantize_f32(100.0), i8::MAX);
+        assert_eq!(q.quantize_f32(-100.0), i8::MIN);
+    }
+
+    #[test]
+    fn per_axis_flag() {
+        let q = QuantParams::per_axis(vec![0.1, 0.2], vec![0, 0], 3);
+        assert!(q.is_per_axis());
+        let q = QuantParams::per_tensor(0.1, 0);
+        assert!(!q.is_per_axis());
+    }
+}

@@ -1,0 +1,156 @@
+//! Static tensor shapes.
+//!
+//! TF Micro does not support dynamic shapes (§4.4.2): every dimension is
+//! known when the interpreter initializes, which is what makes ahead-of-
+//! invoke memory planning possible. `Shape` therefore stores plain
+//! positive extents; a scalar is the empty dims list.
+
+use crate::error::{Error, Result};
+
+/// A static tensor shape (row-major / NHWC conventions follow TFLite).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<i32>,
+}
+
+impl Shape {
+    /// Build a shape from raw dims. Negative extents are normalized later
+    /// by validation; constructors in the schema reader reject them.
+    pub fn new(dims: Vec<i32>) -> Self {
+        Shape { dims }
+    }
+
+    /// Scalar shape.
+    pub fn scalar() -> Self {
+        Shape { dims: Vec::new() }
+    }
+
+    /// Validated constructor: every extent must be >= 1.
+    pub fn checked(dims: Vec<i32>) -> Result<Self> {
+        for (i, &d) in dims.iter().enumerate() {
+            if d < 1 {
+                return Err(Error::ShapeMismatch(format!(
+                    "dimension {i} has non-positive extent {d} (dynamic shapes are unsupported)"
+                )));
+            }
+        }
+        Ok(Shape { dims })
+    }
+
+    /// Raw dims.
+    pub fn dims(&self) -> &[i32] {
+        &self.dims
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Extent of dimension `i`.
+    pub fn dim(&self, i: usize) -> i32 {
+        self.dims[i]
+    }
+
+    /// Total element count (1 for scalars).
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().map(|&d| d.max(0) as usize).product()
+    }
+
+    /// Interpret as NHWC, failing unless rank is 4.
+    pub fn as_nhwc(&self) -> Result<(usize, usize, usize, usize)> {
+        if self.rank() != 4 {
+            return Err(Error::ShapeMismatch(format!(
+                "expected rank-4 NHWC shape, got rank {} ({:?})",
+                self.rank(),
+                self.dims
+            )));
+        }
+        Ok((
+            self.dims[0] as usize,
+            self.dims[1] as usize,
+            self.dims[2] as usize,
+            self.dims[3] as usize,
+        ))
+    }
+
+    /// Row-major strides in elements.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.dims[i + 1] as usize;
+        }
+        strides
+    }
+
+    /// Flatten to `[outer, last]`, the view fully-connected kernels use.
+    pub fn as_matrix(&self) -> (usize, usize) {
+        if self.dims.is_empty() {
+            return (1, 1);
+        }
+        let last = *self.dims.last().unwrap() as usize;
+        (self.num_elements() / last.max(1), last)
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_has_one_element() {
+        assert_eq!(Shape::scalar().num_elements(), 1);
+        assert_eq!(Shape::scalar().rank(), 0);
+    }
+
+    #[test]
+    fn element_counts() {
+        assert_eq!(Shape::new(vec![2, 3, 4]).num_elements(), 24);
+        assert_eq!(Shape::new(vec![1]).num_elements(), 1);
+    }
+
+    #[test]
+    fn checked_rejects_nonpositive() {
+        assert!(Shape::checked(vec![2, 0]).is_err());
+        assert!(Shape::checked(vec![-1, 3]).is_err());
+        assert!(Shape::checked(vec![2, 3]).is_ok());
+    }
+
+    #[test]
+    fn nhwc_unpack() {
+        let s = Shape::new(vec![1, 96, 96, 3]);
+        assert_eq!(s.as_nhwc().unwrap(), (1, 96, 96, 3));
+        assert!(Shape::new(vec![2, 3]).as_nhwc().is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn matrix_view() {
+        assert_eq!(Shape::new(vec![2, 3, 4]).as_matrix(), (6, 4));
+        assert_eq!(Shape::new(vec![5]).as_matrix(), (1, 5));
+        assert_eq!(Shape::scalar().as_matrix(), (1, 1));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(vec![1, 2, 3]).to_string(), "[1x2x3]");
+    }
+}

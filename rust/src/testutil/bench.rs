@@ -1,0 +1,182 @@
+//! Benchmark harness helpers (criterion substitute, DESIGN.md §6.6).
+//!
+//! The benches in `rust/benches/` are `harness = false` binaries; they use
+//! [`Bencher`] for warmup + timed iterations and [`BenchStats`] for simple
+//! robust statistics (median / p95 over per-iteration wall times).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration timings.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    /// Number of measured iterations.
+    pub iters: usize,
+    /// Median iteration time.
+    pub median: Duration,
+    /// Mean iteration time.
+    pub mean: Duration,
+    /// 95th-percentile iteration time.
+    pub p95: Duration,
+    /// Minimum iteration time.
+    pub min: Duration,
+    /// Maximum iteration time.
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// Compute stats from raw per-iteration durations.
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        BenchStats {
+            iters: n,
+            median: samples[n / 2],
+            mean: total / n as u32,
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    /// Render as a one-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "median {:>10.3?}  mean {:>10.3?}  p95 {:>10.3?}  (n={})",
+            self.median, self.mean, self.p95, self.iters
+        )
+    }
+}
+
+/// Warmup-then-measure bench driver.
+pub struct Bencher {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations (even past the time budget).
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1000),
+            max_iters: 100_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    /// A quick configuration for heavyweight workloads (e.g. whole-model
+    /// VWW invocations) where each iteration is tens of milliseconds.
+    pub fn heavy() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(1500),
+            max_iters: 500,
+            min_iters: 3,
+        }
+    }
+
+    /// Run `f` with warmup, then measure per-iteration wall time.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        BenchStats::from_samples(samples)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+/// (std::hint::black_box wrapper kept for call-site clarity.)
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format a byte count the way the paper's Table 2 does (kB with 2 d.p.).
+pub fn fmt_kb(bytes: usize) -> String {
+    if bytes < 1024 {
+        format!("{bytes} bytes")
+    } else {
+        format!("{:.2} kB", bytes as f64 / 1024.0)
+    }
+}
+
+/// Format a simulated cycle count the way Figure 6 does ("18,990.8K").
+pub fn fmt_kcycles(cycles: u64) -> String {
+    let k = cycles as f64 / 1000.0;
+    let whole = k.trunc() as u64;
+    let frac = ((k - k.trunc()) * 10.0).round() as u64;
+    // Thousands separators on the whole part.
+    let s = whole.to_string();
+    let mut grouped = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i).is_multiple_of(3) {
+            grouped.push(',');
+        }
+        grouped.push(c);
+    }
+    format!("{grouped}.{frac}K")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = BenchStats::from_samples(samples);
+        assert_eq!(s.iters, 100);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.max, Duration::from_micros(100));
+        assert_eq!(s.median, Duration::from_micros(51));
+        assert_eq!(s.p95, Duration::from_micros(96));
+    }
+
+    #[test]
+    fn bencher_runs_minimum_iterations() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(1),
+            max_iters: 1000,
+            min_iters: 10,
+        };
+        let mut count = 0usize;
+        let stats = b.run(|| count += 1);
+        assert!(stats.iters >= 10);
+        assert!(count >= stats.iters);
+    }
+
+    #[test]
+    fn kb_formatting() {
+        assert_eq!(fmt_kb(680), "680 bytes");
+        assert_eq!(fmt_kb(9257), "9.04 kB");
+    }
+
+    #[test]
+    fn kcycle_formatting() {
+        assert_eq!(fmt_kcycles(18_990_800), "18,990.8K");
+        assert_eq!(fmt_kcycles(45_100), "45.1K");
+        assert_eq!(fmt_kcycles(900), "0.9K");
+    }
+}

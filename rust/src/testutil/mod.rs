@@ -1,0 +1,15 @@
+//! Test and benchmark support utilities.
+//!
+//! The offline crate registry for this environment carries neither
+//! `proptest` nor `criterion`, so this module provides the small pieces we
+//! actually need (DESIGN.md §6.6): a deterministic PRNG, a miniature
+//! property-testing driver with failure-case reporting, and warmup/statistics
+//! helpers used by the custom-harness benches.
+
+mod bench;
+mod prop;
+mod rng;
+
+pub use bench::{black_box, fmt_kb, fmt_kcycles, BenchStats, Bencher};
+pub use prop::{check, Cases};
+pub use rng::Rng;

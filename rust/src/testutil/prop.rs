@@ -1,0 +1,97 @@
+//! Miniature property-testing driver (proptest substitute, DESIGN.md §6.6).
+//!
+//! Runs a property over N generated cases from a deterministic [`Rng`];
+//! on failure it reports the case index and seed so the exact case can be
+//! replayed by construction. No shrinking — generators here are small
+//! enough that the raw case is readable.
+
+use super::rng::Rng;
+
+/// Configuration for a property check.
+#[derive(Debug, Clone, Copy)]
+pub struct Cases {
+    /// How many cases to run.
+    pub count: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Cases { count: 256, seed: 0xC0FFEE }
+    }
+}
+
+impl Cases {
+    /// `count` cases with the default seed.
+    pub fn n(count: usize) -> Self {
+        Cases { count, ..Default::default() }
+    }
+}
+
+/// Run `property` over generated cases. The property receives a fresh
+/// seeded [`Rng`] per case and returns `Err(description)` to fail.
+///
+/// # Panics
+/// Panics (failing the enclosing `#[test]`) on the first failing case,
+/// reporting the case index and its seed.
+pub fn check<F>(cases: Cases, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases.count {
+        let case_seed = cases.seed.wrapping_add(i as u64);
+        let mut rng = Rng::seeded(case_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {i}/{} (seed {case_seed:#x}): {msg}",
+                cases.count
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Cases::n(50), |rng| {
+            let v = rng.below(100);
+            if v < 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        check(Cases::n(50), |rng| {
+            let v = rng.below(10);
+            if v != 7 {
+                Ok(())
+            } else {
+                Err("hit the bad value".into())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen_a = Vec::new();
+        check(Cases { count: 5, seed: 99 }, |rng| {
+            seen_a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        check(Cases { count: 5, seed: 99 }, |rng| {
+            seen_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

@@ -1,0 +1,147 @@
+//! Cross-language integration tests: the Rust interpreter must reproduce
+//! the Python exporter's golden vectors on the real exported models.
+//!
+//! * pure-integer models/paths: **bit-exact** match required;
+//! * models ending in softmax (float `exp` inside): <= 1 LSB skew allowed.
+//!
+//! Requires `make artifacts` (skips cleanly if artifacts/ is absent, so a
+//! fresh checkout can still run `cargo test`).
+
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::Model;
+
+struct Golden {
+    cases: Vec<(Vec<i8>, Vec<i8>)>,
+}
+
+fn load_golden(path: &str) -> Option<Golden> {
+    let raw = std::fs::read(path).ok()?;
+    let n = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
+    let in_len = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let out_len = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+    let mut cases = Vec::with_capacity(n);
+    let mut off = 12;
+    for _ in 0..n {
+        let x: Vec<i8> = raw[off..off + in_len].iter().map(|&b| b as i8).collect();
+        off += in_len;
+        let y: Vec<i8> = raw[off..off + out_len].iter().map(|&b| b as i8).collect();
+        off += out_len;
+        cases.push((x, y));
+    }
+    Some(Golden { cases })
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn check_model(name: &str, arena_kb: usize, tolerance: i32, optimized: bool) {
+    let dir = artifacts_dir();
+    let model_path = dir.join(format!("{name}.tmf"));
+    let golden_path = dir.join(format!("{name}_golden.bin"));
+    if !model_path.exists() {
+        eprintln!("SKIP {name}: run `make artifacts` first");
+        return;
+    }
+    let model = Model::from_file(&model_path).expect("load model");
+    tfmicro::schema::validate::validate(&model).expect("model validates");
+    let golden = load_golden(golden_path.to_str().unwrap()).expect("golden");
+    assert!(!golden.cases.is_empty());
+
+    let resolver = if optimized {
+        OpResolver::with_optimized_ops()
+    } else {
+        OpResolver::with_reference_ops()
+    };
+    let mut arena = Arena::new(arena_kb * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+
+    for (case_idx, (x, want)) in golden.cases.iter().enumerate() {
+        interp.input_mut(0).unwrap().copy_from_i8(x).unwrap();
+        interp.invoke().expect("invoke");
+        let got = interp.output(0).unwrap().as_i8().unwrap();
+        assert_eq!(got.len(), want.len());
+        let mut max_err = 0i32;
+        for (g, w) in got.iter().zip(want) {
+            max_err = max_err.max((*g as i32 - *w as i32).abs());
+        }
+        assert!(
+            max_err <= tolerance,
+            "{name} case {case_idx} ({}): max |err| = {max_err} > {tolerance}\n got[..8]={:?}\nwant[..8]={:?}",
+            if optimized { "optimized" } else { "reference" },
+            &got[..got.len().min(8)],
+            &want[..want.len().min(8)]
+        );
+    }
+}
+
+#[test]
+fn conv_ref_matches_golden_reference_kernels() {
+    check_model("conv_ref", 64, 1, false);
+}
+
+#[test]
+fn conv_ref_matches_golden_optimized_kernels() {
+    check_model("conv_ref", 64, 1, true);
+}
+
+#[test]
+fn hotword_matches_golden_reference_kernels() {
+    check_model("hotword", 64, 1, false);
+}
+
+#[test]
+fn hotword_matches_golden_optimized_kernels() {
+    check_model("hotword", 64, 1, true);
+}
+
+#[test]
+fn vww_matches_golden_reference_kernels() {
+    check_model("vww", 512, 1, false);
+}
+
+#[test]
+fn vww_matches_golden_optimized_kernels() {
+    check_model("vww", 512, 1, true);
+}
+
+#[test]
+fn vww_arena_usage_is_in_the_papers_regime() {
+    // Table 2 check: VWW non-persistent tens-of-kB, total under 200 kB.
+    let dir = artifacts_dir();
+    let model_path = dir.join("vww.tmf");
+    if !model_path.exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let model = Model::from_file(&model_path).unwrap();
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(512 * 1024);
+    let interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    let u = interp.arena_usage();
+    assert!(u.nonpersistent > 20 * 1024, "vww activations should be tens of kB, got {}", u.nonpersistent);
+    assert!(u.total < 200 * 1024, "vww arena should be well under 200 kB, got {}", u.total);
+    // Flash footprint ~ the paper's 250 kB-class model.
+    assert!(model.serialized_size() > 150 * 1024 && model.serialized_size() < 400 * 1024);
+}
+
+#[test]
+fn hotword_nonpersistent_is_tiny() {
+    // Table 2's signature: hotword non-persistent is sub-kB-scale
+    // (680 bytes in the paper) because activations are tiny vectors.
+    let dir = artifacts_dir();
+    let model_path = dir.join("hotword.tmf");
+    if !model_path.exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let model = Model::from_file(&model_path).unwrap();
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(64 * 1024);
+    let interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    let u = interp.arena_usage();
+    assert!(u.nonpersistent < 4 * 1024, "hotword activations tiny, got {}", u.nonpersistent);
+    assert!(u.nonpersistent < u.persistent, "hotword is persistent-dominated (paper Table 2)");
+}

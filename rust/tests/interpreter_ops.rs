@@ -1,0 +1,415 @@
+//! Integration tests: full interpreter life cycle over builder-made
+//! models, exercising every builtin op end to end (load -> allocate ->
+//! prepare -> plan -> invoke -> read outputs).
+
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::{MicroInterpreter, Options, PlannerChoice};
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::format::{Activation, Padding};
+use tfmicro::schema::writer::{
+    concat_options, conv_options, elementwise_options, fully_connected_options, mean_options,
+    pool_options, softmax_options,
+};
+use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
+use tfmicro::tensor::{DType, QuantParams};
+
+fn run_once(model: &Model, input: &[i8], arena_kb: usize) -> Vec<i8> {
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(arena_kb * 1024);
+    let mut interp = MicroInterpreter::new(model, &resolver, &mut arena).expect("init");
+    interp.input_mut(0).unwrap().copy_from_i8(input).unwrap();
+    interp.invoke().expect("invoke");
+    interp.output(0).unwrap().as_i8().unwrap().to_vec()
+}
+
+fn run_once_optimized(model: &Model, input: &[i8], arena_kb: usize) -> Vec<i8> {
+    let resolver = OpResolver::with_optimized_ops();
+    let mut arena = Arena::new(arena_kb * 1024);
+    let mut interp = MicroInterpreter::new(model, &resolver, &mut arena).expect("init");
+    interp.input_mut(0).unwrap().copy_from_i8(input).unwrap();
+    interp.invoke().expect("invoke");
+    interp.output(0).unwrap().as_i8().unwrap().to_vec()
+}
+
+/// quantize params shared by the simple i8 chains below: scale 1, zp 0
+/// makes expected values easy to compute by hand.
+fn unit_q() -> QuantParams {
+    QuantParams::per_tensor(1.0, 0)
+}
+
+#[test]
+fn conv_relu_chain_end_to_end() {
+    // 2x2x1 input -> 1x1 conv (weight 2, bias 1) -> relu.
+    let mut b = ModelBuilder::new("conv-chain");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 2, 2, 1], None, unit_q());
+    let wbuf = b.add_buffer(&[2u8]); // i8 weight = 2
+    let t_w = b.add_quant_tensor("w", DType::I8, &[1, 1, 1, 1], Some(wbuf), unit_q());
+    let bbuf = b.add_buffer(&1i32.to_le_bytes());
+    let t_b = b.add_tensor("b", DType::I32, &[1], Some(bbuf));
+    let t_conv = b.add_quant_tensor("conv", DType::I8, &[1, 2, 2, 1], None, unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2, 2, 1], None, unit_q());
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w, t_b],
+        &[t_conv],
+        conv_options(Padding::Same, Activation::None, (1, 1), (1, 1), None),
+    );
+    b.add_op(BuiltinOp::Relu, &[t_conv], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    // x*2 + 1 then relu.
+    let out = run_once(&model, &[1, -2, 3, -4], 64);
+    assert_eq!(out, vec![3, 0, 7, 0]);
+
+    // Optimized kernels agree.
+    let out_opt = run_once_optimized(&model, &[1, -2, 3, -4], 64);
+    assert_eq!(out_opt, vec![3, 0, 7, 0]);
+}
+
+#[test]
+fn maxpool_then_fc() {
+    // 2x2 maxpool over 4x4, then a 4->2 fc with identity-ish weights.
+    let mut b = ModelBuilder::new("pool-fc");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4, 4, 1], None, unit_q());
+    let t_pool = b.add_quant_tensor("pool", DType::I8, &[1, 2, 2, 1], None, unit_q());
+    let t_flat = b.add_quant_tensor("flat", DType::I8, &[1, 4], None, unit_q());
+    // fc weights [2, 4]: row0 = sum all, row1 = -first.
+    let w: Vec<u8> = vec![1u8, 1, 1, 1, 0xFF, 0, 0, 0]; // -1 = 0xFF
+    let wbuf = b.add_buffer(&w);
+    let t_w = b.add_quant_tensor("w", DType::I8, &[2, 4], Some(wbuf), unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2], None, unit_q());
+    b.add_op(
+        BuiltinOp::MaxPool2d,
+        &[t_in],
+        &[t_pool],
+        pool_options(Padding::Valid, Activation::None, (2, 2), (2, 2)),
+    );
+    b.add_op(BuiltinOp::Reshape, &[t_pool], &[t_flat], vec![]);
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_flat, t_w, -1],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    #[rustfmt::skip]
+    let input = [
+        1i8, 2, 3, 4,
+        5, 6, 7, 8,
+        1, 1, 2, 2,
+        1, 1, 2, 2,
+    ];
+    // pools: [6, 8, 1, 2]; fc: [17, -6].
+    assert_eq!(run_once(&model, &input, 64), vec![17, -6]);
+    assert_eq!(run_once_optimized(&model, &input, 64), vec![17, -6]);
+}
+
+#[test]
+fn softmax_distribution() {
+    let mut b = ModelBuilder::new("softmax");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, QuantParams::per_tensor(0.25, 0));
+    let t_out = b.add_quant_tensor(
+        "out",
+        DType::I8,
+        &[1, 4],
+        None,
+        QuantParams::per_tensor(1.0 / 256.0, -128),
+    );
+    b.add_op(BuiltinOp::Softmax, &[t_in], &[t_out], softmax_options(1.0));
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let out = run_once(&model, &[0, 0, 0, 0], 64);
+    // Uniform: p = 0.25 -> q = 64 - 128 = -64.
+    assert_eq!(out, vec![-64; 4]);
+
+    let out = run_once(&model, &[40, 0, 0, 0], 64);
+    // First logit (10.0 real) dominates -> ~1.0 -> 127 (clamped).
+    assert!(out[0] > 100, "{out:?}");
+    assert!(out[1] < -120);
+}
+
+#[test]
+fn add_mul_broadcast_scalar() {
+    let mut b = ModelBuilder::new("arith");
+    let t_a = b.add_quant_tensor("a", DType::I8, &[1, 4], None, unit_q());
+    let sbuf = b.add_buffer(&[3u8]);
+    let t_s = b.add_quant_tensor("s", DType::I8, &[1], Some(sbuf), unit_q());
+    let t_add = b.add_quant_tensor("add", DType::I8, &[1, 4], None, unit_q());
+    let t_out = b.add_quant_tensor("mul", DType::I8, &[1, 4], None, unit_q());
+    b.add_op(BuiltinOp::Add, &[t_a, t_s], &[t_add], elementwise_options(Activation::None));
+    b.add_op(BuiltinOp::Mul, &[t_add, t_s], &[t_out], elementwise_options(Activation::None));
+    b.set_io(&[t_a], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    // (x + 3) * 3
+    let out = run_once(&model, &[0, 1, -1, 10], 64);
+    assert_eq!(out, vec![9, 12, 6, 39]);
+}
+
+#[test]
+fn pad_concat_mean_pipeline() {
+    let mut b = ModelBuilder::new("pcm");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 2, 2, 1], None, unit_q());
+    // pad H and W by 1 on each side -> 4x4.
+    let pads: Vec<u8> = [0i32, 0, 1, 1, 1, 1, 0, 0].iter().flat_map(|v| v.to_le_bytes()).collect();
+    let pbuf = b.add_buffer(&pads);
+    let t_pads = b.add_tensor("pads", DType::I32, &[4, 2], Some(pbuf));
+    let t_pad = b.add_quant_tensor("padded", DType::I8, &[1, 4, 4, 1], None, unit_q());
+    // concat the padded tensor with itself along channels -> [1,4,4,2].
+    let t_cc = b.add_quant_tensor("cc", DType::I8, &[1, 4, 4, 2], None, unit_q());
+    // mean over H,W -> [1, 2].
+    let axes: Vec<u8> = [1i32, 2].iter().flat_map(|v| v.to_le_bytes()).collect();
+    let abuf = b.add_buffer(&axes);
+    let t_axes = b.add_tensor("axes", DType::I32, &[2], Some(abuf));
+    let t_mean = b.add_quant_tensor("mean", DType::I8, &[1, 2], None, unit_q());
+    b.add_op(BuiltinOp::Pad, &[t_in, t_pads], &[t_pad], vec![]);
+    b.add_op(BuiltinOp::Concat, &[t_pad, t_pad], &[t_cc], concat_options(3, Activation::None));
+    b.add_op(BuiltinOp::Mean, &[t_cc, t_axes], &[t_mean], mean_options(false));
+    b.set_io(&[t_in], &[t_mean]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    // input sums to 16+16+16+16=64 over 16 padded cells -> mean 4.
+    let out = run_once(&model, &[16, 16, 16, 16], 64);
+    assert_eq!(out, vec![4, 4]);
+}
+
+#[test]
+fn quantize_dequantize_round_trip() {
+    let mut b = ModelBuilder::new("qdq");
+    let t_in = b.add_tensor("in", DType::F32, &[1, 4], None);
+    let t_q = b.add_quant_tensor("q", DType::I8, &[1, 4], None, QuantParams::per_tensor(0.5, -1));
+    let t_out = b.add_tensor("out", DType::F32, &[1, 4], None);
+    b.add_op(BuiltinOp::Quantize, &[t_in], &[t_q], vec![]);
+    b.add_op(BuiltinOp::Dequantize, &[t_q], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(64 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    let src = [1.0f32, -0.49, 2.3, 0.0];
+    interp.input_mut(0).unwrap().copy_from_f32(&src).unwrap();
+    interp.invoke().unwrap();
+    let out = interp.output(0).unwrap().as_f32().unwrap().to_vec();
+    for (o, s) in out.iter().zip(&src) {
+        assert!((o - s).abs() <= 0.25 + 1e-6, "{o} vs {s}");
+    }
+}
+
+#[test]
+fn logistic_saturates() {
+    let mut b = ModelBuilder::new("logistic");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 3], None, QuantParams::per_tensor(0.1, 0));
+    let t_out = b.add_quant_tensor(
+        "out",
+        DType::I8,
+        &[1, 3],
+        None,
+        QuantParams::per_tensor(1.0 / 256.0, -128),
+    );
+    b.add_op(BuiltinOp::Logistic, &[t_in], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+    let out = run_once(&model, &[0, 127, -128], 64);
+    assert_eq!(out[0], 0); // sigmoid(0)=0.5 -> 128-128 = 0
+    assert!(out[1] > 120); // ~1.0
+    assert_eq!(out[2], -128); // ~0.0
+}
+
+#[test]
+fn unregistered_op_fails_at_init_not_invoke() {
+    let mut b = ModelBuilder::new("missing-op");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4], None, unit_q());
+    b.add_op(BuiltinOp::Relu, &[t_in], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let resolver = OpResolver::with_capacity(1); // nothing registered
+    let mut arena = Arena::new(4 * 1024);
+    let err = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap_err();
+    assert!(err.to_string().contains("RELU"), "{err}");
+}
+
+#[test]
+fn arena_too_small_is_a_clean_error() {
+    let mut b = ModelBuilder::new("big");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 64, 64, 8], None, unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 64, 64, 8], None, unit_q());
+    b.add_op(BuiltinOp::Relu, &[t_in], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(1024); // way too small for 2x32KB tensors
+    let err = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap_err();
+    assert!(matches!(err, tfmicro::error::Error::ArenaExhausted { .. }), "{err}");
+}
+
+#[test]
+fn planner_choices_agree_on_results() {
+    // Same model through greedy and linear planners: identical outputs,
+    // linear needs more arena.
+    let mut b = ModelBuilder::new("planner-equiv");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 8, 8, 2], None, unit_q());
+    let mut prev = t_in;
+    for i in 0..4 {
+        let t = b.add_quant_tensor(&format!("relu{i}"), DType::I8, &[1, 8, 8, 2], None, unit_q());
+        b.add_op(BuiltinOp::Relu, &[prev], &[t], vec![]);
+        prev = t;
+    }
+    b.set_io(&[t_in], &[prev]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+    let resolver = OpResolver::with_reference_ops();
+
+    let mut input = vec![0i8; 128];
+    for (i, v) in input.iter_mut().enumerate() {
+        *v = (i as i8).wrapping_sub(64);
+    }
+
+    let run = |planner: PlannerChoice| -> (Vec<i8>, usize) {
+        let mut arena = Arena::new(64 * 1024);
+        let mut interp = MicroInterpreter::with_options(
+            &model,
+            &resolver,
+            arena.as_mut_slice(),
+            Options { planner },
+        )
+        .unwrap();
+        interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+        interp.invoke().unwrap();
+        let out = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+        (out, interp.arena_usage().nonpersistent)
+    };
+
+    let (out_g, mem_g) = run(PlannerChoice::Greedy);
+    let (out_l, mem_l) = run(PlannerChoice::Linear);
+    assert_eq!(out_g, out_l);
+    assert!(mem_g < mem_l, "greedy {mem_g} must beat linear {mem_l}");
+}
+
+#[test]
+fn multiple_invocations_are_deterministic() {
+    let mut b = ModelBuilder::new("repeat");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 16], None, unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 16], None, unit_q());
+    b.add_op(BuiltinOp::Relu, &[t_in], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(16 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    let input: Vec<i8> = (0..16).map(|i| i - 8).collect();
+    interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+    let mut first = None;
+    for _ in 0..10 {
+        interp.invoke().unwrap();
+        let out = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+        match &first {
+            None => first = Some(out),
+            Some(f) => assert_eq!(&out, f),
+        }
+    }
+    assert_eq!(interp.invocations(), 10);
+}
+
+#[test]
+fn shared_arena_multitenancy() {
+    // Two models over one SharedArena (Figure 5): tails stack, head shared.
+    let make_model = |n: usize, name: &str| -> Model {
+        let mut b = ModelBuilder::new(name);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, n as i32], None, unit_q());
+        let t_mid = b.add_quant_tensor("mid", DType::I8, &[1, n as i32], None, unit_q());
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, n as i32], None, unit_q());
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_mid], vec![]);
+        b.add_op(BuiltinOp::Relu, &[t_mid], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        Model::from_bytes(&b.finish()).unwrap()
+    };
+    let big = make_model(1024, "big");
+    let small = make_model(64, "small");
+    let resolver = OpResolver::with_reference_ops();
+
+    let shared = tfmicro::interpreter::SharedArena::new(64 * 1024);
+    let mut i_big = MicroInterpreter::new_shared(&big, &resolver, &shared).unwrap();
+    let mut i_small = MicroInterpreter::new_shared(&small, &resolver, &shared).unwrap();
+
+    // Non-persistent section is shared: sized by the bigger model.
+    assert!(shared.nonpersistent_used() >= 2 * 1024);
+    // Persistent sections stack per model.
+    assert!(shared.persistent_used() > 0);
+
+    // Sequential invocations work; outputs are correct per model.
+    let in_big = vec![-1i8; 1024];
+    i_big.input_mut(0).unwrap().copy_from_i8(&in_big).unwrap();
+    i_big.invoke().unwrap();
+    assert!(i_big.output(0).unwrap().as_i8().unwrap().iter().all(|&v| v == 0));
+
+    let in_small = vec![5i8; 64];
+    i_small.input_mut(0).unwrap().copy_from_i8(&in_small).unwrap();
+    i_small.invoke().unwrap();
+    assert!(i_small.output(0).unwrap().as_i8().unwrap().iter().all(|&v| v == 5));
+}
+
+#[test]
+fn variable_tensor_persists_across_invokes() {
+    // state' = state + in, via a temp (kernels must not alias their own
+    // input and output, so the write-back is a copy op).
+    let mut b = ModelBuilder::new("accum");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, unit_q());
+    let t_state = b.add_quant_tensor("state", DType::I8, &[1, 4], None, unit_q());
+    b.set_variable(t_state);
+    let t_tmp = b.add_quant_tensor("tmp", DType::I8, &[1, 4], None, unit_q());
+    b.add_op(BuiltinOp::Add, &[t_in, t_state], &[t_tmp], elementwise_options(Activation::None));
+    b.add_op(BuiltinOp::Reshape, &[t_tmp], &[t_state], vec![]);
+    b.set_io(&[t_in], &[t_state]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(16 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    interp.input_mut(0).unwrap().copy_from_i8(&[1, 2, 3, 4]).unwrap();
+    interp.invoke().unwrap();
+    interp.invoke().unwrap();
+    interp.invoke().unwrap();
+    assert_eq!(interp.output(0).unwrap().as_i8().unwrap(), &[3, 6, 9, 12]);
+    interp.reset_variables().unwrap();
+    interp.invoke().unwrap();
+    assert_eq!(interp.output(0).unwrap().as_i8().unwrap(), &[1, 2, 3, 4]);
+}
+
+#[test]
+fn arena_usage_detail_accounts_for_everything() {
+    // Detail categories must be consistent with the coarse usage numbers.
+    let mut b = ModelBuilder::new("detail");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 32], None, unit_q());
+    let t_state = b.add_quant_tensor("state", DType::I8, &[1, 32], None, unit_q());
+    b.set_variable(t_state);
+    let t_mid = b.add_quant_tensor("mid", DType::I8, &[1, 32], None, unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 32], None, unit_q());
+    b.add_op(BuiltinOp::Add, &[t_in, t_state], &[t_mid], elementwise_options(Activation::None));
+    b.add_op(BuiltinOp::Relu, &[t_mid], &[t_out], vec![]);
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(16 * 1024);
+    let interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+
+    let d = interp.arena_usage_detail();
+    let u = interp.arena_usage();
+    assert!(d.runtime_structs > 0);
+    assert_eq!(d.variables, 32, "one 32-byte variable tensor");
+    assert_eq!(d.activation_plan, u.nonpersistent);
+    // tensors_sum: in + mid + out (state is a variable, excluded).
+    assert_eq!(d.tensors_sum, 96);
+    assert!(d.activation_plan <= d.tensors_sum + d.scratch_sum + 32,
+            "plan cannot exceed sum of parts (plus alignment)");
+    // Persistent side is at least its categorized parts.
+    assert!(u.persistent >= d.runtime_structs + d.op_data + d.variables);
+    assert!(d.report().contains("runtime structs"));
+}
