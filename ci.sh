@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verify plus lint gates.
+#
+#   ./ci.sh          # build + test + fmt + clippy
+#   ./ci.sh --quick  # tier-1 verify only (what the PR driver runs)
+#
+# The crate is std-only (no dependencies), so everything here works
+# offline. fmt/clippy steps are skipped with a warning if the components
+# are not installed rather than failing the whole run.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--quick" ]]; then
+    echo "CI quick gate passed."
+    exit 0
+fi
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "warning: rustfmt not installed; skipping fmt gate" >&2
+fi
+
+echo "== cargo clippy -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "warning: clippy not installed; skipping clippy gate" >&2
+fi
+
+echo "CI passed."

@@ -41,6 +41,12 @@ pub enum Section {
 pub struct ArenaUsage {
     /// Bytes allocated with interpreter lifetime (tail stack).
     pub persistent: usize,
+    /// Of `persistent`: bytes owned by kernel persistent buffers
+    /// (packed weights, folded biases) requested via
+    /// `PrepareContext::request_persistent`. Reported separately so the
+    /// Table-2-style accounting stays honest about what prepare-time
+    /// precomputation costs.
+    pub kernel_buffers: usize,
     /// Bytes allocated with function lifetime (head high watermark).
     pub nonpersistent: usize,
     /// Peak simultaneous use (head watermark + tail watermark).
@@ -68,6 +74,9 @@ pub struct TwoStackAllocator {
     temp_watermark: usize,
     /// Low watermark of the tail stack.
     tail_watermark: usize,
+    /// Tail bytes (including alignment slack) consumed by kernel
+    /// persistent buffers, tracked for the ArenaUsage breakdown.
+    kernel_buffers: usize,
     /// Set once initialization completes; further allocation is an error.
     sealed: bool,
 }
@@ -94,6 +103,7 @@ impl TwoStackAllocator {
             head_watermark: 0,
             temp_watermark: 0,
             tail_watermark: capacity,
+            kernel_buffers: 0,
             sealed: false,
         }
     }
@@ -119,6 +129,18 @@ impl TwoStackAllocator {
         self.tail = new_tail;
         self.tail_watermark = self.tail_watermark.min(new_tail);
         Ok(new_tail)
+    }
+
+    /// Allocate a kernel persistent buffer: identical to [`alloc_tail`]
+    /// (interpreter lifetime) but tagged so `usage()` can report
+    /// kernel-owned bytes as their own line.
+    ///
+    /// [`alloc_tail`]: TwoStackAllocator::alloc_tail
+    pub fn alloc_tail_kernel(&mut self, size: usize, align: usize) -> Result<usize> {
+        let before = self.tail;
+        let off = self.alloc_tail(size, align)?;
+        self.kernel_buffers += before - off;
+        Ok(off)
     }
 
     /// Allocate `size` bytes with function lifetime (head stack).
@@ -211,6 +233,7 @@ impl TwoStackAllocator {
     pub fn usage(&self) -> ArenaUsage {
         ArenaUsage {
             persistent: self.capacity - self.tail_watermark,
+            kernel_buffers: self.kernel_buffers,
             nonpersistent: self.head_watermark,
             total: self.head_watermark + (self.capacity - self.tail_watermark),
             capacity: self.capacity,
@@ -310,6 +333,19 @@ mod tests {
         assert_eq!(u.persistent, 200);
         assert_eq!(u.total, 300);
         assert_eq!(u.capacity, 1000);
+    }
+
+    #[test]
+    fn kernel_buffers_tracked_within_persistent() {
+        let mut a = TwoStackAllocator::new(1024);
+        a.alloc_tail(100, 4).unwrap();
+        a.alloc_tail_kernel(64, 16).unwrap();
+        a.alloc_tail_kernel(32, 16).unwrap();
+        let u = a.usage();
+        assert!(u.kernel_buffers >= 96, "alignment slack counts: {}", u.kernel_buffers);
+        assert!(u.kernel_buffers <= u.persistent);
+        // Plain tail allocations are not charged as kernel buffers.
+        assert!(u.persistent >= u.kernel_buffers + 100);
     }
 
     #[test]

@@ -184,6 +184,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             let u = interp.arena_usage();
             println!("model: {}", model.description());
             println!("persistent:    {}", fmt_kb(u.persistent));
+            println!("  kernel bufs: {}", fmt_kb(u.kernel_buffers));
             println!("nonpersistent: {}", fmt_kb(u.nonpersistent));
             println!("total:         {}", fmt_kb(u.total));
             println!("flash (model): {}", fmt_kb(model.serialized_size()));

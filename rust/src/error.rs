@@ -5,18 +5,18 @@
 //! we raise an application-level error"). We mirror that with a single
 //! non-panicking error enum; the interpreter never unwinds across the
 //! kernel boundary.
-
-use thiserror::Error;
+//!
+//! Display/Error impls are hand-written rather than derived so the crate
+//! stays dependency-free and builds offline.
 
 /// Framework-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// All failure modes surfaced by the framework.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// The caller-supplied arena could not satisfy an allocation.
     /// Mirrors the paper's arena-exhaustion application error (§4.4.1).
-    #[error("arena exhausted: requested {requested} bytes ({section}), {available} available of {capacity}")]
     ArenaExhausted {
         /// Bytes requested by the failing allocation.
         requested: usize,
@@ -30,24 +30,19 @@ pub enum Error {
 
     /// Allocation was attempted outside the initialization phase
     /// (the framework forbids allocation during `invoke`, §4.4.1).
-    #[error("allocation attempted after initialization phase: {0}")]
     AllocAfterInit(&'static str),
 
     /// The serialized model failed validation.
-    #[error("malformed model: {0}")]
     MalformedModel(String),
 
     /// The model references an operator the resolver does not provide
     /// (the OpResolver links only registered kernels, §4.1).
-    #[error("unsupported operator: {0} (not registered in the OpResolver)")]
     UnsupportedOp(String),
 
     /// The resolver's fixed capacity was exceeded.
-    #[error("op resolver full: capacity {0}")]
     ResolverFull(usize),
 
     /// A kernel rejected its inputs during the prepare phase.
-    #[error("prepare failed for op #{op_index} ({op_name}): {reason}")]
     PrepareFailed {
         /// Index of the failing operation in the model's execution order.
         op_index: usize,
@@ -58,7 +53,6 @@ pub enum Error {
     },
 
     /// A kernel failed during evaluation.
-    #[error("invoke failed for op #{op_index} ({op_name}): {reason}")]
     InvokeFailed {
         /// Index of the failing operation in the model's execution order.
         op_index: usize,
@@ -69,30 +63,70 @@ pub enum Error {
     },
 
     /// Tensor index out of range or of the wrong type.
-    #[error("invalid tensor access: {0}")]
     InvalidTensor(String),
 
     /// Shape or dtype mismatch.
-    #[error("shape/type mismatch: {0}")]
     ShapeMismatch(String),
 
     /// The memory planner could not produce a plan.
-    #[error("memory planning failed: {0}")]
     PlanFailed(String),
 
     /// Error from the XLA/PJRT runtime (optimized-kernel path only;
     /// the pure-interpreter path never touches this).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// The serving layer rejected or dropped a request.
-    #[error("serving error: {0}")]
     Serving(String),
 
     /// I/O error loading a model or artifact from disk (host-side tooling
     /// only; the embedded-style API works from in-memory byte slices).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ArenaExhausted { requested, available, capacity, section } => write!(
+                f,
+                "arena exhausted: requested {requested} bytes ({section}), {available} available of {capacity}"
+            ),
+            Error::AllocAfterInit(what) => {
+                write!(f, "allocation attempted after initialization phase: {what}")
+            }
+            Error::MalformedModel(msg) => write!(f, "malformed model: {msg}"),
+            Error::UnsupportedOp(op) => {
+                write!(f, "unsupported operator: {op} (not registered in the OpResolver)")
+            }
+            Error::ResolverFull(cap) => write!(f, "op resolver full: capacity {cap}"),
+            Error::PrepareFailed { op_index, op_name, reason } => {
+                write!(f, "prepare failed for op #{op_index} ({op_name}): {reason}")
+            }
+            Error::InvokeFailed { op_index, op_name, reason } => {
+                write!(f, "invoke failed for op #{op_index} ({op_name}): {reason}")
+            }
+            Error::InvalidTensor(msg) => write!(f, "invalid tensor access: {msg}"),
+            Error::ShapeMismatch(msg) => write!(f, "shape/type mismatch: {msg}"),
+            Error::PlanFailed(msg) => write!(f, "memory planning failed: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Serving(msg) => write!(f, "serving error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

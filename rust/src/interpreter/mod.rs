@@ -6,9 +6,14 @@
 //!    which kernels link into the binary),
 //! 2. supplies a contiguous memory **arena**,
 //! 3. constructs a `MicroInterpreter`, which performs *all* allocation up
-//!    front: kernel `prepare` calls communicate scratch needs, lifetimes
-//!    are analyzed, the memory planner places every intermediate tensor,
-//!    and the arena is sealed — no allocation can happen afterwards,
+//!    front in the **prepare → plan → populate** sequence: kernel
+//!    `prepare` calls communicate scratch and persistent-buffer needs,
+//!    lifetimes are analyzed, the memory planner places every
+//!    intermediate tensor, kernel persistent buffers are carved from the
+//!    arena tail, the arena is sealed — no allocation can happen
+//!    afterwards — and finally each kernel's `populate` runs once to fill
+//!    its persistent buffers (repacked weights, folded biases) so that
+//!    model-constant work never executes on the inference path,
 //! 4. per inference: populate input views, call [`MicroInterpreter::invoke`]
 //!    (a simple blocking loop over the topologically sorted op list), read
 //!    output views.
@@ -73,7 +78,7 @@ impl InvokeObserver for () {
 
 enum Backing<'a> {
     Exclusive { base: *mut u8, len: usize, alloc: TwoStackAllocator },
-    Shared { arena: &'a SharedArena, persistent: usize, head_size: usize },
+    Shared { arena: &'a SharedArena, persistent: usize, head_size: usize, kernel_buffers: usize },
 }
 
 // SAFETY: the Exclusive variant's pointer derives from a `&'a mut [u8]`
@@ -89,6 +94,21 @@ impl<'a> Backing<'a> {
             Backing::Shared { arena, persistent, .. } => {
                 let off = arena.alloc_tail(size, align)?;
                 *persistent = arena.persistent_used();
+                Ok(off)
+            }
+        }
+    }
+
+    /// Tail allocation tagged as a kernel persistent buffer (packed
+    /// weights, folded biases) for the ArenaUsage breakdown.
+    fn alloc_tail_kernel(&mut self, size: usize, align: usize) -> Result<usize> {
+        match self {
+            Backing::Exclusive { alloc, .. } => alloc.alloc_tail_kernel(size, align),
+            Backing::Shared { arena, persistent, kernel_buffers, .. } => {
+                let before = arena.persistent_used();
+                let off = arena.alloc_tail(size, align)?;
+                *persistent = arena.persistent_used();
+                *kernel_buffers += arena.persistent_used() - before;
                 Ok(off)
             }
         }
@@ -136,6 +156,9 @@ pub struct ArenaUsageDetail {
     pub runtime_structs: usize,
     /// Prepared per-op kernel state (requant tables etc.) — tail.
     pub op_data: usize,
+    /// Kernel persistent buffers (packed weights, folded biases) filled
+    /// during the populate pass — tail.
+    pub kernel_buffers: usize,
     /// Variable tensors (persistent state) — tail.
     pub variables: usize,
     /// The planned non-persistent region (activations + scratch) — head.
@@ -150,9 +173,10 @@ impl ArenaUsageDetail {
     /// Multi-line report (used by `tfmicro mem --detail`).
     pub fn report(&self) -> String {
         format!(
-            "persistent:\n  runtime structs {:>8} B\n  op data         {:>8} B\n  variables       {:>8} B\nnon-persistent (planned) {} B\n  activations sum {:>8} B (compaction saves {} B)\n  scratch sum     {:>8} B",
+            "persistent:\n  runtime structs {:>8} B\n  op data         {:>8} B\n  kernel buffers  {:>8} B\n  variables       {:>8} B\nnon-persistent (planned) {} B\n  activations sum {:>8} B (compaction saves {} B)\n  scratch sum     {:>8} B",
             self.runtime_structs,
             self.op_data,
+            self.kernel_buffers,
             self.variables,
             self.activation_plan,
             self.tensors_sum,
@@ -170,6 +194,8 @@ pub struct MicroInterpreter<'m, 'a> {
     kernels: Vec<&'m dyn Kernel>,
     op_data: Vec<OpData>,
     op_scratch: Vec<Vec<(usize, usize)>>,
+    /// (offset, len) of each persistent kernel buffer, per op.
+    op_persistent: Vec<Vec<(usize, usize)>>,
     usage: ArenaUsage,
     detail: ArenaUsageDetail,
     invocations: u64,
@@ -232,7 +258,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         arena: &'a SharedArena,
         options: Options,
     ) -> Result<Self> {
-        let backing = Backing::Shared { arena, persistent: 0, head_size: 0 };
+        let backing = Backing::Shared { arena, persistent: 0, head_size: 0, kernel_buffers: 0 };
         Self::build(model, resolver, backing, options)
     }
 
@@ -287,25 +313,44 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
             }
         }
 
-        // --- prepare phase (kernels request scratch, store op data) -----
+        // --- prepare phase (kernels request scratch + persistent buffers,
+        //     store op data) --------------------------------------------
         let mut op_data: Vec<OpData> = (0..n_ops).map(|_| OpData::None).collect();
         let mut scratch_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+        let mut persistent_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
         let mut persistent_opdata = 0usize;
         for (i, op) in model.operators().iter().enumerate() {
             let mut sizes = Vec::new();
+            let mut psizes = Vec::new();
             let mut ctx = PrepareContext::new(
                 i,
                 op,
                 model,
                 &mut sizes,
+                &mut psizes,
                 &mut op_data[i],
                 &mut persistent_opdata,
             );
             kernels[i].prepare(&mut ctx)?;
             scratch_sizes_per_op.push(sizes);
+            persistent_sizes_per_op.push(psizes);
         }
         backing.alloc_tail(persistent_opdata, DEFAULT_ALIGN)?;
         detail.op_data = persistent_opdata;
+
+        // --- kernel persistent buffers (tail, interpreter lifetime) -----
+        // Allocated before planning so the head/tail crossing check sees
+        // them; filled later by the populate pass.
+        let mut op_persistent: Vec<Vec<(usize, usize)>> = Vec::with_capacity(n_ops);
+        for sizes in &persistent_sizes_per_op {
+            let mut bufs = Vec::with_capacity(sizes.len());
+            for &sz in sizes {
+                let off = backing.alloc_tail_kernel(sz, DEFAULT_ALIGN)?;
+                bufs.push((off, sz));
+                detail.kernel_buffers += sz;
+            }
+            op_persistent.push(bufs);
+        }
 
         // --- lifetime analysis + planning --------------------------------
         let info = analyze_lifetimes(model);
@@ -368,10 +413,36 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
 
         backing.seal();
 
+        // --- populate pass: kernels fill their persistent buffers once --
+        // Runs after sealing (the plan is final, offsets are stable) so
+        // kernels see exactly the invoke-time memory layout. This is the
+        // hoist point for model-constant work: packed weights, folded
+        // biases, precomputed kernel sums.
+        {
+            let base = backing.base_ptr();
+            let len = backing.len();
+            for (i, op) in model.operators().iter().enumerate() {
+                let ctx = OpContext::new(
+                    i,
+                    op,
+                    model.tensors(),
+                    &locs,
+                    model.data(),
+                    base,
+                    len,
+                    &op_scratch[i],
+                    &op_persistent[i],
+                    &op_data[i],
+                );
+                kernels[i].populate(&ctx)?;
+            }
+        }
+
         let usage = match &backing {
             Backing::Exclusive { alloc, .. } => alloc.usage(),
-            Backing::Shared { arena, persistent, head_size } => ArenaUsage {
+            Backing::Shared { arena, persistent, head_size, kernel_buffers } => ArenaUsage {
                 persistent: *persistent,
+                kernel_buffers: *kernel_buffers,
                 nonpersistent: *head_size,
                 total: *persistent + *head_size,
                 capacity: arena.capacity(),
@@ -385,6 +456,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
             kernels,
             op_data,
             op_scratch,
+            op_persistent,
             usage,
             detail,
             invocations: 0,
@@ -518,6 +590,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                     base,
                     len,
                     &self.op_scratch[i],
+                    &self.op_persistent[i],
                     &self.op_data[i],
                 );
                 self.kernels[i].invoke(&ctx)?;

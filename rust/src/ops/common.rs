@@ -68,6 +68,21 @@ pub struct ChannelQuant {
     pub mult: QuantizedMultiplier,
 }
 
+/// Handles to prepare-time packed-weight state (optimized kernels only).
+///
+/// Filled during the populate pass; `None` fields / absence mean the
+/// kernel falls back to the unpacked invoke path (non-constant weights,
+/// unsupported geometry).
+#[derive(Debug, Clone, Copy)]
+pub struct PackedSpec {
+    /// Channel-blocked repacked filter (see [`crate::ops::opt_ops::gemm`]);
+    /// `None` for kernels that only fold biases (depthwise).
+    pub filter: Option<crate::ops::PersistentHandle>,
+    /// Folded per-channel bias: `bias[oc] + input_offset * Σ filter[oc]`,
+    /// one i32 per output channel.
+    pub fused_bias: crate::ops::PersistentHandle,
+}
+
 /// Prepared state for conv-style kernels.
 #[derive(Debug, Default)]
 pub struct ConvData {
@@ -90,6 +105,8 @@ pub struct ConvData {
     pub act_max: i32,
     /// Float activation clamp, for f32 models.
     pub fact: (f32, f32),
+    /// Packed-weight / folded-bias handles (optimized int8 path only).
+    pub packed: Option<PackedSpec>,
 }
 
 /// Prepared state for fully-connected kernels.
@@ -109,6 +126,8 @@ pub struct FcData {
     pub act_max: i32,
     /// Float activation clamp.
     pub fact: (f32, f32),
+    /// Packed-weight / folded-bias handles (optimized int8 path only).
+    pub packed: Option<PackedSpec>,
 }
 
 /// Prepared state for pooling kernels.

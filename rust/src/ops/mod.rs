@@ -1,13 +1,28 @@
 //! Operators: the calculation units of the graph (§4.7).
 //!
-//! Kernels follow TF Micro's two-phase protocol:
+//! Kernels follow TF Micro's **prepare → plan → populate → invoke**
+//! protocol:
 //!
 //! 1. **prepare** — called once per op during interpreter initialization.
 //!    The kernel validates shapes/dtypes, precomputes quantization state
-//!    (fixed-point multipliers, activation ranges), requests scratch
-//!    memory, and stores per-op data. All allocation happens here.
-//! 2. **invoke** — called on every inference. Pure computation over
-//!    tensor views; no allocation (the arena is sealed by then).
+//!    (fixed-point multipliers, activation ranges), requests invoke-time
+//!    scratch *and* interpreter-lifetime persistent buffers
+//!    ([`PrepareContext::request_scratch`] /
+//!    [`PrepareContext::request_persistent`]), and stores per-op data.
+//!    All allocation requests happen here.
+//! 2. **plan** — interpreter-side: scratch lifetimes are analyzed, the
+//!    memory planner places every intermediate tensor, persistent buffers
+//!    are carved from the arena's tail section, and the arena is sealed.
+//! 3. **populate** — called once per op after the plan is final. The
+//!    kernel fills the persistent buffers it requested — repacked weight
+//!    layouts, folded biases, lookup tables — reading constant tensors
+//!    through the same [`OpContext`] it will see at invoke time. This is
+//!    where model-constant work is hoisted out of the inference path
+//!    (the CMSIS-NN "kernel sums" trick, §4.7–§4.8): anything derivable
+//!    from weights + quantization params is computed exactly once.
+//! 4. **invoke** — called on every inference. Pure computation over
+//!    tensor views; no allocation (the arena is sealed by then), and no
+//!    recomputation of model-constant values.
 //!
 //! The boundary is intentionally narrow — the kernel sees only
 //! [`PrepareContext`] / [`OpContext`], never interpreter internals —
@@ -71,6 +86,15 @@ pub enum KernelFlavor {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScratchHandle(pub(crate) usize);
 
+/// Handle to a kernel-owned persistent buffer requested during prepare.
+///
+/// Persistent buffers live in the arena's tail (interpreter-lifetime)
+/// section, are filled once during the populate pass, and are read-only
+/// thereafter. They hold prepare-time precomputation products: repacked
+/// weights, folded biases, lookup tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PersistentHandle(pub(crate) usize);
+
 /// Per-op state computed during prepare and read during invoke.
 ///
 /// A concrete enum (rather than `dyn Any`) keeps invoke-path access
@@ -121,6 +145,13 @@ pub trait Kernel: Send + Sync {
     /// Validate and precompute; called once at initialization.
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()>;
 
+    /// Fill persistent buffers requested during prepare; called once after
+    /// the memory plan is sealed (the populate pass). Kernels without
+    /// persistent state keep the no-op default.
+    fn populate(&self, _ctx: &OpContext) -> Result<()> {
+        Ok(())
+    }
+
     /// Execute; called per inference, allocation-free.
     fn invoke(&self, ctx: &OpContext) -> Result<()>;
 }
@@ -133,6 +164,7 @@ pub struct PrepareContext<'m, 'i> {
     pub operator: &'m Operator,
     model: &'m Model,
     scratch_sizes: &'i mut Vec<usize>,
+    persistent_sizes: &'i mut Vec<usize>,
     op_data: &'i mut OpData,
     persistent_bytes: &'i mut usize,
 }
@@ -144,10 +176,19 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
         operator: &'m Operator,
         model: &'m Model,
         scratch_sizes: &'i mut Vec<usize>,
+        persistent_sizes: &'i mut Vec<usize>,
         op_data: &'i mut OpData,
         persistent_bytes: &'i mut usize,
     ) -> Self {
-        PrepareContext { op_index, operator, model, scratch_sizes, op_data, persistent_bytes }
+        PrepareContext {
+            op_index,
+            operator,
+            model,
+            scratch_sizes,
+            persistent_sizes,
+            op_data,
+            persistent_bytes,
+        }
     }
 
     /// Number of declared inputs (including omitted optionals).
@@ -208,10 +249,36 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
         ScratchHandle(self.scratch_sizes.len() - 1)
     }
 
+    /// Request a kernel-owned persistent byte buffer of `bytes`.
+    ///
+    /// Storage comes from the arena's tail (interpreter-lifetime) section
+    /// and is reported as `kernel_buffers` in [`crate::arena::ArenaUsage`].
+    /// The kernel fills it once in [`Kernel::populate`] and reads it on
+    /// every invoke via [`OpContext::persistent_bytes`] (TF Micro's
+    /// `RequestPersistentBuffer`).
+    pub fn request_persistent(&mut self, bytes: usize) -> PersistentHandle {
+        self.persistent_sizes.push(bytes);
+        PersistentHandle(self.persistent_sizes.len() - 1)
+    }
+
     /// Store prepared per-op state; charged to the persistent section.
     pub fn set_op_data(&mut self, data: OpData) {
         *self.persistent_bytes += data.arena_bytes();
         *self.op_data = data;
+    }
+
+    /// Mutable access to already-stored per-op state, so an optimized
+    /// kernel can layer extra prepared fields (e.g. packed-weight handles)
+    /// on top of a shared prepare helper's output.
+    pub fn op_data_mut(&mut self) -> &mut OpData {
+        self.op_data
+    }
+
+    /// True if the op's weight tensor (input 1) and optional bias
+    /// (input 2) are model constants — the precondition for prepare-time
+    /// weight packing and bias folding.
+    pub fn weights_are_const(&self) -> bool {
+        self.input_const(1).is_ok() && (!self.has_input(2) || self.input_const(2).is_ok())
     }
 
     /// Convenience: error with this op's identity attached.
@@ -233,6 +300,8 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
 /// * Arena tensor ranges for simultaneously-live tensors are disjoint
 ///   (verified memory plan), so an op's inputs never alias its outputs.
 /// * Scratch ranges are disjoint from all live tensor ranges.
+/// * Persistent kernel buffers live in the tail section, disjoint from
+///   the planned head region and from every other op's buffers.
 /// * Constant ranges live in the immutable model bytes and are never
 ///   handed out mutably.
 ///
@@ -251,6 +320,8 @@ pub struct OpContext<'r> {
     arena_len: usize,
     /// (offset, len) of each scratch buffer this op requested.
     scratch: &'r [(usize, usize)],
+    /// (offset, len) of each persistent buffer this op requested.
+    persistent: &'r [(usize, usize)],
     op_data: &'r OpData,
 }
 
@@ -271,6 +342,7 @@ impl<'r> OpContext<'r> {
         arena: *mut u8,
         arena_len: usize,
         scratch: &'r [(usize, usize)],
+        persistent: &'r [(usize, usize)],
         op_data: &'r OpData,
     ) -> Self {
         OpContext {
@@ -282,6 +354,7 @@ impl<'r> OpContext<'r> {
             arena,
             arena_len,
             scratch,
+            persistent,
             op_data,
         }
     }
@@ -418,9 +491,41 @@ impl<'r> OpContext<'r> {
         self.bytes_at_mut(DataLoc::Arena { off, len })
     }
 
+    /// Persistent buffer requested during prepare: mutable during the
+    /// populate pass (to fill it), treated as read-only at invoke time.
+    pub fn persistent_bytes(&self, h: PersistentHandle) -> Result<&'r mut [u8]> {
+        let &(off, len) = self.persistent.get(h.0).ok_or_else(|| {
+            Error::InvalidTensor(format!("persistent handle {} out of range", h.0))
+        })?;
+        self.bytes_at_mut(DataLoc::Arena { off, len })
+    }
+
+    /// Persistent buffer viewed as i8 (packed-weight layouts).
+    pub fn persistent_i8(&self, h: PersistentHandle) -> Result<&'r [i8]> {
+        Ok(cast_i8(self.persistent_bytes(h)?))
+    }
+
+    /// Persistent buffer viewed as i32 (folded-bias tables).
+    pub fn persistent_i32(&self, h: PersistentHandle) -> Result<&'r [i32]> {
+        cast_i32(self.persistent_bytes(h)?)
+    }
+
     /// Convenience: error with this op's identity attached.
     pub fn fail(&self, reason: impl Into<String>) -> Error {
         Error::InvokeFailed {
+            op_index: self.op_index,
+            op_name: self.operator.opcode.name(),
+            reason: reason.into(),
+        }
+    }
+
+    /// Init-time variant of [`fail`]: populate-pass errors happen during
+    /// interpreter construction, so they report as prepare failures, not
+    /// invoke failures.
+    ///
+    /// [`fail`]: OpContext::fail
+    pub fn fail_init(&self, reason: impl Into<String>) -> Error {
+        Error::PrepareFailed {
             op_index: self.op_index,
             op_name: self.operator.opcode.name(),
             reason: reason.into(),

@@ -1,24 +1,136 @@
 //! Optimized int8 depthwise conv: interior/border split + contiguous
-//! channel inner loop.
+//! channel inner loop, with prepare-time folded biases.
 //!
 //! Mirrors `arm_depthwise_conv_s8`: output pixels whose window lies fully
 //! inside the input skip all bounds checks; only the border runs the
 //! guarded path. For multiplier-1 layers (all of MobileNet) the filter and
 //! input walk the same channel stride, so the inner loop is a contiguous
 //! per-channel MAC.
+//!
+//! The interior fast path consumes the populate-pass precompute: with
+//! every tap valid, `Σ (x+io)·f = Σ x·f + io·Σf`, so the model-constant
+//! `bias[ch] + io·Σf[ch]` is folded once at init and the interior MAC is
+//! a raw widening i8·i8 dot. The border path keeps the `(x+io)·f` form
+//! (skipped padding taps make the folded correction wrong there).
 
 use crate::error::Result;
+use crate::ops::common::PackedSpec;
+use crate::ops::ref_ops::conv::ConvShape;
 use crate::ops::ref_ops::depthwise::{depthwise_shape, prepare_depthwise};
 use crate::ops::ref_ops::{depthwise_conv2d_f32, depthwise_conv2d_i8, ConvQuant};
-use crate::ops::ref_ops::conv::ConvShape;
 use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
+use crate::schema::format::OpOptions;
 use crate::tensor::DType;
 
 /// Optimized DepthwiseConv2d kernel.
 pub struct OptDepthwiseConvKernel;
 
-/// Interior-optimized int8 depthwise conv (multiplier 1 fast path;
-/// general multiplier falls back to the reference loops).
+/// Fold `bias[ch] + input_offset·Σf[ch]` for a depthwise filter
+/// (layout `[1, kh, kw, c]`). Populate-pass precompute.
+pub fn fold_depthwise_bias(
+    filter: &[i8],
+    kh: usize,
+    kw: usize,
+    c: usize,
+    input_offset: i32,
+    bias: Option<&[i32]>,
+    fused: &mut [i32],
+) {
+    debug_assert!(fused.len() >= c);
+    for ch in 0..c {
+        let mut f_sum = 0i32;
+        for tap in 0..kh * kw {
+            f_sum += filter[tap * c + ch] as i32;
+        }
+        fused[ch] = bias
+            .map(|bv| bv[ch])
+            .unwrap_or(0)
+            .wrapping_add(input_offset.wrapping_mul(f_sum));
+    }
+}
+
+/// Interior-optimized int8 depthwise conv over a prepare-time folded
+/// bias (multiplier 1, dilation 1 only — enforced by the caller).
+/// `bias` is still needed for border pixels, where taps are skipped.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_i8_folded(
+    s: &ConvShape,
+    q: &ConvQuant,
+    input: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    fused_bias: &[i32],
+    output: &mut [i8],
+) {
+    debug_assert!(s.dil_h == 1 && s.dil_w == 1 && s.in_c == s.out_c);
+    let c = s.in_c; // == out_c
+    for b in 0..s.batch {
+        let in_b = &input[b * s.in_h * s.in_w * c..];
+        for oy in 0..s.out_h {
+            let origin_y = (oy * s.stride_h) as isize - s.pad_top as isize;
+            let y_interior = origin_y >= 0 && origin_y + s.kh as isize <= s.in_h as isize;
+            for ox in 0..s.out_w {
+                let origin_x = (ox * s.stride_w) as isize - s.pad_left as isize;
+                let interior =
+                    y_interior && origin_x >= 0 && origin_x + s.kw as isize <= s.in_w as isize;
+                let out_base = ((b * s.out_h + oy) * s.out_w + ox) * c;
+                if interior {
+                    // No bounds checks, no per-tap input offset: the folded
+                    // bias carries io·Σf, leaving a raw widening i8·i8 MAC.
+                    let oy0 = origin_y as usize;
+                    let ox0 = origin_x as usize;
+                    for ch in 0..c {
+                        let mut acc: i32 = fused_bias[ch];
+                        for ky in 0..s.kh {
+                            let in_row = &in_b[((oy0 + ky) * s.in_w + ox0) * c + ch..];
+                            let f_row = &filter[(ky * s.kw) * c + ch..];
+                            let mut i_idx = 0usize;
+                            let mut f_idx = 0usize;
+                            for _ in 0..s.kw {
+                                acc = acc.wrapping_add(
+                                    (in_row[i_idx] as i16 * f_row[f_idx] as i16) as i32,
+                                );
+                                i_idx += c;
+                                f_idx += c;
+                            }
+                        }
+                        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
+                        output[out_base + ch] = scaled.clamp(q.act_min, q.act_max) as i8;
+                    }
+                } else {
+                    // Border: guarded taps; folded correction does not
+                    // apply (missing taps), so use the original bias.
+                    for ch in 0..c {
+                        let mut acc: i32 = bias.map(|bv| bv[ch]).unwrap_or(0);
+                        for ky in 0..s.kh {
+                            let iy = origin_y + ky as isize;
+                            if iy < 0 || iy >= s.in_h as isize {
+                                continue;
+                            }
+                            for kx in 0..s.kw {
+                                let ix = origin_x + kx as isize;
+                                if ix < 0 || ix >= s.in_w as isize {
+                                    continue;
+                                }
+                                acc = acc.wrapping_add(
+                                    (in_b[((iy as usize) * s.in_w + ix as usize) * c + ch] as i32
+                                        + q.input_offset)
+                                        * filter[(ky * s.kw + kx) * c + ch] as i32,
+                                );
+                            }
+                        }
+                        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
+                        output[out_base + ch] = scaled.clamp(q.act_min, q.act_max) as i8;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Interior-optimized int8 depthwise conv without precomputed state
+/// (multiplier 1 fast path; general multiplier falls back to the
+/// reference loops). Fallback path and the bench baseline.
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_conv2d_i8_opt(
     s: &ConvShape,
@@ -107,7 +219,49 @@ impl Kernel for OptDepthwiseConvKernel {
     }
 
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
-        prepare_depthwise(ctx)
+        prepare_depthwise(ctx)?;
+        let OpOptions::Conv(opts) = ctx.operator.options else {
+            return Err(ctx.fail("missing conv options"));
+        };
+        let input = ctx.input(0)?;
+        let filter = ctx.input(1)?;
+        if input.dtype == DType::I8 {
+            let (_, _, _, out_c) = filter.shape.as_nhwc()?;
+            let fast_path = opts.depth_multiplier == 1
+                && opts.dilation_h == 1
+                && opts.dilation_w == 1;
+            let const_weights = ctx.weights_are_const();
+            if fast_path && const_weights {
+                let fb = ctx.request_persistent(out_c * std::mem::size_of::<i32>());
+                if let OpData::Conv(data) = ctx.op_data_mut() {
+                    // Depthwise folds biases only; no weight repacking yet
+                    // (see ROADMAP "Open items").
+                    data.packed = Some(PackedSpec { filter: None, fused_bias: fb });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn populate(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::Conv(data) = ctx.op_data() else {
+            return Ok(());
+        };
+        let Some(spec) = data.packed else {
+            return Ok(());
+        };
+        let (_, kh, kw, out_c) = ctx.input(1)?.shape.as_nhwc()?;
+        let filter = ctx.input_i8(1)?;
+        if filter.len() < kh * kw * out_c {
+            return Err(ctx.fail_init("filter data shorter than its shape"));
+        }
+        let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+        if bias.is_some_and(|b| b.len() < out_c) {
+            return Err(ctx.fail_init("bias shorter than output channels"));
+        }
+        let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
+        fold_depthwise_bias(filter, kh, kw, out_c, data.input_offset, bias, fused);
+        Ok(())
     }
 
     fn invoke(&self, ctx: &OpContext) -> Result<()> {
@@ -125,7 +279,21 @@ impl Kernel for OptDepthwiseConvKernel {
                     act_max: data.act_max,
                 };
                 let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
-                depthwise_conv2d_i8_opt(&s, mult, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+                match data.packed {
+                    Some(spec) if mult == 1 => {
+                        let fused = ctx.persistent_i32(spec.fused_bias)?;
+                        depthwise_conv2d_i8_folded(
+                            &s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, fused,
+                            ctx.output_i8(0)?,
+                        );
+                    }
+                    _ => {
+                        depthwise_conv2d_i8_opt(
+                            &s, mult, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias,
+                            ctx.output_i8(0)?,
+                        );
+                    }
+                }
             }
             DType::F32 => {
                 let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
@@ -144,61 +312,100 @@ mod tests {
     use crate::tensor::QuantizedMultiplier;
     use crate::testutil::{check, Cases, Rng};
 
+    fn random_dw_case(
+        rng: &mut Rng,
+    ) -> (ConvShape, Vec<i8>, Vec<i8>, Vec<i32>, Vec<ChannelQuant>, i32, i32) {
+        let kh = 1 + rng.below(3);
+        let kw = 1 + rng.below(3);
+        let stride = 1 + rng.below(2);
+        let in_h = kh + rng.below(6);
+        let in_w = kw + rng.below(6);
+        let in_c = 1 + rng.below(8);
+        let same = rng.chance(0.5);
+        let (out_h, out_w, pad_top, pad_left) = if same {
+            let oh = in_h.div_ceil(stride);
+            let ow = in_w.div_ceil(stride);
+            (
+                oh,
+                ow,
+                (((oh - 1) * stride + kh).saturating_sub(in_h)) / 2,
+                (((ow - 1) * stride + kw).saturating_sub(in_w)) / 2,
+            )
+        } else {
+            ((in_h - kh) / stride + 1, (in_w - kw) / stride + 1, 0, 0)
+        };
+        let s = ConvShape {
+            batch: 1 + rng.below(2),
+            in_h, in_w, in_c,
+            out_h, out_w, out_c: in_c,
+            kh, kw,
+            stride_h: stride, stride_w: stride,
+            dil_h: 1, dil_w: 1,
+            pad_top, pad_left,
+        };
+        let mut input = vec![0i8; s.batch * in_h * in_w * in_c];
+        rng.fill_i8(&mut input);
+        let mut filter = vec![0i8; kh * kw * in_c];
+        rng.fill_i8(&mut filter);
+        let bias: Vec<i32> = (0..in_c).map(|_| rng.range_i32(-500, 500)).collect();
+        let pc: Vec<ChannelQuant> = (0..in_c)
+            .map(|_| ChannelQuant {
+                mult: QuantizedMultiplier::from_real(rng.range_f32(0.001, 0.9) as f64),
+            })
+            .collect();
+        let input_offset = rng.range_i32(-128, 127);
+        let output_offset = rng.range_i32(-20, 20);
+        (s, input, filter, bias, pc, input_offset, output_offset)
+    }
+
     #[test]
     fn property_matches_reference_exactly() {
         check(Cases::n(60), |rng: &mut Rng| {
-            let kh = 1 + rng.below(3);
-            let kw = 1 + rng.below(3);
-            let stride = 1 + rng.below(2);
-            let in_h = kh + rng.below(6);
-            let in_w = kw + rng.below(6);
-            let in_c = 1 + rng.below(8);
-            let same = rng.chance(0.5);
-            let (out_h, out_w, pad_top, pad_left) = if same {
-                let oh = in_h.div_ceil(stride);
-                let ow = in_w.div_ceil(stride);
-                (
-                    oh,
-                    ow,
-                    (((oh - 1) * stride + kh).saturating_sub(in_h)) / 2,
-                    (((ow - 1) * stride + kw).saturating_sub(in_w)) / 2,
-                )
-            } else {
-                ((in_h - kh) / stride + 1, (in_w - kw) / stride + 1, 0, 0)
-            };
-            let s = ConvShape {
-                batch: 1 + rng.below(2),
-                in_h, in_w, in_c,
-                out_h, out_w, out_c: in_c,
-                kh, kw,
-                stride_h: stride, stride_w: stride,
-                dil_h: 1, dil_w: 1,
-                pad_top, pad_left,
-            };
-            let mut input = vec![0i8; s.batch * in_h * in_w * in_c];
-            rng.fill_i8(&mut input);
-            let mut filter = vec![0i8; kh * kw * in_c];
-            rng.fill_i8(&mut filter);
-            let bias: Vec<i32> = (0..in_c).map(|_| rng.range_i32(-500, 500)).collect();
-            let pc: Vec<ChannelQuant> = (0..in_c)
-                .map(|_| ChannelQuant {
-                    mult: QuantizedMultiplier::from_real(rng.range_f32(0.001, 0.9) as f64),
-                })
-                .collect();
+            let (s, input, filter, bias, pc, input_offset, output_offset) = random_dw_case(rng);
             let q = ConvQuant {
-                input_offset: rng.range_i32(-128, 127),
-                output_offset: rng.range_i32(-20, 20),
+                input_offset,
+                output_offset,
                 per_channel: &pc,
                 act_min: -128,
                 act_max: 127,
             };
-            let n_out = s.batch * out_h * out_w * in_c;
+            let n_out = s.batch * s.out_h * s.out_w * s.in_c;
             let mut want = vec![0i8; n_out];
             depthwise_conv2d_i8(&s, 1, &q, &input, &filter, Some(&bias), &mut want);
             let mut got = vec![0i8; n_out];
             depthwise_conv2d_i8_opt(&s, 1, &q, &input, &filter, Some(&bias), &mut got);
             if want != got {
                 return Err(format!("mismatch for {s:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Folded-bias fast path == reference, bit-exact, including border
+    /// pixels (where the fold must NOT apply) and missing bias.
+    #[test]
+    fn property_folded_matches_reference_exactly() {
+        check(Cases::n(60), |rng: &mut Rng| {
+            let (s, input, filter, bias, pc, input_offset, output_offset) = random_dw_case(rng);
+            let with_bias = rng.chance(0.8);
+            let bias_opt = if with_bias { Some(&bias[..]) } else { None };
+            let q = ConvQuant {
+                input_offset,
+                output_offset,
+                per_channel: &pc,
+                act_min: -128,
+                act_max: 127,
+            };
+            let n_out = s.batch * s.out_h * s.out_w * s.in_c;
+            let mut want = vec![0i8; n_out];
+            depthwise_conv2d_i8(&s, 1, &q, &input, &filter, bias_opt, &mut want);
+
+            let mut fused = vec![0i32; s.in_c];
+            fold_depthwise_bias(&filter, s.kh, s.kw, s.in_c, input_offset, bias_opt, &mut fused);
+            let mut got = vec![0i8; n_out];
+            depthwise_conv2d_i8_folded(&s, &q, &input, &filter, bias_opt, &fused, &mut got);
+            if want != got {
+                return Err(format!("folded mismatch for {s:?} bias={with_bias}"));
             }
             Ok(())
         });

@@ -1,10 +1,18 @@
-//! Optimized int8 FullyConnected: 2x2 register blocking + unrolled MACs.
+//! Optimized int8 FullyConnected, routed through the shared packed GEMM
+//! micro-kernel ([`crate::ops::opt_ops::gemm`]).
 //!
-//! Mirrors CMSIS-NN's `arm_fully_connected_s8` structure: two output rows
-//! computed per pass so each loaded input value feeds two accumulator
-//! chains, with a 4-way unrolled inner loop.
+//! The filter matrix `[out, in]` is repacked once during the populate
+//! pass into 4-channel blocks and the model-constant
+//! `bias[o] + input_offset·Σf[o]` is folded per output (CMSIS-NN's
+//! init-time "kernel sums"), so the per-invoke body is the pure
+//! register-blocked MAC + requantize loop. The int8 spec guarantees
+//! filter zero point 0; a (spec-violating) nonzero filter offset or a
+//! non-constant filter falls back to [`fully_connected_i8_blocked`],
+//! which fuses the Σf computation into its single pass.
 
 use crate::error::Result;
+use crate::ops::common::PackedSpec;
+use crate::ops::opt_ops::gemm;
 use crate::ops::ref_ops::fully_connected::{fully_connected_f32, prepare_fc, FcQuant};
 use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
 use crate::tensor::DType;
@@ -12,7 +20,34 @@ use crate::tensor::DType;
 /// Optimized FullyConnected kernel.
 pub struct OptFullyConnectedKernel;
 
-/// Blocked int8 FC over plain slices.
+/// int8 FC over prepare-time packed weights and folded biases (the
+/// per-invoke body of [`OptFullyConnectedKernel`]). Requires
+/// `q.filter_offset == 0` (the int8 FC spec; enforced at prepare).
+#[allow(clippy::too_many_arguments)]
+pub fn fully_connected_i8_packed(
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    q: &FcQuant,
+    input: &[i8],
+    packed_filter: &[i8],
+    fused_bias: &[i32],
+    output: &mut [i8],
+) {
+    debug_assert_eq!(q.filter_offset, 0, "packed FC path requires filter zero point 0");
+    let gq = gemm::GemmQuant {
+        mult: gemm::GemmMult::PerTensor(q.mult),
+        output_offset: q.output_offset,
+        act_min: q.act_min,
+        act_max: q.act_max,
+    };
+    gemm::gemm_i8_packed(
+        batch, in_dim, out_dim, input, packed_filter, fused_bias, &gq, output, out_dim,
+    );
+}
+
+/// Blocked int8 FC over plain (unpacked) slices — fallback path and the
+/// bench baseline for the packed variant.
 #[allow(clippy::too_many_arguments)]
 pub fn fully_connected_i8_blocked(
     batch: usize,
@@ -63,7 +98,51 @@ impl Kernel for OptFullyConnectedKernel {
     }
 
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
-        prepare_fc(ctx)
+        prepare_fc(ctx)?;
+        let input = ctx.input(0)?;
+        let filter = ctx.input(1)?;
+        if input.dtype == DType::I8 {
+            let (out_dim, in_dim) = filter.shape.as_matrix();
+            let const_weights = ctx.weights_are_const();
+            // Nonzero filter zero point (spec violation, but representable
+            // in the format) keeps the fo·Σx input-dependent term, which
+            // cannot fold at init — stay on the fallback body.
+            let spec_zp = matches!(ctx.op_data_mut(), OpData::FullyConnected(d) if d.filter_offset == 0);
+            if const_weights && spec_zp {
+                let pf = ctx.request_persistent(gemm::packed_filter_len(out_dim, in_dim));
+                let fb = ctx.request_persistent(out_dim * std::mem::size_of::<i32>());
+                if let OpData::FullyConnected(data) = ctx.op_data_mut() {
+                    data.packed = Some(PackedSpec { filter: Some(pf), fused_bias: fb });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn populate(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::FullyConnected(data) = ctx.op_data() else {
+            return Ok(());
+        };
+        let Some(spec) = data.packed else {
+            return Ok(());
+        };
+        let Some(fh) = spec.filter else {
+            return Ok(());
+        };
+        let (out_dim, in_dim) = ctx.input(1)?.shape.as_matrix();
+        let filter = ctx.input_i8(1)?;
+        if filter.len() < out_dim * in_dim {
+            return Err(ctx.fail_init("filter data shorter than its shape"));
+        }
+        let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+        if bias.is_some_and(|b| b.len() < out_dim) {
+            return Err(ctx.fail_init("bias shorter than output dim"));
+        }
+        let packed = crate::ops::cast_i8_mut(ctx.persistent_bytes(fh)?);
+        gemm::pack_filter(filter, out_dim, in_dim, packed);
+        let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
+        gemm::fold_bias(filter, out_dim, in_dim, data.input_offset, bias, fused);
+        Ok(())
     }
 
     fn invoke(&self, ctx: &OpContext) -> Result<()> {
@@ -82,8 +161,24 @@ impl Kernel for OptFullyConnectedKernel {
                     act_min: data.act_min,
                     act_max: data.act_max,
                 };
-                let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
-                fully_connected_i8_blocked(batch, in_dim, out_dim, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+                match data.packed {
+                    Some(PackedSpec { filter: Some(fh), fused_bias }) => {
+                        let packed = ctx.persistent_i8(fh)?;
+                        let fused = ctx.persistent_i32(fused_bias)?;
+                        fully_connected_i8_packed(
+                            batch, in_dim, out_dim, &q, ctx.input_i8(0)?, packed, fused,
+                            ctx.output_i8(0)?,
+                        );
+                    }
+                    _ => {
+                        let bias =
+                            if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
+                        fully_connected_i8_blocked(
+                            batch, in_dim, out_dim, &q, ctx.input_i8(0)?, ctx.input_i8(1)?,
+                            bias, ctx.output_i8(0)?,
+                        );
+                    }
+                }
             }
             DType::F32 => {
                 let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };
@@ -132,6 +227,50 @@ mod tests {
         });
     }
 
+    /// Packed path == reference, bit-exact, across ragged out_dim/batch,
+    /// missing bias, and tight activation clamps.
+    #[test]
+    fn property_packed_matches_reference_exactly() {
+        check(Cases::n(100), |rng: &mut Rng| {
+            let batch = 1 + rng.below(5); // odd batches exercise the row tail
+            let in_dim = 1 + rng.below(64);
+            let out_dim = 1 + rng.below(33); // ragged vs the 4-channel block
+            let mut input = vec![0i8; batch * in_dim];
+            rng.fill_i8(&mut input);
+            let mut filter = vec![0i8; out_dim * in_dim];
+            rng.fill_i8(&mut filter);
+            let with_bias = rng.chance(0.8);
+            let bias: Vec<i32> = (0..out_dim).map(|_| rng.range_i32(-500, 500)).collect();
+            let bias_opt = if with_bias { Some(&bias[..]) } else { None };
+            let tight = rng.chance(0.3);
+            let q = FcQuant {
+                input_offset: rng.range_i32(-128, 127),
+                filter_offset: 0,
+                output_offset: rng.range_i32(-10, 10),
+                mult: QuantizedMultiplier::from_real(rng.range_f32(0.0005, 0.8) as f64),
+                act_min: if tight { -16 } else { -128 },
+                act_max: if tight { 15 } else { 127 },
+            };
+            let mut want = vec![0i8; batch * out_dim];
+            fully_connected_i8(batch, in_dim, out_dim, &q, &input, &filter, bias_opt, &mut want);
+
+            let mut packed = vec![0i8; gemm::packed_filter_len(out_dim, in_dim)];
+            gemm::pack_filter(&filter, out_dim, in_dim, &mut packed);
+            let mut fused = vec![0i32; out_dim];
+            gemm::fold_bias(&filter, out_dim, in_dim, q.input_offset, bias_opt, &mut fused);
+            let mut got = vec![0i8; batch * out_dim];
+            fully_connected_i8_packed(
+                batch, in_dim, out_dim, &q, &input, &packed, &fused, &mut got,
+            );
+            if want != got {
+                return Err(format!(
+                    "packed mismatch batch={batch} in={in_dim} out={out_dim} bias={with_bias}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn odd_output_dim_tail_handled() {
         let q = FcQuant {
@@ -148,5 +287,13 @@ mod tests {
         let mut out = [0i8; 3];
         fully_connected_i8_blocked(1, 2, 3, &q, &input, &filter, None, &mut out);
         assert_eq!(out, [1, 2, 3]);
+        // Same shape through the packed path.
+        let mut packed = vec![0i8; gemm::packed_filter_len(3, 2)];
+        gemm::pack_filter(&filter, 3, 2, &mut packed);
+        let mut fused = vec![0i32; 3];
+        gemm::fold_bias(&filter, 3, 2, 0, None, &mut fused);
+        let mut out2 = [0i8; 3];
+        fully_connected_i8_packed(1, 2, 3, &q, &input, &packed, &fused, &mut out2);
+        assert_eq!(out2, [1, 2, 3]);
     }
 }

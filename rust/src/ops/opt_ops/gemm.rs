@@ -1,0 +1,352 @@
+//! Shared register-blocked int8 GEMM micro-kernel over packed weights.
+//!
+//! This is the single inner loop behind the optimized conv im2col path,
+//! the conv 1×1 fast path, and FullyConnected. The design mirrors what
+//! CMSIS-NN does for Cortex-M, restated for a host compiler:
+//!
+//! * **Packed weights** ([`pack_filter`]): the filter matrix
+//!   `[out_c, k]` is repacked once at init into blocks of
+//!   [`OC_BLOCK`] output channels, k-major interleaved
+//!   (`packed[(blk*k + kk)*4 + c] = filter[(blk*4+c)*k + kk]`), so the
+//!   micro-kernel loads 4 weights per k-step from one contiguous,
+//!   sequentially-advancing pointer. Ragged tails pad with zero rows —
+//!   a zero filter row contributes exactly zero to its (never-stored)
+//!   accumulator.
+//! * **Folded bias** ([`fold_bias`]): the int8 spec fixes the filter zero
+//!   point at 0, so `Σ (x+io)·f = Σ x·f + io·Σf`. The model-constant
+//!   `bias[oc] + io·Σf[oc]` ("kernel sums" in CMSIS-NN) is precomputed
+//!   per channel during the populate pass, removing the per-invoke
+//!   O(out_c·k) filter-sum recomputation entirely.
+//! * **Register blocking**: 4 output channels × 2 LHS rows (pixels) of
+//!   i32 accumulators live across the K loop, so each loaded input value
+//!   feeds 4 MAC chains and each loaded weight feeds 2.
+//! * **4-way unrolled K** with a widening `i16` multiply
+//!   (`(a as i16 * w as i16) as i32` — the form LLVM turns into
+//!   pmaddwd-style SIMD), plus scalar remainder loops for ragged k,
+//!   ragged out_c, and an odd final row.
+//!
+//! Bit-exactness against the reference kernels is enforced by property
+//! tests here and in the conv/FC modules.
+
+use crate::ops::common::ChannelQuant;
+use crate::tensor::QuantizedMultiplier;
+
+/// Output channels per packed block (accumulator columns).
+pub const OC_BLOCK: usize = 4;
+/// LHS rows (pixels) per micro-kernel pass.
+pub const ROW_BLOCK: usize = 2;
+
+/// Requantization state for one GEMM call.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmQuant<'a> {
+    /// Output multiplier: per-channel (conv) or per-tensor (FC).
+    pub mult: GemmMult<'a>,
+    /// Output zero point, added after requantization.
+    pub output_offset: i32,
+    /// Fused-activation clamp low.
+    pub act_min: i32,
+    /// Fused-activation clamp high.
+    pub act_max: i32,
+}
+
+/// Per-channel vs per-tensor requantization multiplier.
+#[derive(Debug, Clone, Copy)]
+pub enum GemmMult<'a> {
+    /// One multiplier per output channel (conv per-axis quantization).
+    PerChannel(&'a [ChannelQuant]),
+    /// One multiplier for every channel (FC per-tensor quantization).
+    PerTensor(QuantizedMultiplier),
+}
+
+impl GemmMult<'_> {
+    #[inline(always)]
+    fn at(&self, oc: usize) -> QuantizedMultiplier {
+        match self {
+            GemmMult::PerChannel(pc) => pc[oc].mult,
+            GemmMult::PerTensor(m) => *m,
+        }
+    }
+}
+
+/// Bytes needed for the packed filter of a `[out_c, k]` weight matrix
+/// (out_c rounded up to a whole block of [`OC_BLOCK`]).
+pub fn packed_filter_len(out_c: usize, k: usize) -> usize {
+    out_c.div_ceil(OC_BLOCK) * OC_BLOCK * k
+}
+
+/// Repack a row-major `[out_c, k]` filter into the channel-blocked layout
+/// the micro-kernel consumes. Runs once, during the populate pass.
+pub fn pack_filter(filter: &[i8], out_c: usize, k: usize, packed: &mut [i8]) {
+    debug_assert!(filter.len() >= out_c * k);
+    debug_assert!(packed.len() >= packed_filter_len(out_c, k));
+    for blk in 0..out_c.div_ceil(OC_BLOCK) {
+        let oc0 = blk * OC_BLOCK;
+        let dst = &mut packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+        for kk in 0..k {
+            for c in 0..OC_BLOCK {
+                dst[kk * OC_BLOCK + c] =
+                    if oc0 + c < out_c { filter[(oc0 + c) * k + kk] } else { 0 };
+            }
+        }
+    }
+}
+
+/// Precompute the folded bias `bias[oc] + input_offset * Σ filter[oc]`
+/// for every output channel. Runs once, during the populate pass; this is
+/// the per-invoke Σf recomputation hoisted to init time.
+pub fn fold_bias(
+    filter: &[i8],
+    out_c: usize,
+    k: usize,
+    input_offset: i32,
+    bias: Option<&[i32]>,
+    fused: &mut [i32],
+) {
+    debug_assert!(fused.len() >= out_c);
+    for oc in 0..out_c {
+        let f_sum: i32 = filter[oc * k..(oc + 1) * k].iter().map(|&v| v as i32).sum();
+        fused[oc] = bias
+            .map(|bv| bv[oc])
+            .unwrap_or(0)
+            .wrapping_add(input_offset.wrapping_mul(f_sum));
+    }
+}
+
+/// The micro-kernel: `out[r, oc] = requant(fused_bias[oc] + Σ_k lhs[r,k] ·
+/// w[oc,k])` over a packed weight matrix.
+///
+/// * `lhs` — `[rows, k]` row-major i8 (im2col patches, input pixels, or
+///   FC input rows). Elements must already incorporate the zero-point
+///   convention: the input-offset correction lives in `fused_bias`, so
+///   `lhs` holds raw quantized values (padding cells hold the input zero
+///   point, which contributes zero after the folded correction).
+/// * `packed` — output of [`pack_filter`].
+/// * `fused_bias` — output of [`fold_bias`], one i32 per output channel.
+/// * `out` — written at `out[r * out_stride + oc]` for every
+///   `r < rows`, `oc < out_c`; `out_stride` is normally `out_c` but lets
+///   conv write into a larger NHWC row.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed(
+    rows: usize,
+    k: usize,
+    out_c: usize,
+    lhs: &[i8],
+    packed: &[i8],
+    fused_bias: &[i32],
+    q: &GemmQuant,
+    out: &mut [i8],
+    out_stride: usize,
+) {
+    debug_assert!(lhs.len() >= rows * k);
+    debug_assert!(packed.len() >= packed_filter_len(out_c, k));
+    debug_assert!(fused_bias.len() >= out_c);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * out_stride + out_c);
+
+    for blk in 0..out_c.div_ceil(OC_BLOCK) {
+        let oc0 = blk * OC_BLOCK;
+        let live = OC_BLOCK.min(out_c - oc0);
+        let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+        let mut r = 0usize;
+        // ---- 2-row × 4-channel main body --------------------------------
+        while r + ROW_BLOCK <= rows {
+            let x0 = &lhs[r * k..r * k + k];
+            let x1 = &lhs[(r + 1) * k..(r + 1) * k + k];
+            let mut acc0 = [0i32; OC_BLOCK];
+            let mut acc1 = [0i32; OC_BLOCK];
+            let mut kk = 0usize;
+            while kk + 4 <= k {
+                // 4-way unrolled K: 8 input loads feed 32 MACs.
+                for u in 0..4 {
+                    let f4 = &fblk[(kk + u) * OC_BLOCK..(kk + u) * OC_BLOCK + OC_BLOCK];
+                    let a0 = x0[kk + u] as i16;
+                    let a1 = x1[kk + u] as i16;
+                    for c in 0..OC_BLOCK {
+                        let w = f4[c] as i16;
+                        acc0[c] = acc0[c].wrapping_add((a0 * w) as i32);
+                        acc1[c] = acc1[c].wrapping_add((a1 * w) as i32);
+                    }
+                }
+                kk += 4;
+            }
+            while kk < k {
+                let f4 = &fblk[kk * OC_BLOCK..kk * OC_BLOCK + OC_BLOCK];
+                let a0 = x0[kk] as i16;
+                let a1 = x1[kk] as i16;
+                for c in 0..OC_BLOCK {
+                    let w = f4[c] as i16;
+                    acc0[c] = acc0[c].wrapping_add((a0 * w) as i32);
+                    acc1[c] = acc1[c].wrapping_add((a1 * w) as i32);
+                }
+                kk += 1;
+            }
+            for c in 0..live {
+                let oc = oc0 + c;
+                let mult = q.mult.at(oc);
+                let v0 = mult.apply(fused_bias[oc].wrapping_add(acc0[c])) + q.output_offset;
+                out[r * out_stride + oc] = v0.clamp(q.act_min, q.act_max) as i8;
+                let v1 = mult.apply(fused_bias[oc].wrapping_add(acc1[c])) + q.output_offset;
+                out[(r + 1) * out_stride + oc] = v1.clamp(q.act_min, q.act_max) as i8;
+            }
+            r += ROW_BLOCK;
+        }
+        // ---- odd final row ----------------------------------------------
+        if r < rows {
+            let x0 = &lhs[r * k..r * k + k];
+            let mut acc0 = [0i32; OC_BLOCK];
+            let mut kk = 0usize;
+            while kk + 4 <= k {
+                for u in 0..4 {
+                    let f4 = &fblk[(kk + u) * OC_BLOCK..(kk + u) * OC_BLOCK + OC_BLOCK];
+                    let a0 = x0[kk + u] as i16;
+                    for c in 0..OC_BLOCK {
+                        acc0[c] = acc0[c].wrapping_add((a0 * f4[c] as i16) as i32);
+                    }
+                }
+                kk += 4;
+            }
+            while kk < k {
+                let f4 = &fblk[kk * OC_BLOCK..kk * OC_BLOCK + OC_BLOCK];
+                let a0 = x0[kk] as i16;
+                for c in 0..OC_BLOCK {
+                    acc0[c] = acc0[c].wrapping_add((a0 * f4[c] as i16) as i32);
+                }
+                kk += 1;
+            }
+            for c in 0..live {
+                let oc = oc0 + c;
+                let v = q.mult.at(oc).apply(fused_bias[oc].wrapping_add(acc0[c]))
+                    + q.output_offset;
+                out[r * out_stride + oc] = v.clamp(q.act_min, q.act_max) as i8;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Cases, Rng};
+
+    /// Naive i32 GEMM oracle with the same quantization semantics.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_naive(
+        rows: usize,
+        k: usize,
+        out_c: usize,
+        lhs: &[i8],
+        filter: &[i8],
+        input_offset: i32,
+        bias: Option<&[i32]>,
+        q: &GemmQuant,
+        out: &mut [i8],
+        out_stride: usize,
+    ) {
+        for r in 0..rows {
+            for oc in 0..out_c {
+                let mut acc: i32 = bias.map(|bv| bv[oc]).unwrap_or(0);
+                for kk in 0..k {
+                    acc = acc.wrapping_add(
+                        (lhs[r * k + kk] as i32 + input_offset) * filter[oc * k + kk] as i32,
+                    );
+                }
+                let v = q.mult.at(oc).apply(acc) + q.output_offset;
+                out[r * out_stride + oc] = v.clamp(q.act_min, q.act_max) as i8;
+            }
+        }
+    }
+
+    /// Packed GEMM == naive (x+io)·f math, bit-exact, over random shapes
+    /// including ragged out_c / rows / k, missing bias, and tight clamps.
+    #[test]
+    fn property_packed_matches_naive_exactly() {
+        check(Cases::n(120), |rng: &mut Rng| {
+            let rows = 1 + rng.below(9); // exercises odd final row
+            let k = 1 + rng.below(35); // exercises k % 4 != 0
+            let out_c = 1 + rng.below(13); // exercises out_c % 4 != 0
+            let mut lhs = vec![0i8; rows * k];
+            rng.fill_i8(&mut lhs);
+            let mut filter = vec![0i8; out_c * k];
+            rng.fill_i8(&mut filter);
+            let input_offset = rng.range_i32(-128, 127);
+            let with_bias = rng.chance(0.8);
+            let bias: Vec<i32> = (0..out_c).map(|_| rng.range_i32(-1000, 1000)).collect();
+            let bias_opt = if with_bias { Some(&bias[..]) } else { None };
+            let pc: Vec<ChannelQuant> = (0..out_c)
+                .map(|_| ChannelQuant {
+                    mult: QuantizedMultiplier::from_real(rng.range_f32(0.001, 0.9) as f64),
+                })
+                .collect();
+            let per_tensor = rng.chance(0.3);
+            let mult = if per_tensor {
+                GemmMult::PerTensor(pc[0].mult)
+            } else {
+                GemmMult::PerChannel(&pc)
+            };
+            let tight = rng.chance(0.3);
+            let q = GemmQuant {
+                mult,
+                output_offset: rng.range_i32(-20, 20),
+                act_min: if tight { -16 } else { -128 },
+                act_max: if tight { 15 } else { 127 },
+            };
+
+            let mut packed = vec![0i8; packed_filter_len(out_c, k)];
+            pack_filter(&filter, out_c, k, &mut packed);
+            let mut fused = vec![0i32; out_c];
+            fold_bias(&filter, out_c, k, input_offset, bias_opt, &mut fused);
+
+            let mut want = vec![0i8; rows * out_c];
+            gemm_naive(rows, k, out_c, &lhs, &filter, input_offset, bias_opt, &q, &mut want, out_c);
+            let mut got = vec![0i8; rows * out_c];
+            gemm_i8_packed(rows, k, out_c, &lhs, &packed, &fused, &q, &mut got, out_c);
+            if want != got {
+                return Err(format!("mismatch rows={rows} k={k} out_c={out_c} io={input_offset}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_layout_round_trips() {
+        // out_c = 5 (ragged), k = 3: block 1 holds channel 4 + three zero rows.
+        let out_c = 5;
+        let k = 3;
+        let filter: Vec<i8> = (0..(out_c * k) as i8).collect();
+        let mut packed = vec![0i8; packed_filter_len(out_c, k)];
+        pack_filter(&filter, out_c, k, &mut packed);
+        // Block 0, k=0 holds channels 0..4 at k index 0: filter[c*k].
+        assert_eq!(&packed[0..4], &[0, 3, 6, 9]);
+        // Block 1, k=0: channel 4 then zero padding.
+        assert_eq!(&packed[4 * k..4 * k + 4], &[12, 0, 0, 0]);
+    }
+
+    #[test]
+    fn fold_bias_matches_manual_sum() {
+        let filter = [1i8, 2, 3, -4, 5, -6]; // 2 channels, k=3
+        let mut fused = [0i32; 2];
+        fold_bias(&filter, 2, 3, 10, Some(&[100, -100]), &mut fused);
+        assert_eq!(fused, [100 + 10 * 6, -100 + 10 * (-5)]);
+        // Missing bias defaults to zero.
+        fold_bias(&filter, 2, 3, -1, None, &mut fused);
+        assert_eq!(fused, [-6, 5]);
+    }
+
+    #[test]
+    fn output_stride_leaves_gaps_untouched() {
+        // rows=2, out_c=1, stride=3: columns 1..3 must stay at the sentinel.
+        let q = GemmQuant {
+            mult: GemmMult::PerTensor(QuantizedMultiplier::from_real(1.0)),
+            output_offset: 0,
+            act_min: -128,
+            act_max: 127,
+        };
+        let lhs = [2i8, 3];
+        let packed_src = [1i8];
+        let mut packed = vec![0i8; packed_filter_len(1, 1)];
+        pack_filter(&packed_src, 1, 1, &mut packed);
+        let fused = [0i32];
+        let mut out = [99i8; 6];
+        gemm_i8_packed(2, 1, 1, &lhs, &packed, &fused, &q, &mut out, 3);
+        assert_eq!(out, [2, 99, 99, 3, 99, 99]);
+    }
+}

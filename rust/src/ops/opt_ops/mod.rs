@@ -9,7 +9,16 @@
 //! | on-the-fly im2col into SRAM scratch   | im2col into an arena scratch  |
 //! | SMLAD dual 16-bit MAC                 | 4-way unrolled i32 MAC chains |
 //! | pad with -input_offset                | pad with input zero point     |
-//! | two-output register blocking (FC)     | 2x2 accumulator blocking      |
+//! | init-time kernel sums                 | populate-pass folded biases   |
+//! | weight reordering for SIMD loads      | packed 4-channel weight blocks|
+//! | two-output register blocking (FC)     | 4 oc × 2 px accumulator block |
+//!
+//! The heavy lifting lives in one shared register-blocked int8 GEMM
+//! micro-kernel ([`gemm`]): the conv im2col path, the conv 1×1 fast path,
+//! and FullyConnected all route through it over weights repacked once at
+//! init (the prepare → populate precomputation pipeline). Depthwise conv
+//! keeps its own loop structure but gets the folded-bias precompute for
+//! its interior fast path.
 //!
 //! Equivalence with the reference kernels is enforced by property tests
 //! (random shapes/values, exact int8 match) — the support the paper says
@@ -18,10 +27,14 @@
 pub mod conv;
 pub mod depthwise;
 pub mod fully_connected;
+pub mod gemm;
 
-pub use conv::{conv2d_i8_im2col, OptConvKernel};
-pub use depthwise::{depthwise_conv2d_i8_opt, OptDepthwiseConvKernel};
-pub use fully_connected::{fully_connected_i8_blocked, OptFullyConnectedKernel};
+pub use conv::{conv2d_i8_im2col, conv2d_i8_packed, OptConvKernel};
+pub use depthwise::{depthwise_conv2d_i8_folded, depthwise_conv2d_i8_opt, OptDepthwiseConvKernel};
+pub use fully_connected::{
+    fully_connected_i8_blocked, fully_connected_i8_packed, OptFullyConnectedKernel,
+};
+pub use gemm::{fold_bias, gemm_i8_packed, pack_filter, packed_filter_len, GemmMult, GemmQuant};
 
 use super::OpResolver;
 use crate::error::Result;

@@ -413,3 +413,60 @@ fn arena_usage_detail_accounts_for_everything() {
     assert!(u.persistent >= d.runtime_structs + d.op_data + d.variables);
     assert!(d.report().contains("runtime structs"));
 }
+
+#[test]
+fn packed_kernels_report_persistent_buffers_and_match_reference() {
+    // A conv whose weights are model constants: the optimized resolver
+    // repacks them + folds biases into arena-tail persistent buffers
+    // during the populate pass. Reference and optimized interpreters
+    // must agree bit-exactly, and the packed buffers must show up in the
+    // kernel_buffers accounting (and nowhere in the reference run).
+    let mut b = ModelBuilder::new("packed-conv");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4, 4, 3], None, unit_q());
+    // 5 output channels (ragged vs the 4-wide GEMM block), 3x3 window.
+    let w: Vec<u8> = (0..5 * 3 * 3 * 3).map(|i| (i % 7) as u8).collect();
+    let wbuf = b.add_buffer(&w);
+    let t_w = b.add_quant_tensor("w", DType::I8, &[5, 3, 3, 3], Some(wbuf), unit_q());
+    let bias: Vec<u8> = (0..5i32).flat_map(|i| (i * 10 - 20).to_le_bytes()).collect();
+    let bbuf = b.add_buffer(&bias);
+    let t_b = b.add_tensor("b", DType::I32, &[5], Some(bbuf));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4, 4, 5], None, unit_q());
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w, t_b],
+        &[t_out],
+        conv_options(Padding::Same, Activation::None, (1, 1), (1, 1), None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    let input: Vec<i8> = (0..48).map(|i| (i * 5 % 17) as i8 - 8).collect();
+
+    let ref_resolver = OpResolver::with_reference_ops();
+    let mut ref_arena = Arena::new(64 * 1024);
+    let mut ref_interp = MicroInterpreter::new(&model, &ref_resolver, &mut ref_arena).unwrap();
+    ref_interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+    ref_interp.invoke().unwrap();
+    let want = ref_interp.output(0).unwrap().as_i8().unwrap().to_vec();
+    assert_eq!(ref_interp.arena_usage().kernel_buffers, 0, "reference kernels pack nothing");
+
+    let opt_resolver = OpResolver::with_optimized_ops();
+    let mut opt_arena = Arena::new(64 * 1024);
+    let mut opt_interp = MicroInterpreter::new(&model, &opt_resolver, &mut opt_arena).unwrap();
+    opt_interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+    opt_interp.invoke().unwrap();
+    let got = opt_interp.output(0).unwrap().as_i8().unwrap().to_vec();
+    assert_eq!(want, got, "packed interpreter path must be bit-exact");
+
+    let u = opt_interp.arena_usage();
+    let d = opt_interp.arena_usage_detail();
+    // Packed filter: ceil(5/4)*4 * 27 = 216 B; folded bias: 5 * 4 = 20 B.
+    assert!(d.kernel_buffers >= 216 + 20, "got {}", d.kernel_buffers);
+    assert!(u.kernel_buffers >= d.kernel_buffers, "alignment slack included");
+    assert!(u.kernel_buffers <= u.persistent);
+    assert!(d.report().contains("kernel buffers"));
+
+    // Invoking twice reuses the populate products (no drift).
+    opt_interp.invoke().unwrap();
+    assert_eq!(opt_interp.output(0).unwrap().as_i8().unwrap(), &want[..]);
+}
