@@ -1,14 +1,82 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 verify plus lint gates.
+# CI entry point: tier-1 verify plus lint gates and the perf trajectory gate.
 #
 #   ./ci.sh          # build + test + fmt + clippy
 #   ./ci.sh --quick  # tier-1 verify only (what the PR driver runs)
+#   ./ci.sh --bench  # kernel benches + >10% regression gate vs BENCH_baseline.json
 #
 # The crate is std-only (no dependencies), so everything here works
 # offline. fmt/clippy steps are skipped with a warning if the components
-# are not installed rather than failing the whole run.
+# are not installed rather than failing the whole run; the bench gate
+# skips with a warning when cargo, python3, or the committed baseline is
+# absent (this container has no Rust toolchain — see CHANGES.md PR 1).
 set -euo pipefail
 cd "$(dirname "$0")"
+
+# --- perf trajectory gate (cross-PR): bench, then compare ------------------
+if [[ "${1:-}" == "--bench" ]]; then
+    if ! command -v cargo >/dev/null 2>&1; then
+        echo "warning: cargo not installed; skipping bench gate" >&2
+        exit 0
+    fi
+    echo "== cargo bench --bench bench_kernels =="
+    cargo bench --bench bench_kernels
+    if [[ ! -f BENCH_baseline.json ]]; then
+        echo "warning: no BENCH_baseline.json; skipping regression check." >&2
+        echo "         To seed the trajectory gate: cp BENCH_kernels.json BENCH_baseline.json and commit it." >&2
+        exit 0
+    fi
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "warning: python3 not installed; skipping regression comparison" >&2
+        exit 0
+    fi
+    echo "== bench trajectory: BENCH_kernels.json vs BENCH_baseline.json (fail >10% regression) =="
+    python3 - <<'EOF'
+import json, sys
+
+TOLERANCE = 1.10  # fail when current > baseline * 1.10
+COLUMNS = ("packed_ns", "simd_ns")
+
+base = json.load(open("BENCH_baseline.json"))
+cur = json.load(open("BENCH_kernels.json"))
+
+# Apples-to-apples only: a scalar-host baseline must not gate an avx2 run.
+bd, cd = base.get("dispatch", "unknown"), cur.get("dispatch", "unknown")
+if bd != cd:
+    print(f"warning: dispatch mismatch (baseline={bd}, current={cd}); "
+          "skipping regression check", file=sys.stderr)
+    sys.exit(0)
+
+basemap = {c["kernel"]: c for c in base.get("cases", [])}
+curnames = {c["kernel"] for c in cur.get("cases", [])}
+failed = False
+# A kernel present in the baseline but absent from the current run is a
+# loss of perf coverage (deleted or renamed case) — fail, don't ignore.
+for name in basemap:
+    if name not in curnames:
+        print(f"  MISSING from current run: {name}")
+        failed = True
+for c in cur.get("cases", []):
+    b = basemap.get(c["kernel"])
+    if b is None:
+        print(f"  new kernel (no baseline): {c['kernel']}")
+        continue
+    for col in COLUMNS:
+        if col not in b or col not in c or not b[col]:
+            continue
+        ratio = c[col] / b[col]
+        tag = "REGRESSION" if ratio > TOLERANCE else "ok"
+        print(f"  {c['kernel']:<40} {col:<10} {b[col]:>10} -> {c[col]:>10} ns "
+              f"({ratio:5.2f}x) {tag}")
+        if ratio > TOLERANCE:
+            failed = True
+if failed:
+    print("bench gate FAILED: >10% regression vs baseline", file=sys.stderr)
+    sys.exit(1)
+print("bench gate passed.")
+EOF
+    exit 0
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release

@@ -4,16 +4,23 @@
 //! the platform cycle model's structure; the paper's platform-level 4x /
 //! 7.7x arise from these.
 //!
-//! Three columns per shape:
+//! Four columns per shape:
 //! * **Reference** — the readable ref_ops loops.
 //! * **Optimized** — the unpacked opt_ops bodies (recompute Σf per invoke).
 //! * **Packed** — the prepare-time precompute pipeline: weights repacked
 //!   into 4-channel blocks + folded biases, as the interpreter's populate
-//!   pass produces them. Packing cost is *excluded* from the timed body —
+//!   pass produces them, pinned to the **scalar** GEMM tier via
+//!   `ForceDispatch`. Packing cost is *excluded* from the timed body —
 //!   that is the whole point of the prepare/invoke split.
+//! * **Simd** — the same packed bodies under auto dispatch (whatever
+//!   backend this CPU selects: avx2/neon/scalar; for depthwise, the
+//!   channel-blocked packed-filter fast path). The file-level
+//!   `dispatch` field in the JSON records which backend ran, so
+//!   cross-machine trajectory comparisons stay apples-to-apples.
 //!
 //! Also emits machine-readable `BENCH_kernels.json` at the repo root so
-//! the perf trajectory is tracked across PRs.
+//! the perf trajectory is tracked across PRs (`ci.sh --bench` gates on
+//! it against `BENCH_baseline.json`).
 
 use tfmicro::ops::common::ChannelQuant;
 use tfmicro::ops::opt_ops::depthwise::fold_depthwise_bias;
@@ -37,30 +44,34 @@ struct Row {
     reference_ns: u128,
     optimized_ns: u128,
     packed_ns: u128,
+    simd_ns: u128,
 }
 
 impl Row {
     fn print(&self) {
         println!(
-            "{:<38} {:>10} {:>10} {:>10} {:>7.2}x {:>7.2}x",
+            "{:<38} {:>10} {:>10} {:>10} {:>10} {:>7.2}x {:>7.2}x",
             self.label,
             fmt_ns(self.reference_ns),
             fmt_ns(self.optimized_ns),
             fmt_ns(self.packed_ns),
-            self.reference_ns as f64 / self.packed_ns.max(1) as f64,
-            self.optimized_ns as f64 / self.packed_ns.max(1) as f64,
+            fmt_ns(self.simd_ns),
+            self.reference_ns as f64 / self.simd_ns.max(1) as f64,
+            self.packed_ns as f64 / self.simd_ns.max(1) as f64,
         );
     }
 
     fn json(&self) -> String {
         format!(
-            "    {{\"kernel\": \"{}\", \"reference_ns\": {}, \"optimized_ns\": {}, \"packed_ns\": {}, \"packed_vs_reference\": {:.3}, \"packed_vs_optimized\": {:.3}}}",
+            "    {{\"kernel\": \"{}\", \"reference_ns\": {}, \"optimized_ns\": {}, \"packed_ns\": {}, \"simd_ns\": {}, \"packed_vs_reference\": {:.3}, \"packed_vs_optimized\": {:.3}, \"simd_vs_packed\": {:.3}}}",
             self.label,
             self.reference_ns,
             self.optimized_ns,
             self.packed_ns,
+            self.simd_ns,
             self.reference_ns as f64 / self.packed_ns.max(1) as f64,
             self.optimized_ns as f64 / self.packed_ns.max(1) as f64,
+            self.packed_ns as f64 / self.simd_ns.max(1) as f64,
         )
     }
 }
@@ -80,10 +91,12 @@ fn main() {
     let bench = Bencher::default();
     let mut rows: Vec<Row> = Vec::new();
 
-    println!("== Kernel microbenchmarks: reference vs optimized vs packed (host) ==");
+    let dispatch = gemm::active_backend().name();
+    println!("== Kernel microbenchmarks: reference vs optimized vs packed vs simd (host) ==");
+    println!("gemm dispatch: {dispatch} (Packed column pinned to scalar via ForceDispatch)");
     println!(
-        "{:<38} {:>10} {:>10} {:>10} {:>8} {:>8}",
-        "Kernel @ shape", "Reference", "Optimized", "Packed", "vs ref", "vs opt"
+        "{:<38} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "Kernel @ shape", "Reference", "Optimized", "Packed", "Simd", "vs ref", "vs pckd"
     );
 
     // --- conv shapes from VWW (first conv + a mid pointwise conv) -------
@@ -127,7 +140,15 @@ fn main() {
             opt_ops::conv2d_i8_im2col(&s, &q, &input, &filter, Some(&bias), &mut patch, &mut out);
             black_box(&out);
         });
-        let p = bench.run(|| {
+        let p = {
+            let _scalar = gemm::ForceDispatch::force(gemm::GemmBackend::Scalar)
+                .expect("scalar backend always available");
+            bench.run(|| {
+                opt_ops::conv2d_i8_packed(&s, &q, &input, &packed, &fused, &mut patch, &mut out);
+                black_box(&out);
+            })
+        };
+        let v = bench.run(|| {
             opt_ops::conv2d_i8_packed(&s, &q, &input, &packed, &fused, &mut patch, &mut out);
             black_box(&out);
         });
@@ -136,6 +157,7 @@ fn main() {
             reference_ns: r.median.as_nanos(),
             optimized_ns: o.median.as_nanos(),
             packed_ns: p.median.as_nanos(),
+            simd_ns: v.median.as_nanos(),
         };
         row.print();
         rows.push(row);
@@ -157,6 +179,9 @@ fn main() {
         let mut out = vec![0i8; 48 * 48 * 8];
         let mut fused = vec![0i32; 8];
         fold_depthwise_bias(&filter, 3, 3, 8, q.input_offset, Some(&bias), &mut fused);
+        // Populate-pass channel-blocked repack (the depthwise "Simd" tier).
+        let mut dw_packed = vec![0i8; opt_ops::packed_depthwise_len(3, 3, 8)];
+        opt_ops::pack_depthwise_filter(&filter, 3, 3, 8, &mut dw_packed);
         let r = bench.run(|| {
             depthwise_conv2d_i8(&s, 1, &q, &input, &filter, Some(&bias), &mut out);
             black_box(&out);
@@ -171,11 +196,18 @@ fn main() {
             );
             black_box(&out);
         });
+        let v = bench.run(|| {
+            opt_ops::depthwise_conv2d_i8_packed(
+                &s, &q, &input, &filter, &dw_packed, Some(&bias), &fused, &mut out,
+            );
+            black_box(&out);
+        });
         let row = Row {
             label: "dwconv 3x3 48x48x8",
             reference_ns: r.median.as_nanos(),
             optimized_ns: o.median.as_nanos(),
             packed_ns: p.median.as_nanos(),
+            simd_ns: v.median.as_nanos(),
         };
         row.print();
         rows.push(row);
@@ -213,7 +245,17 @@ fn main() {
             );
             black_box(&out);
         });
-        let p = bench.run(|| {
+        let p = {
+            let _scalar = gemm::ForceDispatch::force(gemm::GemmBackend::Scalar)
+                .expect("scalar backend always available");
+            bench.run(|| {
+                opt_ops::fully_connected_i8_packed(
+                    1, in_dim, out_dim, &q, &input, &packed, &fused, &mut out,
+                );
+                black_box(&out);
+            })
+        };
+        let v = bench.run(|| {
             opt_ops::fully_connected_i8_packed(
                 1, in_dim, out_dim, &q, &input, &packed, &fused, &mut out,
             );
@@ -224,6 +266,7 @@ fn main() {
             reference_ns: r.median.as_nanos(),
             optimized_ns: o.median.as_nanos(),
             packed_ns: p.median.as_nanos(),
+            simd_ns: v.median.as_nanos(),
         };
         row.print();
         rows.push(row);
@@ -231,7 +274,7 @@ fn main() {
 
     // --- machine-readable trajectory (BENCH_kernels.json) -------------------
     let json = format!(
-        "{{\n  \"bench\": \"kernels\",\n  \"unit\": \"ns_median\",\n  \"columns\": [\"reference\", \"optimized\", \"packed\"],\n  \"cases\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"kernels\",\n  \"unit\": \"ns_median\",\n  \"dispatch\": \"{dispatch}\",\n  \"columns\": [\"reference\", \"optimized\", \"packed\", \"simd\"],\n  \"cases\": [\n{}\n  ]\n}}\n",
         rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n")
     );
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");

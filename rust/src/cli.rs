@@ -10,6 +10,7 @@
 //! tfmicro overhead <model.tmf> [--kernels ref|opt] [--iters N]
 //! tfmicro simulate <model.tmf> [--platform m4|dsp]
 //! tfmicro serve    <model.tmf> [--workers N] [--requests N]
+//! tfmicro cpu
 //! ```
 
 use crate::error::{Error, Result};
@@ -92,13 +93,57 @@ fn fill_random_input(interp: &mut MicroInterpreter, seed: u64) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve> <model.tmf> [flags]
+const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu> <model.tmf> [flags]
   inspect   print model structure
   run       execute with random inputs (--kernels ref|opt, --iters N, --profile, --arena-kb N)
   mem       arena accounting, Table 2 style (--planner greedy|linear|auto, --kernels ref|opt)
   overhead  measured interpreter overhead, Figure 6 methodology (--iters N)
   simulate  cycle-model Figure 6 row (--platform m4|dsp)
-  serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N)";
+  serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N)
+  cpu       detected CPU features + chosen kernel dispatch (no model needed)";
+
+/// `tfmicro cpu`: field debugging for "why is this slow here" — what the
+/// runtime feature probes saw and which kernel tiers this process runs.
+fn print_cpu_report() {
+    use crate::ops::opt_ops::{depthwise::DW_CH_BLOCK, gemm};
+    println!("arch: {}", std::env::consts::ARCH);
+    #[cfg(target_arch = "x86_64")]
+    {
+        let f = |b: bool| if b { "yes" } else { "no" };
+        println!(
+            "features: avx2={} ssse3={} sse4.1={}",
+            f(std::arch::is_x86_feature_detected!("avx2")),
+            f(std::arch::is_x86_feature_detected!("ssse3")),
+            f(std::arch::is_x86_feature_detected!("sse4.1")),
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        let f = |b: bool| if b { "yes" } else { "no" };
+        println!(
+            "features: neon={}",
+            f(std::arch::is_aarch64_feature_detected!("neon")),
+        );
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        println!("features: (no SIMD feature probes compiled for this arch)");
+    }
+    let backends: Vec<String> = gemm::GemmBackend::all()
+        .into_iter()
+        .map(|b| format!("{}={}", b.name(), if b.available() { "ok" } else { "unavailable" }))
+        .collect();
+    println!("gemm backends: {}", backends.join(" "));
+    println!(
+        "gemm dispatch: {}{}",
+        gemm::active_backend().name(),
+        if gemm::dispatch_is_forced() { " (forced)" } else { " (auto, cached at first use)" },
+    );
+    println!(
+        "depthwise: channel-blocked x{DW_CH_BLOCK} interior fast path (portable, \
+         LLVM-vectorized) + scalar ragged edge/border"
+    );
+}
 
 /// CLI entry; returns a process exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
@@ -116,6 +161,11 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    // `cpu` inspects the process, not a model — no path required.
+    if cmd == "cpu" {
+        print_cpu_report();
+        return Ok(());
+    }
     let args = Args::parse(&argv[1..]);
     let model_path = args
         .positional
@@ -280,5 +330,10 @@ mod tests {
     #[test]
     fn no_args_prints_usage() {
         assert_eq!(main_with_args(vec![]), 0);
+    }
+
+    #[test]
+    fn cpu_subcommand_needs_no_model() {
+        assert_eq!(main_with_args(vec!["cpu".into()]), 0);
     }
 }

@@ -75,8 +75,12 @@ pub struct ChannelQuant {
 /// unsupported geometry).
 #[derive(Debug, Clone, Copy)]
 pub struct PackedSpec {
-    /// Channel-blocked repacked filter (see [`crate::ops::opt_ops::gemm`]);
-    /// `None` for kernels that only fold biases (depthwise).
+    /// Channel-blocked repacked filter: the GEMM layout
+    /// ([`crate::ops::opt_ops::gemm::pack_filter`]) for conv/FC, the
+    /// depthwise lane-blocked layout
+    /// ([`crate::ops::opt_ops::depthwise::pack_depthwise_filter`]) for
+    /// depthwise. `None` when only biases are folded (depthwise layers
+    /// thinner than one channel block).
     pub filter: Option<crate::ops::PersistentHandle>,
     /// Folded per-channel bias: `bias[oc] + input_offset * Σ filter[oc]`,
     /// one i32 per output channel.

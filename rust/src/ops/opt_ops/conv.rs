@@ -6,7 +6,10 @@
 //! input-offset correction), then the register-blocked GEMM
 //! ([`crate::ops::opt_ops::gemm`]) computes all output channels for that
 //! row from weights repacked once at init. A 1×1 stride-1 conv skips the
-//! gather entirely and runs the GEMM straight over the input rows.
+//! gather entirely and runs the GEMM straight over the input rows. The
+//! GEMM front runtime-dispatches its K-loop to the best SIMD backend
+//! (AVX2 / NEON / scalar — see `gemm`'s module docs), so this file needs
+//! no per-arch code: the packed layout is backend-agnostic.
 //!
 //! Per-invoke work is pure MACs + requantization: the per-channel filter
 //! sums Σf and the folded bias `bias + input_offset·Σf` are precomputed

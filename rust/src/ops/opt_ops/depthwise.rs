@@ -1,5 +1,5 @@
-//! Optimized int8 depthwise conv: interior/border split + contiguous
-//! channel inner loop, with prepare-time folded biases.
+//! Optimized int8 depthwise conv: interior/border split + a channel-
+//! blocked packed fast path, with prepare-time folded biases.
 //!
 //! Mirrors `arm_depthwise_conv_s8`: output pixels whose window lies fully
 //! inside the input skip all bounds checks; only the border runs the
@@ -7,11 +7,23 @@
 //! input walk the same channel stride, so the inner loop is a contiguous
 //! per-channel MAC.
 //!
-//! The interior fast path consumes the populate-pass precompute: with
-//! every tap valid, `Σ (x+io)·f = Σ x·f + io·Σf`, so the model-constant
-//! `bias[ch] + io·Σf[ch]` is folded once at init and the interior MAC is
-//! a raw widening i8·i8 dot. The border path keeps the `(x+io)·f` form
-//! (skipped padding taps make the folded correction wrong there).
+//! Two populate-pass precomputes feed the interior fast path:
+//!
+//! * **Folded biases** ([`fold_depthwise_bias`]): with every tap valid,
+//!   `Σ (x+io)·f = Σ x·f + io·Σf`, so the model-constant
+//!   `bias[ch] + io·Σf[ch]` is folded once at init and the interior MAC
+//!   is a raw widening i8·i8 dot. The border path keeps the `(x+io)·f`
+//!   form (skipped padding taps make the folded correction wrong there).
+//! * **Channel-blocked packed filter** ([`pack_depthwise_filter`]): the
+//!   `[1, kh, kw, c]` filter is repacked into [`DW_CH_BLOCK`]-lane
+//!   blocks, tap-major within each block, so the interior walks whole
+//!   channel blocks with *contiguous* loads on both sides (NHWC input
+//!   channels are already adjacent; the repack makes the filter taps
+//!   match). The lane loop is fixed-width, which LLVM turns into SIMD on
+//!   any target — the depthwise analog of the GEMM weight packing, and
+//!   why this stays portable safe code rather than an arch module. The
+//!   `c % DW_CH_BLOCK` ragged edge and all border pixels fall back to
+//!   scalar loops over the original filter.
 
 use crate::error::Result;
 use crate::ops::common::PackedSpec;
@@ -24,6 +36,39 @@ use crate::tensor::DType;
 
 /// Optimized DepthwiseConv2d kernel.
 pub struct OptDepthwiseConvKernel;
+
+/// Channels per packed depthwise block (the lane width of the interior
+/// fast path). 8 i8 lanes = one 64-bit NEON `smlal` operand / half an
+/// SSE register — wide enough for LLVM to vectorize the lane loop,
+/// narrow enough that MobileNet's thinnest layers (8 channels) still hit
+/// the packed path.
+pub const DW_CH_BLOCK: usize = 8;
+
+/// Bytes needed for the channel-blocked packed filter of a
+/// `[1, kh, kw, c]` depthwise filter. Only whole [`DW_CH_BLOCK`]-lane
+/// blocks are packed; the ragged tail keeps using the original filter.
+pub fn packed_depthwise_len(kh: usize, kw: usize, c: usize) -> usize {
+    (c / DW_CH_BLOCK) * kh * kw * DW_CH_BLOCK
+}
+
+/// Repack a `[1, kh, kw, c]` depthwise filter into the channel-blocked
+/// layout the interior fast path consumes:
+/// `packed[(blk*taps + tap)*L + lane] = filter[tap*c + blk*L + lane]`
+/// with `L =` [`DW_CH_BLOCK`], `taps = kh*kw`. Runs once, during the
+/// populate pass.
+pub fn pack_depthwise_filter(filter: &[i8], kh: usize, kw: usize, c: usize, packed: &mut [i8]) {
+    let taps = kh * kw;
+    debug_assert!(filter.len() >= taps * c);
+    debug_assert!(packed.len() >= packed_depthwise_len(kh, kw, c));
+    for blk in 0..c / DW_CH_BLOCK {
+        let ch0 = blk * DW_CH_BLOCK;
+        for tap in 0..taps {
+            let dst = (blk * taps + tap) * DW_CH_BLOCK;
+            packed[dst..dst + DW_CH_BLOCK]
+                .copy_from_slice(&filter[tap * c + ch0..tap * c + ch0 + DW_CH_BLOCK]);
+        }
+    }
+}
 
 /// Fold `bias[ch] + input_offset·Σf[ch]` for a depthwise filter
 /// (layout `[1, kh, kw, c]`). Populate-pass precompute.
@@ -49,9 +94,89 @@ pub fn fold_depthwise_bias(
     }
 }
 
+/// One border output pixel: guarded taps, `(x+io)·f` form with the
+/// original (unfolded) bias — skipped padding taps make the folded
+/// correction inapplicable here. Shared by the folded and packed paths.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn dw_border_pixel(
+    s: &ConvShape,
+    q: &ConvQuant,
+    in_b: &[i8],
+    filter: &[i8],
+    bias: Option<&[i32]>,
+    origin_y: isize,
+    origin_x: isize,
+    out_pixel: &mut [i8],
+) {
+    let c = s.in_c;
+    for ch in 0..c {
+        let mut acc: i32 = bias.map(|bv| bv[ch]).unwrap_or(0);
+        for ky in 0..s.kh {
+            let iy = origin_y + ky as isize;
+            if iy < 0 || iy >= s.in_h as isize {
+                continue;
+            }
+            for kx in 0..s.kw {
+                let ix = origin_x + kx as isize;
+                if ix < 0 || ix >= s.in_w as isize {
+                    continue;
+                }
+                acc = acc.wrapping_add(
+                    (in_b[((iy as usize) * s.in_w + ix as usize) * c + ch] as i32
+                        + q.input_offset)
+                        * filter[(ky * s.kw + kx) * c + ch] as i32,
+                );
+            }
+        }
+        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
+        out_pixel[ch] = scaled.clamp(q.act_min, q.act_max) as i8;
+    }
+}
+
+/// Interior channels `ch0..c` of one output pixel, scalar: no bounds
+/// checks, no per-tap input offset — the folded bias carries io·Σf,
+/// leaving a raw widening i8·i8 MAC. The folded path runs it over all
+/// channels; the packed path over the ragged `c % DW_CH_BLOCK` tail.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn dw_interior_scalar(
+    s: &ConvShape,
+    q: &ConvQuant,
+    in_b: &[i8],
+    filter: &[i8],
+    fused_bias: &[i32],
+    oy0: usize,
+    ox0: usize,
+    ch0: usize,
+    out_pixel: &mut [i8],
+) {
+    let c = s.in_c;
+    for ch in ch0..c {
+        let mut acc: i32 = fused_bias[ch];
+        for ky in 0..s.kh {
+            let in_row = &in_b[((oy0 + ky) * s.in_w + ox0) * c + ch..];
+            let f_row = &filter[(ky * s.kw) * c + ch..];
+            let mut i_idx = 0usize;
+            let mut f_idx = 0usize;
+            for _ in 0..s.kw {
+                acc = acc.wrapping_add((in_row[i_idx] as i16 * f_row[f_idx] as i16) as i32);
+                i_idx += c;
+                f_idx += c;
+            }
+        }
+        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
+        out_pixel[ch] = scaled.clamp(q.act_min, q.act_max) as i8;
+    }
+}
+
 /// Interior-optimized int8 depthwise conv over a prepare-time folded
 /// bias (multiplier 1, dilation 1 only — enforced by the caller).
 /// `bias` is still needed for border pixels, where taps are skipped.
+///
+/// This is the packed path with zero packed blocks: every interior
+/// channel runs the scalar folded MAC. The interpreter uses it for
+/// layers thinner than one [`DW_CH_BLOCK`] (no packed buffer allocated).
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_conv2d_i8_folded(
     s: &ConvShape,
@@ -62,8 +187,34 @@ pub fn depthwise_conv2d_i8_folded(
     fused_bias: &[i32],
     output: &mut [i8],
 ) {
+    depthwise_conv2d_i8_packed(s, q, input, filter, &[], bias, fused_bias, output);
+}
+
+/// int8 depthwise conv over the prepare-time channel-blocked packed
+/// filter + folded biases (multiplier 1, dilation 1 — enforced by the
+/// caller). Interior pixels walk whole [`DW_CH_BLOCK`]-lane blocks with
+/// contiguous loads on both the NHWC input and the packed filter; the
+/// `c % DW_CH_BLOCK` ragged edge and all border pixels use the scalar
+/// paths over the original `filter`. The block count is derived from
+/// `packed_filter` itself (an empty slice means every channel takes the
+/// scalar folded path), so one loop serves both tiers.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_i8_packed(
+    s: &ConvShape,
+    q: &ConvQuant,
+    input: &[i8],
+    filter: &[i8],
+    packed_filter: &[i8],
+    bias: Option<&[i32]>,
+    fused_bias: &[i32],
+    output: &mut [i8],
+) {
     debug_assert!(s.dil_h == 1 && s.dil_w == 1 && s.in_c == s.out_c);
     let c = s.in_c; // == out_c
+    let taps = s.kh * s.kw;
+    // How many whole channel blocks the caller packed (0..=c/L); the
+    // min guards against an oversized buffer indexing past fused_bias.
+    let blocks = (packed_filter.len() / (taps * DW_CH_BLOCK)).min(c / DW_CH_BLOCK);
     for b in 0..s.batch {
         let in_b = &input[b * s.in_h * s.in_w * c..];
         for oy in 0..s.out_h {
@@ -74,55 +225,47 @@ pub fn depthwise_conv2d_i8_folded(
                 let interior =
                     y_interior && origin_x >= 0 && origin_x + s.kw as isize <= s.in_w as isize;
                 let out_base = ((b * s.out_h + oy) * s.out_w + ox) * c;
-                if interior {
-                    // No bounds checks, no per-tap input offset: the folded
-                    // bias carries io·Σf, leaving a raw widening i8·i8 MAC.
-                    let oy0 = origin_y as usize;
-                    let ox0 = origin_x as usize;
-                    for ch in 0..c {
-                        let mut acc: i32 = fused_bias[ch];
-                        for ky in 0..s.kh {
-                            let in_row = &in_b[((oy0 + ky) * s.in_w + ox0) * c + ch..];
-                            let f_row = &filter[(ky * s.kw) * c + ch..];
-                            let mut i_idx = 0usize;
-                            let mut f_idx = 0usize;
-                            for _ in 0..s.kw {
-                                acc = acc.wrapping_add(
-                                    (in_row[i_idx] as i16 * f_row[f_idx] as i16) as i32,
-                                );
-                                i_idx += c;
-                                f_idx += c;
-                            }
-                        }
-                        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
-                        output[out_base + ch] = scaled.clamp(q.act_min, q.act_max) as i8;
+                let out_pixel = &mut output[out_base..out_base + c];
+                if !interior {
+                    dw_border_pixel(s, q, in_b, filter, bias, origin_y, origin_x, out_pixel);
+                    continue;
+                }
+                let oy0 = origin_y as usize;
+                let ox0 = origin_x as usize;
+                for blk in 0..blocks {
+                    let ch0 = blk * DW_CH_BLOCK;
+                    let fblk = &packed_filter
+                        [blk * taps * DW_CH_BLOCK..(blk + 1) * taps * DW_CH_BLOCK];
+                    let mut acc = [0i32; DW_CH_BLOCK];
+                    for (lane, a) in acc.iter_mut().enumerate() {
+                        *a = fused_bias[ch0 + lane];
                     }
-                } else {
-                    // Border: guarded taps; folded correction does not
-                    // apply (missing taps), so use the original bias.
-                    for ch in 0..c {
-                        let mut acc: i32 = bias.map(|bv| bv[ch]).unwrap_or(0);
-                        for ky in 0..s.kh {
-                            let iy = origin_y + ky as isize;
-                            if iy < 0 || iy >= s.in_h as isize {
-                                continue;
+                    let mut tap = 0usize;
+                    for ky in 0..s.kh {
+                        let row = ((oy0 + ky) * s.in_w + ox0) * c + ch0;
+                        for kx in 0..s.kw {
+                            // Both sides contiguous: DW_CH_BLOCK adjacent
+                            // NHWC channels × one packed tap — the
+                            // fixed-width lane loop autovectorizes.
+                            let iv = &in_b[row + kx * c..row + kx * c + DW_CH_BLOCK];
+                            let fv = &fblk[tap * DW_CH_BLOCK..(tap + 1) * DW_CH_BLOCK];
+                            for lane in 0..DW_CH_BLOCK {
+                                acc[lane] = acc[lane]
+                                    .wrapping_add((iv[lane] as i16 * fv[lane] as i16) as i32);
                             }
-                            for kx in 0..s.kw {
-                                let ix = origin_x + kx as isize;
-                                if ix < 0 || ix >= s.in_w as isize {
-                                    continue;
-                                }
-                                acc = acc.wrapping_add(
-                                    (in_b[((iy as usize) * s.in_w + ix as usize) * c + ch] as i32
-                                        + q.input_offset)
-                                        * filter[(ky * s.kw + kx) * c + ch] as i32,
-                                );
-                            }
+                            tap += 1;
                         }
-                        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
-                        output[out_base + ch] = scaled.clamp(q.act_min, q.act_max) as i8;
+                    }
+                    for (lane, &a) in acc.iter().enumerate() {
+                        let ch = ch0 + lane;
+                        let scaled = q.per_channel[ch].mult.apply(a) + q.output_offset;
+                        out_pixel[ch] = scaled.clamp(q.act_min, q.act_max) as i8;
                     }
                 }
+                // Ragged edge: the last c % DW_CH_BLOCK channels, scalar.
+                dw_interior_scalar(
+                    s, q, in_b, filter, fused_bias, oy0, ox0, blocks * DW_CH_BLOCK, out_pixel,
+                );
             }
         }
     }
@@ -161,7 +304,9 @@ pub fn depthwise_conv2d_i8_opt(
                     // EXPERIMENTS.md §Perf: a channel-contiguous
                     // stack-accumulator variant was tried and REVERTED —
                     // at MobileNet-0.25 widths (8–256 channels) the per-tap
-                    // zip overhead beat the win, 311µs -> 410µs.)
+                    // zip overhead beat the win, 311µs -> 410µs. The packed
+                    // path above sidesteps that by hoisting the repack to
+                    // populate time instead of doing it per tap.)
                     let oy0 = origin_y as usize;
                     let ox0 = origin_x as usize;
                     for ch in 0..c {
@@ -184,29 +329,8 @@ pub fn depthwise_conv2d_i8_opt(
                         output[out_base + ch] = scaled.clamp(q.act_min, q.act_max) as i8;
                     }
                 } else {
-                    // Border: guarded taps.
-                    for ch in 0..c {
-                        let mut acc: i32 = bias.map(|bv| bv[ch]).unwrap_or(0);
-                        for ky in 0..s.kh {
-                            let iy = origin_y + ky as isize;
-                            if iy < 0 || iy >= s.in_h as isize {
-                                continue;
-                            }
-                            for kx in 0..s.kw {
-                                let ix = origin_x + kx as isize;
-                                if ix < 0 || ix >= s.in_w as isize {
-                                    continue;
-                                }
-                                acc = acc.wrapping_add(
-                                    (in_b[((iy as usize) * s.in_w + ix as usize) * c + ch] as i32
-                                        + q.input_offset)
-                                        * filter[(ky * s.kw + kx) * c + ch] as i32,
-                                );
-                            }
-                        }
-                        let scaled = q.per_channel[ch].mult.apply(acc) + q.output_offset;
-                        output[out_base + ch] = scaled.clamp(q.act_min, q.act_max) as i8;
-                    }
+                    let out_pixel = &mut output[out_base..out_base + c];
+                    dw_border_pixel(s, q, in_b, filter, bias, origin_y, origin_x, out_pixel);
                 }
             }
         }
@@ -226,17 +350,23 @@ impl Kernel for OptDepthwiseConvKernel {
         let input = ctx.input(0)?;
         let filter = ctx.input(1)?;
         if input.dtype == DType::I8 {
-            let (_, _, _, out_c) = filter.shape.as_nhwc()?;
+            let (_, kh, kw, out_c) = filter.shape.as_nhwc()?;
             let fast_path = opts.depth_multiplier == 1
                 && opts.dilation_h == 1
                 && opts.dilation_w == 1;
             let const_weights = ctx.weights_are_const();
             if fast_path && const_weights {
                 let fb = ctx.request_persistent(out_c * std::mem::size_of::<i32>());
+                // Channel-blocked repack: only when at least one whole
+                // DW_CH_BLOCK-lane block exists; thinner layers stay on
+                // the folded (bias-only) fast path.
+                let pf = if out_c >= DW_CH_BLOCK {
+                    Some(ctx.request_persistent(packed_depthwise_len(kh, kw, out_c)))
+                } else {
+                    None
+                };
                 if let OpData::Conv(data) = ctx.op_data_mut() {
-                    // Depthwise folds biases only; no weight repacking yet
-                    // (see ROADMAP "Open items").
-                    data.packed = Some(PackedSpec { filter: None, fused_bias: fb });
+                    data.packed = Some(PackedSpec { filter: pf, fused_bias: fb });
                 }
             }
         }
@@ -261,6 +391,10 @@ impl Kernel for OptDepthwiseConvKernel {
         }
         let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
         fold_depthwise_bias(filter, kh, kw, out_c, data.input_offset, bias, fused);
+        if let Some(fh) = spec.filter {
+            let packed = crate::ops::cast_i8_mut(ctx.persistent_bytes(fh)?);
+            pack_depthwise_filter(filter, kh, kw, out_c, packed);
+        }
         Ok(())
     }
 
@@ -282,10 +416,21 @@ impl Kernel for OptDepthwiseConvKernel {
                 match data.packed {
                     Some(spec) if mult == 1 => {
                         let fused = ctx.persistent_i32(spec.fused_bias)?;
-                        depthwise_conv2d_i8_folded(
-                            &s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, fused,
-                            ctx.output_i8(0)?,
-                        );
+                        match spec.filter {
+                            Some(fh) => {
+                                let packed = ctx.persistent_i8(fh)?;
+                                depthwise_conv2d_i8_packed(
+                                    &s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, packed, bias,
+                                    fused, ctx.output_i8(0)?,
+                                );
+                            }
+                            None => {
+                                depthwise_conv2d_i8_folded(
+                                    &s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, fused,
+                                    ctx.output_i8(0)?,
+                                );
+                            }
+                        }
                     }
                     _ => {
                         depthwise_conv2d_i8_opt(
@@ -312,15 +457,15 @@ mod tests {
     use crate::tensor::QuantizedMultiplier;
     use crate::testutil::{check, Cases, Rng};
 
-    fn random_dw_case(
+    fn random_dw_case_with_c(
         rng: &mut Rng,
+        in_c: usize,
     ) -> (ConvShape, Vec<i8>, Vec<i8>, Vec<i32>, Vec<ChannelQuant>, i32, i32) {
         let kh = 1 + rng.below(3);
         let kw = 1 + rng.below(3);
         let stride = 1 + rng.below(2);
         let in_h = kh + rng.below(6);
         let in_w = kw + rng.below(6);
-        let in_c = 1 + rng.below(8);
         let same = rng.chance(0.5);
         let (out_h, out_w, pad_top, pad_left) = if same {
             let oh = in_h.div_ceil(stride);
@@ -356,6 +501,13 @@ mod tests {
         let input_offset = rng.range_i32(-128, 127);
         let output_offset = rng.range_i32(-20, 20);
         (s, input, filter, bias, pc, input_offset, output_offset)
+    }
+
+    fn random_dw_case(
+        rng: &mut Rng,
+    ) -> (ConvShape, Vec<i8>, Vec<i8>, Vec<i32>, Vec<ChannelQuant>, i32, i32) {
+        let in_c = 1 + rng.below(8);
+        random_dw_case_with_c(rng, in_c)
     }
 
     #[test]
@@ -409,6 +561,80 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Channel-blocked packed path == reference, bit-exact, across channel
+    /// counts straddling the lane width: c % DW_CH_BLOCK ∈ {0, 1, lane-1}
+    /// plus random c, with random geometry (so border, interior, and
+    /// ragged-edge code all run), missing bias, and tight clamps.
+    #[test]
+    fn property_packed_matches_reference_exactly() {
+        // lane-multiple, lane+1, 2*lane-1, exact lane, thin (no blocks),
+        // then random draws.
+        let fixed_c = [
+            DW_CH_BLOCK,         // c % L == 0, one block
+            2 * DW_CH_BLOCK,     // c % L == 0, two blocks
+            DW_CH_BLOCK + 1,     // c % L == 1
+            2 * DW_CH_BLOCK - 1, // c % L == lane-1
+            3,                   // no whole block: pure ragged path
+        ];
+        check(Cases::n(80), |rng: &mut Rng| {
+            let pick = rng.below(fixed_c.len() + 2);
+            let in_c = if pick < fixed_c.len() {
+                fixed_c[pick]
+            } else {
+                1 + rng.below(3 * DW_CH_BLOCK)
+            };
+            let (s, input, filter, bias, pc, input_offset, output_offset) =
+                random_dw_case_with_c(rng, in_c);
+            let with_bias = rng.chance(0.8);
+            let bias_opt = if with_bias { Some(&bias[..]) } else { None };
+            let tight = rng.chance(0.3);
+            let q = ConvQuant {
+                input_offset,
+                output_offset,
+                per_channel: &pc,
+                act_min: if tight { -16 } else { -128 },
+                act_max: if tight { 15 } else { 127 },
+            };
+            let n_out = s.batch * s.out_h * s.out_w * s.in_c;
+            let mut want = vec![0i8; n_out];
+            depthwise_conv2d_i8(&s, 1, &q, &input, &filter, bias_opt, &mut want);
+
+            // Populate-pass precompute...
+            let mut fused = vec![0i32; s.in_c];
+            fold_depthwise_bias(&filter, s.kh, s.kw, s.in_c, input_offset, bias_opt, &mut fused);
+            let mut packed = vec![0i8; packed_depthwise_len(s.kh, s.kw, s.in_c)];
+            pack_depthwise_filter(&filter, s.kh, s.kw, s.in_c, &mut packed);
+            // ...then the lean invoke body.
+            let mut got = vec![0i8; n_out];
+            depthwise_conv2d_i8_packed(
+                &s, &q, &input, &filter, &packed, bias_opt, &fused, &mut got,
+            );
+            if want != got {
+                return Err(format!(
+                    "packed mismatch for {s:?} c={in_c} bias={with_bias} tight={tight}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// The packed layout: block-major, then tap-major, lanes fastest.
+    #[test]
+    fn packed_depthwise_layout_round_trips() {
+        // kh=1 kw=2 (2 taps), c=9: one whole block + ragged channel 8.
+        let kh = 1;
+        let kw = 2;
+        let c = DW_CH_BLOCK + 1;
+        let filter: Vec<i8> = (0..(kh * kw * c) as i8).collect();
+        let mut packed = vec![0i8; packed_depthwise_len(kh, kw, c)];
+        assert_eq!(packed.len(), 2 * DW_CH_BLOCK); // 1 block × 2 taps × 8 lanes
+        pack_depthwise_filter(&filter, kh, kw, c, &mut packed);
+        // Block 0, tap 0: channels 0..8 of tap 0 = filter[0..8].
+        assert_eq!(&packed[..DW_CH_BLOCK], &filter[..DW_CH_BLOCK]);
+        // Block 0, tap 1: channels 0..8 of tap 1 = filter[c..c+8].
+        assert_eq!(&packed[DW_CH_BLOCK..2 * DW_CH_BLOCK], &filter[c..c + DW_CH_BLOCK]);
     }
 
     #[test]

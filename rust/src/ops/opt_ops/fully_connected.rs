@@ -5,7 +5,9 @@
 //! pass into 4-channel blocks and the model-constant
 //! `bias[o] + input_offset·Σf[o]` is folded per output (CMSIS-NN's
 //! init-time "kernel sums"), so the per-invoke body is the pure
-//! register-blocked MAC + requantize loop. The int8 spec guarantees
+//! register-blocked MAC + requantize loop — runtime-dispatched by the
+//! GEMM front to AVX2/NEON/scalar over the same packed layout (see
+//! `gemm`'s module docs), with no per-arch code here. The int8 spec guarantees
 //! filter zero point 0; a (spec-violating) nonzero filter offset or a
 //! non-constant filter falls back to [`fully_connected_i8_blocked`],
 //! which fuses the Σf computation into its single pass.

@@ -1,0 +1,189 @@
+//! AVX2 dot core — the x86_64 tier of the GEMM dispatch.
+//!
+//! The host analog of CMSIS-NN's SMLAD dual 16-bit MAC: `vpmaddwd`
+//! (`_mm256_madd_epi16`) multiplies 16 i16 pairs and sums adjacent
+//! pairs into 8 i32 lanes per instruction. The packed layout
+//! (`fblk[kk*4 + c]`, k-major × [`OC_BLOCK`] channels) maps onto it as
+//! follows, 4 k-steps per iteration:
+//!
+//! ```text
+//! 16 weight bytes  [k0c0..k0c3 k1c0..k1c3 | k2c0..k2c3 k3c0..k3c3]
+//!   sign-extend →  16 i16 lanes, then in-lane vpshufb pairs k with k+1:
+//!                  [(k0,k1)c0 (k0,k1)c1 (k0,k1)c2 (k0,k1)c3 | (k2,k3)c0 ..]
+//! 4 input bytes    [x0 x1 x2 x3]
+//!   sign-extend + broadcast + vpshufb →
+//!                  [x0 x1  x0 x1  x0 x1  x0 x1 | x2 x3  x2 x3  x2 x3  x2 x3]
+//! vpmaddwd + vpaddd accumulates i32 lanes
+//!                  [c0 c1 c2 c3]·(k0,k1) | [c0 c1 c2 c3]·(k2,k3)
+//! ```
+//!
+//! so one madd retires 8 MACs per row; the low/high 128-bit halves are
+//! summed once after the K loop. (We deliberately do *not* use
+//! `_mm256_maddubs_epi16`: it needs an unsigned LHS, i.e. a +128 input
+//! rebias whose correction term would have to live in the folded bias —
+//! that would make the precompute backend-dependent and break the
+//! "same packed buffers for every tier" contract.)
+//!
+//! i16×i16 products of i8 values are ≤ 2^14, so a madd pair sum is
+//! ≤ 2^15 — no saturation — and i32 accumulation is exact for any
+//! realistic k, matching the scalar body's wrapping arithmetic bit for
+//! bit. The requantize epilogue is the shared scalar one in `gemm_body`,
+//! so the only instructions that differ from the scalar tier are the
+//! exact-integer MACs: bit-equality is by construction, and
+//! property-tested in `gemm/mod.rs` under `ForceDispatch`.
+//!
+//! # Safety
+//!
+//! All `unsafe` in this crate's GEMM lives in this module (and its NEON
+//! sibling), in two forms, each justified by an invariant:
+//!
+//! * `#[target_feature(enable = "avx2")]` functions: only reachable
+//!   through `GemmBackend::Avx2`, which the dispatch front (and
+//!   `ForceDispatch::force`) hands out only when
+//!   `is_x86_feature_detected!("avx2")` returned true.
+//! * unaligned vector loads: in-bounds by the packed-layout contract
+//!   (`fblk.len() == OC_BLOCK*k`, `x.len() == k`, asserted below), with
+//!   the precise index arithmetic stated at each load site.
+
+use super::{dot_tail, DotKernel, OC_BLOCK};
+use core::arch::x86_64::*;
+
+/// Zero-sized marker implementing the AVX2 dot core.
+pub(crate) struct Avx2Dot;
+
+impl DotKernel for Avx2Dot {
+    #[inline(always)]
+    fn dot2(
+        x0: &[i8],
+        x1: &[i8],
+        fblk: &[i8],
+        k: usize,
+    ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+        // SAFETY: Avx2Dot is only dispatched when the avx2 feature probe
+        // passed (see module docs); slice bounds are asserted inside.
+        unsafe { dot2_avx2(x0, x1, fblk, k) }
+    }
+
+    #[inline(always)]
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+        // SAFETY: as above.
+        unsafe { dot1_avx2(x0, fblk, k) }
+    }
+}
+
+/// In-lane byte shuffle pairing k-step i16s per channel:
+/// [a0 a1 a2 a3 b0 b1 b2 b3] (i16) → [a0 b0 a1 b1 a2 b2 a3 b3].
+#[inline(always)]
+unsafe fn weight_pair_mask() -> __m256i {
+    _mm256_setr_epi8(
+        0, 1, 8, 9, 2, 3, 10, 11, 4, 5, 12, 13, 6, 7, 14, 15, //
+        0, 1, 8, 9, 2, 3, 10, 11, 4, 5, 12, 13, 6, 7, 14, 15,
+    )
+}
+
+/// In-lane byte shuffle replicating input pairs: from a broadcast
+/// [x0 x1 x2 x3 ...] (i16) build low lane [x0 x1]×4, high lane [x2 x3]×4.
+#[inline(always)]
+unsafe fn input_pair_mask() -> __m256i {
+    _mm256_setr_epi8(
+        0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, //
+        4, 5, 6, 7, 4, 5, 6, 7, 4, 5, 6, 7, 4, 5, 6, 7,
+    )
+}
+
+/// Load weights for 4 k-steps (16 bytes at `fblk[kk*4..kk*4+16]`),
+/// sign-extend to i16 and pair (k, k+1) per channel.
+///
+/// # Safety
+/// Caller guarantees avx2 and `(kk + 4) * OC_BLOCK <= fblk.len()`.
+#[inline(always)]
+unsafe fn load_weights4(fblk: &[i8], kk: usize) -> __m256i {
+    debug_assert!((kk + 4) * OC_BLOCK <= fblk.len());
+    // SAFETY: 16 bytes starting at kk*4; kk+4 <= k and fblk holds k*4
+    // bytes (packed-layout contract), so the load is in-bounds.
+    let w8 = _mm_loadu_si128(fblk.as_ptr().add(kk * OC_BLOCK) as *const __m128i);
+    let w16 = _mm256_cvtepi8_epi16(w8);
+    _mm256_shuffle_epi8(w16, weight_pair_mask())
+}
+
+/// Load 4 input bytes `x[kk..kk+4]`, sign-extend to i16 and replicate
+/// into the madd operand pattern (see module docs).
+///
+/// # Safety
+/// Caller guarantees avx2. The byte reads are safe slice indexing.
+#[inline(always)]
+unsafe fn load_inputs4(x: &[i8], kk: usize) -> __m256i {
+    // Safe 4-byte gather (little-endian reassembly, x86 is LE).
+    let raw = i32::from_le_bytes([
+        x[kk] as u8,
+        x[kk + 1] as u8,
+        x[kk + 2] as u8,
+        x[kk + 3] as u8,
+    ]);
+    let x16 = _mm_cvtepi8_epi16(_mm_cvtsi32_si128(raw)); // [x0 x1 x2 x3 0 0 0 0] i16
+    let xq = _mm256_broadcastq_epi64(x16); // low 64 bits to all 4 qwords
+    _mm256_shuffle_epi8(xq, input_pair_mask())
+}
+
+/// Fold the (k0,k1) and (k2,k3) half-accumulators and store 4 i32 lanes.
+///
+/// # Safety
+/// Caller guarantees avx2.
+#[inline(always)]
+unsafe fn reduce_store(acc: __m256i) -> [i32; OC_BLOCK] {
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256::<1>(acc);
+    let sum = _mm_add_epi32(lo, hi);
+    let mut out = [0i32; OC_BLOCK];
+    // SAFETY: out is 16 bytes, exactly one __m128i store.
+    _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, sum);
+    out
+}
+
+/// # Safety
+/// Requires the avx2 CPU feature; `x0.len() >= k`, `x1.len() >= k`,
+/// `fblk.len() >= OC_BLOCK * k` (the packed-layout contract).
+#[target_feature(enable = "avx2")]
+unsafe fn dot2_avx2(
+    x0: &[i8],
+    x1: &[i8],
+    fblk: &[i8],
+    k: usize,
+) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+    debug_assert!(x0.len() >= k && x1.len() >= k && fblk.len() >= OC_BLOCK * k);
+    let mut vacc0 = _mm256_setzero_si256();
+    let mut vacc1 = _mm256_setzero_si256();
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        let wp = load_weights4(fblk, kk); // one weight load feeds both rows
+        let xa = load_inputs4(x0, kk);
+        let xb = load_inputs4(x1, kk);
+        vacc0 = _mm256_add_epi32(vacc0, _mm256_madd_epi16(xa, wp));
+        vacc1 = _mm256_add_epi32(vacc1, _mm256_madd_epi16(xb, wp));
+        kk += 4;
+    }
+    let mut acc0 = reduce_store(vacc0);
+    let mut acc1 = reduce_store(vacc1);
+    dot_tail(&mut acc0, x0, fblk, kk, k);
+    dot_tail(&mut acc1, x1, fblk, kk, k);
+    (acc0, acc1)
+}
+
+/// # Safety
+/// Requires the avx2 CPU feature; `x0.len() >= k`,
+/// `fblk.len() >= OC_BLOCK * k` (the packed-layout contract).
+#[target_feature(enable = "avx2")]
+unsafe fn dot1_avx2(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+    debug_assert!(x0.len() >= k && fblk.len() >= OC_BLOCK * k);
+    let mut vacc0 = _mm256_setzero_si256();
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        let wp = load_weights4(fblk, kk);
+        let xa = load_inputs4(x0, kk);
+        vacc0 = _mm256_add_epi32(vacc0, _mm256_madd_epi16(xa, wp));
+        kk += 4;
+    }
+    let mut acc0 = reduce_store(vacc0);
+    dot_tail(&mut acc0, x0, fblk, kk, k);
+    acc0
+}

@@ -1,0 +1,723 @@
+//! Shared register-blocked int8 GEMM micro-kernel over packed weights,
+//! with runtime-dispatched SIMD backends.
+//!
+//! This is the single inner loop behind the optimized conv im2col path,
+//! the conv 1×1 fast path, and FullyConnected. The design mirrors what
+//! CMSIS-NN does for Cortex-M, restated for a host compiler:
+//!
+//! * **Packed weights** ([`pack_filter`]): the filter matrix
+//!   `[out_c, k]` is repacked once at init into blocks of
+//!   [`OC_BLOCK`] output channels, k-major interleaved
+//!   (`packed[(blk*k + kk)*4 + c] = filter[(blk*4+c)*k + kk]`), so the
+//!   micro-kernel loads 4 weights per k-step from one contiguous,
+//!   sequentially-advancing pointer. Ragged tails pad with zero rows —
+//!   a zero filter row contributes exactly zero to its (never-stored)
+//!   accumulator.
+//! * **Folded bias** ([`fold_bias`]): the int8 spec fixes the filter zero
+//!   point at 0, so `Σ (x+io)·f = Σ x·f + io·Σf`. The model-constant
+//!   `bias[oc] + io·Σf[oc]` ("kernel sums" in CMSIS-NN) is precomputed
+//!   per channel during the populate pass, removing the per-invoke
+//!   O(out_c·k) filter-sum recomputation entirely.
+//! * **Register blocking**: 4 output channels × 2 LHS rows (pixels) of
+//!   i32 accumulators live across the K loop, so each loaded input value
+//!   feeds 4 MAC chains and each loaded weight feeds 2.
+//!
+//! # Dispatch tiers
+//!
+//! The K-loop body (the dot-product core) is selected **once per
+//! process** at first use and cached as a function pointer in a
+//! [`std::sync::OnceLock`], so the interpreter hot loop pays no
+//! per-invoke detection cost:
+//!
+//! | tier                    | module      | selected when                                      |
+//! |-------------------------|-------------|----------------------------------------------------|
+//! | [`GemmBackend::Avx2`]   | `avx2.rs`   | x86_64 and `is_x86_feature_detected!("avx2")`      |
+//! | [`GemmBackend::Neon`]   | `neon.rs`   | aarch64 and `is_aarch64_feature_detected!("neon")` |
+//! | [`GemmBackend::Scalar`] | `scalar.rs` | always available, any target                       |
+//!
+//! All backends consume the **same** packed layout and share the scalar
+//! requantize/clamp/store epilogue ([`store_row`] inside [`gemm_body`]),
+//! so they are bit-exact by construction (i8·i8→i32 MACs are exact in
+//! any summation order; only the accumulation instructions differ).
+//! Property tests force each available backend via [`ForceDispatch`] and
+//! compare against scalar and a naive oracle.
+//!
+//! ## Adding a new arch backend
+//!
+//! 1. Add `gemm/<arch>.rs` with a zero-sized type implementing
+//!    [`DotKernel`] — two associated fns computing raw `[i32; OC_BLOCK]`
+//!    dot products over one packed block. Keep all `unsafe` inside the
+//!    module, with safety comments tied to the packed-layout contract
+//!    (`fblk.len() == OC_BLOCK*k`, `x.len() == k`).
+//! 2. `#[cfg(target_arch = ...)] mod <arch>;` here, a new
+//!    [`GemmBackend`] variant, its `available()` probe, and an arm in
+//!    `entry_for`/`BACKEND_PREFERENCE`.
+//! 3. The property tests in this module pick it up automatically (they
+//!    iterate all variants and skip unavailable ones).
+//!
+//! Bit-exactness against the reference kernels is enforced by property
+//! tests here and in the conv/FC modules.
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use crate::ops::common::ChannelQuant;
+use crate::tensor::QuantizedMultiplier;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Output channels per packed block (accumulator columns).
+pub const OC_BLOCK: usize = 4;
+/// LHS rows (pixels) per micro-kernel pass.
+pub const ROW_BLOCK: usize = 2;
+
+/// Requantization state for one GEMM call.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmQuant<'a> {
+    /// Output multiplier: per-channel (conv) or per-tensor (FC).
+    pub mult: GemmMult<'a>,
+    /// Output zero point, added after requantization.
+    pub output_offset: i32,
+    /// Fused-activation clamp low.
+    pub act_min: i32,
+    /// Fused-activation clamp high.
+    pub act_max: i32,
+}
+
+/// Per-channel vs per-tensor requantization multiplier.
+#[derive(Debug, Clone, Copy)]
+pub enum GemmMult<'a> {
+    /// One multiplier per output channel (conv per-axis quantization).
+    PerChannel(&'a [ChannelQuant]),
+    /// One multiplier for every channel (FC per-tensor quantization).
+    PerTensor(QuantizedMultiplier),
+}
+
+impl GemmMult<'_> {
+    #[inline(always)]
+    fn at(&self, oc: usize) -> QuantizedMultiplier {
+        match self {
+            GemmMult::PerChannel(pc) => pc[oc].mult,
+            GemmMult::PerTensor(m) => *m,
+        }
+    }
+}
+
+/// Bytes needed for the packed filter of a `[out_c, k]` weight matrix
+/// (out_c rounded up to a whole block of [`OC_BLOCK`]).
+pub fn packed_filter_len(out_c: usize, k: usize) -> usize {
+    out_c.div_ceil(OC_BLOCK) * OC_BLOCK * k
+}
+
+/// Repack a row-major `[out_c, k]` filter into the channel-blocked layout
+/// the micro-kernel consumes. Runs once, during the populate pass.
+pub fn pack_filter(filter: &[i8], out_c: usize, k: usize, packed: &mut [i8]) {
+    debug_assert!(filter.len() >= out_c * k);
+    debug_assert!(packed.len() >= packed_filter_len(out_c, k));
+    for blk in 0..out_c.div_ceil(OC_BLOCK) {
+        let oc0 = blk * OC_BLOCK;
+        let dst = &mut packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+        for kk in 0..k {
+            for c in 0..OC_BLOCK {
+                dst[kk * OC_BLOCK + c] =
+                    if oc0 + c < out_c { filter[(oc0 + c) * k + kk] } else { 0 };
+            }
+        }
+    }
+}
+
+/// Precompute the folded bias `bias[oc] + input_offset * Σ filter[oc]`
+/// for every output channel. Runs once, during the populate pass; this is
+/// the per-invoke Σf recomputation hoisted to init time.
+pub fn fold_bias(
+    filter: &[i8],
+    out_c: usize,
+    k: usize,
+    input_offset: i32,
+    bias: Option<&[i32]>,
+    fused: &mut [i32],
+) {
+    debug_assert!(fused.len() >= out_c);
+    for oc in 0..out_c {
+        let f_sum: i32 = filter[oc * k..(oc + 1) * k].iter().map(|&v| v as i32).sum();
+        fused[oc] = bias
+            .map(|bv| bv[oc])
+            .unwrap_or(0)
+            .wrapping_add(input_offset.wrapping_mul(f_sum));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// The dot-product backends the GEMM front can dispatch to.
+///
+/// Variants for arches this binary was not compiled for still exist (so
+/// tools like `tfmicro cpu` can name them) but report
+/// [`available()`](GemmBackend::available) = `false` and cannot be
+/// forced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmBackend {
+    /// Portable register-blocked scalar kernel (`gemm/scalar.rs`).
+    Scalar,
+    /// AVX2 `vpmaddwd` 8-lane i16 pair-MAC body (`gemm/avx2.rs`, x86_64).
+    Avx2,
+    /// NEON `smlal`-style widening-MAC body (`gemm/neon.rs`, aarch64).
+    Neon,
+}
+
+/// Every variant, in selection preference order (best first, scalar
+/// last — scalar is always available so detection cannot fail).
+const BACKEND_PREFERENCE: [GemmBackend; 3] =
+    [GemmBackend::Avx2, GemmBackend::Neon, GemmBackend::Scalar];
+
+impl GemmBackend {
+    /// Stable lowercase name, used in `BENCH_kernels.json` ("dispatch")
+    /// and `tfmicro cpu` output.
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmBackend::Scalar => "scalar",
+            GemmBackend::Avx2 => "avx2",
+            GemmBackend::Neon => "neon",
+        }
+    }
+
+    /// Whether this backend was compiled in *and* the CPU supports it.
+    pub fn available(self) -> bool {
+        match self {
+            GemmBackend::Scalar => true,
+            GemmBackend::Avx2 => avx2_available(),
+            GemmBackend::Neon => neon_available(),
+        }
+    }
+
+    /// Every backend variant (available or not), preference order.
+    pub fn all() -> [GemmBackend; 3] {
+        BACKEND_PREFERENCE
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            GemmBackend::Scalar => 1,
+            GemmBackend::Avx2 => 2,
+            GemmBackend::Neon => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<GemmBackend> {
+        match v {
+            1 => Some(GemmBackend::Scalar),
+            2 => Some(GemmBackend::Avx2),
+            3 => Some(GemmBackend::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for GemmBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+/// The GEMM entry signature every backend front conforms to.
+type GemmFn = fn(usize, usize, usize, &[i8], &[i8], &[i32], &GemmQuant<'_>, &mut [i8], usize);
+
+fn entry_for(b: GemmBackend) -> GemmFn {
+    match b {
+        GemmBackend::Scalar => gemm_body::<scalar::ScalarDot>,
+        #[cfg(target_arch = "x86_64")]
+        GemmBackend::Avx2 => gemm_body::<avx2::Avx2Dot>,
+        #[cfg(target_arch = "aarch64")]
+        GemmBackend::Neon => gemm_body::<neon::NeonDot>,
+        // Variants not compiled for this arch can never be selected
+        // (detect() and ForceDispatch::force both check available());
+        // this arm is a defensive fallback only.
+        _ => gemm_body::<scalar::ScalarDot>,
+    }
+}
+
+/// Detected backend, resolved once per process.
+static DETECTED: OnceLock<GemmBackend> = OnceLock::new();
+/// Cached entry pointer for the detected backend.
+static DISPATCH: OnceLock<GemmFn> = OnceLock::new();
+/// Test/bench override: 0 = auto, else `GemmBackend::to_u8`.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+/// Serializes [`ForceDispatch`] holders: parallel tests must not stomp
+/// each other's override. Concurrent *non-forcing* GEMM callers need no
+/// protection — every backend is bit-exact, so which one they hit is
+/// unobservable.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// The backend runtime detection chose for this CPU (ignores forcing).
+pub fn detected_backend() -> GemmBackend {
+    *DETECTED.get_or_init(|| {
+        BACKEND_PREFERENCE.into_iter().find(|b| b.available()).unwrap_or(GemmBackend::Scalar)
+    })
+}
+
+/// The backend [`gemm_i8_packed`] will actually run right now (the
+/// forced override while a [`ForceDispatch`] guard is live, else the
+/// detected one).
+pub fn active_backend() -> GemmBackend {
+    GemmBackend::from_u8(FORCED.load(Ordering::Relaxed)).unwrap_or_else(detected_backend)
+}
+
+/// True while a [`ForceDispatch`] override is in effect.
+pub fn dispatch_is_forced() -> bool {
+    FORCED.load(Ordering::Relaxed) != 0
+}
+
+#[inline]
+fn dispatch_fn() -> GemmFn {
+    // One relaxed atomic load on the hot path; the feature probe itself
+    // runs at most once per process (OnceLock).
+    match GemmBackend::from_u8(FORCED.load(Ordering::Relaxed)) {
+        Some(forced) => entry_for(forced),
+        None => *DISPATCH.get_or_init(|| entry_for(detected_backend())),
+    }
+}
+
+thread_local! {
+    /// True while this thread holds a [`ForceDispatch`] guard — lets a
+    /// nested same-thread `force` refuse cleanly instead of deadlocking
+    /// on the non-reentrant [`FORCE_LOCK`].
+    static FORCE_HELD: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// RAII test/bench hook pinning [`gemm_i8_packed`] to one backend.
+///
+/// Holding the guard serializes other would-be forcers behind a
+/// process-wide mutex (so concurrent property tests cannot interleave
+/// overrides); auto dispatch is restored on drop. `force` returns `None`
+/// when the backend is unavailable on this CPU, and also when the
+/// calling thread already holds a guard (nesting would deadlock the
+/// non-reentrant lock; one override at a time is the whole point).
+pub struct ForceDispatch {
+    _serialize: MutexGuard<'static, ()>,
+}
+
+impl ForceDispatch {
+    /// Pin dispatch to `backend` until the guard drops, or `None` if the
+    /// backend is unavailable on this CPU or this thread already holds a
+    /// guard.
+    pub fn force(backend: GemmBackend) -> Option<ForceDispatch> {
+        if !backend.available() || FORCE_HELD.with(|h| h.get()) {
+            return None;
+        }
+        // A panicked holder already restored FORCED in its drop; the
+        // poison itself carries no state worth propagating.
+        let guard = FORCE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        FORCE_HELD.with(|h| h.set(true));
+        FORCED.store(backend.to_u8(), Ordering::Relaxed);
+        Some(ForceDispatch { _serialize: guard })
+    }
+}
+
+impl Drop for ForceDispatch {
+    fn drop(&mut self) {
+        FORCED.store(0, Ordering::Relaxed);
+        FORCE_HELD.with(|h| h.set(false));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The dispatch front + shared body
+// ---------------------------------------------------------------------------
+
+/// The backend contract: raw `[i32; OC_BLOCK]` dot products over one
+/// packed block.
+///
+/// `fblk` is exactly `OC_BLOCK * k` bytes in the [`pack_filter`] layout
+/// (k-major, OC_BLOCK channels interleaved); `x0`/`x1` are LHS rows of
+/// exactly `k` bytes. Implementations must be mathematically exact
+/// (wrapping i32 MACs of i8·i8 products — any summation order yields the
+/// same bits).
+pub(crate) trait DotKernel {
+    /// Two rows × OC_BLOCK channels (the weight block is loaded once and
+    /// feeds both rows).
+    fn dot2(x0: &[i8], x1: &[i8], fblk: &[i8], k: usize) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]);
+    /// One row × OC_BLOCK channels (the odd final row).
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK];
+}
+
+/// Scalar K-remainder: accumulate steps `from..k` of one row into `acc`.
+/// The single shared copy every backend uses for its ragged-K tail (and
+/// the scalar tier for its `k % 4` remainder), so the tail semantics
+/// cannot diverge between tiers.
+#[inline(always)]
+pub(crate) fn dot_tail(acc: &mut [i32; OC_BLOCK], x: &[i8], fblk: &[i8], from: usize, k: usize) {
+    for kk in from..k {
+        let f4 = &fblk[kk * OC_BLOCK..kk * OC_BLOCK + OC_BLOCK];
+        let a = x[kk] as i16;
+        for c in 0..OC_BLOCK {
+            acc[c] = acc[c].wrapping_add((a * f4[c] as i16) as i32);
+        }
+    }
+}
+
+/// Requantize + clamp + store one row of one block. Shared by every
+/// backend so the epilogue semantics are identical by construction.
+#[inline(always)]
+fn store_row(
+    out: &mut [i8],
+    row_base: usize,
+    oc0: usize,
+    live: usize,
+    acc: &[i32; OC_BLOCK],
+    fused_bias: &[i32],
+    q: &GemmQuant,
+) {
+    for (c, &a) in acc.iter().enumerate().take(live) {
+        let oc = oc0 + c;
+        let v = q.mult.at(oc).apply(fused_bias[oc].wrapping_add(a)) + q.output_offset;
+        out[row_base + oc] = v.clamp(q.act_min, q.act_max) as i8;
+    }
+}
+
+/// The block/row loop structure, monomorphized per backend: slice out one
+/// packed block, run the backend's K-loop dot core, then the shared
+/// scalar epilogue.
+#[allow(clippy::too_many_arguments)]
+fn gemm_body<D: DotKernel>(
+    rows: usize,
+    k: usize,
+    out_c: usize,
+    lhs: &[i8],
+    packed: &[i8],
+    fused_bias: &[i32],
+    q: &GemmQuant,
+    out: &mut [i8],
+    out_stride: usize,
+) {
+    debug_assert!(lhs.len() >= rows * k);
+    debug_assert!(packed.len() >= packed_filter_len(out_c, k));
+    debug_assert!(fused_bias.len() >= out_c);
+    debug_assert!(rows == 0 || out.len() >= (rows - 1) * out_stride + out_c);
+
+    for blk in 0..out_c.div_ceil(OC_BLOCK) {
+        let oc0 = blk * OC_BLOCK;
+        let live = OC_BLOCK.min(out_c - oc0);
+        let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+        let mut r = 0usize;
+        while r + ROW_BLOCK <= rows {
+            let x0 = &lhs[r * k..r * k + k];
+            let x1 = &lhs[(r + 1) * k..(r + 1) * k + k];
+            let (acc0, acc1) = D::dot2(x0, x1, fblk, k);
+            store_row(out, r * out_stride, oc0, live, &acc0, fused_bias, q);
+            store_row(out, (r + 1) * out_stride, oc0, live, &acc1, fused_bias, q);
+            r += ROW_BLOCK;
+        }
+        if r < rows {
+            let acc0 = D::dot1(&lhs[r * k..r * k + k], fblk, k);
+            store_row(out, r * out_stride, oc0, live, &acc0, fused_bias, q);
+        }
+    }
+}
+
+/// The micro-kernel: `out[r, oc] = requant(fused_bias[oc] + Σ_k lhs[r,k] ·
+/// w[oc,k])` over a packed weight matrix, runtime-dispatched to the best
+/// available SIMD backend (see the module docs' dispatch-tier table).
+///
+/// * `lhs` — `[rows, k]` row-major i8 (im2col patches, input pixels, or
+///   FC input rows). Elements must already incorporate the zero-point
+///   convention: the input-offset correction lives in `fused_bias`, so
+///   `lhs` holds raw quantized values (padding cells hold the input zero
+///   point, which contributes zero after the folded correction).
+/// * `packed` — output of [`pack_filter`].
+/// * `fused_bias` — output of [`fold_bias`], one i32 per output channel.
+/// * `out` — written at `out[r * out_stride + oc]` for every
+///   `r < rows`, `oc < out_c`; `out_stride` is normally `out_c` but lets
+///   conv write into a larger NHWC row.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed(
+    rows: usize,
+    k: usize,
+    out_c: usize,
+    lhs: &[i8],
+    packed: &[i8],
+    fused_bias: &[i32],
+    q: &GemmQuant,
+    out: &mut [i8],
+    out_stride: usize,
+) {
+    dispatch_fn()(rows, k, out_c, lhs, packed, fused_bias, q, out, out_stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Cases, Rng};
+
+    /// Naive i32 GEMM oracle with the same quantization semantics.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_naive(
+        rows: usize,
+        k: usize,
+        out_c: usize,
+        lhs: &[i8],
+        filter: &[i8],
+        input_offset: i32,
+        bias: Option<&[i32]>,
+        q: &GemmQuant,
+        out: &mut [i8],
+        out_stride: usize,
+    ) {
+        for r in 0..rows {
+            for oc in 0..out_c {
+                let mut acc: i32 = bias.map(|bv| bv[oc]).unwrap_or(0);
+                for kk in 0..k {
+                    acc = acc.wrapping_add(
+                        (lhs[r * k + kk] as i32 + input_offset) * filter[oc * k + kk] as i32,
+                    );
+                }
+                let v = q.mult.at(oc).apply(acc) + q.output_offset;
+                out[r * out_stride + oc] = v.clamp(q.act_min, q.act_max) as i8;
+            }
+        }
+    }
+
+    /// One random case; shapes chosen to exercise ragged out_c / rows / k
+    /// (none a multiple of the block sizes), missing bias, per-tensor vs
+    /// per-channel multipliers, and tight clamps.
+    struct Case {
+        rows: usize,
+        k: usize,
+        out_c: usize,
+        lhs: Vec<i8>,
+        filter: Vec<i8>,
+        input_offset: i32,
+        with_bias: bool,
+        bias: Vec<i32>,
+        pc: Vec<ChannelQuant>,
+        per_tensor: bool,
+        output_offset: i32,
+        act_min: i32,
+        act_max: i32,
+    }
+
+    impl Case {
+        fn random(rng: &mut Rng) -> Case {
+            let rows = 1 + rng.below(9); // exercises odd final row
+            let k = 1 + rng.below(35); // exercises k % 4 != 0
+            let out_c = 1 + rng.below(13); // exercises out_c % 4 != 0
+            let mut lhs = vec![0i8; rows * k];
+            rng.fill_i8(&mut lhs);
+            let mut filter = vec![0i8; out_c * k];
+            rng.fill_i8(&mut filter);
+            let bias: Vec<i32> = (0..out_c).map(|_| rng.range_i32(-1000, 1000)).collect();
+            let pc: Vec<ChannelQuant> = (0..out_c)
+                .map(|_| ChannelQuant {
+                    mult: QuantizedMultiplier::from_real(rng.range_f32(0.001, 0.9) as f64),
+                })
+                .collect();
+            let tight = rng.chance(0.3);
+            Case {
+                rows,
+                k,
+                out_c,
+                lhs,
+                filter,
+                input_offset: rng.range_i32(-128, 127),
+                with_bias: rng.chance(0.8),
+                bias,
+                pc,
+                per_tensor: rng.chance(0.3),
+                output_offset: rng.range_i32(-20, 20),
+                act_min: if tight { -16 } else { -128 },
+                act_max: if tight { 15 } else { 127 },
+            }
+        }
+
+        fn bias_opt(&self) -> Option<&[i32]> {
+            if self.with_bias {
+                Some(&self.bias[..])
+            } else {
+                None
+            }
+        }
+
+        fn quant(&self) -> GemmQuant<'_> {
+            GemmQuant {
+                mult: if self.per_tensor {
+                    GemmMult::PerTensor(self.pc[0].mult)
+                } else {
+                    GemmMult::PerChannel(&self.pc)
+                },
+                output_offset: self.output_offset,
+                act_min: self.act_min,
+                act_max: self.act_max,
+            }
+        }
+
+        /// Populate-pass precompute: packed filter + folded bias.
+        fn precompute(&self) -> (Vec<i8>, Vec<i32>) {
+            let mut packed = vec![0i8; packed_filter_len(self.out_c, self.k)];
+            pack_filter(&self.filter, self.out_c, self.k, &mut packed);
+            let mut fused = vec![0i32; self.out_c];
+            fold_bias(&self.filter, self.out_c, self.k, self.input_offset, self.bias_opt(), &mut fused);
+            (packed, fused)
+        }
+    }
+
+    /// Packed GEMM == naive (x+io)·f math, bit-exact, over random shapes
+    /// including ragged out_c / rows / k, missing bias, and tight clamps.
+    /// Runs through the public dispatch front (whatever backend this CPU
+    /// selects).
+    #[test]
+    fn property_packed_matches_naive_exactly() {
+        check(Cases::n(120), |rng: &mut Rng| {
+            let case = Case::random(rng);
+            let q = case.quant();
+            let (packed, fused) = case.precompute();
+            let (rows, k, out_c) = (case.rows, case.k, case.out_c);
+
+            let mut want = vec![0i8; rows * out_c];
+            gemm_naive(
+                rows, k, out_c, &case.lhs, &case.filter, case.input_offset, case.bias_opt(), &q,
+                &mut want, out_c,
+            );
+            let mut got = vec![0i8; rows * out_c];
+            gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut got, out_c);
+            if want != got {
+                return Err(format!("mismatch rows={rows} k={k} out_c={out_c}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// ForceDispatch guard semantics + every available SIMD backend
+    /// bit-exact against the scalar body AND the naive oracle, forced
+    /// through the public entry. One sequential test on purpose: the
+    /// post-drop "dispatch reverted to auto" assertions observe
+    /// process-global state, so they are only race-free while no other
+    /// test in this binary can hold a [`ForceDispatch`] concurrently —
+    /// keep all forcing in this one #[test].
+    #[test]
+    fn force_dispatch_semantics_and_simd_backends_bit_exact() {
+        // --- guard semantics -------------------------------------------
+        {
+            let _g = ForceDispatch::force(GemmBackend::Scalar).expect("scalar always available");
+            assert_eq!(active_backend(), GemmBackend::Scalar);
+            assert!(dispatch_is_forced());
+            // Nested same-thread forcing must refuse, not deadlock.
+            assert!(ForceDispatch::force(GemmBackend::Scalar).is_none());
+        }
+        assert!(!dispatch_is_forced(), "guard drop restores auto dispatch");
+        assert_eq!(active_backend(), detected_backend());
+        for b in GemmBackend::all() {
+            if !b.available() {
+                assert!(ForceDispatch::force(b).is_none(), "{b} must refuse to force");
+            }
+        }
+        // At most one SIMD arch per binary.
+        assert!(!(GemmBackend::Avx2.available() && GemmBackend::Neon.available()));
+
+        // --- bit-exactness per available SIMD backend ------------------
+        for backend in GemmBackend::all() {
+            if backend == GemmBackend::Scalar || !backend.available() {
+                continue;
+            }
+            let guard = ForceDispatch::force(backend).expect("available backend must force");
+            assert_eq!(active_backend(), backend);
+            check(Cases::n(150), |rng: &mut Rng| {
+                let case = Case::random(rng);
+                let q = case.quant();
+                let (packed, fused) = case.precompute();
+                let (rows, k, out_c) = (case.rows, case.k, case.out_c);
+
+                // Scalar body, called directly (not through dispatch).
+                let mut scalar_out = vec![0i8; rows * out_c];
+                gemm_body::<scalar::ScalarDot>(
+                    rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c,
+                );
+                // Naive oracle.
+                let mut naive_out = vec![0i8; rows * out_c];
+                gemm_naive(
+                    rows, k, out_c, &case.lhs, &case.filter, case.input_offset, case.bias_opt(),
+                    &q, &mut naive_out, out_c,
+                );
+                // The forced SIMD backend, through the public front.
+                let mut simd_out = vec![0i8; rows * out_c];
+                gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut simd_out, out_c);
+
+                if simd_out != scalar_out {
+                    return Err(format!("{backend} != scalar at rows={rows} k={k} out_c={out_c}"));
+                }
+                if simd_out != naive_out {
+                    return Err(format!("{backend} != oracle at rows={rows} k={k} out_c={out_c}"));
+                }
+                Ok(())
+            });
+            drop(guard);
+            assert!(!dispatch_is_forced(), "{backend} guard drop restores auto dispatch");
+        }
+    }
+
+    #[test]
+    fn packed_layout_round_trips() {
+        // out_c = 5 (ragged), k = 3: block 1 holds channel 4 + three zero rows.
+        let out_c = 5;
+        let k = 3;
+        let filter: Vec<i8> = (0..(out_c * k) as i8).collect();
+        let mut packed = vec![0i8; packed_filter_len(out_c, k)];
+        pack_filter(&filter, out_c, k, &mut packed);
+        // Block 0, k=0 holds channels 0..4 at k index 0: filter[c*k].
+        assert_eq!(&packed[0..4], &[0, 3, 6, 9]);
+        // Block 1, k=0: channel 4 then zero padding.
+        assert_eq!(&packed[4 * k..4 * k + 4], &[12, 0, 0, 0]);
+    }
+
+    #[test]
+    fn fold_bias_matches_manual_sum() {
+        let filter = [1i8, 2, 3, -4, 5, -6]; // 2 channels, k=3
+        let mut fused = [0i32; 2];
+        fold_bias(&filter, 2, 3, 10, Some(&[100, -100]), &mut fused);
+        assert_eq!(fused, [100 + 10 * 6, -100 + 10 * (-5)]);
+        // Missing bias defaults to zero.
+        fold_bias(&filter, 2, 3, -1, None, &mut fused);
+        assert_eq!(fused, [-6, 5]);
+    }
+
+    #[test]
+    fn output_stride_leaves_gaps_untouched() {
+        // rows=2, out_c=1, stride=3: columns 1..3 must stay at the sentinel.
+        let q = GemmQuant {
+            mult: GemmMult::PerTensor(QuantizedMultiplier::from_real(1.0)),
+            output_offset: 0,
+            act_min: -128,
+            act_max: 127,
+        };
+        let lhs = [2i8, 3];
+        let packed_src = [1i8];
+        let mut packed = vec![0i8; packed_filter_len(1, 1)];
+        pack_filter(&packed_src, 1, 1, &mut packed);
+        let fused = [0i32];
+        let mut out = [99i8; 6];
+        gemm_i8_packed(2, 1, 1, &lhs, &packed, &fused, &q, &mut out, 3);
+        assert_eq!(out, [2, 99, 99, 3, 99, 99]);
+    }
+}

@@ -1,0 +1,134 @@
+//! NEON dot core — the aarch64 tier of the GEMM dispatch.
+//!
+//! The host analog of CMSIS-NN's SMLAD: `smlal` (`vmlal_n_s16`)
+//! widening multiply-accumulate, 4 i32 lanes per instruction — one lane
+//! per output channel, which is exactly the packed layout's block width.
+//! Per 4 k-steps:
+//!
+//! ```text
+//! 16 weight bytes [k0c0..k0c3 k1c0..k1c3 k2c0..k2c3 k3c0..k3c3]
+//!   vld1q_s8 + vmovl_s8 → four int16x4 vectors, one per k-step,
+//!   each holding [c0 c1 c2 c3]
+//! acc[c0..c3] (int32x4) ← vmlal_n_s16(acc, w_k, x[k])   × 4 k-steps
+//! ```
+//!
+//! The input value is a scalar broadcast (`_n_` form), so each loaded
+//! weight vector feeds one fused widening MAC; both rows of the 2-row
+//! block reuse the same four weight vectors. (A `vmull_s8`/`vpadalq_s16`
+//! i8-domain pairing was considered, but with channels fastest in the
+//! packed layout the pairwise-add would sum *across channels*; the i16
+//! widening form matches the layout with zero shuffles instead.)
+//!
+//! Products of i8·i8 fit i16×i16 trivially and the i32 accumulation is
+//! exact, matching the scalar tier bit for bit; the requantize epilogue
+//! is the shared scalar one in `gemm_body`. Bit-equality is
+//! property-tested in `gemm/mod.rs` under `ForceDispatch`.
+//!
+//! # Safety
+//!
+//! All `unsafe` lives here (and in the AVX2 sibling), in two forms:
+//!
+//! * `#[target_feature(enable = "neon")]` functions: only reachable
+//!   through `GemmBackend::Neon`, which the dispatch front (and
+//!   `ForceDispatch::force`) hands out only when
+//!   `is_aarch64_feature_detected!("neon")` returned true.
+//! * unaligned vector loads: in-bounds by the packed-layout contract
+//!   (`fblk.len() == OC_BLOCK*k`, `x.len() == k`, asserted below), with
+//!   the index arithmetic stated at each load site.
+
+use super::{dot_tail, DotKernel, OC_BLOCK};
+use core::arch::aarch64::*;
+
+/// Zero-sized marker implementing the NEON dot core.
+pub(crate) struct NeonDot;
+
+impl DotKernel for NeonDot {
+    #[inline(always)]
+    fn dot2(
+        x0: &[i8],
+        x1: &[i8],
+        fblk: &[i8],
+        k: usize,
+    ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+        // SAFETY: NeonDot is only dispatched when the neon feature probe
+        // passed (see module docs); slice bounds are asserted inside.
+        unsafe { dot2_neon(x0, x1, fblk, k) }
+    }
+
+    #[inline(always)]
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+        // SAFETY: as above.
+        unsafe { dot1_neon(x0, fblk, k) }
+    }
+}
+
+/// # Safety
+/// Requires the neon CPU feature; `x0.len() >= k`, `x1.len() >= k`,
+/// `fblk.len() >= OC_BLOCK * k` (the packed-layout contract).
+#[target_feature(enable = "neon")]
+unsafe fn dot2_neon(
+    x0: &[i8],
+    x1: &[i8],
+    fblk: &[i8],
+    k: usize,
+) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+    debug_assert!(x0.len() >= k && x1.len() >= k && fblk.len() >= OC_BLOCK * k);
+    let mut vacc0 = vdupq_n_s32(0);
+    let mut vacc1 = vdupq_n_s32(0);
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        // SAFETY: 16 bytes at kk*4; kk+4 <= k and fblk holds k*4 bytes
+        // (packed-layout contract), so the load is in-bounds.
+        let w = vld1q_s8(fblk.as_ptr().add(kk * OC_BLOCK));
+        let wlo = vmovl_s8(vget_low_s8(w)); // [k0c0..k0c3 k1c0..k1c3] i16
+        let whi = vmovl_s8(vget_high_s8(w)); // [k2c0..k2c3 k3c0..k3c3] i16
+        let w0 = vget_low_s16(wlo);
+        let w1 = vget_high_s16(wlo);
+        let w2 = vget_low_s16(whi);
+        let w3 = vget_high_s16(whi);
+        // One weight load feeds 8 widening MACs (4 k-steps × 2 rows).
+        vacc0 = vmlal_n_s16(vacc0, w0, x0[kk] as i16);
+        vacc0 = vmlal_n_s16(vacc0, w1, x0[kk + 1] as i16);
+        vacc0 = vmlal_n_s16(vacc0, w2, x0[kk + 2] as i16);
+        vacc0 = vmlal_n_s16(vacc0, w3, x0[kk + 3] as i16);
+        vacc1 = vmlal_n_s16(vacc1, w0, x1[kk] as i16);
+        vacc1 = vmlal_n_s16(vacc1, w1, x1[kk + 1] as i16);
+        vacc1 = vmlal_n_s16(vacc1, w2, x1[kk + 2] as i16);
+        vacc1 = vmlal_n_s16(vacc1, w3, x1[kk + 3] as i16);
+        kk += 4;
+    }
+    let mut acc0 = [0i32; OC_BLOCK];
+    let mut acc1 = [0i32; OC_BLOCK];
+    // SAFETY: each destination is exactly 4 i32 = one int32x4 store.
+    vst1q_s32(acc0.as_mut_ptr(), vacc0);
+    vst1q_s32(acc1.as_mut_ptr(), vacc1);
+    dot_tail(&mut acc0, x0, fblk, kk, k);
+    dot_tail(&mut acc1, x1, fblk, kk, k);
+    (acc0, acc1)
+}
+
+/// # Safety
+/// Requires the neon CPU feature; `x0.len() >= k`,
+/// `fblk.len() >= OC_BLOCK * k` (the packed-layout contract).
+#[target_feature(enable = "neon")]
+unsafe fn dot1_neon(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+    debug_assert!(x0.len() >= k && fblk.len() >= OC_BLOCK * k);
+    let mut vacc0 = vdupq_n_s32(0);
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        // SAFETY: in-bounds by the packed-layout contract (see dot2_neon).
+        let w = vld1q_s8(fblk.as_ptr().add(kk * OC_BLOCK));
+        let wlo = vmovl_s8(vget_low_s8(w));
+        let whi = vmovl_s8(vget_high_s8(w));
+        vacc0 = vmlal_n_s16(vacc0, vget_low_s16(wlo), x0[kk] as i16);
+        vacc0 = vmlal_n_s16(vacc0, vget_high_s16(wlo), x0[kk + 1] as i16);
+        vacc0 = vmlal_n_s16(vacc0, vget_low_s16(whi), x0[kk + 2] as i16);
+        vacc0 = vmlal_n_s16(vacc0, vget_high_s16(whi), x0[kk + 3] as i16);
+        kk += 4;
+    }
+    let mut acc0 = [0i32; OC_BLOCK];
+    // SAFETY: destination is exactly 4 i32 = one int32x4 store.
+    vst1q_s32(acc0.as_mut_ptr(), vacc0);
+    dot_tail(&mut acc0, x0, fblk, kk, k);
+    acc0
+}

@@ -1,0 +1,67 @@
+//! Portable scalar dot core — the fallback tier of the GEMM dispatch.
+//!
+//! This is PR 1's register-blocked kernel body, unchanged semantics:
+//! 4-way unrolled K with a widening `i16` multiply
+//! (`(a as i16 * w as i16) as i32` — the form LLVM turns into
+//! pmaddwd-style SIMD when the target allows), plus a scalar remainder
+//! loop for ragged k. It is the always-available backend and the oracle
+//! the arch-specific bodies are property-tested against.
+//!
+//! No `unsafe` here: every access is slice-indexed and bounds-proven by
+//! the packed-layout contract checked in `gemm_body`.
+
+use super::{dot_tail, DotKernel, OC_BLOCK};
+
+/// Zero-sized marker implementing the portable dot core.
+pub(crate) struct ScalarDot;
+
+impl DotKernel for ScalarDot {
+    #[inline(always)]
+    fn dot2(
+        x0: &[i8],
+        x1: &[i8],
+        fblk: &[i8],
+        k: usize,
+    ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+        let mut acc0 = [0i32; OC_BLOCK];
+        let mut acc1 = [0i32; OC_BLOCK];
+        let mut kk = 0usize;
+        while kk + 4 <= k {
+            // 4-way unrolled K: 8 input loads feed 32 MACs.
+            for u in 0..4 {
+                let f4 = &fblk[(kk + u) * OC_BLOCK..(kk + u) * OC_BLOCK + OC_BLOCK];
+                let a0 = x0[kk + u] as i16;
+                let a1 = x1[kk + u] as i16;
+                for c in 0..OC_BLOCK {
+                    let w = f4[c] as i16;
+                    acc0[c] = acc0[c].wrapping_add((a0 * w) as i32);
+                    acc1[c] = acc1[c].wrapping_add((a1 * w) as i32);
+                }
+            }
+            kk += 4;
+        }
+        // Shared ragged-K remainder (bit-identical per accumulator: each
+        // acc's additions keep the same kk order).
+        dot_tail(&mut acc0, x0, fblk, kk, k);
+        dot_tail(&mut acc1, x1, fblk, kk, k);
+        (acc0, acc1)
+    }
+
+    #[inline(always)]
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+        let mut acc0 = [0i32; OC_BLOCK];
+        let mut kk = 0usize;
+        while kk + 4 <= k {
+            for u in 0..4 {
+                let f4 = &fblk[(kk + u) * OC_BLOCK..(kk + u) * OC_BLOCK + OC_BLOCK];
+                let a0 = x0[kk + u] as i16;
+                for c in 0..OC_BLOCK {
+                    acc0[c] = acc0[c].wrapping_add((a0 * f4[c] as i16) as i32);
+                }
+            }
+            kk += 4;
+        }
+        dot_tail(&mut acc0, x0, fblk, kk, k);
+        acc0
+    }
+}

@@ -4,21 +4,31 @@
 //! but restructured for host performance, mirroring how CMSIS-NN
 //! restructures for Cortex-M:
 //!
-//! | CMSIS-NN trick (Cortex-M4)            | This module (host)            |
-//! |---------------------------------------|-------------------------------|
-//! | on-the-fly im2col into SRAM scratch   | im2col into an arena scratch  |
-//! | SMLAD dual 16-bit MAC                 | 4-way unrolled i32 MAC chains |
-//! | pad with -input_offset                | pad with input zero point     |
-//! | init-time kernel sums                 | populate-pass folded biases   |
-//! | weight reordering for SIMD loads      | packed 4-channel weight blocks|
-//! | two-output register blocking (FC)     | 4 oc × 2 px accumulator block |
+//! | CMSIS-NN trick (Cortex-M4)            | This module (host)                          |
+//! |---------------------------------------|---------------------------------------------|
+//! | on-the-fly im2col into SRAM scratch   | im2col into an arena scratch                |
+//! | SMLAD dual 16-bit MAC                 | scalar tier: 4-way unrolled i32 MAC chains  |
+//! | SMLAD dual 16-bit MAC (packed pairs)  | AVX2 tier: `vpmaddwd` dual i16 MAC (8 lanes)|
+//! | SMLAL widening MAC                    | NEON tier: `smlal` widening MAC (4 lanes)   |
+//! | compile-time kernel selection         | runtime dispatch, cached `OnceLock` fn ptr  |
+//! | pad with -input_offset                | pad with input zero point                   |
+//! | init-time kernel sums                 | populate-pass folded biases                 |
+//! | weight reordering for SIMD loads      | packed 4-channel weight blocks              |
+//! | depthwise channel reordering          | channel-blocked ×8 depthwise filter repack  |
+//! | two-output register blocking (FC)     | 4 oc × 2 px accumulator block               |
 //!
 //! The heavy lifting lives in one shared register-blocked int8 GEMM
 //! micro-kernel ([`gemm`]): the conv im2col path, the conv 1×1 fast path,
 //! and FullyConnected all route through it over weights repacked once at
-//! init (the prepare → populate precomputation pipeline). Depthwise conv
-//! keeps its own loop structure but gets the folded-bias precompute for
-//! its interior fast path.
+//! init (the prepare → populate precomputation pipeline). The GEMM K-loop
+//! body is runtime-dispatched — AVX2 on x86_64, NEON on aarch64, the
+//! portable scalar kernel everywhere else — all over the *same* packed
+//! layout, resolved once per process and overridable for tests/benches
+//! via [`gemm::ForceDispatch`] (see the dispatch-tier table in
+//! [`gemm`]'s module docs). Depthwise conv keeps its own loop structure
+//! and gets both populate-pass precomputes: folded biases plus a
+//! channel-blocked ([`depthwise::DW_CH_BLOCK`]-lane) filter repack whose
+//! interior fast path walks contiguous channel blocks.
 //!
 //! Equivalence with the reference kernels is enforced by property tests
 //! (random shapes/values, exact int8 match) — the support the paper says
@@ -30,11 +40,17 @@ pub mod fully_connected;
 pub mod gemm;
 
 pub use conv::{conv2d_i8_im2col, conv2d_i8_packed, OptConvKernel};
-pub use depthwise::{depthwise_conv2d_i8_folded, depthwise_conv2d_i8_opt, OptDepthwiseConvKernel};
+pub use depthwise::{
+    depthwise_conv2d_i8_folded, depthwise_conv2d_i8_opt, depthwise_conv2d_i8_packed,
+    pack_depthwise_filter, packed_depthwise_len, OptDepthwiseConvKernel, DW_CH_BLOCK,
+};
 pub use fully_connected::{
     fully_connected_i8_blocked, fully_connected_i8_packed, OptFullyConnectedKernel,
 };
-pub use gemm::{fold_bias, gemm_i8_packed, pack_filter, packed_filter_len, GemmMult, GemmQuant};
+pub use gemm::{
+    active_backend, detected_backend, dispatch_is_forced, fold_bias, gemm_i8_packed, pack_filter,
+    packed_filter_len, ForceDispatch, GemmBackend, GemmMult, GemmQuant,
+};
 
 use super::OpResolver;
 use crate::error::Result;
