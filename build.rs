@@ -1,0 +1,50 @@
+//! Build-time toolchain probe for the dot-product GEMM tiers.
+//!
+//! The AVX-VNNI (`vpdpbusd`) and NEON dot-product (`sdot`) intrinsics plus
+//! their `is_*_feature_detected!` strings were stabilized in Rust 1.89
+//! (`stdarch_x86_avx512` / `stdarch_neon_dotprod`). The crate must keep
+//! building on older toolchains, so instead of hard-requiring 1.89 we set
+//! a custom cfg when the compiler is new enough; the `gemm/avx_vnni.rs`
+//! and `gemm/sdot.rs` modules (and their availability probes) are gated on
+//! it and simply report "unavailable" when compiled out. No dependencies:
+//! the probe is one `rustc --version` invocation.
+
+use std::process::Command;
+
+/// Parse "rustc 1.89.0 (...)" / "rustc 1.91.0-nightly (...)" → (1, 89).
+fn parse_version(s: &str) -> Option<(u32, u32)> {
+    let ver = s.split_whitespace().nth(1)?;
+    let mut parts = ver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Declare the cfg so 1.80+ toolchains don't flag it as unexpected;
+    // older cargos ignore unknown `cargo:` keys.
+    println!("cargo:rustc-check-cfg=cfg(tfmicro_dotprod_tiers)");
+
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let probed = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .and_then(|s| parse_version(&s));
+    match probed {
+        Some((major, minor)) if major > 1 || (major == 1 && minor >= 89) => {
+            println!("cargo:rustc-cfg=tfmicro_dotprod_tiers");
+        }
+        Some(_) => {} // genuinely old toolchain: quiet, documented fallback
+        None => {
+            // A wrapper rustc we couldn't parse is an invisible perf
+            // cliff (the top GEMM tiers silently vanish) — say so.
+            println!(
+                "cargo:warning=could not probe `{rustc} --version`; \
+                 building without the dot-product GEMM tiers (avxvnni/sdot)"
+            );
+        }
+    }
+}

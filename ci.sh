@@ -34,18 +34,27 @@ if [[ "${1:-}" == "--bench" ]]; then
     python3 - <<'EOF'
 import json, sys
 
-TOLERANCE = 1.10  # fail when current > baseline * 1.10
-COLUMNS = ("packed_ns", "simd_ns")
+TOLERANCE = 1.10  # fail on >10% degradation
+# (column, higher_is_worse): ns columns gate raw medians (same machine
+# assumed), ratio columns gate within-machine speedups.
+COLUMNS = (("packed_ns", True), ("simd_ns", True))
 
 base = json.load(open("BENCH_baseline.json"))
 cur = json.load(open("BENCH_kernels.json"))
 
-# Apples-to-apples only: a scalar-host baseline must not gate an avx2 run.
+# Apples-to-apples: a dispatch mismatch usually means a *different
+# machine*, where raw nanoseconds are meaningless even for the
+# scalar-pinned Packed column (pinning fixes the code path, not the
+# CPU speed). Fall back to gating the within-machine speedup RATIOS
+# (packed vs the reference/optimized bodies measured on the same box
+# in the same run) — those transfer across hardware, so cross-machine
+# runs still gate something real instead of skipping entirely.
 bd, cd = base.get("dispatch", "unknown"), cur.get("dispatch", "unknown")
 if bd != cd:
     print(f"warning: dispatch mismatch (baseline={bd}, current={cd}); "
-          "skipping regression check", file=sys.stderr)
-    sys.exit(0)
+          "gating within-machine speedup ratios instead of raw ns",
+          file=sys.stderr)
+    COLUMNS = (("packed_vs_reference", False), ("packed_vs_optimized", False))
 
 basemap = {c["kernel"]: c for c in base.get("cases", [])}
 curnames = {c["kernel"] for c in cur.get("cases", [])}
@@ -61,13 +70,16 @@ for c in cur.get("cases", []):
     if b is None:
         print(f"  new kernel (no baseline): {c['kernel']}")
         continue
-    for col in COLUMNS:
+    for col, higher_is_worse in COLUMNS:
         if col not in b or col not in c or not b[col]:
             continue
-        ratio = c[col] / b[col]
+        # Normalize so `ratio > TOLERANCE` always means "got worse":
+        # ns columns degrade upward, speedup ratios degrade downward.
+        ratio = c[col] / b[col] if higher_is_worse else b[col] / c[col]
         tag = "REGRESSION" if ratio > TOLERANCE else "ok"
-        print(f"  {c['kernel']:<40} {col:<10} {b[col]:>10} -> {c[col]:>10} ns "
-              f"({ratio:5.2f}x) {tag}")
+        unit = "ns" if higher_is_worse else "x speedup"
+        print(f"  {c['kernel']:<40} {col:<20} {b[col]:>10} -> {c[col]:>10} {unit} "
+              f"(worse by {ratio:5.2f}x) {tag}")
         if ratio > TOLERANCE:
             failed = True
 if failed:

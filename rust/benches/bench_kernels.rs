@@ -9,14 +9,20 @@
 //! * **Optimized** — the unpacked opt_ops bodies (recompute Σf per invoke).
 //! * **Packed** — the prepare-time precompute pipeline: weights repacked
 //!   into 4-channel blocks + folded biases, as the interpreter's populate
-//!   pass produces them, pinned to the **scalar** GEMM tier via
-//!   `ForceDispatch`. Packing cost is *excluded* from the timed body —
-//!   that is the whole point of the prepare/invoke split.
+//!   pass produces them, pinned to the **scalar** tier via
+//!   `ForceDispatch` (which pins the GEMM *and* the depthwise interior —
+//!   they share dispatch machinery). Packing cost is *excluded* from the
+//!   timed body — that is the whole point of the prepare/invoke split.
+//!   Pinning fixes the code path, not the CPU speed, so raw ns are
+//!   still not comparable across hosts; on a dispatch mismatch
+//!   `ci.sh --bench` therefore gates the within-machine speedup
+//!   *ratios* (`packed_vs_reference`/`packed_vs_optimized`) instead.
 //! * **Simd** — the same packed bodies under auto dispatch (whatever
-//!   backend this CPU selects: avx2/neon/scalar; for depthwise, the
-//!   channel-blocked packed-filter fast path). The file-level
-//!   `dispatch` field in the JSON records which backend ran, so
-//!   cross-machine trajectory comparisons stay apples-to-apples.
+//!   backend this CPU selects: avxvnni/sdot/avx2/neon/scalar; for
+//!   depthwise, the channel-blocked packed walk with the dispatched
+//!   arch interior). The file-level `dispatch` field in the JSON records
+//!   which backend ran, so cross-machine trajectory comparisons stay
+//!   apples-to-apples.
 //!
 //! Also emits machine-readable `BENCH_kernels.json` at the repo root so
 //! the perf trajectory is tracked across PRs (`ci.sh --bench` gates on
@@ -190,12 +196,19 @@ fn main() {
             opt_ops::depthwise_conv2d_i8_opt(&s, 1, &q, &input, &filter, Some(&bias), &mut out);
             black_box(&out);
         });
-        let p = bench.run(|| {
-            opt_ops::depthwise_conv2d_i8_folded(
-                &s, &q, &input, &filter, Some(&bias), &fused, &mut out,
-            );
-            black_box(&out);
-        });
+        let p = {
+            // Pin the interior body to scalar so this column measures
+            // the same code path on every host (the depthwise front
+            // dispatches too).
+            let _scalar = gemm::ForceDispatch::force(gemm::GemmBackend::Scalar)
+                .expect("scalar backend always available");
+            bench.run(|| {
+                opt_ops::depthwise_conv2d_i8_packed(
+                    &s, &q, &input, &filter, &dw_packed, Some(&bias), &fused, &mut out,
+                );
+                black_box(&out);
+            })
+        };
         let v = bench.run(|| {
             opt_ops::depthwise_conv2d_i8_packed(
                 &s, &q, &input, &filter, &dw_packed, Some(&bias), &fused, &mut out,

@@ -105,7 +105,7 @@ const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu
 /// `tfmicro cpu`: field debugging for "why is this slow here" — what the
 /// runtime feature probes saw and which kernel tiers this process runs.
 fn print_cpu_report() {
-    use crate::ops::opt_ops::{depthwise::DW_CH_BLOCK, gemm};
+    use crate::ops::opt_ops::{depthwise, depthwise::DW_CH_BLOCK, gemm};
     println!("arch: {}", std::env::consts::ARCH);
     #[cfg(target_arch = "x86_64")]
     {
@@ -116,6 +116,15 @@ fn print_cpu_report() {
             f(std::arch::is_x86_feature_detected!("ssse3")),
             f(std::arch::is_x86_feature_detected!("sse4.1")),
         );
+        #[cfg(tfmicro_dotprod_tiers)]
+        println!(
+            "dot-product: avxvnni={} avx512vnni={} avx512vl={}",
+            f(std::arch::is_x86_feature_detected!("avxvnni")),
+            f(std::arch::is_x86_feature_detected!("avx512vnni")),
+            f(std::arch::is_x86_feature_detected!("avx512vl")),
+        );
+        #[cfg(not(tfmicro_dotprod_tiers))]
+        println!("dot-product: (probes need rustc >= 1.89; tier compiled out)");
     }
     #[cfg(target_arch = "aarch64")]
     {
@@ -124,6 +133,13 @@ fn print_cpu_report() {
             "features: neon={}",
             f(std::arch::is_aarch64_feature_detected!("neon")),
         );
+        #[cfg(tfmicro_dotprod_tiers)]
+        println!(
+            "dot-product: dotprod={}",
+            f(std::arch::is_aarch64_feature_detected!("dotprod")),
+        );
+        #[cfg(not(tfmicro_dotprod_tiers))]
+        println!("dot-product: (probes need rustc >= 1.89; tier compiled out)");
     }
     #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
@@ -140,8 +156,9 @@ fn print_cpu_report() {
         if gemm::dispatch_is_forced() { " (forced)" } else { " (auto, cached at first use)" },
     );
     println!(
-        "depthwise: channel-blocked x{DW_CH_BLOCK} interior fast path (portable, \
-         LLVM-vectorized) + scalar ragged edge/border"
+        "depthwise: channel-blocked x{DW_CH_BLOCK} interior, dispatched body: {} \
+         (keyed by the gemm backend) + scalar ragged edge/border",
+        depthwise::dw_interior_name(),
     );
 }
 

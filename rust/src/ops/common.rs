@@ -20,12 +20,48 @@ pub struct PaddingValues {
 }
 
 /// Output spatial extent for a conv/pool dimension (TFLite semantics).
+///
+/// Clamped to 0: with VALID padding a (dilated) filter larger than the
+/// input would otherwise yield a *negative* extent that flows silently
+/// into downstream shape math. TFLite rejects such geometry at prepare;
+/// the prepare paths here do the same by erroring when this returns a
+/// non-positive extent (see `prepare_conv` / `prepare_depthwise` /
+/// pooling prepare).
 pub fn compute_out_size(padding: Padding, in_size: i32, filter: i32, stride: i32, dilation: i32) -> i32 {
     let effective = (filter - 1) * dilation + 1;
-    match padding {
+    let raw = match padding {
         Padding::Same => (in_size + stride - 1) / stride,
         Padding::Valid => (in_size - effective + stride) / stride,
+    };
+    raw.max(0)
+}
+
+/// The shared prepare-time rejection behind [`compute_out_size`]'s
+/// clamp: a non-positive computed extent means the (dilated) filter or
+/// pool window exceeds the input under this padding, and prepare must
+/// surface an error instead of letting a zero extent into shape math
+/// (TFLite rejects the geometry too). Returns the failure reason, or
+/// `None` when both extents are positive. One helper so conv, depthwise,
+/// and pooling cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub fn filter_exceeds_input(
+    want_h: i32,
+    want_w: i32,
+    kh: i32,
+    kw: i32,
+    dil_h: i32,
+    dil_w: i32,
+    in_h: i32,
+    in_w: i32,
+    padding: Padding,
+) -> Option<String> {
+    if want_h > 0 && want_w > 0 {
+        return None;
     }
+    Some(format!(
+        "filter {kh}x{kw} (dilation {dil_h}x{dil_w}) exceeds input {in_h}x{in_w} \
+         under {padding:?} padding"
+    ))
 }
 
 /// Padding offset (top/left) for one dimension (TFLite `ComputePadding`).
@@ -237,7 +273,10 @@ pub fn conv_per_channel(
     let mut v = Vec::with_capacity(out_channels);
     for c in 0..out_channels {
         let fs = if fq.scales.len() == 1 { fq.scales[0] } else { fq.scales[c] } as f64;
-        v.push(ChannelQuant { mult: QuantizedMultiplier::from_real(in_scale * fs / out_scale) });
+        // try_from_real: a broken per-channel scale (negative, zero
+        // output scale → inf/NaN ratio) must fail prepare, not encode
+        // a garbage multiplier.
+        v.push(ChannelQuant { mult: QuantizedMultiplier::try_from_real(in_scale * fs / out_scale)? });
     }
     Ok(v)
 }
@@ -266,6 +305,22 @@ mod tests {
         // stride 1.
         assert_eq!(compute_out_size(Padding::Same, 10, 3, 1, 1), 10);
         assert_eq!(compute_out_size(Padding::Valid, 10, 3, 1, 1), 8);
+    }
+
+    /// Regression: a VALID filter larger than the input used to return a
+    /// *negative* extent ((2 - 5 + 1)/1 = -2) that flowed into shape
+    /// math; it must clamp to 0 (and prepare turns 0 into an error).
+    #[test]
+    fn out_size_valid_filter_exceeding_input_clamps_to_zero() {
+        assert_eq!(compute_out_size(Padding::Valid, 2, 5, 1, 1), 0);
+        // Dilation makes the *effective* filter exceed the input:
+        // effective = (3-1)*3 + 1 = 7 > 4.
+        assert_eq!(compute_out_size(Padding::Valid, 4, 3, 1, 3), 0);
+        // Exact fit is still 1, one past it is 0 (boundary).
+        assert_eq!(compute_out_size(Padding::Valid, 5, 5, 1, 1), 1);
+        assert_eq!(compute_out_size(Padding::Valid, 4, 5, 1, 1), 0);
+        // Large stride cannot push a legitimate case negative.
+        assert_eq!(compute_out_size(Padding::Valid, 2, 5, 7, 1), 0);
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! AVX2 interior body — the x86_64 tier of the depthwise dispatch.
+//!
+//! One explicit 8-lane step per tap: sign-extend both 8-byte vectors to
+//! i16 (`vpmovsxbw`), multiply (`vpmullw` — i8·i8 ≤ 2^14 so the i16
+//! products are exact), sign-extend the products to i32 (`vpmovsxwd`)
+//! and add into the 8 × i32 ymm accumulator. Exactly the arithmetic of
+//! the scalar lane loop, so bit-equality is by construction; what the
+//! explicit body buys over autovectorization is keeping the accumulator
+//! in one ymm register across the whole tap window instead of trusting
+//! LLVM to do so through the generic loop nest.
+//!
+//! # Safety
+//!
+//! Same pattern as the GEMM arch modules: the `#[target_feature(enable
+//! = "avx2")]` function is only reachable through `dw_interior_for` for the
+//! `Avx2`/`AvxVnni` backends, which detection/forcing hand out only when
+//! the avx2-implying probes passed; the unaligned 8-byte loads are
+//! in-bounds by the interior contract stated on [`DwDot`], asserted
+//! below.
+
+use super::{DwDot, DW_CH_BLOCK};
+use core::arch::x86_64::*;
+
+// The 8-byte loads and the ymm accumulator below are written for
+// exactly 8 lanes.
+const _: () = assert!(DW_CH_BLOCK == 8);
+
+/// Zero-sized marker implementing the AVX2 interior body.
+pub(crate) struct Avx2Dw;
+
+impl DwDot for Avx2Dw {
+    #[inline(always)]
+    fn window_dot(
+        acc: &mut [i32; DW_CH_BLOCK],
+        in_b: &[i8],
+        base: usize,
+        row_stride: usize,
+        ch_stride: usize,
+        kh: usize,
+        kw: usize,
+        fblk: &[i8],
+    ) {
+        // SAFETY: Avx2Dw is only dispatched when an avx2-implying probe
+        // passed (see module docs); bounds are asserted inside.
+        unsafe { window_dot_avx2(acc, in_b, base, row_stride, ch_stride, kh, kw, fblk) }
+    }
+}
+
+/// # Safety
+/// Requires the avx2 CPU feature and the [`DwDot`] interior contract:
+/// `kh, kw >= 1`, `fblk.len() >= kh*kw*DW_CH_BLOCK`, and
+/// `base + (kh-1)*row_stride + (kw-1)*ch_stride + DW_CH_BLOCK <=
+/// in_b.len()`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn window_dot_avx2(
+    acc: &mut [i32; DW_CH_BLOCK],
+    in_b: &[i8],
+    base: usize,
+    row_stride: usize,
+    ch_stride: usize,
+    kh: usize,
+    kw: usize,
+    fblk: &[i8],
+) {
+    debug_assert!(kh >= 1 && kw >= 1);
+    debug_assert!(fblk.len() >= kh * kw * DW_CH_BLOCK);
+    debug_assert!(
+        base + (kh - 1) * row_stride + (kw - 1) * ch_stride + DW_CH_BLOCK <= in_b.len()
+    );
+    // SAFETY: acc is exactly 8 i32 = 32 bytes, one ymm load/store pair.
+    let mut vacc = _mm256_loadu_si256(acc.as_ptr() as *const __m256i);
+    let mut tap = 0usize;
+    for ky in 0..kh {
+        let row = base + ky * row_stride;
+        for kx in 0..kw {
+            // SAFETY: 8 bytes at row + kx*ch_stride — the largest such
+            // index is the contract bound asserted above; fblk tap reads
+            // are within kh*kw*DW_CH_BLOCK.
+            let iv = _mm_loadl_epi64(in_b.as_ptr().add(row + kx * ch_stride) as *const __m128i);
+            let fv = _mm_loadl_epi64(fblk.as_ptr().add(tap * DW_CH_BLOCK) as *const __m128i);
+            let prod = _mm_mullo_epi16(_mm_cvtepi8_epi16(iv), _mm_cvtepi8_epi16(fv));
+            vacc = _mm256_add_epi32(vacc, _mm256_cvtepi16_epi32(prod));
+            tap += 1;
+        }
+    }
+    _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, vacc);
+}

@@ -1,5 +1,6 @@
 //! Optimized int8 depthwise conv: interior/border split + a channel-
-//! blocked packed fast path, with prepare-time folded biases.
+//! blocked packed fast path behind a runtime dispatch front, with
+//! prepare-time folded biases.
 //!
 //! Mirrors `arm_depthwise_conv_s8`: output pixels whose window lies fully
 //! inside the input skip all bounds checks; only the border runs the
@@ -19,20 +20,50 @@
 //!   blocks, tap-major within each block, so the interior walks whole
 //!   channel blocks with *contiguous* loads on both sides (NHWC input
 //!   channels are already adjacent; the repack makes the filter taps
-//!   match). The lane loop is fixed-width, which LLVM turns into SIMD on
-//!   any target — the depthwise analog of the GEMM weight packing, and
-//!   why this stays portable safe code rather than an arch module. The
-//!   `c % DW_CH_BLOCK` ragged edge and all border pixels fall back to
-//!   scalar loops over the original filter.
+//!   match). The `c % DW_CH_BLOCK` ragged edge and all border pixels
+//!   fall back to scalar loops over the original filter.
+//!
+//! # Dispatch front
+//!
+//! The interior block walk is a dispatch front mirroring the GEMM's
+//! (`super::gemm`), and deliberately **shares its machinery**: the same
+//! [`GemmBackend`] enum keys both kernels, `gemm::detected_backend()` /
+//! `gemm::ForceDispatch` pin both at once (one guard in a test or bench
+//! pins the whole int8 fast path), and `tfmicro cpu` reports one
+//! dispatch decision. The per-pixel-block tap loop is a [`DwDot`]
+//! implementation:
+//!
+//! | backend forced/detected      | interior body                          | module      |
+//! |------------------------------|----------------------------------------|-------------|
+//! | `AvxVnni` / `Avx2` (x86_64)  | 8-lane i16 multiply + widening i32 add | `avx2.rs`   |
+//! | `Sdot` / `Neon` (aarch64)    | `vmull_s8` + `vaddw_s16`               | `neon.rs`   |
+//! | `Scalar` (any target)        | fixed-width lane loop (autovectorized) | `scalar.rs` |
+//!
+//! The dot-product GEMM tiers map onto the plain SIMD interior of their
+//! arch: depthwise's lane-wise MAC has no 4-adjacent-byte reduction for
+//! `vpdpbusd`/`sdot` to exploit (every CPU with those features also has
+//! the avx2/neon baseline, so the mapping is always legal). All bodies
+//! compute exact wrapping i32 MACs over the same packed layout, so they
+//! are bit-exact by construction and property-tested against the
+//! reference kernel under forced dispatch.
 
 use crate::error::Result;
 use crate::ops::common::PackedSpec;
+use crate::ops::opt_ops::gemm::{self, GemmBackend};
 use crate::ops::ref_ops::conv::ConvShape;
 use crate::ops::ref_ops::depthwise::{depthwise_shape, prepare_depthwise};
 use crate::ops::ref_ops::{depthwise_conv2d_f32, depthwise_conv2d_i8, ConvQuant};
 use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
 use crate::schema::format::OpOptions;
 use crate::tensor::DType;
+use std::sync::OnceLock;
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
 
 /// Optimized DepthwiseConv2d kernel.
 pub struct OptDepthwiseConvKernel;
@@ -92,6 +123,85 @@ pub fn fold_depthwise_bias(
             .unwrap_or(0)
             .wrapping_add(input_offset.wrapping_mul(f_sum));
     }
+}
+
+// ---------------------------------------------------------------------------
+// The interior dispatch front (shares the GEMM's detect/force machinery)
+// ---------------------------------------------------------------------------
+
+/// The backend contract for the interior fast path: accumulate every
+/// filter tap for one interior pixel's channel block,
+///
+/// ```text
+/// acc[lane] += Σ_{ky,kx} in_b[base + ky·row_stride + kx·ch_stride + lane]
+///                        · fblk[(ky·kw + kx)·DW_CH_BLOCK + lane]
+/// ```
+///
+/// Caller guarantees (the interior contract): `kh, kw ≥ 1`, every
+/// referenced input index is in bounds
+/// (`base + (kh-1)·row_stride + (kw-1)·ch_stride + DW_CH_BLOCK <=
+/// in_b.len()`), and `fblk.len() >= kh·kw·DW_CH_BLOCK` in the
+/// [`pack_depthwise_filter`] layout. Implementations must be
+/// mathematically exact (wrapping i32 MACs of i8·i8 products — any
+/// summation order yields the same bits).
+pub(crate) trait DwDot {
+    /// Accumulate one interior pixel block's full tap window into `acc`.
+    #[allow(clippy::too_many_arguments)]
+    fn window_dot(
+        acc: &mut [i32; DW_CH_BLOCK],
+        in_b: &[i8],
+        base: usize,
+        row_stride: usize,
+        ch_stride: usize,
+        kh: usize,
+        kw: usize,
+        fblk: &[i8],
+    );
+}
+
+/// The packed-walk entry signature every interior backend front
+/// conforms to (mirrors `gemm::GemmFn`).
+type DwBodyFn =
+    fn(&ConvShape, &ConvQuant<'_>, &[i8], &[i8], &[i8], Option<&[i32]>, &[i32], &mut [i8]);
+
+/// Map a GEMM backend onto the depthwise interior body for this arch —
+/// the ONE mapping both dispatch and `tfmicro cpu` reporting derive
+/// from, so the reported name cannot drift from the body that runs.
+/// The dot-product tiers use the plain SIMD interior (see module docs);
+/// this is always legal because `AvxVnni`/`Sdot` availability probes
+/// the avx2/neon baseline features too.
+fn dw_interior_for(b: GemmBackend) -> (&'static str, DwBodyFn) {
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        GemmBackend::Avx2 | GemmBackend::AvxVnni => ("avx2", dw_body::<avx2::Avx2Dw>),
+        #[cfg(target_arch = "aarch64")]
+        GemmBackend::Neon | GemmBackend::Sdot => ("neon", dw_body::<neon::NeonDw>),
+        // Scalar, plus variants not compiled for this arch (which can
+        // never be selected — detection and forcing check available()).
+        _ => ("scalar", dw_body::<scalar::ScalarDw>),
+    }
+}
+
+/// Cached interior body for the detected backend (mirrors
+/// `gemm::DISPATCH`; resolved once per process).
+static DW_DISPATCH: OnceLock<DwBodyFn> = OnceLock::new();
+
+#[inline]
+fn dw_dispatch_fn() -> DwBodyFn {
+    // Same two relaxed atomic loads as the GEMM front: honor a live
+    // ForceDispatch override first, else the cached detected body.
+    if gemm::dispatch_is_forced() {
+        dw_interior_for(gemm::active_backend()).1
+    } else {
+        *DW_DISPATCH.get_or_init(|| dw_interior_for(gemm::detected_backend()).1)
+    }
+}
+
+/// Stable name of the interior body the depthwise front would run right
+/// now ("avx2" / "neon" / "scalar") — `tfmicro cpu` reporting. Derived
+/// from the same [`dw_interior_for`] mapping dispatch uses.
+pub fn dw_interior_name() -> &'static str {
+    dw_interior_for(gemm::active_backend()).0
 }
 
 /// One border output pixel: guarded taps, `(x+io)·f` form with the
@@ -193,13 +303,33 @@ pub fn depthwise_conv2d_i8_folded(
 /// int8 depthwise conv over the prepare-time channel-blocked packed
 /// filter + folded biases (multiplier 1, dilation 1 — enforced by the
 /// caller). Interior pixels walk whole [`DW_CH_BLOCK`]-lane blocks with
-/// contiguous loads on both the NHWC input and the packed filter; the
-/// `c % DW_CH_BLOCK` ragged edge and all border pixels use the scalar
-/// paths over the original `filter`. The block count is derived from
-/// `packed_filter` itself (an empty slice means every channel takes the
-/// scalar folded path), so one loop serves both tiers.
+/// contiguous loads on both the NHWC input and the packed filter,
+/// runtime-dispatched to the best interior body for this CPU (see the
+/// module docs' dispatch table — pinned alongside the GEMM by
+/// [`gemm::ForceDispatch`]); the `c % DW_CH_BLOCK` ragged edge and all
+/// border pixels use the scalar paths over the original `filter`. The
+/// block count is derived from `packed_filter` itself (an empty slice
+/// means every channel takes the scalar folded path), so one loop
+/// serves both tiers.
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_conv2d_i8_packed(
+    s: &ConvShape,
+    q: &ConvQuant,
+    input: &[i8],
+    filter: &[i8],
+    packed_filter: &[i8],
+    bias: Option<&[i32]>,
+    fused_bias: &[i32],
+    output: &mut [i8],
+) {
+    dw_dispatch_fn()(s, q, input, filter, packed_filter, bias, fused_bias, output)
+}
+
+/// The batch/pixel loop structure, monomorphized per interior backend:
+/// split border from interior, then run the backend's tap-window dot
+/// over each whole channel block and the shared scalar epilogue.
+#[allow(clippy::too_many_arguments)]
+fn dw_body<D: DwDot>(
     s: &ConvShape,
     q: &ConvQuant,
     input: &[i8],
@@ -212,6 +342,16 @@ pub fn depthwise_conv2d_i8_packed(
     debug_assert!(s.dil_h == 1 && s.dil_w == 1 && s.in_c == s.out_c);
     let c = s.in_c; // == out_c
     let taps = s.kh * s.kw;
+    // Release-mode assert, NOT debug: the arch interior bodies read the
+    // input through unchecked SIMD loads justified by the interior
+    // contract, so a caller-supplied length lie must panic here (as the
+    // pre-dispatch safe indexing would have) rather than read out of
+    // bounds. One comparison per call, off the hot loop; every other
+    // buffer is accessed through safe (panicking) slice indexing.
+    assert!(
+        input.len() >= s.batch * s.in_h * s.in_w * c,
+        "depthwise input shorter than batch*h*w*c"
+    );
     // How many whole channel blocks the caller packed (0..=c/L); the
     // min guards against an oversized buffer indexing past fused_bias.
     let blocks = (packed_filter.len() / (taps * DW_CH_BLOCK)).min(c / DW_CH_BLOCK);
@@ -240,22 +380,21 @@ pub fn depthwise_conv2d_i8_packed(
                     for (lane, a) in acc.iter_mut().enumerate() {
                         *a = fused_bias[ch0 + lane];
                     }
-                    let mut tap = 0usize;
-                    for ky in 0..s.kh {
-                        let row = ((oy0 + ky) * s.in_w + ox0) * c + ch0;
-                        for kx in 0..s.kw {
-                            // Both sides contiguous: DW_CH_BLOCK adjacent
-                            // NHWC channels × one packed tap — the
-                            // fixed-width lane loop autovectorizes.
-                            let iv = &in_b[row + kx * c..row + kx * c + DW_CH_BLOCK];
-                            let fv = &fblk[tap * DW_CH_BLOCK..(tap + 1) * DW_CH_BLOCK];
-                            for lane in 0..DW_CH_BLOCK {
-                                acc[lane] = acc[lane]
-                                    .wrapping_add((iv[lane] as i16 * fv[lane] as i16) as i32);
-                            }
-                            tap += 1;
-                        }
-                    }
+                    // Both sides contiguous per tap: DW_CH_BLOCK adjacent
+                    // NHWC channels × one packed tap. The whole window is
+                    // in bounds (interior contract: the last tap reads
+                    // ((oy0+kh-1)·in_w + ox0+kw-1)·c + ch0 + L ≤ batch
+                    // image size).
+                    D::window_dot(
+                        &mut acc,
+                        in_b,
+                        (oy0 * s.in_w + ox0) * c + ch0,
+                        s.in_w * c,
+                        c,
+                        s.kh,
+                        s.kw,
+                        fblk,
+                    );
                     for (lane, &a) in acc.iter().enumerate() {
                         let ch = ch0 + lane;
                         let scaled = q.per_channel[ch].mult.apply(a) + q.output_offset;
@@ -563,12 +702,11 @@ mod tests {
         });
     }
 
-    /// Channel-blocked packed path == reference, bit-exact, across channel
-    /// counts straddling the lane width: c % DW_CH_BLOCK ∈ {0, 1, lane-1}
-    /// plus random c, with random geometry (so border, interior, and
+    /// One random packed-vs-reference case across channel counts
+    /// straddling the lane width: c % DW_CH_BLOCK ∈ {0, 1, lane-1} plus
+    /// random c, with random geometry (so border, interior, and
     /// ragged-edge code all run), missing bias, and tight clamps.
-    #[test]
-    fn property_packed_matches_reference_exactly() {
+    fn packed_case_check(rng: &mut Rng) -> Result<(), String> {
         // lane-multiple, lane+1, 2*lane-1, exact lane, thin (no blocks),
         // then random draws.
         let fixed_c = [
@@ -578,46 +716,72 @@ mod tests {
             2 * DW_CH_BLOCK - 1, // c % L == lane-1
             3,                   // no whole block: pure ragged path
         ];
-        check(Cases::n(80), |rng: &mut Rng| {
-            let pick = rng.below(fixed_c.len() + 2);
-            let in_c = if pick < fixed_c.len() {
-                fixed_c[pick]
-            } else {
-                1 + rng.below(3 * DW_CH_BLOCK)
-            };
-            let (s, input, filter, bias, pc, input_offset, output_offset) =
-                random_dw_case_with_c(rng, in_c);
-            let with_bias = rng.chance(0.8);
-            let bias_opt = if with_bias { Some(&bias[..]) } else { None };
-            let tight = rng.chance(0.3);
-            let q = ConvQuant {
-                input_offset,
-                output_offset,
-                per_channel: &pc,
-                act_min: if tight { -16 } else { -128 },
-                act_max: if tight { 15 } else { 127 },
-            };
-            let n_out = s.batch * s.out_h * s.out_w * s.in_c;
-            let mut want = vec![0i8; n_out];
-            depthwise_conv2d_i8(&s, 1, &q, &input, &filter, bias_opt, &mut want);
+        let pick = rng.below(fixed_c.len() + 2);
+        let in_c = if pick < fixed_c.len() {
+            fixed_c[pick]
+        } else {
+            1 + rng.below(3 * DW_CH_BLOCK)
+        };
+        let (s, input, filter, bias, pc, input_offset, output_offset) =
+            random_dw_case_with_c(rng, in_c);
+        let with_bias = rng.chance(0.8);
+        let bias_opt = if with_bias { Some(&bias[..]) } else { None };
+        let tight = rng.chance(0.3);
+        let q = ConvQuant {
+            input_offset,
+            output_offset,
+            per_channel: &pc,
+            act_min: if tight { -16 } else { -128 },
+            act_max: if tight { 15 } else { 127 },
+        };
+        let n_out = s.batch * s.out_h * s.out_w * s.in_c;
+        let mut want = vec![0i8; n_out];
+        depthwise_conv2d_i8(&s, 1, &q, &input, &filter, bias_opt, &mut want);
 
-            // Populate-pass precompute...
-            let mut fused = vec![0i32; s.in_c];
-            fold_depthwise_bias(&filter, s.kh, s.kw, s.in_c, input_offset, bias_opt, &mut fused);
-            let mut packed = vec![0i8; packed_depthwise_len(s.kh, s.kw, s.in_c)];
-            pack_depthwise_filter(&filter, s.kh, s.kw, s.in_c, &mut packed);
-            // ...then the lean invoke body.
-            let mut got = vec![0i8; n_out];
-            depthwise_conv2d_i8_packed(
-                &s, &q, &input, &filter, &packed, bias_opt, &fused, &mut got,
-            );
-            if want != got {
-                return Err(format!(
-                    "packed mismatch for {s:?} c={in_c} bias={with_bias} tight={tight}"
-                ));
+        // Populate-pass precompute...
+        let mut fused = vec![0i32; s.in_c];
+        fold_depthwise_bias(&filter, s.kh, s.kw, s.in_c, input_offset, bias_opt, &mut fused);
+        let mut packed = vec![0i8; packed_depthwise_len(s.kh, s.kw, s.in_c)];
+        pack_depthwise_filter(&filter, s.kh, s.kw, s.in_c, &mut packed);
+        // ...then the lean invoke body.
+        let mut got = vec![0i8; n_out];
+        depthwise_conv2d_i8_packed(&s, &q, &input, &filter, &packed, bias_opt, &fused, &mut got);
+        if want != got {
+            return Err(format!(
+                "packed mismatch for {s:?} c={in_c} bias={with_bias} tight={tight} \
+                 (interior body: {})",
+                dw_interior_name()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Channel-blocked packed path == reference, bit-exact, under
+    /// whatever interior body this CPU's auto dispatch selects.
+    #[test]
+    fn property_packed_matches_reference_exactly() {
+        check(Cases::n(80), packed_case_check);
+    }
+
+    /// The packed path stays bit-exact under **every** interior body
+    /// available on this machine, pinned through the shared
+    /// [`gemm::ForceDispatch`] (one guard pins GEMM and depthwise
+    /// together). Holds the gemm `FORCING_TEST_LOCK` like every forcing
+    /// test: post-drop global-state assertions elsewhere are only
+    /// race-free while a single test can force at a time.
+    #[test]
+    fn property_packed_matches_reference_under_forced_interiors() {
+        let _serialize =
+            gemm::FORCING_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        for backend in GemmBackend::all() {
+            if !backend.available() {
+                continue;
             }
-            Ok(())
-        });
+            let guard =
+                gemm::ForceDispatch::force(backend).expect("available backend must force");
+            check(Cases::n(30), packed_case_check);
+            drop(guard);
+        }
     }
 
     /// The packed layout: block-major, then tap-major, lanes fastest.

@@ -1,0 +1,87 @@
+//! NEON interior body — the aarch64 tier of the depthwise dispatch.
+//!
+//! One explicit 8-lane step per tap: `vmull_s8` widens the 8 i8·i8
+//! products to i16 (exact, ≤ 2^14), then two `vaddw_s16` accumulate the
+//! halves into the 2 × int32x4 accumulators. Exactly the arithmetic of
+//! the scalar lane loop, so bit-equality is by construction.
+//!
+//! # Safety
+//!
+//! Same pattern as the GEMM arch modules: the `#[target_feature(enable
+//! = "neon")]` function is only reachable through `dw_interior_for` for the
+//! `Neon`/`Sdot` backends, which detection/forcing hand out only when
+//! the neon-implying probes passed; the unaligned 8-byte loads are
+//! in-bounds by the interior contract stated on [`DwDot`], asserted
+//! below.
+
+use super::{DwDot, DW_CH_BLOCK};
+use core::arch::aarch64::*;
+
+// The 8-byte loads and the paired int32x4 accumulators below are
+// written for exactly 8 lanes.
+const _: () = assert!(DW_CH_BLOCK == 8);
+
+/// Zero-sized marker implementing the NEON interior body.
+pub(crate) struct NeonDw;
+
+impl DwDot for NeonDw {
+    #[inline(always)]
+    fn window_dot(
+        acc: &mut [i32; DW_CH_BLOCK],
+        in_b: &[i8],
+        base: usize,
+        row_stride: usize,
+        ch_stride: usize,
+        kh: usize,
+        kw: usize,
+        fblk: &[i8],
+    ) {
+        // SAFETY: NeonDw is only dispatched when a neon-implying probe
+        // passed (see module docs); bounds are asserted inside.
+        unsafe { window_dot_neon(acc, in_b, base, row_stride, ch_stride, kh, kw, fblk) }
+    }
+}
+
+/// # Safety
+/// Requires the neon CPU feature and the [`DwDot`] interior contract:
+/// `kh, kw >= 1`, `fblk.len() >= kh*kw*DW_CH_BLOCK`, and
+/// `base + (kh-1)*row_stride + (kw-1)*ch_stride + DW_CH_BLOCK <=
+/// in_b.len()`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn window_dot_neon(
+    acc: &mut [i32; DW_CH_BLOCK],
+    in_b: &[i8],
+    base: usize,
+    row_stride: usize,
+    ch_stride: usize,
+    kh: usize,
+    kw: usize,
+    fblk: &[i8],
+) {
+    debug_assert!(kh >= 1 && kw >= 1);
+    debug_assert!(fblk.len() >= kh * kw * DW_CH_BLOCK);
+    debug_assert!(
+        base + (kh - 1) * row_stride + (kw - 1) * ch_stride + DW_CH_BLOCK <= in_b.len()
+    );
+    // SAFETY: acc is exactly 8 i32, loaded/stored as two int32x4 halves.
+    let mut acc_lo = vld1q_s32(acc.as_ptr());
+    let mut acc_hi = vld1q_s32(acc.as_ptr().add(4));
+    let mut tap = 0usize;
+    for ky in 0..kh {
+        let row = base + ky * row_stride;
+        for kx in 0..kw {
+            // SAFETY: 8 bytes at row + kx*ch_stride — the largest such
+            // index is the contract bound asserted above; fblk tap reads
+            // are within kh*kw*DW_CH_BLOCK.
+            let iv = vld1_s8(in_b.as_ptr().add(row + kx * ch_stride));
+            let fv = vld1_s8(fblk.as_ptr().add(tap * DW_CH_BLOCK));
+            let prod = vmull_s8(iv, fv);
+            acc_lo = vaddw_s16(acc_lo, vget_low_s16(prod));
+            acc_hi = vaddw_s16(acc_hi, vget_high_s16(prod));
+            tap += 1;
+        }
+    }
+    vst1q_s32(acc.as_mut_ptr(), acc_lo);
+    vst1q_s32(acc.as_mut_ptr().add(4), acc_hi);
+}

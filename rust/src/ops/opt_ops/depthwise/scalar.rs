@@ -1,0 +1,39 @@
+//! Portable interior body — the fallback tier of the depthwise dispatch.
+//!
+//! The fixed-width [`DW_CH_BLOCK`]-lane loop LLVM autovectorizes on any
+//! target (this was the whole packed walk before the dispatch front
+//! split it out). No `unsafe`: every access is slice-indexed, with the
+//! bounds guaranteed by the interior contract stated on [`DwDot`].
+
+use super::{DwDot, DW_CH_BLOCK};
+
+/// Zero-sized marker implementing the portable interior body.
+pub(crate) struct ScalarDw;
+
+impl DwDot for ScalarDw {
+    #[inline(always)]
+    fn window_dot(
+        acc: &mut [i32; DW_CH_BLOCK],
+        in_b: &[i8],
+        base: usize,
+        row_stride: usize,
+        ch_stride: usize,
+        kh: usize,
+        kw: usize,
+        fblk: &[i8],
+    ) {
+        let mut tap = 0usize;
+        for ky in 0..kh {
+            let row = base + ky * row_stride;
+            for kx in 0..kw {
+                let at = row + kx * ch_stride;
+                let iv = &in_b[at..at + DW_CH_BLOCK];
+                let fv = &fblk[tap * DW_CH_BLOCK..(tap + 1) * DW_CH_BLOCK];
+                for lane in 0..DW_CH_BLOCK {
+                    acc[lane] = acc[lane].wrapping_add((iv[lane] as i16 * fv[lane] as i16) as i32);
+                }
+                tap += 1;
+            }
+        }
+    }
+}

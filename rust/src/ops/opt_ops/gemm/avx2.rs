@@ -52,12 +52,19 @@ use core::arch::x86_64::*;
 pub(crate) struct Avx2Dot;
 
 impl DotKernel for Avx2Dot {
+    /// Exact widening MACs need no per-block correction.
+    type BlockCtx = ();
+
+    #[inline(always)]
+    fn block_ctx(_fblk: &[i8], _k: usize) {}
+
     #[inline(always)]
     fn dot2(
         x0: &[i8],
         x1: &[i8],
         fblk: &[i8],
         k: usize,
+        _ctx: &(),
     ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
         // SAFETY: Avx2Dot is only dispatched when the avx2 feature probe
         // passed (see module docs); slice bounds are asserted inside.
@@ -65,7 +72,7 @@ impl DotKernel for Avx2Dot {
     }
 
     #[inline(always)]
-    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize, _ctx: &()) -> [i32; OC_BLOCK] {
         // SAFETY: as above.
         unsafe { dot1_avx2(x0, fblk, k) }
     }

@@ -1,0 +1,363 @@
+//! AVX-VNNI dot core — the top x86_64 tier of the GEMM dispatch.
+//!
+//! `vpdpbusd` MACs four byte products straight into each i32 lane — one
+//! instruction where the AVX2 tier needs sign-extend + `vpmaddwd` +
+//! `vpaddd` — the same jump CMSIS-NN-class libraries make from SMLAD to
+//! SDOT-class instructions. The catch: its first operand is *unsigned*
+//! (u8 × i8 products). The documented operand-offset trick makes it work
+//! for an i8 LHS:
+//!
+//! ```text
+//! Σ (x + 128)·f  =  Σ x·f  +  128·Σf
+//! ```
+//!
+//! so the kernel XORs the LHS bytes with 0x80 (i8 → u8 rebias, `x+128`
+//! mod 256), lets `vpdpbusd` accumulate the left side, and cancels the
+//! surplus with a per-block compensation term `-128·Σf[c]` — computed
+//! once per (block, call) in [`DotKernel::block_ctx`] **from the packed
+//! weights themselves**, covering exactly the dpbusd-processed K prefix
+//! (`k - k%4` steps; the shared [`dot_tail`] handles the rest exactly).
+//! Keeping the compensation out of the persistent fused-bias buffer
+//! means every tier still consumes identical prepare-time buffers, so
+//! [`super::ForceDispatch`] can flip backends over the same model state.
+//! All arithmetic is wrapping i32, so the cancellation is exact
+//! bit-for-bit (modular arithmetic), matching the scalar tier.
+//!
+//! Layout mapping, 8 k-steps per ymm iteration:
+//!
+//! ```text
+//! 32 weight bytes [k0c0..k0c3 … k3c0..k3c3 | k4c0..k4c3 … k7c0..k7c3]
+//!   in-lane vpshufb 4×4 byte transpose →
+//!                 [c0k0..k3 c1k0..k3 c2k0..k3 c3k0..k3 | c0k4..k7 …]
+//! 8 input bytes, ^0x80 → u8, broadcast + in-lane vpshufb →
+//!                 [x0..x3 ×4 | x4..x7 ×4]
+//! vpdpbusd: dword lane c (low half) += Σ_{t<4} (x_t+128)·f[t,c]
+//!           dword lane c (high half) += the k4..k7 tile
+//! ```
+//!
+//! the low/high halves are summed once after the K loop; a single xmm
+//! `vpdpbusd` covers a remaining 4-step chunk. `vpdpbusd` does not
+//! saturate (that is `vpdpbusds`): each lane adds Σ of four u8×i8
+//! products (|Σ| ≤ 4·255·128 < 2^31) with wrapping i32 adds — exact.
+//!
+//! The instruction has two encodings with separate CPUID bits: VEX
+//! (`avxvnni`) and EVEX (`avx512vnni` + `avx512vl` for the 128/256-bit
+//! forms). The bodies are macro-stamped for both intrinsic families and
+//! selected per call by a cached feature probe.
+//!
+//! # Safety
+//!
+//! All `unsafe` follows the avx2.rs pattern: `#[target_feature]`
+//! functions reachable only after the matching CPUID probe passed
+//! (`GemmBackend::AvxVnni::available`, re-split per encoding here), and
+//! unaligned vector loads that are in-bounds by the packed-layout
+//! contract (`fblk.len() >= OC_BLOCK*k`, `x.len() >= k`), with the index
+//! arithmetic stated at each load site.
+
+use super::{dot_tail, DotKernel, OC_BLOCK};
+use core::arch::x86_64::*;
+
+/// Zero-sized marker implementing the VNNI dot core.
+pub(crate) struct VnniDot;
+
+/// Prefer the VEX encoding when the CPU exposes it; otherwise the
+/// availability probe guaranteed the EVEX (`avx512vnni`+`avx512vl`) one.
+#[inline(always)]
+fn use_vex() -> bool {
+    // Cached by std_detect after the first call: one relaxed load.
+    std::arch::is_x86_feature_detected!("avxvnni")
+}
+
+impl DotKernel for VnniDot {
+    /// `-128·Σ fblk[·, c]` over the dpbusd-covered K prefix (`k - k%4`
+    /// steps): the operand-offset compensation described in the module
+    /// docs. Computed from the packed block itself so prepare-time
+    /// buffers stay backend-agnostic.
+    type BlockCtx = [i32; OC_BLOCK];
+
+    fn block_ctx(fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+        // Computed with vpdpbusd itself (an all-ones u8 LHS dots to Σf),
+        // walking the same transposed tiles as the dot bodies — O(k/8)
+        // vector steps per (block, call) instead of an O(4k) scalar
+        // pass, which would rival the dot itself on 1-row FC calls.
+        // SAFETY: as for dot2 (probe passed; bounds asserted inside).
+        unsafe {
+            if use_vex() {
+                ctx_vex(fblk, k)
+            } else {
+                ctx_evex(fblk, k)
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn dot2(
+        x0: &[i8],
+        x1: &[i8],
+        fblk: &[i8],
+        k: usize,
+        ctx: &[i32; OC_BLOCK],
+    ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+        // SAFETY: VnniDot is only dispatched when the avxvnni (VEX) or
+        // avx512vnni+avx512vl (EVEX) probe passed; use_vex() routes to
+        // the encoding this CPU reported. Slice bounds asserted inside.
+        unsafe {
+            if use_vex() {
+                dot2_vex(x0, x1, fblk, k, ctx)
+            } else {
+                dot2_evex(x0, x1, fblk, k, ctx)
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize, ctx: &[i32; OC_BLOCK]) -> [i32; OC_BLOCK] {
+        // SAFETY: as above.
+        unsafe {
+            if use_vex() {
+                dot1_vex(x0, fblk, k, ctx)
+            } else {
+                dot1_evex(x0, fblk, k, ctx)
+            }
+        }
+    }
+}
+
+/// In-lane 4×4 byte transpose, per 128-bit lane:
+/// [k0c0..k0c3 k1c0..k1c3 k2c0..k2c3 k3c0..k3c3] →
+/// [c0k0..c0k3 c1k0..c1k3 c2k0..c2k3 c3k0..c3k3], so each dword group
+/// holds one channel's four k-taps (the shape `vpdpbusd` reduces over).
+#[inline(always)]
+unsafe fn tile_transpose_mask256() -> __m256i {
+    _mm256_setr_epi8(
+        0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15, //
+        0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15,
+    )
+}
+
+/// xmm variant of [`tile_transpose_mask256`] for the 4-step remainder.
+#[inline(always)]
+unsafe fn tile_transpose_mask128() -> __m128i {
+    _mm_setr_epi8(0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15)
+}
+
+/// In-lane shuffle replicating rebased input dwords: from a 64-bit
+/// broadcast, low lane = bytes 0..4 ×4, high lane = bytes 4..8 ×4.
+#[inline(always)]
+unsafe fn input_rep_mask() -> __m256i {
+    _mm256_setr_epi8(
+        0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, //
+        4, 5, 6, 7, 4, 5, 6, 7, 4, 5, 6, 7, 4, 5, 6, 7,
+    )
+}
+
+/// Load weights for 8 k-steps (32 bytes at `fblk[kk*4..]`) and transpose
+/// each 16-byte tile into channel-major dword groups.
+///
+/// # Safety
+/// Caller guarantees avx2-level vectors and `(kk + 8) * OC_BLOCK <=
+/// fblk.len()` (packed-layout contract).
+#[inline(always)]
+unsafe fn load_weights8t(fblk: &[i8], kk: usize) -> __m256i {
+    debug_assert!((kk + 8) * OC_BLOCK <= fblk.len());
+    // SAFETY: 32 bytes starting at kk*4; kk+8 <= k and fblk holds k*4
+    // bytes, so the load is in-bounds.
+    let w = _mm256_loadu_si256(fblk.as_ptr().add(kk * OC_BLOCK) as *const __m256i);
+    _mm256_shuffle_epi8(w, tile_transpose_mask256())
+}
+
+/// Load weights for 4 k-steps (16 bytes) with the same transpose, xmm.
+///
+/// # Safety
+/// Caller guarantees `(kk + 4) * OC_BLOCK <= fblk.len()`.
+#[inline(always)]
+unsafe fn load_weights4t(fblk: &[i8], kk: usize) -> __m128i {
+    debug_assert!((kk + 4) * OC_BLOCK <= fblk.len());
+    // SAFETY: 16 bytes starting at kk*4; kk+4 <= k (see above).
+    let w = _mm_loadu_si128(fblk.as_ptr().add(kk * OC_BLOCK) as *const __m128i);
+    _mm_shuffle_epi8(w, tile_transpose_mask128())
+}
+
+/// Load 8 input bytes `x[kk..kk+8]`, rebias i8 → u8 (`^0x80` == +128 mod
+/// 256) and replicate into the ymm dpbusd operand pattern (module docs).
+///
+/// # Safety
+/// Caller guarantees avx2-level vectors; the byte reads are safe slice
+/// indexing.
+#[inline(always)]
+unsafe fn load_inputs8u(x: &[i8], kk: usize) -> __m256i {
+    let raw = u64::from_le_bytes([
+        x[kk] as u8,
+        x[kk + 1] as u8,
+        x[kk + 2] as u8,
+        x[kk + 3] as u8,
+        x[kk + 4] as u8,
+        x[kk + 5] as u8,
+        x[kk + 6] as u8,
+        x[kk + 7] as u8,
+    ]) ^ 0x8080_8080_8080_8080;
+    let xq = _mm256_set1_epi64x(raw as i64);
+    _mm256_shuffle_epi8(xq, input_rep_mask())
+}
+
+/// Load 4 input bytes `x[kk..kk+4]`, rebias to u8 and broadcast the
+/// dword to every xmm lane.
+///
+/// # Safety
+/// Caller guarantees sse-level vectors; byte reads are safe indexing.
+#[inline(always)]
+unsafe fn load_inputs4u(x: &[i8], kk: usize) -> __m128i {
+    let raw = u32::from_le_bytes([
+        x[kk] as u8,
+        x[kk + 1] as u8,
+        x[kk + 2] as u8,
+        x[kk + 3] as u8,
+    ]) ^ 0x8080_8080;
+    _mm_set1_epi32(raw as i32)
+}
+
+/// Fold the two 16-byte tiles' half-accumulators into one xmm.
+///
+/// # Safety
+/// Caller guarantees avx2-level vectors.
+#[inline(always)]
+unsafe fn fold256(acc: __m256i) -> __m128i {
+    _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc))
+}
+
+/// Store 4 i32 lanes and apply the `-128·Σf` compensation (wrapping, so
+/// the rebias cancellation is exact mod 2^32).
+///
+/// # Safety
+/// Caller guarantees sse-level vectors.
+#[inline(always)]
+unsafe fn store_compensated(v: __m128i, comp: &[i32; OC_BLOCK]) -> [i32; OC_BLOCK] {
+    let mut out = [0i32; OC_BLOCK];
+    // SAFETY: out is 16 bytes, exactly one __m128i store.
+    _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, v);
+    for c in 0..OC_BLOCK {
+        out[c] = out[c].wrapping_add(comp[c]);
+    }
+    out
+}
+
+/// Stamp the dot bodies for one `vpdpbusd` intrinsic family. The two
+/// families ($feat = VEX `avxvnni` vs EVEX `avx512vnni,avx512vl`) differ
+/// only in which CPUID bit licenses the identical instruction semantics.
+macro_rules! vnni_dot_bodies {
+    ($feat:literal, $dpb256:ident, $dpb128:ident, $dot2:ident, $dot1:ident, $ctx:ident) => {
+        /// Per-block compensation `-128·Σf[c]` over the dpbusd-covered K
+        /// prefix (`k - k%4` steps — exactly the steps the dot bodies
+        /// process vectorized): dpbusd with an all-ones unsigned LHS
+        /// sums each channel's weights (1·f), then one scalar negate.
+        /// Wrapping adds in any order are exact mod 2^32, so this equals
+        /// the scalar definition bit-for-bit.
+        ///
+        /// # Safety
+        /// Requires the CPU features in the `target_feature` attribute;
+        /// `fblk.len() >= OC_BLOCK * k` (the packed-layout contract).
+        #[target_feature(enable = $feat)]
+        unsafe fn $ctx(fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+            debug_assert!(fblk.len() >= OC_BLOCK * k);
+            let mut vacc = _mm256_setzero_si256();
+            let ones = _mm256_set1_epi8(1);
+            let mut kk = 0usize;
+            while kk + 8 <= k {
+                vacc = $dpb256(vacc, ones, load_weights8t(fblk, kk));
+                kk += 8;
+            }
+            let mut s = fold256(vacc);
+            if kk + 4 <= k {
+                s = $dpb128(s, _mm_set1_epi8(1), load_weights4t(fblk, kk));
+            }
+            let mut comp = [0i32; OC_BLOCK];
+            // SAFETY: comp is 16 bytes, exactly one __m128i store.
+            _mm_storeu_si128(comp.as_mut_ptr() as *mut __m128i, s);
+            for c in comp.iter_mut() {
+                *c = c.wrapping_mul(-128);
+            }
+            comp
+        }
+
+        /// # Safety
+        /// Requires the CPU features in the `target_feature` attribute;
+        /// `x0.len() >= k`, `x1.len() >= k`, `fblk.len() >= OC_BLOCK * k`
+        /// (the packed-layout contract). `comp` must be
+        /// `VnniDot::block_ctx(fblk, k)`.
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot2(
+            x0: &[i8],
+            x1: &[i8],
+            fblk: &[i8],
+            k: usize,
+            comp: &[i32; OC_BLOCK],
+        ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+            debug_assert!(x0.len() >= k && x1.len() >= k && fblk.len() >= OC_BLOCK * k);
+            let mut vacc0 = _mm256_setzero_si256();
+            let mut vacc1 = _mm256_setzero_si256();
+            let mut kk = 0usize;
+            while kk + 8 <= k {
+                let wt = load_weights8t(fblk, kk); // one weight load feeds both rows
+                vacc0 = $dpb256(vacc0, load_inputs8u(x0, kk), wt);
+                vacc1 = $dpb256(vacc1, load_inputs8u(x1, kk), wt);
+                kk += 8;
+            }
+            let mut s0 = fold256(vacc0);
+            let mut s1 = fold256(vacc1);
+            if kk + 4 <= k {
+                let wt = load_weights4t(fblk, kk);
+                s0 = $dpb128(s0, load_inputs4u(x0, kk), wt);
+                s1 = $dpb128(s1, load_inputs4u(x1, kk), wt);
+                kk += 4;
+            }
+            let mut acc0 = store_compensated(s0, comp);
+            let mut acc1 = store_compensated(s1, comp);
+            dot_tail(&mut acc0, x0, fblk, kk, k);
+            dot_tail(&mut acc1, x1, fblk, kk, k);
+            (acc0, acc1)
+        }
+
+        /// # Safety
+        /// As for the dot2 sibling, minus `x1`.
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot1(
+            x0: &[i8],
+            fblk: &[i8],
+            k: usize,
+            comp: &[i32; OC_BLOCK],
+        ) -> [i32; OC_BLOCK] {
+            debug_assert!(x0.len() >= k && fblk.len() >= OC_BLOCK * k);
+            let mut vacc0 = _mm256_setzero_si256();
+            let mut kk = 0usize;
+            while kk + 8 <= k {
+                vacc0 = $dpb256(vacc0, load_inputs8u(x0, kk), load_weights8t(fblk, kk));
+                kk += 8;
+            }
+            let mut s0 = fold256(vacc0);
+            if kk + 4 <= k {
+                s0 = $dpb128(s0, load_inputs4u(x0, kk), load_weights4t(fblk, kk));
+                kk += 4;
+            }
+            let mut acc0 = store_compensated(s0, comp);
+            dot_tail(&mut acc0, x0, fblk, kk, k);
+            acc0
+        }
+    };
+}
+
+vnni_dot_bodies!(
+    "avx2,avxvnni",
+    _mm256_dpbusd_avx_epi32,
+    _mm_dpbusd_avx_epi32,
+    dot2_vex,
+    dot1_vex,
+    ctx_vex
+);
+vnni_dot_bodies!(
+    "avx2,avx512vnni,avx512vl",
+    _mm256_dpbusd_epi32,
+    _mm_dpbusd_epi32,
+    dot2_evex,
+    dot1_evex,
+    ctx_evex
+);

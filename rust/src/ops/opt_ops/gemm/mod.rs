@@ -29,16 +29,32 @@
 //! [`std::sync::OnceLock`], so the interpreter hot loop pays no
 //! per-invoke detection cost:
 //!
-//! | tier                    | module      | selected when                                      |
-//! |-------------------------|-------------|----------------------------------------------------|
-//! | [`GemmBackend::Avx2`]   | `avx2.rs`   | x86_64 and `is_x86_feature_detected!("avx2")`      |
-//! | [`GemmBackend::Neon`]   | `neon.rs`   | aarch64 and `is_aarch64_feature_detected!("neon")` |
-//! | [`GemmBackend::Scalar`] | `scalar.rs` | always available, any target                       |
+//! | tier                     | module        | selected when                                              |
+//! |--------------------------|---------------|------------------------------------------------------------|
+//! | [`GemmBackend::AvxVnni`] | `avx_vnni.rs` | x86_64 and `avxvnni` (or `avx512vnni`+`avx512vl`) detected |
+//! | [`GemmBackend::Sdot`]    | `sdot.rs`     | aarch64 and `is_aarch64_feature_detected!("dotprod")`      |
+//! | [`GemmBackend::Avx2`]    | `avx2.rs`     | x86_64 and `is_x86_feature_detected!("avx2")`              |
+//! | [`GemmBackend::Neon`]    | `neon.rs`     | aarch64 and `is_aarch64_feature_detected!("neon")`         |
+//! | [`GemmBackend::Scalar`]  | `scalar.rs`   | always available, any target                               |
+//!
+//! The two dot-product tiers (`vpdpbusd` / `sdot`) MAC i8 bytes straight
+//! into i32 lanes without the i16 widening step the avx2/neon tiers pay —
+//! the same jump CMSIS-NN makes from SMLAD to SDOT-class instructions.
+//! Their intrinsics need rustc ≥ 1.89, so `build.rs` gates them behind
+//! the `tfmicro_dotprod_tiers` cfg; on older toolchains they compile out
+//! and report unavailable.
 //!
 //! All backends consume the **same** packed layout and share the scalar
 //! requantize/clamp/store epilogue ([`store_row`] inside [`gemm_body`]),
 //! so they are bit-exact by construction (i8·i8→i32 MACs are exact in
-//! any summation order; only the accumulation instructions differ).
+//! any summation order; only the accumulation instructions differ). The
+//! one wrinkle is `vpdpbusd`, whose first operand is *unsigned*: the
+//! AVX-VNNI tier rebias-XORs the LHS to u8 (`x + 128`) and cancels the
+//! surplus with a per-block compensation term `-128·Σf` — computed once
+//! per (block, call) via [`DotKernel::block_ctx`] from the same packed
+//! buffers, so the prepare-time precompute stays backend-agnostic and
+//! [`ForceDispatch`] can still switch tiers over identical buffers.
+//! Wrapping i32 arithmetic makes the cancellation exact bit-for-bit.
 //! Property tests force each available backend via [`ForceDispatch`] and
 //! compare against scalar and a naive oracle.
 //!
@@ -46,14 +62,18 @@
 //!
 //! 1. Add `gemm/<arch>.rs` with a zero-sized type implementing
 //!    [`DotKernel`] — two associated fns computing raw `[i32; OC_BLOCK]`
-//!    dot products over one packed block. Keep all `unsafe` inside the
-//!    module, with safety comments tied to the packed-layout contract
-//!    (`fblk.len() == OC_BLOCK*k`, `x.len() == k`).
+//!    dot products over one packed block, plus a `BlockCtx` (use `()`
+//!    unless the instruction needs a per-block precomputed correction,
+//!    like AVX-VNNI's operand-offset compensation). Keep all `unsafe`
+//!    inside the module, with safety comments tied to the packed-layout
+//!    contract (`fblk.len() == OC_BLOCK*k`, `x.len() == k`).
 //! 2. `#[cfg(target_arch = ...)] mod <arch>;` here, a new
 //!    [`GemmBackend`] variant, its `available()` probe, and an arm in
-//!    `entry_for`/`BACKEND_PREFERENCE`.
+//!    `entry_for`/`BACKEND_PREFERENCE` (and `to_u8`/`from_u8`).
 //! 3. The property tests in this module pick it up automatically (they
-//!    iterate all variants and skip unavailable ones).
+//!    iterate all variants and skip unavailable ones). If the backend
+//!    maps onto an existing depthwise interior body, add it to
+//!    `depthwise::dw_interior_for` as well.
 //!
 //! Bit-exactness against the reference kernels is enforced by property
 //! tests here and in the conv/FC modules.
@@ -62,8 +82,12 @@ mod scalar;
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+mod avx_vnni;
 #[cfg(target_arch = "aarch64")]
 mod neon;
+#[cfg(all(target_arch = "aarch64", tfmicro_dotprod_tiers))]
+mod sdot;
 
 use crate::ops::common::ChannelQuant;
 use crate::tensor::QuantizedMultiplier;
@@ -169,12 +193,24 @@ pub enum GemmBackend {
     Avx2,
     /// NEON `smlal`-style widening-MAC body (`gemm/neon.rs`, aarch64).
     Neon,
+    /// AVX-VNNI / AVX512-VNNI `vpdpbusd` 4-way i8 dot-MAC body
+    /// (`gemm/avx_vnni.rs`, x86_64, rustc ≥ 1.89).
+    AvxVnni,
+    /// NEON dot-product `sdot` 4-way i8 dot-MAC body (`gemm/sdot.rs`,
+    /// aarch64, rustc ≥ 1.89).
+    Sdot,
 }
 
 /// Every variant, in selection preference order (best first, scalar
-/// last — scalar is always available so detection cannot fail).
-const BACKEND_PREFERENCE: [GemmBackend; 3] =
-    [GemmBackend::Avx2, GemmBackend::Neon, GemmBackend::Scalar];
+/// last — scalar is always available so detection cannot fail). The
+/// dot-product tiers outrank the i16-widening tiers of their arch.
+const BACKEND_PREFERENCE: [GemmBackend; 5] = [
+    GemmBackend::AvxVnni,
+    GemmBackend::Sdot,
+    GemmBackend::Avx2,
+    GemmBackend::Neon,
+    GemmBackend::Scalar,
+];
 
 impl GemmBackend {
     /// Stable lowercase name, used in `BENCH_kernels.json` ("dispatch")
@@ -184,6 +220,8 @@ impl GemmBackend {
             GemmBackend::Scalar => "scalar",
             GemmBackend::Avx2 => "avx2",
             GemmBackend::Neon => "neon",
+            GemmBackend::AvxVnni => "avxvnni",
+            GemmBackend::Sdot => "sdot",
         }
     }
 
@@ -193,11 +231,13 @@ impl GemmBackend {
             GemmBackend::Scalar => true,
             GemmBackend::Avx2 => avx2_available(),
             GemmBackend::Neon => neon_available(),
+            GemmBackend::AvxVnni => avxvnni_available(),
+            GemmBackend::Sdot => sdot_available(),
         }
     }
 
     /// Every backend variant (available or not), preference order.
-    pub fn all() -> [GemmBackend; 3] {
+    pub fn all() -> [GemmBackend; 5] {
         BACKEND_PREFERENCE
     }
 
@@ -206,6 +246,8 @@ impl GemmBackend {
             GemmBackend::Scalar => 1,
             GemmBackend::Avx2 => 2,
             GemmBackend::Neon => 3,
+            GemmBackend::AvxVnni => 4,
+            GemmBackend::Sdot => 5,
         }
     }
 
@@ -214,6 +256,8 @@ impl GemmBackend {
             1 => Some(GemmBackend::Scalar),
             2 => Some(GemmBackend::Avx2),
             3 => Some(GemmBackend::Neon),
+            4 => Some(GemmBackend::AvxVnni),
+            5 => Some(GemmBackend::Sdot),
             _ => None,
         }
     }
@@ -243,6 +287,37 @@ fn neon_available() -> bool {
     false
 }
 
+/// `vpdpbusd` ships in two encodings with separate CPUID bits: VEX
+/// (`avxvnni`, Alder-Lake-class) and EVEX (`avx512vnni` + `avx512vl` for
+/// the 256-bit form, Ice-Lake-class). Either suffices; the kernel picks
+/// per call. The avx2 probe is required too: the dot bodies' shuffles,
+/// loads, and the depthwise interior this tier maps to are AVX2, and a
+/// hypervisor masking avx2 while exposing a VNNI bit must not license
+/// them. Compiled out (always false) below rustc 1.89.
+#[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+fn avxvnni_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+        && (std::arch::is_x86_feature_detected!("avxvnni")
+            || (std::arch::is_x86_feature_detected!("avx512vnni")
+                && std::arch::is_x86_feature_detected!("avx512vl")))
+}
+#[cfg(not(all(target_arch = "x86_64", tfmicro_dotprod_tiers)))]
+fn avxvnni_available() -> bool {
+    false
+}
+
+/// NEON `sdot` (FEAT_DotProd). Compiled out (always false) below
+/// rustc 1.89.
+#[cfg(all(target_arch = "aarch64", tfmicro_dotprod_tiers))]
+fn sdot_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+        && std::arch::is_aarch64_feature_detected!("dotprod")
+}
+#[cfg(not(all(target_arch = "aarch64", tfmicro_dotprod_tiers)))]
+fn sdot_available() -> bool {
+    false
+}
+
 /// The GEMM entry signature every backend front conforms to.
 type GemmFn = fn(usize, usize, usize, &[i8], &[i8], &[i32], &GemmQuant<'_>, &mut [i8], usize);
 
@@ -251,11 +326,15 @@ fn entry_for(b: GemmBackend) -> GemmFn {
         GemmBackend::Scalar => gemm_body::<scalar::ScalarDot>,
         #[cfg(target_arch = "x86_64")]
         GemmBackend::Avx2 => gemm_body::<avx2::Avx2Dot>,
+        #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+        GemmBackend::AvxVnni => gemm_body::<avx_vnni::VnniDot>,
         #[cfg(target_arch = "aarch64")]
         GemmBackend::Neon => gemm_body::<neon::NeonDot>,
-        // Variants not compiled for this arch can never be selected
-        // (detect() and ForceDispatch::force both check available());
-        // this arm is a defensive fallback only.
+        #[cfg(all(target_arch = "aarch64", tfmicro_dotprod_tiers))]
+        GemmBackend::Sdot => gemm_body::<sdot::SdotDot>,
+        // Variants not compiled for this arch/toolchain can never be
+        // selected (detect() and ForceDispatch::force both check
+        // available()); this arm is a defensive fallback only.
         _ => gemm_body::<scalar::ScalarDot>,
     }
 }
@@ -308,6 +387,14 @@ thread_local! {
     static FORCE_HELD: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
 
+/// Serializes the *tests* (here and in `depthwise`) that assert on
+/// process-global dispatch state around a [`ForceDispatch`] guard: a
+/// post-drop "reverted to auto" assertion is only race-free while no
+/// other test can be forcing concurrently. Every forcing test must hold
+/// this for its whole body.
+#[cfg(test)]
+pub(crate) static FORCING_TEST_LOCK: Mutex<()> = Mutex::new(());
+
 /// RAII test/bench hook pinning [`gemm_i8_packed`] to one backend.
 ///
 /// Holding the guard serializes other would-be forcers behind a
@@ -357,11 +444,27 @@ impl Drop for ForceDispatch {
 /// (wrapping i32 MACs of i8·i8 products — any summation order yields the
 /// same bits).
 pub(crate) trait DotKernel {
+    /// Per-(block, call) weight-derived state, computed once by
+    /// [`gemm_body`] before the row loop and handed to every dot call on
+    /// that block. `()` for backends whose MACs are directly exact;
+    /// the AVX-VNNI tier uses it for the `-128·Σf` operand-offset
+    /// compensation so the persistent packed buffers stay
+    /// backend-agnostic (its amortized cost is one scalar pass per block
+    /// per GEMM call, divided across all rows).
+    type BlockCtx: Copy;
+    /// Compute the per-block state for `fblk` (layout contract above).
+    fn block_ctx(fblk: &[i8], k: usize) -> Self::BlockCtx;
     /// Two rows × OC_BLOCK channels (the weight block is loaded once and
     /// feeds both rows).
-    fn dot2(x0: &[i8], x1: &[i8], fblk: &[i8], k: usize) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]);
+    fn dot2(
+        x0: &[i8],
+        x1: &[i8],
+        fblk: &[i8],
+        k: usize,
+        ctx: &Self::BlockCtx,
+    ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]);
     /// One row × OC_BLOCK channels (the odd final row).
-    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK];
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize, ctx: &Self::BlockCtx) -> [i32; OC_BLOCK];
 }
 
 /// Scalar K-remainder: accumulate steps `from..k` of one row into `acc`.
@@ -414,6 +517,10 @@ fn gemm_body<D: DotKernel>(
     out_stride: usize,
 ) {
     debug_assert!(lhs.len() >= rows * k);
+    // No release assert needed here (contrast dw_body): the arch
+    // bodies' unchecked loads are justified on `fblk`, an exact-sized
+    // sub-slice whose safe slicing below already panics on a short
+    // `packed`; lhs/fused_bias/out are safe (panicking) indexing too.
     debug_assert!(packed.len() >= packed_filter_len(out_c, k));
     debug_assert!(fused_bias.len() >= out_c);
     debug_assert!(rows == 0 || out.len() >= (rows - 1) * out_stride + out_c);
@@ -422,17 +529,18 @@ fn gemm_body<D: DotKernel>(
         let oc0 = blk * OC_BLOCK;
         let live = OC_BLOCK.min(out_c - oc0);
         let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+        let bctx = D::block_ctx(fblk, k);
         let mut r = 0usize;
         while r + ROW_BLOCK <= rows {
             let x0 = &lhs[r * k..r * k + k];
             let x1 = &lhs[(r + 1) * k..(r + 1) * k + k];
-            let (acc0, acc1) = D::dot2(x0, x1, fblk, k);
+            let (acc0, acc1) = D::dot2(x0, x1, fblk, k, &bctx);
             store_row(out, r * out_stride, oc0, live, &acc0, fused_bias, q);
             store_row(out, (r + 1) * out_stride, oc0, live, &acc1, fused_bias, q);
             r += ROW_BLOCK;
         }
         if r < rows {
-            let acc0 = D::dot1(&lhs[r * k..r * k + k], fblk, k);
+            let acc0 = D::dot1(&lhs[r * k..r * k + k], fblk, k, &bctx);
             store_row(out, r * out_stride, oc0, live, &acc0, fused_bias, q);
         }
     }
@@ -552,6 +660,29 @@ mod tests {
             }
         }
 
+        /// The vpdpbusd compensation-term edge case: `input_offset = 0`
+        /// (no correction hiding in the folded bias) with the LHS made of
+        /// saturating ±127 runs and an extreme-valued filter, so the
+        /// rebiased u8 operands sit at 255/1 for long stretches. Shapes
+        /// still ragged (k % 8, k % 4 ≠ 0 get drawn) so the ymm body, the
+        /// xmm remainder chunk, and the scalar tail all see the runs.
+        fn saturating_runs(rng: &mut Rng) -> Case {
+            let mut case = Case::random(rng);
+            case.input_offset = 0;
+            let run = 1 + rng.below(7);
+            for (i, v) in case.lhs.iter_mut().enumerate() {
+                *v = if (i / run) % 2 == 0 { 127 } else { -127 };
+            }
+            for (i, v) in case.filter.iter_mut().enumerate() {
+                *v = match i % 3 {
+                    0 => 127,
+                    1 => -128,
+                    _ => 1,
+                };
+            }
+            case
+        }
+
         fn bias_opt(&self) -> Option<&[i32]> {
             if self.with_bias {
                 Some(&self.bias[..])
@@ -609,15 +740,17 @@ mod tests {
         });
     }
 
-    /// ForceDispatch guard semantics + every available SIMD backend
-    /// bit-exact against the scalar body AND the naive oracle, forced
-    /// through the public entry. One sequential test on purpose: the
-    /// post-drop "dispatch reverted to auto" assertions observe
-    /// process-global state, so they are only race-free while no other
-    /// test in this binary can hold a [`ForceDispatch`] concurrently —
-    /// keep all forcing in this one #[test].
+    /// ForceDispatch guard semantics + **every** `GemmBackend::all()`
+    /// variant available on this machine (scalar included, and the
+    /// dot-product tiers when compiled in) bit-exact against the scalar
+    /// body AND the naive oracle, forced through the public entry. One
+    /// sequential test on purpose: the post-drop "dispatch reverted to
+    /// auto" assertions observe process-global state, so every forcing
+    /// test must hold [`FORCING_TEST_LOCK`] for its whole body.
     #[test]
     fn force_dispatch_semantics_and_simd_backends_bit_exact() {
+        let _serialize =
+            super::FORCING_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
         // --- guard semantics -------------------------------------------
         {
             let _g = ForceDispatch::force(GemmBackend::Scalar).expect("scalar always available");
@@ -633,48 +766,82 @@ mod tests {
                 assert!(ForceDispatch::force(b).is_none(), "{b} must refuse to force");
             }
         }
-        // At most one SIMD arch per binary.
-        assert!(!(GemmBackend::Avx2.available() && GemmBackend::Neon.available()));
+        // At most one SIMD arch family per binary.
+        let x86 = GemmBackend::Avx2.available() || GemmBackend::AvxVnni.available();
+        let arm = GemmBackend::Neon.available() || GemmBackend::Sdot.available();
+        assert!(!(x86 && arm));
 
-        // --- bit-exactness per available SIMD backend ------------------
+        // --- bit-exactness per available backend -----------------------
         for backend in GemmBackend::all() {
-            if backend == GemmBackend::Scalar || !backend.available() {
+            if !backend.available() {
                 continue;
             }
             let guard = ForceDispatch::force(backend).expect("available backend must force");
             assert_eq!(active_backend(), backend);
             check(Cases::n(150), |rng: &mut Rng| {
                 let case = Case::random(rng);
-                let q = case.quant();
-                let (packed, fused) = case.precompute();
-                let (rows, k, out_c) = (case.rows, case.k, case.out_c);
-
-                // Scalar body, called directly (not through dispatch).
-                let mut scalar_out = vec![0i8; rows * out_c];
-                gemm_body::<scalar::ScalarDot>(
-                    rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c,
-                );
-                // Naive oracle.
-                let mut naive_out = vec![0i8; rows * out_c];
-                gemm_naive(
-                    rows, k, out_c, &case.lhs, &case.filter, case.input_offset, case.bias_opt(),
-                    &q, &mut naive_out, out_c,
-                );
-                // The forced SIMD backend, through the public front.
-                let mut simd_out = vec![0i8; rows * out_c];
-                gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut simd_out, out_c);
-
-                if simd_out != scalar_out {
-                    return Err(format!("{backend} != scalar at rows={rows} k={k} out_c={out_c}"));
-                }
-                if simd_out != naive_out {
-                    return Err(format!("{backend} != oracle at rows={rows} k={k} out_c={out_c}"));
-                }
-                Ok(())
+                check_case_forced(backend, &case)
+            });
+            // The vpdpbusd operand-offset compensation case: with
+            // input_offset = 0 the folded bias carries no correction at
+            // all, so any rebias residue the AVX-VNNI tier failed to
+            // cancel shows up directly; saturating ±127 runs maximize
+            // the rebiased u8 operands (255/1). Run for every backend —
+            // it is a worthwhile edge case for all of them.
+            check(Cases::n(20), |rng: &mut Rng| {
+                let case = Case::saturating_runs(rng);
+                check_case_forced(backend, &case)
             });
             drop(guard);
             assert!(!dispatch_is_forced(), "{backend} guard drop restores auto dispatch");
         }
+    }
+
+    /// One forced-backend case: the public front (pinned to `backend` by
+    /// the caller's guard) must match both the scalar body (called
+    /// directly, not through dispatch) and the naive oracle.
+    fn check_case_forced(backend: GemmBackend, case: &Case) -> Result<(), String> {
+        let q = case.quant();
+        let (packed, fused) = case.precompute();
+        let (rows, k, out_c) = (case.rows, case.k, case.out_c);
+
+        let mut scalar_out = vec![0i8; rows * out_c];
+        gemm_body::<scalar::ScalarDot>(
+            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c,
+        );
+        let mut naive_out = vec![0i8; rows * out_c];
+        gemm_naive(
+            rows, k, out_c, &case.lhs, &case.filter, case.input_offset, case.bias_opt(), &q,
+            &mut naive_out, out_c,
+        );
+        let mut forced_out = vec![0i8; rows * out_c];
+        gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut forced_out, out_c);
+
+        if forced_out != scalar_out {
+            return Err(format!("{backend} != scalar at rows={rows} k={k} out_c={out_c}"));
+        }
+        if forced_out != naive_out {
+            return Err(format!("{backend} != oracle at rows={rows} k={k} out_c={out_c}"));
+        }
+        Ok(())
+    }
+
+    /// The enum plumbing `tfmicro cpu` and the force/dispatch state rely
+    /// on: five distinct tiers, unique stable names, u8 round-trip.
+    #[test]
+    fn backend_enum_roundtrip_and_names() {
+        let all = GemmBackend::all();
+        assert_eq!(all.len(), 5);
+        let mut names: Vec<&str> = all.iter().map(|b| b.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5, "backend names must be unique");
+        for b in all {
+            assert_eq!(GemmBackend::from_u8(b.to_u8()), Some(b));
+        }
+        assert_eq!(GemmBackend::from_u8(0), None);
+        assert_eq!(all[all.len() - 1], GemmBackend::Scalar, "scalar must be the last resort");
+        assert!(GemmBackend::Scalar.available());
     }
 
     #[test]

@@ -43,12 +43,19 @@ use core::arch::aarch64::*;
 pub(crate) struct NeonDot;
 
 impl DotKernel for NeonDot {
+    /// Exact widening MACs need no per-block correction.
+    type BlockCtx = ();
+
+    #[inline(always)]
+    fn block_ctx(_fblk: &[i8], _k: usize) {}
+
     #[inline(always)]
     fn dot2(
         x0: &[i8],
         x1: &[i8],
         fblk: &[i8],
         k: usize,
+        _ctx: &(),
     ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
         // SAFETY: NeonDot is only dispatched when the neon feature probe
         // passed (see module docs); slice bounds are asserted inside.
@@ -56,7 +63,7 @@ impl DotKernel for NeonDot {
     }
 
     #[inline(always)]
-    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize, _ctx: &()) -> [i32; OC_BLOCK] {
         // SAFETY: as above.
         unsafe { dot1_neon(x0, fblk, k) }
     }

@@ -16,12 +16,19 @@ use super::{dot_tail, DotKernel, OC_BLOCK};
 pub(crate) struct ScalarDot;
 
 impl DotKernel for ScalarDot {
+    /// Exact widening MACs need no per-block correction.
+    type BlockCtx = ();
+
+    #[inline(always)]
+    fn block_ctx(_fblk: &[i8], _k: usize) {}
+
     #[inline(always)]
     fn dot2(
         x0: &[i8],
         x1: &[i8],
         fblk: &[i8],
         k: usize,
+        _ctx: &(),
     ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
         let mut acc0 = [0i32; OC_BLOCK];
         let mut acc1 = [0i32; OC_BLOCK];
@@ -48,7 +55,7 @@ impl DotKernel for ScalarDot {
     }
 
     #[inline(always)]
-    fn dot1(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize, _ctx: &()) -> [i32; OC_BLOCK] {
         let mut acc0 = [0i32; OC_BLOCK];
         let mut kk = 0usize;
         while kk + 4 <= k {

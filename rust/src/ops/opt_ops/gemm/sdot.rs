@@ -1,0 +1,156 @@
+//! NEON dot-product (`sdot`) core — the top aarch64 tier of the GEMM
+//! dispatch.
+//!
+//! `sdot` (FEAT_DotProd, `vdotq_s32`) MACs four signed byte products
+//! straight into each i32 lane — one instruction where the plain NEON
+//! tier needs `vmovl` widening plus four `vmlal`s. Both operands are
+//! signed, so unlike the x86 `vpdpbusd` tier no operand-offset
+//! compensation is needed: the MACs are directly exact.
+//!
+//! `sdot` reduces over the four *adjacent* bytes of each dword group,
+//! but the packed layout stores channels fastest (`fblk[kk*4 + c]`), so
+//! a group of four adjacent bytes holds four *channels* of one k-step —
+//! the wrong reduction axis. One `tbl` byte shuffle per 16-byte chunk
+//! transposes each 4×4 tile to channel-major:
+//!
+//! ```text
+//! 16 weight bytes [k0c0..k0c3 k1c0..k1c3 k2c0..k2c3 k3c0..k3c3]
+//!   vqtbl1q (4×4 byte transpose) →
+//!                 [c0k0..c0k3 c1k0..c1k3 c2k0..c2k3 c3k0..c3k3]
+//! 4 input bytes broadcast to every dword lane: [x0..x3] ×4
+//! sdot: lane c += Σ_{t<4} x[kk+t]·f[kk+t, c]
+//! ```
+//!
+//! so per 4 k-steps the 2-row block costs 1 load + 1 tbl + 2 broadcasts
+//! + 2 sdot (32 MACs). Products and wrapping i32 accumulation are exact
+//! in any order, so bit-equality with the scalar tier is by
+//! construction; the ragged `k % 4` tail runs the shared [`dot_tail`].
+//! The intrinsics need rustc ≥ 1.89, so this module is gated on the
+//! `tfmicro_dotprod_tiers` cfg from `build.rs`.
+//!
+//! # Safety
+//!
+//! Same pattern as the neon.rs sibling: `#[target_feature(enable =
+//! "neon,dotprod")]` functions only reachable through
+//! `GemmBackend::Sdot`, which the dispatch front (and
+//! `ForceDispatch::force`) hands out only when
+//! `is_aarch64_feature_detected!("dotprod")` returned true; unaligned
+//! vector loads in-bounds by the packed-layout contract
+//! (`fblk.len() >= OC_BLOCK*k`, `x.len() >= k`), asserted below.
+
+use super::{dot_tail, DotKernel, OC_BLOCK};
+use core::arch::aarch64::*;
+
+/// Zero-sized marker implementing the sdot core.
+pub(crate) struct SdotDot;
+
+impl DotKernel for SdotDot {
+    /// Signed×signed dot MACs are directly exact — no correction.
+    type BlockCtx = ();
+
+    #[inline(always)]
+    fn block_ctx(_fblk: &[i8], _k: usize) {}
+
+    #[inline(always)]
+    fn dot2(
+        x0: &[i8],
+        x1: &[i8],
+        fblk: &[i8],
+        k: usize,
+        _ctx: &(),
+    ) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+        // SAFETY: SdotDot is only dispatched when the dotprod feature
+        // probe passed (see module docs); slice bounds asserted inside.
+        unsafe { dot2_sdot(x0, x1, fblk, k) }
+    }
+
+    #[inline(always)]
+    fn dot1(x0: &[i8], fblk: &[i8], k: usize, _ctx: &()) -> [i32; OC_BLOCK] {
+        // SAFETY: as above.
+        unsafe { dot1_sdot(x0, fblk, k) }
+    }
+}
+
+/// `tbl` index vector performing the 4×4 byte tile transpose
+/// (k-major × channel → channel-major × k, see module docs).
+///
+/// # Safety
+/// Requires the neon CPU feature.
+#[inline(always)]
+unsafe fn transpose_idx() -> uint8x16_t {
+    const IDX: [u8; 16] = [0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15];
+    // SAFETY: IDX is exactly 16 bytes, one uint8x16 load.
+    vld1q_u8(IDX.as_ptr())
+}
+
+/// Broadcast 4 input bytes `x[kk..kk+4]` to every dword lane.
+///
+/// # Safety
+/// Requires the neon CPU feature; byte reads are safe slice indexing.
+#[inline(always)]
+unsafe fn broadcast_inputs4(x: &[i8], kk: usize) -> int8x16_t {
+    let raw = i32::from_le_bytes([
+        x[kk] as u8,
+        x[kk + 1] as u8,
+        x[kk + 2] as u8,
+        x[kk + 3] as u8,
+    ]);
+    vreinterpretq_s8_s32(vdupq_n_s32(raw))
+}
+
+/// # Safety
+/// Requires the neon + dotprod CPU features; `x0.len() >= k`,
+/// `x1.len() >= k`, `fblk.len() >= OC_BLOCK * k` (the packed-layout
+/// contract).
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn dot2_sdot(
+    x0: &[i8],
+    x1: &[i8],
+    fblk: &[i8],
+    k: usize,
+) -> ([i32; OC_BLOCK], [i32; OC_BLOCK]) {
+    debug_assert!(x0.len() >= k && x1.len() >= k && fblk.len() >= OC_BLOCK * k);
+    let idx = transpose_idx();
+    let mut vacc0 = vdupq_n_s32(0);
+    let mut vacc1 = vdupq_n_s32(0);
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        // SAFETY: 16 bytes at kk*4; kk+4 <= k and fblk holds k*4 bytes
+        // (packed-layout contract), so the load is in-bounds.
+        let w = vld1q_s8(fblk.as_ptr().add(kk * OC_BLOCK));
+        let wt = vqtbl1q_s8(w, idx); // one transpose feeds both rows
+        vacc0 = vdotq_s32(vacc0, wt, broadcast_inputs4(x0, kk));
+        vacc1 = vdotq_s32(vacc1, wt, broadcast_inputs4(x1, kk));
+        kk += 4;
+    }
+    let mut acc0 = [0i32; OC_BLOCK];
+    let mut acc1 = [0i32; OC_BLOCK];
+    // SAFETY: each destination is exactly 4 i32 = one int32x4 store.
+    vst1q_s32(acc0.as_mut_ptr(), vacc0);
+    vst1q_s32(acc1.as_mut_ptr(), vacc1);
+    dot_tail(&mut acc0, x0, fblk, kk, k);
+    dot_tail(&mut acc1, x1, fblk, kk, k);
+    (acc0, acc1)
+}
+
+/// # Safety
+/// Requires the neon + dotprod CPU features; `x0.len() >= k`,
+/// `fblk.len() >= OC_BLOCK * k` (the packed-layout contract).
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn dot1_sdot(x0: &[i8], fblk: &[i8], k: usize) -> [i32; OC_BLOCK] {
+    debug_assert!(x0.len() >= k && fblk.len() >= OC_BLOCK * k);
+    let idx = transpose_idx();
+    let mut vacc0 = vdupq_n_s32(0);
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        // SAFETY: in-bounds by the packed-layout contract (see dot2_sdot).
+        let w = vld1q_s8(fblk.as_ptr().add(kk * OC_BLOCK));
+        vacc0 = vdotq_s32(vacc0, vqtbl1q_s8(w, idx), broadcast_inputs4(x0, kk));
+        kk += 4;
+    }
+    let mut acc0 = [0i32; OC_BLOCK];
+    // SAFETY: destination is exactly 4 i32 = one int32x4 store.
+    vst1q_s32(acc0.as_mut_ptr(), vacc0);
+    dot_tail(&mut acc0, x0, fblk, kk, k);
+    acc0
+}

@@ -10,6 +10,10 @@
 //! | SMLAD dual 16-bit MAC                 | scalar tier: 4-way unrolled i32 MAC chains  |
 //! | SMLAD dual 16-bit MAC (packed pairs)  | AVX2 tier: `vpmaddwd` dual i16 MAC (8 lanes)|
 //! | SMLAL widening MAC                    | NEON tier: `smlal` widening MAC (4 lanes)   |
+//! | SDOT 4-way i8 dot MAC (MVE/v8.2)      | AVX-VNNI tier: `vpdpbusd` (u8 rebias +      |
+//! |                                       | folded `-128·Σf` compensation, 8 i32 lanes) |
+//! | SDOT 4-way i8 dot MAC (MVE/v8.2)      | sdot tier: NEON `sdot` over `tbl`-transposed|
+//! |                                       | 4×4 weight tiles (4 i32 lanes)              |
 //! | compile-time kernel selection         | runtime dispatch, cached `OnceLock` fn ptr  |
 //! | pad with -input_offset                | pad with input zero point                   |
 //! | init-time kernel sums                 | populate-pass folded biases                 |
@@ -21,14 +25,18 @@
 //! micro-kernel ([`gemm`]): the conv im2col path, the conv 1×1 fast path,
 //! and FullyConnected all route through it over weights repacked once at
 //! init (the prepare → populate precomputation pipeline). The GEMM K-loop
-//! body is runtime-dispatched — AVX2 on x86_64, NEON on aarch64, the
+//! body is runtime-dispatched — dot-product instructions first
+//! (AVX-VNNI `vpdpbusd` on x86_64, `sdot` on aarch64, both needing
+//! rustc ≥ 1.89), then the i16-widening AVX2/NEON tiers, then the
 //! portable scalar kernel everywhere else — all over the *same* packed
 //! layout, resolved once per process and overridable for tests/benches
 //! via [`gemm::ForceDispatch`] (see the dispatch-tier table in
 //! [`gemm`]'s module docs). Depthwise conv keeps its own loop structure
 //! and gets both populate-pass precomputes: folded biases plus a
-//! channel-blocked ([`depthwise::DW_CH_BLOCK`]-lane) filter repack whose
-//! interior fast path walks contiguous channel blocks.
+//! channel-blocked ([`depthwise::DW_CH_BLOCK`]-lane) filter repack —
+//! its interior block walk is a dispatch front mirroring (and keyed by)
+//! the GEMM's, with explicit AVX2/NEON bodies and a portable scalar
+//! fallback, so one `ForceDispatch` guard pins both hot kernels.
 //!
 //! Equivalence with the reference kernels is enforced by property tests
 //! (random shapes/values, exact int8 match) — the support the paper says
@@ -42,7 +50,8 @@ pub mod gemm;
 pub use conv::{conv2d_i8_im2col, conv2d_i8_packed, OptConvKernel};
 pub use depthwise::{
     depthwise_conv2d_i8_folded, depthwise_conv2d_i8_opt, depthwise_conv2d_i8_packed,
-    pack_depthwise_filter, packed_depthwise_len, OptDepthwiseConvKernel, DW_CH_BLOCK,
+    dw_interior_name, pack_depthwise_filter, packed_depthwise_len, OptDepthwiseConvKernel,
+    DW_CH_BLOCK,
 };
 pub use fully_connected::{
     fully_connected_i8_blocked, fully_connected_i8_packed, OptFullyConnectedKernel,

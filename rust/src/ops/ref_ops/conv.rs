@@ -9,7 +9,7 @@
 use crate::error::Result;
 use crate::ops::common::{
     activation_range_f32, activation_range_i8, compute_out_size, compute_padding, conv_per_channel,
-    ChannelQuant, ConvData, PaddingValues,
+    filter_exceeds_input, ChannelQuant, ConvData, PaddingValues,
 };
 use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
 use crate::schema::format::OpOptions;
@@ -173,6 +173,12 @@ pub(crate) fn prepare_conv(ctx: &mut PrepareContext) -> Result<()> {
     }
     let want_h = compute_out_size(opts.padding, in_h as i32, kh as i32, opts.stride_h as i32, opts.dilation_h as i32);
     let want_w = compute_out_size(opts.padding, in_w as i32, kw as i32, opts.stride_w as i32, opts.dilation_w as i32);
+    if let Some(reason) = filter_exceeds_input(
+        want_h, want_w, kh as i32, kw as i32, opts.dilation_h as i32, opts.dilation_w as i32,
+        in_h as i32, in_w as i32, opts.padding,
+    ) {
+        return Err(ctx.fail(reason));
+    }
     if (want_h, want_w) != (out_h as i32, out_w as i32) {
         return Err(ctx.fail(format!(
             "output spatial {out_h}x{out_w} does not match computed {want_h}x{want_w} ({:?})",

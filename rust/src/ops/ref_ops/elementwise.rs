@@ -76,14 +76,18 @@ impl Kernel for ArithKernel {
                     // TFLite: kLeftShift = 20.
                     data.left_shift = 20;
                     let twice_max = 2.0 * s1.max(s2);
-                    data.mult1 = QuantizedMultiplier::from_real(s1 / twice_max);
-                    data.mult2 = QuantizedMultiplier::from_real(s2 / twice_max);
-                    data.mult_out = QuantizedMultiplier::from_real(
+                    data.mult1 = QuantizedMultiplier::try_from_real(s1 / twice_max)
+                        .map_err(|e| ctx.fail(e.to_string()))?;
+                    data.mult2 = QuantizedMultiplier::try_from_real(s2 / twice_max)
+                        .map_err(|e| ctx.fail(e.to_string()))?;
+                    data.mult_out = QuantizedMultiplier::try_from_real(
                         twice_max / ((1i64 << data.left_shift) as f64 * so),
-                    );
+                    )
+                    .map_err(|e| ctx.fail(e.to_string()))?;
                 }
                 ArithMode::Mul => {
-                    data.mult_out = QuantizedMultiplier::from_real(s1 * s2 / so);
+                    data.mult_out = QuantizedMultiplier::try_from_real(s1 * s2 / so)
+                        .map_err(|e| ctx.fail(e.to_string()))?;
                 }
             }
         }

@@ -103,7 +103,8 @@ pub(crate) fn prepare_fc(ctx: &mut PrepareContext) -> Result<()> {
     let mut data = FcData { fact: activation_range_f32(activation), ..Default::default() };
     if input.dtype == DType::I8 {
         let real = input.scale()? as f64 * filter.scale()? as f64 / output.scale()? as f64;
-        data.mult = QuantizedMultiplier::from_real(real);
+        data.mult = QuantizedMultiplier::try_from_real(real)
+            .map_err(|e| ctx.fail(e.to_string()))?;
         data.input_offset = -input.zero_point()?;
         data.filter_offset = -filter.zero_point()?;
         data.output_offset = output.zero_point()?;

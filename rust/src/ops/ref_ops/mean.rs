@@ -60,9 +60,10 @@ impl Kernel for MeanKernel {
         if input.dtype == DType::I8 {
             data.in_zp = input.zero_point()?;
             data.out_zp = output.zero_point()?;
-            data.mult = QuantizedMultiplier::from_real(
+            data.mult = QuantizedMultiplier::try_from_real(
                 input.scale()? as f64 / (output.scale()? as f64 * divisor as f64),
-            );
+            )
+            .map_err(|e| ctx.fail(e.to_string()))?;
         }
         ctx.set_op_data(OpData::Mean(data));
         Ok(())

@@ -5,8 +5,8 @@
 
 use crate::error::Result;
 use crate::ops::common::{
-    activation_range_f32, activation_range_i8, compute_out_size, compute_padding, PaddingValues,
-    PoolData,
+    activation_range_f32, activation_range_i8, compute_out_size, compute_padding,
+    filter_exceeds_input, PaddingValues, PoolData,
 };
 use crate::ops::ref_ops::conv::ConvShape;
 use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
@@ -181,6 +181,12 @@ impl Kernel for PoolKernel {
         }
         let want_h = compute_out_size(opts.padding, in_h as i32, opts.filter_h as i32, opts.stride_h as i32, 1);
         let want_w = compute_out_size(opts.padding, in_w as i32, opts.filter_w as i32, opts.stride_w as i32, 1);
+        if let Some(reason) = filter_exceeds_input(
+            want_h, want_w, opts.filter_h as i32, opts.filter_w as i32, 1, 1, in_h as i32,
+            in_w as i32, opts.padding,
+        ) {
+            return Err(ctx.fail(reason));
+        }
         if (want_h, want_w) != (out_h as i32, out_w as i32) {
             return Err(ctx.fail(format!(
                 "output spatial {out_h}x{out_w} does not match computed {want_h}x{want_w}"

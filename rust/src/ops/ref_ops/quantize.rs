@@ -31,9 +31,9 @@ impl Kernel for QuantizeKernel {
             DType::I8 => {
                 data.in_zp = input.zero_point()?;
                 data.in_scale = input.scale()?;
-                data.mult = QuantizedMultiplier::from_real(
-                    input.scale()? as f64 / output.scale()? as f64,
-                );
+                data.mult =
+                    QuantizedMultiplier::try_from_real(input.scale()? as f64 / output.scale()? as f64)
+                        .map_err(|e| ctx.fail(e.to_string()))?;
             }
             other => return Err(ctx.fail(format!("unsupported input dtype {other}"))),
         }

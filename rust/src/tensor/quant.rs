@@ -68,9 +68,36 @@ pub struct QuantizedMultiplier {
 }
 
 impl QuantizedMultiplier {
-    /// Encode a real multiplier. Mirrors TFLite's `QuantizeMultiplier`.
+    /// Encode a real multiplier, rejecting values TFLite's
+    /// `QuantizeMultiplier` cannot represent: effective scales must be
+    /// finite and non-negative (a negative or NaN/inf scale means the
+    /// model's quantization parameters are broken — kernels call this at
+    /// prepare time and surface the error there). Exactly 0 encodes as
+    /// the zero multiplier, like TFLite.
+    pub fn try_from_real(real: f64) -> crate::error::Result<Self> {
+        if !real.is_finite() || real < 0.0 {
+            return Err(crate::error::Error::InvalidTensor(format!(
+                "effective quantized scale must be finite and non-negative, got {real}"
+            )));
+        }
+        Ok(Self::from_real(real))
+    }
+
+    /// Encode a real multiplier. Mirrors TFLite's `QuantizeMultiplier`,
+    /// including its guards: `shift` is capped at 30 (the single-rounding
+    /// `MultiplyByQuantizedMultiplier` cannot honor a larger left shift —
+    /// it would overflow the i32 pre-shift; TFLite saturates to
+    /// `(i32::MAX, 30)`), and sub-2^-31 magnitudes underflow to the zero
+    /// multiplier. Callers with untrusted scales (kernel prepare paths)
+    /// should use [`Self::try_from_real`], which additionally rejects
+    /// negative/non-finite inputs; this infallible form is for
+    /// known-positive values and debug-asserts that precondition.
     pub fn from_real(real: f64) -> Self {
-        if real == 0.0 {
+        debug_assert!(
+            real.is_finite() && real >= 0.0,
+            "invalid effective scale {real} (use try_from_real to surface an error)"
+        );
+        if real == 0.0 || !real.is_finite() || real < 0.0 {
             return QuantizedMultiplier { multiplier: 0, shift: 0 };
         }
         let (q, mut shift) = frexp(real);
@@ -84,6 +111,13 @@ impl QuantizedMultiplier {
             // Underflow: the multiplier rounds to zero.
             shift = 0;
             q_fixed = 0;
+        }
+        if shift > 30 {
+            // TFLite: single-rounding MultiplyByQuantizedMultiplier does
+            // not support a left shift above 30 (RoundingDivideByPOT /
+            // the pre-shift would overflow); saturate.
+            shift = 30;
+            q_fixed = (1i64 << 31) - 1;
         }
         QuantizedMultiplier { multiplier: q_fixed as i32, shift }
     }
@@ -176,6 +210,51 @@ mod tests {
             assert!((0.5..1.0).contains(&f.abs()), "frac {f} for {v}");
             assert!((f * (2f64).powi(e) - v).abs() < v * 1e-15);
         }
+    }
+
+    /// TFLite `QuantizeMultiplier` boundary behavior: shift 30 is the
+    /// largest representable left shift; 31 saturates to (i32::MAX, 30).
+    #[test]
+    fn quantize_multiplier_caps_shift_at_30() {
+        // 2^29 → frac 0.5, shift 30: passes through uncapped.
+        let q = QuantizedMultiplier::from_real((1u64 << 29) as f64);
+        assert_eq!((q.multiplier, q.shift), (1 << 30, 30));
+        // 2^30 → frac 0.5, shift 31: capped.
+        let q = QuantizedMultiplier::from_real((1u64 << 30) as f64);
+        assert_eq!((q.multiplier, q.shift), (i32::MAX, 30));
+        // Far larger ratios saturate the same way instead of overflowing
+        // RoundingDivideByPOT's 0..=31 exponent / the i32 pre-shift.
+        let q = QuantizedMultiplier::from_real(1e18);
+        assert_eq!((q.multiplier, q.shift), (i32::MAX, 30));
+        // The capped multiplier must still be applicable without
+        // tripping RoundingDivideByPOT's exponent bounds.
+        let _ = QuantizedMultiplier { multiplier: i32::MAX, shift: 30 }.apply(1);
+    }
+
+    /// Subnormal / sub-2^-31 scales underflow to the zero multiplier
+    /// (TFLite's `shift < -31` branch), not garbage.
+    #[test]
+    fn quantize_multiplier_underflows_to_zero() {
+        let q = QuantizedMultiplier::from_real(1e-310); // subnormal f64
+        assert_eq!((q.multiplier, q.shift), (0, 0));
+        assert_eq!(q.apply(1 << 20), 0);
+        let q = QuantizedMultiplier::from_real(2f64.powi(-40));
+        assert_eq!((q.multiplier, q.shift), (0, 0));
+    }
+
+    /// TFLite errors on non-positive / non-finite effective scales;
+    /// `try_from_real` mirrors that (0 stays representable as the zero
+    /// multiplier, matching `QuantizeMultiplier`'s explicit 0 case).
+    #[test]
+    fn try_from_real_rejects_invalid_scales() {
+        assert!(QuantizedMultiplier::try_from_real(-0.5).is_err());
+        assert!(QuantizedMultiplier::try_from_real(f64::NAN).is_err());
+        assert!(QuantizedMultiplier::try_from_real(f64::INFINITY).is_err());
+        assert!(QuantizedMultiplier::try_from_real(f64::NEG_INFINITY).is_err());
+        let q = QuantizedMultiplier::try_from_real(0.0).unwrap();
+        assert_eq!((q.multiplier, q.shift), (0, 0));
+        let q = QuantizedMultiplier::try_from_real(0.5).unwrap();
+        assert_eq!((q.multiplier, q.shift), (1 << 30, 0));
     }
 
     #[test]

@@ -470,3 +470,118 @@ fn packed_kernels_report_persistent_buffers_and_match_reference() {
     opt_interp.invoke().unwrap();
     assert_eq!(opt_interp.output(0).unwrap().as_i8().unwrap(), &want[..]);
 }
+
+/// Asymmetric SAME padding, even conv kernel (2x2 stride 2 over 3x3):
+/// total padding is odd (1), and TFLite places the floor half on
+/// top/left (here 0) and the odd remainder on **bottom/right**. The
+/// expected values below are hand-computed under exactly those
+/// semantics — if either kernel family biased the remainder to
+/// top/left instead, out(0,0) would see only x00 and the test fails —
+/// and the reference and packed/optimized interpreters must agree
+/// bit-exactly on top of that.
+#[test]
+fn even_kernel_same_padding_is_bottom_right_conv() {
+    let mut b = ModelBuilder::new("even-same-conv");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 3, 3, 1], None, unit_q());
+    // Filter [out_c=2, 2, 2, 1]: channel 0 all +1, channel 1 all -1.
+    let w: Vec<u8> = vec![1, 1, 1, 1, 0xFF, 0xFF, 0xFF, 0xFF];
+    let wbuf = b.add_buffer(&w);
+    let t_w = b.add_quant_tensor("w", DType::I8, &[2, 2, 2, 1], Some(wbuf), unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2, 2, 2], None, unit_q());
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w, -1],
+        &[t_out],
+        conv_options(Padding::Same, Activation::None, (2, 2), (1, 1), None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    #[rustfmt::skip]
+    let input = [
+        1i8, 2, 3,
+        4, 5, 6,
+        7, 8, 9,
+    ];
+    // pad_top = pad_left = floor(((2-1)*2 + 2 - 3) / 2) = 0; the odd
+    // remainder pads bottom/right, so windows clip there:
+    //   (0,0): 1+2+4+5 = 12   (0,1): 3+6 = 9
+    //   (1,0): 7+8     = 15   (1,1): 9
+    let want: Vec<i8> = vec![12, -12, 9, -9, 15, -15, 9, -9];
+    assert_eq!(run_once(&model, &input, 64), want, "reference diverges from TFLite SAME");
+    assert_eq!(run_once_optimized(&model, &input, 64), want, "packed diverges from TFLite SAME");
+}
+
+/// The depthwise analog of the even-kernel SAME test, with 8 channels so
+/// the optimized interpreter exercises the channel-blocked packed
+/// interior (one whole DW_CH_BLOCK block) end to end.
+#[test]
+fn even_kernel_same_padding_is_bottom_right_depthwise() {
+    let mut b = ModelBuilder::new("even-same-dw");
+    let c = 8usize;
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 3, 3, c as i32], None, unit_q());
+    // Filter [1, 2, 2, 8], all ones.
+    let w: Vec<u8> = vec![1u8; 2 * 2 * c];
+    let wbuf = b.add_buffer(&w);
+    let t_w = b.add_quant_tensor("w", DType::I8, &[1, 2, 2, c as i32], Some(wbuf), unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2, 2, c as i32], None, unit_q());
+    b.add_op(
+        BuiltinOp::DepthwiseConv2d,
+        &[t_in, t_w, -1],
+        &[t_out],
+        conv_options(Padding::Same, Activation::None, (2, 2), (1, 1), Some(1)),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    // input(y, x, ch) = (y*3 + x + 1) + ch.
+    let mut input = vec![0i8; 3 * 3 * c];
+    for p in 0..9 {
+        for ch in 0..c {
+            input[p * c + ch] = (p + 1 + ch) as i8;
+        }
+    }
+    // Same clipped windows as the conv test, per channel: the spatial
+    // part sums (12, 9, 15, 9) and each summed tap contributes +ch, so
+    // pixel sums gain (4, 2, 2, 1)·ch respectively.
+    let mut want = vec![0i8; 2 * 2 * c];
+    let spatial: [(usize, usize); 4] = [(12, 4), (9, 2), (15, 2), (9, 1)];
+    for (px, &(base, taps)) in spatial.iter().enumerate() {
+        for ch in 0..c {
+            want[px * c + ch] = (base + taps * ch) as i8;
+        }
+    }
+    assert_eq!(run_once(&model, &input, 64), want, "reference diverges from TFLite SAME");
+    assert_eq!(run_once_optimized(&model, &input, 64), want, "packed diverges from TFLite SAME");
+}
+
+/// Regression for the negative-VALID-extent bug: a filter larger than
+/// the input under VALID padding used to produce a negative computed
+/// output size that flowed into shape math; prepare must reject the
+/// model instead (for both kernel families).
+#[test]
+fn valid_filter_exceeding_input_fails_prepare() {
+    let mut b = ModelBuilder::new("oversized-valid");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 2, 2, 1], None, unit_q());
+    let w: Vec<u8> = vec![1u8; 5 * 5];
+    let wbuf = b.add_buffer(&w);
+    let t_w = b.add_quant_tensor("w", DType::I8, &[1, 5, 5, 1], Some(wbuf), unit_q());
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 1, 1, 1], None, unit_q());
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w, -1],
+        &[t_out],
+        conv_options(Padding::Valid, Activation::None, (1, 1), (1, 1), None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let model = Model::from_bytes(&b.finish()).unwrap();
+
+    for resolver in [OpResolver::with_reference_ops(), OpResolver::with_optimized_ops()] {
+        let mut arena = Arena::new(64 * 1024);
+        let err = MicroInterpreter::new(&model, &resolver, &mut arena)
+            .err()
+            .expect("oversized VALID filter must fail prepare");
+        let msg = err.to_string();
+        assert!(msg.contains("exceeds input"), "unexpected error: {msg}");
+    }
+}
