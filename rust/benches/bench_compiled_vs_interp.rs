@@ -49,9 +49,17 @@ fn main() {
         interp_stats.median, overhead.overhead, overhead.overhead_pct
     );
 
-    // Compiled f32 via PJRT.
+    // Compiled f32 via PJRT. The simulated backend cannot execute
+    // whole-model f32 graphs, so this half degrades to a clean skip
+    // there (a real PJRT client runs it).
     let rt = XlaRuntime::cpu().expect("PJRT");
-    let exe = rt.load_hlo_text("artifacts/hotword_f32.hlo.txt").expect("compile");
+    let exe = match rt.load_hlo_text("artifacts/hotword_f32.hlo.txt") {
+        Ok(exe) => exe,
+        Err(e) => {
+            eprintln!("SKIP compiled half: {e}");
+            return;
+        }
+    };
     let mut rngf = Rng::seeded(3);
     let x: Vec<f32> = (0..392).map(|_| rngf.range_f32(-1.0, 1.0)).collect();
     let compiled_stats = bench.run(|| {

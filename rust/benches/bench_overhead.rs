@@ -11,6 +11,7 @@
 //! and ~7.7x on the DSP for VWW; overhead < 0.1 % for VWW, ~3-4 % for
 //! Hotword.
 
+use std::time::{Duration, Instant};
 use tfmicro::arena::Arena;
 use tfmicro::interpreter::MicroInterpreter;
 use tfmicro::ops::{KernelFlavor, OpResolver};
@@ -113,6 +114,87 @@ fn main() {
                 rep.total,
                 rep.calculation,
                 overhead_str(rep.overhead_pct)
+            );
+        }
+    }
+
+    // Cold vs warm: where the one-time costs land. `init` is the full
+    // prepare → plan → populate sequence (packed weights, side tables,
+    // and — for the xla row — HLO compile + literal upload + warm-up);
+    // `first invoke` is the first post-init inference. With a healthy
+    // populate pass first/steady stays ~1.0x: a ratio creeping upward
+    // means one-time work slid back onto the inference path.
+    println!("\n== Cold vs warm first invoke (populate-pass placement) ==");
+    println!(
+        "{:<24} {:>12} {:>14} {:>14} {:>14}",
+        "Model", "init", "first invoke", "steady median", "first/steady"
+    );
+    let fc_artifact = std::path::Path::new("artifacts/fc_int8.hlo.txt");
+    for name in models {
+        let Some(model) = load(name) else { continue };
+        let mut rows: Vec<(String, OpResolver)> = vec![
+            ("reference".into(), OpResolver::with_reference_ops()),
+            ("optimized".into(), OpResolver::with_optimized_ops()),
+        ];
+        // The vendor-kernel row: hotword's fc1 is the artifact's shape.
+        // `load()` no longer compiles (that moved to populate), so
+        // pre-flight the artifact here and skip the row on a corrupt or
+        // reshaped file instead of aborting the whole bench later.
+        if name == "hotword" && fc_artifact.exists() {
+            let compiles = tfmicro::runtime::XlaRuntime::cpu()
+                .and_then(|rt| rt.load_hlo_text(fc_artifact))
+                .map(|exe| exe.fc_contract() == Some((1, 392, 32)));
+            match compiles {
+                Ok(true) => {
+                    let k = tfmicro::runtime::XlaFcKernel::load(fc_artifact, (1, 392, 32))
+                        .expect("artifact exists and compiles");
+                    let mut r = OpResolver::with_optimized_ops();
+                    r.register(
+                        tfmicro::schema::BuiltinOp::FullyConnected,
+                        std::sync::Arc::new(k),
+                    )
+                    .unwrap();
+                    rows.push(("opt+xla-fc".into(), r));
+                }
+                Ok(false) => eprintln!("SKIP opt+xla-fc row: artifact is not the (1,392,32) contract"),
+                Err(e) => eprintln!("SKIP opt+xla-fc row: {e}"),
+            }
+        }
+        for (label, resolver) in &rows {
+            let mut arena = Arena::new(512 * 1024);
+            let t0 = Instant::now();
+            let mut interp = match MicroInterpreter::new(&model, resolver, &mut arena) {
+                Ok(i) => i,
+                Err(e) => {
+                    eprintln!("SKIP {name} {label}: init failed: {e}");
+                    continue;
+                }
+            };
+            let init = t0.elapsed();
+            let mut rng = Rng::seeded(1);
+            {
+                let mut inp = interp.input_mut(0).unwrap();
+                rng.fill_i8(inp.as_i8_mut().unwrap());
+            }
+            let t1 = Instant::now();
+            interp.invoke().unwrap();
+            let first = t1.elapsed();
+            let iters = if name == "vww" { 9 } else { 99 };
+            let mut laps: Vec<Duration> = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t = Instant::now();
+                interp.invoke().unwrap();
+                laps.push(t.elapsed());
+            }
+            laps.sort();
+            let steady = laps[laps.len() / 2];
+            println!(
+                "{:<24} {:>12.2?} {:>14.2?} {:>14.2?} {:>13.2}x",
+                format!("{name} {label}"),
+                init,
+                first,
+                steady,
+                first.as_secs_f64() / steady.as_secs_f64().max(1e-12)
             );
         }
     }

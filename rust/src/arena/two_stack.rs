@@ -45,7 +45,11 @@ pub struct ArenaUsage {
     /// (packed weights, folded biases) requested via
     /// `PrepareContext::request_persistent`. Reported separately so the
     /// Table-2-style accounting stays honest about what prepare-time
-    /// precomputation costs.
+    /// precomputation costs. At the interpreter level this line (and the
+    /// persistent/total lines) additionally includes off-arena bytes
+    /// accelerated kernels charge via
+    /// `PrepareContext::charge_kernel_external` (XLA staged literals),
+    /// so the report is the true init-time footprint.
     pub kernel_buffers: usize,
     /// Bytes allocated with function lifetime (head high watermark).
     pub nonpersistent: usize,

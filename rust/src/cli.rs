@@ -309,6 +309,14 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             let report = run_closed_loop(&model, &resolver, cfg, requests, out_len)?;
             println!("{}", report.summary());
             println!("per-worker: {:?}", report.per_worker);
+            println!(
+                "cold start (first-request latency per worker): {:?}",
+                report
+                    .cold_start_ns
+                    .iter()
+                    .map(|&ns| std::time::Duration::from_nanos(ns))
+                    .collect::<Vec<_>>()
+            );
         }
         other => {
             return Err(Error::Serving(format!("unknown command '{other}'\n{USAGE}")));

@@ -12,8 +12,12 @@
 //!    intermediate tensor, kernel persistent buffers are carved from the
 //!    arena tail, the arena is sealed — no allocation can happen
 //!    afterwards — and finally each kernel's `populate` runs once to fill
-//!    its persistent buffers (repacked weights, folded biases) so that
-//!    model-constant work never executes on the inference path,
+//!    its persistent buffers (repacked weights, folded biases, backend
+//!    side tables) and to finish vendor/accelerated-kernel staging (the
+//!    XLA/PJRT kernel compiles its executable, uploads weight/bias
+//!    literals, and runs one warm-up execution here), so that neither
+//!    model-constant work nor compilation ever executes on the inference
+//!    path,
 //! 4. per inference: populate input views, call [`MicroInterpreter::invoke`]
 //!    (a simple blocking loop over the topologically sorted op list), read
 //!    output views.
@@ -198,6 +202,9 @@ pub struct MicroInterpreter<'m, 'a> {
     op_persistent: Vec<Vec<(usize, usize)>>,
     usage: ArenaUsage,
     detail: ArenaUsageDetail,
+    /// Kernel-held bytes outside the arena (XLA/vendor staged buffers),
+    /// folded into the `ArenaUsage` persistent/kernel_buffers totals.
+    external_kernel: usize,
     invocations: u64,
 }
 
@@ -209,6 +216,27 @@ impl<'m, 'a> std::fmt::Debug for MicroInterpreter<'m, 'a> {
             .field("usage", &self.usage)
             .field("invocations", &self.invocations)
             .finish()
+    }
+}
+
+impl<'m, 'a> Drop for MicroInterpreter<'m, 'a> {
+    fn drop(&mut self) {
+        // The populate pass may have registered backend side-table
+        // entries (the AVX-VNNI compensation cache) keyed by persistent
+        // packed-buffer addresses inside this arena. Arena storage is
+        // routinely reused for the next interpreter build, so evict them
+        // before the addresses can be recycled under different weights.
+        // Eviction is per persistent buffer — not the whole backing range
+        // — so co-tenants of a SharedArena keep their own entries.
+        let base = self.backing.base_ptr() as usize;
+        for bufs in &self.op_persistent {
+            for &(off, len) in bufs {
+                crate::ops::opt_ops::gemm::invalidate_compensation_range(
+                    (base + off) as *const u8,
+                    len,
+                );
+            }
+        }
     }
 }
 
@@ -319,6 +347,9 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         let mut scratch_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
         let mut persistent_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
         let mut persistent_opdata = 0usize;
+        // Kernel-held bytes living outside the arena (XLA/vendor staged
+        // buffers), charged via PrepareContext::charge_kernel_external.
+        let mut external_kernel = 0usize;
         for (i, op) in model.operators().iter().enumerate() {
             let mut sizes = Vec::new();
             let mut psizes = Vec::new();
@@ -330,6 +361,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                 &mut psizes,
                 &mut op_data[i],
                 &mut persistent_opdata,
+                &mut external_kernel,
             );
             kernels[i].prepare(&mut ctx)?;
             scratch_sizes_per_op.push(sizes);
@@ -337,6 +369,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         }
         backing.alloc_tail(persistent_opdata, DEFAULT_ALIGN)?;
         detail.op_data = persistent_opdata;
+        detail.kernel_buffers += external_kernel;
 
         // --- kernel persistent buffers (tail, interpreter lifetime) -----
         // Allocated before planning so the head/tail crossing check sees
@@ -434,7 +467,23 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                     &op_persistent[i],
                     &op_data[i],
                 );
-                kernels[i].populate(&ctx)?;
+                if let Err(e) = kernels[i].populate(&ctx) {
+                    // Earlier ops may already have registered backend
+                    // side-table entries keyed into this arena; evict them
+                    // (per persistent buffer, sparing SharedArena
+                    // co-tenants) before handing the storage back on the
+                    // error path — no interpreter is constructed, so Drop
+                    // won't run.
+                    for bufs in &op_persistent {
+                        for &(off, blen) in bufs {
+                            crate::ops::opt_ops::gemm::invalidate_compensation_range(
+                                (base as usize + off) as *const u8,
+                                blen,
+                            );
+                        }
+                    }
+                    return Err(e);
+                }
             }
         }
 
@@ -459,6 +508,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
             op_persistent,
             usage,
             detail,
+            external_kernel,
             invocations: 0,
         };
         // Variables start at their zero representation.
@@ -608,11 +658,21 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
     // --- introspection ----------------------------------------------------
 
     /// Arena accounting (Table 2's persistent/non-persistent/total).
+    ///
+    /// Includes kernel-held bytes living *outside* the arena (XLA/vendor
+    /// staged buffers charged via
+    /// [`crate::ops::PrepareContext::charge_kernel_external`]) in the
+    /// `persistent`/`kernel_buffers`/`total` lines, so the report is the
+    /// true init-time footprint rather than just the arena carve-up.
     pub fn arena_usage(&self) -> ArenaUsage {
-        match &self.backing {
+        let mut u = match &self.backing {
             Backing::Exclusive { alloc, .. } => alloc.usage(),
             Backing::Shared { .. } => self.usage,
-        }
+        };
+        u.persistent += self.external_kernel;
+        u.kernel_buffers += self.external_kernel;
+        u.total += self.external_kernel;
+        u
     }
 
     /// Per-category arena breakdown (the RecordingMicroAllocator view).

@@ -19,10 +19,20 @@
 //!    through the same [`OpContext`] it will see at invoke time. This is
 //!    where model-constant work is hoisted out of the inference path
 //!    (the CMSIS-NN "kernel sums" trick, §4.7–§4.8): anything derivable
-//!    from weights + quantization params is computed exactly once.
+//!    from weights + quantization params is computed exactly once. The
+//!    stage covers **vendor/accelerated kernels too**: the XLA/PJRT FC
+//!    kernel ([`crate::runtime::XlaFcKernel`]) compiles its HLO artifact,
+//!    stages weight/bias/requant literals, and runs one warm-up execution
+//!    here, and SIMD backends build their populate-time side tables (the
+//!    AVX-VNNI `-128·Σf` compensation cache) — so no first-invoke ever
+//!    pays compilation, upload, or precompute cost. Off-arena bytes such
+//!    kernels hold are charged via
+//!    [`PrepareContext::charge_kernel_external`].
 //! 4. **invoke** — called on every inference. Pure computation over
-//!    tensor views; no allocation (the arena is sealed by then), and no
-//!    recomputation of model-constant values.
+//!    tensor views; no allocation (the arena is sealed by then), no
+//!    recomputation of model-constant values, and — for accelerated
+//!    kernels — no compilation or weight upload: input transfer +
+//!    execute only.
 //!
 //! The boundary is intentionally narrow — the kernel sees only
 //! [`PrepareContext`] / [`OpContext`], never interpreter internals —
@@ -167,10 +177,12 @@ pub struct PrepareContext<'m, 'i> {
     persistent_sizes: &'i mut Vec<usize>,
     op_data: &'i mut OpData,
     persistent_bytes: &'i mut usize,
+    external_bytes: &'i mut usize,
 }
 
 impl<'m, 'i> PrepareContext<'m, 'i> {
     /// Construct (interpreter-internal, but public for kernel unit tests).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         op_index: usize,
         operator: &'m Operator,
@@ -179,6 +191,7 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
         persistent_sizes: &'i mut Vec<usize>,
         op_data: &'i mut OpData,
         persistent_bytes: &'i mut usize,
+        external_bytes: &'i mut usize,
     ) -> Self {
         PrepareContext {
             op_index,
@@ -188,6 +201,7 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
             persistent_sizes,
             op_data,
             persistent_bytes,
+            external_bytes,
         }
     }
 
@@ -259,6 +273,19 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
     pub fn request_persistent(&mut self, bytes: usize) -> PersistentHandle {
         self.persistent_sizes.push(bytes);
         PersistentHandle(self.persistent_sizes.len() - 1)
+    }
+
+    /// Charge `bytes` of kernel-held storage that lives **outside** the
+    /// arena — host/device buffers owned by a vendor or XLA/PJRT-backed
+    /// kernel (staged weight literals, compiled-executable I/O buffers).
+    ///
+    /// The interpreter folds the charge into
+    /// [`crate::arena::ArenaUsage::kernel_buffers`] (and the persistent
+    /// total) so `tfmicro mem` and `arena_usage_detail` report the true
+    /// init-time memory footprint even when an accelerated kernel keeps
+    /// its staged state off-arena.
+    pub fn charge_kernel_external(&mut self, bytes: usize) {
+        *self.external_bytes += bytes;
     }
 
     /// Store prepared per-op state; charged to the persistent section.
@@ -367,6 +394,14 @@ impl<'r> OpContext<'r> {
     /// True if optional input `i` is present.
     pub fn has_input(&self, i: usize) -> bool {
         self.operator.inputs.get(i).map(|&t| t != -1).unwrap_or(false)
+    }
+
+    /// True if input `i` is a model constant — the populate-pass
+    /// precondition for staging weights into kernel-held buffers.
+    pub fn input_is_const(&self, i: usize) -> bool {
+        self.tensor_idx(&self.operator.inputs, i, "input")
+            .map(|t| matches!(self.locs[t], DataLoc::Const { .. }))
+            .unwrap_or(false)
     }
 
     fn tensor_idx(&self, list: &[i32], i: usize, what: &str) -> Result<usize> {

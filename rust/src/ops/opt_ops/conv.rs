@@ -259,6 +259,9 @@ impl Kernel for OptConvKernel {
         }
         let packed = crate::ops::cast_i8_mut(ctx.persistent_bytes(fh)?);
         gemm::pack_filter(filter, out_c, k, packed);
+        // VNNI-owned side table (kept out of the shared fused-bias buffer
+        // so ForceDispatch can still flip tiers over this model state).
+        gemm::cache_packed_compensation(packed, out_c, k);
         let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
         gemm::fold_bias(filter, out_c, k, data.input_offset, bias, fused);
         Ok(())

@@ -142,6 +142,9 @@ impl Kernel for OptFullyConnectedKernel {
         }
         let packed = crate::ops::cast_i8_mut(ctx.persistent_bytes(fh)?);
         gemm::pack_filter(filter, out_dim, in_dim, packed);
+        // VNNI-owned side table (kept out of the shared fused-bias buffer
+        // so ForceDispatch can still flip tiers over this model state).
+        gemm::cache_packed_compensation(packed, out_dim, in_dim);
         let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
         gemm::fold_bias(filter, out_dim, in_dim, data.input_offset, bias, fused);
         Ok(())

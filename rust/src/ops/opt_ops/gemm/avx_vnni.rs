@@ -90,6 +90,31 @@ impl DotKernel for VnniDot {
         }
     }
 
+    /// Persistent packed buffers get their compensation cached once at
+    /// populate time ([`super::cache_packed_compensation`]); a hit here
+    /// removes the second weight stream from rows=1 FC calls entirely.
+    #[inline(always)]
+    fn call_table(packed: &[i8]) -> Option<super::CompTable> {
+        super::vnni_comp_lookup(packed)
+    }
+
+    #[inline(always)]
+    fn block_ctx_cached(
+        fblk: &[i8],
+        k: usize,
+        table: Option<(&super::CompTable, usize)>,
+    ) -> [i32; OC_BLOCK] {
+        if let Some((t, blk)) = table {
+            // The cached entries are block_ctx outputs stored
+            // OC_BLOCK-per-block at populate time — bit-identical to the
+            // recompute below by construction.
+            if let Some(c) = t.get(blk * OC_BLOCK..(blk + 1) * OC_BLOCK) {
+                return [c[0], c[1], c[2], c[3]];
+            }
+        }
+        Self::block_ctx(fblk, k)
+    }
+
     #[inline(always)]
     fn dot2(
         x0: &[i8],

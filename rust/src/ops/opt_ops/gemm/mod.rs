@@ -92,7 +92,7 @@ mod sdot;
 use crate::ops::common::ChannelQuant;
 use crate::tensor::QuantizedMultiplier;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 /// Output channels per packed block (accumulator columns).
 pub const OC_BLOCK: usize = 4;
@@ -432,6 +432,120 @@ impl Drop for ForceDispatch {
 }
 
 // ---------------------------------------------------------------------------
+// Populate-time backend side tables
+// ---------------------------------------------------------------------------
+
+/// Shared handle to one packed buffer's cached per-block backend state
+/// (currently only the AVX-VNNI `-128·Σf` compensation entries,
+/// [`OC_BLOCK`] i32 values per packed block).
+pub(crate) type CompTable = Arc<[i32]>;
+
+/// The AVX-VNNI compensation cache: populate-time `-128·Σf` entries per
+/// *persistent* packed buffer, keyed by the buffer's (address, length).
+///
+/// This table is **owned by the VNNI tier** and deliberately kept out of
+/// the shared fused-bias buffer: the prepare-time persistent buffers stay
+/// backend-agnostic, so [`ForceDispatch`] can still flip tiers over
+/// identical model state — a backend that does not consult the table
+/// simply never sees it. A lookup miss (transient packed buffers, or a
+/// populate pass that predates the cache) falls back to the per-call
+/// [`DotKernel::block_ctx`] computation, so the table is purely a
+/// populate-pass perf hoist, never a correctness dependency.
+#[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+mod vnni_table {
+    use super::CompTable;
+    use std::collections::HashMap;
+    use std::sync::{OnceLock, RwLock};
+
+    static TABLE: OnceLock<RwLock<HashMap<(usize, usize), CompTable>>> = OnceLock::new();
+
+    fn table() -> &'static RwLock<HashMap<(usize, usize), CompTable>> {
+        TABLE.get_or_init(|| RwLock::new(HashMap::new()))
+    }
+
+    pub(super) fn insert(key: (usize, usize), comps: CompTable) {
+        table().write().unwrap_or_else(|p| p.into_inner()).insert(key, comps);
+    }
+
+    pub(super) fn lookup(key: (usize, usize)) -> Option<CompTable> {
+        table().read().unwrap_or_else(|p| p.into_inner()).get(&key).cloned()
+    }
+
+    pub(super) fn invalidate_range(base: usize, len: usize) {
+        table()
+            .write()
+            .unwrap_or_else(|p| p.into_inner())
+            .retain(|&(addr, _), _| addr < base || addr >= base.saturating_add(len));
+    }
+
+    pub(super) fn entries() -> usize {
+        table().read().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+/// Per-call lookup for the VNNI dot core: cached compensation for this
+/// packed buffer, if the populate pass registered one.
+#[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+pub(crate) fn vnni_comp_lookup(packed: &[i8]) -> Option<CompTable> {
+    vnni_table::lookup((packed.as_ptr() as usize, packed.len()))
+}
+
+/// Populate-pass hook: precompute and cache the AVX-VNNI `-128·Σf`
+/// operand-offset compensation for a **persistent** packed buffer
+/// (output of [`pack_filter`] living in the arena tail), so a rows=1 FC
+/// invoke on the VNNI tier no longer streams the packed weights twice.
+///
+/// No-op unless the VNNI tier is compiled in (`tfmicro_dotprod_tiers`)
+/// and available on this CPU. Callers that drop the underlying storage
+/// must invalidate via [`invalidate_compensation_range`] — the
+/// interpreter does this for its arena on drop.
+pub fn cache_packed_compensation(packed: &[i8], out_c: usize, k: usize) {
+    #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+    {
+        if GemmBackend::AvxVnni.available() {
+            let blocks = out_c.div_ceil(OC_BLOCK);
+            debug_assert!(packed.len() >= blocks * OC_BLOCK * k);
+            let mut comps = Vec::with_capacity(blocks * OC_BLOCK);
+            for blk in 0..blocks {
+                let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+                comps.extend_from_slice(&<avx_vnni::VnniDot as DotKernel>::block_ctx(fblk, k));
+            }
+            vnni_table::insert((packed.as_ptr() as usize, packed.len()), comps.into());
+        }
+    }
+    #[cfg(not(all(target_arch = "x86_64", tfmicro_dotprod_tiers)))]
+    {
+        let _ = (packed, out_c, k);
+    }
+}
+
+/// Drop every cached compensation entry whose packed buffer lives inside
+/// `[base, base+len)`. Called by the interpreter's drop for its arena:
+/// arena storage is reused across interpreter builds, so entries must
+/// not outlive the packed bytes they were computed from.
+pub fn invalidate_compensation_range(base: *const u8, len: usize) {
+    #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+    vnni_table::invalidate_range(base as usize, len);
+    #[cfg(not(all(target_arch = "x86_64", tfmicro_dotprod_tiers)))]
+    {
+        let _ = (base, len);
+    }
+}
+
+/// Number of live compensation-cache entries (tests/introspection);
+/// always 0 when the VNNI tier is compiled out.
+pub fn compensation_cache_entries() -> usize {
+    #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+    {
+        vnni_table::entries()
+    }
+    #[cfg(not(all(target_arch = "x86_64", tfmicro_dotprod_tiers)))]
+    {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The dispatch front + shared body
 // ---------------------------------------------------------------------------
 
@@ -454,6 +568,29 @@ pub(crate) trait DotKernel {
     type BlockCtx: Copy;
     /// Compute the per-block state for `fblk` (layout contract above).
     fn block_ctx(fblk: &[i8], k: usize) -> Self::BlockCtx;
+    /// Per-call side-table lookup, consulted **once** per GEMM call by
+    /// [`gemm_body`] before the block loop. Backends without a
+    /// populate-time cache keep the `None` default (zero lookup cost);
+    /// the VNNI tier returns its cached compensation entries for
+    /// persistent packed buffers (see [`cache_packed_compensation`]).
+    #[inline(always)]
+    fn call_table(_packed: &[i8]) -> Option<CompTable> {
+        None
+    }
+    /// [`block_ctx`](DotKernel::block_ctx) with an optional `(table,
+    /// block index)` from [`call_table`](DotKernel::call_table). The
+    /// default ignores the table and recomputes; a caching backend reads
+    /// its per-block slice instead and MUST return bit-identical values
+    /// either way (the table is a hoist, not an alternate definition).
+    #[inline(always)]
+    fn block_ctx_cached(
+        fblk: &[i8],
+        k: usize,
+        table: Option<(&CompTable, usize)>,
+    ) -> Self::BlockCtx {
+        let _ = table;
+        Self::block_ctx(fblk, k)
+    }
     /// Two rows × OC_BLOCK channels (the weight block is loaded once and
     /// feeds both rows).
     fn dot2(
@@ -525,11 +662,14 @@ fn gemm_body<D: DotKernel>(
     debug_assert!(fused_bias.len() >= out_c);
     debug_assert!(rows == 0 || out.len() >= (rows - 1) * out_stride + out_c);
 
+    // One side-table lookup per call (not per block): backends without a
+    // populate-time cache compile this to a constant None.
+    let table = D::call_table(packed);
     for blk in 0..out_c.div_ceil(OC_BLOCK) {
         let oc0 = blk * OC_BLOCK;
         let live = OC_BLOCK.min(out_c - oc0);
         let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
-        let bctx = D::block_ctx(fblk, k);
+        let bctx = D::block_ctx_cached(fblk, k, table.as_ref().map(|t| (t, blk)));
         let mut r = 0usize;
         while r + ROW_BLOCK <= rows {
             let x0 = &lhs[r * k..r * k + k];
@@ -842,6 +982,62 @@ mod tests {
         assert_eq!(GemmBackend::from_u8(0), None);
         assert_eq!(all[all.len() - 1], GemmBackend::Scalar, "scalar must be the last resort");
         assert!(GemmBackend::Scalar.available());
+    }
+
+    /// The VNNI compensation side table is a pure hoist: with and without
+    /// a cached entry the forced-VNNI output is bit-identical (and equals
+    /// the scalar body), the cached entries equal the per-call
+    /// `block_ctx` recompute, and range invalidation evicts the entry.
+    /// On machines without the VNNI tier the cache API must be an
+    /// observable no-op.
+    #[test]
+    fn compensation_side_table_is_a_pure_hoist() {
+        let _serialize = super::FORCING_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seeded(0xCAFE);
+        let case = Case::random(&mut rng);
+        let (packed, fused) = case.precompute();
+        let q = case.quant();
+        let (rows, k, out_c) = (case.rows, case.k, case.out_c);
+
+        if !GemmBackend::AvxVnni.available() {
+            cache_packed_compensation(&packed, out_c, k);
+            assert_eq!(
+                compensation_cache_entries(),
+                0,
+                "cache must stay empty without the VNNI tier"
+            );
+            return;
+        }
+
+        let mut scalar_out = vec![0i8; rows * out_c];
+        gemm_body::<scalar::ScalarDot>(
+            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c,
+        );
+
+        let guard = ForceDispatch::force(GemmBackend::AvxVnni).expect("vnni available");
+        let mut uncached = vec![0i8; rows * out_c];
+        gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut uncached, out_c);
+
+        cache_packed_compensation(&packed, out_c, k);
+        #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+        {
+            let table = vnni_comp_lookup(&packed).expect("entry registered for this buffer");
+            for blk in 0..out_c.div_ceil(OC_BLOCK) {
+                let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
+                let fresh = <avx_vnni::VnniDot as DotKernel>::block_ctx(fblk, k);
+                assert_eq!(&table[blk * OC_BLOCK..(blk + 1) * OC_BLOCK], &fresh[..]);
+            }
+        }
+        let mut cached = vec![0i8; rows * out_c];
+        gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut cached, out_c);
+        drop(guard);
+
+        assert_eq!(uncached, scalar_out, "vnni (uncached) == scalar");
+        assert_eq!(cached, scalar_out, "vnni (cached) == scalar");
+
+        invalidate_compensation_range(packed.as_ptr() as *const u8, packed.len());
+        #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+        assert!(vnni_comp_lookup(&packed).is_none(), "invalidate evicts the entry");
     }
 
     #[test]

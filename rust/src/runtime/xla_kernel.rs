@@ -4,66 +4,128 @@
 //! The kernel wraps the AOT-compiled Layer-1 Pallas int8 matmul
 //! (`artifacts/fc_int8.hlo.txt`, fixed at the hotword-fc1 shape with
 //! zero I/O offsets). It registers through the standard [`OpResolver`]
-//! like any vendor kernel: `prepare` is the shared FC validation, and
-//! `invoke` offloads to the compiled executable when the op matches the
-//! artifact's contract, falling back to the optimized Rust body otherwise
-//! — exactly how CMSIS-NN kernels bail to reference code on unsupported
-//! parameter combinations.
+//! like any vendor kernel and follows the full
+//! **prepare → plan → populate → invoke** lifecycle:
+//!
+//! * `load` — cheap: record the artifact path + contract shape (fails
+//!   fast if the file is absent). Nothing is compiled yet.
+//! * `prepare` — the shared FC validation, plus an off-arena byte charge
+//!   ([`PrepareContext::charge_kernel_external`]) for the staged buffers
+//!   this op will hold, so `ArenaUsage.kernel_buffers` reports the true
+//!   init-time footprint.
+//! * `populate` — the expensive vendor work, exactly once per
+//!   interpreter init: create the PJRT client, compile the HLO, stage
+//!   the weight/bias/multiplier/shift literals, and run **one warm-up
+//!   execution**, so the first request never pays compilation or JIT
+//!   warm-up (the §4.5–§4.8 allocation-free/deterministic-invoke
+//!   argument extended to vendor kernels).
+//! * `invoke` — input transfer + execute + copy out. **No compile or
+//!   upload path exists in this function**; the lifecycle tests pin that
+//!   with [`super::op_counters`] deltas. The transfer itself allocates
+//!   inside the backend (as a real PJRT host→device copy does) — that is
+//!   vendor-boundary cost outside the arena discipline, not interpreter
+//!   allocation; see ROADMAP for the reusable-staging-buffer follow-up.
+//!
+//! When the op does not match the artifact's contract (shape mismatch,
+//! nonzero zero points, narrowed activation clamp) the kernel falls back
+//! to the optimized Rust body — exactly how CMSIS-NN kernels bail to
+//! reference code on unsupported parameter combinations.
 //!
 //! The requantization multiplier/shift/bias are *runtime inputs* of the
 //! compiled computation, so one artifact serves any quantization
 //! parameters at that shape.
+//!
+//! [`OpResolver`]: crate::ops::OpResolver
+//! [`PrepareContext::charge_kernel_external`]: crate::ops::PrepareContext::charge_kernel_external
 
-use super::{CompiledComputation, XlaRuntime};
-use crate::error::{Error, Result};
+use super::{CompiledComputation, StagedBuffer, XlaRuntime};
+use crate::error::Result;
 use crate::ops::opt_ops::fully_connected_i8_blocked;
 use crate::ops::ref_ops::fully_connected::{fully_connected_f32, prepare_fc, FcQuant};
 use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
 use crate::tensor::DType;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::RwLock;
+
+/// Everything populate stages for the offload path; invoke only reads it.
+struct XlaFcState {
+    /// Kept alive alongside the executable.
+    _runtime: XlaRuntime,
+    exe: CompiledComputation,
+    weights: StagedBuffer,
+    bias: StagedBuffer,
+    mult: StagedBuffer,
+    shift: StagedBuffer,
+    /// Identity of the const weight tensor this state was staged from
+    /// (model-data address + length) — a fast invoke-time filter only.
+    /// Addresses can be recycled across model loads, so populate never
+    /// trusts it alone: state is reused only after verifying the staged
+    /// *contents* against the model's host data, and rebuilt otherwise.
+    weights_src: (usize, usize),
+}
 
 /// FullyConnected kernel backed by an AOT XLA executable.
 ///
-/// Owns its own PJRT client + executable, all accessed under one mutex.
+/// All staged state lives behind one `RwLock` — written by the populate
+/// pass, read-shared at invoke time so concurrent serving workers
+/// offload in parallel. State is held **per op index**, so a
+/// model with several offloadable FC ops at the contract shape stages
+/// each op's weights independently (and prepare's per-op byte charge
+/// matches what is actually held). Sharing one instance across *models*
+/// is still last-populate-wins per op index: the loser's invoke detects
+/// the weight mismatch and takes the Rust fallback (correct, just not
+/// offloaded) — register one instance per model to offload both.
 pub struct XlaFcKernel {
-    // Runtime kept alive alongside the executable (the executable holds an
-    // Rc into the client); both confined behind the Mutex.
-    inner: std::sync::Mutex<(XlaRuntime, CompiledComputation)>,
+    path: PathBuf,
     /// The artifact's fixed (batch, in_dim, out_dim).
     shape: (usize, usize, usize),
+    state: RwLock<HashMap<usize, XlaFcState>>,
 }
 
-// SAFETY: the xla crate's types are !Send/!Sync only because of raw
-// pointers and an internal Rc shared between client and executable. Both
-// halves of that Rc are owned by `inner` and every touch (execute,
-// literal transfer, drop) happens under the Mutex, so the Rc counts and
-// the underlying PJRT objects are never accessed concurrently. The PJRT C
-// API itself is thread-compatible under external synchronization.
-unsafe impl Send for XlaFcKernel {}
-unsafe impl Sync for XlaFcKernel {}
-
 impl XlaFcKernel {
-    /// Load the artifact and build the kernel (creates a private PJRT CPU
-    /// client). `shape` must match what
-    /// `python/compile/aot.py::emit_fc_int8_kernel` baked in.
-    pub fn load(
-        path: impl AsRef<std::path::Path>,
-        shape: (usize, usize, usize),
-    ) -> Result<Self> {
-        let runtime = XlaRuntime::cpu()?;
-        let exe = runtime.load_hlo_text(path)?;
-        Ok(XlaFcKernel { inner: std::sync::Mutex::new((runtime, exe)), shape })
+    /// Record the artifact path and contract shape (`shape` must match
+    /// what `python/compile/aot.py::emit_fc_int8_kernel` baked in).
+    /// Cheap by design: compilation, staging, and warm-up happen in
+    /// [`Kernel::populate`] at interpreter init, not here and not on the
+    /// first invoke.
+    pub fn load(path: impl Into<PathBuf>, shape: (usize, usize, usize)) -> Result<Self> {
+        let path = path.into();
+        if !path.exists() {
+            return Err(crate::error::Error::Xla(format!(
+                "artifact {} not found (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        Ok(XlaFcKernel { path, shape, state: RwLock::new(HashMap::new()) })
     }
 
     /// True if this op instance can be offloaded: shape matches and the
     /// zero points are 0 (the artifact bakes in_offset = out_offset = 0)
     /// and no fused activation narrows the clamp.
-    fn offloadable(&self, batch: usize, in_dim: usize, out_dim: usize, d: &crate::ops::common::FcData) -> bool {
+    fn offloadable(
+        &self,
+        batch: usize,
+        in_dim: usize,
+        out_dim: usize,
+        d: &crate::ops::common::FcData,
+    ) -> bool {
         (batch, in_dim, out_dim) == self.shape
             && d.input_offset == 0
             && d.output_offset == 0
             && d.filter_offset == 0
             && d.act_min == i8::MIN as i32
             && d.act_max == i8::MAX as i32
+    }
+
+    /// Off-arena bytes the staged state holds for one op with
+    /// interpreter lifetime: weights + bias/mult/shift tables. The
+    /// per-invoke input literal and output vec are transient (created
+    /// and dropped inside each invoke) and deliberately not charged —
+    /// `ArenaUsage.persistent` reports held bytes only.
+    fn staged_bytes(&self) -> usize {
+        let (_m, k, n) = self.shape;
+        n * k + 3 * n * std::mem::size_of::<i32>()
     }
 }
 
@@ -73,7 +135,107 @@ impl Kernel for XlaFcKernel {
     }
 
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
-        prepare_fc(ctx)
+        prepare_fc(ctx)?;
+        let input = ctx.input(0)?;
+        if input.dtype != DType::I8 {
+            return Ok(());
+        }
+        let (batch, in_dim) = input.shape.as_matrix();
+        let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
+        let const_weights = ctx.weights_are_const();
+        let offload = matches!(ctx.op_data_mut(),
+            OpData::FullyConnected(d) if self.offloadable(batch, in_dim, out_dim, d));
+        if offload && const_weights {
+            let bytes = self.staged_bytes();
+            ctx.charge_kernel_external(bytes);
+        }
+        Ok(())
+    }
+
+    /// The vendor init step: compile + stage + warm-up. See module docs.
+    fn populate(&self, ctx: &OpContext) -> Result<()> {
+        let OpData::FullyConnected(d) = ctx.op_data() else {
+            return Ok(());
+        };
+        if ctx.input(0)?.dtype != DType::I8 {
+            return Ok(());
+        }
+        let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
+        let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
+        if !self.offloadable(batch, in_dim, out_dim, d) {
+            return Ok(()); // invoke uses the Rust fallback body
+        }
+        // Staging requires init-time weight access: non-constant weights
+        // (or bias) keep the Rust fallback at invoke time.
+        if !ctx.input_is_const(1) || (ctx.has_input(2) && !ctx.input_is_const(2)) {
+            return Ok(());
+        }
+        let (m, k, n) = self.shape;
+        let w = ctx.input_i8(1)?;
+        let w_src = (w.as_ptr() as usize, w.len());
+        let bias_host: Vec<i32> =
+            if ctx.has_input(2) { ctx.input_i32(2)?.to_vec() } else { vec![0; n] };
+        let mult_host = vec![d.mult.multiplier; n];
+        let shift_host = vec![d.mult.shift; n];
+
+        let mut guard = self.state.write().map_err(|_| ctx.fail_init("xla kernel poisoned"))?;
+        // Re-populate (interpreter rebuilt, or another worker's init over
+        // the same model): reuse this op's staged state only after
+        // verifying its *contents* — pointer identity alone is unsound,
+        // since a dropped model's buffer address can be recycled by a
+        // different model of the same size. On any mismatch, rebuild below.
+        let reusable = guard.get(&ctx.op_index).is_some_and(|st| {
+            st.weights.i8_data() == Some(w)
+                && st.bias.i32_data() == Some(&bias_host[..])
+                && st.mult.i32_data() == Some(&mult_host[..])
+                && st.shift.i32_data() == Some(&shift_host[..])
+        });
+        if reusable {
+            // Same contents, possibly at a new address (model reloaded):
+            // refresh the invoke-time filter without re-staging.
+            guard.get_mut(&ctx.op_index).expect("verified Some above").weights_src = w_src;
+            return Ok(());
+        }
+
+        let runtime = XlaRuntime::cpu()?;
+        let exe = runtime
+            .load_hlo_text(&self.path)
+            .map_err(|e| ctx.fail_init(format!("xla compile failed: {e}")))?;
+        if exe.fc_contract() != Some(self.shape) {
+            return Err(ctx.fail_init(format!(
+                "artifact {} contract {:?} != declared shape {:?}",
+                self.path.display(),
+                exe.fc_contract(),
+                self.shape
+            )));
+        }
+        let stage = |r: Result<StagedBuffer>| r.map_err(|e| ctx.fail_init(format!("xla upload failed: {e}")));
+        let weights = stage(exe.stage_i8(w, &[n, k]))?;
+        let bias = stage(exe.stage_i32(&bias_host, &[n]))?;
+        let mult = stage(exe.stage_i32(&mult_host, &[n]))?;
+        let shift = stage(exe.stage_i32(&shift_host, &[n]))?;
+
+        // Warm-up: one execution with a zero input (0 is the input zero
+        // point for every offloadable op), so first-request latency sees
+        // a fully warm executable.
+        let zero = vec![0i8; m * k];
+        let warm_in = stage(exe.stage_i8(&zero, &[m, k]))?;
+        exe.execute_i8(&[&warm_in, &weights, &bias, &mult, &shift])
+            .map_err(|e| ctx.fail_init(format!("xla warm-up failed: {e}")))?;
+
+        guard.insert(
+            ctx.op_index,
+            XlaFcState {
+                _runtime: runtime,
+                exe,
+                weights,
+                bias,
+                mult,
+                shift,
+                weights_src: w_src,
+            },
+        );
+        Ok(())
     }
 
     fn invoke(&self, ctx: &OpContext) -> Result<()> {
@@ -83,37 +245,49 @@ impl Kernel for XlaFcKernel {
         let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
         let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
         match ctx.input(0)?.dtype {
-            DType::I8 if self.offloadable(batch, in_dim, out_dim, d) => {
-                let (m, k, n) = self.shape;
-                let a = ctx.input_i8(0)?;
-                let w = ctx.input_i8(1)?;
-                let bias: Vec<i32> = if ctx.has_input(2) {
-                    ctx.input_i32(2)?.to_vec()
-                } else {
-                    vec![0; n]
-                };
-                let mult = vec![d.mult.multiplier; n];
-                let shift = vec![d.mult.shift; n];
-                let out = {
-                    let guard = self.inner.lock().map_err(|_| ctx.fail("xla kernel poisoned"))?;
-                    guard
-                        .1
-                        .run_i8_matmul(a, &[m, k], w, &[n, k], &bias, &mult, &shift)
-                        .map_err(|e| ctx.fail(format!("xla offload failed: {e}")))?
-                };
-                let output = ctx.output_i8(0)?;
-                if out.len() != output.len() {
-                    return Err(ctx.fail(format!(
-                        "xla returned {} elements, expected {}",
-                        out.len(),
-                        output.len()
-                    )));
-                }
-                output.copy_from_slice(&out);
-                Ok(())
-            }
             DType::I8 => {
-                // Unsupported parameter combination: vendor fallback.
+                if self.offloadable(batch, in_dim, out_dim, d) {
+                    let (m, k, _n) = self.shape;
+                    let a = ctx.input_i8(0)?;
+                    let w = ctx.input_i8(1)?;
+                    // Read lock: staged state is read-only at invoke, so
+                    // concurrent serving workers offload in parallel.
+                    let guard =
+                        self.state.read().map_err(|_| ctx.fail("xla kernel poisoned"))?;
+                    // State is staged by populate at init; absent state
+                    // (non-const weights, or the kernel driven outside the
+                    // interpreter lifecycle) or a weight-identity mismatch
+                    // means this op cannot use the staged buffers — take
+                    // the Rust fallback below rather than re-uploading:
+                    // invoke has no upload path by design.
+                    let staged = guard
+                        .get(&ctx.op_index)
+                        .filter(|st| st.weights_src == (w.as_ptr() as usize, w.len()));
+                    if let Some(st) = staged {
+                        // Input transfer + execute — the whole invoke path.
+                        let input = st
+                            .exe
+                            .stage_i8(a, &[m, k])
+                            .map_err(|e| ctx.fail(format!("xla input transfer failed: {e}")))?;
+                        let out = st
+                            .exe
+                            .execute_i8(&[&input, &st.weights, &st.bias, &st.mult, &st.shift])
+                            .map_err(|e| ctx.fail(format!("xla offload failed: {e}")))?;
+                        drop(guard);
+                        let output = ctx.output_i8(0)?;
+                        if out.len() != output.len() {
+                            return Err(ctx.fail(format!(
+                                "xla returned {} elements, expected {}",
+                                out.len(),
+                                output.len()
+                            )));
+                        }
+                        output.copy_from_slice(&out);
+                        return Ok(());
+                    }
+                }
+                // Unsupported parameter combination (or nothing staged):
+                // vendor fallback.
                 let q = FcQuant {
                     input_offset: d.input_offset,
                     filter_offset: d.filter_offset,
@@ -133,48 +307,5 @@ impl Kernel for XlaFcKernel {
             }
             other => Err(ctx.fail(format!("unsupported dtype {other}"))),
         }
-    }
-}
-
-impl CompiledComputation {
-    /// Execute the int8 matmul artifact: a [m,k] i8, b [n,k] i8, bias/mult/
-    /// shift [n] i32 -> [m,n] i8.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_i8_matmul(
-        &self,
-        a: &[i8],
-        a_dims: &[usize],
-        b: &[i8],
-        b_dims: &[usize],
-        bias: &[i32],
-        mult: &[i32],
-        shift: &[i32],
-    ) -> Result<Vec<i8>> {
-        let lit_i8 = |data: &[i8], dims: &[usize]| -> Result<xla::Literal> {
-            // i8 lacks a NativeType impl in the crate; build from raw bytes.
-            // SAFETY: i8 and u8 have identical layout.
-            let raw: &[u8] =
-                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, raw)
-                .map_err(|e| Error::Xla(e.to_string()))
-        };
-        let lit_i32 = |data: &[i32]| -> Result<xla::Literal> {
-            xla::Literal::vec1(data)
-                .reshape(&[data.len() as i64])
-                .map_err(|e| Error::Xla(e.to_string()))
-        };
-        let inputs = vec![
-            lit_i8(a, a_dims)?,
-            lit_i8(b, b_dims)?,
-            lit_i32(bias)?,
-            lit_i32(mult)?,
-            lit_i32(shift)?,
-        ];
-        let result = self
-            .execute_literals(&inputs)
-            .map_err(|e| Error::Xla(format!("execute {}: {e}", self.name())))?;
-        let tuple = result.to_tuple().map_err(|e| Error::Xla(e.to_string()))?;
-        let first = tuple.into_iter().next().ok_or_else(|| Error::Xla("empty tuple".into()))?;
-        first.to_vec::<i8>().map_err(|e| Error::Xla(e.to_string()))
     }
 }

@@ -12,6 +12,15 @@
 //! std-only (threads + mpsc): the offline registry has no tokio, and the
 //! paper's no-dependency ethos makes that the right call anyway
 //! (DESIGN.md §6.6).
+//!
+//! **Warm-up at worker startup.** Each worker's interpreter build runs
+//! the complete prepare → plan → populate sequence — including any
+//! vendor/XLA kernel's compile + weight upload + warm-up execution —
+//! before the worker pulls its first request. The first request a worker
+//! serves therefore never pays compilation; its latency
+//! ([`ServingReport::cold_start_ns`]) reflects only queue wait while the
+//! fleet was initializing, and a populate regression shows up there as a
+//! widening gap versus the steady-state percentiles.
 
 use crate::arena::Arena;
 use crate::error::{Error, Result};
@@ -81,15 +90,30 @@ pub struct ServingReport {
     pub latency_p99: Duration,
     /// Per-worker completion counts.
     pub per_worker: Vec<usize>,
+    /// Per-worker first-request latency, nanoseconds (0 for workers that
+    /// served nothing). This is where init-time cost shows up end to end:
+    /// each worker's interpreter build runs the full populate pass —
+    /// packed weights, side tables, and any XLA compile + literal upload
+    /// + warm-up — **before** pulling its first request, so worker
+    /// startup, not the first request, pays the compile. What remains
+    /// visible here is queue wait during startup; a populate regression
+    /// (work sliding back to first invoke) widens the gap between this
+    /// column and the steady-state percentiles.
+    pub cold_start_ns: Vec<u64>,
 }
 
 impl ServingReport {
     /// One-line summary for logs and EXPERIMENTS.md.
     pub fn summary(&self) -> String {
         format!(
-            "{} req in {:.2?}  {:.1} req/s  p50 {:?}  p95 {:?}  p99 {:?}",
-            self.completed, self.wall, self.throughput_rps, self.latency_p50, self.latency_p95,
-            self.latency_p99
+            "{} req in {:.2?}  {:.1} req/s  p50 {:?}  p95 {:?}  p99 {:?}  cold-max {:?}",
+            self.completed,
+            self.wall,
+            self.throughput_rps,
+            self.latency_p50,
+            self.latency_p95,
+            self.latency_p99,
+            Duration::from_nanos(self.cold_start_ns.iter().copied().max().unwrap_or(0)),
         )
     }
 }
@@ -125,6 +149,9 @@ pub fn run_closed_loop(
             let errors = &errors;
             scope.spawn(move || {
                 let mut arena = Arena::new(cfg.arena_bytes);
+                // Worker startup pays everything expensive: the build runs
+                // the full populate pass (packed weights, XLA compile +
+                // upload + warm-up), so no request ever does.
                 let mut interp = match MicroInterpreter::new(model, resolver, &mut arena) {
                     Ok(i) => i,
                     Err(_) => {
@@ -179,6 +206,7 @@ pub fn run_closed_loop(
         // Collector.
         let mut latencies = Vec::with_capacity(n);
         let mut per_worker = vec![0usize; cfg.workers];
+        let mut cold_start_ns = vec![0u64; cfg.workers];
         let mut completed = 0usize;
         for resp in resp_rx.iter() {
             if resp.output.len() != expected_out_len {
@@ -187,6 +215,9 @@ pub fn run_closed_loop(
                     resp.id,
                     resp.output.len()
                 )));
+            }
+            if per_worker[resp.worker] == 0 {
+                cold_start_ns[resp.worker] = resp.latency.as_nanos() as u64;
             }
             latencies.push(resp.latency);
             per_worker[resp.worker] += 1;
@@ -215,6 +246,7 @@ pub fn run_closed_loop(
             latency_p95: pick(0.95),
             latency_p99: pick(0.99),
             per_worker,
+            cold_start_ns,
         })
     })?;
     Ok(report)
@@ -239,6 +271,58 @@ mod tests {
         assert_eq!(reqs.len(), 4);
         assert_eq!(reqs[3].id, 3);
         assert_eq!(reqs[2].input, vec![2i8, 2]);
+    }
+
+    /// `cold_start_ns` surfaces per-worker first-request latency: one
+    /// entry per worker, nonzero exactly for workers that served at
+    /// least one request, and equal to a latency the percentile stats
+    /// could have observed (it is a real response latency, not a
+    /// synthetic number).
+    #[test]
+    fn cold_start_ns_tracks_first_request_per_worker() {
+        use crate::schema::writer::fully_connected_options;
+        use crate::schema::{BuiltinOp, Model, ModelBuilder};
+        use crate::tensor::{DType, QuantParams};
+
+        let mut b = ModelBuilder::new("cold-start");
+        let q = QuantParams::per_tensor(1.0, 0);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q.clone());
+        let wbuf = b.add_buffer(&[1u8; 8]);
+        let t_w = b.add_quant_tensor("w", DType::I8, &[2, 4], Some(wbuf), q.clone());
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2], None, q);
+        b.add_op(
+            BuiltinOp::FullyConnected,
+            &[t_in, t_w, -1],
+            &[t_out],
+            fully_connected_options(Default::default()),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        let model = Model::from_bytes(&b.finish()).unwrap();
+        let resolver = crate::ops::OpResolver::with_optimized_ops();
+
+        let requests = make_requests(16, |id| vec![id as i8; 4]);
+        let cfg = ServingConfig { workers: 2, queue_depth: 4, arena_bytes: 16 * 1024 };
+        let report = run_closed_loop(&model, &resolver, cfg, requests, 2).unwrap();
+
+        assert_eq!(report.completed, 16);
+        assert_eq!(report.cold_start_ns.len(), 2, "one cold-start entry per worker");
+        for (w, (&served, &cold)) in
+            report.per_worker.iter().zip(&report.cold_start_ns).enumerate()
+        {
+            if served > 0 {
+                assert!(cold > 0, "worker {w} served {served} requests but cold_start_ns = 0");
+                assert!(
+                    cold <= report.wall.as_nanos() as u64,
+                    "worker {w} cold start exceeds the whole run's wall time"
+                );
+            } else {
+                assert_eq!(cold, 0, "idle worker {w} must report 0");
+            }
+        }
+        // At least one worker served something, so the summary's cold-max
+        // is nonzero and renders.
+        assert!(report.cold_start_ns.iter().any(|&c| c > 0));
+        assert!(report.summary().contains("cold-max"));
     }
 
     #[test]

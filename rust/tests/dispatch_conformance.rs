@@ -1,0 +1,265 @@
+//! End-to-end dispatch-tier conformance sweep.
+//!
+//! The unit-level property tests pin each GEMM/depthwise backend against
+//! the scalar body and a naive oracle — but nothing below this file runs
+//! a **whole model through the full interpreter** under every forced
+//! backend. This sweep does exactly that: builder-made hotword-like and
+//! person-detection-like graphs (mirroring the exported models that
+//! `exported_models.rs` checks against Python goldens), plus the real
+//! exported artifacts when `artifacts/` exists, are each executed under
+//! every available [`GemmBackend`] via [`ForceDispatch`], asserting
+//! **bit-identical** outputs across tiers. One [`ForceDispatch`] guard
+//! pins both the GEMM and depthwise dispatch (they are keyed by the same
+//! backend enum), so the sweep covers conv im2col, the conv 1×1 fast
+//! path, depthwise, and FC populate/invoke paths on every tier —
+//! including the populate-time VNNI compensation side table, which must
+//! be a pure hoist (MinUn's point that quantized-inference correctness
+//! is an end-to-end property, not a per-kernel one).
+
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::ops::opt_ops::gemm::{ForceDispatch, GemmBackend};
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::format::{Activation, Padding};
+use tfmicro::schema::writer::{conv_options, fully_connected_options, mean_options, softmax_options};
+use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
+use tfmicro::tensor::{DType, QuantParams};
+use tfmicro::testutil::Rng;
+
+// ---------------------------------------------------------------------------
+// Builder-made stand-ins for the exported example models
+// ---------------------------------------------------------------------------
+
+fn q(scale: f32, zp: i32) -> QuantParams {
+    QuantParams::per_tensor(scale, zp)
+}
+
+fn i8_buf(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mut v = vec![0i8; len];
+    rng.fill_i8(&mut v);
+    v.into_iter().map(|b| b as u8).collect()
+}
+
+fn i32_buf(rng: &mut Rng, len: usize, lo: i32, hi: i32) -> Vec<u8> {
+    (0..len).flat_map(|_| rng.range_i32(lo, hi).to_le_bytes()).collect()
+}
+
+/// Hotword-like graph: reshape → FC 392→32 (relu) → FC 32→16 (relu) →
+/// FC 16→4 → softmax. Exercises the FC packed path (ragged out dims vs
+/// the 4-channel block, rows = 1) on every tier.
+fn hotword_like_model() -> Model {
+    let mut rng = Rng::seeded(0x4077);
+    let mut b = ModelBuilder::new("hotword-like");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 49, 8], None, q(0.5, 2));
+    let t_flat = b.add_quant_tensor("flat", DType::I8, &[1, 392], None, q(0.5, 2));
+    b.add_op(BuiltinOp::Reshape, &[t_in], &[t_flat], vec![]);
+
+    let mut prev = t_flat;
+    let mut prev_dim = 392usize;
+    for (i, (out_dim, act)) in
+        [(32usize, Activation::Relu), (16, Activation::Relu), (4, Activation::None)]
+            .into_iter()
+            .enumerate()
+    {
+        let wbuf = b.add_buffer(&i8_buf(&mut rng, out_dim * prev_dim));
+        let t_w = b.add_quant_tensor(
+            &format!("w{i}"),
+            DType::I8,
+            &[out_dim as i32, prev_dim as i32],
+            Some(wbuf),
+            q(0.004, 0),
+        );
+        let bbuf = b.add_buffer(&i32_buf(&mut rng, out_dim, -500, 500));
+        let t_b = b.add_tensor(&format!("b{i}"), DType::I32, &[out_dim as i32], Some(bbuf));
+        let t_out = b.add_quant_tensor(
+            &format!("fc{i}"),
+            DType::I8,
+            &[1, out_dim as i32],
+            None,
+            q(1.0, -3),
+        );
+        b.add_op(
+            BuiltinOp::FullyConnected,
+            &[prev, t_w, t_b],
+            &[t_out],
+            fully_connected_options(act),
+        );
+        prev = t_out;
+        prev_dim = out_dim;
+    }
+    let t_sm = b.add_quant_tensor("scores", DType::I8, &[1, 4], None, q(1.0 / 256.0, -128));
+    b.add_op(BuiltinOp::Softmax, &[prev], &[t_sm], softmax_options(1.0));
+    b.set_io(&[t_in], &[t_sm]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+/// Person-detection-like graph: conv 3×3 s2 → depthwise 3×3 → conv 1×1 →
+/// mean(H,W) → FC → softmax. Exercises the conv im2col path, the
+/// depthwise channel-blocked path, and the conv 1×1 fast path (all three
+/// GEMM/depthwise consumers) on every tier.
+fn person_detection_like_model() -> Model {
+    let mut rng = Rng::seeded(0x9D);
+    let mut b = ModelBuilder::new("person-detection-like");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 16, 16, 3], None, q(0.5, -1));
+
+    // conv 3x3 s2 SAME: [1,16,16,3] -> [1,8,8,8]
+    let w0 = b.add_buffer(&i8_buf(&mut rng, 8 * 3 * 3 * 3));
+    let t_w0 = b.add_quant_tensor("w0", DType::I8, &[8, 3, 3, 3], Some(w0), q(0.003, 0));
+    let b0 = b.add_buffer(&i32_buf(&mut rng, 8, -800, 800));
+    let t_b0 = b.add_tensor("b0", DType::I32, &[8], Some(b0));
+    let t_c0 = b.add_quant_tensor("conv0", DType::I8, &[1, 8, 8, 8], None, q(0.4, 3));
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w0, t_b0],
+        &[t_c0],
+        conv_options(Padding::Same, Activation::Relu, (2, 2), (1, 1), None),
+    );
+
+    // depthwise 3x3 s1 SAME (m=1): [1,8,8,8] -> [1,8,8,8]
+    let w1 = b.add_buffer(&i8_buf(&mut rng, 3 * 3 * 8));
+    let t_w1 = b.add_quant_tensor("w1", DType::I8, &[1, 3, 3, 8], Some(w1), q(0.01, 0));
+    let b1 = b.add_buffer(&i32_buf(&mut rng, 8, -500, 500));
+    let t_b1 = b.add_tensor("b1", DType::I32, &[8], Some(b1));
+    let t_c1 = b.add_quant_tensor("dw1", DType::I8, &[1, 8, 8, 8], None, q(0.5, -4));
+    b.add_op(
+        BuiltinOp::DepthwiseConv2d,
+        &[t_c0, t_w1, t_b1],
+        &[t_c1],
+        conv_options(Padding::Same, Activation::None, (1, 1), (1, 1), Some(1)),
+    );
+
+    // conv 1x1: [1,8,8,8] -> [1,8,8,16] (the pointwise GEMM fast path).
+    let w2 = b.add_buffer(&i8_buf(&mut rng, 16 * 8));
+    let t_w2 = b.add_quant_tensor("w2", DType::I8, &[16, 1, 1, 8], Some(w2), q(0.008, 0));
+    let b2 = b.add_buffer(&i32_buf(&mut rng, 16, -500, 500));
+    let t_b2 = b.add_tensor("b2", DType::I32, &[16], Some(b2));
+    let t_c2 = b.add_quant_tensor("pw2", DType::I8, &[1, 8, 8, 16], None, q(0.6, 1));
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_c1, t_w2, t_b2],
+        &[t_c2],
+        conv_options(Padding::Valid, Activation::Relu, (1, 1), (1, 1), None),
+    );
+
+    // mean over H,W -> [1,16]
+    let axes = b.add_buffer(&[1i32, 2].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>());
+    let t_axes = b.add_tensor("axes", DType::I32, &[2], Some(axes));
+    let t_gap = b.add_quant_tensor("gap", DType::I8, &[1, 16], None, q(0.6, 1));
+    b.add_op(BuiltinOp::Mean, &[t_c2, t_axes], &[t_gap], mean_options(false));
+
+    // FC 16 -> 2 + softmax.
+    let w3 = b.add_buffer(&i8_buf(&mut rng, 2 * 16));
+    let t_w3 = b.add_quant_tensor("w3", DType::I8, &[2, 16], Some(w3), q(0.02, 0));
+    let t_fc = b.add_quant_tensor("logits", DType::I8, &[1, 2], None, q(0.3, 0));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_gap, t_w3, -1],
+        &[t_fc],
+        fully_connected_options(Activation::None),
+    );
+    let t_sm = b.add_quant_tensor("scores", DType::I8, &[1, 2], None, q(1.0 / 256.0, -128));
+    b.add_op(BuiltinOp::Softmax, &[t_fc], &[t_sm], softmax_options(1.0));
+    b.set_io(&[t_in], &[t_sm]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// The sweep
+// ---------------------------------------------------------------------------
+
+fn random_inputs(model: &Model, count: usize, seed: u64) -> Vec<Vec<i8>> {
+    let in_len = model.tensors()[model.inputs()[0] as usize].num_elements();
+    let mut rng = Rng::seeded(seed);
+    (0..count)
+        .map(|_| {
+            let mut v = vec![0i8; in_len];
+            rng.fill_i8(&mut v);
+            v
+        })
+        .collect()
+}
+
+/// Run `inputs` through a fresh interpreter (so prepare → plan →
+/// populate all execute under the forced backend) and collect outputs.
+/// `None` when the backend is unavailable on this machine.
+fn outputs_under_backend(
+    model: &Model,
+    resolver: &OpResolver,
+    inputs: &[Vec<i8>],
+    arena_kb: usize,
+    backend: GemmBackend,
+) -> Option<Vec<Vec<i8>>> {
+    let _guard = ForceDispatch::force(backend)?;
+    let mut arena = Arena::new(arena_kb * 1024);
+    let mut interp = MicroInterpreter::new(model, resolver, &mut arena).expect("init");
+    let mut outs = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        interp.input_mut(0).unwrap().copy_from_i8(input).unwrap();
+        interp.invoke().expect("invoke");
+        outs.push(interp.output(0).unwrap().as_i8().unwrap().to_vec());
+    }
+    Some(outs)
+}
+
+fn sweep_model(name: &str, model: &Model, arena_kb: usize) {
+    let inputs = random_inputs(model, 4, 0xD15);
+    let resolver = OpResolver::with_optimized_ops();
+    let scalar = outputs_under_backend(model, &resolver, &inputs, arena_kb, GemmBackend::Scalar)
+        .expect("scalar backend is always available");
+
+    // The reference kernels must agree with the optimized scalar tier
+    // bit-for-bit (both are plain integer math; this anchors the sweep
+    // to an implementation that shares no code with the GEMM front).
+    let reference = OpResolver::with_reference_ops();
+    let ref_outs =
+        outputs_under_backend(model, &reference, &inputs, arena_kb, GemmBackend::Scalar).unwrap();
+    assert_eq!(ref_outs, scalar, "{name}: reference vs optimized-scalar mismatch");
+
+    let mut swept = 1;
+    for backend in GemmBackend::all() {
+        if backend == GemmBackend::Scalar {
+            continue;
+        }
+        let Some(outs) = outputs_under_backend(model, &resolver, &inputs, arena_kb, backend)
+        else {
+            eprintln!("SKIP {name}: backend {backend} unavailable on this machine");
+            continue;
+        };
+        assert_eq!(
+            outs, scalar,
+            "{name}: backend {backend} output differs from scalar (bit-exactness broken)"
+        );
+        swept += 1;
+    }
+    eprintln!("{name}: {swept} backend(s) swept bit-exact");
+}
+
+#[test]
+fn hotword_like_bit_exact_across_all_tiers() {
+    sweep_model("hotword-like", &hotword_like_model(), 128);
+}
+
+#[test]
+fn person_detection_like_bit_exact_across_all_tiers() {
+    sweep_model("person-detection-like", &person_detection_like_model(), 256);
+}
+
+/// The real exported models, when `artifacts/` exists (otherwise the
+/// builder-made graphs above carry the sweep).
+#[test]
+fn exported_artifacts_bit_exact_across_all_tiers() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut found = false;
+    for (name, arena_kb) in [("hotword", 128), ("vww", 512), ("conv_ref", 128)] {
+        let p = dir.join(format!("{name}.tmf"));
+        if !p.exists() {
+            continue;
+        }
+        found = true;
+        let model = Model::from_file(&p).expect("load artifact model");
+        sweep_model(name, &model, arena_kb);
+    }
+    if !found {
+        eprintln!("SKIP: no exported artifacts (run `make artifacts`); builder graphs cover the sweep");
+    }
+}

@@ -1,0 +1,309 @@
+//! Lifecycle tests for the populate pass (prepare → plan → populate →
+//! invoke, §4.5–§4.8):
+//!
+//! * **idempotence** — rebuilding an interpreter on the same arena
+//!   reproduces bit-identical outputs and identical `ArenaUsage`,
+//!   pinning that populate (packed weights, the VNNI compensation side
+//!   table, XLA staging) is deterministic and re-entrant;
+//! * **tier flipping** — `ForceDispatch` can switch GEMM/depthwise
+//!   backends over one interpreter's *already-populated* state, which is
+//!   exactly the property that forces the VNNI side table to live
+//!   outside the shared fused-bias buffer;
+//! * **XLA populate ownership** — interpreter init performs the HLO
+//!   compile, weight/bias literal upload, and one warm-up execution;
+//!   `invoke` is one input transfer + one execution, with **no** compile
+//!   or upload, verified through the `runtime::op_counters` deltas;
+//! * **accounting** — XLA-held off-arena bytes appear in
+//!   `ArenaUsage.kernel_buffers` (what `tfmicro mem` prints).
+//!
+//! The XLA tests use `artifacts/fc_int8.hlo.txt` when present; without
+//! artifacts they synthesize a small int8-matmul artifact for the
+//! simulated PJRT backend, and degrade to a clean SKIP if a real PJRT
+//! backend is in use (which would need real artifacts to compile).
+
+use std::sync::{Arc, Mutex};
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::ops::opt_ops::gemm::{ForceDispatch, GemmBackend};
+use tfmicro::ops::OpResolver;
+use tfmicro::runtime::{op_counters, XlaFcKernel, XlaRuntime};
+use tfmicro::schema::format::{Activation, Padding};
+use tfmicro::schema::writer::{conv_options, fully_connected_options};
+use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
+use tfmicro::tensor::{DType, QuantParams};
+use tfmicro::testutil::Rng;
+
+/// The op-counter snapshots are process-global; XLA-touching tests in
+/// this binary serialize behind this lock so concurrent test threads
+/// cannot perturb each other's deltas.
+static XLA_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn q(scale: f32, zp: i32) -> QuantParams {
+    QuantParams::per_tensor(scale, zp)
+}
+
+/// conv 3×3 + FC graph: touches both packed-GEMM consumers, so a
+/// rebuild exercises re-packing, re-folding, and side-table re-registration.
+fn conv_fc_model() -> Model {
+    let mut rng = Rng::seeded(0x1DE);
+    let mut b = ModelBuilder::new("populate-idem");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 8, 8, 2], None, q(0.5, -2));
+    let wbuf = {
+        let mut w = vec![0i8; 4 * 3 * 3 * 2];
+        rng.fill_i8(&mut w);
+        b.add_buffer(&w.into_iter().map(|v| v as u8).collect::<Vec<_>>())
+    };
+    let t_w = b.add_quant_tensor("w", DType::I8, &[4, 3, 3, 2], Some(wbuf), q(0.01, 0));
+    let bbuf = b.add_buffer(
+        &(0..4).flat_map(|_| rng.range_i32(-300, 300).to_le_bytes()).collect::<Vec<_>>(),
+    );
+    let t_b = b.add_tensor("b", DType::I32, &[4], Some(bbuf));
+    let t_conv = b.add_quant_tensor("conv", DType::I8, &[1, 4, 4, 4], None, q(0.4, 1));
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w, t_b],
+        &[t_conv],
+        conv_options(Padding::Same, Activation::Relu, (2, 2), (1, 1), None),
+    );
+    let t_flat = b.add_quant_tensor("flat", DType::I8, &[1, 64], None, q(0.4, 1));
+    b.add_op(BuiltinOp::Reshape, &[t_conv], &[t_flat], vec![]);
+    let w2 = {
+        let mut w = vec![0i8; 10 * 64];
+        rng.fill_i8(&mut w);
+        b.add_buffer(&w.into_iter().map(|v| v as u8).collect::<Vec<_>>())
+    };
+    let t_w2 = b.add_quant_tensor("w2", DType::I8, &[10, 64], Some(w2), q(0.01, 0));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 10], None, q(0.8, 0));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_flat, t_w2, -1],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+#[test]
+fn populate_is_idempotent_across_rebuilds_on_one_arena() {
+    let model = conv_fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let mut input = vec![0i8; 128];
+    Rng::seeded(7).fill_i8(&mut input);
+
+    // One arena, never re-zeroed between builds: a populate pass that
+    // forgets to (re)write any persistent byte will read the previous
+    // build's leftovers and diverge.
+    let mut arena = Arena::new(64 * 1024);
+    let mut runs = Vec::new();
+    for _ in 0..3 {
+        let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+        interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+        interp.invoke().expect("invoke");
+        let out = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+        runs.push((out, interp.arena_usage(), interp.arena_usage_detail()));
+    }
+    let (out0, usage0, detail0) = &runs[0];
+    for (i, (out, usage, detail)) in runs.iter().enumerate().skip(1) {
+        assert_eq!(out, out0, "rebuild {i}: outputs diverged");
+        assert_eq!(usage, usage0, "rebuild {i}: ArenaUsage diverged");
+        assert_eq!(detail, detail0, "rebuild {i}: ArenaUsageDetail diverged");
+    }
+}
+
+/// ForceDispatch flips tiers over one interpreter's populated state:
+/// all available backends must produce bit-identical outputs from the
+/// *same* persistent buffers (packed weights, fused biases, VNNI side
+/// table) — the invariant that keeps populate backend-agnostic.
+#[test]
+fn tiers_flip_bit_exact_over_one_populated_interpreter() {
+    let model = conv_fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let mut input = vec![0i8; 128];
+    Rng::seeded(8).fill_i8(&mut input);
+
+    let mut arena = Arena::new(64 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+    interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+
+    let mut baseline: Option<(GemmBackend, Vec<i8>)> = None;
+    for backend in GemmBackend::all() {
+        let Some(_guard) = ForceDispatch::force(backend) else { continue };
+        interp.invoke().expect("invoke");
+        let out = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+        match &baseline {
+            None => baseline = Some((backend, out)),
+            Some((b0, out0)) => {
+                assert_eq!(&out, out0, "{backend} vs {b0} over identical populated state");
+            }
+        }
+    }
+    assert!(baseline.is_some(), "scalar at minimum must have run");
+}
+
+// ---------------------------------------------------------------------------
+// XLA lifecycle
+// ---------------------------------------------------------------------------
+
+/// The artifact to test against: the real one when present, else a
+/// synthesized int8-matmul artifact for the simulated backend. `None`
+/// (with a SKIP line) when neither is possible.
+fn fc_artifact() -> Option<(std::path::PathBuf, (usize, usize, usize))> {
+    let real = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/fc_int8.hlo.txt");
+    if real.exists() {
+        return Some((real, (1, 392, 32)));
+    }
+    let rt = XlaRuntime::cpu().ok()?;
+    if !rt.is_simulated() {
+        eprintln!("SKIP: no artifacts/ and a real PJRT backend (run `make artifacts` first)");
+        return None;
+    }
+    let (m, k, n) = (1usize, 40usize, 8usize);
+    let dir = std::env::temp_dir().join("tfmicro_populate_lifecycle");
+    std::fs::create_dir_all(&dir).ok()?;
+    let p = dir.join(format!("fc_int8_{m}x{k}x{n}.hlo.txt"));
+    let text = format!(
+        "HloModule jit_fn\n\n\
+         ENTRY %main.1 (a: s8[{m},{k}], w: s8[{n},{k}], bias: s32[{n}], \
+         mult: s32[{n}], shift: s32[{n}]) -> (s8[{m},{n}]) {{\n}}\n"
+    );
+    std::fs::write(&p, text).ok()?;
+    Some((p, (m, k, n)))
+}
+
+/// A single-FC model at the artifact contract (zero zero-points, full
+/// clamp) — offloadable by construction. `out_zp` lets the accounting
+/// test build a deliberately non-offloadable twin.
+fn fc_model_at(shape: (usize, usize, usize), out_zp: i32) -> (Model, Vec<i8>) {
+    let (m, k, n) = shape;
+    let mut rng = Rng::seeded(0xFC);
+    let mut b = ModelBuilder::new("xla-lifecycle-fc");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[m as i32, k as i32], None, q(0.05, 0));
+    let mut w = vec![0i8; n * k];
+    rng.fill_i8(&mut w);
+    let wbuf = b.add_buffer(&w.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    let t_w = b.add_quant_tensor("w", DType::I8, &[n as i32, k as i32], Some(wbuf), q(0.02, 0));
+    let bbuf = b.add_buffer(
+        &(0..n).flat_map(|_| rng.range_i32(-500, 500).to_le_bytes()).collect::<Vec<_>>(),
+    );
+    let t_b = b.add_tensor("b", DType::I32, &[n as i32], Some(bbuf));
+    let t_out =
+        b.add_quant_tensor("out", DType::I8, &[m as i32, n as i32], None, q(0.5, out_zp));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_in, t_w, t_b],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let mut input = vec![0i8; m * k];
+    rng.fill_i8(&mut input);
+    (Model::from_bytes(&b.finish()).unwrap(), input)
+}
+
+fn xla_resolver(path: &std::path::Path, shape: (usize, usize, usize)) -> OpResolver {
+    let mut r = OpResolver::with_optimized_ops();
+    let kernel = XlaFcKernel::load(path, shape).expect("load artifact");
+    r.register(BuiltinOp::FullyConnected, Arc::new(kernel)).unwrap();
+    r
+}
+
+/// The tentpole invariant: init owns compile + upload + warm-up; invoke
+/// is exactly one input transfer + one execution. Also pins bit-exact
+/// agreement between the offloaded and pure-Rust results (the
+/// "accelerated tier" leg of the conformance story).
+#[test]
+fn xla_init_owns_compile_upload_warmup_and_invoke_is_transfer_execute() {
+    let _serialize = XLA_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some((path, shape)) = fc_artifact() else { return };
+    let (model, input) = fc_model_at(shape, 0);
+
+    // Pure-Rust baseline.
+    let rust_resolver = OpResolver::with_optimized_ops();
+    let mut arena = Arena::new(256 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &rust_resolver, &mut arena).expect("init");
+    interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+    interp.invoke().unwrap();
+    let want = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+    drop(interp);
+
+    // Accelerated build: every vendor step must land in init.
+    let resolver = xla_resolver(&path, shape);
+    let mut arena2 = Arena::new(256 * 1024);
+    let before_init = op_counters();
+    let mut interp2 = MicroInterpreter::new(&model, &resolver, &mut arena2).expect("init");
+    let init_delta = op_counters().since(&before_init);
+    assert_eq!(init_delta.compiles, 1, "init compiles the artifact exactly once");
+    assert_eq!(
+        init_delta.uploads, 5,
+        "init stages weights + bias + mult + shift + the warm-up input"
+    );
+    assert_eq!(init_delta.executes, 1, "init runs exactly one warm-up execution");
+
+    // Two invokes: each is one input transfer + one execution, nothing else.
+    interp2.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+    for round in 0..2 {
+        let before = op_counters();
+        interp2.invoke().expect("invoke");
+        let d = op_counters().since(&before);
+        assert_eq!(d.compiles, 0, "invoke {round} must not compile");
+        assert_eq!(d.uploads, 1, "invoke {round} must transfer only the input");
+        assert_eq!(d.executes, 1, "invoke {round} must execute exactly once");
+    }
+    let got = interp2.output(0).unwrap().as_i8().unwrap().to_vec();
+    assert_eq!(got, want, "XLA-offloaded FC must match the Rust kernels bit-exactly");
+}
+
+/// Off-arena XLA bytes are charged into `ArenaUsage.kernel_buffers` (and
+/// the persistent/total lines `tfmicro mem` prints): the offloadable
+/// model reports exactly the staged-buffer footprint more than a twin
+/// whose nonzero output zero point keeps the kernel on the Rust fallback.
+#[test]
+fn xla_staged_bytes_show_up_in_kernel_buffers() {
+    let _serialize = XLA_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some((path, shape)) = fc_artifact() else { return };
+    let (m, k, n) = shape;
+
+    let usage_for = |out_zp: i32| {
+        let (model, _input) = fc_model_at(shape, out_zp);
+        let resolver = xla_resolver(&path, shape);
+        let mut arena = Arena::new(256 * 1024);
+        let interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+        interp.arena_usage()
+    };
+    let offloaded = usage_for(0);
+    let fallback = usage_for(5);
+
+    // Held state only: weights + bias/mult/shift tables. The per-invoke
+    // input/output buffers are transient and must NOT be charged.
+    let _ = m;
+    let staged = n * k + 3 * n * std::mem::size_of::<i32>();
+    assert_eq!(
+        offloaded.kernel_buffers,
+        fallback.kernel_buffers + staged,
+        "kernel_buffers must grow by exactly the staged XLA footprint"
+    );
+    assert_eq!(offloaded.persistent, fallback.persistent + staged);
+    assert_eq!(offloaded.total, fallback.total + staged);
+}
+
+/// The populate pass is re-entrant for the XLA kernel too: rebuilding on
+/// the same arena with the same model keeps outputs and usage identical
+/// (the staged state is reused, not duplicated or corrupted).
+#[test]
+fn xla_populate_is_idempotent_across_rebuilds() {
+    let _serialize = XLA_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some((path, shape)) = fc_artifact() else { return };
+    let (model, input) = fc_model_at(shape, 0);
+    let resolver = xla_resolver(&path, shape);
+
+    let mut arena = Arena::new(256 * 1024);
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+        interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+        interp.invoke().expect("invoke");
+        runs.push((interp.output(0).unwrap().as_i8().unwrap().to_vec(), interp.arena_usage()));
+    }
+    assert_eq!(runs[0], runs[1], "XLA rebuild on the same arena must be deterministic");
+}

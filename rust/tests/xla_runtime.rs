@@ -22,6 +22,20 @@ fn load_f32_golden(path: &std::path::Path) -> Option<(Vec<f32>, Vec<f32>)> {
     Some((f(8, in_len), f(8 + in_len * 4, out_len)))
 }
 
+/// Compile an artifact, treating the simulated backend's documented
+/// "unsupported module" outcome as a skip (same as a missing artifact):
+/// whole-model f32 graphs need a real PJRT client.
+fn compile_or_skip(rt: &XlaRuntime, hlo: &std::path::Path) -> Option<tfmicro::runtime::CompiledComputation> {
+    match rt.load_hlo_text(hlo) {
+        Ok(exe) => Some(exe),
+        Err(e) if rt.is_simulated() && e.to_string().contains("unsupported by the simulated") => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+        Err(e) => panic!("compile {}: {e}", hlo.display()),
+    }
+}
+
 #[test]
 fn hotword_compiled_baseline_matches_python_oracle() {
     let dir = artifacts_dir();
@@ -31,7 +45,7 @@ fn hotword_compiled_baseline_matches_python_oracle() {
         return;
     }
     let rt = XlaRuntime::cpu().expect("PJRT CPU client");
-    let exe = rt.load_hlo_text(&hlo).expect("compile hotword HLO");
+    let Some(exe) = compile_or_skip(&rt, &hlo) else { return };
     let (x, want) = load_f32_golden(&dir.join("hotword_f32_golden.bin")).expect("golden");
     let outs = exe.run_f32(&[(&x, &[1, x.len()])]).expect("execute");
     assert_eq!(outs.len(), 1, "model returns one output");
@@ -57,7 +71,7 @@ fn pallas_lowered_conv_ref_graph_executes() {
         return;
     }
     let rt = XlaRuntime::cpu().unwrap();
-    let exe = rt.load_hlo_text(&hlo).expect("compile pallas-bearing HLO");
+    let Some(exe) = compile_or_skip(&rt, &hlo) else { return };
     let x = vec![0.5f32; 16 * 16];
     let outs = exe.run_f32(&[(&x, &[1, 16, 16, 1])]).expect("execute");
     let got = &outs[0];
