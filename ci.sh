@@ -97,15 +97,23 @@ echo "== tier-1: cargo test -q =="
 cargo test -q
 
 # --- XLA integration suite visibility --------------------------------------
-# The xla_runtime tests self-skip per-test when their artifact is missing,
-# which made silent skips look like passes. All three suites already ran in
-# full under `cargo test -q` above (populate_lifecycle / dispatch_conformance
-# exercise their synthetic-artifact bodies either way); here we only re-run
-# the cheap artifact-gated binary with output visible when artifacts/ exists,
-# and say so, loudly, when it does not.
+# Skip-path semantics (pinned since the whole-model f32 contract landed):
+#   * artifacts/ absent  -> SKIP is legitimate (the build step hasn't run);
+#     the synthetic-artifact test bodies in populate_lifecycle /
+#     dispatch_conformance / invoke_accounting still ran above.
+#   * artifacts/ present -> every artifact must compile AND execute on the
+#     simulated backend (it runs whole-model f32 graphs natively). The test
+#     binaries fail hard on "present but not executed" — no eprintln-SKIP
+#     escape hatch exists for that case anymore — and we re-run them here
+#     with output visible so a red artifact is loud in the CI log. The
+#     compiled half of bench_compiled_vs_interp likewise exits nonzero if
+#     a present hotword_f32.hlo.txt stops executing.
 echo "== xla integration suite =="
 if [[ -d artifacts ]]; then
     cargo test --test xla_runtime -- --nocapture
+    cargo test --test dispatch_conformance -- --nocapture
+    echo "== bench_compiled_vs_interp (compiled half must execute) =="
+    cargo bench --bench bench_compiled_vs_interp
 else
     echo "xla integration suite: SKIP (no artifacts) — run \`make artifacts\` to exercise the real exported models"
 fi

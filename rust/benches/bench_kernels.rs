@@ -149,15 +149,25 @@ fn main() {
         let p = {
             let _scalar = gemm::ForceDispatch::force(gemm::GemmBackend::Scalar)
                 .expect("scalar backend always available");
+            // Table resolved once per "invoke", as the kernel does (it
+            // resolves to nothing here: bench buffers have no owner).
+            let table = gemm::resolve_call_table(&packed, gemm::NO_OWNER);
             bench.run(|| {
-                opt_ops::conv2d_i8_packed(&s, &q, &input, &packed, &fused, &mut patch, &mut out);
+                opt_ops::conv2d_i8_packed(
+                    &s, &q, &input, &packed, &fused, &table, &mut patch, &mut out,
+                );
                 black_box(&out);
             })
         };
-        let v = bench.run(|| {
-            opt_ops::conv2d_i8_packed(&s, &q, &input, &packed, &fused, &mut patch, &mut out);
-            black_box(&out);
-        });
+        let v = {
+            let table = gemm::resolve_call_table(&packed, gemm::NO_OWNER);
+            bench.run(|| {
+                opt_ops::conv2d_i8_packed(
+                    &s, &q, &input, &packed, &fused, &table, &mut patch, &mut out,
+                );
+                black_box(&out);
+            })
+        };
         let row = Row {
             label,
             reference_ns: r.median.as_nanos(),
@@ -261,19 +271,23 @@ fn main() {
         let p = {
             let _scalar = gemm::ForceDispatch::force(gemm::GemmBackend::Scalar)
                 .expect("scalar backend always available");
+            let table = gemm::resolve_call_table(&packed, gemm::NO_OWNER);
             bench.run(|| {
                 opt_ops::fully_connected_i8_packed(
-                    1, in_dim, out_dim, &q, &input, &packed, &fused, &mut out,
+                    1, in_dim, out_dim, &q, &input, &packed, &fused, &table, &mut out,
                 );
                 black_box(&out);
             })
         };
-        let v = bench.run(|| {
-            opt_ops::fully_connected_i8_packed(
-                1, in_dim, out_dim, &q, &input, &packed, &fused, &mut out,
-            );
-            black_box(&out);
-        });
+        let v = {
+            let table = gemm::resolve_call_table(&packed, gemm::NO_OWNER);
+            bench.run(|| {
+                opt_ops::fully_connected_i8_packed(
+                    1, in_dim, out_dim, &q, &input, &packed, &fused, &table, &mut out,
+                );
+                black_box(&out);
+            })
+        };
         let row = Row {
             label,
             reference_ns: r.median.as_nanos(),

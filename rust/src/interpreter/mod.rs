@@ -190,6 +190,15 @@ impl ArenaUsageDetail {
     }
 }
 
+/// Hands out one unique owner token per interpreter build (never 0 =
+/// `gemm::NO_OWNER`, never reused): the tag that scopes backend
+/// side-table entries to the interpreter whose populate pass wrote them.
+static OWNER_TOKENS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+fn next_owner_token() -> u64 {
+    OWNER_TOKENS.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1
+}
+
 /// The interpreter. See module docs for the life cycle.
 pub struct MicroInterpreter<'m, 'a> {
     model: &'m Model,
@@ -205,6 +214,8 @@ pub struct MicroInterpreter<'m, 'a> {
     /// Kernel-held bytes outside the arena (XLA/vendor staged buffers),
     /// folded into the `ArenaUsage` persistent/kernel_buffers totals.
     external_kernel: usize,
+    /// This build's unique owner token (see [`next_owner_token`]).
+    owner: u64,
     invocations: u64,
 }
 
@@ -227,13 +238,17 @@ impl<'m, 'a> Drop for MicroInterpreter<'m, 'a> {
         // routinely reused for the next interpreter build, so evict them
         // before the addresses can be recycled under different weights.
         // Eviction is per persistent buffer — not the whole backing range
-        // — so co-tenants of a SharedArena keep their own entries.
+        // — so co-tenants of a SharedArena keep their own entries, and it
+        // passes this build's owner token, so a *late* drop (after a
+        // newer interpreter re-registered the same recycled addresses)
+        // cannot destroy the newer build's entries — the ABA guard.
         let base = self.backing.base_ptr() as usize;
         for bufs in &self.op_persistent {
             for &(off, len) in bufs {
                 crate::ops::opt_ops::gemm::invalidate_compensation_range(
                     (base + off) as *const u8,
                     len,
+                    self.owner,
                 );
             }
         }
@@ -297,6 +312,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         options: Options,
     ) -> Result<Self> {
         crate::schema::validate::validate(model)?;
+        let owner = next_owner_token();
         let n_tensors = model.tensors().len();
         let n_ops = model.operators().len();
 
@@ -466,12 +482,14 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                     &op_scratch[i],
                     &op_persistent[i],
                     &op_data[i],
+                    owner,
                 );
                 if let Err(e) = kernels[i].populate(&ctx) {
                     // Earlier ops may already have registered backend
                     // side-table entries keyed into this arena; evict them
-                    // (per persistent buffer, sparing SharedArena
-                    // co-tenants) before handing the storage back on the
+                    // (per persistent buffer and under this build's owner
+                    // token, sparing SharedArena co-tenants and newer
+                    // builds) before handing the storage back on the
                     // error path — no interpreter is constructed, so Drop
                     // won't run.
                     for bufs in &op_persistent {
@@ -479,6 +497,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                             crate::ops::opt_ops::gemm::invalidate_compensation_range(
                                 (base as usize + off) as *const u8,
                                 blen,
+                                owner,
                             );
                         }
                     }
@@ -509,6 +528,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
             usage,
             detail,
             external_kernel,
+            owner,
             invocations: 0,
         };
         // Variables start at their zero representation.
@@ -642,6 +662,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                     &self.op_scratch[i],
                     &self.op_persistent[i],
                     &self.op_data[i],
+                    self.owner,
                 );
                 self.kernels[i].invoke(&ctx)?;
                 obs.end_op(i);

@@ -80,6 +80,28 @@ pub fn activation_range_f32(act: Activation) -> (f32, f32) {
     }
 }
 
+/// Validate and return an i8 tensor's zero point.
+///
+/// The TMF schema bounds zero points to the 16-bit range (it must cover
+/// every quantized dtype), so a corrupt or adversarial model can carry
+/// an i8 tensor whose zero point is far outside `[-128, 127]`. Kernels
+/// that *use* the zero point as an i8 value (Pad's fill byte, ReLU's
+/// quantized clamp floor, Mean's correction term) must reject that at
+/// prepare time — a silent `as i8` wrap produces wrong fills, and a
+/// clamp floor above the ceiling panics. Returns the zero point when in
+/// range; the caller wraps the error with `ctx.fail` so it surfaces as
+/// an invalid-model prepare failure.
+pub fn i8_zero_point(meta: &TensorMeta, what: &str) -> Result<i32> {
+    let zp = meta.zero_point()?;
+    if !(i8::MIN as i32..=i8::MAX as i32).contains(&zp) {
+        return Err(crate::error::Error::MalformedModel(format!(
+            "{what} tensor '{}': zero point {zp} outside the i8 range [-128, 127]",
+            meta.name
+        )));
+    }
+    Ok(zp)
+}
+
 /// Clamp range implied by a fused activation on int8 data, in the output's
 /// quantized domain (TFLite `CalculateActivationRangeQuantized`).
 pub fn activation_range_i8(act: Activation, out: &TensorMeta) -> Result<(i32, i32)> {

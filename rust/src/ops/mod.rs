@@ -350,6 +350,9 @@ pub struct OpContext<'r> {
     /// (offset, len) of each persistent buffer this op requested.
     persistent: &'r [(usize, usize)],
     op_data: &'r OpData,
+    /// The owning interpreter's token (unique per interpreter build;
+    /// [`crate::ops::opt_ops::gemm::NO_OWNER`] outside a lifecycle).
+    owner: u64,
 }
 
 // SAFETY: `arena` points into memory exclusively borrowed (&mut) by the
@@ -371,6 +374,7 @@ impl<'r> OpContext<'r> {
         scratch: &'r [(usize, usize)],
         persistent: &'r [(usize, usize)],
         op_data: &'r OpData,
+        owner: u64,
     ) -> Self {
         OpContext {
             op_index,
@@ -383,12 +387,22 @@ impl<'r> OpContext<'r> {
             scratch,
             persistent,
             op_data,
+            owner,
         }
     }
 
     /// Prepared per-op state.
     pub fn op_data(&self) -> &'r OpData {
         self.op_data
+    }
+
+    /// The owning interpreter's token, unique per interpreter build.
+    /// Kernels pass it to owner-scoped backend side tables
+    /// ([`crate::ops::opt_ops::gemm::cache_packed_compensation`] /
+    /// [`crate::ops::opt_ops::gemm::resolve_call_table`]) so cached state
+    /// can never be served across interpreter lifetimes (the ABA guard).
+    pub fn owner_token(&self) -> u64 {
+        self.owner
     }
 
     /// True if optional input `i` is present.

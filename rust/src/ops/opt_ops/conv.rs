@@ -74,7 +74,12 @@ fn is_pointwise(s: &ConvShape) -> bool {
 
 /// int8 conv over prepare-time packed weights and folded biases
 /// (the per-invoke body of [`OptConvKernel`]). `packed_filter` /
-/// `fused_bias` come from [`gemm::pack_filter`] / [`gemm::fold_bias`].
+/// `fused_bias` come from [`gemm::pack_filter`] / [`gemm::fold_bias`];
+/// `table` is the backend side table resolved **once for this invoke**
+/// ([`gemm::resolve_call_table`]) and threaded through every per-row
+/// GEMM call — the im2col path makes one call per output row, so the
+/// old per-call lookup cost the VNNI tier one RwLock read + hash probe
+/// per row ([`gemm::CallTable::none`] for callers outside a lifecycle).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_i8_packed(
     s: &ConvShape,
@@ -82,6 +87,7 @@ pub fn conv2d_i8_packed(
     input: &[i8],
     packed_filter: &[i8],
     fused_bias: &[i32],
+    table: &gemm::CallTable,
     patch: &mut [i8],
     output: &mut [i8],
 ) {
@@ -96,8 +102,8 @@ pub fn conv2d_i8_packed(
     // 1x1 stride-1 fast path: the whole conv is one GEMM over input rows.
     if is_pointwise(s) {
         let rows = s.batch * s.out_h * s.out_w;
-        gemm::gemm_i8_packed(
-            rows, k, s.out_c, input, packed_filter, fused_bias, &gq, output, s.out_c,
+        gemm::gemm_i8_packed_with_table(
+            rows, k, s.out_c, input, packed_filter, fused_bias, &gq, output, s.out_c, table,
         );
         return;
     }
@@ -109,7 +115,7 @@ pub fn conv2d_i8_packed(
         for oy in 0..s.out_h {
             gather_patch_row(s, in_batch, oy, pad_value, patch);
             let out_row_base = (b * s.out_h + oy) * s.out_w * s.out_c;
-            gemm::gemm_i8_packed(
+            gemm::gemm_i8_packed_with_table(
                 s.out_w,
                 k,
                 s.out_c,
@@ -119,6 +125,7 @@ pub fn conv2d_i8_packed(
                 &gq,
                 &mut output[out_row_base..out_row_base + s.out_w * s.out_c],
                 s.out_c,
+                table,
             );
         }
     }
@@ -260,8 +267,9 @@ impl Kernel for OptConvKernel {
         let packed = crate::ops::cast_i8_mut(ctx.persistent_bytes(fh)?);
         gemm::pack_filter(filter, out_c, k, packed);
         // VNNI-owned side table (kept out of the shared fused-bias buffer
-        // so ForceDispatch can still flip tiers over this model state).
-        gemm::cache_packed_compensation(packed, out_c, k);
+        // so ForceDispatch can still flip tiers over this model state),
+        // scoped to this interpreter's owner token (the ABA guard).
+        gemm::cache_packed_compensation(packed, out_c, k, ctx.owner_token());
         let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
         gemm::fold_bias(filter, out_c, k, data.input_offset, bias, fused);
         Ok(())
@@ -286,8 +294,12 @@ impl Kernel for OptConvKernel {
                     Some(PackedSpec { filter: Some(fh), fused_bias }) => {
                         let packed = ctx.persistent_i8(fh)?;
                         let fused = ctx.persistent_i32(fused_bias)?;
+                        // One side-table resolve per op invoke, shared by
+                        // every per-row GEMM call below.
+                        let table = gemm::resolve_call_table(packed, ctx.owner_token());
                         conv2d_i8_packed(
-                            &s, &q, ctx.input_i8(0)?, packed, fused, patch, ctx.output_i8(0)?,
+                            &s, &q, ctx.input_i8(0)?, packed, fused, &table, patch,
+                            ctx.output_i8(0)?,
                         );
                     }
                     _ => {
@@ -362,10 +374,12 @@ mod tests {
             gemm::pack_filter(&filter, s.out_c, k, &mut packed);
             let mut fused = vec![0i32; s.out_c];
             gemm::fold_bias(&filter, s.out_c, k, q.input_offset, bias_opt, &mut fused);
-            // ...then the lean invoke body.
+            // ...then the lean invoke body (table resolved once, as the
+            // kernel's invoke does; NO_OWNER outside a lifecycle).
             let mut got = vec![0i8; n_out];
             let mut patch = vec![0i8; s.out_w * k];
-            conv2d_i8_packed(&s, &q, &input, &packed, &fused, &mut patch, &mut got);
+            let table = gemm::resolve_call_table(&packed, gemm::NO_OWNER);
+            conv2d_i8_packed(&s, &q, &input, &packed, &fused, &table, &mut patch, &mut got);
 
             if want != got {
                 return Err(format!("packed mismatch for shape {s:?} bias={with_bias}"));

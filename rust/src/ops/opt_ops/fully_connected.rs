@@ -25,6 +25,9 @@ pub struct OptFullyConnectedKernel;
 /// int8 FC over prepare-time packed weights and folded biases (the
 /// per-invoke body of [`OptFullyConnectedKernel`]). Requires
 /// `q.filter_offset == 0` (the int8 FC spec; enforced at prepare).
+/// `table` is the backend side table resolved once for this invoke
+/// ([`gemm::resolve_call_table`]; [`gemm::CallTable::none`] for callers
+/// outside an interpreter lifecycle).
 #[allow(clippy::too_many_arguments)]
 pub fn fully_connected_i8_packed(
     batch: usize,
@@ -34,6 +37,7 @@ pub fn fully_connected_i8_packed(
     input: &[i8],
     packed_filter: &[i8],
     fused_bias: &[i32],
+    table: &gemm::CallTable,
     output: &mut [i8],
 ) {
     debug_assert_eq!(q.filter_offset, 0, "packed FC path requires filter zero point 0");
@@ -43,8 +47,8 @@ pub fn fully_connected_i8_packed(
         act_min: q.act_min,
         act_max: q.act_max,
     };
-    gemm::gemm_i8_packed(
-        batch, in_dim, out_dim, input, packed_filter, fused_bias, &gq, output, out_dim,
+    gemm::gemm_i8_packed_with_table(
+        batch, in_dim, out_dim, input, packed_filter, fused_bias, &gq, output, out_dim, table,
     );
 }
 
@@ -143,8 +147,9 @@ impl Kernel for OptFullyConnectedKernel {
         let packed = crate::ops::cast_i8_mut(ctx.persistent_bytes(fh)?);
         gemm::pack_filter(filter, out_dim, in_dim, packed);
         // VNNI-owned side table (kept out of the shared fused-bias buffer
-        // so ForceDispatch can still flip tiers over this model state).
-        gemm::cache_packed_compensation(packed, out_dim, in_dim);
+        // so ForceDispatch can still flip tiers over this model state),
+        // scoped to this interpreter's owner token (the ABA guard).
+        gemm::cache_packed_compensation(packed, out_dim, in_dim, ctx.owner_token());
         let fused = crate::ops::cast_i32_mut(ctx.persistent_bytes(spec.fused_bias)?)?;
         gemm::fold_bias(filter, out_dim, in_dim, data.input_offset, bias, fused);
         Ok(())
@@ -170,8 +175,10 @@ impl Kernel for OptFullyConnectedKernel {
                     Some(PackedSpec { filter: Some(fh), fused_bias }) => {
                         let packed = ctx.persistent_i8(fh)?;
                         let fused = ctx.persistent_i32(fused_bias)?;
+                        // One side-table resolve per op invoke.
+                        let table = gemm::resolve_call_table(packed, ctx.owner_token());
                         fully_connected_i8_packed(
-                            batch, in_dim, out_dim, &q, ctx.input_i8(0)?, packed, fused,
+                            batch, in_dim, out_dim, &q, ctx.input_i8(0)?, packed, fused, &table,
                             ctx.output_i8(0)?,
                         );
                     }
@@ -264,8 +271,9 @@ mod tests {
             let mut fused = vec![0i32; out_dim];
             gemm::fold_bias(&filter, out_dim, in_dim, q.input_offset, bias_opt, &mut fused);
             let mut got = vec![0i8; batch * out_dim];
+            let table = gemm::resolve_call_table(&packed, gemm::NO_OWNER);
             fully_connected_i8_packed(
-                batch, in_dim, out_dim, &q, &input, &packed, &fused, &mut got,
+                batch, in_dim, out_dim, &q, &input, &packed, &fused, &table, &mut got,
             );
             if want != got {
                 return Err(format!(
@@ -298,7 +306,9 @@ mod tests {
         let mut fused = vec![0i32; 3];
         gemm::fold_bias(&filter, 3, 2, 0, None, &mut fused);
         let mut out2 = [0i8; 3];
-        fully_connected_i8_packed(1, 2, 3, &q, &input, &packed, &fused, &mut out2);
+        fully_connected_i8_packed(
+            1, 2, 3, &q, &input, &packed, &fused, &gemm::CallTable::none(), &mut out2,
+        );
         assert_eq!(out2, [1, 2, 3]);
     }
 }

@@ -93,9 +93,11 @@ impl DotKernel for VnniDot {
     /// Persistent packed buffers get their compensation cached once at
     /// populate time ([`super::cache_packed_compensation`]); a hit here
     /// removes the second weight stream from rows=1 FC calls entirely.
+    /// Consulted once per **op invoke** by [`super::resolve_call_table`]
+    /// (owner-checked — see the vnni_table ABA notes), not per GEMM call.
     #[inline(always)]
-    fn call_table(packed: &[i8]) -> Option<super::CompTable> {
-        super::vnni_comp_lookup(packed)
+    fn call_table(packed: &[i8], owner: u64) -> Option<super::CompTable> {
+        super::vnni_comp_lookup(packed, owner)
     }
 
     #[inline(always)]

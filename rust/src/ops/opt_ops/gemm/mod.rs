@@ -318,8 +318,12 @@ fn sdot_available() -> bool {
     false
 }
 
-/// The GEMM entry signature every backend front conforms to.
-type GemmFn = fn(usize, usize, usize, &[i8], &[i8], &[i32], &GemmQuant<'_>, &mut [i8], usize);
+/// The GEMM entry signature every backend front conforms to. The last
+/// parameter is the caller's pre-resolved side table (`None` when the
+/// caller did not resolve one; the body then computes per-block state
+/// from the packed bytes alone).
+type GemmFn =
+    fn(usize, usize, usize, &[i8], &[i8], &[i32], &GemmQuant<'_>, &mut [i8], usize, Option<&CallTable>);
 
 fn entry_for(b: GemmBackend) -> GemmFn {
     match b {
@@ -441,7 +445,8 @@ impl Drop for ForceDispatch {
 pub(crate) type CompTable = Arc<[i32]>;
 
 /// The AVX-VNNI compensation cache: populate-time `-128·Σf` entries per
-/// *persistent* packed buffer, keyed by the buffer's (address, length).
+/// *persistent* packed buffer, keyed by the buffer's (address, length)
+/// and **tagged with the owning interpreter's token**.
 ///
 /// This table is **owned by the VNNI tier** and deliberately kept out of
 /// the shared fused-bias buffer: the prepare-time persistent buffers stay
@@ -451,31 +456,52 @@ pub(crate) type CompTable = Arc<[i32]>;
 /// populate pass that predates the cache) falls back to the per-call
 /// [`DotKernel::block_ctx`] computation, so the table is purely a
 /// populate-pass perf hoist, never a correctness dependency.
+///
+/// The owner token closes an ABA hole in the plain `(addr, len)` keying:
+/// arena storage (and heap addresses generally) are recycled, so
+/// interpreter B can legitimately populate the same `(addr, len)` that
+/// a still-undropped (or late-dropping) interpreter A registered for
+/// *different weights*. Inserts therefore overwrite unconditionally,
+/// lookups only hit entries carrying the caller's own token, and
+/// invalidation (interpreter drop / failed-init sweep) only evicts the
+/// caller's own entries — A's late drop can neither serve nor destroy
+/// B's state.
 #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
 mod vnni_table {
-    use super::CompTable;
+    use super::{CompTable, NO_OWNER};
     use std::collections::HashMap;
     use std::sync::{OnceLock, RwLock};
 
-    static TABLE: OnceLock<RwLock<HashMap<(usize, usize), CompTable>>> = OnceLock::new();
+    /// Value = (cached compensation entries, owner token).
+    static TABLE: OnceLock<RwLock<HashMap<(usize, usize), (CompTable, u64)>>> = OnceLock::new();
 
-    fn table() -> &'static RwLock<HashMap<(usize, usize), CompTable>> {
+    fn table() -> &'static RwLock<HashMap<(usize, usize), (CompTable, u64)>> {
         TABLE.get_or_init(|| RwLock::new(HashMap::new()))
     }
 
-    pub(super) fn insert(key: (usize, usize), comps: CompTable) {
-        table().write().unwrap_or_else(|p| p.into_inner()).insert(key, comps);
+    pub(super) fn insert(key: (usize, usize), comps: CompTable, owner: u64) {
+        if owner == NO_OWNER {
+            return; // ownerless callers (benches, raw-slice tests) never cache
+        }
+        table().write().unwrap_or_else(|p| p.into_inner()).insert(key, (comps, owner));
     }
 
-    pub(super) fn lookup(key: (usize, usize)) -> Option<CompTable> {
-        table().read().unwrap_or_else(|p| p.into_inner()).get(&key).cloned()
-    }
-
-    pub(super) fn invalidate_range(base: usize, len: usize) {
+    pub(super) fn lookup(key: (usize, usize), owner: u64) -> Option<CompTable> {
+        if owner == NO_OWNER {
+            return None;
+        }
         table()
-            .write()
+            .read()
             .unwrap_or_else(|p| p.into_inner())
-            .retain(|&(addr, _), _| addr < base || addr >= base.saturating_add(len));
+            .get(&key)
+            .filter(|(_, o)| *o == owner)
+            .map(|(c, _)| c.clone())
+    }
+
+    pub(super) fn invalidate_range(base: usize, len: usize, owner: u64) {
+        table().write().unwrap_or_else(|p| p.into_inner()).retain(|&(addr, _), &mut (_, o)| {
+            o != owner || addr < base || addr >= base.saturating_add(len)
+        });
     }
 
     pub(super) fn entries() -> usize {
@@ -483,23 +509,34 @@ mod vnni_table {
     }
 }
 
-/// Per-call lookup for the VNNI dot core: cached compensation for this
-/// packed buffer, if the populate pass registered one.
+/// Owner-checked lookup for the VNNI dot core: cached compensation for
+/// this packed buffer, if the populate pass registered one under the
+/// same owner token.
 #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
-pub(crate) fn vnni_comp_lookup(packed: &[i8]) -> Option<CompTable> {
-    vnni_table::lookup((packed.as_ptr() as usize, packed.len()))
+pub(crate) fn vnni_comp_lookup(packed: &[i8], owner: u64) -> Option<CompTable> {
+    vnni_table::lookup((packed.as_ptr() as usize, packed.len()), owner)
 }
+
+/// The owner token meaning "no owner": cache inserts are dropped and
+/// lookups always miss. Used by benches and raw-slice tests that drive
+/// the packed kernels outside an interpreter lifecycle. Real tokens are
+/// handed out by the interpreter (one per build, never reused).
+pub const NO_OWNER: u64 = 0;
 
 /// Populate-pass hook: precompute and cache the AVX-VNNI `-128·Σf`
 /// operand-offset compensation for a **persistent** packed buffer
 /// (output of [`pack_filter`] living in the arena tail), so a rows=1 FC
 /// invoke on the VNNI tier no longer streams the packed weights twice.
 ///
+/// `owner` is the caller's interpreter token (see [`NO_OWNER`]): the
+/// entry **overwrites unconditionally** (the buffer's bytes just changed,
+/// whatever entry sat at this address is stale by definition) and is
+/// tagged so only the same owner's lookups hit it and only the same
+/// owner's [`invalidate_compensation_range`] evicts it.
+///
 /// No-op unless the VNNI tier is compiled in (`tfmicro_dotprod_tiers`)
-/// and available on this CPU. Callers that drop the underlying storage
-/// must invalidate via [`invalidate_compensation_range`] — the
-/// interpreter does this for its arena on drop.
-pub fn cache_packed_compensation(packed: &[i8], out_c: usize, k: usize) {
+/// and available on this CPU, or when `owner == NO_OWNER`.
+pub fn cache_packed_compensation(packed: &[i8], out_c: usize, k: usize, owner: u64) {
     #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
     {
         if GemmBackend::AvxVnni.available() {
@@ -510,25 +547,28 @@ pub fn cache_packed_compensation(packed: &[i8], out_c: usize, k: usize) {
                 let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
                 comps.extend_from_slice(&<avx_vnni::VnniDot as DotKernel>::block_ctx(fblk, k));
             }
-            vnni_table::insert((packed.as_ptr() as usize, packed.len()), comps.into());
+            vnni_table::insert((packed.as_ptr() as usize, packed.len()), comps.into(), owner);
         }
     }
     #[cfg(not(all(target_arch = "x86_64", tfmicro_dotprod_tiers)))]
     {
-        let _ = (packed, out_c, k);
+        let _ = (packed, out_c, k, owner);
     }
 }
 
-/// Drop every cached compensation entry whose packed buffer lives inside
-/// `[base, base+len)`. Called by the interpreter's drop for its arena:
-/// arena storage is reused across interpreter builds, so entries must
-/// not outlive the packed bytes they were computed from.
-pub fn invalidate_compensation_range(base: *const u8, len: usize) {
+/// Drop every cached compensation entry **owned by `owner`** whose packed
+/// buffer lives inside `[base, base+len)`. Called by the interpreter's
+/// drop (and failed-init sweep) for its own persistent buffers: arena
+/// storage is reused across interpreter builds, so entries must not
+/// outlive the packed bytes they were computed from — while entries the
+/// same addresses now legitimately carry for a *newer* interpreter must
+/// survive a late drop (the ABA case the owner tag exists for).
+pub fn invalidate_compensation_range(base: *const u8, len: usize, owner: u64) {
     #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
-    vnni_table::invalidate_range(base as usize, len);
+    vnni_table::invalidate_range(base as usize, len, owner);
     #[cfg(not(all(target_arch = "x86_64", tfmicro_dotprod_tiers)))]
     {
-        let _ = (base, len);
+        let _ = (base, len, owner);
     }
 }
 
@@ -543,6 +583,49 @@ pub fn compensation_cache_entries() -> usize {
     {
         0
     }
+}
+
+/// A side-table handle resolved **once per op invoke** and threaded
+/// through every GEMM call of that invoke (conv's per-output-row calls
+/// included), replacing the old once-per-`gemm_i8_packed`-call RwLock
+/// read + hash probe. Opaque: holds the active backend's cached
+/// per-block state when one exists (today: the AVX-VNNI compensation
+/// entries), or nothing — backends ignore what they cannot use, so a
+/// stale-tier handle is never a correctness hazard, only a recompute.
+pub struct CallTable(Option<CompTable>);
+
+impl CallTable {
+    /// A handle resolving to nothing (backends recompute per block).
+    pub fn none() -> CallTable {
+        CallTable(None)
+    }
+}
+
+/// Count of side-table resolutions ([`resolve_call_table`] calls). The
+/// per-invoke hoist is pinned by asserting this advances once per
+/// packed-GEMM **op invoke** — not once per interior GEMM call/row.
+static TABLE_RESOLVES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Process-wide [`resolve_call_table`] counter (tests/introspection).
+pub fn call_table_resolves() -> u64 {
+    TABLE_RESOLVES.load(Ordering::Relaxed)
+}
+
+/// Resolve the active backend's populate-time side table for `packed`
+/// under the caller's `owner` token — the **per-op-invoke** lookup
+/// (one RwLock read + hash probe at most), whose result feeds every
+/// [`gemm_i8_packed_with_table`] call of the invoke via
+/// [`DotKernel::call_table`]-style per-block reads.
+pub fn resolve_call_table(packed: &[i8], owner: u64) -> CallTable {
+    TABLE_RESOLVES.fetch_add(1, Ordering::Relaxed);
+    #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
+    {
+        if active_backend() == GemmBackend::AvxVnni {
+            return CallTable(<avx_vnni::VnniDot as DotKernel>::call_table(packed, owner));
+        }
+    }
+    let _ = (packed, owner);
+    CallTable(None)
 }
 
 // ---------------------------------------------------------------------------
@@ -568,13 +651,14 @@ pub(crate) trait DotKernel {
     type BlockCtx: Copy;
     /// Compute the per-block state for `fblk` (layout contract above).
     fn block_ctx(fblk: &[i8], k: usize) -> Self::BlockCtx;
-    /// Per-call side-table lookup, consulted **once** per GEMM call by
-    /// [`gemm_body`] before the block loop. Backends without a
-    /// populate-time cache keep the `None` default (zero lookup cost);
-    /// the VNNI tier returns its cached compensation entries for
-    /// persistent packed buffers (see [`cache_packed_compensation`]).
+    /// Side-table lookup, consulted **once per op invoke** by
+    /// [`resolve_call_table`] (not per GEMM call — conv makes one call
+    /// per output row). Backends without a populate-time cache keep the
+    /// `None` default (zero lookup cost); the VNNI tier returns its
+    /// cached compensation entries for persistent packed buffers under
+    /// the matching owner token (see [`cache_packed_compensation`]).
     #[inline(always)]
-    fn call_table(_packed: &[i8]) -> Option<CompTable> {
+    fn call_table(_packed: &[i8], _owner: u64) -> Option<CompTable> {
         None
     }
     /// [`block_ctx`](DotKernel::block_ctx) with an optional `(table,
@@ -652,6 +736,7 @@ fn gemm_body<D: DotKernel>(
     q: &GemmQuant,
     out: &mut [i8],
     out_stride: usize,
+    table: Option<&CallTable>,
 ) {
     debug_assert!(lhs.len() >= rows * k);
     // No release assert needed here (contrast dw_body): the arch
@@ -662,14 +747,14 @@ fn gemm_body<D: DotKernel>(
     debug_assert!(fused_bias.len() >= out_c);
     debug_assert!(rows == 0 || out.len() >= (rows - 1) * out_stride + out_c);
 
-    // One side-table lookup per call (not per block): backends without a
-    // populate-time cache compile this to a constant None.
-    let table = D::call_table(packed);
+    // The side table was resolved once per op invoke by the caller
+    // (resolve_call_table); a table-less call just recomputes per block.
+    let table: Option<&CompTable> = table.and_then(|t| t.0.as_ref());
     for blk in 0..out_c.div_ceil(OC_BLOCK) {
         let oc0 = blk * OC_BLOCK;
         let live = OC_BLOCK.min(out_c - oc0);
         let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
-        let bctx = D::block_ctx_cached(fblk, k, table.as_ref().map(|t| (t, blk)));
+        let bctx = D::block_ctx_cached(fblk, k, table.map(|t| (t, blk)));
         let mut r = 0usize;
         while r + ROW_BLOCK <= rows {
             let x0 = &lhs[r * k..r * k + k];
@@ -712,7 +797,28 @@ pub fn gemm_i8_packed(
     out: &mut [i8],
     out_stride: usize,
 ) {
-    dispatch_fn()(rows, k, out_c, lhs, packed, fused_bias, q, out, out_stride)
+    dispatch_fn()(rows, k, out_c, lhs, packed, fused_bias, q, out, out_stride, None)
+}
+
+/// [`gemm_i8_packed`] with a pre-resolved side table: the kernel invoke
+/// paths (conv im2col's per-row calls, conv 1×1, FC) resolve the table
+/// once per **op invoke** via [`resolve_call_table`] and thread it
+/// through every call, so the per-row RwLock read + hash probe the old
+/// per-call lookup paid is gone from the hot loop.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed_with_table(
+    rows: usize,
+    k: usize,
+    out_c: usize,
+    lhs: &[i8],
+    packed: &[i8],
+    fused_bias: &[i32],
+    q: &GemmQuant,
+    out: &mut [i8],
+    out_stride: usize,
+    table: &CallTable,
+) {
+    dispatch_fn()(rows, k, out_c, lhs, packed, fused_bias, q, out, out_stride, Some(table))
 }
 
 #[cfg(test)]
@@ -947,7 +1053,7 @@ mod tests {
 
         let mut scalar_out = vec![0i8; rows * out_c];
         gemm_body::<scalar::ScalarDot>(
-            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c,
+            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c, None,
         );
         let mut naive_out = vec![0i8; rows * out_c];
         gemm_naive(
@@ -998,9 +1104,10 @@ mod tests {
         let (packed, fused) = case.precompute();
         let q = case.quant();
         let (rows, k, out_c) = (case.rows, case.k, case.out_c);
+        const OWNER: u64 = 0x0A1;
 
         if !GemmBackend::AvxVnni.available() {
-            cache_packed_compensation(&packed, out_c, k);
+            cache_packed_compensation(&packed, out_c, k, OWNER);
             assert_eq!(
                 compensation_cache_entries(),
                 0,
@@ -1011,33 +1118,88 @@ mod tests {
 
         let mut scalar_out = vec![0i8; rows * out_c];
         gemm_body::<scalar::ScalarDot>(
-            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c,
+            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut scalar_out, out_c, None,
         );
 
         let guard = ForceDispatch::force(GemmBackend::AvxVnni).expect("vnni available");
         let mut uncached = vec![0i8; rows * out_c];
         gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut uncached, out_c);
 
-        cache_packed_compensation(&packed, out_c, k);
+        cache_packed_compensation(&packed, out_c, k, OWNER);
         #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
         {
-            let table = vnni_comp_lookup(&packed).expect("entry registered for this buffer");
+            let table =
+                vnni_comp_lookup(&packed, OWNER).expect("entry registered for this buffer");
             for blk in 0..out_c.div_ceil(OC_BLOCK) {
                 let fblk = &packed[blk * OC_BLOCK * k..(blk + 1) * OC_BLOCK * k];
                 let fresh = <avx_vnni::VnniDot as DotKernel>::block_ctx(fblk, k);
                 assert_eq!(&table[blk * OC_BLOCK..(blk + 1) * OC_BLOCK], &fresh[..]);
             }
         }
+        // The per-invoke resolved-table path must be bit-identical too.
+        let resolved = resolve_call_table(&packed, OWNER);
+        assert!(resolved.0.is_some(), "resolve under the owner token hits the entry");
         let mut cached = vec![0i8; rows * out_c];
-        gemm_i8_packed(rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut cached, out_c);
+        gemm_i8_packed_with_table(
+            rows, k, out_c, &case.lhs, &packed, &fused, &q, &mut cached, out_c, &resolved,
+        );
         drop(guard);
 
         assert_eq!(uncached, scalar_out, "vnni (uncached) == scalar");
         assert_eq!(cached, scalar_out, "vnni (cached) == scalar");
 
-        invalidate_compensation_range(packed.as_ptr() as *const u8, packed.len());
+        invalidate_compensation_range(packed.as_ptr() as *const u8, packed.len(), OWNER);
         #[cfg(all(target_arch = "x86_64", tfmicro_dotprod_tiers))]
-        assert!(vnni_comp_lookup(&packed).is_none(), "invalidate evicts the entry");
+        assert!(vnni_comp_lookup(&packed, OWNER).is_none(), "invalidate evicts the entry");
+    }
+
+    /// The ABA staleness guard (owner-tagged entries): an entry cached by
+    /// one interpreter at an (addr, len) the allocator later hands to
+    /// another interpreter must neither be *served* to nor *evicted by*
+    /// the wrong owner — lookups and invalidation are owner-checked, and
+    /// re-caching overwrites unconditionally.
+    #[test]
+    fn compensation_side_table_is_owner_scoped() {
+        let _serialize = super::FORCING_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seeded(0xABA);
+        let case = Case::random(&mut rng);
+        let (packed, _fused) = case.precompute();
+        let (k, out_c) = (case.k, case.out_c);
+        let (a, b) = (0x0Au64, 0x0Bu64);
+
+        if !GemmBackend::AvxVnni.available() {
+            // Without the tier the cache is inert; the API must still be
+            // a total no-op for every owner.
+            cache_packed_compensation(&packed, out_c, k, a);
+            assert_eq!(compensation_cache_entries(), 0);
+            assert!(resolve_call_table(&packed, a).0.is_none());
+            return;
+        }
+        let _guard = ForceDispatch::force(GemmBackend::AvxVnni).expect("vnni available");
+
+        // Owner A caches; only A's resolves hit, and NO_OWNER never does.
+        cache_packed_compensation(&packed, out_c, k, a);
+        assert!(resolve_call_table(&packed, a).0.is_some());
+        assert!(resolve_call_table(&packed, b).0.is_none(), "wrong owner must miss");
+        assert!(resolve_call_table(&packed, NO_OWNER).0.is_none());
+
+        // Owner B re-caches the same (addr, len): unconditional overwrite
+        // transfers ownership (the bytes are B's now).
+        cache_packed_compensation(&packed, out_c, k, b);
+        assert!(resolve_call_table(&packed, b).0.is_some());
+        assert!(resolve_call_table(&packed, a).0.is_none(), "stale owner must miss");
+
+        // A's late drop (the ABA ordering) must not destroy B's entry…
+        invalidate_compensation_range(packed.as_ptr() as *const u8, packed.len(), a);
+        assert!(resolve_call_table(&packed, b).0.is_some(), "wrong-owner eviction leaked");
+        // …while B's own invalidation evicts it.
+        invalidate_compensation_range(packed.as_ptr() as *const u8, packed.len(), b);
+        assert!(resolve_call_table(&packed, b).0.is_none());
+
+        // NO_OWNER callers never populate the cache at all.
+        cache_packed_compensation(&packed, out_c, k, NO_OWNER);
+        assert!(resolve_call_table(&packed, a).0.is_none());
+        assert!(resolve_call_table(&packed, NO_OWNER).0.is_none());
     }
 
     #[test]

@@ -57,8 +57,9 @@ pub use fully_connected::{
     fully_connected_i8_blocked, fully_connected_i8_packed, OptFullyConnectedKernel,
 };
 pub use gemm::{
-    active_backend, detected_backend, dispatch_is_forced, fold_bias, gemm_i8_packed, pack_filter,
-    packed_filter_len, ForceDispatch, GemmBackend, GemmMult, GemmQuant,
+    active_backend, call_table_resolves, detected_backend, dispatch_is_forced, fold_bias,
+    gemm_i8_packed, gemm_i8_packed_with_table, pack_filter, packed_filter_len, resolve_call_table,
+    CallTable, ForceDispatch, GemmBackend, GemmMult, GemmQuant, NO_OWNER,
 };
 
 use super::OpResolver;

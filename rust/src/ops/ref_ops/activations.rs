@@ -5,7 +5,7 @@
 //! but we honour whatever the exporter wrote.
 
 use crate::error::Result;
-use crate::ops::common::SoftmaxData;
+use crate::ops::common::{i8_zero_point, SoftmaxData};
 use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
 use crate::tensor::DType;
 
@@ -34,6 +34,11 @@ impl Kernel for ReluKernel {
             return Err(ctx.fail("relu requires identical input/output shape and dtype"));
         }
         if input.dtype == DType::I8 {
+            // The zero point is the invoke-time clamp floor: an
+            // out-of-range value (corrupt model) would put the floor
+            // above the i8 ceiling and panic inside `clamp`. Reject it
+            // here as an invalid model instead.
+            i8_zero_point(input, "relu input").map_err(|e| ctx.fail(e.to_string()))?;
             // ReLU does not rescale.
             if input.zero_point()? != output.zero_point()?
                 || (input.scale()? - output.scale()?).abs() > 1e-7
@@ -88,6 +93,8 @@ impl Kernel for TanhKernel {
             return Err(ctx.fail("tanh requires matching element counts"));
         }
         if input.dtype == DType::I8 {
+            i8_zero_point(input, "tanh input").map_err(|e| ctx.fail(e.to_string()))?;
+            i8_zero_point(output, "tanh output").map_err(|e| ctx.fail(e.to_string()))?;
             ctx.set_op_data(OpData::Softmax(SoftmaxData {
                 beta_scale: input.scale()?,
                 out_scale: output.scale()?,
@@ -137,6 +144,8 @@ impl Kernel for LogisticKernel {
             return Err(ctx.fail("logistic requires matching element counts"));
         }
         if input.dtype == DType::I8 {
+            i8_zero_point(input, "logistic input").map_err(|e| ctx.fail(e.to_string()))?;
+            i8_zero_point(output, "logistic output").map_err(|e| ctx.fail(e.to_string()))?;
             ctx.set_op_data(OpData::Softmax(SoftmaxData {
                 beta_scale: input.scale()?,
                 out_scale: output.scale()?,

@@ -58,8 +58,12 @@ impl Kernel for MeanKernel {
         }
         let mut data = MeanData { axes, divisor, ..Default::default() };
         if input.dtype == DType::I8 {
-            data.in_zp = input.zero_point()?;
-            data.out_zp = output.zero_point()?;
+            // Out-of-range zero points (corrupt model) would skew the
+            // `sum - n·zp_in` correction arbitrarily; reject at prepare.
+            data.in_zp = crate::ops::common::i8_zero_point(input, "mean input")
+                .map_err(|e| ctx.fail(e.to_string()))?;
+            data.out_zp = crate::ops::common::i8_zero_point(output, "mean output")
+                .map_err(|e| ctx.fail(e.to_string()))?;
             data.mult = QuantizedMultiplier::try_from_real(
                 input.scale()? as f64 / (output.scale()? as f64 * divisor as f64),
             )

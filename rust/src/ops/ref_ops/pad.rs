@@ -5,6 +5,7 @@
 //! 0.0), floats with 0.0 — TFLite semantics.
 
 use crate::error::Result;
+use crate::ops::common::i8_zero_point;
 use crate::ops::{Kernel, OpContext, PrepareContext};
 use crate::tensor::DType;
 
@@ -15,6 +16,11 @@ impl Kernel for PadKernel {
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
         let input = ctx.input(0)?;
         let output = ctx.output(0)?;
+        if input.dtype == DType::I8 {
+            // The pad fill byte is the zero point cast to i8 at invoke;
+            // reject out-of-range values here so the cast cannot wrap.
+            i8_zero_point(input, "pad input").map_err(|e| ctx.fail(e.to_string()))?;
+        }
         let pads = ctx.input_const_i32(1)?;
         let rank = input.shape.rank();
         if pads.len() != rank * 2 {
@@ -46,6 +52,8 @@ impl Kernel for PadKernel {
         let out_bytes = ctx.output_bytes(0)?;
         match in_meta.dtype {
             DType::I8 => {
+                // In-range by the prepare-time i8_zero_point check, so
+                // this cast cannot wrap.
                 let zp = in_meta.zero_point()? as i8;
                 out_bytes.fill(zp as u8);
             }

@@ -15,6 +15,14 @@
 //! including the populate-time VNNI compensation side table, which must
 //! be a pure hoist (MinUn's point that quantized-inference correctness
 //! is an end-to-end property, not a per-kernel one).
+//!
+//! The f32 leg: a whole-model f32 twin pair — one TMF model for the
+//! interpreter, one HLO-text module for the simulated PJRT backend,
+//! built from the same weights — must agree to 1e-5 under every tier
+//! (the interpreter-vs-compiled conformance behind
+//! `bench_compiled_vs_interp`). The once-per-op-invoke side-table
+//! resolve count is pinned separately in `invoke_accounting.rs`, whose
+//! own test binary keeps the process-global counter unpolluted.
 
 use tfmicro::arena::Arena;
 use tfmicro::interpreter::MicroInterpreter;
@@ -242,6 +250,173 @@ fn hotword_like_bit_exact_across_all_tiers() {
 #[test]
 fn person_detection_like_bit_exact_across_all_tiers() {
     sweep_model("person-detection-like", &person_detection_like_model(), 256);
+}
+
+// ---------------------------------------------------------------------------
+// f32 whole-model sweep: simulated PJRT vs the full interpreter
+// ---------------------------------------------------------------------------
+
+/// Weights for the f32 twin pair (one seed, both representations).
+struct F32Net {
+    w0: Vec<f32>, // [8, 16]
+    b0: Vec<f32>, // [8]
+    w1: Vec<f32>, // [4, 8]
+    b1: Vec<f32>, // [4]
+}
+
+fn f32_net() -> F32Net {
+    let mut rng = Rng::seeded(0xF32);
+    let mut take = |n: usize, span: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-span, span)).collect()
+    };
+    F32Net { w0: take(8 * 16, 0.5), b0: take(8, 0.2), w1: take(4 * 8, 0.5), b1: take(4, 0.2) }
+}
+
+/// The TMF side of the twin: reshape-free FC(16→8, relu) → FC(8→4) →
+/// softmax, all f32 (fused activations — semantically the `maximum`
+/// instructions the HLO side spells out).
+fn f32_model(net: &F32Net) -> Model {
+    let f32_bytes = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+    let mut b = ModelBuilder::new("f32-hotword-like");
+    let t_in = b.add_tensor("in", DType::F32, &[1, 16], None);
+    let w0 = b.add_buffer(&f32_bytes(&net.w0));
+    let t_w0 = b.add_tensor("w0", DType::F32, &[8, 16], Some(w0));
+    let b0 = b.add_buffer(&f32_bytes(&net.b0));
+    let t_b0 = b.add_tensor("b0", DType::F32, &[8], Some(b0));
+    let t_fc0 = b.add_tensor("fc0", DType::F32, &[1, 8], None);
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_in, t_w0, t_b0],
+        &[t_fc0],
+        fully_connected_options(Activation::Relu),
+    );
+    let w1 = b.add_buffer(&f32_bytes(&net.w1));
+    let t_w1 = b.add_tensor("w1", DType::F32, &[4, 8], Some(w1));
+    let b1 = b.add_buffer(&f32_bytes(&net.b1));
+    let t_b1 = b.add_tensor("b1", DType::F32, &[4], Some(b1));
+    let t_fc1 = b.add_tensor("fc1", DType::F32, &[1, 4], None);
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_fc0, t_w1, t_b1],
+        &[t_fc1],
+        fully_connected_options(Activation::None),
+    );
+    let t_sm = b.add_tensor("probs", DType::F32, &[1, 4], None);
+    b.add_op(BuiltinOp::Softmax, &[t_fc1], &[t_sm], softmax_options(1.0));
+    b.set_io(&[t_in], &[t_sm]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+/// The HLO side of the twin: the same network in the text shape
+/// `python/compile/aot.py`'s jax lowering emits (dot with
+/// rhs_contracting_dims={1}, explicit broadcasts, reduce-based softmax).
+fn f32_hlo_text(net: &F32Net) -> String {
+    let row = |v: &[f32]| -> String {
+        v.iter().map(|x| format!("{x:?}")).collect::<Vec<_>>().join(", ")
+    };
+    let mat = |v: &[f32], cols: usize| -> String {
+        v.chunks(cols).map(|r| format!("{{ {} }}", row(r))).collect::<Vec<_>>().join(", ")
+    };
+    format!(
+        "HloModule jit_fn, entry_computation_layout={{(f32[1,16]{{1,0}})->(f32[1,4]{{1,0}})}}\n\n\
+         %region_0.20 (Arg_0.21: f32[], Arg_1.22: f32[]) -> f32[] {{\n  \
+         %Arg_0.21 = f32[] parameter(0)\n  %Arg_1.22 = f32[] parameter(1)\n  \
+         ROOT %maximum.23 = f32[] maximum(f32[] %Arg_0.21, f32[] %Arg_1.22)\n}}\n\n\
+         %region_1.30 (Arg_0.31: f32[], Arg_1.32: f32[]) -> f32[] {{\n  \
+         %Arg_0.31 = f32[] parameter(0)\n  %Arg_1.32 = f32[] parameter(1)\n  \
+         ROOT %add.33 = f32[] add(f32[] %Arg_0.31, f32[] %Arg_1.32)\n}}\n\n\
+         ENTRY %main.40 (Arg_0.1: f32[1,16]) -> (f32[1,4]) {{\n  \
+         %Arg_0.1 = f32[1,16]{{1,0}} parameter(0)\n  \
+         %constant.2 = f32[8,16]{{1,0}} constant({{ {w0} }})\n  \
+         %dot.3 = f32[1,8]{{1,0}} dot(f32[1,16]{{1,0}} %Arg_0.1, f32[8,16]{{1,0}} %constant.2), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}\n  \
+         %constant.4 = f32[8]{{0}} constant({{{b0}}})\n  \
+         %broadcast.5 = f32[1,8]{{1,0}} broadcast(f32[8]{{0}} %constant.4), dimensions={{1}}\n  \
+         %add.6 = f32[1,8]{{1,0}} add(f32[1,8]{{1,0}} %dot.3, f32[1,8]{{1,0}} %broadcast.5)\n  \
+         %constant.7 = f32[] constant(0)\n  \
+         %broadcast.8 = f32[1,8]{{1,0}} broadcast(f32[] %constant.7), dimensions={{}}\n  \
+         %maximum.9 = f32[1,8]{{1,0}} maximum(f32[1,8]{{1,0}} %add.6, f32[1,8]{{1,0}} %broadcast.8)\n  \
+         %constant.10 = f32[4,8]{{1,0}} constant({{ {w1} }})\n  \
+         %dot.11 = f32[1,4]{{1,0}} dot(f32[1,8]{{1,0}} %maximum.9, f32[4,8]{{1,0}} %constant.10), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}\n  \
+         %constant.12 = f32[4]{{0}} constant({{{b1}}})\n  \
+         %broadcast.13 = f32[1,4]{{1,0}} broadcast(f32[4]{{0}} %constant.12), dimensions={{1}}\n  \
+         %add.14 = f32[1,4]{{1,0}} add(f32[1,4]{{1,0}} %dot.11, f32[1,4]{{1,0}} %broadcast.13)\n  \
+         %constant.15 = f32[] constant(-inf)\n  \
+         %reduce.24 = f32[1]{{0}} reduce(f32[1,4]{{1,0}} %add.14, f32[] %constant.15), dimensions={{1}}, to_apply=%region_0.20\n  \
+         %broadcast.25 = f32[1,4]{{1,0}} broadcast(f32[1]{{0}} %reduce.24), dimensions={{0}}\n  \
+         %subtract.26 = f32[1,4]{{1,0}} subtract(f32[1,4]{{1,0}} %add.14, f32[1,4]{{1,0}} %broadcast.25)\n  \
+         %exponential.27 = f32[1,4]{{1,0}} exponential(f32[1,4]{{1,0}} %subtract.26)\n  \
+         %constant.28 = f32[] constant(0)\n  \
+         %reduce.34 = f32[1]{{0}} reduce(f32[1,4]{{1,0}} %exponential.27, f32[] %constant.28), dimensions={{1}}, to_apply=%region_1.30\n  \
+         %broadcast.35 = f32[1,4]{{1,0}} broadcast(f32[1]{{0}} %reduce.34), dimensions={{0}}\n  \
+         %divide.36 = f32[1,4]{{1,0}} divide(f32[1,4]{{1,0}} %exponential.27, f32[1,4]{{1,0}} %broadcast.35)\n  \
+         ROOT %tuple.37 = (f32[1,4]) tuple(f32[1,4]{{1,0}} %divide.36)\n}}\n",
+        w0 = mat(&net.w0, 16),
+        b0 = row(&net.b0),
+        w1 = mat(&net.w1, 8),
+        b1 = row(&net.b1),
+    )
+}
+
+/// The whole-model f32 contract, swept across every dispatch tier: the
+/// simulated PJRT backend executing the HLO twin must agree with the
+/// full interpreter running the TMF twin to 1e-5, under every
+/// `GemmBackend` (f32 doesn't route through the int8 GEMM, so this also
+/// pins that tier-forcing can't contaminate the float path), and the
+/// interpreter outputs themselves must be bit-identical across tiers.
+#[test]
+fn f32_whole_model_simulated_pjrt_matches_interpreter_across_tiers() {
+    use tfmicro::runtime::XlaRuntime;
+
+    let net = f32_net();
+    let model = f32_model(&net);
+    let dir = std::env::temp_dir().join("tfmicro_dispatch_f32_twin");
+    std::fs::create_dir_all(&dir).unwrap();
+    let hlo = dir.join("f32_twin.hlo.txt");
+    std::fs::write(&hlo, f32_hlo_text(&net)).unwrap();
+
+    let rt = XlaRuntime::cpu().expect("PJRT client");
+    let exe = rt
+        .load_hlo_text(&hlo)
+        .expect("whole-model f32 artifact must compile on the simulated backend");
+
+    let mut rng = Rng::seeded(0x5EED);
+    let inputs: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..16).map(|_| rng.range_f32(-2.0, 2.0)).collect()).collect();
+    let resolver = OpResolver::with_optimized_ops();
+
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for backend in GemmBackend::all() {
+        let Some(_guard) = ForceDispatch::force(backend) else {
+            eprintln!("SKIP f32 sweep: backend {backend} unavailable on this machine");
+            continue;
+        };
+        let mut arena = Arena::new(64 * 1024);
+        let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+        let mut outs = Vec::new();
+        for x in &inputs {
+            interp.input_mut(0).unwrap().copy_from_f32(x).unwrap();
+            interp.invoke().expect("invoke");
+            let got = interp.output(0).unwrap().as_f32().unwrap().to_vec();
+
+            // Compiled (simulated PJRT) vs interpreted, within 1e-5.
+            let compiled = exe.run_f32(&[(x, &[1, 16])]).expect("compiled execute");
+            assert_eq!(compiled.len(), 1);
+            for (c, i) in compiled[0].iter().zip(&got) {
+                assert!(
+                    (c - i).abs() < 1e-5,
+                    "{backend}: compiled {c} vs interpreted {i} diverged past 1e-5"
+                );
+            }
+            let sum: f32 = got.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "softmax output must sum to 1");
+            outs.push(got);
+        }
+        match &baseline {
+            None => baseline = Some(outs),
+            Some(b) => assert_eq!(&outs, b, "{backend}: f32 outputs differ across tiers"),
+        }
+    }
+    assert!(baseline.is_some(), "scalar at minimum must have run");
 }
 
 /// The real exported models, when `artifacts/` exists (otherwise the

@@ -274,10 +274,11 @@ fn xla_staged_bytes_show_up_in_kernel_buffers() {
     let offloaded = usage_for(0);
     let fallback = usage_for(5);
 
-    // Held state only: weights + bias/mult/shift tables. The per-invoke
-    // input/output buffers are transient and must NOT be charged.
-    let _ = m;
-    let staged = n * k + 3 * n * std::mem::size_of::<i32>();
+    // Held state: weights + bias/mult/shift tables + the reusable invoke
+    // staging pair (input buffer m*k + output vec m*n) that makes the
+    // warm offload path allocation-free. All of it lives for the
+    // interpreter's lifetime, so all of it is charged.
+    let staged = n * k + 3 * n * std::mem::size_of::<i32>() + m * k + m * n;
     assert_eq!(
         offloaded.kernel_buffers,
         fallback.kernel_buffers + staged,
@@ -285,6 +286,104 @@ fn xla_staged_bytes_show_up_in_kernel_buffers() {
     );
     assert_eq!(offloaded.persistent, fallback.persistent + staged);
     assert_eq!(offloaded.total, fallback.total + staged);
+}
+
+/// The ABA-staleness regression from the VNNI side-table review: build
+/// and drop two interpreters **over the same arena** with different
+/// weights under `ForceDispatch(AvxVnni)`. The second build's packed
+/// buffers land at the first build's recycled addresses, so a side
+/// table that served entries by bare `(addr, len)` — or one whose
+/// populate pass declined to overwrite an existing entry — would hand
+/// model B model A's `-128·Σf` compensation and silently corrupt the
+/// output. The owner-tagged table must keep every build's VNNI output
+/// bit-identical to scalar. (No-op sweep on machines without the VNNI
+/// tier: forcing refuses and the test reduces to the scalar leg.)
+#[test]
+fn vnni_side_table_is_not_confused_by_arena_reuse_across_interpreters() {
+    // Two models, identical layout (so packed buffers land at identical
+    // recycled offsets), different weights (so a stale entry is visible).
+    let models = [conv_fc_model(), conv_fc_model_reseeded()];
+    let resolver = OpResolver::with_optimized_ops();
+    let mut input = vec![0i8; 128];
+    Rng::seeded(0xABA).fill_i8(&mut input);
+
+    // Scalar ground truth, per model, on a fresh arena each.
+    let scalar_outs: Vec<Vec<i8>> = models
+        .iter()
+        .map(|m| {
+            let _g = ForceDispatch::force(GemmBackend::Scalar).expect("scalar always available");
+            let mut arena = Arena::new(64 * 1024);
+            let mut interp = MicroInterpreter::new(m, &resolver, &mut arena).expect("init");
+            interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+            interp.invoke().expect("invoke");
+            interp.output(0).unwrap().as_i8().unwrap().to_vec()
+        })
+        .collect();
+    assert_ne!(scalar_outs[0], scalar_outs[1], "the two models must actually differ");
+
+    let Some(_guard) = ForceDispatch::force(GemmBackend::AvxVnni) else {
+        eprintln!("SKIP: AVX-VNNI unavailable; owner-tag unit tests in gemm cover the logic");
+        return;
+    };
+    // One arena, reused: build A (caches entries at its packed
+    // addresses), drop A, build B at the same addresses with different
+    // weights, then interleave once more in the opposite order.
+    let mut arena = Arena::new(64 * 1024);
+    for round in 0..2 {
+        for (mi, model) in models.iter().enumerate() {
+            let mut interp = MicroInterpreter::new(model, &resolver, &mut arena).expect("init");
+            interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+            interp.invoke().expect("invoke");
+            let got = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+            assert_eq!(
+                got, scalar_outs[mi],
+                "round {round}, model {mi}: VNNI over a reused arena diverged from scalar \
+                 (stale compensation served across interpreter lifetimes?)"
+            );
+        }
+    }
+}
+
+/// Same graph as [`conv_fc_model`], different weight seed — the "other
+/// model" of the ABA regression pair.
+fn conv_fc_model_reseeded() -> Model {
+    let mut rng = Rng::seeded(0xBEEF);
+    let mut b = ModelBuilder::new("populate-aba");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 8, 8, 2], None, q(0.5, -2));
+    let wbuf = {
+        let mut w = vec![0i8; 4 * 3 * 3 * 2];
+        rng.fill_i8(&mut w);
+        b.add_buffer(&w.into_iter().map(|v| v as u8).collect::<Vec<_>>())
+    };
+    let t_w = b.add_quant_tensor("w", DType::I8, &[4, 3, 3, 2], Some(wbuf), q(0.01, 0));
+    let bbuf = b.add_buffer(
+        &(0..4).flat_map(|_| rng.range_i32(-300, 300).to_le_bytes()).collect::<Vec<_>>(),
+    );
+    let t_b = b.add_tensor("b", DType::I32, &[4], Some(bbuf));
+    let t_conv = b.add_quant_tensor("conv", DType::I8, &[1, 4, 4, 4], None, q(0.4, 1));
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_in, t_w, t_b],
+        &[t_conv],
+        conv_options(Padding::Same, Activation::Relu, (2, 2), (1, 1), None),
+    );
+    let t_flat = b.add_quant_tensor("flat", DType::I8, &[1, 64], None, q(0.4, 1));
+    b.add_op(BuiltinOp::Reshape, &[t_conv], &[t_flat], vec![]);
+    let w2 = {
+        let mut w = vec![0i8; 10 * 64];
+        rng.fill_i8(&mut w);
+        b.add_buffer(&w.into_iter().map(|v| v as u8).collect::<Vec<_>>())
+    };
+    let t_w2 = b.add_quant_tensor("w2", DType::I8, &[10, 64], Some(w2), q(0.01, 0));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 10], None, q(0.8, 0));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_flat, t_w2, -1],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    Model::from_bytes(&b.finish()).unwrap()
 }
 
 /// The populate pass is re-entrant for the XLA kernel too: rebuilding on

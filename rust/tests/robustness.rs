@@ -88,6 +88,92 @@ fn fuzz_random_bytes_never_panic() {
     });
 }
 
+/// Out-of-range zero points on i8 tensors (representable in the schema,
+/// which bounds zero points at 16 bits to cover every quantized dtype)
+/// must be rejected at prepare as an invalid model — never wrap inside
+/// a kernel (`zp as i8` in Pad's fill) and never panic (ReLU's clamp
+/// floor landing above the i8 ceiling). Builds the hostile models with
+/// the schema writer, exactly how an adversarial exporter would.
+#[test]
+fn out_of_range_zero_points_rejected_at_prepare_never_panic() {
+    let build = |op: BuiltinOp, zp: i32| -> Model {
+        let mut b = ModelBuilder::new("bad-zp");
+        let q = QuantParams::per_tensor(0.5, zp);
+        match op {
+            BuiltinOp::Pad => {
+                let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q.clone());
+                let pads = b.add_buffer(
+                    &[0i32, 0, 1, 1].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>(),
+                );
+                let t_p = b.add_tensor("pads", DType::I32, &[2, 2], Some(pads));
+                let t_out = b.add_quant_tensor("out", DType::I8, &[1, 6], None, q);
+                b.add_op(BuiltinOp::Pad, &[t_in, t_p], &[t_out], vec![]);
+                b.set_io(&[t_in], &[t_out]);
+            }
+            BuiltinOp::Mean => {
+                let t_in = b.add_quant_tensor("in", DType::I8, &[1, 2, 2, 1], None, q.clone());
+                let axes = b.add_buffer(
+                    &[1i32, 2].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>(),
+                );
+                let t_a = b.add_tensor("axes", DType::I32, &[2], Some(axes));
+                let t_out = b.add_quant_tensor("out", DType::I8, &[1, 1], None, q);
+                b.add_op(
+                    BuiltinOp::Mean,
+                    &[t_in, t_a],
+                    &[t_out],
+                    tfmicro::schema::writer::mean_options(false),
+                );
+                b.set_io(&[t_in], &[t_out]);
+            }
+            _ => {
+                // Relu / Tanh / Logistic: unary, same-shape.
+                let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q.clone());
+                let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4], None, q);
+                b.add_op(op, &[t_in], &[t_out], vec![]);
+                b.set_io(&[t_in], &[t_out]);
+            }
+        }
+        Model::from_bytes(&b.finish()).unwrap()
+    };
+
+    let resolver = OpResolver::with_reference_ops();
+    let ops =
+        [BuiltinOp::Pad, BuiltinOp::Relu, BuiltinOp::Mean, BuiltinOp::Tanh, BuiltinOp::Logistic];
+    for op in ops {
+        // In-range zero points still build and run.
+        let good = build(op, -3);
+        let mut arena = Arena::new(16 * 1024);
+        let mut interp =
+            MicroInterpreter::new(&good, &resolver, &mut arena).expect("in-range zp builds");
+        interp.invoke().expect("in-range zp invokes");
+
+        // Out-of-range ones must error at init — not wrap, not panic.
+        for zp in [200, 300, -200, 32767, -32768] {
+            let bad = build(op, zp);
+            let mut arena = Arena::new(16 * 1024);
+            let err = MicroInterpreter::new(&bad, &resolver, &mut arena);
+            assert!(err.is_err(), "{op:?} with zp {zp} must fail interpreter init");
+            let msg = err.err().unwrap().to_string();
+            assert!(msg.contains("zero point"), "{op:?}/{zp}: unexpected error '{msg}'");
+        }
+    }
+
+    // Writer-level fuzz: random 16-bit zero points across the schema
+    // writer; init must never panic and must reject every out-of-range
+    // value (the in-range ones are free to succeed).
+    check(Cases { count: 60, seed: 0x2B }, |rng: &mut Rng| {
+        let zp = rng.range_i32(-32768, 32767);
+        let op = ops[rng.below(ops.len())];
+        let model = build(op, zp);
+        let mut arena = Arena::new(16 * 1024);
+        let built = MicroInterpreter::new(&model, &resolver, &mut arena);
+        if !(-128..=127).contains(&zp) && built.is_ok() {
+            return Err(format!("{op:?} accepted out-of-range zp {zp}"));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn offline_plan_end_to_end() {
     // Host side: analyze + precompute a plan; embed it in the model;

@@ -2,6 +2,11 @@
 //! `python/compile/aot.py` load, compile, and execute correctly through
 //! the Rust PJRT runtime — and the compiled whole-model baseline agrees
 //! with the Python float oracle.
+//!
+//! Skip-path semantics: a **missing** artifact is the only SKIP (the
+//! build step simply hasn't run). A **present** artifact that fails to
+//! compile or execute — on the simulated backend (which runs whole-model
+//! f32 graphs natively) or a real one — is a test failure.
 
 use tfmicro::runtime::XlaRuntime;
 
@@ -22,17 +27,23 @@ fn load_f32_golden(path: &std::path::Path) -> Option<(Vec<f32>, Vec<f32>)> {
     Some((f(8, in_len), f(8 + in_len * 4, out_len)))
 }
 
-/// Compile an artifact, treating the simulated backend's documented
-/// "unsupported module" outcome as a skip (same as a missing artifact):
-/// whole-model f32 graphs need a real PJRT client.
-fn compile_or_skip(rt: &XlaRuntime, hlo: &std::path::Path) -> Option<tfmicro::runtime::CompiledComputation> {
+/// Compile an artifact that is **present on disk**. Skip-path
+/// semantics: a missing artifact is the only legitimate SKIP (handled
+/// by the callers before reaching here); an artifact that is present
+/// but will not compile — including the simulated backend reporting an
+/// op outside its whole-model f32 contract — is a loud failure. The
+/// simulated backend executes whole-model f32 graphs since the
+/// HLO-evaluator work, so "unsupported" on a real exported artifact
+/// means the contract regressed or the exporter emitted something new;
+/// either way CI must see red, not a skip that looks like a pass.
+fn compile_present(rt: &XlaRuntime, hlo: &std::path::Path) -> tfmicro::runtime::CompiledComputation {
     match rt.load_hlo_text(hlo) {
-        Ok(exe) => Some(exe),
-        Err(e) if rt.is_simulated() && e.to_string().contains("unsupported by the simulated") => {
-            eprintln!("SKIP: {e}");
-            None
-        }
-        Err(e) => panic!("compile {}: {e}", hlo.display()),
+        Ok(exe) => exe,
+        Err(e) => panic!(
+            "artifact {} is present but did not compile ({}backend): {e}",
+            hlo.display(),
+            if rt.is_simulated() { "simulated " } else { "real " },
+        ),
     }
 }
 
@@ -41,11 +52,11 @@ fn hotword_compiled_baseline_matches_python_oracle() {
     let dir = artifacts_dir();
     let hlo = dir.join("hotword_f32.hlo.txt");
     if !hlo.exists() {
-        eprintln!("SKIP: run `make artifacts` first");
+        eprintln!("SKIP (no artifacts): run `make artifacts` first");
         return;
     }
     let rt = XlaRuntime::cpu().expect("PJRT CPU client");
-    let Some(exe) = compile_or_skip(&rt, &hlo) else { return };
+    let exe = compile_present(&rt, &hlo);
     let (x, want) = load_f32_golden(&dir.join("hotword_f32_golden.bin")).expect("golden");
     let outs = exe.run_f32(&[(&x, &[1, x.len()])]).expect("execute");
     assert_eq!(outs.len(), 1, "model returns one output");
@@ -64,14 +75,35 @@ fn pallas_lowered_conv_ref_graph_executes() {
     // The whole conv_ref float model with its first conv routed through
     // the Layer-1 Pallas kernel: lowered HLO must load and run, and
     // produce a valid softmax distribution.
+    //
+    // One carve-out from the fail-loud rule: if the Pallas kernel
+    // lowered to a `custom-call` (opaque vendor-kernel semantics only a
+    // real PJRT client can execute), that is a *documented* boundary of
+    // the simulated backend's f32 contract, not a regression — skip
+    // with an explicit message. Any other compile failure is red.
     let dir = artifacts_dir();
     let hlo = dir.join("conv_ref_pallas.hlo.txt");
     if !hlo.exists() {
-        eprintln!("SKIP: run `make artifacts` first");
+        eprintln!("SKIP (no artifacts): run `make artifacts` first");
         return;
     }
     let rt = XlaRuntime::cpu().unwrap();
-    let Some(exe) = compile_or_skip(&rt, &hlo) else { return };
+    let exe = match rt.load_hlo_text(&hlo) {
+        Ok(exe) => exe,
+        Err(e)
+            if rt.is_simulated()
+                && e.to_string().contains("custom-call") =>
+        {
+            eprintln!(
+                "SKIP (known limitation): {e} — the Pallas custom-call needs a real PJRT client"
+            );
+            return;
+        }
+        Err(e) => panic!(
+            "artifact {} is present but did not compile (simulated backend): {e}",
+            hlo.display()
+        ),
+    };
     let x = vec![0.5f32; 16 * 16];
     let outs = exe.run_f32(&[(&x, &[1, 16, 16, 1])]).expect("execute");
     let got = &outs[0];
@@ -99,7 +131,7 @@ fn xla_fc_kernel_offloads_and_matches_rust() {
     let dir = artifacts_dir();
     let hlo = dir.join("fc_int8.hlo.txt");
     if !hlo.exists() {
-        eprintln!("SKIP: run `make artifacts` first");
+        eprintln!("SKIP (no artifacts): run `make artifacts` first");
         return;
     }
 
