@@ -90,11 +90,47 @@ EOF
     exit 0
 fi
 
+# --- no-panic lint gate (toolchain-free) -----------------------------------
+# The serving layer and the schema byte readers sit on the §4.4.1 "never
+# crash the host" boundary: a panic there either kills a worker (serving)
+# or the whole application (loader). The real enforcement is the
+# catch_unwind tests + fault suite, but those need cargo; this grep gate
+# runs even on the toolchain-less container. It strips everything from
+# the first `#[cfg(test)]` onward (tests may unwrap freely) and fails on
+# panicking constructs in what remains.
+echo "== no-panic lint: serving + schema readers =="
+no_panic_gate() {
+    local file="$1"
+    # Drop test modules, then doc/line comments, then flag panic sites.
+    local hits
+    hits=$(sed '/#\[cfg(test)\]/,$d' "$file" \
+        | sed 's://.*$::' \
+        | grep -nE '\.unwrap\(\)|\.expect\(|panic!\(|unreachable!\(|todo!\(|unimplemented!\(' \
+        || true)
+    if [[ -n "$hits" ]]; then
+        echo "no-panic gate FAILED for $file:" >&2
+        echo "$hits" >&2
+        return 1
+    fi
+    echo "  $file: clean"
+}
+no_panic_gate rust/src/serving/mod.rs
+no_panic_gate rust/src/schema/reader.rs
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+# --- fault-tolerance suite (explicit) --------------------------------------
+# Already part of `cargo test` above, but re-run visibly: this is the
+# suite that proves a poisoned worker loses exactly one request, the
+# breaker opens on budget exhaustion, and an offload failure degrades to
+# the bit-exact CPU path. Deterministic (fixed-seed fault schedules), so
+# a red run here is always reproducible with this exact command.
+echo "== fault-tolerance suite: cargo test --test serving_faults =="
+cargo test --test serving_faults -- --nocapture
 
 # --- XLA integration suite visibility --------------------------------------
 # Skip-path semantics (pinned since the whole-model f32 contract landed):

@@ -84,7 +84,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     });
     assert_eq!(in_len, 96 * 96 * 3);
 
-    let cfg = ServingConfig { workers, queue_depth: 16, arena_bytes: 256 * 1024 };
+    let cfg =
+        ServingConfig { workers, queue_depth: 16, arena_bytes: 256 * 1024, ..Default::default() };
     let report = run_closed_loop(&model, &resolver, cfg, requests, out_len)?;
     println!("serving: {}", report.summary());
     println!("per-worker completions: {:?}", report.per_worker);

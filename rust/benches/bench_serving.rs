@@ -3,6 +3,7 @@
 //! worker, zero shared mutable state — throughput should scale until the
 //! cores run out).
 
+use tfmicro::faults::{self, FaultPlan};
 use tfmicro::ops::OpResolver;
 use tfmicro::schema::Model;
 use tfmicro::serving::{make_requests, run_closed_loop, ServingConfig};
@@ -30,7 +31,12 @@ fn main() {
             rng.fill_i8(&mut v);
             v
         });
-        let cfg = ServingConfig { workers, queue_depth: 16, arena_bytes: 256 * 1024 };
+        let cfg = ServingConfig {
+            workers,
+            queue_depth: 16,
+            arena_bytes: 256 * 1024,
+            ..Default::default()
+        };
         let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
         if workers == 1 {
             baseline = report.throughput_rps;
@@ -65,8 +71,62 @@ fn main() {
             rng.fill_i8(&mut v);
             v
         });
-        let cfg = ServingConfig { workers, queue_depth: 64, arena_bytes: 64 * 1024 };
+        let cfg = ServingConfig {
+            workers,
+            queue_depth: 64,
+            arena_bytes: 64 * 1024,
+            ..Default::default()
+        };
         let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
         println!("  workers={workers}: {}", report.summary());
     }
+
+    // Chaos column: the same hotword workload with a seed-scheduled panic
+    // plan installed — measures what fault tolerance costs (respawn
+    // overhead) and prints the taxonomy alongside the clean numbers.
+    println!("\n== Hotword under injected chaos (seeded kernel panics) ==");
+    if !faults::compiled_in() {
+        println!("  (fault injection compiled out; rerun with --features fault-injection)");
+        return;
+    }
+    // Injected panics are expected here: silence their backtraces while
+    // leaving real panics loud.
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let msg = info
+            .payload()
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| info.payload().downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        if !msg.contains("injected fault:") {
+            default_hook(info);
+        }
+    }));
+    let n = 2000u64;
+    // ~0.5% of requests panic their worker; seed fixed so every run of
+    // this bench injects the identical schedule.
+    let guard = faults::install(FaultPlan::new().seeded(
+        faults::KERNEL_PANIC,
+        None,
+        0xC4A5,
+        n,
+        n / 200,
+    ));
+    let mut rng = Rng::seeded(42);
+    let requests = make_requests(n as usize, |_| {
+        let mut v = vec![0i8; in_len];
+        rng.fill_i8(&mut v);
+        v
+    });
+    let cfg = ServingConfig {
+        workers: 4,
+        queue_depth: 64,
+        arena_bytes: 64 * 1024,
+        max_respawns: n as usize,
+        ..Default::default()
+    };
+    let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
+    drop(guard);
+    println!("  workers=4: {}", report.summary());
 }

@@ -99,7 +99,8 @@ const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu
   mem       arena accounting, Table 2 style (--planner greedy|linear|auto, --kernels ref|opt)
   overhead  measured interpreter overhead, Figure 6 methodology (--iters N)
   simulate  cycle-model Figure 6 row (--platform m4|dsp)
-  serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N)
+  serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N,
+            --max-respawns N, --deadline-ms N)
   cpu       detected CPU features + chosen kernel dispatch (no model needed)";
 
 /// `tfmicro cpu`: field debugging for "why is this slow here" — what the
@@ -298,6 +299,12 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
                 workers: args.usize_or("workers", 2),
                 queue_depth: args.usize_or("queue", 32),
                 arena_bytes: args.usize_or("arena-kb", 512) * 1024,
+                max_respawns: args.usize_or("max-respawns", 4),
+                default_deadline: args
+                    .get("deadline-ms")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .map(std::time::Duration::from_millis),
+                ..Default::default()
             };
             let n = args.usize_or("requests", 256);
             let mut rng = Rng::seeded(7);
@@ -309,6 +316,13 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             let report = run_closed_loop(&model, &resolver, cfg, requests, out_len)?;
             println!("{}", report.summary());
             println!("per-worker: {:?}", report.per_worker);
+            // Error taxonomy: always printed so a clean run is visibly
+            // clean and a degraded one says exactly what was contained.
+            println!("faults: {}", report.faults.summary());
+            println!(
+                "breaker: {}",
+                if report.breaker_open { "OPEN (respawn budget exhausted)" } else { "closed" }
+            );
             println!(
                 "cold start (first-request latency per worker): {:?}",
                 report

@@ -78,6 +78,31 @@ pub enum Error {
     /// The serving layer rejected or dropped a request.
     Serving(String),
 
+    /// A non-blocking or timed `submit` found the request queue full and
+    /// shed the request instead of waiting (load shedding).
+    QueueFull {
+        /// Id of the shed request.
+        id: u64,
+    },
+
+    /// The serving circuit breaker is open (worker respawn budget
+    /// exhausted or the whole fleet died); `submit` rejects fast.
+    CircuitOpen {
+        /// Id of the rejected request.
+        id: u64,
+    },
+
+    /// A request's input length does not match the model's input tensor,
+    /// caught at `submit` so it can never panic or truncate in a worker.
+    InvalidInput {
+        /// Id of the rejected request.
+        id: u64,
+        /// Element count the model's input tensor expects.
+        expected: usize,
+        /// Element count the request carried.
+        got: usize,
+    },
+
     /// I/O error loading a model or artifact from disk (host-side tooling
     /// only; the embedded-style API works from in-memory byte slices).
     Io(std::io::Error),
@@ -109,6 +134,17 @@ impl std::fmt::Display for Error {
             Error::PlanFailed(msg) => write!(f, "memory planning failed: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
             Error::Serving(msg) => write!(f, "serving error: {msg}"),
+            Error::QueueFull { id } => {
+                write!(f, "serving queue full: request {id} shed at submit")
+            }
+            Error::CircuitOpen { id } => write!(
+                f,
+                "serving circuit breaker open: request {id} rejected (respawn budget exhausted)"
+            ),
+            Error::InvalidInput { id, expected, got } => write!(
+                f,
+                "invalid request input: request {id} carries {got} elements, model expects {expected}"
+            ),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

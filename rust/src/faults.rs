@@ -1,0 +1,359 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Fault tolerance is untestable without faults, and nondeterministic
+//! faults make flaky tests. This module provides **named fault points**
+//! compiled into the hot paths (interpreter invoke loop, PJRT execute,
+//! serving worker loop) that fire on an exact, seed-derivable schedule:
+//! a [`FaultPlan`] maps a point name (plus an optional target, e.g. an op
+//! key) to a set of hit indices, and the Nth time execution crosses that
+//! point the fault fires. Tests install a plan, run a workload, and can
+//! assert the resulting [`crate::serving::FaultTaxonomy`] counts match
+//! the schedule *exactly*.
+//!
+//! ## Fault points
+//!
+//! | name | target | effect at the instrumented site |
+//! |------|--------|--------------------------------|
+//! | [`KERNEL_PANIC`] | op key (e.g. `"FULLY_CONNECTED"`) | `panic!` before the kernel's invoke |
+//! | [`PJRT_EXECUTE`] | — | PJRT execute returns an XLA error |
+//! | [`ARENA_EXHAUSTED`] | — | invoke returns `Error::ArenaExhausted` |
+//! | [`QUEUE_STALL`] | — | serving worker parks until [`release_stalls`] |
+//!
+//! ## Compile-time gating
+//!
+//! The machinery is active under `debug_assertions` (so `cargo test` works
+//! with no extra flags) or the `fault-injection` cargo feature (to opt in
+//! for release benches). In a plain release build every point is an
+//! inlined no-op and the scheduling state is compiled out entirely —
+//! production binaries carry no fault-injection branches beyond a
+//! constant-false `if`.
+//!
+//! Installing a plan takes a process-wide lock held by the returned
+//! [`FaultGuard`], so concurrent `cargo test` threads that inject faults
+//! serialize instead of corrupting each other's schedules.
+
+use crate::error::Error;
+
+/// Fault point: panic immediately before a kernel's invoke. Target is the
+/// op key as reported by the schema (`Operator::key()`).
+pub const KERNEL_PANIC: &str = "kernel_panic";
+/// Fault point: PJRT execute fails with an XLA error at invoke time.
+pub const PJRT_EXECUTE: &str = "pjrt_execute";
+/// Fault point: the interpreter reports arena exhaustion at invoke.
+pub const ARENA_EXHAUSTED: &str = "arena_exhausted";
+/// Fault point: a serving worker parks after pulling a request, simulating
+/// a wedged consumer, until [`release_stalls`] opens the gate.
+pub const QUEUE_STALL: &str = "queue_stall";
+
+/// Whether the fault-injection machinery is compiled into this build.
+pub const fn compiled_in() -> bool {
+    cfg!(any(test, debug_assertions, feature = "fault-injection"))
+}
+
+/// A schedule of faults to inject: each entry names a fault point, an
+/// optional target filter, and the exact hit indices at which to fire.
+#[derive(Debug, Default, Clone)]
+pub struct FaultPlan {
+    specs: Vec<(String, Option<String>, Vec<u64>)>,
+}
+
+impl FaultPlan {
+    /// Empty plan (injects nothing until populated).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Fire `point` (optionally only for `target`) at the given 0-based
+    /// hit indices. The hit counter increments every time execution
+    /// crosses a matching point, fired or not.
+    pub fn fail_at(mut self, point: &str, target: Option<&str>, hits: &[u64]) -> Self {
+        self.specs.push((point.to_string(), target.map(str::to_string), hits.to_vec()));
+        self
+    }
+
+    /// Fire `point` at `count` distinct seed-derived hit indices drawn
+    /// uniformly from `[0, window)`. Same seed, same schedule — always.
+    pub fn seeded(
+        self,
+        point: &str,
+        target: Option<&str>,
+        seed: u64,
+        window: u64,
+        count: u64,
+    ) -> Self {
+        let mut rng = crate::testutil::Rng::seeded(seed);
+        let window = window.max(1);
+        let count = count.min(window);
+        let mut hits = std::collections::BTreeSet::new();
+        while (hits.len() as u64) < count {
+            hits.insert(rng.next_u64() % window);
+        }
+        let hits: Vec<u64> = hits.into_iter().collect();
+        self.fail_at(point, target, &hits)
+    }
+}
+
+#[cfg(any(test, debug_assertions, feature = "fault-injection"))]
+mod active {
+    use super::{Error, FaultPlan};
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    use std::sync::{Condvar, Mutex, MutexGuard, RwLock};
+    use std::time::{Duration, Instant};
+
+    struct Spec {
+        point: String,
+        target: Option<String>,
+        hits: Vec<u64>,
+        crossed: AtomicU64,
+        injected: AtomicU64,
+    }
+
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static PLAN: RwLock<Vec<Spec>> = RwLock::new(Vec::new());
+    static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+    // Stall gate: parked workers wait on the condvar until released.
+    static STALL_RELEASED: AtomicBool = AtomicBool::new(true);
+    static STALL_PARKED: AtomicUsize = AtomicUsize::new(0);
+    static STALL_MUTEX: Mutex<()> = Mutex::new(());
+    static STALL_CVAR: Condvar = Condvar::new();
+
+    /// Installed-plan handle; uninstalls (and releases any parked stalls)
+    /// on drop. Holding it serializes fault-injecting tests process-wide.
+    pub struct FaultGuard {
+        _serialize: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            ACTIVE.store(false, Ordering::SeqCst);
+            super::release_stalls();
+            PLAN.write().unwrap_or_else(|p| p.into_inner()).clear();
+        }
+    }
+
+    pub fn install(plan: FaultPlan) -> FaultGuard {
+        let serialize = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let mut specs = PLAN.write().unwrap_or_else(|p| p.into_inner());
+            specs.clear();
+            for (point, target, hits) in plan.specs {
+                specs.push(Spec {
+                    point,
+                    target,
+                    hits,
+                    crossed: AtomicU64::new(0),
+                    injected: AtomicU64::new(0),
+                });
+            }
+        }
+        STALL_RELEASED.store(false, Ordering::SeqCst);
+        ACTIVE.store(true, Ordering::SeqCst);
+        FaultGuard { _serialize: serialize }
+    }
+
+    /// Count every matching spec's crossing; fire if any hit index matches.
+    pub fn should_fire(point: &str, target: Option<&str>) -> bool {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return false;
+        }
+        let specs = PLAN.read().unwrap_or_else(|p| p.into_inner());
+        let mut fire = false;
+        for spec in specs.iter() {
+            if spec.point != point {
+                continue;
+            }
+            if let Some(want) = &spec.target {
+                if target != Some(want.as_str()) {
+                    continue;
+                }
+            }
+            let n = spec.crossed.fetch_add(1, Ordering::SeqCst);
+            if spec.hits.contains(&n) {
+                spec.injected.fetch_add(1, Ordering::SeqCst);
+                fire = true;
+            }
+        }
+        fire
+    }
+
+    /// Total fires so far for `point` under the currently installed plan.
+    pub fn injected(point: &str) -> u64 {
+        let specs = PLAN.read().unwrap_or_else(|p| p.into_inner());
+        specs
+            .iter()
+            .filter(|s| s.point == point)
+            .map(|s| s.injected.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    pub fn release_stalls() {
+        STALL_RELEASED.store(true, Ordering::SeqCst);
+        let _g = STALL_MUTEX.lock().unwrap_or_else(|p| p.into_inner());
+        STALL_CVAR.notify_all();
+    }
+
+    pub fn stalls_parked() -> usize {
+        STALL_PARKED.load(Ordering::SeqCst)
+    }
+
+    pub fn park_stalled() {
+        STALL_PARKED.fetch_add(1, Ordering::SeqCst);
+        let start = Instant::now();
+        let mut g = STALL_MUTEX.lock().unwrap_or_else(|p| p.into_inner());
+        // Hard cap so a test that forgets release_stalls() fails by
+        // timeout instead of wedging the whole suite.
+        while !STALL_RELEASED.load(Ordering::SeqCst) && start.elapsed() < Duration::from_secs(10)
+        {
+            let (ng, _) = STALL_CVAR
+                .wait_timeout(g, Duration::from_millis(20))
+                .unwrap_or_else(|p| p.into_inner());
+            g = ng;
+        }
+        drop(g);
+        STALL_PARKED.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn kernel_panic_point(op_key: &str) {
+        if should_fire(super::KERNEL_PANIC, Some(op_key)) {
+            panic!("injected fault: kernel panic in op '{op_key}'");
+        }
+    }
+
+    pub fn arena_exhaustion_point() -> Option<Error> {
+        if should_fire(super::ARENA_EXHAUSTED, None) {
+            Some(Error::ArenaExhausted {
+                requested: 1,
+                available: 0,
+                capacity: 0,
+                section: "invoke (injected fault)",
+            })
+        } else {
+            None
+        }
+    }
+
+    pub fn pjrt_execute_point() -> Result<(), String> {
+        if should_fire(super::PJRT_EXECUTE, None) {
+            Err("injected fault: pjrt execute error".to_string())
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn queue_stall_point() {
+        if should_fire(super::QUEUE_STALL, None) {
+            park_stalled();
+        }
+    }
+}
+
+#[cfg(any(test, debug_assertions, feature = "fault-injection"))]
+pub use active::{
+    arena_exhaustion_point, injected, install, kernel_panic_point, pjrt_execute_point,
+    queue_stall_point, release_stalls, should_fire, stalls_parked, FaultGuard,
+};
+
+// Plain release builds: every point is an inlined no-op so callers compile
+// identically and the optimizer erases the calls.
+#[cfg(not(any(test, debug_assertions, feature = "fault-injection")))]
+mod inert {
+    use super::{Error, FaultPlan};
+
+    /// Inert guard; installing a plan in a build without the machinery
+    /// does nothing (and injects nothing).
+    pub struct FaultGuard;
+
+    #[inline(always)]
+    pub fn install(_plan: FaultPlan) -> FaultGuard {
+        FaultGuard
+    }
+
+    #[inline(always)]
+    pub fn should_fire(_point: &str, _target: Option<&str>) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn injected(_point: &str) -> u64 {
+        0
+    }
+
+    #[inline(always)]
+    pub fn release_stalls() {}
+
+    #[inline(always)]
+    pub fn stalls_parked() -> usize {
+        0
+    }
+
+    #[inline(always)]
+    pub fn kernel_panic_point(_op_key: &str) {}
+
+    #[inline(always)]
+    pub fn arena_exhaustion_point() -> Option<Error> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn pjrt_execute_point() -> Result<(), String> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn queue_stall_point() {}
+}
+
+#[cfg(not(any(test, debug_assertions, feature = "fault-injection")))]
+pub use inert::{
+    arena_exhaustion_point, injected, install, kernel_panic_point, pjrt_execute_point,
+    queue_stall_point, release_stalls, should_fire, stalls_parked, FaultGuard,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_fires_at_exact_hit_indices() {
+        let guard = install(FaultPlan::new().fail_at(ARENA_EXHAUSTED, None, &[1, 3]));
+        assert!(arena_exhaustion_point().is_none()); // hit 0
+        assert!(arena_exhaustion_point().is_some()); // hit 1
+        assert!(arena_exhaustion_point().is_none()); // hit 2
+        assert!(arena_exhaustion_point().is_some()); // hit 3
+        assert!(arena_exhaustion_point().is_none()); // hit 4
+        assert_eq!(injected(ARENA_EXHAUSTED), 2);
+        drop(guard);
+        // Uninstalled: never fires.
+        assert!(arena_exhaustion_point().is_none());
+    }
+
+    #[test]
+    fn target_filter_matches_op_key_only() {
+        let guard = install(FaultPlan::new().fail_at(KERNEL_PANIC, Some("conv_2d"), &[0]));
+        // Wrong target: no fire, and the crossing does not consume hit 0.
+        assert!(!should_fire(KERNEL_PANIC, Some("fully_connected")));
+        assert!(should_fire(KERNEL_PANIC, Some("conv_2d")));
+        assert!(!should_fire(KERNEL_PANIC, Some("conv_2d")));
+        assert_eq!(injected(KERNEL_PANIC), 1);
+        drop(guard);
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let a = FaultPlan::new().seeded(PJRT_EXECUTE, None, 0xFEED, 100, 5);
+        let b = FaultPlan::new().seeded(PJRT_EXECUTE, None, 0xFEED, 100, 5);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let c = FaultPlan::new().seeded(PJRT_EXECUTE, None, 0xBEEF, 100, 5);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"));
+    }
+
+    #[test]
+    fn injected_panic_is_catchable() {
+        let guard = install(FaultPlan::new().fail_at(KERNEL_PANIC, Some("add"), &[0]));
+        let caught = std::panic::catch_unwind(|| kernel_panic_point("add"));
+        assert!(caught.is_err());
+        assert_eq!(injected(KERNEL_PANIC), 1);
+        drop(guard);
+    }
+}

@@ -649,8 +649,18 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         let base = self.backing.base_ptr();
         let len = self.backing.len();
         let result = (|| -> Result<()> {
+            // Deterministic fault point: an injected arena-exhaustion at
+            // invoke surfaces as a clean application-level error, exactly
+            // like a real §4.4.1 allocation failure would.
+            if let Some(e) = crate::faults::arena_exhaustion_point() {
+                return Err(e);
+            }
             for (i, op) in self.model.operators().iter().enumerate() {
                 obs.begin_op(i, op.key());
+                // Deterministic fault point: injected kernel panic, used
+                // by the serving supervision tests (no-op unless a fault
+                // plan is installed; compiled out in plain release).
+                crate::faults::kernel_panic_point(op.key());
                 let ctx = OpContext::new(
                     i,
                     op,

@@ -43,6 +43,7 @@
 pub mod arena;
 pub mod cli;
 pub mod error;
+pub mod faults;
 pub mod interpreter;
 pub mod ops;
 pub mod planner;

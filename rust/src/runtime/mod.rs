@@ -57,6 +57,23 @@
 //! behind the same [`XlaRuntime`] / [`CompiledComputation`] surface;
 //! [`XlaRuntime::is_simulated`] tells tests and tools which one they are
 //! talking to.
+//!
+//! # Degraded offload (caveat)
+//!
+//! Populate-time failures (missing artifact, compile error, contract
+//! mismatch) remain **fatal to interpreter init** — they are
+//! configuration bugs and should fail loudly. Invoke-time failures are
+//! different: a backend that compiled, staged, and warmed up successfully
+//! but then fails an execute is a flaky vendor library, and killing a
+//! long-running model over it contradicts the always-on deployments the
+//! paper targets. [`XlaFcKernel`] therefore flips a **per-op degraded
+//! flag** on the first invoke-time failure and routes that op through the
+//! CPU packed kernels (same `gemm` dispatch; bit-exact for the `fc_int8`
+//! contract) from then on — outputs are unchanged, latency may be. Each
+//! degradation bumps the process-wide [`degrade_events`] counter, which
+//! the serving layer snapshots into its report's fault taxonomy; a
+//! degraded op never re-arms until the next interpreter build
+//! (re-populate resets the flag).
 
 pub(crate) mod pjrt;
 pub mod xla_kernel;
@@ -110,6 +127,20 @@ pub fn op_counters() -> XlaOpCounters {
         uploads: UPLOADS.load(Ordering::Relaxed),
         executes: EXECUTES.load(Ordering::Relaxed),
     }
+}
+
+/// Offload ops that degraded to the CPU path after an invoke-time backend
+/// failure (see the module-level "Degraded offload" caveat). One bump per
+/// op per interpreter build; monotonic for the life of the process.
+static DEGRADES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of offload-degradation events.
+pub fn degrade_events() -> u64 {
+    DEGRADES.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_degrade() {
+    DEGRADES.fetch_add(1, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------------
@@ -354,6 +385,10 @@ impl CompiledComputation {
         else {
             unreachable!("dtype checked above");
         };
+        // Deterministic fault point: an injected execute failure exercises
+        // the offload-degradation path (no-op unless a plan is installed).
+        crate::faults::pjrt_execute_point()
+            .map_err(|msg| Error::Xla(format!("execute {}: {msg}", self.name)))?;
         EXECUTES.fetch_add(1, Ordering::Relaxed);
         pjrt::exec_fc_int8_into(m, k, n, a, w, bias, mult, shift, out);
         Ok(())

@@ -51,6 +51,7 @@ use crate::ops::{Kernel, KernelFlavor, OpContext, OpData, PrepareContext};
 use crate::tensor::DType;
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, RwLock};
 
 /// The reusable invoke-path transfer state: the input staging buffer
@@ -80,6 +81,11 @@ struct XlaFcState {
     /// trusts it alone: state is reused only after verifying the staged
     /// *contents* against the model's host data, and rebuilt otherwise.
     weights_src: (usize, usize),
+    /// Set on the first invoke-time backend failure; from then on this
+    /// op routes through the bit-exact CPU packed kernels and never
+    /// touches the backend again until a re-populate re-arms it (see the
+    /// "Degraded offload" caveat in the runtime module docs).
+    degraded: AtomicBool,
 }
 
 /// FullyConnected kernel backed by an AOT XLA executable.
@@ -144,6 +150,23 @@ impl XlaFcKernel {
     fn staged_bytes(&self) -> usize {
         let (m, k, n) = self.shape;
         n * k + 3 * n * std::mem::size_of::<i32>() + m * k + m * n
+    }
+
+    /// Op indices currently degraded to the CPU path after an invoke-time
+    /// backend failure (see the "Degraded offload" caveat in the runtime
+    /// module docs). Empty when every staged op is still offloading.
+    pub fn degraded_ops(&self) -> Vec<usize> {
+        let guard = match self.state.read() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let mut v: Vec<usize> = guard
+            .iter()
+            .filter(|(_, st)| st.degraded.load(Ordering::Relaxed))
+            .map(|(i, _)| *i)
+            .collect();
+        v.sort_unstable();
+        v
     }
 }
 
@@ -210,8 +233,12 @@ impl Kernel for XlaFcKernel {
         });
         if reusable {
             // Same contents, possibly at a new address (model reloaded):
-            // refresh the invoke-time filter without re-staging.
-            guard.get_mut(&ctx.op_index).expect("verified Some above").weights_src = w_src;
+            // refresh the invoke-time filter without re-staging. A fresh
+            // interpreter build also re-arms a degraded op — populate just
+            // re-verified the staged state, so offload gets another chance.
+            let st = guard.get_mut(&ctx.op_index).expect("verified Some above");
+            st.weights_src = w_src;
+            st.degraded.store(false, Ordering::Relaxed);
             return Ok(());
         }
 
@@ -256,6 +283,7 @@ impl Kernel for XlaFcKernel {
                 shift,
                 staging: Mutex::new(InvokeStaging { input: warm_in, out: warm_out }),
                 weights_src: w_src,
+                degraded: AtomicBool::new(false),
             },
         );
         Ok(())
@@ -286,7 +314,10 @@ impl Kernel for XlaFcKernel {
                     let staged = guard
                         .get(&ctx.op_index)
                         .filter(|st| st.weights_src == (w.as_ptr() as usize, w.len()));
-                    if let Some(st) = staged {
+                    // A degraded op (earlier invoke-time backend failure)
+                    // skips the backend entirely and takes the bit-exact
+                    // CPU fallback below.
+                    if let Some(st) = staged.filter(|st| !st.degraded.load(Ordering::Relaxed)) {
                         // Input transfer + execute — the whole invoke path.
                         // The warm path reuses the per-op staging pair
                         // (restage + execute-into: zero allocations); a
@@ -306,38 +337,62 @@ impl Kernel for XlaFcKernel {
                             output.copy_from_slice(src);
                             Ok(())
                         };
-                        match st.staging.try_lock() {
-                            Ok(mut staging) => {
-                                let InvokeStaging { input, out } = &mut *staging;
-                                st.exe.restage_i8(input, a).map_err(|e| {
-                                    ctx.fail(format!("xla input transfer failed: {e}"))
-                                })?;
-                                st.exe
-                                    .execute_i8_into(
-                                        &[&*input, &st.weights, &st.bias, &st.mult, &st.shift],
-                                        out,
-                                    )
-                                    .map_err(|e| ctx.fail(format!("xla offload failed: {e}")))?;
-                                copy_out(out, output)?;
+                        let offload = (|| -> Result<()> {
+                            match st.staging.try_lock() {
+                                Ok(mut staging) => {
+                                    let InvokeStaging { input, out } = &mut *staging;
+                                    st.exe.restage_i8(input, a).map_err(|e| {
+                                        ctx.fail(format!("xla input transfer failed: {e}"))
+                                    })?;
+                                    st.exe
+                                        .execute_i8_into(
+                                            &[
+                                                &*input,
+                                                &st.weights,
+                                                &st.bias,
+                                                &st.mult,
+                                                &st.shift,
+                                            ],
+                                            out,
+                                        )
+                                        .map_err(|e| {
+                                            ctx.fail(format!("xla offload failed: {e}"))
+                                        })?;
+                                    copy_out(out, output)
+                                }
+                                Err(_) => {
+                                    let input = st.exe.stage_i8(a, &[m, k]).map_err(|e| {
+                                        ctx.fail(format!("xla input transfer failed: {e}"))
+                                    })?;
+                                    let out = st
+                                        .exe
+                                        .execute_i8(&[
+                                            &input,
+                                            &st.weights,
+                                            &st.bias,
+                                            &st.mult,
+                                            &st.shift,
+                                        ])
+                                        .map_err(|e| {
+                                            ctx.fail(format!("xla offload failed: {e}"))
+                                        })?;
+                                    copy_out(&out, output)
+                                }
                             }
+                        })();
+                        match offload {
+                            Ok(()) => return Ok(()),
                             Err(_) => {
-                                let input = st.exe.stage_i8(a, &[m, k]).map_err(|e| {
-                                    ctx.fail(format!("xla input transfer failed: {e}"))
-                                })?;
-                                let out = st
-                                    .exe
-                                    .execute_i8(&[
-                                        &input,
-                                        &st.weights,
-                                        &st.bias,
-                                        &st.mult,
-                                        &st.shift,
-                                    ])
-                                    .map_err(|e| ctx.fail(format!("xla offload failed: {e}")))?;
-                                copy_out(&out, output)?;
+                                // Graceful degradation: populate proved the
+                                // backend once, so an invoke-time failure is
+                                // a flaky vendor library, not a config bug.
+                                // Flip the flag and serve this request (and
+                                // all later ones) from the CPU path — same
+                                // outputs, reported instead of fatal.
+                                st.degraded.store(true, Ordering::Relaxed);
+                                super::note_degrade();
                             }
                         }
-                        return Ok(());
                     }
                 }
                 // Unsupported parameter combination (or nothing staged):

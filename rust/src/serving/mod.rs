@@ -21,14 +21,53 @@
 //! ([`ServingReport::cold_start_ns`]) reflects only queue wait while the
 //! fleet was initializing, and a populate regression shows up there as a
 //! widening gap versus the steady-state percentiles.
+//!
+//! # Fault model
+//!
+//! Always-on deployments must survive bad inputs and flaky vendor kernels
+//! for months, so every failure mode is *contained and counted* rather
+//! than propagated:
+//!
+//! * **Worker supervision.** Each request's invoke runs under
+//!   `catch_unwind`. A panicking kernel poisons only its own worker: the
+//!   worker's arena is marked poisoned and **never reused** (interpreter
+//!   and arena are dropped and rebuilt fresh), the panicked request is the
+//!   only one lost, and other in-flight requests complete unaffected.
+//!   Respawns draw from a fleet-wide budget
+//!   ([`ServingConfig::max_respawns`]); when it exhausts — or the whole
+//!   fleet dies — a circuit breaker opens and every subsequent submit is
+//!   rejected fast with [`Error::CircuitOpen`] instead of blocking on a
+//!   queue nobody drains.
+//! * **Deadlines + load shedding.** A [`Request`] may carry an optional
+//!   deadline; workers shed already-expired requests before invoke
+//!   (counted as `deadline_misses`). [`Submitter::try_submit`] and
+//!   [`Submitter::submit_timeout`] reject with [`Error::QueueFull`] when
+//!   the queue stays full instead of blocking forever (counted as
+//!   `sheds`).
+//! * **Input validation at submit.** A request whose input length does
+//!   not match the model's input tensor is rejected at enqueue with
+//!   [`Error::InvalidInput`] — it can never panic or truncate inside a
+//!   worker.
+//! * **Offload degradation.** An XLA op that fails at invoke time flips a
+//!   per-op degraded flag and routes through the bit-exact CPU packed
+//!   kernels from then on (see `runtime::xla_kernel`); the run reports
+//!   `degraded_ops` instead of failing.
+//! * **No panic ever reaches a submit caller**, and `run_*` only returns
+//!   `Err` for structural problems (zero workers, no worker could
+//!   initialize, output-length contract violation) — per-request failures
+//!   land in the [`FaultTaxonomy`] of the returned [`ServingReport`].
+//!
+//! The deterministic fault points driving the test suite live in
+//! [`crate::faults`]: `kernel_panic`, `pjrt_execute`, `arena_exhausted`,
+//! `queue_stall`.
 
 use crate::arena::Arena;
 use crate::error::{Error, Result};
 use crate::interpreter::MicroInterpreter;
 use crate::ops::OpResolver;
 use crate::schema::Model;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -41,11 +80,28 @@ pub struct ServingConfig {
     pub queue_depth: usize,
     /// Arena size per worker, bytes.
     pub arena_bytes: usize,
+    /// Fleet-wide budget of worker respawns after kernel panics. When it
+    /// exhausts the circuit breaker opens and submits reject fast.
+    pub max_respawns: usize,
+    /// Closed-loop feeder behavior when the queue is full: `None` blocks
+    /// (pure backpressure, the pre-fault-tolerance behavior), `Some(t)`
+    /// sheds the request after waiting `t` for queue space.
+    pub submit_timeout: Option<Duration>,
+    /// Default per-request deadline, measured from submit. Applied only
+    /// to requests that don't carry their own [`Request::deadline`].
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        ServingConfig { workers: 2, queue_depth: 32, arena_bytes: 256 * 1024 }
+        ServingConfig {
+            workers: 2,
+            queue_depth: 32,
+            arena_bytes: 256 * 1024,
+            max_respawns: 4,
+            submit_timeout: None,
+            default_deadline: None,
+        }
     }
 }
 
@@ -58,6 +114,22 @@ pub struct Request {
     pub input: Vec<i8>,
     /// Enqueue timestamp (set by `submit`).
     pub enqueued: Instant,
+    /// Optional deadline: a worker sheds the request without invoking if
+    /// the deadline has passed by the time it is pulled from the queue.
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    /// New request with no deadline.
+    pub fn new(id: u64, input: Vec<i8>) -> Self {
+        Request { id, input, enqueued: Instant::now(), deadline: None }
+    }
+
+    /// Attach an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// One inference response.
@@ -73,6 +145,58 @@ pub struct Response {
     pub worker: usize,
 }
 
+/// Error taxonomy for a serving run: every contained failure, counted.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTaxonomy {
+    /// Kernel panics caught by worker supervision (each loses exactly the
+    /// request being served).
+    pub panics: usize,
+    /// Workers respawned with a fresh interpreter + arena after a panic.
+    pub respawns: usize,
+    /// Arenas marked poisoned and abandoned (one per caught panic).
+    pub poisoned_arenas: usize,
+    /// Clean `Err` returns from invoke (no unwind; worker kept).
+    pub invoke_errors: usize,
+    /// Requests shed by a worker because their deadline had expired.
+    pub deadline_misses: usize,
+    /// Requests shed at submit because the queue stayed full
+    /// (`try_submit` / `submit_timeout`).
+    pub sheds: usize,
+    /// Submits rejected fast: circuit breaker open or invalid input.
+    pub rejected_submits: usize,
+    /// XLA ops that degraded to the CPU kernel path during the run.
+    pub degraded_ops: usize,
+    /// Requests accepted into the queue but never served (fleet died
+    /// with work still queued).
+    pub dropped: usize,
+    /// Workers that failed to build an interpreter at all.
+    pub worker_init_failures: usize,
+}
+
+impl FaultTaxonomy {
+    /// True when nothing went wrong at any layer.
+    pub fn is_clean(&self) -> bool {
+        *self == FaultTaxonomy::default()
+    }
+
+    /// Compact single-line rendering for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "panics {} respawns {} poisoned {} invoke-err {} deadline-miss {} sheds {} rejected {} degraded {} dropped {} init-fail {}",
+            self.panics,
+            self.respawns,
+            self.poisoned_arenas,
+            self.invoke_errors,
+            self.deadline_misses,
+            self.sheds,
+            self.rejected_submits,
+            self.degraded_ops,
+            self.dropped,
+            self.worker_init_failures,
+        )
+    }
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -80,7 +204,7 @@ pub struct ServingReport {
     pub completed: usize,
     /// Wall time of the whole run.
     pub wall: Duration,
-    /// Throughput in requests/second.
+    /// Throughput in requests/second (0.0 when nothing completed).
     pub throughput_rps: f64,
     /// Latency percentiles (p50, p95, p99).
     pub latency_p50: Duration,
@@ -100,12 +224,16 @@ pub struct ServingReport {
     /// (work sliding back to first invoke) widens the gap between this
     /// column and the steady-state percentiles.
     pub cold_start_ns: Vec<u64>,
+    /// Contained-failure counts (see [`FaultTaxonomy`]).
+    pub faults: FaultTaxonomy,
+    /// Whether the circuit breaker was open when the run ended.
+    pub breaker_open: bool,
 }
 
 impl ServingReport {
     /// One-line summary for logs and EXPERIMENTS.md.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} req in {:.2?}  {:.1} req/s  p50 {:?}  p95 {:?}  p99 {:?}  cold-max {:?}",
             self.completed,
             self.wall,
@@ -114,12 +242,200 @@ impl ServingReport {
             self.latency_p95,
             self.latency_p99,
             Duration::from_nanos(self.cold_start_ns.iter().copied().max().unwrap_or(0)),
-        )
+        );
+        if !self.faults.is_clean() {
+            s.push_str("  faults[");
+            s.push_str(&self.faults.summary());
+            s.push(']');
+        }
+        if self.breaker_open {
+            s.push_str("  BREAKER-OPEN");
+        }
+        s
+    }
+}
+
+/// Shared fleet state: breaker, budgets, and failure counters.
+struct FleetShared {
+    breaker_open: AtomicBool,
+    respawns_used: AtomicUsize,
+    panics: AtomicUsize,
+    poisoned_arenas: AtomicUsize,
+    invoke_errors: AtomicUsize,
+    deadline_misses: AtomicUsize,
+    sheds: AtomicUsize,
+    rejected_submits: AtomicUsize,
+    worker_init_failures: AtomicUsize,
+    /// Workers that completed at least one successful interpreter build.
+    started: AtomicUsize,
+    /// Workers whose thread is still running.
+    live: AtomicUsize,
+    first_init_error: Mutex<Option<String>>,
+    expected_in_len: usize,
+    max_respawns: usize,
+    default_deadline: Option<Duration>,
+}
+
+impl FleetShared {
+    fn new(cfg: &ServingConfig, expected_in_len: usize) -> Self {
+        FleetShared {
+            breaker_open: AtomicBool::new(false),
+            respawns_used: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+            poisoned_arenas: AtomicUsize::new(0),
+            invoke_errors: AtomicUsize::new(0),
+            deadline_misses: AtomicUsize::new(0),
+            sheds: AtomicUsize::new(0),
+            rejected_submits: AtomicUsize::new(0),
+            worker_init_failures: AtomicUsize::new(0),
+            started: AtomicUsize::new(0),
+            live: AtomicUsize::new(cfg.workers),
+            first_init_error: Mutex::new(None),
+            expected_in_len,
+            max_respawns: cfg.max_respawns,
+            default_deadline: cfg.default_deadline,
+        }
+    }
+
+    fn taxonomy(&self) -> FaultTaxonomy {
+        FaultTaxonomy {
+            panics: self.panics.load(Ordering::SeqCst),
+            respawns: self.respawns_used.load(Ordering::SeqCst),
+            poisoned_arenas: self.poisoned_arenas.load(Ordering::SeqCst),
+            invoke_errors: self.invoke_errors.load(Ordering::SeqCst),
+            deadline_misses: self.deadline_misses.load(Ordering::SeqCst),
+            sheds: self.sheds.load(Ordering::SeqCst),
+            rejected_submits: self.rejected_submits.load(Ordering::SeqCst),
+            degraded_ops: 0, // filled from the runtime degrade counter
+            dropped: 0,      // filled by the post-run queue drain
+            worker_init_failures: self.worker_init_failures.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Handle for pushing requests into a running fleet. Owned by the feeder;
+/// dropping it closes the queue, letting workers drain and exit.
+pub struct Submitter<'a> {
+    tx: SyncSender<Request>,
+    shared: &'a FleetShared,
+}
+
+impl Submitter<'_> {
+    /// Breaker + input-length validation; counts the rejection and hands
+    /// back a typed error so callers can branch on the reason.
+    fn precheck(&self, req: &Request) -> Result<()> {
+        if self.shared.breaker_open.load(Ordering::SeqCst) {
+            self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+            return Err(Error::CircuitOpen { id: req.id });
+        }
+        if req.input.len() != self.shared.expected_in_len {
+            self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+            return Err(Error::InvalidInput {
+                id: req.id,
+                expected: self.shared.expected_in_len,
+                got: req.input.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Stamp the enqueue time and apply the config-level default deadline.
+    fn finalize(&self, mut req: Request) -> Request {
+        req.enqueued = Instant::now();
+        if req.deadline.is_none() {
+            req.deadline = self.shared.default_deadline.map(|d| req.enqueued + d);
+        }
+        req
+    }
+
+    /// Blocking submit with backpressure. Unlike a raw channel send it can
+    /// not wedge forever: the wait is punctuated by breaker checks, so a
+    /// dead fleet turns into a fast [`Error::CircuitOpen`] rejection.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.precheck(&req)?;
+        let mut req = self.finalize(req);
+        loop {
+            if self.shared.breaker_open.load(Ordering::SeqCst) {
+                self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+                return Err(Error::CircuitOpen { id: req.id });
+            }
+            match self.tx.try_send(req) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Full(r)) => {
+                    req = r;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(TrySendError::Disconnected(r)) => {
+                    self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+                    return Err(Error::CircuitOpen { id: r.id });
+                }
+            }
+        }
+    }
+
+    /// Non-blocking submit: sheds with [`Error::QueueFull`] when the
+    /// queue is full right now.
+    pub fn try_submit(&self, req: Request) -> Result<()> {
+        self.precheck(&req)?;
+        let req = self.finalize(req);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(r)) => {
+                self.shared.sheds.fetch_add(1, Ordering::SeqCst);
+                Err(Error::QueueFull { id: r.id })
+            }
+            Err(TrySendError::Disconnected(r)) => {
+                self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+                Err(Error::CircuitOpen { id: r.id })
+            }
+        }
+    }
+
+    /// Submit that waits at most `timeout` for queue space, then sheds
+    /// with [`Error::QueueFull`].
+    pub fn submit_timeout(&self, req: Request, timeout: Duration) -> Result<()> {
+        self.precheck(&req)?;
+        let mut req = self.finalize(req);
+        let start = Instant::now();
+        loop {
+            if self.shared.breaker_open.load(Ordering::SeqCst) {
+                self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+                return Err(Error::CircuitOpen { id: req.id });
+            }
+            match self.tx.try_send(req) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Full(r)) => {
+                    if start.elapsed() >= timeout {
+                        self.shared.sheds.fetch_add(1, Ordering::SeqCst);
+                        return Err(Error::QueueFull { id: r.id });
+                    }
+                    req = r;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(TrySendError::Disconnected(r)) => {
+                    self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
+                    return Err(Error::CircuitOpen { id: r.id });
+                }
+            }
+        }
+    }
+
+    /// Whether the circuit breaker is currently open (reject-fast mode).
+    pub fn breaker_open(&self) -> bool {
+        self.shared.breaker_open.load(Ordering::SeqCst)
+    }
+
+    /// Live snapshot of the fleet's failure counters (degraded/dropped
+    /// are only known at run end and read 0 here). Lets a feeder
+    /// synchronize on fault progress without racing the final report.
+    pub fn counts(&self) -> FaultTaxonomy {
+        self.shared.taxonomy()
     }
 }
 
 /// Run a closed-loop serving session: feed `requests` through `workers`
-/// interpreters and collect responses. Returns when all requests are done.
+/// interpreters and collect responses. Returns when all requests are done
+/// (completed, shed, or rejected — see the report's [`FaultTaxonomy`]).
 ///
 /// Each worker builds its own interpreter over its own arena (the §4.6
 /// model); the executable code (model bytes, kernels) is shared read-only.
@@ -130,86 +446,174 @@ pub fn run_closed_loop(
     requests: Vec<Request>,
     expected_out_len: usize,
 ) -> Result<ServingReport> {
+    let timeout = cfg.submit_timeout;
+    run_with_feeder(
+        model,
+        resolver,
+        cfg,
+        expected_out_len,
+        move |sub| {
+            for r in requests {
+                // Rejections are typed, counted in the taxonomy, and must
+                // never abort the rest of the batch.
+                let _ = match timeout {
+                    Some(t) => sub.submit_timeout(r, t),
+                    None => sub.submit(r),
+                };
+            }
+        },
+        |_resp| {},
+    )
+}
+
+/// Run a serving session driven by a caller-supplied feeder closure.
+///
+/// The feeder receives a [`Submitter`] and fully controls submission
+/// (blocking, non-blocking, timed, with or without deadlines); the queue
+/// closes when the feeder returns. `on_response` observes every completed
+/// response from the collector thread, in completion order.
+pub fn run_with_feeder<F>(
+    model: &Model,
+    resolver: &OpResolver,
+    cfg: ServingConfig,
+    expected_out_len: usize,
+    feeder: F,
+    mut on_response: impl FnMut(&Response),
+) -> Result<ServingReport>
+where
+    F: FnOnce(&Submitter<'_>) + Send,
+{
     if cfg.workers == 0 {
         return Err(Error::Serving("need at least one worker".into()));
     }
-    let n = requests.len();
+    let inputs = model.inputs();
+    if inputs.is_empty() {
+        return Err(Error::Serving("model has no input tensors".into()));
+    }
+    let expected_in_len = model.tensors()[inputs[0] as usize].num_elements();
+    let shared = FleetShared::new(&cfg, expected_in_len);
+    let degrades_before = crate::runtime::degrade_events();
+
     let (req_tx, req_rx): (SyncSender<Request>, Receiver<Request>) =
         sync_channel(cfg.queue_depth);
     let req_rx = Mutex::new(req_rx);
-    let (resp_tx, resp_rx) = sync_channel::<Response>(cfg.queue_depth.max(n));
-    let errors = AtomicUsize::new(0);
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
 
     let t0 = Instant::now();
-    let report = std::thread::scope(|scope| -> Result<ServingReport> {
+    let mut report = std::thread::scope(|scope| -> Result<ServingReport> {
         // Workers.
         for w in 0..cfg.workers {
             let req_rx = &req_rx;
             let resp_tx = resp_tx.clone();
-            let errors = &errors;
+            let shared = &shared;
             scope.spawn(move || {
-                let mut arena = Arena::new(cfg.arena_bytes);
-                // Worker startup pays everything expensive: the build runs
-                // the full populate pass (packed weights, XLA compile +
-                // upload + warm-up), so no request ever does.
-                let mut interp = match MicroInterpreter::new(model, resolver, &mut arena) {
-                    Ok(i) => i,
-                    Err(_) => {
-                        errors.fetch_add(1, Ordering::SeqCst);
-                        return;
-                    }
-                };
-                loop {
-                    // Pull one request; lock is held only for the recv.
-                    let req = {
-                        let rx = req_rx.lock().expect("rx poisoned");
-                        rx.recv()
+                // One iteration per interpreter lifetime: the first build,
+                // then one more per respawn after a caught panic. A panic
+                // poisons the current arena; leaving the iteration drops
+                // interpreter and arena so the next one starts fresh.
+                'respawn: loop {
+                    let mut arena = Arena::new(cfg.arena_bytes);
+                    // Worker startup pays everything expensive: the build
+                    // runs the full populate pass (packed weights, XLA
+                    // compile + upload + warm-up), so no request ever does.
+                    let mut interp = match MicroInterpreter::new(model, resolver, &mut arena) {
+                        Ok(i) => i,
+                        Err(e) => {
+                            shared.worker_init_failures.fetch_add(1, Ordering::SeqCst);
+                            let mut slot = shared
+                                .first_init_error
+                                .lock()
+                                .unwrap_or_else(|p| p.into_inner());
+                            if slot.is_none() {
+                                *slot = Some(e.to_string());
+                            }
+                            break 'respawn;
+                        }
                     };
-                    let Ok(req) = req else { break };
-                    let ok = (|| -> Result<Response> {
-                        interp.input_mut(0)?.copy_from_i8(&req.input)?;
-                        interp.invoke()?;
-                        let out = interp.output(0)?.as_i8()?.to_vec();
-                        Ok(Response {
-                            id: req.id,
-                            output: out,
-                            latency: req.enqueued.elapsed(),
-                            worker: w,
-                        })
-                    })();
-                    match ok {
-                        Ok(resp) => {
-                            if resp_tx.send(resp).is_err() {
-                                break;
+                    shared.started.fetch_add(1, Ordering::SeqCst);
+                    loop {
+                        // Pull one request; lock is held only for the recv.
+                        // A poisoned lock just means another worker died
+                        // mid-recv — the receiver itself is still sound.
+                        let req = {
+                            let rx = req_rx.lock().unwrap_or_else(|p| p.into_inner());
+                            rx.recv()
+                        };
+                        let Ok(req) = req else { break 'respawn };
+                        crate::faults::queue_stall_point();
+                        if let Some(d) = req.deadline {
+                            if Instant::now() >= d {
+                                shared.deadline_misses.fetch_add(1, Ordering::SeqCst);
+                                continue;
                             }
                         }
-                        Err(_) => {
-                            errors.fetch_add(1, Ordering::SeqCst);
+                        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || -> Result<Vec<i8>> {
+                                interp.input_mut(0)?.copy_from_i8(&req.input)?;
+                                interp.invoke()?;
+                                Ok(interp.output(0)?.as_i8()?.to_vec())
+                            },
+                        ));
+                        match unwound {
+                            Ok(Ok(output)) => {
+                                let resp = Response {
+                                    id: req.id,
+                                    output,
+                                    latency: req.enqueued.elapsed(),
+                                    worker: w,
+                                };
+                                if resp_tx.send(resp).is_err() {
+                                    break 'respawn;
+                                }
+                            }
+                            Ok(Err(_)) => {
+                                // Clean error return: interpreter state is
+                                // consistent, the worker serves on.
+                                shared.invoke_errors.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(_payload) => {
+                                shared.panics.fetch_add(1, Ordering::SeqCst);
+                                shared.poisoned_arenas.fetch_add(1, Ordering::SeqCst);
+                                let used = shared.respawns_used.fetch_add(1, Ordering::SeqCst);
+                                if used >= shared.max_respawns {
+                                    // Budget exhausted: undo the optimistic
+                                    // claim and trip the breaker.
+                                    shared.respawns_used.fetch_sub(1, Ordering::SeqCst);
+                                    shared.breaker_open.store(true, Ordering::SeqCst);
+                                    break 'respawn;
+                                }
+                                continue 'respawn;
+                            }
                         }
                     }
+                }
+                if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    // Last worker gone: nobody will ever drain the queue,
+                    // so submits must reject fast from here on.
+                    shared.breaker_open.store(true, Ordering::SeqCst);
                 }
             });
         }
         drop(resp_tx);
 
-        // Feeder (blocks on the bounded queue: natural backpressure).
+        // Feeder owns the Submitter (and with it the request sender);
+        // when it returns the queue closes and workers drain and exit.
+        let submitter = Submitter { tx: req_tx, shared: &shared };
         scope.spawn(move || {
-            for mut r in requests {
-                r.enqueued = Instant::now();
-                if req_tx.send(r).is_err() {
-                    break;
-                }
-            }
-            // Dropping req_tx closes the queue; workers drain and exit.
+            feeder(&submitter);
+            drop(submitter);
         });
 
         // Collector.
-        let mut latencies = Vec::with_capacity(n);
+        let mut latencies = Vec::new();
         let mut per_worker = vec![0usize; cfg.workers];
         let mut cold_start_ns = vec![0u64; cfg.workers];
         let mut completed = 0usize;
         for resp in resp_rx.iter() {
             if resp.output.len() != expected_out_len {
+                // Contract violation, not a per-request fault: open the
+                // breaker so the feeder unblocks, then fail the run.
+                shared.breaker_open.store(true, Ordering::SeqCst);
                 return Err(Error::Serving(format!(
                     "response {} has {} outputs, expected {expected_out_len}",
                     resp.id,
@@ -219,17 +623,33 @@ pub fn run_closed_loop(
             if per_worker[resp.worker] == 0 {
                 cold_start_ns[resp.worker] = resp.latency.as_nanos() as u64;
             }
+            on_response(&resp);
             latencies.push(resp.latency);
             per_worker[resp.worker] += 1;
             completed += 1;
         }
         let wall = t0.elapsed();
-        if errors.load(Ordering::SeqCst) > 0 {
-            return Err(Error::Serving(format!(
-                "{} request(s) failed",
-                errors.load(Ordering::SeqCst)
-            )));
+
+        // All workers have exited (their response senders are gone);
+        // anything still queued was accepted but never served.
+        let mut dropped = 0usize;
+        {
+            let rx = req_rx.lock().unwrap_or_else(|p| p.into_inner());
+            while rx.try_recv().is_ok() {
+                dropped += 1;
+            }
         }
+
+        if shared.started.load(Ordering::SeqCst) == 0 {
+            let first = shared
+                .first_init_error
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .take()
+                .unwrap_or_else(|| "unknown".into());
+            return Err(Error::Serving(format!("no worker could initialize: {first}")));
+        }
+
         latencies.sort();
         let pick = |p: f64| -> Duration {
             if latencies.is_empty() {
@@ -238,31 +658,42 @@ pub fn run_closed_loop(
                 latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
             }
         };
+        let mut faults = shared.taxonomy();
+        faults.dropped = dropped;
         Ok(ServingReport {
             completed,
             wall,
-            throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+            // Guard the zero-completion case explicitly: an all-shed run
+            // reports zeros, it does not divide by a ~zero wall.
+            throughput_rps: if completed == 0 {
+                0.0
+            } else {
+                completed as f64 / wall.as_secs_f64().max(1e-9)
+            },
             latency_p50: pick(0.50),
             latency_p95: pick(0.95),
             latency_p99: pick(0.99),
             per_worker,
             cold_start_ns,
+            faults,
+            breaker_open: shared.breaker_open.load(Ordering::SeqCst),
         })
     })?;
+    report.faults.degraded_ops =
+        (crate::runtime::degrade_events() - degrades_before) as usize;
     Ok(report)
 }
 
 /// Build a batch of identical-shape requests from a generator closure.
 pub fn make_requests(count: usize, mut gen: impl FnMut(u64) -> Vec<i8>) -> Vec<Request> {
-    (0..count as u64)
-        .map(|id| Request { id, input: gen(id), enqueued: Instant::now() })
-        .collect()
+    (0..count as u64).map(|id| Request::new(id, gen(id))).collect()
 }
 
 #[cfg(test)]
 mod tests {
-    // Integration coverage lives in rust/tests/serving.rs (needs a real
-    // model); unit-level sanity for the helpers here.
+    // Integration coverage lives in rust/tests/serving.rs and
+    // rust/tests/serving_faults.rs (the latter drives the fault model);
+    // unit-level sanity for the helpers here.
     use super::*;
 
     #[test]
@@ -271,20 +702,15 @@ mod tests {
         assert_eq!(reqs.len(), 4);
         assert_eq!(reqs[3].id, 3);
         assert_eq!(reqs[2].input, vec![2i8, 2]);
+        assert!(reqs[0].deadline.is_none());
     }
 
-    /// `cold_start_ns` surfaces per-worker first-request latency: one
-    /// entry per worker, nonzero exactly for workers that served at
-    /// least one request, and equal to a latency the percentile stats
-    /// could have observed (it is a real response latency, not a
-    /// synthetic number).
-    #[test]
-    fn cold_start_ns_tracks_first_request_per_worker() {
+    fn tiny_fc_model() -> Model {
         use crate::schema::writer::fully_connected_options;
-        use crate::schema::{BuiltinOp, Model, ModelBuilder};
+        use crate::schema::{BuiltinOp, ModelBuilder};
         use crate::tensor::{DType, QuantParams};
 
-        let mut b = ModelBuilder::new("cold-start");
+        let mut b = ModelBuilder::new("serving-unit");
         let q = QuantParams::per_tensor(1.0, 0);
         let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q.clone());
         let wbuf = b.add_buffer(&[1u8; 8]);
@@ -297,14 +723,31 @@ mod tests {
             fully_connected_options(Default::default()),
         );
         b.set_io(&[t_in], &[t_out]);
-        let model = Model::from_bytes(&b.finish()).unwrap();
+        Model::from_bytes(&b.finish()).unwrap()
+    }
+
+    /// `cold_start_ns` surfaces per-worker first-request latency: one
+    /// entry per worker, nonzero exactly for workers that served at
+    /// least one request, and equal to a latency the percentile stats
+    /// could have observed (it is a real response latency, not a
+    /// synthetic number).
+    #[test]
+    fn cold_start_ns_tracks_first_request_per_worker() {
+        let model = tiny_fc_model();
         let resolver = crate::ops::OpResolver::with_optimized_ops();
 
         let requests = make_requests(16, |id| vec![id as i8; 4]);
-        let cfg = ServingConfig { workers: 2, queue_depth: 4, arena_bytes: 16 * 1024 };
+        let cfg = ServingConfig {
+            workers: 2,
+            queue_depth: 4,
+            arena_bytes: 16 * 1024,
+            ..Default::default()
+        };
         let report = run_closed_loop(&model, &resolver, cfg, requests, 2).unwrap();
 
         assert_eq!(report.completed, 16);
+        assert!(report.faults.is_clean());
+        assert!(!report.breaker_open);
         assert_eq!(report.cold_start_ns.len(), 2, "one cold-start entry per worker");
         for (w, (&served, &cold)) in
             report.per_worker.iter().zip(&report.cold_start_ns).enumerate()
@@ -335,5 +778,54 @@ mod tests {
         let r = crate::ops::OpResolver::with_reference_ops();
         let cfg = ServingConfig { workers: 0, ..Default::default() };
         assert!(run_closed_loop(&m, &r, cfg, vec![], 1).is_err());
+    }
+
+    /// Satellite: a run that completes zero requests reports zeros — no
+    /// divide-by-zero throughput, no panicking percentile math.
+    #[test]
+    fn zero_completed_requests_report_zeros() {
+        let model = tiny_fc_model();
+        let resolver = crate::ops::OpResolver::with_reference_ops();
+        let cfg = ServingConfig { workers: 1, ..Default::default() };
+        let report = run_closed_loop(&model, &resolver, cfg, vec![], 2).unwrap();
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.throughput_rps, 0.0);
+        assert_eq!(report.latency_p50, Duration::ZERO);
+        assert_eq!(report.latency_p99, Duration::ZERO);
+        assert!(report.faults.is_clean());
+        assert!(report.summary().starts_with("0 req"));
+    }
+
+    /// Satellite: input-length validation happens at submit, with a typed
+    /// error — a short or oversized request never reaches a worker.
+    #[test]
+    fn invalid_input_length_rejected_at_submit() {
+        let model = tiny_fc_model();
+        let resolver = crate::ops::OpResolver::with_reference_ops();
+        let cfg = ServingConfig { workers: 1, ..Default::default() };
+        let mut rejected = Vec::new();
+        let report = run_with_feeder(
+            &model,
+            &resolver,
+            cfg,
+            2,
+            |sub| {
+                rejected.push(sub.submit(Request::new(0, vec![0i8; 3]))); // short
+                rejected.push(sub.submit(Request::new(1, vec![0i8; 5]))); // long
+                assert!(sub.submit(Request::new(2, vec![0i8; 4])).is_ok());
+            },
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.faults.rejected_submits, 2);
+        assert!(matches!(
+            rejected[0],
+            Err(Error::InvalidInput { id: 0, expected: 4, got: 3 })
+        ));
+        assert!(matches!(
+            rejected[1],
+            Err(Error::InvalidInput { id: 1, expected: 4, got: 5 })
+        ));
     }
 }

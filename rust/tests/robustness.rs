@@ -291,6 +291,76 @@ fn sub_maximum_minimum_tanh_end_to_end() {
     }
 }
 
+/// Seeded-corpus no-panic sweep: every mutation class the loader can meet
+/// in the field — truncation at every boundary, seeded interior cuts,
+/// appended junk / oversizing, garbage with a valid header, and
+/// length-field mutations — run under an explicit `catch_unwind`, so a
+/// panic is reported as *which corpus entry* unwound rather than as a
+/// silent test-harness abort. `Err` returns are fine; unwinds are not.
+#[test]
+fn corpus_of_malformed_models_never_unwinds() {
+    let base = small_model_bytes();
+    let mut corpus: Vec<(String, Vec<u8>)> = Vec::new();
+
+    // Truncations at structural boundaries plus seeded interior cuts.
+    for cut in [0usize, 1, 4, 7, 8, 12, 16, base.len().saturating_sub(1)] {
+        corpus.push((format!("truncate@{cut}"), base[..cut.min(base.len())].to_vec()));
+    }
+    let mut rng = Rng::seeded(0xC07);
+    corpus.extend((0..64).map(|i| {
+        let cut = rng.below(base.len());
+        (format!("seeded-truncate#{i}@{cut}"), base[..cut].to_vec())
+    }));
+
+    // Oversized: valid model with trailing garbage of various sizes.
+    for extra in [1usize, 7, 256, 4096] {
+        let mut v = base.clone();
+        v.extend(std::iter::repeat(0xAB).take(extra));
+        corpus.push((format!("oversize+{extra}"), v));
+    }
+
+    // Garbage bodies behind a valid magic + version, so parsing commits
+    // to the header and reads offsets out of attacker-controlled bytes.
+    let mut rng = Rng::seeded(0xBAD);
+    corpus.extend((0..64).map(|i| {
+        let len = 8 + rng.below(512);
+        let mut junk: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        junk[..4].copy_from_slice(b"TMF1");
+        junk[4..8].copy_from_slice(&1u32.to_le_bytes());
+        (format!("garbage-valid-magic#{i}"), junk)
+    }));
+
+    // Length/offset-field mutations: overwrite each early header word
+    // with hostile values (huge, negative-as-unsigned, off-by-one).
+    for word in 2..12usize {
+        for val in [u32::MAX, u32::MAX / 2, base.len() as u32 + 1, 1u32 << 31] {
+            let off = word * 4;
+            if off + 4 > base.len() {
+                break;
+            }
+            let mut v = base.clone();
+            v[off..off + 4].copy_from_slice(&val.to_le_bytes());
+            corpus.push((format!("field@{off}={val:#x}"), v));
+        }
+    }
+
+    for (label, bytes) in corpus {
+        let unwound = std::panic::catch_unwind(|| {
+            if let Ok(model) = Model::from_bytes(&bytes) {
+                // A mutant that still loads must stay panic-free through
+                // validation and interpreter construction too.
+                let _ = tfmicro::schema::validate::validate(&model);
+                let resolver = OpResolver::with_reference_ops();
+                let mut arena = Arena::new(16 * 1024);
+                if let Ok(mut interp) = MicroInterpreter::new(&model, &resolver, &mut arena) {
+                    let _ = interp.invoke();
+                }
+            }
+        });
+        assert!(unwound.is_ok(), "corpus entry '{label}' panicked the loader");
+    }
+}
+
 #[test]
 fn cli_runs_against_artifacts() {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

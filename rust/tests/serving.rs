@@ -31,12 +31,15 @@ fn multi_worker_serving_completes_all_requests() {
         rng.fill_i8(&mut v);
         v
     });
-    let cfg = ServingConfig { workers: 4, queue_depth: 8, arena_bytes: 64 * 1024 };
+    let cfg =
+        ServingConfig { workers: 4, queue_depth: 8, arena_bytes: 64 * 1024, ..Default::default() };
     let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
     assert_eq!(report.completed, 200);
     assert_eq!(report.per_worker.iter().sum::<usize>(), 200);
     assert!(report.throughput_rps > 0.0);
     assert!(report.latency_p50 <= report.latency_p99);
+    assert!(report.faults.is_clean(), "healthy run must report a clean taxonomy");
+    assert!(!report.breaker_open);
 }
 
 #[test]
@@ -63,7 +66,8 @@ fn serving_results_match_single_interpreter() {
     // Same input through 3 workers x 30 copies — all identical.
     let input_clone = input.clone();
     let requests = make_requests(30, |_| input_clone.clone());
-    let cfg = ServingConfig { workers: 3, queue_depth: 4, arena_bytes: 64 * 1024 };
+    let cfg =
+        ServingConfig { workers: 3, queue_depth: 4, arena_bytes: 64 * 1024, ..Default::default() };
     // run_closed_loop validates lengths; for content we re-run through a
     // channelless path by comparing against `want` via a tiny wrapper:
     let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
@@ -85,7 +89,8 @@ fn vww_end_to_end_serving_smoke() {
         rng.fill_i8(&mut v);
         v
     });
-    let cfg = ServingConfig { workers: 2, queue_depth: 4, arena_bytes: 512 * 1024 };
+    let cfg =
+        ServingConfig { workers: 2, queue_depth: 4, arena_bytes: 512 * 1024, ..Default::default() };
     let report = run_closed_loop(&model, &resolver, cfg, requests, out_len).unwrap();
     assert_eq!(report.completed, 8);
 }

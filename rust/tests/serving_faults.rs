@@ -1,0 +1,604 @@
+//! Fault-tolerance suite: deterministic fault injection through the
+//! serving stack.
+//!
+//! Every test installs a [`tfmicro::faults::FaultPlan`] with an exact,
+//! fixed-seed schedule and asserts the run's [`FaultTaxonomy`] counts
+//! match that schedule — not "roughly survives chaos" but "loses exactly
+//! the requests the schedule poisoned, and counts them exactly".
+//!
+//! Fault points and counters are process-global, so every test here takes
+//! `SERIAL` first; the suite is deterministic under `cargo test` with no
+//! flags (fault machinery is compiled in under `debug_assertions`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use tfmicro::arena::Arena;
+use tfmicro::error::Error;
+use tfmicro::faults::{self, FaultPlan};
+use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::ops::OpResolver;
+use tfmicro::runtime::{degrade_events, op_counters, XlaFcKernel, XlaRuntime};
+use tfmicro::schema::format::Activation;
+use tfmicro::schema::writer::fully_connected_options;
+use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
+use tfmicro::serving::{run_with_feeder, Request, Response, ServingConfig};
+use tfmicro::tensor::{DType, QuantParams};
+use tfmicro::testutil::Rng;
+
+/// Fault points, plan state, and the runtime op/degrade counters are all
+/// process-global: every test serializes here so schedules cannot bleed
+/// into each other's hit counts.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Silence the default panic hook for *injected* panics only, so the
+/// supervision tests don't spray backtraces while real test failures
+/// still report normally.
+fn quiet_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("injected fault:") {
+                default(info);
+            }
+        }));
+    });
+}
+
+/// Injection-dependent tests are meaningless when the machinery is
+/// compiled out of the library (release without `--features
+/// fault-injection`); they SKIP rather than assert on no-op injections.
+/// Tier-1 (`cargo test`, dev profile) always has it compiled in.
+fn injection_available() -> bool {
+    if faults::compiled_in() {
+        return true;
+    }
+    eprintln!("SKIP: fault injection compiled out (release without --features fault-injection)");
+    false
+}
+
+/// Spin until `cond` holds (2 ms poll, 5 s cap). Returns whether it did.
+fn wait_until(mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < Duration::from_secs(5) {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+fn q(scale: f32, zp: i32) -> QuantParams {
+    QuantParams::per_tensor(scale, zp)
+}
+
+/// Small single-FC model (in 8 → out 4) with seeded weights, plus one
+/// seeded input and the config the serving tests share.
+fn fc_model() -> (Model, Vec<i8>) {
+    let mut rng = Rng::seeded(0xFA17);
+    let mut b = ModelBuilder::new("serving-faults-fc");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 8], None, q(0.05, 0));
+    let mut w = vec![0i8; 4 * 8];
+    rng.fill_i8(&mut w);
+    let wbuf = b.add_buffer(&w.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    let t_w = b.add_quant_tensor("w", DType::I8, &[4, 8], Some(wbuf), q(0.02, 0));
+    let bbuf = b.add_buffer(
+        &(0..4).flat_map(|_| rng.range_i32(-200, 200).to_le_bytes()).collect::<Vec<_>>(),
+    );
+    let t_b = b.add_tensor("b", DType::I32, &[4], Some(bbuf));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4], None, q(0.5, 0));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_in, t_w, t_b],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let mut input = vec![0i8; 8];
+    rng.fill_i8(&mut input);
+    (Model::from_bytes(&b.finish()).unwrap(), input)
+}
+
+/// Ground-truth output for `input` through a fresh single interpreter.
+/// Call *before* installing a fault plan so the baseline invoke doesn't
+/// consume scheduled hit indices.
+fn baseline(model: &Model, resolver: &OpResolver, input: &[i8]) -> Vec<i8> {
+    let mut arena = Arena::new(64 * 1024);
+    let mut interp = MicroInterpreter::new(model, resolver, &mut arena).unwrap();
+    interp.input_mut(0).unwrap().copy_from_i8(input).unwrap();
+    interp.invoke().unwrap();
+    interp.output(0).unwrap().as_i8().unwrap().to_vec()
+}
+
+// ---------------------------------------------------------------------------
+// (a) Worker supervision
+// ---------------------------------------------------------------------------
+
+/// Acceptance core: one injected kernel panic loses exactly the poisoned
+/// request; every other request completes with correct outputs; the
+/// worker respawns within budget; the taxonomy counts match the schedule
+/// (1 panic, 1 respawn, 1 poisoned arena); no panic reaches the caller.
+#[test]
+fn injected_kernel_panic_loses_only_the_poisoned_request() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    quiet_injected_panics();
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+
+    let guard =
+        faults::install(FaultPlan::new().fail_at(faults::KERNEL_PANIC, Some("FULLY_CONNECTED"), &[4]));
+    let cfg = ServingConfig { workers: 2, queue_depth: 8, ..Default::default() };
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..12 {
+                sub.submit(Request::new(id, input.clone())).expect("healthy fleet accepts");
+            }
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .expect("a contained panic must not fail the run");
+
+    assert_eq!(faults::injected(faults::KERNEL_PANIC), 1, "schedule fired exactly once");
+    drop(guard);
+
+    assert_eq!(report.completed, 11, "exactly the poisoned request is lost");
+    assert_eq!(report.per_worker.iter().sum::<usize>(), 11);
+    assert_eq!(report.faults.panics, 1);
+    assert_eq!(report.faults.respawns, 1, "worker respawned within budget");
+    assert_eq!(report.faults.poisoned_arenas, 1, "the panicked arena was abandoned");
+    assert_eq!(report.faults.invoke_errors, 0);
+    assert_eq!(report.faults.deadline_misses, 0);
+    assert_eq!(report.faults.sheds, 0);
+    assert_eq!(report.faults.rejected_submits, 0);
+    assert_eq!(report.faults.dropped, 0);
+    assert!(!report.breaker_open, "budget not exhausted: breaker stays closed");
+    assert_eq!(outputs.len(), 11);
+    for out in &outputs {
+        assert_eq!(out, &want, "in-flight requests must complete unaffected");
+    }
+}
+
+/// When the respawn budget exhausts the circuit breaker opens and
+/// `submit` rejects fast with a typed error instead of blocking on a
+/// queue nobody drains.
+#[test]
+fn respawn_budget_exhaustion_trips_the_breaker() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    quiet_injected_panics();
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+
+    let guard = faults::install(
+        FaultPlan::new().fail_at(faults::KERNEL_PANIC, Some("FULLY_CONNECTED"), &[0, 1]),
+    );
+    let cfg = ServingConfig {
+        workers: 1,
+        queue_depth: 4,
+        max_respawns: 1,
+        ..Default::default()
+    };
+    let mut rejection = None;
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            sub.submit(Request::new(0, input.clone())).expect("first submit accepted");
+            assert!(wait_until(|| sub.counts().panics >= 1), "first panic observed");
+            sub.submit(Request::new(1, input.clone())).expect("respawned worker accepts");
+            assert!(wait_until(|| sub.breaker_open()), "budget exhausts, breaker opens");
+            rejection = Some(sub.submit(Request::new(2, input.clone())));
+        },
+        |_| {},
+    )
+    .expect("an exhausted fleet still reports, it does not error the run");
+
+    assert_eq!(faults::injected(faults::KERNEL_PANIC), 2);
+    drop(guard);
+
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.throughput_rps, 0.0, "zero-completion math reports zeros");
+    assert_eq!(report.faults.panics, 2);
+    assert_eq!(report.faults.respawns, 1, "budget of 1 allows exactly one respawn");
+    assert_eq!(report.faults.poisoned_arenas, 2);
+    assert_eq!(report.faults.rejected_submits, 1);
+    assert!(report.breaker_open);
+    assert!(
+        matches!(rejection, Some(Err(Error::CircuitOpen { id: 2 }))),
+        "reject-fast with the typed breaker error, got {rejection:?}"
+    );
+}
+
+/// An injected arena-exhaustion at invoke is a *clean* error: the request
+/// is lost and counted, but the worker is not poisoned and serves on
+/// (contrast with the panic path, which respawns).
+#[test]
+fn arena_exhaustion_at_invoke_is_contained_without_respawn() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+
+    let guard = faults::install(FaultPlan::new().fail_at(faults::ARENA_EXHAUSTED, None, &[1]));
+    let cfg = ServingConfig { workers: 1, queue_depth: 4, ..Default::default() };
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..4 {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .unwrap();
+
+    assert_eq!(faults::injected(faults::ARENA_EXHAUSTED), 1);
+    drop(guard);
+
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.faults.invoke_errors, 1, "clean error, counted as such");
+    assert_eq!(report.faults.panics, 0);
+    assert_eq!(report.faults.respawns, 0, "no unwind, no respawn");
+    assert_eq!(report.per_worker[0], 3, "the same worker served everything else");
+    for out in &outputs {
+        assert_eq!(out, &want);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) Deadlines + load shedding
+// ---------------------------------------------------------------------------
+
+/// Workers shed already-expired requests before invoke and count them as
+/// deadline misses; unexpired requests are unaffected.
+#[test]
+fn expired_deadlines_are_shed_before_invoke() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    // Empty plan: no faults, but serialized + isolated from other plans.
+    let guard = faults::install(FaultPlan::new());
+
+    let cfg = ServingConfig { workers: 1, queue_depth: 8, ..Default::default() };
+    let mut served_ids: Vec<u64> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..6u64 {
+                let req = Request::new(id, input.clone());
+                // Odd ids get a deadline that has already passed by the
+                // time a worker can possibly pull them.
+                let req = if id % 2 == 1 { req.with_deadline(Instant::now()) } else { req };
+                sub.submit(req).expect("accepted");
+            }
+        },
+        |resp: &Response| served_ids.push(resp.id),
+    )
+    .unwrap();
+    drop(guard);
+
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.faults.deadline_misses, 3);
+    assert_eq!(report.faults.panics, 0);
+    served_ids.sort_unstable();
+    assert_eq!(served_ids, vec![0, 2, 4], "exactly the undeadlined requests completed");
+}
+
+/// With a worker wedged (injected queue stall) and the queue full,
+/// `try_submit` sheds with a typed `QueueFull` instead of blocking; the
+/// wedged request and the queued one both complete after release.
+#[test]
+fn try_submit_sheds_when_the_queue_is_full() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+
+    let guard = faults::install(FaultPlan::new().fail_at(faults::QUEUE_STALL, None, &[0]));
+    let cfg = ServingConfig { workers: 1, queue_depth: 1, ..Default::default() };
+    let mut shed = None;
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            sub.submit(Request::new(0, input.clone())).expect("accepted");
+            // The worker pulls request 0 and parks on the stall gate.
+            assert!(wait_until(|| faults::stalls_parked() == 1), "worker parked");
+            sub.try_submit(Request::new(1, input.clone())).expect("queue has space");
+            shed = Some(sub.try_submit(Request::new(2, input.clone())));
+            faults::release_stalls();
+        },
+        |_| {},
+    )
+    .unwrap();
+
+    assert_eq!(faults::injected(faults::QUEUE_STALL), 1);
+    drop(guard);
+
+    assert_eq!(report.completed, 2, "stalled + queued requests both complete");
+    assert_eq!(report.faults.sheds, 1);
+    assert!(
+        matches!(shed, Some(Err(Error::QueueFull { id: 2 }))),
+        "typed queue-full shed, got {shed:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) Offload degradation
+// ---------------------------------------------------------------------------
+
+/// The artifact to test against: the real one when present, else a
+/// synthesized int8-matmul artifact for the simulated backend (same
+/// approach as populate_lifecycle.rs).
+fn fc_artifact() -> Option<(std::path::PathBuf, (usize, usize, usize))> {
+    let real = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/fc_int8.hlo.txt");
+    if real.exists() {
+        return Some((real, (1, 392, 32)));
+    }
+    let rt = XlaRuntime::cpu().ok()?;
+    if !rt.is_simulated() {
+        eprintln!("SKIP: no artifacts/ and a real PJRT backend (run `make artifacts` first)");
+        return None;
+    }
+    let (m, k, n) = (1usize, 40usize, 8usize);
+    let dir = std::env::temp_dir().join("tfmicro_serving_faults");
+    std::fs::create_dir_all(&dir).ok()?;
+    let p = dir.join(format!("fc_int8_{m}x{k}x{n}.hlo.txt"));
+    let text = format!(
+        "HloModule jit_fn\n\n\
+         ENTRY %main.1 (a: s8[{m},{k}], w: s8[{n},{k}], bias: s32[{n}], \
+         mult: s32[{n}], shift: s32[{n}]) -> (s8[{m},{n}]) {{\n}}\n"
+    );
+    std::fs::write(&p, text).ok()?;
+    Some((p, (m, k, n)))
+}
+
+/// Offloadable single-FC model at the artifact contract shape.
+fn fc_model_at(shape: (usize, usize, usize)) -> (Model, Vec<i8>) {
+    let (m, k, n) = shape;
+    let mut rng = Rng::seeded(0xDE6);
+    let mut b = ModelBuilder::new("serving-faults-xla");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[m as i32, k as i32], None, q(0.05, 0));
+    let mut w = vec![0i8; n * k];
+    rng.fill_i8(&mut w);
+    let wbuf = b.add_buffer(&w.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    let t_w = b.add_quant_tensor("w", DType::I8, &[n as i32, k as i32], Some(wbuf), q(0.02, 0));
+    let bbuf = b.add_buffer(
+        &(0..n).flat_map(|_| rng.range_i32(-500, 500).to_le_bytes()).collect::<Vec<_>>(),
+    );
+    let t_b = b.add_tensor("b", DType::I32, &[n as i32], Some(bbuf));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[m as i32, n as i32], None, q(0.5, 0));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_in, t_w, t_b],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    let mut input = vec![0i8; m * k];
+    rng.fill_i8(&mut input);
+    (Model::from_bytes(&b.finish()).unwrap(), input)
+}
+
+/// Acceptance core: an injected PJRT execute failure flips the per-op
+/// degraded flag and the op serves bit-exact outputs from the CPU packed
+/// kernels — on the failing invoke itself and on every invoke after,
+/// without ever touching the backend again.
+#[test]
+fn pjrt_execute_failure_degrades_to_cpu_bit_exact() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let Some((path, shape)) = fc_artifact() else { return };
+    let (model, input) = fc_model_at(shape);
+
+    // Pure-Rust ground truth.
+    let rust_resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &rust_resolver, &input);
+
+    // Accelerated interpreter, built *before* the plan is installed so
+    // init's warm-up execute is not a scheduled hit.
+    let kernel = Arc::new(XlaFcKernel::load(&path, shape).expect("load artifact"));
+    let mut resolver = OpResolver::with_optimized_ops();
+    resolver.register(BuiltinOp::FullyConnected, kernel.clone()).unwrap();
+    let mut arena = Arena::new(256 * 1024);
+    let mut interp = MicroInterpreter::new(&model, &resolver, &mut arena).expect("init");
+    interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
+    assert!(kernel.degraded_ops().is_empty());
+
+    let degrades_before = degrade_events();
+    let guard = faults::install(FaultPlan::new().fail_at(faults::PJRT_EXECUTE, None, &[0]));
+
+    // Failing invoke: the backend errors, the op degrades, and the
+    // request is still answered — bit-exactly — by the CPU path.
+    interp.invoke().expect("degradation is reported, not fatal");
+    let got = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+    assert_eq!(got, want, "degraded invoke must be bit-exact vs the Rust kernels");
+    assert_eq!(faults::injected(faults::PJRT_EXECUTE), 1);
+    assert_eq!(degrade_events() - degrades_before, 1, "one degrade event recorded");
+    assert_eq!(kernel.degraded_ops(), vec![0], "op 0 is flagged degraded");
+
+    // Subsequent invokes skip the backend entirely: no uploads, no
+    // executes — pure CPU, still bit-exact.
+    let before = op_counters();
+    interp.invoke().expect("invoke");
+    let d = op_counters().since(&before);
+    assert_eq!(d.executes, 0, "degraded op must not execute on the backend");
+    assert_eq!(d.uploads, 0, "degraded op must not transfer inputs");
+    let got2 = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+    assert_eq!(got2, want);
+    drop(guard);
+
+    // A fresh interpreter build re-arms the op (populate re-verifies the
+    // staged state and clears the flag).
+    drop(interp);
+    let mut arena2 = Arena::new(256 * 1024);
+    let _interp2 = MicroInterpreter::new(&model, &resolver, &mut arena2).expect("re-init");
+    assert!(kernel.degraded_ops().is_empty(), "re-populate re-arms the offload");
+}
+
+/// Degradation through the serving layer: the run completes every
+/// request and the report's taxonomy carries the degraded-op count.
+#[test]
+fn serving_reports_degraded_ops_in_taxonomy() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let Some((path, shape)) = fc_artifact() else { return };
+    let (model, input) = fc_model_at(shape);
+
+    let rust_resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &rust_resolver, &input);
+
+    let kernel = Arc::new(XlaFcKernel::load(&path, shape).expect("load artifact"));
+    let mut resolver = OpResolver::with_optimized_ops();
+    resolver.register(BuiltinOp::FullyConnected, kernel).unwrap();
+
+    // Hit 0 is the single worker's populate warm-up (must succeed: init
+    // failures are fatal by design); hit 1 is the first request's
+    // execute, which degrades the op.
+    let guard = faults::install(FaultPlan::new().fail_at(faults::PJRT_EXECUTE, None, &[1]));
+    let cfg = ServingConfig {
+        workers: 1,
+        queue_depth: 4,
+        arena_bytes: 256 * 1024,
+        ..Default::default()
+    };
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        shape.2,
+        |sub| {
+            for id in 0..4 {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .unwrap();
+
+    assert_eq!(faults::injected(faults::PJRT_EXECUTE), 1);
+    drop(guard);
+
+    assert_eq!(report.completed, 4, "degradation loses no requests");
+    assert_eq!(report.faults.degraded_ops, 1, "taxonomy carries the degrade");
+    assert_eq!(report.faults.panics, 0);
+    assert_eq!(report.faults.invoke_errors, 0);
+    for out in &outputs {
+        assert_eq!(out, &want, "all responses bit-exact across the degradation");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) Seeded chaos: schedule in, matching taxonomy out
+// ---------------------------------------------------------------------------
+
+/// A seed-derived panic schedule over a 2-worker fleet: the taxonomy must
+/// match the schedule *exactly* (3 scheduled panics → 3 panics, 3
+/// respawns, N-3 completions), every survivor bit-exact, and the summary
+/// line must surface the fault block.
+#[test]
+fn seeded_chaos_taxonomy_matches_schedule_exactly() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    quiet_injected_panics();
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+
+    const N: u64 = 40;
+    const PANICS: u64 = 3;
+    // Every request crosses the FC fault point exactly once (none are
+    // shed), so a window of N covers the whole run.
+    let guard = faults::install(FaultPlan::new().seeded(
+        faults::KERNEL_PANIC,
+        Some("FULLY_CONNECTED"),
+        0xC405,
+        N,
+        PANICS,
+    ));
+    let cfg = ServingConfig {
+        workers: 2,
+        queue_depth: 8,
+        max_respawns: 8,
+        ..Default::default()
+    };
+    let correct = AtomicUsize::new(0);
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..N {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+        },
+        |resp: &Response| {
+            if resp.output == want {
+                correct.fetch_add(1, Ordering::Relaxed);
+            }
+        },
+    )
+    .expect("chaos within budget must not fail the run");
+
+    assert_eq!(faults::injected(faults::KERNEL_PANIC), PANICS);
+    drop(guard);
+
+    assert_eq!(report.completed, (N - PANICS) as usize);
+    assert_eq!(correct.load(Ordering::Relaxed), (N - PANICS) as usize);
+    assert_eq!(report.faults.panics, PANICS as usize);
+    assert_eq!(report.faults.respawns, PANICS as usize);
+    assert_eq!(report.faults.poisoned_arenas, PANICS as usize);
+    assert_eq!(report.faults.deadline_misses, 0);
+    assert_eq!(report.faults.sheds, 0);
+    assert_eq!(report.faults.rejected_submits, 0);
+    assert_eq!(report.faults.dropped, 0);
+    assert!(!report.breaker_open);
+    assert!(report.summary().contains("faults["), "summary surfaces the taxonomy");
+}
