@@ -115,6 +115,7 @@ no_panic_gate() {
     echo "  $file: clean"
 }
 no_panic_gate rust/src/serving/mod.rs
+no_panic_gate rust/src/serving/registry.rs
 no_panic_gate rust/src/schema/reader.rs
 
 echo "== tier-1: cargo build --release =="
@@ -131,6 +132,13 @@ cargo test -q
 # a red run here is always reproducible with this exact command.
 echo "== fault-tolerance suite: cargo test --test serving_faults =="
 cargo test --test serving_faults -- --nocapture
+
+# Release builds compile the fault machinery out unless the feature is
+# on; the lifecycle tests (canary rejection, rollback) must also hold at
+# release optimization levels, where unwind/atomics races would surface.
+echo "== fault-tolerance suite (release + fault-injection feature) =="
+cargo build --release --features fault-injection
+cargo test --release --features fault-injection --test serving_faults -- --nocapture
 
 # --- XLA integration suite visibility --------------------------------------
 # Skip-path semantics (pinned since the whole-model f32 contract landed):

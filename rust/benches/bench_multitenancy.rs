@@ -6,9 +6,10 @@
 //! strategy. Also times interleaved execution to show the sharing is free
 //! at invoke time.
 
+use std::sync::Arc;
 use std::time::Instant;
 use tfmicro::arena::Arena;
-use tfmicro::interpreter::{MicroInterpreter, SharedArena};
+use tfmicro::interpreter::{MicroInterpreter, PreparedModel, SharedArena};
 use tfmicro::ops::OpResolver;
 use tfmicro::schema::Model;
 use tfmicro::testutil::{fmt_kb, Rng};
@@ -75,4 +76,67 @@ fn main() {
     }
     let per_round = t0.elapsed() / rounds;
     println!("  interleaved round (vww+hotword+conv_ref): {per_round:.2?}");
+    drop(t_vww);
+    drop(t_hot);
+    drop(t_conv);
+
+    // PreparedModel split: a fleet of W workers serving M models pays
+    // the populate pass (packed weights, folded biases, XLA compiles)
+    // once per *model*, not once per worker x model, and the shared
+    // resident bytes stay O(M) while each worker adds only a cheap
+    // zeroed exec buffer.
+    println!("== PreparedModel: fleet cost O(models) shared + O(workers) exec ==");
+    let workers = 4;
+    let models =
+        [("vww", Arc::new(vww)), ("hotword", Arc::new(hotword)), ("conv_ref", Arc::new(conv_ref))];
+
+    // Legacy baseline: every worker builds a full interpreter per model.
+    let t0 = Instant::now();
+    let mut legacy_packed = 0usize;
+    for (_, model) in &models {
+        for _ in 0..workers {
+            let mut arena = Arena::new(512 * 1024);
+            let interp = MicroInterpreter::new(model, &resolver, &mut arena).unwrap();
+            legacy_packed += interp.arena_usage().kernel_buffers;
+        }
+    }
+    let legacy_init = t0.elapsed();
+
+    // Split: one PreparedModel per model, W ExecStates each.
+    let t0 = Instant::now();
+    let mut shared_packed = 0usize;
+    let mut exec_bytes = 0usize;
+    let mut prepared = Vec::new();
+    for (_, model) in &models {
+        let pm = PreparedModel::new(Arc::clone(model), &resolver).unwrap();
+        shared_packed += pm.shared_resident_bytes();
+        prepared.push(pm);
+    }
+    let mut states = Vec::new();
+    for pm in &prepared {
+        for _ in 0..workers {
+            states.push(pm.exec_state());
+            exec_bytes += pm.exec_bytes();
+        }
+    }
+    let prepared_init = t0.elapsed();
+    println!(
+        "  legacy   {workers} workers x {} models: packed-weight resident {:>10}  fleet init {:?}",
+        models.len(),
+        fmt_kb(legacy_packed),
+        legacy_init
+    );
+    println!(
+        "  prepared {} shared models + {} exec states: packed resident {:>10}  exec bufs {:>10}  fleet init {:?}",
+        models.len(),
+        states.len(),
+        fmt_kb(shared_packed),
+        fmt_kb(exec_bytes),
+        prepared_init
+    );
+    println!(
+        "  packed-weight saving at {workers} workers: {} ({}x)",
+        fmt_kb(legacy_packed.saturating_sub(shared_packed)),
+        workers
+    );
 }

@@ -9,7 +9,7 @@
 //! tfmicro mem      <model.tmf> [--planner greedy|linear|auto]
 //! tfmicro overhead <model.tmf> [--kernels ref|opt] [--iters N]
 //! tfmicro simulate <model.tmf> [--platform m4|dsp]
-//! tfmicro serve    <model.tmf> [--workers N] [--requests N]
+//! tfmicro serve    <model.tmf> [--workers N] [--requests N] [--reload <model.tmf>]
 //! tfmicro cpu
 //! ```
 
@@ -19,7 +19,10 @@ use crate::ops::{KernelFlavor, OpResolver};
 use crate::platform::{simulate, Platform};
 use crate::profiler::{measure_overhead, MicroProfiler};
 use crate::schema::Model;
-use crate::serving::{make_requests, run_closed_loop, ServingConfig};
+use crate::serving::{
+    make_requests, run_closed_loop, run_registry_with_feeder, CanaryConfig, ModelRegistry,
+    ServingConfig,
+};
 use crate::testutil::{fmt_kb, fmt_kcycles, Rng};
 
 /// Tiny flag parser: positional args + `--key value` / `--flag`.
@@ -100,7 +103,8 @@ const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu
   overhead  measured interpreter overhead, Figure 6 methodology (--iters N)
   simulate  cycle-model Figure 6 row (--platform m4|dsp)
   serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N,
-            --max-respawns N, --deadline-ms N)
+            --max-respawns N, --deadline-ms N, --reload <model.tmf> to hot-swap
+            a second model mid-run through the canary lifecycle)
   cpu       detected CPU features + chosen kernel dispatch (no model needed)";
 
 /// `tfmicro cpu`: field debugging for "why is this slow here" — what the
@@ -308,12 +312,52 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             };
             let n = args.usize_or("requests", 256);
             let mut rng = Rng::seeded(7);
-            let requests = make_requests(n, |_| {
+            let mut requests = make_requests(n, |_| {
                 let mut v = vec![0i8; in_len];
                 rng.fill_i8(&mut v);
                 v
             });
-            let report = run_closed_loop(&model, &resolver, cfg, requests, out_len)?;
+            let report = if let Some(reload_path) = args.get("reload") {
+                // Zero-downtime lifecycle demo: serve v1, then publish the
+                // reload file as v2 mid-run (prepare + canary off the hot
+                // path, atomic swap at the workers' next queue pull).
+                let reload = std::sync::Arc::new(load(reload_path)?);
+                let registry = ModelRegistry::new();
+                registry.publish(
+                    "v1",
+                    std::sync::Arc::new(model),
+                    &resolver,
+                    &CanaryConfig::default(),
+                )?;
+                let rest = requests.split_off(n / 2);
+                // The reload is typically a *different* model, so bit-exact
+                // shadow comparison against v1 would (correctly) reject it;
+                // health is carried by the shadow invokes themselves.
+                let reload_canary =
+                    CanaryConfig { require_bit_exact: false, ..CanaryConfig::default() };
+                let registry_ref = &registry;
+                let resolver_ref = &resolver;
+                run_registry_with_feeder(
+                    &registry,
+                    cfg,
+                    out_len,
+                    move |sub| {
+                        for r in requests {
+                            let _ = sub.submit(r);
+                        }
+                        match registry_ref.publish("v2", reload, resolver_ref, &reload_canary) {
+                            Ok(v) => eprintln!("hot-swapped to version '{}'", v.name()),
+                            Err(e) => eprintln!("reload rejected, v1 keeps serving: {e}"),
+                        }
+                        for r in rest {
+                            let _ = sub.submit(r);
+                        }
+                    },
+                    |_| {},
+                )?
+            } else {
+                run_closed_loop(&model, &resolver, cfg, requests, out_len)?
+            };
             println!("{}", report.summary());
             println!("per-worker: {:?}", report.per_worker);
             // Error taxonomy: always printed so a clean run is visibly
@@ -331,6 +375,9 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
                     .map(|&ns| std::time::Duration::from_nanos(ns))
                     .collect::<Vec<_>>()
             );
+            if let Some(v) = &report.active_version {
+                println!("active version: {v}");
+            }
         }
         other => {
             return Err(Error::Serving(format!("unknown command '{other}'\n{USAGE}")));

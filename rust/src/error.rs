@@ -103,6 +103,18 @@ pub enum Error {
         got: usize,
     },
 
+    /// A model registry `publish` was rejected before promotion — the
+    /// new version failed to prepare or failed canary validation. The
+    /// previously live version keeps serving.
+    PublishRejected {
+        /// Name of the rejected version.
+        version: String,
+        /// Lifecycle stage that rejected it ("prepare" or "canary").
+        stage: &'static str,
+        /// Human-readable description of the rejection.
+        reason: String,
+    },
+
     /// I/O error loading a model or artifact from disk (host-side tooling
     /// only; the embedded-style API works from in-memory byte slices).
     Io(std::io::Error),
@@ -144,6 +156,10 @@ impl std::fmt::Display for Error {
             Error::InvalidInput { id, expected, got } => write!(
                 f,
                 "invalid request input: request {id} carries {got} elements, model expects {expected}"
+            ),
+            Error::PublishRejected { version, stage, reason } => write!(
+                f,
+                "publish of model version '{version}' rejected at {stage}: {reason}"
             ),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

@@ -18,6 +18,9 @@
 //! | [`PJRT_EXECUTE`] | — | PJRT execute returns an XLA error |
 //! | [`ARENA_EXHAUSTED`] | — | invoke returns `Error::ArenaExhausted` |
 //! | [`QUEUE_STALL`] | — | serving worker parks until [`release_stalls`] |
+//! | [`PREPARE_FAIL`] | version name | registry publish fails during prepare |
+//! | [`CANARY_DIVERGE`] | version name | canary shadow output reported divergent |
+//! | [`VERSION_PANIC`] | version name | `panic!` in a worker serving that promoted version |
 //!
 //! ## Compile-time gating
 //!
@@ -44,6 +47,16 @@ pub const ARENA_EXHAUSTED: &str = "arena_exhausted";
 /// Fault point: a serving worker parks after pulling a request, simulating
 /// a wedged consumer, until [`release_stalls`] opens the gate.
 pub const QUEUE_STALL: &str = "queue_stall";
+/// Fault point: a model registry `publish` fails while building the new
+/// version's `PreparedModel`. Target is the version name.
+pub const PREPARE_FAIL: &str = "prepare_fail";
+/// Fault point: a canary shadow invoke is reported divergent from the
+/// live version's output. Target is the candidate version name.
+pub const CANARY_DIVERGE: &str = "canary_diverge";
+/// Fault point: `panic!` in a worker serving a **promoted** version —
+/// drives the respawn-budget / automatic-rollback path. Target is the
+/// version name.
+pub const VERSION_PANIC: &str = "version_panic";
 
 /// Whether the fault-injection machinery is compiled into this build.
 pub const fn compiled_in() -> bool {
@@ -246,12 +259,31 @@ mod active {
             park_stalled();
         }
     }
+
+    pub fn prepare_fail_point(version: &str) -> Option<String> {
+        if should_fire(super::PREPARE_FAIL, Some(version)) {
+            Some("injected fault: prepare failed".to_string())
+        } else {
+            None
+        }
+    }
+
+    pub fn canary_diverge_point(version: &str) -> bool {
+        should_fire(super::CANARY_DIVERGE, Some(version))
+    }
+
+    pub fn version_panic_point(version: &str) {
+        if should_fire(super::VERSION_PANIC, Some(version)) {
+            panic!("injected fault: post-promotion panic in version '{version}'");
+        }
+    }
 }
 
 #[cfg(any(test, debug_assertions, feature = "fault-injection"))]
 pub use active::{
-    arena_exhaustion_point, injected, install, kernel_panic_point, pjrt_execute_point,
-    queue_stall_point, release_stalls, should_fire, stalls_parked, FaultGuard,
+    arena_exhaustion_point, canary_diverge_point, injected, install, kernel_panic_point,
+    pjrt_execute_point, prepare_fail_point, queue_stall_point, release_stalls, should_fire,
+    stalls_parked, version_panic_point, FaultGuard,
 };
 
 // Plain release builds: every point is an inlined no-op so callers compile
@@ -302,12 +334,26 @@ mod inert {
 
     #[inline(always)]
     pub fn queue_stall_point() {}
+
+    #[inline(always)]
+    pub fn prepare_fail_point(_version: &str) -> Option<String> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn canary_diverge_point(_version: &str) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn version_panic_point(_version: &str) {}
 }
 
 #[cfg(not(any(test, debug_assertions, feature = "fault-injection")))]
 pub use inert::{
-    arena_exhaustion_point, injected, install, kernel_panic_point, pjrt_execute_point,
-    queue_stall_point, release_stalls, should_fire, stalls_parked, FaultGuard,
+    arena_exhaustion_point, canary_diverge_point, injected, install, kernel_panic_point,
+    pjrt_execute_point, prepare_fail_point, queue_stall_point, release_stalls, should_fire,
+    stalls_parked, version_panic_point, FaultGuard,
 };
 
 #[cfg(test)]

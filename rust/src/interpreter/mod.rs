@@ -26,9 +26,11 @@
 //! which is what makes multiple interpreters on multiple cores safe
 //! (§4.6) and shared-arena multitenancy possible (§4.5, [`SharedArena`]).
 
+pub mod prepared;
 mod shared;
 mod views;
 
+pub use prepared::{ExecState, PreparedModel};
 pub use shared::SharedArena;
 pub use views::{TensorView, TensorViewMut};
 
@@ -195,7 +197,7 @@ impl ArenaUsageDetail {
 /// side-table entries to the interpreter whose populate pass wrote them.
 static OWNER_TOKENS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
-fn next_owner_token() -> u64 {
+pub(crate) fn next_owner_token() -> u64 {
     OWNER_TOKENS.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1
 }
 

@@ -1,0 +1,602 @@
+//! Shared immutable model state + cheap per-worker execution state
+//! (ROADMAP direction 2; the MicroFlow static-model/mutable-state split).
+//!
+//! A [`MicroInterpreter`] owns everything — packed weights, folded
+//! biases, memory plan, activations — so N workers serving M models pay
+//! O(N×M) populate passes (XLA compile per worker!) and O(N×M) resident
+//! packed-weight bytes. The paper's §4.6 threading model only requires
+//! the *mutable* state to be private per worker; everything the populate
+//! pass produces is read-only afterwards and can be shared.
+//!
+//! [`PreparedModel`] is that read-only half, built once and handed out
+//! behind `Arc`: resolved kernels, prepared op data, the sealed memory
+//! plan, and one populate pass worth of persistent kernel buffers
+//! (repacked weights, folded biases, VNNI side tables, compiled XLA
+//! executables). [`ExecState`] is the mutable half a worker owns
+//! privately: one zeroed activation/scratch buffer sized by the plan,
+//! its own variable-tensor storage, and per-op degrade flags so one
+//! worker's offload failure never poisons its siblings.
+//!
+//! Fleet cost drops to O(models) shared bytes + O(workers) cheap zeroed
+//! buffers, which is what the serving registry
+//! ([`crate::serving::ModelRegistry`]) builds hot-swappable versions on.
+//!
+//! [`MicroInterpreter`]: super::MicroInterpreter
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::views::{TensorView, TensorViewMut};
+use super::{next_owner_token, ArenaUsageDetail, Options, PlannerChoice};
+use crate::arena::{ArenaUsage, DEFAULT_ALIGN};
+use crate::error::{Error, Result};
+use crate::ops::{DataLoc, Kernel, OpContext, OpData, OpResolver, PrepareContext};
+use crate::planner::{
+    analyze_lifetimes, BufferRequest, GreedyPlanner, LinearPlanner, MemoryPlanner, OfflinePlanner,
+};
+use crate::schema::Model;
+use crate::tensor::DType;
+
+fn align_up(x: usize, a: usize) -> usize {
+    (x + a - 1) & !(a - 1)
+}
+
+/// Heap buffer with a `DEFAULT_ALIGN`-aligned base.
+///
+/// `OpContext`'s checked casts (`cast_i32`/`cast_f32`) verify pointer
+/// alignment, and the memory plan aligns offsets only relative to the
+/// base — so the base itself must be aligned, like an `Arena`'s.
+/// Interior mutability follows the [`super::SharedArena`] precedent:
+/// kernels write through a raw base pointer obtained from a shared
+/// reference during the (externally synchronized) populate pass.
+pub(crate) struct AlignedBuf {
+    raw: UnsafeCell<Box<[u8]>>,
+    base: usize,
+    len: usize,
+}
+
+// SAFETY: writes through `base_ptr()` happen only (a) during the
+// single-threaded build/populate pass, before the buffer is ever shared,
+// or (b) at invoke time into an ExecState buffer reachable only through
+// `&mut ExecState` — the borrow checker serializes those. All shared
+// (`&`) access after build is read-only.
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    fn zeroed(len: usize) -> Self {
+        let raw = vec![0u8; len + DEFAULT_ALIGN].into_boxed_slice();
+        let base = raw.as_ptr().align_offset(DEFAULT_ALIGN);
+        AlignedBuf { raw: UnsafeCell::new(raw), base, len }
+    }
+
+    fn base_ptr(&self) -> *mut u8 {
+        // SAFETY: see the Sync impl — callers uphold the exclusivity
+        // contract for writes; the pointer itself is always valid.
+        unsafe { (*self.raw.get()).as_mut_ptr().add(self.base) }
+    }
+
+    /// Shared read of the buffer contents (valid while no writer runs;
+    /// see the Sync impl).
+    fn slice(&self) -> &[u8] {
+        // SAFETY: as in base_ptr; read-only view.
+        unsafe { &(*self.raw.get())[self.base..self.base + self.len] }
+    }
+
+    fn slice_mut(&mut self) -> &mut [u8] {
+        let base = self.base;
+        let len = self.len;
+        &mut self.raw.get_mut()[base..base + len]
+    }
+}
+
+/// Per-worker mutable execution state for one [`PreparedModel`]:
+/// activations + scratch (the planned region), variable tensors, and
+/// per-op degrade flags. Cheap to create — one zeroed allocation, no
+/// prepare/populate work — so a worker can rebuild it after a panic or
+/// a version swap without touching the shared model.
+pub struct ExecState {
+    buf: AlignedBuf,
+    /// Per-op accelerated-kernel degrade flags (set on offload failure;
+    /// scoped to this execution state, not the shared kernels).
+    degraded: Vec<AtomicBool>,
+    invocations: u64,
+}
+
+impl ExecState {
+    /// Number of ops currently marked degraded in this execution state.
+    pub fn degraded_ops(&self) -> usize {
+        self.degraded.iter().filter(|f| f.load(Ordering::Relaxed)).count()
+    }
+
+    /// Number of completed invocations through this execution state.
+    pub fn invocations(&self) -> u64 {
+        self.invocations
+    }
+}
+
+/// The shared immutable product of prepare → plan → populate, built once
+/// per model version and shared across workers behind `Arc`.
+///
+/// See the module docs for the split rationale. Construction mirrors
+/// [`super::MicroInterpreter`]'s build exactly — same validation, same
+/// planner, same populate pass — but persistent kernel buffers land in
+/// a buffer owned here (shared, charged once) while the planned
+/// activation/scratch/variable region becomes a per-worker
+/// [`ExecState`] layout.
+pub struct PreparedModel {
+    model: Arc<Model>,
+    kernels: Vec<Arc<dyn Kernel>>,
+    op_data: Vec<OpData>,
+    /// Shared persistent kernel buffers (packed weights, folded biases),
+    /// written once by the populate pass, read-only afterwards.
+    persist: AlignedBuf,
+    /// Bytes actually used inside `persist` (bump watermark).
+    persist_used: usize,
+    /// (offset, len) into `persist` of each persistent buffer, per op.
+    op_persistent: Vec<Vec<(usize, usize)>>,
+    /// (offset, len) into the ExecState buffer of each scratch buffer.
+    op_scratch: Vec<Vec<(usize, usize)>>,
+    /// Tensor locations: `Const` into model data, `Arena` into the
+    /// ExecState buffer (activations at plan offsets, variables after).
+    locs: Vec<DataLoc>,
+    /// Required ExecState buffer length (plan region + variables).
+    exec_len: usize,
+    /// Variable tensors: (tensor index, exec offset, len, zero byte).
+    variables: Vec<(usize, usize, usize, u8)>,
+    detail: ArenaUsageDetail,
+    /// Kernel-held bytes outside both buffers (XLA staged literals).
+    external_kernel: usize,
+    /// This build's unique owner token (side-table ABA guard).
+    owner: u64,
+}
+
+// SAFETY: `persist` is written only during the single-threaded build
+// (see AlignedBuf's Sync impl); every post-build access through a
+// shared `&PreparedModel` is read-only, and kernels are `Send + Sync`
+// by trait bound. Invoke-time writes go exclusively into the caller's
+// `&mut ExecState` buffer.
+unsafe impl Send for PreparedModel {}
+unsafe impl Sync for PreparedModel {}
+
+impl Drop for PreparedModel {
+    fn drop(&mut self) {
+        // Evict backend side-table entries (the AVX-VNNI compensation
+        // cache) keyed by persistent-buffer addresses inside `persist`,
+        // under this build's owner token — same ABA-guarded discipline
+        // as MicroInterpreter::drop.
+        let base = self.persist.base_ptr() as usize;
+        for bufs in &self.op_persistent {
+            for &(off, len) in bufs {
+                crate::ops::opt_ops::gemm::invalidate_compensation_range(
+                    (base + off) as *const u8,
+                    len,
+                    self.owner,
+                );
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PreparedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PreparedModel")
+            .field("model", &self.model.description())
+            .field("ops", &self.kernels.len())
+            .field("shared_resident_bytes", &self.shared_resident_bytes())
+            .field("exec_bytes", &self.exec_len)
+            .finish()
+    }
+}
+
+impl PreparedModel {
+    /// Build with default options.
+    pub fn new(model: Arc<Model>, resolver: &OpResolver) -> Result<Self> {
+        Self::build(model, resolver, Options::default())
+    }
+
+    /// Full build: validate → resolve → prepare → plan → populate.
+    pub fn build(model: Arc<Model>, resolver: &OpResolver, options: Options) -> Result<Self> {
+        crate::schema::validate::validate(&model)?;
+        let owner = next_owner_token();
+        let n_tensors = model.tensors().len();
+        let n_ops = model.operators().len();
+
+        // Runtime-structure accounting mirrors MicroInterpreter: these
+        // structs live on the host heap but are charged so Table-2-style
+        // reports stay faithful. They are charged once per model, not
+        // per worker — that is the point of the split.
+        let meta_bytes = n_tensors * std::mem::size_of::<DataLoc>()
+            + n_ops
+                * (std::mem::size_of::<Arc<dyn Kernel>>()
+                    + std::mem::size_of::<OpData>()
+                    + std::mem::size_of::<Vec<(usize, usize)>>());
+        let mut detail = ArenaUsageDetail { runtime_structs: meta_bytes, ..Default::default() };
+
+        // --- resolve kernels (owning handles — the model version must
+        //     outlive the resolver) ----------------------------------
+        let mut kernels: Vec<Arc<dyn Kernel>> = Vec::with_capacity(n_ops);
+        for op in model.operators() {
+            kernels.push(resolver.find_arc(op.key())?);
+        }
+
+        // --- tensor data locations ----------------------------------
+        // Constants point into the model; variables are placed *after*
+        // the planned region in the per-worker ExecState buffer (they
+        // are mutable across invokes, so they cannot be shared).
+        let mut locs = vec![DataLoc::Arena { off: 0, len: 0 }; n_tensors];
+        let mut variable_indices = Vec::new();
+        for (ti, t) in model.tensors().iter().enumerate() {
+            if let Some(b) = t.buffer {
+                let (off, len) = model.buffer_range(b)?;
+                if len != t.num_bytes() {
+                    return Err(Error::malformed(format!(
+                        "tensor {ti} ('{}'): buffer is {len} bytes, expected {}",
+                        t.name,
+                        t.num_bytes()
+                    )));
+                }
+                locs[ti] = DataLoc::Const { off, len };
+            } else if t.is_variable {
+                variable_indices.push(ti);
+            }
+        }
+
+        // --- prepare phase ------------------------------------------
+        let mut op_data: Vec<OpData> = (0..n_ops).map(|_| OpData::None).collect();
+        let mut scratch_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+        let mut persistent_sizes_per_op: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+        let mut persistent_opdata = 0usize;
+        let mut external_kernel = 0usize;
+        for (i, op) in model.operators().iter().enumerate() {
+            let mut sizes = Vec::new();
+            let mut psizes = Vec::new();
+            let mut ctx = PrepareContext::new(
+                i,
+                op,
+                &model,
+                &mut sizes,
+                &mut psizes,
+                &mut op_data[i],
+                &mut persistent_opdata,
+                &mut external_kernel,
+            );
+            kernels[i].prepare(&mut ctx)?;
+            scratch_sizes_per_op.push(sizes);
+            persistent_sizes_per_op.push(psizes);
+        }
+        detail.op_data = persistent_opdata;
+        detail.kernel_buffers += external_kernel;
+
+        // --- persistent buffer layout (shared, bump-allocated) -------
+        let mut persist_used = 0usize;
+        let mut op_persistent: Vec<Vec<(usize, usize)>> = Vec::with_capacity(n_ops);
+        for sizes in &persistent_sizes_per_op {
+            let mut bufs = Vec::with_capacity(sizes.len());
+            for &sz in sizes {
+                let off = align_up(persist_used, DEFAULT_ALIGN);
+                persist_used = off + sz;
+                bufs.push((off, sz));
+                detail.kernel_buffers += sz;
+            }
+            op_persistent.push(bufs);
+        }
+        let persist = AlignedBuf::zeroed(persist_used);
+
+        // --- lifetime analysis + planning ----------------------------
+        let info = analyze_lifetimes(&model);
+        let mut requests: Vec<BufferRequest> = info.requests.clone();
+        detail.tensors_sum = requests.iter().map(|r| r.size).sum();
+        let mut scratch_req_index: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+        for (i, sizes) in scratch_sizes_per_op.iter().enumerate() {
+            let mut idxs = Vec::with_capacity(sizes.len());
+            for &sz in sizes {
+                idxs.push(requests.len());
+                requests.push(BufferRequest { size: sz, first_use: i, last_use: i });
+            }
+            scratch_req_index.push(idxs);
+        }
+        detail.scratch_sum = requests[info.requests.len()..].iter().map(|r| r.size).sum();
+
+        let plan = match options.planner {
+            PlannerChoice::Greedy => GreedyPlanner.plan(&requests, DEFAULT_ALIGN)?,
+            PlannerChoice::Linear => LinearPlanner.plan(&requests, DEFAULT_ALIGN)?,
+            PlannerChoice::Offline | PlannerChoice::Auto => match model.offline_plan() {
+                Some(mut fixed) => {
+                    fixed.resize(requests.len(), -1);
+                    OfflinePlanner::new(fixed).plan(&requests, DEFAULT_ALIGN)?
+                }
+                None if options.planner == PlannerChoice::Auto => {
+                    GreedyPlanner.plan(&requests, DEFAULT_ALIGN)?
+                }
+                None => {
+                    return Err(Error::PlanFailed(
+                        "offline planner requested but model carries no plan".into(),
+                    ))
+                }
+            },
+        };
+        debug_assert!(crate::planner::verify_plan(&requests, &plan).is_ok());
+        detail.activation_plan = plan.arena_size;
+
+        // --- bind exec-relative offsets ------------------------------
+        // Plan region at [0, arena_size), variables bump-packed after it.
+        for (k, &ti) in info.tensor_indices.iter().enumerate() {
+            locs[ti] =
+                DataLoc::Arena { off: plan.offsets[k], len: model.tensors()[ti].num_bytes() };
+        }
+        let mut op_scratch: Vec<Vec<(usize, usize)>> = Vec::with_capacity(n_ops);
+        for idxs in &scratch_req_index {
+            op_scratch
+                .push(idxs.iter().map(|&ri| (plan.offsets[ri], requests[ri].size)).collect());
+        }
+        let mut exec_len = align_up(plan.arena_size, DEFAULT_ALIGN);
+        let mut variables = Vec::with_capacity(variable_indices.len());
+        for ti in variable_indices {
+            let t = &model.tensors()[ti];
+            let len = t.num_bytes();
+            let off = align_up(exec_len, DEFAULT_ALIGN);
+            exec_len = off + len;
+            locs[ti] = DataLoc::Arena { off, len };
+            detail.variables += len;
+            let zero = match t.dtype {
+                DType::I8 => t.quant.as_ref().map(|q| q.zero_points[0] as i8).unwrap_or(0) as u8,
+                _ => 0u8,
+            };
+            variables.push((ti, off, len, zero));
+        }
+
+        let pm = PreparedModel {
+            model,
+            kernels,
+            op_data,
+            persist,
+            persist_used,
+            op_persistent,
+            op_scratch,
+            locs,
+            exec_len,
+            variables,
+            detail,
+            external_kernel,
+            owner,
+        };
+
+        // --- populate pass: fill shared persistent buffers once ------
+        // Kernels see the invoke-time layout via a throwaway zeroed exec
+        // buffer (populate only reads constants and writes persistent
+        // buffers, but the context must still resolve arena locations).
+        // On error the already-constructed `pm` drops, which evicts any
+        // side-table entries earlier ops registered.
+        {
+            let scratch_exec = AlignedBuf::zeroed(pm.exec_len);
+            for (i, op) in pm.model.operators().iter().enumerate() {
+                let ctx = OpContext::new(
+                    i,
+                    op,
+                    pm.model.tensors(),
+                    &pm.locs,
+                    pm.model.data(),
+                    scratch_exec.base_ptr(),
+                    pm.exec_len,
+                    &pm.op_scratch[i],
+                    &pm.op_persistent[i],
+                    &pm.op_data[i],
+                    pm.owner,
+                )
+                .with_persistent_region(pm.persist.base_ptr(), pm.persist_used);
+                pm.kernels[i].populate(&ctx)?;
+            }
+        }
+
+        Ok(pm)
+    }
+
+    /// Create a fresh per-worker execution state: one zeroed buffer,
+    /// variables reset to their zero representation, no degraded ops.
+    pub fn exec_state(&self) -> ExecState {
+        let mut buf = AlignedBuf::zeroed(self.exec_len);
+        {
+            let bytes = buf.slice_mut();
+            for &(_, off, len, zero) in &self.variables {
+                bytes[off..off + len].fill(zero);
+            }
+        }
+        ExecState {
+            buf,
+            degraded: (0..self.kernels.len()).map(|_| AtomicBool::new(false)).collect(),
+            invocations: 0,
+        }
+    }
+
+    /// Reset `es`'s variable tensors to their zero representation.
+    pub fn reset_variables(&self, es: &mut ExecState) {
+        let bytes = es.buf.slice_mut();
+        for &(_, off, len, zero) in &self.variables {
+            bytes[off..off + len].fill(zero);
+        }
+    }
+
+    fn graph_tensor(&self, list: &[i32], i: usize, what: &str) -> Result<usize> {
+        list.get(i)
+            .map(|&t| t as usize)
+            .ok_or_else(|| Error::InvalidTensor(format!("{what} {i} out of range")))
+    }
+
+    /// Mutable view of graph input `i` inside `es` (populate before
+    /// [`PreparedModel::invoke`]).
+    pub fn input_mut<'s>(&'s self, es: &'s mut ExecState, i: usize) -> Result<TensorViewMut<'s>> {
+        let ti = self.graph_tensor(self.model.inputs(), i, "input")?;
+        let meta = &self.model.tensors()[ti];
+        match self.locs[ti] {
+            DataLoc::Const { .. } => Err(Error::InvalidTensor("input is constant".into())),
+            DataLoc::Arena { off, len } => {
+                let bytes = &mut es.buf.slice_mut()[off..off + len];
+                Ok(TensorViewMut { meta, bytes })
+            }
+        }
+    }
+
+    /// Read-only view of graph output `i` inside `es`.
+    pub fn output<'s>(&'s self, es: &'s ExecState, i: usize) -> Result<TensorView<'s>> {
+        let ti = self.graph_tensor(self.model.outputs(), i, "output")?;
+        let meta = &self.model.tensors()[ti];
+        let bytes = match self.locs[ti] {
+            DataLoc::Const { off, len } => &self.model.data()[off..off + len],
+            DataLoc::Arena { off, len } => &es.buf.slice()[off..off + len],
+        };
+        Ok(TensorView { meta, bytes })
+    }
+
+    /// Run one inference through `es`. Shared state is read-only; all
+    /// writes land in `es`'s buffer, so any number of threads may invoke
+    /// concurrently through the same `Arc<PreparedModel>` as long as
+    /// each owns its `ExecState` (§4.6).
+    pub fn invoke(&self, es: &mut ExecState) -> Result<()> {
+        // Same deterministic fault points as MicroInterpreter::invoke,
+        // so the serving supervision tests drive both paths identically.
+        if let Some(e) = crate::faults::arena_exhaustion_point() {
+            return Err(e);
+        }
+        let base = es.buf.base_ptr();
+        for (i, op) in self.model.operators().iter().enumerate() {
+            crate::faults::kernel_panic_point(op.key());
+            let ctx = OpContext::new(
+                i,
+                op,
+                self.model.tensors(),
+                &self.locs,
+                self.model.data(),
+                base,
+                self.exec_len,
+                &self.op_scratch[i],
+                &self.op_persistent[i],
+                &self.op_data[i],
+                self.owner,
+            )
+            .with_persistent_region(self.persist.base_ptr(), self.persist_used)
+            .with_degrade_flag(&es.degraded[i]);
+            self.kernels[i].invoke(&ctx)?;
+        }
+        es.invocations += 1;
+        Ok(())
+    }
+
+    // --- introspection ------------------------------------------------
+
+    /// Bytes resident **once per model version** regardless of worker
+    /// count: shared persistent kernel buffers (packed weights, folded
+    /// biases, side tables) plus off-arena kernel bytes (XLA staged
+    /// literals / executable I/O). The O(models) term of fleet memory.
+    pub fn shared_resident_bytes(&self) -> usize {
+        self.persist_used + self.external_kernel
+    }
+
+    /// Bytes each [`ExecState`] allocates (activations + scratch +
+    /// variables). The O(workers) term of fleet memory.
+    pub fn exec_bytes(&self) -> usize {
+        self.exec_len
+    }
+
+    /// Table-2-style usage, counting shared bytes once and one worker's
+    /// exec buffer as the non-persistent region.
+    pub fn arena_usage(&self) -> ArenaUsage {
+        let persistent = self.detail.runtime_structs
+            + self.detail.op_data
+            + self.persist_used
+            + self.external_kernel;
+        ArenaUsage {
+            persistent,
+            kernel_buffers: self.persist_used + self.external_kernel,
+            nonpersistent: self.exec_len,
+            total: persistent + self.exec_len,
+            capacity: persistent + self.exec_len,
+        }
+    }
+
+    /// Per-category breakdown (the RecordingMicroAllocator view).
+    pub fn arena_usage_detail(&self) -> ArenaUsageDetail {
+        self.detail
+    }
+
+    /// Number of operations in the execution list.
+    pub fn op_count(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// The loaded model.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::writer::fully_connected_options;
+    use crate::schema::{BuiltinOp, ModelBuilder};
+    use crate::tensor::QuantParams;
+
+    fn tiny_fc_model() -> Model {
+        let mut b = ModelBuilder::new("prepared-tiny");
+        let q = QuantParams::per_tensor(1.0, 0);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q.clone());
+        let wbuf = b.add_buffer(&[1u8; 8]);
+        let t_w = b.add_quant_tensor("w", DType::I8, &[2, 4], Some(wbuf), q.clone());
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2], None, q);
+        b.add_op(
+            BuiltinOp::FullyConnected,
+            &[t_in, t_w, -1],
+            &[t_out],
+            fully_connected_options(Default::default()),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        Model::from_bytes(&b.finish()).unwrap()
+    }
+
+    #[test]
+    fn prepared_model_matches_interpreter_output() {
+        let model = Arc::new(tiny_fc_model());
+        let resolver = OpResolver::with_reference_ops();
+
+        // Baseline: classic per-worker interpreter.
+        let mut arena = crate::arena::Arena::new(64 * 1024);
+        let mut interp =
+            super::super::MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+        interp.input_mut(0).unwrap().copy_from_i8(&[1, 2, 3, 4]).unwrap();
+        interp.invoke().unwrap();
+        let expect = interp.output(0).unwrap().as_i8().unwrap().to_vec();
+
+        let pm = PreparedModel::new(Arc::clone(&model), &resolver).unwrap();
+        let mut es = pm.exec_state();
+        pm.input_mut(&mut es, 0).unwrap().copy_from_i8(&[1, 2, 3, 4]).unwrap();
+        pm.invoke(&mut es).unwrap();
+        assert_eq!(pm.output(&es, 0).unwrap().as_i8().unwrap(), &expect[..]);
+        assert_eq!(es.invocations(), 1);
+    }
+
+    #[test]
+    fn exec_states_are_independent() {
+        let resolver = OpResolver::with_reference_ops();
+        let pm = PreparedModel::new(Arc::new(tiny_fc_model()), &resolver).unwrap();
+
+        let mut a = pm.exec_state();
+        let mut b = pm.exec_state();
+        pm.input_mut(&mut a, 0).unwrap().copy_from_i8(&[1, 1, 1, 1]).unwrap();
+        pm.input_mut(&mut b, 0).unwrap().copy_from_i8(&[2, 2, 2, 2]).unwrap();
+        pm.invoke(&mut a).unwrap();
+        pm.invoke(&mut b).unwrap();
+        assert_eq!(pm.output(&a, 0).unwrap().as_i8().unwrap(), &[4, 4]);
+        assert_eq!(pm.output(&b, 0).unwrap().as_i8().unwrap(), &[8, 8]);
+    }
+
+    #[test]
+    fn shared_bytes_do_not_scale_with_exec_states() {
+        let resolver = OpResolver::with_optimized_ops();
+        let pm = PreparedModel::new(Arc::new(tiny_fc_model()), &resolver).unwrap();
+        let before = pm.shared_resident_bytes();
+        let _states: Vec<ExecState> = (0..8).map(|_| pm.exec_state()).collect();
+        assert_eq!(pm.shared_resident_bytes(), before);
+        assert!(pm.exec_bytes() > 0);
+    }
+}

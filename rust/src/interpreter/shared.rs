@@ -168,4 +168,47 @@ mod tests {
         a.release();
         assert!(a.acquire().is_ok());
     }
+
+    /// The busy-flag violation surfaces through the *interpreter's*
+    /// invoke as a typed error — a co-tenant mid-invoke turns a would-be
+    /// data race into `Error::Serving`, and the tenant recovers cleanly
+    /// once the flag is released (no poisoned state).
+    #[test]
+    fn interpreter_invoke_surfaces_busy_flag_violation() {
+        use crate::schema::writer::fully_connected_options;
+        use crate::schema::{BuiltinOp, Model, ModelBuilder};
+        use crate::tensor::{DType, QuantParams};
+
+        let mut b = ModelBuilder::new("shared-busy");
+        let q = QuantParams::per_tensor(1.0, 0);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q.clone());
+        let wbuf = b.add_buffer(&[1u8; 8]);
+        let t_w = b.add_quant_tensor("w", DType::I8, &[2, 4], Some(wbuf), q.clone());
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2], None, q);
+        b.add_op(
+            BuiltinOp::FullyConnected,
+            &[t_in, t_w, -1],
+            &[t_out],
+            fully_connected_options(Default::default()),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        let model = Model::from_bytes(&b.finish()).unwrap();
+
+        let resolver = crate::ops::OpResolver::with_reference_ops();
+        let arena = SharedArena::new(64 * 1024);
+        let mut interp =
+            crate::interpreter::MicroInterpreter::new_shared(&model, &resolver, &arena).unwrap();
+        interp.input_mut(0).unwrap().copy_from_i8(&[1, 2, 3, 4]).unwrap();
+
+        // Simulate a co-tenant that is mid-invoke.
+        arena.acquire().unwrap();
+        let err = interp.invoke().unwrap_err();
+        assert!(matches!(err, Error::Serving(_)), "got {err:?}");
+        assert!(err.to_string().contains("concurrently"));
+
+        // Releasing the flag un-wedges the tenant with no residue.
+        arena.release();
+        interp.invoke().unwrap();
+        assert_eq!(interp.output(0).unwrap().as_i8().unwrap(), &[10, 10]);
+    }
 }

@@ -59,7 +59,7 @@ pub mod testutil;
 pub mod prelude {
     pub use crate::arena::Arena;
     pub use crate::error::{Error, Result};
-    pub use crate::interpreter::MicroInterpreter;
+    pub use crate::interpreter::{ExecState, MicroInterpreter, PreparedModel};
     pub use crate::ops::resolver::OpResolver;
     pub use crate::schema::model::Model;
     pub use crate::tensor::{DType, QuantParams};

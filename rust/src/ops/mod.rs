@@ -59,6 +59,7 @@ pub use resolver::OpResolver;
 use crate::error::{Error, Result};
 use crate::schema::{Model, Operator};
 use crate::tensor::{DType, TensorMeta};
+use std::sync::atomic::AtomicBool;
 
 /// Where a tensor's storage lives at run time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -353,6 +354,17 @@ pub struct OpContext<'r> {
     /// The owning interpreter's token (unique per interpreter build;
     /// [`crate::ops::opt_ops::gemm::NO_OWNER`] outside a lifecycle).
     owner: u64,
+    /// Base of the persistent (tail) region. For `MicroInterpreter` this
+    /// is the arena itself; for a [`crate::interpreter::PreparedModel`]
+    /// persistent buffers live in a separate shared buffer so that many
+    /// `ExecState` arenas can reference one copy of the packed weights.
+    persist_base: *mut u8,
+    persist_len: usize,
+    /// Per-execution-state degrade flag for accelerated kernels. When
+    /// present, an offload failure marks only this execution state as
+    /// degraded instead of poisoning shared kernel state (`None` keeps
+    /// the legacy per-kernel flag).
+    degrade: Option<&'r AtomicBool>,
 }
 
 // SAFETY: `arena` points into memory exclusively borrowed (&mut) by the
@@ -388,7 +400,31 @@ impl<'r> OpContext<'r> {
             persistent,
             op_data,
             owner,
+            // Default: persistent buffers live inside the arena itself
+            // (the MicroInterpreter layout).
+            persist_base: arena,
+            persist_len: arena_len,
+            degrade: None,
         }
+    }
+
+    /// Point persistent-buffer resolution at a region separate from the
+    /// arena ([`crate::interpreter::PreparedModel`]'s shared tail buffer).
+    pub fn with_persistent_region(mut self, base: *mut u8, len: usize) -> Self {
+        self.persist_base = base;
+        self.persist_len = len;
+        self
+    }
+
+    /// Attach a per-execution-state degrade flag for accelerated kernels.
+    pub fn with_degrade_flag(mut self, flag: &'r AtomicBool) -> Self {
+        self.degrade = Some(flag);
+        self
+    }
+
+    /// Per-execution-state degrade flag, if the caller provided one.
+    pub fn degrade_flag(&self) -> Option<&'r AtomicBool> {
+        self.degrade
     }
 
     /// Prepared per-op state.
@@ -542,11 +578,21 @@ impl<'r> OpContext<'r> {
 
     /// Persistent buffer requested during prepare: mutable during the
     /// populate pass (to fill it), treated as read-only at invoke time.
+    ///
+    /// Resolved against the persistent region, which is the arena itself
+    /// for `MicroInterpreter` and a separate shared buffer for
+    /// [`crate::interpreter::PreparedModel`].
     pub fn persistent_bytes(&self, h: PersistentHandle) -> Result<&'r mut [u8]> {
         let &(off, len) = self.persistent.get(h.0).ok_or_else(|| {
             Error::InvalidTensor(format!("persistent handle {} out of range", h.0))
         })?;
-        self.bytes_at_mut(DataLoc::Arena { off, len })
+        if off + len > self.persist_len {
+            return Err(Error::InvalidTensor("persistent range out of bounds".into()));
+        }
+        // SAFETY: range is inside the persistent region and disjoint from
+        // every other op's buffers per the bump layout; see type-level
+        // invariants.
+        Ok(unsafe { std::slice::from_raw_parts_mut(self.persist_base.add(off), len) })
     }
 
     /// Persistent buffer viewed as i8 (packed-weight layouts).

@@ -88,6 +88,20 @@ impl OpResolver {
             .ok_or_else(|| Error::UnsupportedOp(key.to_string()))
     }
 
+    /// Look up the kernel for an operator key as an owning handle.
+    ///
+    /// [`crate::interpreter::PreparedModel`] clones the `Arc` so the
+    /// prepared state (and the serving registry's live versions built on
+    /// it) stays valid independently of the resolver's lifetime — the
+    /// resolver is a build-time object, a published model version is not.
+    pub fn find_arc(&self, key: &str) -> Result<Arc<dyn Kernel>> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| Arc::clone(v))
+            .ok_or_else(|| Error::UnsupportedOp(key.to_string()))
+    }
+
     /// Flavor of the registered kernel for `key` (bench introspection).
     pub fn flavor_of(&self, key: &str) -> Option<KernelFlavor> {
         self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v.flavor())

@@ -316,8 +316,17 @@ impl Kernel for XlaFcKernel {
                         .filter(|st| st.weights_src == (w.as_ptr() as usize, w.len()));
                     // A degraded op (earlier invoke-time backend failure)
                     // skips the backend entirely and takes the bit-exact
-                    // CPU fallback below.
-                    if let Some(st) = staged.filter(|st| !st.degraded.load(Ordering::Relaxed)) {
+                    // CPU fallback below. When the context carries a
+                    // per-execution-state flag (PreparedModel invokes),
+                    // degradation is scoped to that worker's ExecState so
+                    // one flaky worker never poisons siblings sharing the
+                    // staged kernel state; otherwise (MicroInterpreter)
+                    // the op-level flag applies as before.
+                    let degraded_now = |st: &XlaFcState| match ctx.degrade_flag() {
+                        Some(f) => f.load(Ordering::Relaxed),
+                        None => st.degraded.load(Ordering::Relaxed),
+                    };
+                    if let Some(st) = staged.filter(|st| !degraded_now(st)) {
                         // Input transfer + execute — the whole invoke path.
                         // The warm path reuses the per-op staging pair
                         // (restage + execute-into: zero allocations); a
@@ -389,7 +398,10 @@ impl Kernel for XlaFcKernel {
                                 // Flip the flag and serve this request (and
                                 // all later ones) from the CPU path — same
                                 // outputs, reported instead of fatal.
-                                st.degraded.store(true, Ordering::Relaxed);
+                                match ctx.degrade_flag() {
+                                    Some(f) => f.store(true, Ordering::Relaxed),
+                                    None => st.degraded.store(true, Ordering::Relaxed),
+                                }
                                 super::note_degrade();
                             }
                         }

@@ -57,9 +57,60 @@
 //!   initialize, output-length contract violation) — per-request failures
 //!   land in the [`FaultTaxonomy`] of the returned [`ServingReport`].
 //!
+//! # Model lifecycle (zero-downtime updates)
+//!
+//! Long-lived fleets cannot stop for a model update, so [`registry`]
+//! layers a versioned hot-swap lifecycle over the same worker loop.
+//! Every published version walks this state machine:
+//!
+//! ```text
+//!             publish(name, model)
+//!                     │
+//!                 Preparing ──prepare error/panic──▶ Rejected
+//!                     │
+//!                  Canary ────divergence/panic────▶ Rejected
+//!                     │                    (live keeps serving)
+//!              (shadow invokes
+//!           compared against live
+//!            + golden probes pass)
+//!                     │
+//!                   Live ◀──────────────────────────┐
+//!                     │                             │
+//!          per-version respawn budget               │ rollback to
+//!               exhausted by panics                 │ last-known-good
+//!                     │                             │
+//!                     ├──good version remains───────┘ (RolledBack)
+//!                     │
+//!                     └──no good version──▶ breaker opens (Retired;
+//!                                           terminal, submits reject)
+//! ```
+//!
+//! * **Preparing** runs off the hot path: the full prepare → plan →
+//!   populate pass builds a shared [`crate::interpreter::PreparedModel`]
+//!   while the live version keeps serving every request.
+//! * **Canary** shadow-invokes the candidate on deterministic inputs and
+//!   compares outputs against the live version bit-exactly (plus optional
+//!   golden input/output probes). Divergence or a panic rejects the
+//!   candidate; the live version never stops serving.
+//! * **Live**: workers pick up the new version's `Arc` at their next
+//!   queue pull — no draining, no dropped in-flight requests.
+//! * **RolledBack**: a version that starts panicking *after* promotion
+//!   consumes a per-version respawn budget; exhausting it demotes the
+//!   version and reinstates the last-known-good one automatically.
+//! * The breaker remains the terminal state only when no good version
+//!   exists to roll back to.
+//!
 //! The deterministic fault points driving the test suite live in
 //! [`crate::faults`]: `kernel_panic`, `pjrt_execute`, `arena_exhausted`,
-//! `queue_stall`.
+//! `queue_stall`, plus the lifecycle points `prepare_fail`,
+//! `canary_diverge`, and `version_panic`.
+
+pub mod registry;
+
+pub use registry::{
+    run_registry_closed_loop, run_registry_with_feeder, CanaryConfig, LifecycleStats,
+    ModelRegistry, ModelVersion,
+};
 
 use crate::arena::Arena;
 use crate::error::{Error, Result};
@@ -70,6 +121,13 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// First pause of the bounded exponential backoff used by blocking
+/// submits polling a full queue.
+const BACKOFF_START: Duration = Duration::from_micros(50);
+/// Backoff ceiling: long enough to stop burning a core, short enough to
+/// keep worst-case extra submit latency negligible.
+const BACKOFF_CAP: Duration = Duration::from_millis(2);
 
 /// Serving configuration.
 #[derive(Debug, Clone, Copy)]
@@ -159,6 +217,11 @@ pub struct FaultTaxonomy {
     pub invoke_errors: usize,
     /// Requests shed by a worker because their deadline had expired.
     pub deadline_misses: usize,
+    /// Requests whose invoke started before but finished after their
+    /// deadline. The response is still delivered (the work was already
+    /// spent) — distinct from `deadline_misses`, which are shed *before*
+    /// invoke.
+    pub late_completions: usize,
     /// Requests shed at submit because the queue stayed full
     /// (`try_submit` / `submit_timeout`).
     pub sheds: usize,
@@ -171,6 +234,13 @@ pub struct FaultTaxonomy {
     pub dropped: usize,
     /// Workers that failed to build an interpreter at all.
     pub worker_init_failures: usize,
+    /// Published model versions rejected during the canary phase
+    /// (registry runs only).
+    pub canary_rejects: usize,
+    /// Automatic rollbacks to the last-known-good version after a
+    /// promoted version exhausted its respawn budget (registry runs
+    /// only).
+    pub rollbacks: usize,
 }
 
 impl FaultTaxonomy {
@@ -182,17 +252,20 @@ impl FaultTaxonomy {
     /// Compact single-line rendering for logs.
     pub fn summary(&self) -> String {
         format!(
-            "panics {} respawns {} poisoned {} invoke-err {} deadline-miss {} sheds {} rejected {} degraded {} dropped {} init-fail {}",
+            "panics {} respawns {} poisoned {} invoke-err {} deadline-miss {} late {} sheds {} rejected {} degraded {} dropped {} init-fail {} canary-reject {} rollbacks {}",
             self.panics,
             self.respawns,
             self.poisoned_arenas,
             self.invoke_errors,
             self.deadline_misses,
+            self.late_completions,
             self.sheds,
             self.rejected_submits,
             self.degraded_ops,
             self.dropped,
             self.worker_init_failures,
+            self.canary_rejects,
+            self.rollbacks,
         )
     }
 }
@@ -228,6 +301,10 @@ pub struct ServingReport {
     pub faults: FaultTaxonomy,
     /// Whether the circuit breaker was open when the run ended.
     pub breaker_open: bool,
+    /// Name of the model version live when the run ended (registry runs
+    /// only; `None` for the single-model loop, or when every version was
+    /// retired).
+    pub active_version: Option<String>,
 }
 
 impl ServingReport {
@@ -251,6 +328,10 @@ impl ServingReport {
         if self.breaker_open {
             s.push_str("  BREAKER-OPEN");
         }
+        if let Some(v) = &self.active_version {
+            s.push_str("  active ");
+            s.push_str(v);
+        }
         s
     }
 }
@@ -263,6 +344,7 @@ struct FleetShared {
     poisoned_arenas: AtomicUsize,
     invoke_errors: AtomicUsize,
     deadline_misses: AtomicUsize,
+    late_completions: AtomicUsize,
     sheds: AtomicUsize,
     rejected_submits: AtomicUsize,
     worker_init_failures: AtomicUsize,
@@ -285,6 +367,7 @@ impl FleetShared {
             poisoned_arenas: AtomicUsize::new(0),
             invoke_errors: AtomicUsize::new(0),
             deadline_misses: AtomicUsize::new(0),
+            late_completions: AtomicUsize::new(0),
             sheds: AtomicUsize::new(0),
             rejected_submits: AtomicUsize::new(0),
             worker_init_failures: AtomicUsize::new(0),
@@ -304,11 +387,14 @@ impl FleetShared {
             poisoned_arenas: self.poisoned_arenas.load(Ordering::SeqCst),
             invoke_errors: self.invoke_errors.load(Ordering::SeqCst),
             deadline_misses: self.deadline_misses.load(Ordering::SeqCst),
+            late_completions: self.late_completions.load(Ordering::SeqCst),
             sheds: self.sheds.load(Ordering::SeqCst),
             rejected_submits: self.rejected_submits.load(Ordering::SeqCst),
             degraded_ops: 0, // filled from the runtime degrade counter
             dropped: 0,      // filled by the post-run queue drain
             worker_init_failures: self.worker_init_failures.load(Ordering::SeqCst),
+            canary_rejects: 0, // filled by the registry runner
+            rollbacks: 0,      // filled by the registry runner
         }
     }
 }
@@ -351,9 +437,13 @@ impl Submitter<'_> {
     /// Blocking submit with backpressure. Unlike a raw channel send it can
     /// not wedge forever: the wait is punctuated by breaker checks, so a
     /// dead fleet turns into a fast [`Error::CircuitOpen`] rejection.
+    /// Polls under a bounded exponential backoff
+    /// ([`BACKOFF_START`]..[`BACKOFF_CAP`]) so a long wait on a full
+    /// queue parks instead of burning a core.
     pub fn submit(&self, req: Request) -> Result<()> {
         self.precheck(&req)?;
         let mut req = self.finalize(req);
+        let mut backoff = BACKOFF_START;
         loop {
             if self.shared.breaker_open.load(Ordering::SeqCst) {
                 self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
@@ -363,7 +453,8 @@ impl Submitter<'_> {
                 Ok(()) => return Ok(()),
                 Err(TrySendError::Full(r)) => {
                     req = r;
-                    std::thread::sleep(Duration::from_micros(200));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
                 }
                 Err(TrySendError::Disconnected(r)) => {
                     self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
@@ -397,6 +488,7 @@ impl Submitter<'_> {
         self.precheck(&req)?;
         let mut req = self.finalize(req);
         let start = Instant::now();
+        let mut backoff = BACKOFF_START;
         loop {
             if self.shared.breaker_open.load(Ordering::SeqCst) {
                 self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
@@ -405,12 +497,16 @@ impl Submitter<'_> {
             match self.tx.try_send(req) {
                 Ok(()) => return Ok(()),
                 Err(TrySendError::Full(r)) => {
-                    if start.elapsed() >= timeout {
+                    let elapsed = start.elapsed();
+                    if elapsed >= timeout {
                         self.shared.sheds.fetch_add(1, Ordering::SeqCst);
                         return Err(Error::QueueFull { id: r.id });
                     }
                     req = r;
-                    std::thread::sleep(Duration::from_micros(200));
+                    // Bounded exponential backoff, clipped so the timeout
+                    // is not overshot by a whole backoff step.
+                    std::thread::sleep(backoff.min(timeout - elapsed));
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
                 }
                 Err(TrySendError::Disconnected(r)) => {
                     self.shared.rejected_submits.fetch_add(1, Ordering::SeqCst);
@@ -511,6 +607,11 @@ where
                 // then one more per respawn after a caught panic. A panic
                 // poisons the current arena; leaving the iteration drops
                 // interpreter and arena so the next one starts fresh.
+                let mut respawned = false;
+                // Whether this worker died (init failure, exhausted
+                // budget) rather than exiting cleanly at queue close —
+                // only abnormal exits may trip the last-worker breaker.
+                let mut abnormal = false;
                 'respawn: loop {
                     let mut arena = Arena::new(cfg.arena_bytes);
                     // Worker startup pays everything expensive: the build
@@ -527,6 +628,20 @@ where
                             if slot.is_none() {
                                 *slot = Some(e.to_string());
                             }
+                            drop(slot);
+                            // A *respawn* that fails to re-init shrinks the
+                            // fleet just like an uncontained panic would:
+                            // charge the respawn budget so repeated
+                            // panic + init-failure cycles cannot silently
+                            // whittle workers away under an honest budget.
+                            if respawned {
+                                let used = shared.respawns_used.fetch_add(1, Ordering::SeqCst);
+                                if used >= shared.max_respawns {
+                                    shared.respawns_used.fetch_sub(1, Ordering::SeqCst);
+                                    shared.breaker_open.store(true, Ordering::SeqCst);
+                                }
+                            }
+                            abnormal = true;
                             break 'respawn;
                         }
                     };
@@ -540,13 +655,16 @@ where
                             rx.recv()
                         };
                         let Ok(req) = req else { break 'respawn };
-                        crate::faults::queue_stall_point();
+                        // Expired requests shed before invoke (and before
+                        // the stall point: a stalled worker models a slow
+                        // *invoke*, not a slow deadline check).
                         if let Some(d) = req.deadline {
                             if Instant::now() >= d {
                                 shared.deadline_misses.fetch_add(1, Ordering::SeqCst);
                                 continue;
                             }
                         }
+                        crate::faults::queue_stall_point();
                         let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                             || -> Result<Vec<i8>> {
                                 interp.input_mut(0)?.copy_from_i8(&req.input)?;
@@ -556,6 +674,17 @@ where
                         ));
                         match unwound {
                             Ok(Ok(output)) => {
+                                // The deadline may have expired *during*
+                                // invoke: the work is already spent, so the
+                                // response is still delivered, but counted
+                                // separately from shed-before-invoke.
+                                if let Some(d) = req.deadline {
+                                    if Instant::now() >= d {
+                                        shared
+                                            .late_completions
+                                            .fetch_add(1, Ordering::SeqCst);
+                                    }
+                                }
                                 let resp = Response {
                                     id: req.id,
                                     output,
@@ -580,16 +709,19 @@ where
                                     // claim and trip the breaker.
                                     shared.respawns_used.fetch_sub(1, Ordering::SeqCst);
                                     shared.breaker_open.store(true, Ordering::SeqCst);
+                                    abnormal = true;
                                     break 'respawn;
                                 }
+                                respawned = true;
                                 continue 'respawn;
                             }
                         }
                     }
                 }
-                if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 {
-                    // Last worker gone: nobody will ever drain the queue,
-                    // so submits must reject fast from here on.
+                if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 && abnormal {
+                    // Last worker *died* (rather than exiting at queue
+                    // close): nobody will ever drain the queue, so submits
+                    // must reject fast from here on.
                     shared.breaker_open.store(true, Ordering::SeqCst);
                 }
             });
@@ -677,6 +809,7 @@ where
             cold_start_ns,
             faults,
             breaker_open: shared.breaker_open.load(Ordering::SeqCst),
+            active_version: None,
         })
     })?;
     report.faults.degraded_ops =

@@ -1,0 +1,625 @@
+//! Versioned model registry: zero-downtime publish → canary → hot-swap
+//! → automatic rollback (see the lifecycle state machine in the
+//! [`super`] module docs).
+//!
+//! Built on the [`PreparedModel`]/[`ExecState`] split: a published
+//! version is one shared `Arc<PreparedModel>` (packed weights, folded
+//! biases, compiled XLA executables, memory plan — charged once per
+//! version), and each worker owns only a cheap per-version [`ExecState`].
+//! Swapping a fleet to a new version is therefore an `Arc` pointer swap
+//! plus one zeroed buffer per worker — no populate pass, no XLA
+//! recompile, no draining.
+//!
+//! Workers re-read the registry's live pointer at every queue pull, so a
+//! promotion takes effect between requests: in-flight invokes finish on
+//! the version they started with and nothing is dropped. A worker whose
+//! invoke panics drops only its own `ExecState` (the shared model is
+//! immutable at invoke time) and rebuilds it on the next pull — that
+//! *is* the respawn, which is why registry workers never die from
+//! panics; they die only when every version is retired.
+//!
+//! One sharing caveat: vendor/XLA kernels that key staged state by op
+//! index (e.g. `runtime::XlaFcKernel`) share that state across every
+//! model built from the same resolver instance. Versions with different
+//! weights should be published through their own kernel registrations if
+//! offload matters; otherwise the loser of a populate race detects the
+//! weight mismatch at invoke and takes the bit-exact CPU fallback.
+
+use super::{
+    FaultTaxonomy, FleetShared, Request, Response, ServingConfig, ServingReport, Submitter,
+};
+use crate::error::{Error, Result};
+use crate::interpreter::{ExecState, PreparedModel};
+use crate::ops::OpResolver;
+use crate::schema::Model;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// One published model version: an immutable shared [`PreparedModel`]
+/// plus lifecycle bookkeeping.
+pub struct ModelVersion {
+    name: String,
+    /// Monotonic promotion sequence number (workers detect swaps by
+    /// comparing it, so republishing an old name still swaps).
+    seq: u64,
+    prepared: Arc<PreparedModel>,
+    /// Post-promotion panics charged against this version's respawn
+    /// budget.
+    panics: AtomicUsize,
+}
+
+impl ModelVersion {
+    /// Version name as passed to `publish`.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The shared prepared model.
+    pub fn prepared(&self) -> &Arc<PreparedModel> {
+        &self.prepared
+    }
+
+    /// Post-promotion panics charged to this version so far.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+}
+
+impl std::fmt::Debug for ModelVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelVersion")
+            .field("name", &self.name)
+            .field("seq", &self.seq)
+            .field("panics", &self.panics.load(Ordering::SeqCst))
+            .finish()
+    }
+}
+
+/// Canary-phase configuration for [`ModelRegistry::publish`].
+#[derive(Debug, Clone)]
+pub struct CanaryConfig {
+    /// Number of shadow invokes on deterministic random inputs.
+    pub shadow_invokes: usize,
+    /// Seed for the shadow-input generator (same seed, same canary).
+    pub seed: u64,
+    /// Golden health probes: (input, expected output) pairs the
+    /// candidate must reproduce exactly.
+    pub golden: Vec<(Vec<i8>, Vec<i8>)>,
+    /// Compare shadow outputs bit-exactly against the live version.
+    /// Disable when publishing an intentionally different model (e.g. a
+    /// retrained version) — golden probes then carry the health check.
+    pub require_bit_exact: bool,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        CanaryConfig { shadow_invokes: 8, seed: 0xCA7A, golden: Vec::new(), require_bit_exact: true }
+    }
+}
+
+/// Snapshot of a registry's lifecycle counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LifecycleStats {
+    /// `publish` calls (accepted or rejected).
+    pub publishes: usize,
+    /// Publishes rejected while building the `PreparedModel`.
+    pub prepare_failures: usize,
+    /// Publishes rejected by the canary phase.
+    pub canary_rejects: usize,
+    /// Automatic rollbacks to the last-known-good version.
+    pub rollbacks: usize,
+}
+
+/// What [`ModelRegistry::exhaust`] did about a version whose respawn
+/// budget ran out.
+enum ExhaustOutcome {
+    /// The bad version was live; a previous good version was reinstated.
+    RolledBack(Arc<ModelVersion>),
+    /// The bad version was already demoted; this is the current live one.
+    AlreadyHandled(Option<Arc<ModelVersion>>),
+    /// The bad version was live and no good version remains.
+    Terminal,
+}
+
+/// Versioned registry of published models. All methods take `&self`
+/// (internal locking), so one registry is shared by the feeder
+/// (publishing) and the worker fleet (serving) simultaneously.
+pub struct ModelRegistry {
+    /// The currently serving version, if any. Lock order: `live` before
+    /// `history`, everywhere.
+    live: RwLock<Option<Arc<ModelVersion>>>,
+    /// Known-good versions in promotion order (a version is good once it
+    /// passes canary; it leaves history when its budget exhausts).
+    history: Mutex<Vec<Arc<ModelVersion>>>,
+    seq: AtomicU64,
+    publishes: AtomicUsize,
+    prepare_failures: AtomicUsize,
+    canary_rejects: AtomicUsize,
+    rollbacks: AtomicUsize,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    /// Empty registry (publish a version before serving).
+    pub fn new() -> Self {
+        ModelRegistry {
+            live: RwLock::new(None),
+            history: Mutex::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            publishes: AtomicUsize::new(0),
+            prepare_failures: AtomicUsize::new(0),
+            canary_rejects: AtomicUsize::new(0),
+            rollbacks: AtomicUsize::new(0),
+        }
+    }
+
+    /// The currently live version, if any.
+    pub fn live(&self) -> Option<Arc<ModelVersion>> {
+        self.live.read().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Name of the currently live version, if any.
+    pub fn active_version(&self) -> Option<String> {
+        self.live().map(|v| v.name.clone())
+    }
+
+    /// Lifecycle counter snapshot.
+    pub fn stats(&self) -> LifecycleStats {
+        LifecycleStats {
+            publishes: self.publishes.load(Ordering::SeqCst),
+            prepare_failures: self.prepare_failures.load(Ordering::SeqCst),
+            canary_rejects: self.canary_rejects.load(Ordering::SeqCst),
+            rollbacks: self.rollbacks.load(Ordering::SeqCst),
+        }
+    }
+
+    fn reject_prepare(&self, version: &str, reason: String) -> Error {
+        self.prepare_failures.fetch_add(1, Ordering::SeqCst);
+        Error::PublishRejected { version: version.to_string(), stage: "prepare", reason }
+    }
+
+    fn reject_canary(&self, version: &str, reason: String) -> Error {
+        self.canary_rejects.fetch_add(1, Ordering::SeqCst);
+        Error::PublishRejected { version: version.to_string(), stage: "canary", reason }
+    }
+
+    /// Publish a new model version: **Preparing** (full prepare → plan →
+    /// populate, off the hot path) then **Canary** (shadow invokes
+    /// compared against the live version, plus golden probes), then
+    /// atomic promotion to **Live**. Any failure leaves the previously
+    /// live version serving untouched and returns
+    /// [`Error::PublishRejected`].
+    pub fn publish(
+        &self,
+        name: &str,
+        model: Arc<Model>,
+        resolver: &OpResolver,
+        canary: &CanaryConfig,
+    ) -> Result<Arc<ModelVersion>> {
+        self.publishes.fetch_add(1, Ordering::SeqCst);
+
+        // --- Preparing ------------------------------------------------
+        if let Some(reason) = crate::faults::prepare_fail_point(name) {
+            return Err(self.reject_prepare(name, reason));
+        }
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            PreparedModel::new(model, resolver)
+        }));
+        let prepared = match built {
+            Ok(Ok(pm)) => Arc::new(pm),
+            Ok(Err(e)) => return Err(self.reject_prepare(name, e.to_string())),
+            Err(_) => return Err(self.reject_prepare(name, "panic during prepare".into())),
+        };
+        let m = prepared.model();
+        if m.inputs().is_empty() || m.outputs().is_empty() {
+            return Err(self.reject_prepare(name, "model has no inputs or outputs".into()));
+        }
+        let in_len = m.tensors()[m.inputs()[0] as usize].num_elements();
+        let out_len = m.tensors()[m.outputs()[0] as usize].num_elements();
+
+        // --- Canary ---------------------------------------------------
+        // The candidate must be I/O-compatible with the live version:
+        // the swap happens underneath submitters whose inputs were
+        // validated against the live shape.
+        let live = self.live();
+        if let Some(live) = &live {
+            let lm = live.prepared.model();
+            let live_in = lm.tensors()[lm.inputs()[0] as usize].num_elements();
+            let live_out = lm.tensors()[lm.outputs()[0] as usize].num_elements();
+            if live_in != in_len || live_out != out_len {
+                return Err(self.reject_canary(
+                    name,
+                    format!(
+                        "I/O shape {in_len}->{out_len} incompatible with live version \
+                         '{}' ({live_in}->{live_out})",
+                        live.name
+                    ),
+                ));
+            }
+        }
+        let mut rng = crate::testutil::Rng::seeded(canary.seed);
+        let mut live_es = live.as_ref().map(|v| v.prepared.exec_state());
+        let mut cand_es = prepared.exec_state();
+        for shadow in 0..canary.shadow_invokes {
+            let mut input = vec![0i8; in_len];
+            rng.fill_i8(&mut input);
+            let got = match shadow_invoke(&prepared, &mut cand_es, &input) {
+                Ok(out) => out,
+                Err(why) => {
+                    return Err(self.reject_canary(name, format!("shadow invoke {shadow}: {why}")))
+                }
+            };
+            if crate::faults::canary_diverge_point(name) {
+                return Err(self.reject_canary(
+                    name,
+                    format!("injected fault: canary divergence at shadow invoke {shadow}"),
+                ));
+            }
+            if canary.require_bit_exact {
+                if let (Some(live), Some(les)) = (&live, live_es.as_mut()) {
+                    // A live-side invoke error says nothing about the
+                    // candidate; only a successful live output gates it.
+                    if let Ok(want) = shadow_invoke(&live.prepared, les, &input) {
+                        if want != got {
+                            return Err(self.reject_canary(
+                                name,
+                                format!(
+                                    "shadow invoke {shadow} diverged from live version '{}'",
+                                    live.name
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for (probe, (input, want)) in canary.golden.iter().enumerate() {
+            if input.len() != in_len {
+                return Err(self.reject_canary(
+                    name,
+                    format!("golden probe {probe}: input is {} elements, model expects {in_len}", input.len()),
+                ));
+            }
+            match shadow_invoke(&prepared, &mut cand_es, input) {
+                Ok(got) if &got == want => {}
+                Ok(_) => {
+                    return Err(
+                        self.reject_canary(name, format!("golden probe {probe} mismatched"))
+                    )
+                }
+                Err(why) => {
+                    return Err(self.reject_canary(name, format!("golden probe {probe}: {why}")))
+                }
+            }
+        }
+
+        // --- Promote to Live ------------------------------------------
+        let version = Arc::new(ModelVersion {
+            name: name.to_string(),
+            seq: self.seq.fetch_add(1, Ordering::SeqCst) + 1,
+            prepared,
+            panics: AtomicUsize::new(0),
+        });
+        {
+            let mut live = self.live.write().unwrap_or_else(|p| p.into_inner());
+            let mut history = self.history.lock().unwrap_or_else(|p| p.into_inner());
+            *live = Some(Arc::clone(&version));
+            history.push(Arc::clone(&version));
+        }
+        Ok(version)
+    }
+
+    /// A promoted version exhausted its respawn budget: demote it and
+    /// reinstate the last-known-good version (**RolledBack**), or report
+    /// terminal state when no good version remains.
+    fn exhaust(&self, bad: &Arc<ModelVersion>) -> ExhaustOutcome {
+        let mut live = self.live.write().unwrap_or_else(|p| p.into_inner());
+        let mut history = self.history.lock().unwrap_or_else(|p| p.into_inner());
+        history.retain(|v| v.seq != bad.seq);
+        let live_is_bad = live.as_ref().map(|v| v.seq == bad.seq).unwrap_or(false);
+        if !live_is_bad {
+            // Another worker already rolled back (or a newer version was
+            // promoted meanwhile); nothing to do.
+            return ExhaustOutcome::AlreadyHandled(live.clone());
+        }
+        match history.last() {
+            Some(good) => {
+                let good = Arc::clone(good);
+                *live = Some(Arc::clone(&good));
+                self.rollbacks.fetch_add(1, Ordering::SeqCst);
+                ExhaustOutcome::RolledBack(good)
+            }
+            None => {
+                *live = None;
+                ExhaustOutcome::Terminal
+            }
+        }
+    }
+}
+
+/// One canary/golden invoke through a private [`ExecState`], with panic
+/// containment (a panicking candidate must reject, not unwind into the
+/// publisher).
+fn shadow_invoke(
+    prepared: &Arc<PreparedModel>,
+    es: &mut ExecState,
+    input: &[i8],
+) -> std::result::Result<Vec<i8>, String> {
+    let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> Result<Vec<i8>> {
+            prepared.input_mut(es, 0)?.copy_from_i8(input)?;
+            prepared.invoke(es)?;
+            Ok(prepared.output(es, 0)?.as_i8()?.to_vec())
+        },
+    ));
+    match unwound {
+        Ok(Ok(out)) => Ok(out),
+        Ok(Err(e)) => Err(e.to_string()),
+        Err(_) => Err("panic during invoke".to_string()),
+    }
+}
+
+/// Registry-backed closed loop: like [`super::run_closed_loop`] but
+/// serving whatever version the registry has live at each queue pull.
+pub fn run_registry_closed_loop(
+    registry: &ModelRegistry,
+    cfg: ServingConfig,
+    requests: Vec<Request>,
+    expected_out_len: usize,
+) -> Result<ServingReport> {
+    let timeout = cfg.submit_timeout;
+    run_registry_with_feeder(
+        registry,
+        cfg,
+        expected_out_len,
+        move |sub| {
+            for r in requests {
+                let _ = match timeout {
+                    Some(t) => sub.submit_timeout(r, t),
+                    None => sub.submit(r),
+                };
+            }
+        },
+        |_resp| {},
+    )
+}
+
+/// Run a serving session over a [`ModelRegistry`] with a caller-supplied
+/// feeder (which may keep publishing versions while the fleet serves —
+/// that is the point).
+///
+/// Differences from [`super::run_with_feeder`]:
+///
+/// * Workers hold an `Arc` to the live [`ModelVersion`] plus a private
+///   [`ExecState`]; at every queue pull they re-read the registry and
+///   swap to a newly promoted version by rebuilding only the
+///   `ExecState` (no populate pass — that ran once at publish).
+/// * A caught panic drops the worker's `ExecState` (the poisoned
+///   per-worker state) and charges the **version's** respawn budget;
+///   exhausting it triggers [`ModelRegistry::exhaust`] — automatic
+///   rollback to last-known-good — and only a registry with no good
+///   version left opens the breaker.
+/// * The report's `canary_rejects` / `rollbacks` / `active_version`
+///   rows are filled from the registry's lifecycle counters (as deltas
+///   over this run).
+pub fn run_registry_with_feeder<F>(
+    registry: &ModelRegistry,
+    cfg: ServingConfig,
+    expected_out_len: usize,
+    feeder: F,
+    mut on_response: impl FnMut(&Response),
+) -> Result<ServingReport>
+where
+    F: FnOnce(&Submitter<'_>) + Send,
+{
+    if cfg.workers == 0 {
+        return Err(Error::Serving("need at least one worker".into()));
+    }
+    let initial = registry
+        .live()
+        .ok_or_else(|| Error::Serving("publish a model version before serving".into()))?;
+    let m = initial.prepared.model();
+    let expected_in_len = m.tensors()[m.inputs()[0] as usize].num_elements();
+    drop(initial);
+
+    let shared = FleetShared::new(&cfg, expected_in_len);
+    let stats_before = registry.stats();
+    let degrades_before = crate::runtime::degrade_events();
+    // Requests pulled by a worker that then found every version retired
+    // (they were accepted but can never be served).
+    let dropped_after_pull = AtomicUsize::new(0);
+
+    let (req_tx, req_rx): (SyncSender<Request>, Receiver<Request>) =
+        sync_channel(cfg.queue_depth);
+    let req_rx = Mutex::new(req_rx);
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
+
+    let t0 = Instant::now();
+    let mut report = std::thread::scope(|scope| -> Result<ServingReport> {
+        for w in 0..cfg.workers {
+            let req_rx = &req_rx;
+            let resp_tx = resp_tx.clone();
+            let shared = &shared;
+            let dropped_after_pull = &dropped_after_pull;
+            scope.spawn(move || {
+                shared.started.fetch_add(1, Ordering::SeqCst);
+                let mut abnormal = false;
+                // The worker's current (version, private exec state).
+                // Rebuilding this pair IS the respawn: the shared
+                // PreparedModel is immutable at invoke time, so a panic
+                // can poison only the ExecState.
+                let mut current: Option<(Arc<ModelVersion>, ExecState)> = None;
+                loop {
+                    let req = {
+                        let rx = req_rx.lock().unwrap_or_else(|p| p.into_inner());
+                        rx.recv()
+                    };
+                    let Ok(req) = req else { break };
+                    if let Some(d) = req.deadline {
+                        if Instant::now() >= d {
+                            shared.deadline_misses.fetch_add(1, Ordering::SeqCst);
+                            continue;
+                        }
+                    }
+                    crate::faults::queue_stall_point();
+                    // Version swap point: promotions and rollbacks take
+                    // effect here, between requests.
+                    let Some(live) = registry.live() else {
+                        // Every version retired: this request was
+                        // accepted but can never be served.
+                        dropped_after_pull.fetch_add(1, Ordering::SeqCst);
+                        shared.breaker_open.store(true, Ordering::SeqCst);
+                        abnormal = true;
+                        break;
+                    };
+                    let stale = match &current {
+                        Some((v, _)) => v.seq != live.seq,
+                        None => true,
+                    };
+                    if stale {
+                        current = Some((Arc::clone(&live), live.prepared.exec_state()));
+                    }
+                    let Some((cur, es)) = current.as_mut() else { continue };
+                    let ver = Arc::clone(cur);
+                    let pm = &ver.prepared;
+                    let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || -> Result<Vec<i8>> {
+                            crate::faults::version_panic_point(ver.name());
+                            pm.input_mut(es, 0)?.copy_from_i8(&req.input)?;
+                            pm.invoke(es)?;
+                            Ok(pm.output(es, 0)?.as_i8()?.to_vec())
+                        },
+                    ));
+                    match unwound {
+                        Ok(Ok(output)) => {
+                            if let Some(d) = req.deadline {
+                                if Instant::now() >= d {
+                                    shared.late_completions.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            let resp = Response {
+                                id: req.id,
+                                output,
+                                latency: req.enqueued.elapsed(),
+                                worker: w,
+                            };
+                            if resp_tx.send(resp).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(Err(_)) => {
+                            shared.invoke_errors.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(_payload) => {
+                            shared.panics.fetch_add(1, Ordering::SeqCst);
+                            shared.poisoned_arenas.fetch_add(1, Ordering::SeqCst);
+                            // Drop the poisoned ExecState; the next pull
+                            // rebuilds one (the respawn).
+                            current = None;
+                            let used = ver.panics.fetch_add(1, Ordering::SeqCst);
+                            if used >= shared.max_respawns {
+                                match registry.exhaust(&ver) {
+                                    ExhaustOutcome::RolledBack(_)
+                                    | ExhaustOutcome::AlreadyHandled(Some(_)) => {
+                                        // A good version serves from the
+                                        // next pull; the worker lives on.
+                                    }
+                                    ExhaustOutcome::AlreadyHandled(None)
+                                    | ExhaustOutcome::Terminal => {
+                                        shared.breaker_open.store(true, Ordering::SeqCst);
+                                        abnormal = true;
+                                        break;
+                                    }
+                                }
+                            } else {
+                                shared.respawns_used.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                }
+                if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 && abnormal {
+                    shared.breaker_open.store(true, Ordering::SeqCst);
+                }
+            });
+        }
+        drop(resp_tx);
+
+        let submitter = Submitter { tx: req_tx, shared: &shared };
+        scope.spawn(move || {
+            feeder(&submitter);
+            drop(submitter);
+        });
+
+        let mut latencies = Vec::new();
+        let mut per_worker = vec![0usize; cfg.workers];
+        let mut cold_start_ns = vec![0u64; cfg.workers];
+        let mut completed = 0usize;
+        for resp in resp_rx.iter() {
+            if resp.output.len() != expected_out_len {
+                shared.breaker_open.store(true, Ordering::SeqCst);
+                return Err(Error::Serving(format!(
+                    "response {} has {} outputs, expected {expected_out_len}",
+                    resp.id,
+                    resp.output.len()
+                )));
+            }
+            if per_worker[resp.worker] == 0 {
+                cold_start_ns[resp.worker] = resp.latency.as_nanos() as u64;
+            }
+            on_response(&resp);
+            latencies.push(resp.latency);
+            per_worker[resp.worker] += 1;
+            completed += 1;
+        }
+        let wall = t0.elapsed();
+
+        let mut dropped = dropped_after_pull.load(Ordering::SeqCst);
+        {
+            let rx = req_rx.lock().unwrap_or_else(|p| p.into_inner());
+            while rx.try_recv().is_ok() {
+                dropped += 1;
+            }
+        }
+
+        latencies.sort();
+        let pick = |p: f64| -> Duration {
+            if latencies.is_empty() {
+                Duration::ZERO
+            } else {
+                latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
+            }
+        };
+        let mut faults: FaultTaxonomy = shared.taxonomy();
+        faults.dropped = dropped;
+        let stats_after = registry.stats();
+        faults.canary_rejects = stats_after.canary_rejects - stats_before.canary_rejects;
+        faults.rollbacks = stats_after.rollbacks - stats_before.rollbacks;
+        Ok(ServingReport {
+            completed,
+            wall,
+            throughput_rps: if completed == 0 {
+                0.0
+            } else {
+                completed as f64 / wall.as_secs_f64().max(1e-9)
+            },
+            latency_p50: pick(0.50),
+            latency_p95: pick(0.95),
+            latency_p99: pick(0.99),
+            per_worker,
+            cold_start_ns,
+            faults,
+            breaker_open: shared.breaker_open.load(Ordering::SeqCst),
+            active_version: registry.active_version(),
+        })
+    })?;
+    report.faults.degraded_ops =
+        (crate::runtime::degrade_events() - degrades_before) as usize;
+    Ok(report)
+}

@@ -1,0 +1,209 @@
+//! PreparedModel / ExecState split: the shared-immutable vs
+//! per-worker-mutable contract behind the zero-downtime registry.
+//!
+//! Three properties, at integration level:
+//!
+//! 1. **Bit-exactness** — an inference through `PreparedModel` +
+//!    `ExecState` matches a classic single `MicroInterpreter` exactly,
+//!    on the optimized (packed-GEMM) resolver.
+//! 2. **Concurrency** — many threads invoke through one
+//!    `Arc<PreparedModel>` simultaneously, each with a private
+//!    `ExecState`, and every output stays bit-exact (§4.6: shared state
+//!    is read-only after the populate pass).
+//! 3. **O(M) accounting** — a fleet of W workers over M models charges
+//!    resident packed-weight bytes once per *model*; only the cheap
+//!    zeroed exec buffer scales with W. The legacy per-worker
+//!    interpreter charges them W times. This is the test twin of
+//!    `bench_multitenancy`'s fleet section.
+
+use std::sync::Arc;
+use tfmicro::arena::Arena;
+use tfmicro::interpreter::{ExecState, MicroInterpreter, PreparedModel};
+use tfmicro::ops::OpResolver;
+use tfmicro::schema::format::Activation;
+use tfmicro::schema::writer::fully_connected_options;
+use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
+use tfmicro::tensor::{DType, QuantParams};
+use tfmicro::testutil::Rng;
+
+fn q(scale: f32, zp: i32) -> QuantParams {
+    QuantParams::per_tensor(scale, zp)
+}
+
+/// Seeded single-FC model `[1, in_dim] -> [1, out_dim]` with const
+/// weights and biases (zero filter offset), so the optimized resolver
+/// takes the prepare-time packed-weight path.
+fn fc_model(seed: u64, in_dim: usize, out_dim: usize) -> Model {
+    let mut rng = Rng::seeded(seed);
+    let mut b = ModelBuilder::new("prepared-model-fc");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, in_dim as i32], None, q(0.05, 0));
+    let mut w = vec![0i8; out_dim * in_dim];
+    rng.fill_i8(&mut w);
+    let wbuf = b.add_buffer(&w.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    let t_w =
+        b.add_quant_tensor("w", DType::I8, &[out_dim as i32, in_dim as i32], Some(wbuf), q(0.02, 0));
+    let bbuf = b.add_buffer(
+        &(0..out_dim).flat_map(|_| rng.range_i32(-200, 200).to_le_bytes()).collect::<Vec<_>>(),
+    );
+    let t_b = b.add_tensor("b", DType::I32, &[out_dim as i32], Some(bbuf));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, out_dim as i32], None, q(0.5, 0));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_in, t_w, t_b],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+/// Ground truth through a fresh classic interpreter.
+fn baseline(model: &Model, resolver: &OpResolver, input: &[i8]) -> Vec<i8> {
+    let mut arena = Arena::new(256 * 1024);
+    let mut interp = MicroInterpreter::new(model, resolver, &mut arena).unwrap();
+    interp.input_mut(0).unwrap().copy_from_i8(input).unwrap();
+    interp.invoke().unwrap();
+    interp.output(0).unwrap().as_i8().unwrap().to_vec()
+}
+
+/// One inference through a prepared model + private exec state.
+fn prepared_invoke(pm: &PreparedModel, es: &mut ExecState, input: &[i8]) -> Vec<i8> {
+    pm.input_mut(es, 0).unwrap().copy_from_i8(input).unwrap();
+    pm.invoke(es).unwrap();
+    pm.output(es, 0).unwrap().as_i8().unwrap().to_vec()
+}
+
+#[test]
+fn prepared_model_bit_exact_on_optimized_resolver() {
+    let model = Arc::new(fc_model(0x9E1, 16, 8));
+    let resolver = OpResolver::with_optimized_ops();
+    let mut rng = Rng::seeded(0x1234);
+
+    let pm = PreparedModel::new(Arc::clone(&model), &resolver).unwrap();
+    let mut es = pm.exec_state();
+    for round in 0..16 {
+        let mut input = vec![0i8; 16];
+        rng.fill_i8(&mut input);
+        let want = baseline(&model, &resolver, &input);
+        let got = prepared_invoke(&pm, &mut es, &input);
+        assert_eq!(got, want, "round {round} diverged from the classic interpreter");
+    }
+    assert_eq!(es.invocations(), 16);
+    assert_eq!(es.degraded_ops(), 0);
+}
+
+#[test]
+fn concurrent_workers_stay_bit_exact_through_one_prepared_model() {
+    let model = Arc::new(fc_model(0xC0C0, 24, 6));
+    let resolver = OpResolver::with_optimized_ops();
+    let pm = Arc::new(PreparedModel::new(Arc::clone(&model), &resolver).unwrap());
+
+    const WORKERS: u64 = 8;
+    const ROUNDS: usize = 32;
+    // Per-worker inputs + ground truth, computed up front on one thread.
+    let mut cases: Vec<(Vec<i8>, Vec<i8>)> = Vec::new();
+    for w in 0..WORKERS {
+        let mut rng = Rng::seeded(0xBEEF ^ w);
+        let mut input = vec![0i8; 24];
+        rng.fill_i8(&mut input);
+        let want = baseline(&model, &resolver, &input);
+        cases.push((input, want));
+    }
+
+    std::thread::scope(|scope| {
+        for (input, want) in &cases {
+            let pm = Arc::clone(&pm);
+            scope.spawn(move || {
+                let mut es = pm.exec_state();
+                for round in 0..ROUNDS {
+                    let got = prepared_invoke(&pm, &mut es, input);
+                    assert_eq!(&got, want, "round {round} raced to a wrong answer");
+                }
+                assert_eq!(es.invocations(), ROUNDS as u64);
+            });
+        }
+    });
+}
+
+#[test]
+fn fleet_memory_is_o_models_not_o_workers() {
+    let resolver = OpResolver::with_optimized_ops();
+    let models: Vec<Arc<Model>> = vec![
+        Arc::new(fc_model(0xA1, 32, 16)),
+        Arc::new(fc_model(0xA2, 48, 8)),
+        Arc::new(fc_model(0xA3, 16, 24)),
+    ];
+    const WORKERS: usize = 8;
+
+    // Legacy fleet: every worker builds a full interpreter per model, so
+    // packed-weight bytes are charged workers x models times — exactly
+    // linear in the worker count.
+    let legacy_at = |workers: usize| -> usize {
+        let mut total = 0usize;
+        for model in &models {
+            for _ in 0..workers {
+                let mut arena = Arena::new(256 * 1024);
+                let interp = MicroInterpreter::new(model, &resolver, &mut arena).unwrap();
+                total += interp.arena_usage().kernel_buffers;
+            }
+        }
+        total
+    };
+    let legacy_w2 = legacy_at(2);
+    let legacy_w8 = legacy_at(WORKERS);
+    assert!(legacy_w2 > 0, "optimized FC must stage packed weights");
+    assert_eq!(legacy_w8, 4 * legacy_w2, "legacy resident bytes scale with the worker count");
+
+    // Split fleet: one PreparedModel per model, WORKERS exec states each.
+    let prepared: Vec<PreparedModel> =
+        models.iter().map(|m| PreparedModel::new(Arc::clone(m), &resolver).unwrap()).collect();
+    let shared_once: usize = prepared.iter().map(|pm| pm.shared_resident_bytes()).sum();
+    assert!(shared_once > 0);
+
+    let mut states: Vec<ExecState> = Vec::new();
+    let mut exec_total = 0usize;
+    for pm in &prepared {
+        for _ in 0..WORKERS {
+            states.push(pm.exec_state());
+            exec_total += pm.exec_bytes();
+        }
+    }
+    // Spinning up the whole worker fleet left the shared figure
+    // untouched: resident packed-weight bytes are charged once per
+    // model version, O(M) not O(W x M).
+    let shared_after: usize = prepared.iter().map(|pm| pm.shared_resident_bytes()).sum();
+    assert_eq!(shared_after, shared_once);
+    assert_eq!(states.len(), models.len() * WORKERS);
+    assert!(exec_total > 0, "each worker still pays its private exec buffer");
+
+    // The per-model shared figure is the same packed-weight metric the
+    // legacy interpreter reports, so the comparison is apples-to-apples:
+    // per model, prepared charges once what legacy charges per worker.
+    for (pm, model) in prepared.iter().zip(&models) {
+        assert_eq!(pm.shared_resident_bytes(), pm.arena_usage().kernel_buffers);
+        let mut arena = Arena::new(256 * 1024);
+        let interp = MicroInterpreter::new(model, &resolver, &mut arena).unwrap();
+        assert_eq!(
+            pm.shared_resident_bytes(),
+            interp.arena_usage().kernel_buffers,
+            "prepared and legacy stage the same packed bytes — just shared vs per-worker"
+        );
+    }
+    assert_eq!(legacy_w8, WORKERS * shared_once, "legacy pays the shared figure W times over");
+
+    // And the shared state actually serves: one inference per exec
+    // state against the classic ground truth.
+    for (i, pm) in prepared.iter().enumerate() {
+        let in_dim = match i {
+            0 => 32,
+            1 => 48,
+            _ => 16,
+        };
+        let mut rng = Rng::seeded(0xD00D + i as u64);
+        let mut input = vec![0i8; in_dim];
+        rng.fill_i8(&mut input);
+        let want = baseline(&models[i], &resolver, &input);
+        let mut es = pm.exec_state();
+        assert_eq!(prepared_invoke(pm, &mut es, &input), want);
+    }
+}

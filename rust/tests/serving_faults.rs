@@ -22,7 +22,10 @@ use tfmicro::runtime::{degrade_events, op_counters, XlaFcKernel, XlaRuntime};
 use tfmicro::schema::format::Activation;
 use tfmicro::schema::writer::fully_connected_options;
 use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
-use tfmicro::serving::{run_with_feeder, Request, Response, ServingConfig};
+use tfmicro::serving::{
+    run_registry_with_feeder, run_with_feeder, CanaryConfig, ModelRegistry, Request, Response,
+    ServingConfig,
+};
 use tfmicro::tensor::{DType, QuantParams};
 use tfmicro::testutil::Rng;
 
@@ -362,6 +365,56 @@ fn try_submit_sheds_when_the_queue_is_full() {
     );
 }
 
+/// A deadline that expires *during* invoke is a late completion, not a
+/// deadline miss: the work was already spent, so the response is still
+/// delivered, and the taxonomy distinguishes the two rows.
+#[test]
+fn deadline_expiry_during_invoke_counts_as_late_completion() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+
+    // The stall point sits between the deadline check and the invoke, so
+    // a parked worker models an invoke that outlives the deadline.
+    let guard = faults::install(FaultPlan::new().fail_at(faults::QUEUE_STALL, None, &[0]));
+    let cfg = ServingConfig { workers: 1, queue_depth: 4, ..Default::default() };
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            let deadline = Instant::now() + Duration::from_millis(400);
+            sub.submit(Request::new(0, input.clone()).with_deadline(deadline))
+                .expect("accepted");
+            // The worker passes the (still valid) deadline check, then
+            // parks mid-"invoke" on the stall gate.
+            assert!(wait_until(|| faults::stalls_parked() == 1), "worker parked");
+            // Let the deadline expire while the work is in flight.
+            while Instant::now() <= deadline {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            faults::release_stalls();
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .unwrap();
+
+    assert_eq!(faults::injected(faults::QUEUE_STALL), 1);
+    drop(guard);
+
+    assert_eq!(report.completed, 1, "late work is still delivered");
+    assert_eq!(report.faults.late_completions, 1, "counted as late, not as a miss");
+    assert_eq!(report.faults.deadline_misses, 0, "the pre-invoke check had passed");
+    assert_eq!(outputs[0], want);
+    assert!(report.faults.summary().contains("late 1"));
+}
+
 // ---------------------------------------------------------------------------
 // (c) Offload degradation
 // ---------------------------------------------------------------------------
@@ -601,4 +654,176 @@ fn seeded_chaos_taxonomy_matches_schedule_exactly() {
     assert_eq!(report.faults.dropped, 0);
     assert!(!report.breaker_open);
     assert!(report.summary().contains("faults["), "summary surfaces the taxonomy");
+}
+
+// ---------------------------------------------------------------------------
+// (e) Model lifecycle: canary rejection and automatic rollback
+// ---------------------------------------------------------------------------
+
+/// Acceptance (a): a version that fails canary validation is rejected
+/// with a typed error while the live version serves **every** request
+/// bit-exactly with zero drops — publishing is invisible to traffic.
+/// Also drives the `prepare_fail` point on a third candidate.
+#[test]
+fn canary_rejected_version_never_disturbs_live_serving() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+    let model = Arc::new(model);
+
+    let registry = ModelRegistry::new();
+    registry
+        .publish("v1", Arc::clone(&model), &resolver, &CanaryConfig::default())
+        .expect("v1 promotes into an empty registry");
+
+    let guard = faults::install(
+        FaultPlan::new()
+            .fail_at(faults::CANARY_DIVERGE, Some("v2"), &[0])
+            .fail_at(faults::PREPARE_FAIL, Some("v3"), &[0]),
+    );
+    let cfg = ServingConfig { workers: 2, queue_depth: 8, ..Default::default() };
+    let mut v2_result = None;
+    let mut v3_result = None;
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_registry_with_feeder(
+        &registry,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..8 {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+            // Publish mid-run: prepare + canary run off the hot path
+            // while the fleet keeps serving v1.
+            v2_result = Some(registry.publish(
+                "v2",
+                Arc::clone(&model),
+                &resolver,
+                &CanaryConfig::default(),
+            ));
+            v3_result = Some(registry.publish(
+                "v3",
+                Arc::clone(&model),
+                &resolver,
+                &CanaryConfig::default(),
+            ));
+            for id in 8..16 {
+                sub.submit(Request::new(id, input.clone())).expect("live keeps accepting");
+            }
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .unwrap();
+
+    assert_eq!(faults::injected(faults::CANARY_DIVERGE), 1);
+    assert_eq!(faults::injected(faults::PREPARE_FAIL), 1);
+    drop(guard);
+
+    assert!(
+        matches!(
+            &v2_result,
+            Some(Err(Error::PublishRejected { version, stage: "canary", .. }))
+                if version == "v2"
+        ),
+        "canary divergence rejects with the typed error, got {v2_result:?}"
+    );
+    assert!(
+        matches!(
+            &v3_result,
+            Some(Err(Error::PublishRejected { version, stage: "prepare", .. }))
+                if version == "v3"
+        ),
+        "prepare failure rejects with the typed error, got {v3_result:?}"
+    );
+    assert_eq!(report.completed, 16, "every request served across both rejected publishes");
+    assert_eq!(report.faults.dropped, 0);
+    assert_eq!(report.faults.canary_rejects, 1, "taxonomy carries the canary rejection");
+    assert_eq!(report.faults.rollbacks, 0);
+    assert_eq!(report.faults.panics, 0);
+    assert!(!report.breaker_open);
+    assert_eq!(report.active_version.as_deref(), Some("v1"), "live never changed");
+    assert_eq!(outputs.len(), 16);
+    for out in &outputs {
+        assert_eq!(out, &want, "live serving stays bit-exact throughout");
+    }
+}
+
+/// Acceptance (b): a version that starts panicking after promotion
+/// consumes its per-version respawn budget and is automatically rolled
+/// back to the last-known-good version — the breaker stays closed, the
+/// fleet keeps serving, and the taxonomy records exactly the injected
+/// schedule.
+#[test]
+fn post_promotion_panics_roll_back_to_last_known_good() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    quiet_injected_panics();
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+    let model = Arc::new(model);
+
+    let registry = ModelRegistry::new();
+    registry
+        .publish("v1", Arc::clone(&model), &resolver, &CanaryConfig::default())
+        .expect("v1 promotes");
+    registry
+        .publish("v2", Arc::clone(&model), &resolver, &CanaryConfig::default())
+        .expect("v2 passes canary (it only misbehaves after promotion)");
+    assert_eq!(registry.active_version().as_deref(), Some("v2"));
+
+    // v2 panics on its first two served requests; with max_respawns = 1
+    // the second panic exhausts the per-version budget and must trigger
+    // rollback to v1 instead of opening the breaker.
+    let guard = faults::install(
+        FaultPlan::new().fail_at(faults::VERSION_PANIC, Some("v2"), &[0, 1]),
+    );
+    let cfg =
+        ServingConfig { workers: 2, queue_depth: 8, max_respawns: 1, ..Default::default() };
+    const N: u64 = 12;
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_registry_with_feeder(
+        &registry,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..N {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .unwrap();
+
+    assert_eq!(faults::injected(faults::VERSION_PANIC), 2, "exactly the injected schedule");
+    drop(guard);
+
+    assert_eq!(report.completed, (N - 2) as usize, "only the two panicked requests are lost");
+    assert_eq!(report.faults.panics, 2);
+    assert_eq!(report.faults.poisoned_arenas, 2);
+    assert_eq!(report.faults.respawns, 1, "first panic respawns within the version budget");
+    assert_eq!(report.faults.rollbacks, 1, "second panic exhausts it and rolls back");
+    assert_eq!(report.faults.canary_rejects, 0);
+    assert_eq!(report.faults.dropped, 0);
+    assert!(!report.breaker_open, "a good version remained: rollback, not breaker");
+    assert_eq!(report.active_version.as_deref(), Some("v1"), "last-known-good reinstated");
+    for out in &outputs {
+        assert_eq!(out, &want, "survivors bit-exact before and after the rollback");
+    }
+
+    // The reinstated version serves bit-exactly against the
+    // single-interpreter ground truth.
+    let live = registry.live().expect("v1 live");
+    assert_eq!(live.name(), "v1");
+    let pm = live.prepared();
+    let mut es = pm.exec_state();
+    pm.input_mut(&mut es, 0).unwrap().copy_from_i8(&input).unwrap();
+    pm.invoke(&mut es).unwrap();
+    assert_eq!(pm.output(&es, 0).unwrap().as_i8().unwrap(), &want[..]);
 }
