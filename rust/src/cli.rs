@@ -335,8 +335,15 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
                 // health is carried by the shadow invokes themselves.
                 let reload_canary =
                     CanaryConfig { require_bit_exact: false, ..CanaryConfig::default() };
+                // The reload gets its own resolver: kernels that key
+                // staged state by op index (the registry module's sharing
+                // caveat, e.g. an XLA registration) would otherwise have
+                // v2's populate clobber v1's state, silently degrading the
+                // still-live v1 — and any rollback to it — for the rest of
+                // the run.
+                let reload_resolver = resolver_for(args.get("kernels"))?;
                 let registry_ref = &registry;
-                let resolver_ref = &resolver;
+                let resolver_ref = &reload_resolver;
                 run_registry_with_feeder(
                     &registry,
                     cfg,

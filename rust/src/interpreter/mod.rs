@@ -485,7 +485,8 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
                     &op_persistent[i],
                     &op_data[i],
                     owner,
-                );
+                )
+                .with_populate_phase();
                 if let Err(e) = kernels[i].populate(&ctx) {
                     // Earlier ops may already have registered backend
                     // side-table entries keyed into this arena; evict them

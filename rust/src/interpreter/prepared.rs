@@ -384,7 +384,8 @@ impl PreparedModel {
                     &pm.op_data[i],
                     pm.owner,
                 )
-                .with_persistent_region(pm.persist.base_ptr(), pm.persist_used);
+                .with_persistent_region(pm.persist.base_ptr(), pm.persist_used)
+                .with_populate_phase();
                 pm.kernels[i].populate(&ctx)?;
             }
         }

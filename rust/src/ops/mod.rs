@@ -365,6 +365,11 @@ pub struct OpContext<'r> {
     /// degraded instead of poisoning shared kernel state (`None` keeps
     /// the legacy per-kernel flag).
     degrade: Option<&'r AtomicBool>,
+    /// True only during the single-threaded populate pass. Gates the
+    /// `&mut` view of persistent buffers: at invoke time the persistent
+    /// region may be shared by many workers through one
+    /// `Arc<PreparedModel>`, so only the shared (`&[u8]`) view is legal.
+    populate_phase: bool,
 }
 
 // SAFETY: `arena` points into memory exclusively borrowed (&mut) by the
@@ -405,7 +410,17 @@ impl<'r> OpContext<'r> {
             persist_base: arena,
             persist_len: arena_len,
             degrade: None,
+            populate_phase: false,
         }
+    }
+
+    /// Mark this context as belonging to the populate pass, enabling
+    /// mutable persistent-buffer access ([`OpContext::persistent_bytes`]).
+    /// The interpreter sets this only on the single-threaded populate
+    /// pass that runs before the model is ever shared.
+    pub fn with_populate_phase(mut self) -> Self {
+        self.populate_phase = true;
+        self
     }
 
     /// Point persistent-buffer resolution at a region separate from the
@@ -576,33 +591,64 @@ impl<'r> OpContext<'r> {
         self.bytes_at_mut(DataLoc::Arena { off, len })
     }
 
-    /// Persistent buffer requested during prepare: mutable during the
-    /// populate pass (to fill it), treated as read-only at invoke time.
-    ///
-    /// Resolved against the persistent region, which is the arena itself
-    /// for `MicroInterpreter` and a separate shared buffer for
-    /// [`crate::interpreter::PreparedModel`].
-    pub fn persistent_bytes(&self, h: PersistentHandle) -> Result<&'r mut [u8]> {
+    /// Bounds-checked (offset, len) of persistent buffer `h`.
+    fn persistent_range(&self, h: PersistentHandle) -> Result<(usize, usize)> {
         let &(off, len) = self.persistent.get(h.0).ok_or_else(|| {
             Error::InvalidTensor(format!("persistent handle {} out of range", h.0))
         })?;
         if off + len > self.persist_len {
             return Err(Error::InvalidTensor("persistent range out of bounds".into()));
         }
+        Ok((off, len))
+    }
+
+    /// Persistent buffer requested during prepare, mutable for filling.
+    /// Only legal during the populate pass ([`Kernel::populate`]) — at
+    /// invoke time the persistent region may be shared read-only across
+    /// workers (one `Arc<PreparedModel>`, many `ExecState`s), so handing
+    /// out `&mut` there would alias; use [`OpContext::persistent_ro`] /
+    /// [`OpContext::persistent_i8`] / [`OpContext::persistent_i32`]
+    /// instead.
+    ///
+    /// Resolved against the persistent region, which is the arena itself
+    /// for `MicroInterpreter` and a separate shared buffer for
+    /// [`crate::interpreter::PreparedModel`].
+    pub fn persistent_bytes(&self, h: PersistentHandle) -> Result<&'r mut [u8]> {
+        if !self.populate_phase {
+            return Err(Error::InvalidTensor(
+                "mutable persistent access outside the populate pass".into(),
+            ));
+        }
+        let (off, len) = self.persistent_range(h)?;
         // SAFETY: range is inside the persistent region and disjoint from
-        // every other op's buffers per the bump layout; see type-level
-        // invariants.
+        // every other op's buffers per the bump layout. The populate-phase
+        // gate above guarantees the region is not yet shared: populate
+        // runs single-threaded before the model is handed to any worker,
+        // so this is the only reference to these bytes.
         Ok(unsafe { std::slice::from_raw_parts_mut(self.persist_base.add(off), len) })
+    }
+
+    /// Read-only view of persistent buffer `h` (the invoke-time path).
+    /// Safe to call from any number of threads sharing one
+    /// `Arc<PreparedModel>`: only shared references are materialized.
+    pub fn persistent_ro(&self, h: PersistentHandle) -> Result<&'r [u8]> {
+        let (off, len) = self.persistent_range(h)?;
+        // SAFETY: range is inside the persistent region and disjoint from
+        // every other op's buffers per the bump layout. Persistent buffers
+        // are written only during the single-threaded populate pass (see
+        // `persistent_bytes`), so at invoke time these bytes are immutable
+        // and a shared view never coexists with a mutable one.
+        Ok(unsafe { std::slice::from_raw_parts(self.persist_base.add(off) as *const u8, len) })
     }
 
     /// Persistent buffer viewed as i8 (packed-weight layouts).
     pub fn persistent_i8(&self, h: PersistentHandle) -> Result<&'r [i8]> {
-        Ok(cast_i8(self.persistent_bytes(h)?))
+        Ok(cast_i8(self.persistent_ro(h)?))
     }
 
     /// Persistent buffer viewed as i32 (folded-bias tables).
     pub fn persistent_i32(&self, h: PersistentHandle) -> Result<&'r [i32]> {
-        cast_i32(self.persistent_bytes(h)?)
+        cast_i32(self.persistent_ro(h)?)
     }
 
     /// Convenience: error with this op's identity attached.

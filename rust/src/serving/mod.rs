@@ -206,10 +206,15 @@ pub struct Response {
 /// Error taxonomy for a serving run: every contained failure, counted.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultTaxonomy {
-    /// Kernel panics caught by worker supervision (each loses exactly the
-    /// request being served).
+    /// Kernel panics caught by worker supervision. Each panic loses
+    /// exactly the request being served; those lost requests are counted
+    /// *here*, not in `dropped` (which covers only requests still queued
+    /// when the fleet dies).
     pub panics: usize,
     /// Workers respawned with a fresh interpreter + arena after a panic.
+    /// In registry runs, the panic that exhausts a version's respawn
+    /// budget triggers a rollback (or opens the breaker) instead of a
+    /// respawn, so it increments `rollbacks`, not this row.
     pub respawns: usize,
     /// Arenas marked poisoned and abandoned (one per caught panic).
     pub poisoned_arenas: usize,
@@ -230,7 +235,10 @@ pub struct FaultTaxonomy {
     /// XLA ops that degraded to the CPU kernel path during the run.
     pub degraded_ops: usize,
     /// Requests accepted into the queue but never served (fleet died
-    /// with work still queued).
+    /// with work still queued, or a registry worker pulled a request
+    /// after every version was retired). Requests lost mid-invoke to a
+    /// panic are counted in `panics`, not here — total lost accepted
+    /// requests is `dropped + panics`.
     pub dropped: usize,
     /// Workers that failed to build an interpreter at all.
     pub worker_init_failures: usize,

@@ -222,28 +222,33 @@ impl ModelRegistry {
             return Err(self.reject_prepare(name, "model has no inputs or outputs".into()));
         }
         let in_len = m.tensors()[m.inputs()[0] as usize].num_elements();
-        let out_len = m.tensors()[m.outputs()[0] as usize].num_elements();
 
         // --- Canary ---------------------------------------------------
         // The candidate must be I/O-compatible with the live version:
         // the swap happens underneath submitters whose inputs were
-        // validated against the live shape.
+        // validated against the live shape. Full signature — every input
+        // and output tensor's dtype and shape — so a candidate with extra
+        // I/O tensors, a reshaped tensor with the same element count
+        // ([2,3] vs [3,2]), or a different dtype cannot slip through.
         let live = self.live();
         if let Some(live) = &live {
             let lm = live.prepared.model();
-            let live_in = lm.tensors()[lm.inputs()[0] as usize].num_elements();
-            let live_out = lm.tensors()[lm.outputs()[0] as usize].num_elements();
-            if live_in != in_len || live_out != out_len {
+            let (cand_sig, live_sig) = (io_signature(m), io_signature(lm));
+            if cand_sig != live_sig {
                 return Err(self.reject_canary(
                     name,
                     format!(
-                        "I/O shape {in_len}->{out_len} incompatible with live version \
-                         '{}' ({live_in}->{live_out})",
+                        "I/O signature {cand_sig} incompatible with live version \
+                         '{}' ({live_sig})",
                         live.name
                     ),
                 ));
             }
         }
+        // Seq of the version the canary compares against; promotion
+        // re-checks it so a publish can never clobber a live version it
+        // was not canaried against.
+        let canary_basis = live.as_ref().map(|v| v.seq);
         let mut rng = crate::testutil::Rng::seeded(canary.seed);
         let mut live_es = live.as_ref().map(|v| v.prepared.exec_state());
         let mut cand_es = prepared.exec_state();
@@ -309,6 +314,20 @@ impl ModelRegistry {
         });
         {
             let mut live = self.live.write().unwrap_or_else(|p| p.into_inner());
+            // The registry is shared (&self): a concurrent publish or an
+            // automatic rollback may have changed the live version since
+            // the canary snapshot. Promoting anyway would install a
+            // version that was never compared against the now-current
+            // live one — reject instead and let the caller republish.
+            if live.as_ref().map(|v| v.seq) != canary_basis {
+                return Err(self.reject_canary(
+                    name,
+                    format!(
+                        "live version changed during canary (now '{}'); republish",
+                        live.as_ref().map(|v| v.name.as_str()).unwrap_or("<none>")
+                    ),
+                ));
+            }
             let mut history = self.history.lock().unwrap_or_else(|p| p.into_inner());
             *live = Some(Arc::clone(&version));
             history.push(Arc::clone(&version));
@@ -342,6 +361,24 @@ impl ModelRegistry {
             }
         }
     }
+}
+
+/// Render a model's full graph-I/O signature — dtype and shape of every
+/// input and output tensor, in order — as a canonical string. The
+/// publish-time compatibility gate compares these strings: dtype and
+/// shape rendering are both injective, so equal strings mean equal
+/// signatures.
+fn io_signature(m: &Model) -> String {
+    let side = |list: &[i32]| -> String {
+        list.iter()
+            .map(|&t| {
+                let meta = &m.tensors()[t as usize];
+                format!("{}{}", meta.dtype, meta.shape)
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    format!("{} -> {}", side(m.inputs()), side(m.outputs()))
 }
 
 /// One canary/golden invoke through a private [`ExecState`], with panic
