@@ -90,33 +90,57 @@ EOF
     exit 0
 fi
 
-# --- no-panic lint gate (toolchain-free) -----------------------------------
-# The serving layer and the schema byte readers sit on the §4.4.1 "never
-# crash the host" boundary: a panic there either kills a worker (serving)
-# or the whole application (loader). The real enforcement is the
-# catch_unwind tests + fault suite, but those need cargo; this grep gate
-# runs even on the toolchain-less container. It strips everything from
-# the first `#[cfg(test)]` onward (tests may unwrap freely) and fails on
-# panicking constructs in what remains.
-echo "== no-panic lint: serving + schema readers =="
-no_panic_gate() {
-    local file="$1"
-    # Drop test modules, then doc/line comments, then flag panic sites.
-    local hits
-    hits=$(sed '/#\[cfg(test)\]/,$d' "$file" \
-        | sed 's://.*$::' \
-        | grep -nE '\.unwrap\(\)|\.expect\(|panic!\(|unreachable!\(|todo!\(|unimplemented!\(' \
-        || true)
-    if [[ -n "$hits" ]]; then
-        echo "no-panic gate FAILED for $file:" >&2
-        echo "$hits" >&2
-        return 1
-    fi
-    echo "  $file: clean"
-}
-no_panic_gate rust/src/serving/mod.rs
-no_panic_gate rust/src/serving/registry.rs
-no_panic_gate rust/src/schema/reader.rs
+# --- invariant lint gate (tfmicro lint) ------------------------------------
+# The self-hosted invariant checker (rust/src/analysis/, PR 8) supersedes
+# the old sed/grep no-panic gate: a real lexer (block comments, raw
+# strings, every `#[cfg(test)]` region — not just the first) plus the
+# unsafe-confinement, alloc-discipline, fault-point, and lock-order
+# checks. The same checks already run under plain `cargo test` via
+# rust/tests/lint_gate.rs; running the CLI here too keeps the gate loud
+# in the CI log and archives the machine-readable report next to the
+# BENCH_*.json artifacts. Without cargo (this container ships no Rust
+# toolchain) we fall back to the historical grep gate — explicitly
+# labeled DEGRADED: it cannot see block comments, raw strings, or code
+# below the first test module, and covers only the no-panic check.
+echo "== invariant lint: tfmicro lint =="
+if command -v cargo >/dev/null 2>&1; then
+    # Archive findings first (LINT_report.json, one JSON object per
+    # line) so a failing gate still leaves the report behind.
+    cargo run --release --quiet -- lint --json > LINT_report.json || true
+    echo "  lint report archived: LINT_report.json ($(wc -l < LINT_report.json | tr -d ' ') finding(s))"
+    cargo run --release --quiet -- lint --deny-warnings
+else
+    echo "warning: cargo not installed; DEGRADED grep fallback (no-panic only)" >&2
+    no_panic_gate() {
+        local file="$1"
+        # Drop everything from the first `#[cfg(test)]`, then line
+        # comments, then flag panic sites in what remains.
+        local hits
+        hits=$(sed '/#\[cfg(test)\]/,$d' "$file" \
+            | sed 's://.*$::' \
+            | grep -nE '\.unwrap\(\)|\.expect\(|panic!\(|unreachable!\(|todo!\(|unimplemented!\(' \
+            || true)
+        if [[ -n "$hits" ]]; then
+            echo "no-panic gate FAILED for $file:" >&2
+            echo "$hits" >&2
+            return 1
+        fi
+        echo "  $file: clean (degraded grep check)"
+    }
+    # Keep this list in sync with SURFACE in rust/src/analysis/no_panic.rs.
+    no_panic_gate rust/src/serving/mod.rs
+    no_panic_gate rust/src/serving/registry.rs
+    no_panic_gate rust/src/schema/reader.rs
+    no_panic_gate rust/src/interpreter/prepared.rs
+    no_panic_gate rust/src/ops/opt_ops/conv.rs
+    no_panic_gate rust/src/ops/opt_ops/fully_connected.rs
+    no_panic_gate rust/src/ops/opt_ops/gemm/mod.rs
+    no_panic_gate rust/src/ops/opt_ops/gemm/scalar.rs
+    no_panic_gate rust/src/ops/opt_ops/depthwise/mod.rs
+    no_panic_gate rust/src/ops/opt_ops/depthwise/scalar.rs
+    no_panic_gate rust/src/runtime/mod.rs
+    no_panic_gate rust/src/runtime/xla_kernel.rs
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release

@@ -1,0 +1,210 @@
+//! `alloc_discipline` — the warm invoke path allocates nothing. PR 5
+//! pinned this dynamically with a counting allocator; this check is the
+//! static cousin: a function annotated with a `// lint:alloc_free`
+//! comment must not contain `Vec::new`, `vec![`, `.to_vec`, `Box::new`,
+//! or `String::from`. The annotation is an assertion, not a
+//! suppression — a dangling annotation (no `fn` follows) is itself an
+//! error so the marker cannot rot when code moves.
+
+use super::lexer::{LexedFile, LineKind};
+use super::{Diagnostic, Severity};
+
+/// Allocation tokens forbidden inside `lint:alloc_free` functions.
+const FORBIDDEN: &[&str] = &["Vec::new", "vec!", ".to_vec", "Box::new", "String::from"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `pat` occurs in `ch[..]` at ident boundaries (only enforced on ends
+/// of the pattern that are themselves ident chars, so `.to_vec` needs
+/// no boundary before the dot but `String::from` must not match
+/// `String::from_utf8_lossy`).
+fn find_token(ch: &[char], pat: &str, from: usize) -> Option<usize> {
+    let p: Vec<char> = pat.chars().collect();
+    let n = ch.len();
+    if n < p.len() {
+        return None;
+    }
+    let head_ident = is_ident(p[0]);
+    let tail_ident = is_ident(p[p.len() - 1]);
+    for s in from..=n - p.len() {
+        if ch[s..s + p.len()] == p[..]
+            && (!head_ident || s == 0 || !is_ident(ch[s - 1]))
+            && (!tail_ident || s + p.len() == n || !is_ident(ch[s + p.len()]))
+        {
+            return Some(s);
+        }
+    }
+    None
+}
+
+pub fn check(f: &LexedFile, diags: &mut Vec<Diagnostic>) {
+    let ann_lines: Vec<usize> = f
+        .comments
+        .iter()
+        .filter(|(_, t)| {
+            super::directive(t).map(|d| d.starts_with("lint:alloc_free")).unwrap_or(false)
+        })
+        .map(|(l, _)| *l)
+        .collect();
+    if ann_lines.is_empty() {
+        return;
+    }
+    let ch: Vec<char> = f.scrubbed.chars().collect();
+    let mut line_start = vec![0usize];
+    for (k, c) in ch.iter().enumerate() {
+        if *c == '\n' {
+            line_start.push(k + 1);
+        }
+    }
+    let mut dangling = |line: usize, diags: &mut Vec<Diagnostic>| {
+        diags.push(Diagnostic {
+            file: f.display_path.clone(),
+            line,
+            check: "alloc_discipline",
+            message: "dangling lint:alloc_free annotation — no fn with a body follows"
+                .to_string(),
+            severity: Severity::Error,
+        });
+    };
+    for &al in &ann_lines {
+        // The annotated fn: the first code line at/below the annotation
+        // (comment/attr/blank lines in between are fine) must contain a
+        // `fn` token.
+        let mut l = al;
+        let fn_line = loop {
+            if l > f.code_lines.len() {
+                break None;
+            }
+            if f.line_kind(l) == LineKind::Code {
+                if find_token(
+                    &f.code_lines[l - 1].chars().collect::<Vec<_>>(),
+                    "fn",
+                    0,
+                )
+                .is_some()
+                {
+                    break Some(l);
+                }
+                break None;
+            }
+            l += 1;
+        };
+        let Some(fn_line) = fn_line else {
+            dangling(al, diags);
+            continue;
+        };
+        // Body extent: first `{` at paren/bracket depth 0, brace-matched.
+        let mut i = line_start[fn_line - 1];
+        let n = ch.len();
+        let mut pd = 0isize;
+        let mut body = None;
+        while i < n {
+            match ch[i] {
+                '(' | '[' => pd += 1,
+                ')' | ']' => pd -= 1,
+                ';' if pd == 0 => break,
+                '{' if pd == 0 => {
+                    let start = i;
+                    let mut bd = 1usize;
+                    i += 1;
+                    while i < n && bd > 0 {
+                        match ch[i] {
+                            '{' => bd += 1,
+                            '}' => bd -= 1,
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                    body = Some((start, i));
+                    break;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        let Some((bstart, bend)) = body else {
+            dangling(al, diags);
+            continue;
+        };
+        for pat in FORBIDDEN {
+            let mut from = bstart;
+            while let Some(at) = find_token(&ch[..bend], pat, from) {
+                diags.push(Diagnostic {
+                    file: f.display_path.clone(),
+                    line: f.line_of(at),
+                    check: "alloc_discipline",
+                    message: format!(
+                        "`{}` in a lint:alloc_free function (annotated at line {})",
+                        pat, al
+                    ),
+                    severity: Severity::Error,
+                });
+                from = at + pat.chars().count();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> Vec<Diagnostic> {
+        let f = LexedFile::lex("src/runtime/mod.rs", "rust/src/runtime/mod.rs", src);
+        let mut d = Vec::new();
+        check(&f, &mut d);
+        d
+    }
+
+    #[test]
+    fn flags_every_forbidden_token() {
+        let src = concat!(
+            "// lint:alloc_free\n",
+            "fn warm() {\n",
+            "    let a = Vec::new();\n",
+            "    let b = vec![0u8; 4];\n",
+            "    let c = s.to_vec();\n",
+            "    let d = Box::new(1);\n",
+            "    let e = String::from(\"x\");\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert_eq!(d.len(), 5, "{:?}", d);
+        assert!(d.iter().all(|d| d.check == "alloc_discipline"));
+    }
+
+    #[test]
+    fn clean_annotated_fn_and_unannotated_neighbors_pass() {
+        let src = concat!(
+            "// lint:alloc_free — hot path\n",
+            "#[inline]\n",
+            "fn warm(buf: &mut [u8]) { buf.fill(0); }\n",
+            "fn cold() { let v = Vec::new(); drop(v); }\n",
+        );
+        let d = run(src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn lookalikes_are_not_flagged() {
+        let src = concat!(
+            "// lint:alloc_free\n",
+            "fn warm(b: &[u8]) {\n",
+            "    let s = String::from_utf8_lossy(b);\n",
+            "    let msg = \"never Vec::new here\";\n",
+            "    let _ = (s, msg);\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn dangling_annotation_is_an_error() {
+        let d = run("// lint:alloc_free\nstatic X: u8 = 0;\n");
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("dangling"));
+    }
+}

@@ -1,0 +1,416 @@
+//! `fault_points` — keeps the deterministic fault-injection machinery
+//! (`src/faults.rs`) consistent with its tests. Two rules, both over
+//! the whole corpus:
+//!
+//! 1. **Coverage** — every point name declared in `faults.rs`
+//!    (`pub const NAME: &str = "value";`) must be exercised by
+//!    `rust/tests/serving_faults.rs`: referenced there by const ident,
+//!    by its point function's name (the `*_point` fn whose body calls
+//!    `should_fire(super::NAME, ..)` — mapped from the body, since
+//!    e.g. `arena_exhaustion_point` does not name-mangle to
+//!    `ARENA_EXHAUSTED`), or by the raw string value. Adding a sixth
+//!    point without a test fails `cargo test` via the self-hosted gate.
+//! 2. **Declaration** — every call site that passes a *string literal*
+//!    as the point argument of `fail_at(..)`, `.seeded(..)`,
+//!    `should_fire(..)`, or `injected(..)` must name a declared value;
+//!    a typo would otherwise make the injection site silently dead.
+//!    (Call sites passing the const ident are checked by the compiler.)
+
+use super::lexer::LexedFile;
+use super::{Diagnostic, Severity};
+
+const FAULTS_FILE: &str = "src/faults.rs";
+const TESTS_FILE: &str = "tests/serving_faults.rs";
+
+/// The point argument is the first argument for these callables.
+const POINT_CALLS: &[&str] = &["fail_at", "seeded", "should_fire", "injected"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn has_token(text: &str, word: &str) -> bool {
+    let ch: Vec<char> = text.chars().collect();
+    let p: Vec<char> = word.chars().collect();
+    if ch.len() < p.len() {
+        return false;
+    }
+    for s in 0..=ch.len() - p.len() {
+        if ch[s..s + p.len()] == p[..]
+            && (s == 0 || !is_ident(ch[s - 1]))
+            && (s + p.len() == ch.len() || !is_ident(ch[s + p.len()]))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+struct Point {
+    ident: String,
+    value: String,
+    line: usize,
+    /// `*_point` fns whose bodies reference this const.
+    fns: Vec<String>,
+}
+
+pub fn check(files: &[LexedFile], diags: &mut Vec<Diagnostic>) {
+    let Some(faults) = files.iter().find(|f| f.rel_path == FAULTS_FILE) else {
+        return;
+    };
+    let mut points = declared_points(faults);
+    map_point_fns(faults, &mut points);
+    let declared: Vec<&str> = points.iter().map(|p| p.value.as_str()).collect();
+
+    // Rule 1: every declared point is exercised by the fault tests.
+    match files.iter().find(|f| f.rel_path == TESTS_FILE) {
+        Some(tests) => {
+            for p in &points {
+                let by_ident = has_token(&tests.scrubbed, &p.ident);
+                let by_fn = p.fns.iter().any(|f| has_token(&tests.scrubbed, f));
+                let by_value = tests.strings.iter().any(|s| s.value == p.value);
+                if !(by_ident || by_fn || by_value) {
+                    diags.push(Diagnostic {
+                        file: faults.display_path.clone(),
+                        line: p.line,
+                        check: "fault_points",
+                        message: format!(
+                            "fault point {} (\"{}\") is not exercised by {}; \
+                             add a test before declaring the point",
+                            p.ident, p.value, TESTS_FILE
+                        ),
+                        severity: Severity::Error,
+                    });
+                }
+            }
+        }
+        None => {
+            for p in &points {
+                diags.push(Diagnostic {
+                    file: faults.display_path.clone(),
+                    line: p.line,
+                    check: "fault_points",
+                    message: format!(
+                        "fault point {} declared but {} is missing",
+                        p.ident, TESTS_FILE
+                    ),
+                    severity: Severity::Error,
+                });
+            }
+        }
+    }
+
+    // Rule 2: string-literal point arguments must be declared values.
+    for f in files {
+        check_call_sites(f, &declared, diags);
+    }
+}
+
+/// Parse `const IDENT: &str = "value";` declarations (outside test
+/// code). String values are blanked in the scrubbed text, so each is
+/// recovered from the literal side table by line.
+fn declared_points(faults: &LexedFile) -> Vec<Point> {
+    let mut out = Vec::new();
+    for s in &faults.strings {
+        if faults.is_test_line(s.line) || s.line > faults.code_lines.len() {
+            continue;
+        }
+        let code = &faults.code_lines[s.line - 1];
+        if !has_token(code, "const") || !code.contains("&str") {
+            continue;
+        }
+        // Ident after the `const` token.
+        let ch: Vec<char> = code.chars().collect();
+        let Some(at) = code.find("const") else { continue };
+        let mut j = at + 5;
+        while j < ch.len() && ch[j].is_whitespace() {
+            j += 1;
+        }
+        let b = j;
+        while j < ch.len() && is_ident(ch[j]) {
+            j += 1;
+        }
+        let ident: String = ch[b..j].iter().collect();
+        if !ident.is_empty() {
+            out.push(Point {
+                ident,
+                value: s.value.clone(),
+                line: s.line,
+                fns: Vec::new(),
+            });
+        }
+    }
+    out
+}
+
+/// Attribute each `should_fire(super::IDENT, ..)` reference inside
+/// `faults.rs` to its enclosing fn, giving the const → point-fn map.
+fn map_point_fns(faults: &LexedFile, points: &mut [Point]) {
+    let ch: Vec<char> = faults.scrubbed.chars().collect();
+    let n = ch.len();
+    // Collect (fn name, body start, body end).
+    let mut fns: Vec<(String, usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if ch[i] == 'f' && i + 1 < n && ch[i + 1] == 'n' {
+            let bounded = (i == 0 || !is_ident(ch[i - 1]))
+                && (i + 2 == n || !is_ident(ch[i + 2]));
+            if bounded {
+                let mut j = i + 2;
+                while j < n && ch[j].is_whitespace() {
+                    j += 1;
+                }
+                let b = j;
+                while j < n && is_ident(ch[j]) {
+                    j += 1;
+                }
+                let name: String = ch[b..j].iter().collect();
+                if !name.is_empty() {
+                    let mut pd = 0isize;
+                    let mut k = j;
+                    while k < n {
+                        match ch[k] {
+                            '(' | '[' => pd += 1,
+                            ')' | ']' => pd -= 1,
+                            ';' if pd == 0 => break,
+                            '{' if pd == 0 => {
+                                let start = k;
+                                let mut bd = 1usize;
+                                k += 1;
+                                while k < n && bd > 0 {
+                                    match ch[k] {
+                                        '{' => bd += 1,
+                                        '}' => bd -= 1,
+                                        _ => {}
+                                    }
+                                    k += 1;
+                                }
+                                fns.push((name.clone(), start, k));
+                                break;
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    // Find `should_fire` references and the const ident that follows.
+    let sf: Vec<char> = "should_fire".chars().collect();
+    let mut i = 0usize;
+    while i + sf.len() <= n {
+        if ch[i..i + sf.len()] == sf[..]
+            && (i == 0 || !is_ident(ch[i - 1]))
+            && !is_ident(*ch.get(i + sf.len()).unwrap_or(&' '))
+        {
+            let mut j = i + sf.len();
+            while j < n && ch[j].is_whitespace() {
+                j += 1;
+            }
+            if j < n && ch[j] == '(' {
+                j += 1;
+                // Optional path prefix (`super::`, `faults::`, ...).
+                loop {
+                    while j < n && ch[j].is_whitespace() {
+                        j += 1;
+                    }
+                    let b = j;
+                    while j < n && is_ident(ch[j]) {
+                        j += 1;
+                    }
+                    if j + 1 < n && ch[j] == ':' && ch[j + 1] == ':' {
+                        j += 2;
+                        continue;
+                    }
+                    let ident: String = ch[b..j].iter().collect();
+                    if let Some(p) = points.iter_mut().find(|p| p.ident == ident) {
+                        // Innermost enclosing fn = the one with the
+                        // tightest body span around this reference.
+                        if let Some((name, _, _)) = fns
+                            .iter()
+                            .filter(|(_, s, e)| *s < i && i < *e)
+                            .min_by_key(|(_, s, e)| e - s)
+                        {
+                            if !p.fns.contains(name) {
+                                p.fns.push(name.clone());
+                            }
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Flag string-literal point arguments that name no declared value.
+fn check_call_sites(f: &LexedFile, declared: &[&str], diags: &mut Vec<Diagnostic>) {
+    let ch: Vec<char> = f.scrubbed.chars().collect();
+    let n = ch.len();
+    for call in POINT_CALLS {
+        let p: Vec<char> = call.chars().collect();
+        if n < p.len() {
+            continue;
+        }
+        let mut i = 0usize;
+        while i + p.len() <= n {
+            if ch[i..i + p.len()] != p[..]
+                || (i > 0 && is_ident(ch[i - 1]))
+                || is_ident(*ch.get(i + p.len()).unwrap_or(&' '))
+            {
+                i += 1;
+                continue;
+            }
+            let mut j = i + p.len();
+            while j < n && ch[j].is_whitespace() {
+                j += 1;
+            }
+            if j >= n || ch[j] != '(' {
+                i += 1;
+                continue;
+            }
+            // First argument: up to the first `,` at depth 1 or the
+            // matching `)`.
+            let arg_start = j + 1;
+            let mut depth = 1isize;
+            let mut k = arg_start;
+            while k < n && depth > 0 {
+                match ch[k] {
+                    '(' | '[' | '{' => depth += 1,
+                    ')' | ']' | '}' => depth -= 1,
+                    ',' if depth == 1 => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let arg_end = k;
+            for s in &f.strings {
+                if s.pos >= arg_start && s.pos < arg_end && !declared.contains(&s.value.as_str())
+                {
+                    diags.push(Diagnostic {
+                        file: f.display_path.clone(),
+                        line: s.line,
+                        check: "fault_points",
+                        message: format!(
+                            "{}(\"{}\", ..) names no declared fault point \
+                             (declared: {})",
+                            call,
+                            s.value,
+                            declared.join(", ")
+                        ),
+                        severity: Severity::Error,
+                    });
+                }
+            }
+            i = arg_end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FAULTS_SRC: &str = concat!(
+        "pub const KERNEL_PANIC: &str = \"kernel_panic\";\n",
+        "pub const ARENA_EXHAUSTED: &str = \"arena_exhausted\";\n",
+        "mod active {\n",
+        "    pub fn kernel_panic_point(op: &str) {\n",
+        "        if should_fire(super::KERNEL_PANIC, Some(op)) {}\n",
+        "    }\n",
+        "    pub fn arena_exhaustion_point() {\n",
+        "        if should_fire(super::ARENA_EXHAUSTED, None) {}\n",
+        "    }\n",
+        "}\n",
+    );
+
+    fn lex(rel: &str, src: &str) -> LexedFile {
+        LexedFile::lex(rel, &format!("rust/{}", rel), src)
+    }
+
+    fn run(files: Vec<LexedFile>) -> Vec<Diagnostic> {
+        let mut d = Vec::new();
+        check(&files, &mut d);
+        d
+    }
+
+    #[test]
+    fn covered_points_pass() {
+        let tests = lex(
+            TESTS_FILE,
+            // One point by const ident, the other by mapped fn name.
+            "fn t() { f(faults::KERNEL_PANIC); arena_exhaustion_point(); }\n",
+        );
+        let d = run(vec![lex(FAULTS_FILE, FAULTS_SRC), tests]);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn unexercised_point_is_flagged() {
+        let tests = lex(TESTS_FILE, "fn t() { f(faults::KERNEL_PANIC); }\n");
+        let d = run(vec![lex(FAULTS_FILE, FAULTS_SRC), tests]);
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("ARENA_EXHAUSTED"));
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn coverage_by_string_value_counts() {
+        let tests = lex(
+            TESTS_FILE,
+            "fn t() { f(faults::KERNEL_PANIC); g(\"arena_exhausted\"); }\n",
+        );
+        let d = run(vec![lex(FAULTS_FILE, FAULTS_SRC), tests]);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn typo_in_string_point_argument_is_flagged() {
+        let tests = lex(
+            TESTS_FILE,
+            concat!(
+                "fn t() {\n",
+                "    plan.fail_at(\"kernel_panik\", None, &[0]);\n",
+                "    arena_exhaustion_point(); kernel_panic_point(\"op\");\n",
+                "}\n",
+            ),
+        );
+        let d = run(vec![lex(FAULTS_FILE, FAULTS_SRC), tests]);
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("kernel_panik"));
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn second_argument_strings_are_not_point_names() {
+        let tests = lex(
+            TESTS_FILE,
+            concat!(
+                "fn t() {\n",
+                "    plan.fail_at(faults::KERNEL_PANIC, Some(\"FULLY_CONNECTED\"), &[4]);\n",
+                "    arena_exhaustion_point();\n",
+                "}\n",
+            ),
+        );
+        let d = run(vec![lex(FAULTS_FILE, FAULTS_SRC), tests]);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn missing_tests_file_flags_every_point() {
+        let d = run(vec![lex(FAULTS_FILE, FAULTS_SRC)]);
+        assert_eq!(d.len(), 2, "{:?}", d);
+        assert!(d.iter().all(|d| d.message.contains("missing")));
+    }
+
+    #[test]
+    fn no_faults_file_is_a_no_op() {
+        let d = run(vec![lex("src/lib.rs", "fn f() {}\n")]);
+        assert!(d.is_empty());
+    }
+}

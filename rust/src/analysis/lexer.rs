@@ -1,0 +1,650 @@
+//! A small, dependency-free Rust lexer for the invariant checker.
+//!
+//! The old CI gate was a sed/grep pipeline: it stripped `//` comments and
+//! everything after the *first* `#[cfg(test)]`, which (a) misses block
+//! comments, (b) false-positives on panicking tokens inside string
+//! literals, (c) breaks on `//` *inside* a string (the rest of the line
+//! vanished, hiding real code), and (d) silently un-checks every line
+//! below the first test module — including real code between two test
+//! modules. This lexer fixes all four by actually classifying every
+//! character of the source:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments
+//!   (`/* /* */ */`),
+//! * string literals with escapes, byte strings, and raw strings with an
+//!   arbitrary hash count (`r#"..."#`, `br##"..."##`) — distinguished
+//!   from raw identifiers (`r#fn`),
+//! * char and byte-char literals, including `'"'`, `'}'`, and escape
+//!   forms (`'\''`, `'\u{7D}'`), distinguished from lifetimes (`'a`,
+//!   `'respawn: loop`),
+//! * `#[cfg(test)]`-gated items and `mod tests { ... }` blocks, excluded
+//!   by brace tracking — *every* such region, not just the first, and
+//!   only the region itself (code between two test modules stays
+//!   checked). `#[cfg(any(test, ...))]` is **not** excluded: such items
+//!   are compiled into debug builds and must hold the invariants.
+//!
+//! The output is a [`LexedFile`]: a *scrubbed* view of the source where
+//! every non-code character is blanked to a space (line structure
+//! preserved, so diagnostics carry real line numbers), plus the comment
+//! text per line (for `// SAFETY:` / `// lint:` directives) and every
+//! string literal with its position (for the fault-point name check).
+
+/// A string literal found in the source (contents are blanked in the
+/// scrubbed view; the value lives here).
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// Char offset of the opening quote in the scrubbed text.
+    pub pos: usize,
+    /// 1-based line of the opening quote.
+    pub line: usize,
+    /// Literal contents between the quotes, escapes left as written.
+    pub value: String,
+}
+
+/// Classification of a line for comment-adjacency rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineKind {
+    /// Contains at least one code token.
+    Code,
+    /// Only a comment (no code, no attribute).
+    CommentOnly,
+    /// Only an attribute (`#[...]` / `#![...]`), possibly with a comment.
+    AttrOnly,
+    /// Nothing at all.
+    Blank,
+}
+
+/// A source file after lexing: code-only text plus comment/string side
+/// tables and the test-region mask.
+pub struct LexedFile {
+    /// Path relative to the lint root — what check configs key on.
+    pub rel_path: String,
+    /// Path as shown in diagnostics (usually prefixed with the root).
+    pub display_path: String,
+    /// Scrubbed text: comments and literal contents replaced by spaces,
+    /// char-for-char (newlines preserved), so offsets map to lines.
+    pub scrubbed: String,
+    /// Scrubbed text split into lines (no terminators).
+    pub code_lines: Vec<String>,
+    /// Comment text per line (a block comment contributes one entry per
+    /// line it spans). A line can appear more than once.
+    pub comments: Vec<(usize, String)>,
+    /// Every string literal, in source order.
+    pub strings: Vec<StrLit>,
+    /// `test_line[line - 1]` is true inside `#[cfg(test)]` items and
+    /// `mod tests` blocks.
+    pub test_line: Vec<bool>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl LexedFile {
+    /// Lex `source`, classifying every char and marking test regions.
+    pub fn lex(rel_path: &str, display_path: &str, source: &str) -> LexedFile {
+        let ch: Vec<char> = source.chars().collect();
+        let n = ch.len();
+        let mut scrubbed = String::with_capacity(n);
+        let mut comments: Vec<(usize, String)> = Vec::new();
+        let mut strings: Vec<StrLit> = Vec::new();
+        let mut line = 1usize;
+        let mut i = 0usize;
+
+        // Push `count` blanks preserving newlines from ch[i..i+count].
+        // Returns the new line number.
+        fn blank(scrubbed: &mut String, ch: &[char], from: usize, to: usize, line: &mut usize) {
+            for &c in &ch[from..to] {
+                if c == '\n' {
+                    scrubbed.push('\n');
+                    *line += 1;
+                } else {
+                    scrubbed.push(' ');
+                }
+            }
+        }
+
+        while i < n {
+            let c = ch[i];
+            let prev_ident = i > 0 && is_ident(ch[i - 1]);
+            // --- comments --------------------------------------------
+            if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+                let start = i;
+                while i < n && ch[i] != '\n' {
+                    i += 1;
+                }
+                comments.push((line, ch[start..i].iter().collect()));
+                blank(&mut scrubbed, &ch, start, i, &mut line);
+                continue;
+            }
+            if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+                let mut depth = 1usize;
+                let mut cur = String::from("/*");
+                let mut cline = line;
+                let start = i;
+                i += 2;
+                while i < n && depth > 0 {
+                    if ch[i] == '/' && i + 1 < n && ch[i + 1] == '*' {
+                        depth += 1;
+                        cur.push_str("/*");
+                        i += 2;
+                    } else if ch[i] == '*' && i + 1 < n && ch[i + 1] == '/' {
+                        depth -= 1;
+                        cur.push_str("*/");
+                        i += 2;
+                    } else {
+                        if ch[i] == '\n' {
+                            comments.push((cline, std::mem::take(&mut cur)));
+                            cline += 1;
+                        } else {
+                            cur.push(ch[i]);
+                        }
+                        i += 1;
+                    }
+                }
+                if !cur.is_empty() {
+                    comments.push((cline, cur));
+                }
+                blank(&mut scrubbed, &ch, start, i, &mut line);
+                continue;
+            }
+            // --- raw strings: r"..", r#".."#, br".."  ----------------
+            if (c == 'r' || (c == 'b' && i + 1 < n && ch[i + 1] == 'r')) && !prev_ident {
+                let mut j = i + if c == 'b' { 2 } else { 1 };
+                let mut hashes = 0usize;
+                while j < n && ch[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && ch[j] == '"' {
+                    // Raw (byte) string; `r#ident` falls through (no quote).
+                    let open_line = line;
+                    let pos = scrubbed.chars().count() + (j - i);
+                    let content_start = j + 1;
+                    let mut k = content_start;
+                    'findend: while k < n {
+                        if ch[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && k + 1 + h < n && ch[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                break 'findend;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let end = (k + 1 + hashes).min(n);
+                    strings.push(StrLit {
+                        pos,
+                        line: open_line,
+                        value: ch[content_start..k.min(n)].iter().collect(),
+                    });
+                    blank(&mut scrubbed, &ch, i, end, &mut line);
+                    i = end;
+                    continue;
+                }
+            }
+            // --- plain / byte strings --------------------------------
+            if c == '"' || (c == 'b' && i + 1 < n && ch[i + 1] == '"' && !prev_ident) {
+                let quote = if c == 'b' { i + 1 } else { i };
+                let pos = scrubbed.chars().count() + (quote - i);
+                let open_line = line;
+                let mut k = quote + 1;
+                while k < n {
+                    if ch[k] == '\\' {
+                        k += 2;
+                        continue;
+                    }
+                    if ch[k] == '"' {
+                        break;
+                    }
+                    k += 1;
+                }
+                let end = (k + 1).min(n);
+                strings.push(StrLit {
+                    pos,
+                    line: open_line,
+                    value: ch[quote + 1..k.min(n)].iter().collect(),
+                });
+                blank(&mut scrubbed, &ch, i, end, &mut line);
+                i = end;
+                continue;
+            }
+            // --- char / byte-char literals vs lifetimes --------------
+            if c == '\'' || (c == 'b' && i + 1 < n && ch[i + 1] == '\'' && !prev_ident) {
+                let quote = if c == 'b' { i + 1 } else { i };
+                let s = quote + 1;
+                let is_char_lit = if s < n && ch[s] == '\\' {
+                    true
+                } else {
+                    // 'X' where the char after X closes the quote. A
+                    // lifetime ('a, 'respawn, '_) never has that.
+                    s + 1 < n && ch[s] != '\'' && ch[s + 1] == '\''
+                };
+                if is_char_lit {
+                    let mut k = s;
+                    while k < n {
+                        if ch[k] == '\\' {
+                            k += 2;
+                            continue;
+                        }
+                        if ch[k] == '\'' {
+                            break;
+                        }
+                        k += 1;
+                    }
+                    let end = (k + 1).min(n);
+                    blank(&mut scrubbed, &ch, i, end, &mut line);
+                    i = end;
+                    continue;
+                }
+                // Lifetime or label: the quote itself is code.
+                scrubbed.push(c);
+                i += 1;
+                continue;
+            }
+            // --- plain code ------------------------------------------
+            if c == '\n' {
+                line += 1;
+            }
+            scrubbed.push(c);
+            i += 1;
+        }
+
+        let code_lines: Vec<String> = scrubbed.split('\n').map(str::to_string).collect();
+        let nlines = code_lines.len();
+        let test_line = mark_test_regions(&scrubbed, nlines);
+        LexedFile {
+            rel_path: rel_path.to_string(),
+            display_path: display_path.to_string(),
+            scrubbed,
+            code_lines,
+            comments,
+            strings,
+            test_line,
+        }
+    }
+
+    /// True when `line` (1-based) is inside a test-only region.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= 1 && line <= self.test_line.len() && self.test_line[line - 1]
+    }
+
+    /// 1-based line of a char offset into the scrubbed text.
+    pub fn line_of(&self, pos: usize) -> usize {
+        let mut line = 1usize;
+        for (k, c) in self.scrubbed.chars().enumerate() {
+            if k >= pos {
+                break;
+            }
+            if c == '\n' {
+                line += 1;
+            }
+        }
+        line
+    }
+
+    /// The scrubbed text with test-region lines additionally blanked —
+    /// the input for whole-file scans that must skip tests.
+    pub fn scrubbed_nontest(&self) -> String {
+        let mut out = String::with_capacity(self.scrubbed.len());
+        for (idx, l) in self.code_lines.iter().enumerate() {
+            if idx > 0 {
+                out.push('\n');
+            }
+            if self.test_line[idx] {
+                out.extend(std::iter::repeat(' ').take(l.chars().count()));
+            } else {
+                out.push_str(l);
+            }
+        }
+        out
+    }
+
+    /// Classify a line for the comment-adjacency rules.
+    pub fn line_kind(&self, line: usize) -> LineKind {
+        if line < 1 || line > self.code_lines.len() {
+            return LineKind::Blank;
+        }
+        let code = self.code_lines[line - 1].trim();
+        let has_comment = self.comments.iter().any(|(l, _)| *l == line);
+        if code.is_empty() {
+            if has_comment {
+                LineKind::CommentOnly
+            } else {
+                LineKind::Blank
+            }
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            LineKind::AttrOnly
+        } else {
+            LineKind::Code
+        }
+    }
+
+    /// All comment text on a line, concatenated.
+    pub fn comment_text(&self, line: usize) -> String {
+        let mut out = String::new();
+        for (l, t) in &self.comments {
+            if *l == line {
+                out.push_str(t);
+                out.push(' ');
+            }
+        }
+        out
+    }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item or a
+/// `mod tests { ... }` block. Operates on scrubbed text, so braces in
+/// strings/comments cannot desynchronize the tracker.
+fn mark_test_regions(scrubbed: &str, nlines: usize) -> Vec<bool> {
+    let ch: Vec<char> = scrubbed.chars().collect();
+    let n = ch.len();
+    // line_at[k] = 1-based line of char k.
+    let mut line_at = vec![1usize; n + 1];
+    {
+        let mut l = 1usize;
+        for (k, c) in ch.iter().enumerate() {
+            line_at[k] = l;
+            if *c == '\n' {
+                l += 1;
+            }
+        }
+        line_at[n] = l;
+    }
+    let mut mask = vec![false; nlines];
+    let mut mark = |from: usize, to: usize| {
+        let (a, b) = (line_at[from.min(n)], line_at[to.min(n)]);
+        for l in a..=b {
+            if l >= 1 && l <= nlines {
+                mask[l - 1] = true;
+            }
+        }
+    };
+
+    let mut i = 0usize;
+    while i < n {
+        let c = ch[i];
+        // `#[cfg(test)]` attribute (whitespace-insensitive match of the
+        // bracket group; `#[cfg(any(test, ...))]` does NOT match).
+        if c == '#' {
+            let mut j = i + 1;
+            while j < n && ch[j].is_whitespace() {
+                j += 1;
+            }
+            if j < n && ch[j] == '[' {
+                let mut depth = 0usize;
+                let mut k = j;
+                while k < n {
+                    match ch[k] {
+                        '[' => depth += 1,
+                        ']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let text: String =
+                    ch[i..=k.min(n - 1)].iter().filter(|c| !c.is_whitespace()).collect();
+                if text == "#[cfg(test)]" {
+                    let end = item_extent(&ch, k + 1);
+                    mark(i, end);
+                    i = end + 1;
+                    continue;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        // `mod tests` (with or without an attribute).
+        if is_ident(c) && (i == 0 || !is_ident(ch[i - 1])) {
+            let mut j = i;
+            while j < n && is_ident(ch[j]) {
+                j += 1;
+            }
+            let word: String = ch[i..j].iter().collect();
+            if word == "mod" {
+                let mut k = j;
+                while k < n && ch[k].is_whitespace() {
+                    k += 1;
+                }
+                let mut m = k;
+                while m < n && is_ident(ch[m]) {
+                    m += 1;
+                }
+                let name: String = ch[k..m].iter().collect();
+                if name == "tests" {
+                    let end = item_extent(&ch, m);
+                    mark(i, end);
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Extent of the item starting at `start` (after its marker): skips
+/// further attributes, then runs to the matching `}` of the item's body,
+/// or to a terminating `;` for block-less items (`mod tests;`,
+/// `#[cfg(test)] static X: T = v;`). Returns the char index of the
+/// item's final char.
+fn item_extent(ch: &[char], start: usize) -> usize {
+    let n = ch.len();
+    let mut i = start;
+    // Skip whitespace and subsequent attributes.
+    loop {
+        while i < n && ch[i].is_whitespace() {
+            i += 1;
+        }
+        if i < n && ch[i] == '#' {
+            let mut j = i + 1;
+            while j < n && ch[j].is_whitespace() {
+                j += 1;
+            }
+            if j < n && (ch[j] == '[' || (ch[j] == '!' && j + 1 < n && ch[j + 1] == '[')) {
+                let mut depth = 0usize;
+                let mut k = j;
+                while k < n {
+                    match ch[k] {
+                        '[' => depth += 1,
+                        ']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        break;
+    }
+    // Signature scan: first `{` (at paren/bracket depth 0) opens the
+    // body; a `;` first means a block-less item.
+    let mut pd = 0isize;
+    while i < n {
+        match ch[i] {
+            '(' | '[' => pd += 1,
+            ')' | ']' => pd -= 1,
+            '{' if pd == 0 => {
+                let mut bd = 1usize;
+                i += 1;
+                while i < n && bd > 0 {
+                    match ch[i] {
+                        '{' => bd += 1,
+                        '}' => bd -= 1,
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                return i.saturating_sub(1);
+            }
+            ';' if pd == 0 => return i,
+            _ => {}
+        }
+        i += 1;
+    }
+    n.saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex(src: &str) -> LexedFile {
+        LexedFile::lex("fixture.rs", "fixture.rs", src)
+    }
+
+    /// Old-gate false positive: a panicking token inside a *string* was
+    /// flagged by grep. The lexer scrubs it.
+    #[test]
+    fn string_contents_are_scrubbed() {
+        let f = lex("let s = \"call .unwrap() and panic!(now)\";\n");
+        assert!(!f.scrubbed.contains("unwrap"));
+        assert!(!f.scrubbed.contains("panic"));
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0].value, "call .unwrap() and panic!(now)");
+    }
+
+    /// Old-gate false negative: `//` inside a string made sed delete the
+    /// rest of the line, hiding real code *after* the literal.
+    #[test]
+    fn comment_marker_inside_string_does_not_eat_code() {
+        let f = lex("let u = \"https://host/x\"; maybe.unwrap();\n");
+        assert!(f.scrubbed.contains(".unwrap()"), "code after the string must survive");
+        assert!(!f.scrubbed.contains("https"));
+    }
+
+    /// Old-gate false positive: block comments were never stripped, so a
+    /// panicking token in one was flagged.
+    #[test]
+    fn block_comments_scrubbed_including_nested() {
+        let f = lex("/* outer panic!( /* nested .unwrap() */ still comment */ let x = 1;\n");
+        assert!(!f.scrubbed.contains("panic"));
+        assert!(!f.scrubbed.contains("unwrap"));
+        assert!(f.scrubbed.contains("let x = 1;"), "code after the close must survive");
+    }
+
+    /// Raw strings with hashes: `"#` inside must not close early; the
+    /// contents (with `//` and quotes) are scrubbed.
+    #[test]
+    fn raw_strings_with_hashes() {
+        let f = lex("let r = r##\"has \"# quote // and .unwrap()\"##; after.expect(\"m\");\n");
+        assert!(!f.scrubbed.contains(".unwrap()"));
+        assert!(f.scrubbed.contains("after.expect("), "code after the raw string survives");
+        assert_eq!(f.strings[0].value, "has \"# quote // and .unwrap()");
+    }
+
+    /// A raw *identifier* is not a raw string.
+    #[test]
+    fn raw_identifier_is_code() {
+        let f = lex("let r#fn = 1; r#fn.unwrap();\n");
+        assert!(f.scrubbed.contains("r#fn.unwrap()"));
+    }
+
+    /// Char literals containing `"` and `}` must not open a string or
+    /// unbalance brace tracking; byte chars and escapes likewise.
+    #[test]
+    fn char_literals_with_quote_and_brace() {
+        let f = lex(concat!(
+            "let a = '\"'; let b = '}'; let c = '\\''; let d = b'\"'; let e = '\\u{7D}';\n",
+            "still_code.unwrap();\n",
+        ));
+        assert!(f.scrubbed.contains("still_code.unwrap()"));
+        assert_eq!(f.strings.len(), 0, "no string literal was opened: {:?}", f.strings);
+    }
+
+    /// Lifetimes and loop labels are code, not char literals.
+    #[test]
+    fn lifetimes_and_labels_stay_code() {
+        let f = lex("fn f<'a>(x: &'a str) { 'respawn: loop { break 'respawn; } }\n");
+        assert!(f.scrubbed.contains("'a str"));
+        assert!(f.scrubbed.contains("'respawn: loop"));
+    }
+
+    /// Old-gate false negative: everything below the FIRST test module
+    /// was deleted, un-checking real code between/after test modules.
+    #[test]
+    fn multiple_test_modules_and_code_between() {
+        let src = concat!(
+            "fn real1() { val.unwrap(); }\n",        // 1: code
+            "#[cfg(test)]\n",                        // 2: test
+            "mod tests { fn t() { x.unwrap(); } }\n", // 3: test
+            "fn real2() { val.unwrap(); }\n",        // 4: code (old gate missed this)
+            "#[cfg(test)]\n",                        // 5: test
+            "mod more_tests {\n",                    // 6
+            "    fn u() { y.unwrap(); }\n",          // 7
+            "}\n",                                   // 8: test
+            "fn real3() {}\n",                       // 9: code
+        );
+        let f = lex(src);
+        let t: Vec<usize> =
+            (1..=9).filter(|&l| f.is_test_line(l)).collect();
+        assert_eq!(t, vec![2, 3, 5, 6, 7, 8]);
+    }
+
+    /// `#[cfg(any(test, ...))]` items are compiled into debug builds —
+    /// NOT excluded.
+    #[test]
+    fn cfg_any_test_is_not_excluded() {
+        let f = lex("#[cfg(any(test, feature = \"fault-injection\"))]\nmod active { fn f() {} }\n");
+        assert!(!f.is_test_line(1));
+        assert!(!f.is_test_line(2));
+    }
+
+    /// `mod tests` without an attribute is excluded; a block-less
+    /// `#[cfg(test)]` item extends to its `;`.
+    #[test]
+    fn mod_tests_and_blockless_items() {
+        let src = concat!(
+            "mod tests { fn t() { a.unwrap(); } }\n", // 1: test
+            "#[cfg(test)]\n",                          // 2: test
+            "static LOCK: Mutex<()> = Mutex::new(());\n", // 3: test
+            "fn real() {}\n",                          // 4: code
+        );
+        let f = lex(src);
+        assert!(f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(3));
+        assert!(!f.is_test_line(4));
+    }
+
+    #[test]
+    fn comments_and_line_kinds_are_captured() {
+        let src = concat!(
+            "// SAFETY: fine\n",
+            "#[inline]\n",
+            "unsafe fn f() {}\n",
+            "\n",
+        );
+        let f = lex(src);
+        assert_eq!(f.line_kind(1), LineKind::CommentOnly);
+        assert_eq!(f.line_kind(2), LineKind::AttrOnly);
+        assert_eq!(f.line_kind(3), LineKind::Code);
+        assert_eq!(f.line_kind(4), LineKind::Blank);
+        assert!(f.comment_text(1).contains("SAFETY:"));
+    }
+
+    #[test]
+    fn scrubbed_nontest_blanks_test_lines() {
+        let f = lex("fn a() { x.lock(); }\n#[cfg(test)]\nmod tests { fn t() { y.lock(); } }\n");
+        let nt = f.scrubbed_nontest();
+        assert!(nt.contains("x.lock()"));
+        assert!(!nt.contains("y.lock()"));
+        assert_eq!(nt.chars().filter(|&c| c == '\n').count(), 3);
+    }
+}

@@ -1,0 +1,392 @@
+//! `lock_order` — static cousin of a race detector for the registry's
+//! publish/promote/rollback paths. The registry documents a total lock
+//! order (`live` before `history`, everywhere); this check extracts
+//! nested `lock()`/`read()`/`write()` acquisitions in `serving/` and
+//! fails on:
+//!
+//! * **inversions** — acquiring an earlier-ordered lock while holding a
+//!   later-ordered one (the deadlock shape),
+//! * **re-entry** — acquiring a lock already held (self-deadlock with
+//!   `Mutex`, writer starvation with `RwLock`),
+//! * **undeclared nesting** — any nesting involving a lock not in the
+//!   declared order (the order cannot vouch for it; extend the order or
+//!   restructure so the guards do not overlap).
+//!
+//! Guard lifetimes are tracked structurally on the scrubbed text:
+//! a `let`-bound guard lives to the end of its enclosing block or an
+//! explicit `drop(binding)`; a temporary guard (no `let`) dies at the
+//! end of its statement. This is conservative — a guard moved into a
+//! struct or returned would be mis-scoped — but the serving code keeps
+//! guards local by construction, and the checker exists to keep it so.
+
+use super::lexer::LexedFile;
+use super::{Diagnostic, Severity};
+
+/// The declared partial order: a lock may only be acquired while
+/// holding locks that appear *earlier* in this list.
+pub const ORDER: &[&str] = &["live", "history"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Guard {
+    /// Receiver field/variable the lock was acquired through.
+    name: String,
+    /// `let` binding holding the guard, if any.
+    binding: Option<String>,
+    /// Block depth at acquisition.
+    depth: usize,
+    line: usize,
+}
+
+pub fn check(files: &[LexedFile], diags: &mut Vec<Diagnostic>) {
+    for f in files {
+        if !f.rel_path.starts_with("src/serving/") {
+            continue;
+        }
+        check_file(f, diags);
+    }
+}
+
+fn check_file(f: &LexedFile, diags: &mut Vec<Diagnostic>) {
+    let text = f.scrubbed_nontest();
+    let ch: Vec<char> = text.chars().collect();
+    let n = ch.len();
+    let mut line = 1usize;
+    let mut depth = 0usize;
+    let mut stmt_start = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        match ch[i] {
+            '\n' => line += 1,
+            '{' => {
+                depth += 1;
+                stmt_start = i + 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+                stmt_start = i + 1;
+            }
+            ';' => {
+                guards.retain(|g| g.binding.is_some() || g.depth < depth);
+                stmt_start = i + 1;
+            }
+            '.' => {
+                if let Some((method, after)) = lock_method_at(&ch, i) {
+                    let name = receiver_before(&ch, i);
+                    let binding = let_binding(&ch, stmt_start, i);
+                    report_nesting(f, &guards, &name, line, diags);
+                    guards.push(Guard {
+                        name,
+                        binding,
+                        depth,
+                        line,
+                    });
+                    let _ = method;
+                    i = after;
+                    continue;
+                }
+            }
+            'd' if at_ident(&ch, i, "drop") => {
+                // drop(binding) releases the named guard early.
+                let mut j = i + 4;
+                while j < n && ch[j].is_whitespace() {
+                    j += 1;
+                }
+                if j < n && ch[j] == '(' {
+                    let mut k = j + 1;
+                    while k < n && ch[k].is_whitespace() {
+                        k += 1;
+                    }
+                    let s = k;
+                    while k < n && is_ident(ch[k]) {
+                        k += 1;
+                    }
+                    let ident: String = ch[s..k].iter().collect();
+                    if !ident.is_empty() {
+                        if let Some(pos) = guards.iter().rposition(|g| {
+                            g.binding.as_deref() == Some(ident.as_str())
+                                || g.name == ident
+                        }) {
+                            guards.remove(pos);
+                        }
+                    }
+                }
+                i += 4;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// `.lock()` / `.read()` / `.write()` with an empty argument list,
+/// starting at the `.` at `i`. Returns the method and the index just
+/// past the closing paren.
+fn lock_method_at(ch: &[char], i: usize) -> Option<(&'static str, usize)> {
+    for m in ["lock", "read", "write"] {
+        let p: Vec<char> = m.chars().collect();
+        let end = i + 1 + p.len();
+        if end <= ch.len()
+            && ch[i + 1..end] == p[..]
+            && (end == ch.len() || !is_ident(ch[end]))
+        {
+            let mut j = end;
+            while j < ch.len() && ch[j].is_whitespace() {
+                j += 1;
+            }
+            if j < ch.len() && ch[j] == '(' {
+                let mut k = j + 1;
+                while k < ch.len() && ch[k].is_whitespace() {
+                    k += 1;
+                }
+                if k < ch.len() && ch[k] == ')' {
+                    return Some((m, k + 1));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The ident directly before the `.` at `i` (skipping whitespace, so
+/// multi-line builder chains resolve to the field name).
+fn receiver_before(ch: &[char], i: usize) -> String {
+    let mut j = i;
+    while j > 0 && ch[j - 1].is_whitespace() {
+        j -= 1;
+    }
+    let e = j;
+    while j > 0 && is_ident(ch[j - 1]) {
+        j -= 1;
+    }
+    let name: String = ch[j..e].iter().collect();
+    if name.is_empty() {
+        "<expr>".to_string()
+    } else {
+        name
+    }
+}
+
+fn at_ident(ch: &[char], i: usize, word: &str) -> bool {
+    let p: Vec<char> = word.chars().collect();
+    let end = i + p.len();
+    end <= ch.len()
+        && ch[i..end] == p[..]
+        && (i == 0 || !is_ident(ch[i - 1]))
+        && (end == ch.len() || !is_ident(ch[end]))
+}
+
+/// If the statement beginning at `stmt_start` opens with `let`, the
+/// binding name (skipping `mut` and pattern-less forms only).
+fn let_binding(ch: &[char], stmt_start: usize, upto: usize) -> Option<String> {
+    let mut j = stmt_start.min(upto);
+    while j < upto && ch[j].is_whitespace() {
+        j += 1;
+    }
+    if !at_ident(ch, j, "let") {
+        return None;
+    }
+    j += 3;
+    while j < upto && ch[j].is_whitespace() {
+        j += 1;
+    }
+    if at_ident(ch, j, "mut") {
+        j += 3;
+        while j < upto && ch[j].is_whitespace() {
+            j += 1;
+        }
+    }
+    let s = j;
+    while j < upto && is_ident(ch[j]) {
+        j += 1;
+    }
+    let name: String = ch[s..j].iter().collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn report_nesting(
+    f: &LexedFile,
+    guards: &[Guard],
+    acquiring: &str,
+    line: usize,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let idx = |name: &str| ORDER.iter().position(|o| *o == name);
+    for g in guards {
+        let message = if g.name == acquiring {
+            format!(
+                "re-entrant acquisition of `{}` (already held since line {})",
+                acquiring, g.line
+            )
+        } else {
+            match (idx(&g.name), idx(acquiring)) {
+                (Some(h), Some(a)) if h > a => format!(
+                    "lock-order inversion: acquiring `{}` while holding `{}` \
+                     (line {}); declared order is {}",
+                    acquiring,
+                    g.name,
+                    g.line,
+                    ORDER.join(" before ")
+                ),
+                (Some(_), Some(_)) => continue,
+                _ => format!(
+                    "nested acquisition of `{}` while holding `{}` (line {}) \
+                     involves a lock outside the declared order ({}); extend \
+                     the order or restructure so the guards do not overlap",
+                    acquiring,
+                    g.name,
+                    g.line,
+                    ORDER.join(" before ")
+                ),
+            }
+        };
+        diags.push(Diagnostic {
+            file: f.display_path.clone(),
+            line,
+            check: "lock_order",
+            message,
+            severity: Severity::Error,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> Vec<Diagnostic> {
+        let files = vec![LexedFile::lex(
+            "src/serving/registry.rs",
+            "rust/src/serving/registry.rs",
+            src,
+        )];
+        let mut d = Vec::new();
+        check(&files, &mut d);
+        d
+    }
+
+    #[test]
+    fn correct_order_passes() {
+        let src = concat!(
+            "fn promote(&self) {\n",
+            "    let mut live = self.live.write().unwrap_or_else(|p| p.into_inner());\n",
+            "    let mut history = self.history.lock().unwrap_or_else(|p| p.into_inner());\n",
+            "    history.push(live.clone());\n",
+            "}\n",
+        );
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn inversion_is_flagged() {
+        let src = concat!(
+            "fn bad(&self) {\n",
+            "    let mut history = self.history.lock().unwrap_or_else(|p| p.into_inner());\n",
+            "    let mut live = self.live.write().unwrap_or_else(|p| p.into_inner());\n",
+            "    let _ = (&mut history, &mut live);\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("inversion"));
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn reentry_is_flagged() {
+        let src = concat!(
+            "fn bad(&self) {\n",
+            "    let a = self.live.read().unwrap();\n",
+            "    let b = self.live.read().unwrap();\n",
+            "    let _ = (a, b);\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert!(
+            d.iter().any(|d| d.message.contains("re-entrant")),
+            "{:?}",
+            d
+        );
+    }
+
+    #[test]
+    fn undeclared_nesting_is_flagged() {
+        let src = concat!(
+            "fn bad(&self) {\n",
+            "    let rx = self.req_rx.lock().unwrap();\n",
+            "    let live = self.live.read().unwrap();\n",
+            "    let _ = (rx, live);\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("outside the declared order"));
+    }
+
+    #[test]
+    fn block_scope_and_drop_release_guards() {
+        let src = concat!(
+            "fn ok(&self) {\n",
+            "    let req = {\n",
+            "        let rx = self.req_rx.lock().unwrap_or_else(|p| p.into_inner());\n",
+            "        rx.recv()\n",
+            "    };\n",
+            "    let mut slot = self.first_init_error.lock().unwrap_or_else(|p| p.into_inner());\n",
+            "    *slot = None;\n",
+            "    drop(slot);\n",
+            "    let live = self.live.read().unwrap_or_else(|p| p.into_inner());\n",
+            "    let _ = (req, live);\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        let src = concat!(
+            "fn ok(&self) -> usize {\n",
+            "    self.live.read().unwrap_or_else(|p| p.into_inner()).iter().count();\n",
+            "    let h = self.history.lock().unwrap();\n",
+            "    h.len()\n",
+            "}\n",
+        );
+        let d = run(src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn multiline_chain_resolves_receiver() {
+        let src = concat!(
+            "fn ok(&self) {\n",
+            "    let slot = shared\n",
+            "        .first_init_error\n",
+            "        .lock()\n",
+            "        .unwrap_or_else(|p| p.into_inner());\n",
+            "    drop(slot);\n",
+            "}\n",
+        );
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn non_serving_files_are_skipped() {
+        let files = vec![LexedFile::lex(
+            "src/runtime/mod.rs",
+            "rust/src/runtime/mod.rs",
+            "fn f(&self) { let a = self.history.lock().unwrap(); let b = self.live.read().unwrap(); let _ = (a, b); }\n",
+        )];
+        let mut d = Vec::new();
+        check(&files, &mut d);
+        assert!(d.is_empty());
+    }
+}

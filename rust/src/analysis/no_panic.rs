@@ -1,0 +1,195 @@
+//! `no_panic` — the §4.4.1 contract: the framework never crashes the
+//! host. On the crash-sensitive surface below, panicking constructs are
+//! forbidden outside test code; errors must be typed `Error` returns.
+//!
+//! Flagged: `.unwrap()`, `.expect(...)`, `panic!`, `unreachable!`,
+//! `todo!`, `unimplemented!`, and `)[<integer>]` (indexing a call
+//! result with a constant — an implicit bounds panic on data the
+//! caller did not validate). Not flagged: `.unwrap_or_else`,
+//! `.expect_err`, idents merely *containing* a token
+//! (`kernel_panic_point`), and plain local indexing like `b[0]` where
+//! the bounds are established by an adjacent check (the schema
+//! reader's documented idiom).
+
+use super::lexer::LexedFile;
+use super::{Diagnostic, Severity};
+
+/// Files the contract applies to (paths relative to `rust/`). The old
+/// grep gate covered only the first three; this is the full
+/// crash-sensitive surface: serving, registry hot-swap, flatbuffer
+/// reading, prepared execution, and the kernel invoke paths.
+pub const SURFACE: &[&str] = &[
+    "src/serving/mod.rs",
+    "src/serving/registry.rs",
+    "src/schema/reader.rs",
+    "src/interpreter/prepared.rs",
+    "src/ops/opt_ops/conv.rs",
+    "src/ops/opt_ops/fully_connected.rs",
+    "src/ops/opt_ops/gemm/mod.rs",
+    "src/ops/opt_ops/gemm/scalar.rs",
+    "src/ops/opt_ops/depthwise/mod.rs",
+    "src/ops/opt_ops/depthwise/scalar.rs",
+    "src/runtime/mod.rs",
+    "src/runtime/xla_kernel.rs",
+];
+
+const METHODS: &[&str] = &["unwrap", "expect"];
+const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+pub fn check(f: &LexedFile, diags: &mut Vec<Diagnostic>) {
+    if !SURFACE.contains(&f.rel_path.as_str()) {
+        return;
+    }
+    let text = f.scrubbed_nontest();
+    let ch: Vec<char> = text.chars().collect();
+    let n = ch.len();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let mut emit = |line: usize, msg: String| {
+        diags.push(Diagnostic {
+            file: f.display_path.clone(),
+            line,
+            check: "no_panic",
+            message: msg,
+            severity: Severity::Error,
+        });
+    };
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // `)[<integer>]` — indexing a call result with a constant.
+        if c == ')' && i + 1 < n && ch[i + 1] == '[' {
+            let mut j = i + 2;
+            while j < n && ch[j].is_whitespace() && ch[j] != '\n' {
+                j += 1;
+            }
+            let d0 = j;
+            while j < n && ch[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j > d0 {
+                let mut k = j;
+                while k < n && ch[k].is_whitespace() && ch[k] != '\n' {
+                    k += 1;
+                }
+                if k < n && ch[k] == ']' {
+                    emit(
+                        line,
+                        "indexing a call result with a constant (`)[N]`) can panic on \
+                         short input; use .get()/.first() and return a typed error"
+                            .to_string(),
+                    );
+                    i = k + 1;
+                    continue;
+                }
+            }
+        }
+        if is_ident(c) && (i == 0 || !is_ident(ch[i - 1])) {
+            let s = i;
+            let mut j = i;
+            while j < n && is_ident(ch[j]) {
+                j += 1;
+            }
+            let word: String = ch[s..j].iter().collect();
+            let prev_dot = s > 0 && ch[s - 1] == '.';
+            if prev_dot && METHODS.contains(&word.as_str()) {
+                emit(
+                    line,
+                    format!(
+                        ".{}() is forbidden on the no-panic surface; \
+                         return a typed Error instead",
+                        word
+                    ),
+                );
+            } else if MACROS.contains(&word.as_str()) && j < n && ch[j] == '!' {
+                emit(
+                    line,
+                    format!(
+                        "{}! is forbidden on the no-panic surface; \
+                         return a typed Error instead",
+                        word
+                    ),
+                );
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let f = LexedFile::lex(rel, &format!("rust/{}", rel), src);
+        let mut d = Vec::new();
+        check(&f, &mut d);
+        d
+    }
+
+    #[test]
+    fn flags_each_panicking_construct() {
+        let src = concat!(
+            "fn f() {\n",
+            "    a.unwrap();\n",
+            "    b.expect(\"m\");\n",
+            "    panic!(\"x\");\n",
+            "    unreachable!();\n",
+            "    todo!();\n",
+            "    unimplemented!();\n",
+            "    let x = g()[0];\n",
+            "}\n",
+        );
+        let d = run("src/serving/mod.rs", src);
+        assert_eq!(d.len(), 7, "{:?}", d);
+        let lines: Vec<usize> = d.iter().map(|d| d.line).collect();
+        assert_eq!(lines, vec![2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn ignores_lookalike_idents_and_variants() {
+        let src = concat!(
+            "fn f() {\n",
+            "    a.unwrap_or_else(|| 0);\n",
+            "    a.unwrap_or_default();\n",
+            "    b.expect_err(\"m\");\n",
+            "    kernel_panic_point();\n",
+            "    no_panic_here();\n",
+            "    let v = String::from_utf8_lossy(b);\n",
+            "    let b0 = b[0];\n", // plain local indexing: reader idiom
+            "}\n",
+        );
+        let d = run("src/serving/mod.rs", src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn off_surface_files_are_not_checked() {
+        let d = run("src/testutil/mod.rs", "fn f() { a.unwrap(); }\n");
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn test_code_and_strings_are_exempt() {
+        let src = concat!(
+            "fn f() { let m = \"do not .unwrap() this\"; }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { f().unwrap(); panic!(\"fine in tests\"); }\n",
+            "}\n",
+        );
+        let d = run("src/serving/mod.rs", src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+}

@@ -1,0 +1,198 @@
+//! `unsafe_confinement` — `unsafe` is a property of modules, not call
+//! sites. It is permitted only in the allowlisted SIMD arch modules and
+//! the documented buffer accessors, and every `unsafe` occurrence must
+//! be immediately preceded by (or share a line with) a safety
+//! justification: a `// SAFETY:` comment (the idiom for `unsafe`
+//! blocks and impls) or a `/// # Safety` doc section (the idiom for
+//! `unsafe fn`s, where the obligation belongs to the caller). The
+//! upward scan walks through comment-only and attribute-only lines (a
+//! safety paragraph may span several lines, and `#[target_feature]`
+//! may sit between it and the fn); a code line or a blank line stops
+//! it — "immediately preceded" means no unrelated material in between.
+
+use super::lexer::{LexedFile, LineKind};
+use super::{Diagnostic, Severity};
+
+/// Directory prefixes where `unsafe` is allowed (SIMD arch modules).
+pub const ALLOWED_PREFIXES: &[&str] =
+    &["src/ops/opt_ops/gemm/", "src/ops/opt_ops/depthwise/"];
+
+/// Individual files where `unsafe` is allowed: the documented buffer
+/// accessors, the Send/Sync impls of the shared prepared model, and the
+/// counting `GlobalAlloc` shim the allocation-accounting test installs.
+pub const ALLOWED_FILES: &[&str] = &[
+    "src/ops/mod.rs",
+    "src/interpreter/mod.rs",
+    "src/interpreter/prepared.rs",
+    "src/interpreter/shared.rs",
+    "tests/invoke_accounting.rs",
+];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn has_unsafe_token(line: &str) -> bool {
+    let ch: Vec<char> = line.chars().collect();
+    let pat: Vec<char> = "unsafe".chars().collect();
+    let n = ch.len();
+    if n < pat.len() {
+        return false;
+    }
+    for s in 0..=n - pat.len() {
+        if ch[s..s + pat.len()] == pat[..]
+            && (s == 0 || !is_ident(ch[s - 1]))
+            && (s + pat.len() == n || !is_ident(ch[s + pat.len()]))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+fn allowed(rel: &str) -> bool {
+    ALLOWED_FILES.contains(&rel) || ALLOWED_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+fn has_safety_marker(text: &str) -> bool {
+    text.contains("SAFETY:") || text.contains("# Safety")
+}
+
+/// True when `line` carries or is directly preceded by a safety
+/// justification (`// SAFETY:` or a `/// # Safety` doc section).
+fn safety_adjacent(f: &LexedFile, line: usize) -> bool {
+    if has_safety_marker(&f.comment_text(line)) {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        match f.line_kind(l) {
+            LineKind::CommentOnly | LineKind::AttrOnly => {
+                if has_safety_marker(&f.comment_text(l)) {
+                    return true;
+                }
+            }
+            LineKind::Code | LineKind::Blank => return false,
+        }
+    }
+    false
+}
+
+pub fn check(f: &LexedFile, diags: &mut Vec<Diagnostic>) {
+    let file_allowed = allowed(&f.rel_path);
+    for (idx, code) in f.code_lines.iter().enumerate() {
+        let line = idx + 1;
+        if f.is_test_line(line) || !has_unsafe_token(code) {
+            continue;
+        }
+        if !file_allowed {
+            diags.push(Diagnostic {
+                file: f.display_path.clone(),
+                line,
+                check: "unsafe_confinement",
+                message: format!(
+                    "`unsafe` is confined to the arch modules ({} and the documented \
+                     buffer accessors); {} is not allowlisted",
+                    ALLOWED_PREFIXES.join(", "),
+                    f.rel_path
+                ),
+                severity: Severity::Error,
+            });
+        } else if !safety_adjacent(f, line) {
+            diags.push(Diagnostic {
+                file: f.display_path.clone(),
+                line,
+                check: "unsafe_confinement",
+                message: "`unsafe` must be immediately preceded by a `// SAFETY:` \
+                          comment or a `/// # Safety` doc section stating the \
+                          obligation discharged"
+                    .to_string(),
+                severity: Severity::Error,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let f = LexedFile::lex(rel, &format!("rust/{}", rel), src);
+        let mut d = Vec::new();
+        check(&f, &mut d);
+        d
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_is_flagged() {
+        let d = run(
+            "src/serving/mod.rs",
+            "// SAFETY: even with a comment, the module is not allowlisted\nunsafe { x() }\n",
+        );
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("not allowlisted"));
+    }
+
+    #[test]
+    fn safety_comment_satisfies_the_rule() {
+        let src = concat!(
+            "// SAFETY: lane count checked by the dispatcher\n",
+            "#[target_feature(enable = \"avx2\")]\n",
+            "unsafe fn kernel() {}\n",
+            "\n",
+            "// SAFETY: pointer provenance spans\n",
+            "// two comment lines of justification\n",
+            "unsafe fn other() {}\n",
+        );
+        let d = run("src/ops/opt_ops/gemm/avx2.rs", src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn safety_doc_section_satisfies_the_rule() {
+        let src = concat!(
+            "/// Dot product over packed weights.\n",
+            "///\n",
+            "/// # Safety\n",
+            "/// Caller guarantees avx2 and the packed-layout bounds.\n",
+            "#[target_feature(enable = \"avx2\")]\n",
+            "unsafe fn dot(x: &[i8]) {}\n",
+        );
+        let d = run("src/ops/opt_ops/gemm/avx2.rs", src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn missing_safety_comment_is_flagged() {
+        let d = run("src/ops/opt_ops/gemm/avx2.rs", "unsafe fn kernel() {}\n");
+        assert_eq!(d.len(), 1, "{:?}", d);
+        assert!(d[0].message.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn blank_line_breaks_adjacency() {
+        let src = "// SAFETY: too far away\n\nunsafe fn kernel() {}\n";
+        let d = run("src/ops/opt_ops/gemm/avx2.rs", src);
+        assert_eq!(d.len(), 1, "{:?}", d);
+    }
+
+    #[test]
+    fn same_line_safety_and_ident_lookalikes() {
+        let src = concat!(
+            "unsafe impl Send for X {} // SAFETY: buffers are owned\n",
+            "fn notes() { let unsafe_count = 0; let _ = unsafe_count; }\n",
+            "fn words() { let s = \"unsafe in a string\"; let _ = s; }\n",
+        );
+        let d = run("src/ops/opt_ops/gemm/mod.rs", src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { unsafe { x() } }\n}\n";
+        let d = run("src/serving/mod.rs", src);
+        assert!(d.is_empty(), "{:?}", d);
+    }
+}

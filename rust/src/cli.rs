@@ -11,6 +11,7 @@
 //! tfmicro simulate <model.tmf> [--platform m4|dsp]
 //! tfmicro serve    <model.tmf> [--workers N] [--requests N] [--reload <model.tmf>]
 //! tfmicro cpu
+//! tfmicro lint     [--root DIR] [--json] [--deny-warnings]
 //! ```
 
 use crate::error::{Error, Result};
@@ -96,7 +97,7 @@ fn fill_random_input(interp: &mut MicroInterpreter, seed: u64) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu> <model.tmf> [flags]
+const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu|lint> <model.tmf> [flags]
   inspect   print model structure
   run       execute with random inputs (--kernels ref|opt, --iters N, --profile, --arena-kb N)
   mem       arena accounting, Table 2 style (--planner greedy|linear|auto, --kernels ref|opt)
@@ -105,7 +106,11 @@ const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu
   serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N,
             --max-respawns N, --deadline-ms N, --reload <model.tmf> to hot-swap
             a second model mid-run through the canary lifecycle)
-  cpu       detected CPU features + chosen kernel dispatch (no model needed)";
+  cpu       detected CPU features + chosen kernel dispatch (no model needed)
+  lint      self-hosted invariant checker over the crate's own sources
+            (--root DIR to lint another checkout, --json for one diagnostic
+            per line, --deny-warnings to fail on warnings too; no model
+            needed)";
 
 /// `tfmicro cpu`: field debugging for "why is this slow here" — what the
 /// runtime feature probes saw and which kernel tiers this process runs.
@@ -167,6 +172,43 @@ fn print_cpu_report() {
     );
 }
 
+/// `tfmicro lint`: run the invariant checks (see [`crate::analysis`])
+/// over a source tree — by default the tree this binary was built from,
+/// so `cargo run -- lint` in a checkout checks that checkout.
+fn run_lint_report(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        // Prefer the current directory when it looks like a checkout
+        // (an installed binary may outlive its build tree); fall back
+        // to the tree recorded at compile time.
+        None if std::path::Path::new("rust/src").is_dir() => std::path::PathBuf::from("."),
+        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+    };
+    let diags = crate::analysis::lint_root(&root).map_err(Error::Serving)?;
+    let json = args.has("json");
+    let errors = diags
+        .iter()
+        .filter(|d| d.severity == crate::analysis::Severity::Error)
+        .count();
+    let warnings = diags.len() - errors;
+    for d in &diags {
+        if json {
+            println!("{}", d.render_json());
+        } else {
+            println!("{}", d.render());
+        }
+    }
+    if errors > 0 || (args.has("deny-warnings") && warnings > 0) {
+        return Err(Error::Serving(format!(
+            "lint: {errors} error(s), {warnings} warning(s)"
+        )));
+    }
+    if !json {
+        println!("lint: clean ({warnings} warning(s))");
+    }
+    Ok(())
+}
+
 /// CLI entry; returns a process exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
     match dispatch(argv) {
@@ -187,6 +229,10 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     if cmd == "cpu" {
         print_cpu_report();
         return Ok(());
+    }
+    // `lint` inspects the source tree, not a model — no path required.
+    if cmd == "lint" {
+        return run_lint_report(&Args::parse(&argv[1..]));
     }
     let args = Args::parse(&argv[1..]);
     let model_path = args

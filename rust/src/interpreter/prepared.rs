@@ -157,6 +157,8 @@ pub struct PreparedModel {
 // by trait bound. Invoke-time writes go exclusively into the caller's
 // `&mut ExecState` buffer.
 unsafe impl Send for PreparedModel {}
+// SAFETY: same argument as Send above — post-build access through a
+// shared reference never mutates `persist`.
 unsafe impl Sync for PreparedModel {}
 
 impl Drop for PreparedModel {

@@ -22,7 +22,11 @@
 //! * an XLA/PJRT runtime that loads AOT-compiled JAX/Pallas kernels as the
 //!   "vendor optimized library" path ([`runtime`]),
 //! * and a small std-only serving layer used by the end-to-end examples
-//!   ([`serving`]).
+//!   ([`serving`]),
+//! * plus a self-hosted invariant checker (`tfmicro lint`) that
+//!   statically enforces the crate's no-panic / unsafe-confinement /
+//!   fault-point / lock-order contracts over its own sources
+//!   ([`analysis`]).
 //!
 //! ## Quickstart
 //!
@@ -40,6 +44,7 @@
 //! println!("scores = {:?}", out.as_i8().unwrap());
 //! ```
 
+pub mod analysis;
 pub mod arena;
 pub mod cli;
 pub mod error;

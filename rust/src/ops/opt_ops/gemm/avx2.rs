@@ -80,6 +80,10 @@ impl DotKernel for Avx2Dot {
 
 /// In-lane byte shuffle pairing k-step i16s per channel:
 /// [a0 a1 a2 a3 b0 b1 b2 b3] (i16) → [a0 b0 a1 b1 a2 b2 a3 b3].
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (all callers are
+/// `#[target_feature(enable = "avx2")]` kernels).
 #[inline(always)]
 unsafe fn weight_pair_mask() -> __m256i {
     _mm256_setr_epi8(
@@ -90,6 +94,10 @@ unsafe fn weight_pair_mask() -> __m256i {
 
 /// In-lane byte shuffle replicating input pairs: from a broadcast
 /// [x0 x1 x2 x3 ...] (i16) build low lane [x0 x1]×4, high lane [x2 x3]×4.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (all callers are
+/// `#[target_feature(enable = "avx2")]` kernels).
 #[inline(always)]
 unsafe fn input_pair_mask() -> __m256i {
     _mm256_setr_epi8(

@@ -154,6 +154,10 @@ impl DotKernel for VnniDot {
 /// [k0c0..k0c3 k1c0..k1c3 k2c0..k2c3 k3c0..k3c3] →
 /// [c0k0..c0k3 c1k0..c1k3 c2k0..c2k3 c3k0..c3k3], so each dword group
 /// holds one channel's four k-taps (the shape `vpdpbusd` reduces over).
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (all callers are
+/// `#[target_feature]` VNNI kernels, which imply it).
 #[inline(always)]
 unsafe fn tile_transpose_mask256() -> __m256i {
     _mm256_setr_epi8(
@@ -163,6 +167,10 @@ unsafe fn tile_transpose_mask256() -> __m256i {
 }
 
 /// xmm variant of [`tile_transpose_mask256`] for the 4-step remainder.
+///
+/// # Safety
+/// Caller must ensure SSSE3 is available (implied by the VNNI callers'
+/// `#[target_feature]` sets).
 #[inline(always)]
 unsafe fn tile_transpose_mask128() -> __m128i {
     _mm_setr_epi8(0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15)
@@ -170,6 +178,10 @@ unsafe fn tile_transpose_mask128() -> __m128i {
 
 /// In-lane shuffle replicating rebased input dwords: from a 64-bit
 /// broadcast, low lane = bytes 0..4 ×4, high lane = bytes 4..8 ×4.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (all callers are
+/// `#[target_feature]` VNNI kernels, which imply it).
 #[inline(always)]
 unsafe fn input_rep_mask() -> __m256i {
     _mm256_setr_epi8(

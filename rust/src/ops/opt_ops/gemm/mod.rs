@@ -785,6 +785,7 @@ fn gemm_body<D: DotKernel>(
 /// * `out` — written at `out[r * out_stride + oc]` for every
 ///   `r < rows`, `oc < out_c`; `out_stride` is normally `out_c` but lets
 ///   conv write into a larger NHWC row.
+// lint:alloc_free — the innermost hot loop of every conv/FC invoke.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_i8_packed(
     rows: usize,
@@ -805,6 +806,7 @@ pub fn gemm_i8_packed(
 /// once per **op invoke** via [`resolve_call_table`] and thread it
 /// through every call, so the per-row RwLock read + hash probe the old
 /// per-call lookup paid is gone from the hot loop.
+// lint:alloc_free — per-row call with the lock-free side table.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_i8_packed_with_table(
     rows: usize,

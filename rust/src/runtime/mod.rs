@@ -311,6 +311,7 @@ impl CompiledComputation {
     /// identical shape: the transfer overwrites the staged bytes in
     /// place, so the warm invoke path allocates nothing. Counts as one
     /// upload, exactly like [`stage_i8`](Self::stage_i8).
+    // lint:alloc_free — the warm offload path re-stages in place.
     pub fn restage_i8(&self, buf: &mut StagedBuffer, data: &[i8]) -> Result<()> {
         let StagedData::I8(held) = &mut buf.data else {
             return Err(Error::Xla(format!("restage {}: buffer is not i8", self.name)));
@@ -341,6 +342,7 @@ impl CompiledComputation {
     /// output buffer (cleared and refilled). With a warm buffer the
     /// whole call is allocation-free — the offload invoke path pairs
     /// this with [`restage_i8`](Self::restage_i8).
+    // lint:alloc_free — warm-buffer execution reuses the caller's Vec.
     pub fn execute_i8_into(&self, inputs: &[&StagedBuffer], out: &mut Vec<i8>) -> Result<()> {
         let (m, k, n) = match &self.program {
             Program::FcInt8 { m, k, n } => (*m, *k, *n),
@@ -377,13 +379,21 @@ impl CompiledComputation {
                 )));
             }
         }
+        // Dtypes were validated against `sig` above; a mismatch here
+        // still degrades to a typed error, never a crash (§4.4.1).
         let (StagedData::I8(a), StagedData::I8(w)) = (&a.data, &w.data) else {
-            unreachable!("dtype checked above");
+            return Err(Error::Xla(format!(
+                "execute {}: staged activation/weight dtype changed underfoot",
+                self.name
+            )));
         };
         let (StagedData::I32(bias), StagedData::I32(mult), StagedData::I32(shift)) =
             (&bias.data, &mult.data, &shift.data)
         else {
-            unreachable!("dtype checked above");
+            return Err(Error::Xla(format!(
+                "execute {}: staged bias/mult/shift dtype changed underfoot",
+                self.name
+            )));
         };
         // Deterministic fault point: an injected execute failure exercises
         // the offload-degradation path (no-op unless a plan is installed).

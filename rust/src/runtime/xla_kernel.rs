@@ -236,7 +236,9 @@ impl Kernel for XlaFcKernel {
             // refresh the invoke-time filter without re-staging. A fresh
             // interpreter build also re-arms a degraded op — populate just
             // re-verified the staged state, so offload gets another chance.
-            let st = guard.get_mut(&ctx.op_index).expect("verified Some above");
+            let Some(st) = guard.get_mut(&ctx.op_index) else {
+                return Err(ctx.fail_init("staged state vanished between probe and reuse"));
+            };
             st.weights_src = w_src;
             st.degraded.store(false, Ordering::Relaxed);
             return Ok(());

@@ -221,7 +221,14 @@ impl ModelRegistry {
         if m.inputs().is_empty() || m.outputs().is_empty() {
             return Err(self.reject_prepare(name, "model has no inputs or outputs".into()));
         }
-        let in_len = m.tensors()[m.inputs()[0] as usize].num_elements();
+        let in_len = match m.inputs().first().and_then(|&i| m.tensors().get(i as usize)) {
+            Some(t) => t.num_elements(),
+            None => {
+                return Err(
+                    self.reject_prepare(name, "model input tensor index out of range".into())
+                )
+            }
+        };
 
         // --- Canary ---------------------------------------------------
         // The candidate must be I/O-compatible with the live version:
@@ -463,7 +470,14 @@ where
         .live()
         .ok_or_else(|| Error::Serving("publish a model version before serving".into()))?;
     let m = initial.prepared.model();
-    let expected_in_len = m.tensors()[m.inputs()[0] as usize].num_elements();
+    // Publish validated the input signature, but serving must not trust
+    // that across versions: resolve defensively instead of indexing.
+    let expected_in_len = m
+        .inputs()
+        .first()
+        .and_then(|&i| m.tensors().get(i as usize))
+        .map(|t| t.num_elements())
+        .ok_or_else(|| Error::Serving("live model has no resolvable input tensor".into()))?;
     drop(initial);
 
     let shared = FleetShared::new(&cfg, expected_in_len);

@@ -37,18 +37,26 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to the System allocator — every method
+// forwards the caller's pointer/layout obligations unchanged; the only
+// added behavior is a relaxed atomic count, which allocates nothing and
+// touches no allocator state.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same contract as System.alloc, forwarded verbatim.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
+    // SAFETY: same contract as System.dealloc, forwarded verbatim.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
+    // SAFETY: same contract as System.alloc_zeroed, forwarded verbatim.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
+    // SAFETY: same contract as System.realloc, forwarded verbatim.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)

@@ -1,0 +1,294 @@
+//! Self-hosted lint gate: `cargo test` runs every `tfmicro lint` check
+//! over the crate's own sources, so the invariants in
+//! `tfmicro::analysis` are enforced by tier-1 with zero extra tooling.
+//! The fixture tests below additionally pin the CLI contract: for each
+//! check, a seeded violation in a throwaway tree makes `tfmicro lint`
+//! exit non-zero.
+
+use std::fs;
+use std::path::PathBuf;
+
+use tfmicro::analysis::{self, Severity};
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The gate: the crate's own sources produce zero findings — errors
+/// *and* warnings (the gate always denies warnings, so unused
+/// `lint:allow` directives cannot accumulate).
+#[test]
+fn crate_sources_pass_every_check() {
+    let diags = analysis::lint_root(&crate_root()).expect("collect crate sources");
+    assert!(
+        diags.is_empty(),
+        "lint findings in crate sources:\n{}",
+        diags.iter().map(|d| d.render()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+/// A throwaway `<tmp>/rust/{src,tests}` tree the CLI can lint.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(tag: &str) -> Fixture {
+        let root = std::env::temp_dir()
+            .join(format!("tfmicro_lint_gate_{}_{}", std::process::id(), tag));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(root.join("rust/src")).expect("create fixture tree");
+        Fixture { root }
+    }
+
+    fn write(&self, rel: &str, src: &str) {
+        let p = self.root.join("rust").join(rel);
+        fs::create_dir_all(p.parent().expect("rel path has a parent"))
+            .expect("create fixture dir");
+        fs::write(p, src).expect("write fixture file");
+    }
+
+    /// Exit code of `tfmicro lint --root <fixture> <extra..>`.
+    fn lint_exit(&self, extra: &[&str]) -> i32 {
+        let mut argv = vec![
+            "lint".to_string(),
+            "--root".to_string(),
+            self.root.to_string_lossy().into_owned(),
+        ];
+        argv.extend(extra.iter().map(|s| s.to_string()));
+        tfmicro::cli::main_with_args(argv)
+    }
+
+    fn diags(&self) -> Vec<analysis::Diagnostic> {
+        analysis::lint_root(&self.root).expect("lint fixture tree")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn seeded_no_panic_violation_fails_the_cli() {
+    let fx = Fixture::new("no_panic");
+    fx.write(
+        "src/serving/mod.rs",
+        "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n",
+    );
+    assert_ne!(fx.lint_exit(&[]), 0, "lint must fail on a surface .unwrap()");
+    let d = fx.diags();
+    assert!(
+        d.iter().any(|d| d.check == "no_panic" && d.line == 2),
+        "{:?}",
+        d
+    );
+}
+
+#[test]
+fn seeded_unsafe_violation_fails_the_cli() {
+    let fx = Fixture::new("unsafe");
+    fx.write(
+        "src/serving/mod.rs",
+        "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    );
+    assert_ne!(fx.lint_exit(&[]), 0, "lint must fail on unlisted unsafe");
+    let d = fx.diags();
+    assert!(
+        d.iter().any(|d| d.check == "unsafe_confinement"),
+        "{:?}",
+        d
+    );
+}
+
+#[test]
+fn seeded_alloc_violation_fails_the_cli() {
+    let fx = Fixture::new("alloc");
+    fx.write(
+        "src/runtime/mod.rs",
+        concat!(
+            "// lint:alloc_free\n",
+            "pub fn warm() -> Vec<u8> {\n",
+            "    Vec::new()\n",
+            "}\n",
+        ),
+    );
+    assert_ne!(fx.lint_exit(&[]), 0, "lint must fail on Vec::new in alloc_free fn");
+    let d = fx.diags();
+    assert!(d.iter().any(|d| d.check == "alloc_discipline"), "{:?}", d);
+}
+
+/// Satellite (d): a deliberately misspelled point name at a call site
+/// (`kernel_panik`) fails the gate even though every declared point is
+/// exercised.
+#[test]
+fn seeded_fault_point_typo_fails_the_cli() {
+    let fx = Fixture::new("fault_typo");
+    fx.write(
+        "src/faults.rs",
+        concat!(
+            "pub const KERNEL_PANIC: &str = \"kernel_panic\";\n",
+            "pub fn kernel_panic_point(op: &str) {\n",
+            "    if should_fire(KERNEL_PANIC, Some(op)) {}\n",
+            "}\n",
+            "fn should_fire(_p: &str, _op: Option<&str>) -> bool { false }\n",
+        ),
+    );
+    fx.write(
+        "tests/serving_faults.rs",
+        concat!(
+            "#[test]\n",
+            "fn exercises_the_point() {\n",
+            "    let plan = ();\n",
+            "    let _ = \"kernel_panic\";\n",
+            "    fail_at(\"kernel_panik\", 1);\n",
+            "}\n",
+            "fn fail_at(_p: &str, _n: u32) {}\n",
+        ),
+    );
+    assert_ne!(fx.lint_exit(&[]), 0, "lint must fail on the typo'd point name");
+    let d = fx.diags();
+    assert!(
+        d.iter()
+            .any(|d| d.check == "fault_points" && d.message.contains("kernel_panik")),
+        "{:?}",
+        d
+    );
+}
+
+/// The other half of the fault-point contract: declaring a new point
+/// without exercising it in `tests/serving_faults.rs` fails.
+#[test]
+fn seeded_unexercised_fault_point_fails_the_cli() {
+    let fx = Fixture::new("fault_uncovered");
+    fx.write(
+        "src/faults.rs",
+        concat!(
+            "pub const KERNEL_PANIC: &str = \"kernel_panic\";\n",
+            "pub const NEW_POINT: &str = \"new_point\";\n",
+        ),
+    );
+    fx.write(
+        "tests/serving_faults.rs",
+        "fn t() { let _ = KERNEL_PANIC; }\n",
+    );
+    assert_ne!(fx.lint_exit(&[]), 0, "lint must fail on an untested point");
+    let d = fx.diags();
+    assert!(
+        d.iter()
+            .any(|d| d.check == "fault_points" && d.message.contains("NEW_POINT")),
+        "{:?}",
+        d
+    );
+}
+
+#[test]
+fn seeded_lock_inversion_fails_the_cli() {
+    let fx = Fixture::new("lock_order");
+    fx.write(
+        "src/serving/mod.rs",
+        concat!(
+            "pub fn promote(&self) {\n",
+            "    let h = self.history.lock();\n",
+            "    let l = self.live.lock();\n",
+            "    let _ = (h, l);\n",
+            "}\n",
+        ),
+    );
+    assert_ne!(fx.lint_exit(&[]), 0, "lint must fail on history-before-live");
+    let d = fx.diags();
+    assert!(d.iter().any(|d| d.check == "lock_order"), "{:?}", d);
+}
+
+/// `lint:allow` with a reason suppresses the finding; the run is clean.
+#[test]
+fn allow_directive_suppresses_a_finding() {
+    let fx = Fixture::new("allow_used");
+    fx.write(
+        "src/serving/mod.rs",
+        concat!(
+            "pub fn f(x: Option<u8>) -> u8 {\n",
+            "    // lint:allow(no_panic): fixture exercising the escape hatch\n",
+            "    x.unwrap()\n",
+            "}\n",
+        ),
+    );
+    assert_eq!(fx.lint_exit(&[]), 0, "allowed finding must not fail the lint");
+    assert!(fx.diags().is_empty(), "{:?}", fx.diags());
+}
+
+/// An unused allow is a warning: clean by default, fatal under
+/// `--deny-warnings` (the mode ci.sh and the self-gate run in).
+#[test]
+fn unused_allow_warns_and_deny_warnings_promotes_it() {
+    let fx = Fixture::new("allow_unused");
+    fx.write(
+        "src/serving/mod.rs",
+        "// lint:allow(no_panic): nothing here actually panics\npub fn f() {}\n",
+    );
+    assert_eq!(fx.lint_exit(&[]), 0);
+    assert_ne!(fx.lint_exit(&["--deny-warnings"]), 0);
+    let d = fx.diags();
+    assert!(
+        d.iter().any(|d| d.severity == Severity::Warning
+            && d.message.contains("unused lint:allow")),
+        "{:?}",
+        d
+    );
+}
+
+/// Satellite (f): `--json` emits one self-contained JSON object per
+/// diagnostic line (shape pinned here; ci.sh archives this stream).
+#[test]
+fn json_rendering_is_one_object_per_line() {
+    let fx = Fixture::new("json");
+    fx.write(
+        "src/serving/mod.rs",
+        "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n",
+    );
+    assert_ne!(fx.lint_exit(&["--json"]), 0, "--json still fails on errors");
+    let d = fx.diags();
+    assert!(!d.is_empty());
+    for diag in &d {
+        let j = diag.render_json();
+        assert!(!j.contains('\n'), "one line per diagnostic: {}", j);
+        assert!(j.starts_with("{\"file\":\""), "{}", j);
+        assert!(j.contains("\"line\":"), "{}", j);
+        assert!(j.contains("\"check\":\""), "{}", j);
+        assert!(j.contains("\"severity\":\""), "{}", j);
+        assert!(j.ends_with("\"}"), "{}", j);
+    }
+}
+
+/// Satellite (c), integration form: constructs the old grep gate's
+/// known blind spots — `unwrap` in strings and comments, code below a
+/// *second* `#[cfg(test)]` module, panics inside test modules — and
+/// asserts the lexer-based gate stays clean on all of them.
+#[test]
+fn grep_gate_false_positives_are_clean() {
+    let fx = Fixture::new("grep_blind_spots");
+    fx.write(
+        "src/serving/mod.rs",
+        concat!(
+            "pub fn doc() -> &'static str {\n",
+            "    // a comment saying .unwrap() is forbidden here\n",
+            "    /* block comment: panic! is also forbidden */\n",
+            "    \"string mentioning x.unwrap() and panic!\"\n",
+            "}\n",
+            "#[cfg(test)]\n",
+            "mod tests_a {\n",
+            "    fn t() { None::<u8>.unwrap(); }\n",
+            "}\n",
+            "pub fn between() -> u8 { 7 }\n",
+            "#[cfg(test)]\n",
+            "mod tests_b {\n",
+            "    fn t() { panic!(\"fine in tests\"); }\n",
+            "}\n",
+            "pub fn raw() -> &'static str {\n",
+            "    r#\"raw string with \"quotes\" and .unwrap()\"#\n",
+            "}\n",
+        ),
+    );
+    assert_eq!(fx.lint_exit(&["--deny-warnings"]), 0, "{:?}", fx.diags());
+}
