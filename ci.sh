@@ -21,6 +21,15 @@ if [[ "${1:-}" == "--bench" ]]; then
     fi
     echo "== cargo bench --bench bench_kernels =="
     cargo bench --bench bench_kernels
+    # Serving bench: batched-coalescing latency/throughput columns. The
+    # synthetic-model batch sweep always runs (no artifacts needed) and
+    # archives BENCH_serving.json next to BENCH_kernels.json; no gate
+    # consumes it yet — it is the trajectory record for the batching path.
+    echo "== cargo bench --bench bench_serving =="
+    cargo bench --bench bench_serving
+    if [[ -f BENCH_serving.json ]]; then
+        echo "  serving bench archived: BENCH_serving.json"
+    fi
     if [[ ! -f BENCH_baseline.json ]]; then
         echo "warning: no BENCH_baseline.json; skipping regression check." >&2
         echo "         To seed the trajectory gate: cp BENCH_kernels.json BENCH_baseline.json and commit it." >&2
@@ -129,6 +138,7 @@ else
     }
     # Keep this list in sync with SURFACE in rust/src/analysis/no_panic.rs.
     no_panic_gate rust/src/serving/mod.rs
+    no_panic_gate rust/src/serving/batch.rs
     no_panic_gate rust/src/serving/registry.rs
     no_panic_gate rust/src/schema/reader.rs
     no_panic_gate rust/src/interpreter/prepared.rs

@@ -45,7 +45,7 @@ fn main() {
                     &model,
                     &resolver,
                     arena.as_mut_slice(),
-                    Options { planner },
+                    Options { planner, ..Default::default() },
                 )
                 .unwrap();
                 black_box(interp.op_count());

@@ -1,17 +1,128 @@
 //! **Serving scalability**: throughput/latency of the end-to-end driver vs
 //! worker count (the §4.6 threading model: one interpreter + arena per
 //! worker, zero shared mutable state — throughput should scale until the
-//! cores run out).
+//! cores run out), plus the request-coalescing tradeoff: per-request
+//! latency vs batched throughput across `max_batch` sizes, archived to
+//! `BENCH_serving.json` for the CI trajectory record.
 
+use std::time::Duration;
 use tfmicro::faults::{self, FaultPlan};
 use tfmicro::ops::OpResolver;
-use tfmicro::schema::Model;
+use tfmicro::schema::format::Activation;
+use tfmicro::schema::writer::{fully_connected_options, softmax_options};
+use tfmicro::schema::{BuiltinOp, Model, ModelBuilder};
 use tfmicro::serving::{make_requests, run_closed_loop, ServingConfig};
+use tfmicro::tensor::{DType, QuantParams};
 use tfmicro::testutil::Rng;
 
+/// Builder-made hotword-like FC stack (392→32→16→4 → softmax): the
+/// batched sweep must run without `artifacts/` so the JSON record exists
+/// on every machine.
+fn synthetic_hotword() -> Model {
+    let q = |scale: f32, zp: i32| QuantParams::per_tensor(scale, zp);
+    let mut rng = Rng::seeded(0x4077);
+    let mut b = ModelBuilder::new("bench-serving-hotword-like");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 392], None, q(0.5, 2));
+    let mut prev = t_in;
+    let mut prev_dim = 392usize;
+    for (i, (out_dim, act)) in
+        [(32usize, Activation::Relu), (16, Activation::Relu), (4, Activation::None)]
+            .into_iter()
+            .enumerate()
+    {
+        let mut w = vec![0i8; out_dim * prev_dim];
+        rng.fill_i8(&mut w);
+        let wbuf = b.add_buffer(&w.iter().map(|&v| v as u8).collect::<Vec<_>>());
+        let t_w = b.add_quant_tensor(
+            &format!("w{i}"),
+            DType::I8,
+            &[out_dim as i32, prev_dim as i32],
+            Some(wbuf),
+            q(0.004, 0),
+        );
+        let bbuf = b.add_buffer(
+            &(0..out_dim).flat_map(|_| rng.range_i32(-500, 500).to_le_bytes()).collect::<Vec<_>>(),
+        );
+        let t_b = b.add_tensor(&format!("b{i}"), DType::I32, &[out_dim as i32], Some(bbuf));
+        let t_out =
+            b.add_quant_tensor(&format!("fc{i}"), DType::I8, &[1, out_dim as i32], None, q(1.0, -3));
+        b.add_op(BuiltinOp::FullyConnected, &[prev, t_w, t_b], &[t_out], fully_connected_options(act));
+        prev = t_out;
+        prev_dim = out_dim;
+    }
+    let t_sm = b.add_quant_tensor("scores", DType::I8, &[1, 4], None, q(1.0 / 256.0, -128));
+    b.add_op(BuiltinOp::Softmax, &[prev], &[t_sm], softmax_options(1.0));
+    b.set_io(&[t_in], &[t_sm]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+/// Request coalescing: the same closed-loop workload at `max_batch` ∈
+/// {1, 2, 4, 8} under a latency-bounded window. Throughput should rise
+/// with the batch (per-weight-load amortization in `gemm_i8_packed`)
+/// while per-request percentiles absorb the window wait — both columns
+/// are the point, so both go into `BENCH_serving.json`.
+fn batched_sweep(resolver: &OpResolver) {
+    let model = synthetic_hotword();
+    let in_len = 392usize;
+    let out_len = 4usize;
+    const N: usize = 1024;
+
+    println!("== Request coalescing: latency vs throughput across batch sizes ==");
+    println!("   (synthetic hotword-like, 2 workers, {N} requests, 2 ms window)");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>12}", "batch", "req/s", "p50", "p95", "p99");
+    let mut rows: Vec<String> = Vec::new();
+    for batch in [1usize, 2, 4, 8] {
+        let mut rng = Rng::seeded(42);
+        let requests = make_requests(N, |_| {
+            let mut v = vec![0i8; in_len];
+            rng.fill_i8(&mut v);
+            v
+        });
+        let cfg = ServingConfig {
+            workers: 2,
+            queue_depth: 64,
+            arena_bytes: 64 * 1024,
+            max_batch: batch,
+            batch_window: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let report = run_closed_loop(&model, resolver, cfg, requests, out_len).unwrap();
+        println!(
+            "{:>8} {:>12.1} {:>12.2?} {:>12.2?} {:>12.2?}",
+            batch,
+            report.throughput_rps,
+            report.latency_p50,
+            report.latency_p95,
+            report.latency_p99,
+        );
+        rows.push(format!(
+            "    {{\"batch\": {}, \"completed\": {}, \"throughput_rps\": {:.1}, \
+             \"p50_ns\": {}, \"p95_ns\": {}, \"p99_ns\": {}}}",
+            batch,
+            report.completed,
+            report.throughput_rps,
+            report.latency_p50.as_nanos(),
+            report.latency_p95.as_nanos(),
+            report.latency_p99.as_nanos(),
+        ));
+    }
+    let json = format!(
+        "{{\n  \"model\": \"synthetic-hotword-like\",\n  \"requests\": {N},\n  \"workers\": 2,\n  \"cases\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serving.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
+    batched_sweep(&OpResolver::with_optimized_ops());
+    println!();
+
     let Ok(model) = Model::from_file("artifacts/vww.tmf") else {
-        eprintln!("SKIP: run `make artifacts`");
+        eprintln!("SKIP further sections: run `make artifacts`");
         return;
     };
     let resolver = OpResolver::with_optimized_ops();

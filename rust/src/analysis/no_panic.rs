@@ -20,6 +20,7 @@ use super::{Diagnostic, Severity};
 /// reading, prepared execution, and the kernel invoke paths.
 pub const SURFACE: &[&str] = &[
     "src/serving/mod.rs",
+    "src/serving/batch.rs",
     "src/serving/registry.rs",
     "src/schema/reader.rs",
     "src/interpreter/prepared.rs",

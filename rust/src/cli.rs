@@ -297,7 +297,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
                 &model,
                 &resolver,
                 arena.as_mut_slice(),
-                Options { planner },
+                Options { planner, ..Default::default() },
             )?;
             let u = interp.arena_usage();
             println!("model: {}", model.description());

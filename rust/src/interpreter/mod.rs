@@ -59,10 +59,24 @@ pub enum PlannerChoice {
 }
 
 /// Interpreter construction options.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct Options {
     /// Memory-planning strategy.
     pub planner: PlannerChoice,
+    /// Largest batch a [`PreparedModel`] built with these options can
+    /// serve through [`PreparedModel::invoke_batched`]. The activation /
+    /// scratch plan is laid out once per batch size `m ∈ 1..=max_batch`
+    /// (weights, folded biases, and backend side tables are batch-agnostic
+    /// and shared), and `ExecState` buffers are sized for the largest
+    /// layout. 1 (the default) keeps the classic single-request layout;
+    /// `MicroInterpreter` ignores this field and always runs at batch 1.
+    pub max_batch: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { planner: PlannerChoice::default(), max_batch: 1 }
+    }
 }
 
 /// Observer of per-op invoke events (implemented by the profiler; the

@@ -115,6 +115,17 @@ impl ExecState {
     }
 }
 
+/// Activation/scratch layout planned for one batch size `m > 1`: every
+/// activation tensor and scratch buffer holds `m` contiguous per-request
+/// lanes, so sizes (and therefore planner placements) scale by `m` while
+/// lifetimes are unchanged. Weights, folded biases, and backend side
+/// tables are batch-agnostic and shared across all layouts.
+struct BatchLayout {
+    locs: Vec<DataLoc>,
+    op_scratch: Vec<Vec<(usize, usize)>>,
+    exec_len: usize,
+}
+
 /// The shared immutable product of prepare → plan → populate, built once
 /// per model version and shared across workers behind `Arc`.
 ///
@@ -124,6 +135,11 @@ impl ExecState {
 /// a buffer owned here (shared, charged once) while the planned
 /// activation/scratch/variable region becomes a per-worker
 /// [`ExecState`] layout.
+///
+/// With [`Options::max_batch`] > 1 the build additionally lays out the
+/// plan once per batch size `m ∈ 2..=max_batch` (see [`BatchLayout`]);
+/// [`PreparedModel::invoke_batched`] then runs `m` requests through one
+/// op-loop pass, bit-exact against `m` sequential single invokes.
 pub struct PreparedModel {
     model: Arc<Model>,
     kernels: Vec<Arc<dyn Kernel>>,
@@ -140,8 +156,17 @@ pub struct PreparedModel {
     /// Tensor locations: `Const` into model data, `Arena` into the
     /// ExecState buffer (activations at plan offsets, variables after).
     locs: Vec<DataLoc>,
-    /// Required ExecState buffer length (plan region + variables).
+    /// Required ExecState buffer length (plan region + variables) for
+    /// the single-request (m = 1) layout.
     exec_len: usize,
+    /// Layouts for m ∈ 2..=max_batch (index `m - 2`); empty when built
+    /// with `max_batch` = 1.
+    batched: Vec<BatchLayout>,
+    /// Largest batch [`PreparedModel::invoke_batched`] accepts.
+    max_batch: usize,
+    /// Largest exec_len across all layouts (the ExecState allocation
+    /// size, so one state can serve any batch up to `max_batch`).
+    max_exec_len: usize,
     /// Variable tensors: (tensor index, exec offset, len, zero byte).
     variables: Vec<(usize, usize, usize, u8)>,
     detail: ArenaUsageDetail,
@@ -200,6 +225,12 @@ impl PreparedModel {
     /// Full build: validate → resolve → prepare → plan → populate.
     pub fn build(model: Arc<Model>, resolver: &OpResolver, options: Options) -> Result<Self> {
         crate::schema::validate::validate(&model)?;
+        let max_batch = options.max_batch.max(1);
+        if max_batch > 1 && options.planner == PlannerChoice::Offline {
+            return Err(Error::PlanFailed(
+                "offline plans describe the single-request layout; max_batch > 1 needs an online planner".into(),
+            ));
+        }
         let owner = next_owner_token();
         let n_tensors = model.tensors().len();
         let n_ops = model.operators().len();
@@ -242,6 +273,11 @@ impl PreparedModel {
             } else if t.is_variable {
                 variable_indices.push(ti);
             }
+        }
+        if max_batch > 1 && !variable_indices.is_empty() {
+            return Err(Error::PlanFailed(
+                "models with variable tensors carry cross-invoke state per request and cannot be batched".into(),
+            ));
         }
 
         // --- prepare phase ------------------------------------------
@@ -348,6 +384,47 @@ impl PreparedModel {
             variables.push((ti, off, len, zero));
         }
 
+        // --- batched layouts (m ∈ 2..=max_batch) ---------------------
+        // Identical lifetimes, sizes scaled by m: every activation
+        // tensor and scratch buffer gains m contiguous per-request
+        // lanes. The offline planner was rejected above (its offsets
+        // assume m = 1); an Auto model's offline plan likewise only
+        // covers the m = 1 layout, so batched layouts always come from
+        // an online planner.
+        let mut batched = Vec::with_capacity(max_batch.saturating_sub(1));
+        let mut max_exec_len = exec_len;
+        for m in 2..=max_batch {
+            let mut requests_m: Vec<BufferRequest> = requests.clone();
+            for r in &mut requests_m {
+                r.size *= m;
+            }
+            let plan_m = match options.planner {
+                PlannerChoice::Linear => LinearPlanner.plan(&requests_m, DEFAULT_ALIGN)?,
+                _ => GreedyPlanner.plan(&requests_m, DEFAULT_ALIGN)?,
+            };
+            debug_assert!(crate::planner::verify_plan(&requests_m, &plan_m).is_ok());
+            let mut locs_m = locs.clone();
+            for (k, &ti) in info.tensor_indices.iter().enumerate() {
+                locs_m[ti] = DataLoc::Arena {
+                    off: plan_m.offsets[k],
+                    len: model.tensors()[ti].num_bytes() * m,
+                };
+            }
+            let mut op_scratch_m: Vec<Vec<(usize, usize)>> = Vec::with_capacity(n_ops);
+            for idxs in &scratch_req_index {
+                op_scratch_m.push(
+                    idxs.iter().map(|&ri| (plan_m.offsets[ri], requests_m[ri].size)).collect(),
+                );
+            }
+            let exec_len_m = align_up(plan_m.arena_size, DEFAULT_ALIGN);
+            max_exec_len = max_exec_len.max(exec_len_m);
+            batched.push(BatchLayout {
+                locs: locs_m,
+                op_scratch: op_scratch_m,
+                exec_len: exec_len_m,
+            });
+        }
+
         let pm = PreparedModel {
             model,
             kernels,
@@ -358,6 +435,9 @@ impl PreparedModel {
             op_scratch,
             locs,
             exec_len,
+            batched,
+            max_batch,
+            max_exec_len,
             variables,
             detail,
             external_kernel,
@@ -395,10 +475,12 @@ impl PreparedModel {
         Ok(pm)
     }
 
-    /// Create a fresh per-worker execution state: one zeroed buffer,
-    /// variables reset to their zero representation, no degraded ops.
+    /// Create a fresh per-worker execution state: one zeroed buffer
+    /// (sized for the largest batch layout, so any state can serve any
+    /// batch up to `max_batch`), variables reset to their zero
+    /// representation, no degraded ops.
     pub fn exec_state(&self) -> ExecState {
-        let mut buf = AlignedBuf::zeroed(self.exec_len);
+        let mut buf = AlignedBuf::zeroed(self.max_exec_len);
         {
             let bytes = buf.slice_mut();
             for &(_, off, len, zero) in &self.variables {
@@ -426,12 +508,44 @@ impl PreparedModel {
             .ok_or_else(|| Error::InvalidTensor(format!("{what} {i} out of range")))
     }
 
+    /// The layout (tensor locations, scratch table, exec length) planned
+    /// for batch size `m`.
+    fn layout(&self, m: usize) -> Result<(&[DataLoc], &[Vec<(usize, usize)>], usize)> {
+        match m {
+            0 => Err(Error::InvalidTensor("batch size must be at least 1".into())),
+            1 => Ok((&self.locs, &self.op_scratch, self.exec_len)),
+            _ => {
+                let l = self.batched.get(m - 2).ok_or_else(|| {
+                    Error::InvalidTensor(format!(
+                        "batch {m} exceeds max_batch {} this model was built with",
+                        self.max_batch
+                    ))
+                })?;
+                Ok((&l.locs, &l.op_scratch, l.exec_len))
+            }
+        }
+    }
+
     /// Mutable view of graph input `i` inside `es` (populate before
     /// [`PreparedModel::invoke`]).
     pub fn input_mut<'s>(&'s self, es: &'s mut ExecState, i: usize) -> Result<TensorViewMut<'s>> {
+        self.input_mut_batched(es, i, 1)
+    }
+
+    /// Mutable view of graph input `i` laid out for a batch of `m`
+    /// requests: `m` contiguous lanes, lane `b` at element range
+    /// `[b·n, (b+1)·n)` where `n` is the tensor's single-request element
+    /// count. Populate all lanes before [`PreparedModel::invoke_batched`].
+    pub fn input_mut_batched<'s>(
+        &'s self,
+        es: &'s mut ExecState,
+        i: usize,
+        m: usize,
+    ) -> Result<TensorViewMut<'s>> {
+        let (locs, _, _) = self.layout(m)?;
         let ti = self.graph_tensor(self.model.inputs(), i, "input")?;
         let meta = &self.model.tensors()[ti];
-        match self.locs[ti] {
+        match locs[ti] {
             DataLoc::Const { .. } => Err(Error::InvalidTensor("input is constant".into())),
             DataLoc::Arena { off, len } => {
                 let bytes = &mut es.buf.slice_mut()[off..off + len];
@@ -442,9 +556,22 @@ impl PreparedModel {
 
     /// Read-only view of graph output `i` inside `es`.
     pub fn output<'s>(&'s self, es: &'s ExecState, i: usize) -> Result<TensorView<'s>> {
+        self.output_batched(es, i, 1)
+    }
+
+    /// Read-only view of graph output `i` for a batch of `m` requests
+    /// (lane layout as in [`PreparedModel::input_mut_batched`]). Valid
+    /// after an [`PreparedModel::invoke_batched`] of the same `m`.
+    pub fn output_batched<'s>(
+        &'s self,
+        es: &'s ExecState,
+        i: usize,
+        m: usize,
+    ) -> Result<TensorView<'s>> {
+        let (locs, _, _) = self.layout(m)?;
         let ti = self.graph_tensor(self.model.outputs(), i, "output")?;
         let meta = &self.model.tensors()[ti];
-        let bytes = match self.locs[ti] {
+        let bytes = match locs[ti] {
             DataLoc::Const { off, len } => &self.model.data()[off..off + len],
             DataLoc::Arena { off, len } => &es.buf.slice()[off..off + len],
         };
@@ -456,6 +583,23 @@ impl PreparedModel {
     /// concurrently through the same `Arc<PreparedModel>` as long as
     /// each owns its `ExecState` (§4.6).
     pub fn invoke(&self, es: &mut ExecState) -> Result<()> {
+        self.invoke_inner(es, 1)
+    }
+
+    /// Run `m` requests through one pass over the op list. Inputs must
+    /// be populated for all `m` lanes via
+    /// [`PreparedModel::input_mut_batched`]; outputs scatter from
+    /// [`PreparedModel::output_batched`]. Bit-exact against `m`
+    /// sequential [`PreparedModel::invoke`] calls: kernels visit the
+    /// per-request lanes in order with unchanged arithmetic, only the
+    /// per-weight-load amortization changes. `m` must be within the
+    /// `max_batch` this model was built with.
+    pub fn invoke_batched(&self, es: &mut ExecState, m: usize) -> Result<()> {
+        self.invoke_inner(es, m)
+    }
+
+    fn invoke_inner(&self, es: &mut ExecState, m: usize) -> Result<()> {
+        let (locs, op_scratch, exec_len) = self.layout(m)?;
         // Same deterministic fault points as MicroInterpreter::invoke,
         // so the serving supervision tests drive both paths identically.
         if let Some(e) = crate::faults::arena_exhaustion_point() {
@@ -468,17 +612,18 @@ impl PreparedModel {
                 i,
                 op,
                 self.model.tensors(),
-                &self.locs,
+                locs,
                 self.model.data(),
                 base,
-                self.exec_len,
-                &self.op_scratch[i],
+                exec_len,
+                &op_scratch[i],
                 &self.op_persistent[i],
                 &self.op_data[i],
                 self.owner,
             )
             .with_persistent_region(self.persist.base_ptr(), self.persist_used)
-            .with_degrade_flag(&es.degraded[i]);
+            .with_degrade_flag(&es.degraded[i])
+            .with_batch(m);
             self.kernels[i].invoke(&ctx)?;
         }
         es.invocations += 1;
@@ -496,9 +641,10 @@ impl PreparedModel {
     }
 
     /// Bytes each [`ExecState`] allocates (activations + scratch +
-    /// variables). The O(workers) term of fleet memory.
+    /// variables, sized for the largest batch layout). The O(workers)
+    /// term of fleet memory.
     pub fn exec_bytes(&self) -> usize {
-        self.exec_len
+        self.max_exec_len
     }
 
     /// Table-2-style usage, counting shared bytes once and one worker's
@@ -511,9 +657,9 @@ impl PreparedModel {
         ArenaUsage {
             persistent,
             kernel_buffers: self.persist_used + self.external_kernel,
-            nonpersistent: self.exec_len,
-            total: persistent + self.exec_len,
-            capacity: persistent + self.exec_len,
+            nonpersistent: self.max_exec_len,
+            total: persistent + self.max_exec_len,
+            capacity: persistent + self.max_exec_len,
         }
     }
 
@@ -525,6 +671,12 @@ impl PreparedModel {
     /// Number of operations in the execution list.
     pub fn op_count(&self) -> usize {
         self.kernels.len()
+    }
+
+    /// Largest batch [`PreparedModel::invoke_batched`] accepts (the
+    /// [`Options::max_batch`] this model was built with; 1 by default).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
     }
 
     /// The loaded model.
@@ -601,5 +753,62 @@ mod tests {
         let _states: Vec<ExecState> = (0..8).map(|_| pm.exec_state()).collect();
         assert_eq!(pm.shared_resident_bytes(), before);
         assert!(pm.exec_bytes() > 0);
+    }
+
+    #[test]
+    fn batched_invoke_matches_sequential_invokes() {
+        let resolver = OpResolver::with_optimized_ops();
+        let pm = PreparedModel::build(
+            Arc::new(tiny_fc_model()),
+            &resolver,
+            Options { max_batch: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(pm.max_batch(), 4);
+        let lanes: [[i8; 4]; 3] = [[1, 2, 3, 4], [-4, 0, 7, 1], [5, 5, 5, 5]];
+
+        // Sequential baseline through the same model.
+        let mut es = pm.exec_state();
+        let mut want = Vec::new();
+        for lane in &lanes {
+            pm.input_mut(&mut es, 0).unwrap().copy_from_i8(lane).unwrap();
+            pm.invoke(&mut es).unwrap();
+            want.extend_from_slice(pm.output(&es, 0).unwrap().as_i8().unwrap());
+        }
+
+        // One batched invoke over the same three lanes.
+        let mut es_b = pm.exec_state();
+        let flat: Vec<i8> = lanes.iter().flatten().copied().collect();
+        pm.input_mut_batched(&mut es_b, 0, 3).unwrap().copy_from_i8(&flat).unwrap();
+        pm.invoke_batched(&mut es_b, 3).unwrap();
+        assert_eq!(pm.output_batched(&es_b, 0, 3).unwrap().as_i8().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn batch_beyond_max_is_rejected() {
+        let resolver = OpResolver::with_reference_ops();
+        let pm = PreparedModel::build(
+            Arc::new(tiny_fc_model()),
+            &resolver,
+            Options { max_batch: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut es = pm.exec_state();
+        assert!(pm.invoke_batched(&mut es, 3).is_err());
+        assert!(pm.invoke_batched(&mut es, 0).is_err());
+        // m within bounds still works.
+        pm.input_mut_batched(&mut es, 0, 2).unwrap().copy_from_i8(&[1; 8]).unwrap();
+        pm.invoke_batched(&mut es, 2).unwrap();
+    }
+
+    #[test]
+    fn offline_planner_rejects_batching() {
+        let resolver = OpResolver::with_reference_ops();
+        let err = PreparedModel::build(
+            Arc::new(tiny_fc_model()),
+            &resolver,
+            Options { planner: PlannerChoice::Offline, max_batch: 2 },
+        );
+        assert!(err.is_err());
     }
 }

@@ -370,6 +370,13 @@ pub struct OpContext<'r> {
     /// region may be shared by many workers through one
     /// `Arc<PreparedModel>`, so only the shared (`&[u8]`) view is legal.
     populate_phase: bool,
+    /// Runtime batch multiplier `m`. The static graph shapes describe one
+    /// request; a batched invoke lays `m` requests contiguously in every
+    /// activation tensor, so kernels scale their leading (batch) dimension
+    /// by this factor. Weights, biases, and all prepare/populate-time
+    /// precomputation are batch-agnostic and ignore it. Always 1 for
+    /// `MicroInterpreter` and for `PreparedModel::invoke`.
+    batch: usize,
 }
 
 // SAFETY: `arena` points into memory exclusively borrowed (&mut) by the
@@ -411,6 +418,7 @@ impl<'r> OpContext<'r> {
             persist_len: arena_len,
             degrade: None,
             populate_phase: false,
+            batch: 1,
         }
     }
 
@@ -435,6 +443,23 @@ impl<'r> OpContext<'r> {
     pub fn with_degrade_flag(mut self, flag: &'r AtomicBool) -> Self {
         self.degrade = Some(flag);
         self
+    }
+
+    /// Set the runtime batch multiplier (see [`OpContext::batch`]).
+    /// `m` must be ≥ 1; the interpreter only constructs batched contexts
+    /// from a layout planned for that `m`, so every tensor/scratch range
+    /// already holds `m` contiguous per-request lanes.
+    pub fn with_batch(mut self, m: usize) -> Self {
+        self.batch = m.max(1);
+        self
+    }
+
+    /// Runtime batch multiplier `m` (1 for a plain single invoke).
+    /// Kernels multiply their leading batch dimension by this; per-lane
+    /// data is contiguous, so lane `b` of an `n`-element tensor occupies
+    /// `[b*n, (b+1)*n)` of the (m·n)-element runtime slice.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Per-execution-state degrade flag, if the caller provided one.

@@ -159,7 +159,10 @@ impl Kernel for OptFullyConnectedKernel {
         let OpData::FullyConnected(data) = ctx.op_data() else {
             return Err(ctx.fail("op data missing"));
         };
+        // Runtime batching stacks ctx.batch() request lanes on the static
+        // batch dimension; the GEMM handles any m, weights are shared.
         let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
+        let batch = batch * ctx.batch();
         let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
         match ctx.input(0)?.dtype {
             DType::I8 => {

@@ -20,6 +20,15 @@
 //! | weight reordering for SIMD loads      | packed 4-channel weight blocks              |
 //! | depthwise channel reordering          | channel-blocked ×8 depthwise filter repack  |
 //! | two-output register blocking (FC)     | 4 oc × 2 px accumulator block               |
+//! | multi-MAC weight reuse per load       | batched invoke (m>1): each packed weight    |
+//! |                                       | block loads once, feeds all m request lanes |
+//!
+//! The last row is the batched-inference amortization: packed weights,
+//! folded biases, and the VNNI compensation table are batch-agnostic, so
+//! a batched invoke (`max_batch` > 1) raises the rows dimension of the
+//! shared GEMM and the per-weight-load arithmetic intensity scales with
+//! `m` — the same trick as CMSIS-NN's register-blocked multi-column
+//! reuse, but across requests instead of output pixels.
 //!
 //! The heavy lifting lives in one shared register-blocked int8 GEMM
 //! micro-kernel ([`gemm`]): the conv im2col path, the conv 1×1 fast path,

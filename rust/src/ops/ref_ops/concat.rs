@@ -82,15 +82,22 @@ impl Kernel for ConcatKernel {
 
         let out_bytes = ctx.output_bytes(0)?;
         let out_step = out_meta.shape.dim(ax) as usize * inner * elem;
+        // Static shapes describe one request lane; runtime batching stacks
+        // ctx.batch() lanes contiguously, so the interleave repeats per
+        // lane at whole-tensor byte offsets.
+        let out_total = outer * out_step;
         let mut dst_base = 0usize;
         for i in 0..ctx.num_inputs_runtime() {
             let in_meta = ctx.input(i)?;
             let in_bytes = ctx.input_bytes(i)?;
             let chunk = in_meta.shape.dim(ax) as usize * inner * elem;
-            for o in 0..outer {
-                let src = o * chunk;
-                let dst = o * out_step + dst_base;
-                out_bytes[dst..dst + chunk].copy_from_slice(&in_bytes[src..src + chunk]);
+            let in_total = outer * chunk;
+            for lane in 0..ctx.batch() {
+                for o in 0..outer {
+                    let src = lane * in_total + o * chunk;
+                    let dst = lane * out_total + o * out_step + dst_base;
+                    out_bytes[dst..dst + chunk].copy_from_slice(&in_bytes[src..src + chunk]);
+                }
             }
             dst_base += chunk;
         }

@@ -217,7 +217,10 @@ pub(crate) fn conv_shape(ctx: &OpContext, data: &ConvData) -> Result<ConvShape> 
     let (batch, in_h, in_w, in_c) = ctx.input(0)?.shape.as_nhwc()?;
     let (out_c, kh, kw, _) = ctx.input(1)?.shape.as_nhwc()?;
     Ok(ConvShape {
-        batch,
+        // Runtime batching stacks ctx.batch() request lanes on the static
+        // batch dimension; every kernel walks `for b in 0..batch` over
+        // contiguous per-image slices, so scaling here covers them all.
+        batch: batch * ctx.batch(),
         in_h,
         in_w,
         in_c,

@@ -111,7 +111,9 @@ pub(crate) fn depthwise_shape(ctx: &OpContext, data: &ConvData) -> Result<(ConvS
     let (_, kh, kw, out_c) = ctx.input(1)?.shape.as_nhwc()?;
     Ok((
         ConvShape {
-            batch,
+            // Runtime batching: ctx.batch() request lanes stacked on the
+            // static batch dimension (contiguous per-image slices).
+            batch: batch * ctx.batch(),
             in_h,
             in_w,
             in_c,

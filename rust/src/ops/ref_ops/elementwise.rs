@@ -104,10 +104,25 @@ impl Kernel for ArithKernel {
                 let a = ctx.input_i8(0)?;
                 let b = ctx.input_i8(1)?;
                 let out = ctx.output_i8(0)?;
-                let scalar_b = b.len() == 1;
+                // Batch/broadcast-aware indexing: constants are shared
+                // across the ctx.batch() request lanes (never
+                // lane-scaled), arena operands carry one lane per
+                // request; the second operand may additionally be a
+                // scalar — one value per tensor, or per lane when it is
+                // arena-resident.
+                let out_n = out.len() / ctx.batch();
+                let a_shared = ctx.input_is_const(0);
+                let b_shared = ctx.input_is_const(1);
+                let b_scalar = ctx.input(1)?.shape.num_elements() == 1;
+                let b_at = |i: usize| match (b_scalar, b_shared) {
+                    (true, true) => 0,
+                    (true, false) => i / out_n,
+                    (false, true) => i % out_n,
+                    (false, false) => i,
+                };
                 for (i, o) in out.iter_mut().enumerate() {
-                    let va = a[i] as i32 + d.offset1;
-                    let vb = b[if scalar_b { 0 } else { i }] as i32 + d.offset2;
+                    let va = a[if a_shared { i % out_n } else { i }] as i32 + d.offset1;
+                    let vb = b[b_at(i)] as i32 + d.offset2;
                     let raw = match self.mode {
                         ArithMode::Add => {
                             let sa = d.mult1.apply(va << d.left_shift);
@@ -128,13 +143,24 @@ impl Kernel for ArithKernel {
                 let a = ctx.input_f32(0)?;
                 let b = ctx.input_f32(1)?;
                 let out = ctx.output_f32(0)?;
-                let scalar_b = b.len() == 1;
+                // Same batch/broadcast indexing as the i8 arm above.
+                let out_n = out.len() / ctx.batch();
+                let a_shared = ctx.input_is_const(0);
+                let b_shared = ctx.input_is_const(1);
+                let b_scalar = ctx.input(1)?.shape.num_elements() == 1;
+                let b_at = |i: usize| match (b_scalar, b_shared) {
+                    (true, true) => 0,
+                    (true, false) => i / out_n,
+                    (false, true) => i % out_n,
+                    (false, false) => i,
+                };
                 for (i, o) in out.iter_mut().enumerate() {
-                    let vb = b[if scalar_b { 0 } else { i }];
+                    let va = a[if a_shared { i % out_n } else { i }];
+                    let vb = b[b_at(i)];
                     let v = match self.mode {
-                        ArithMode::Add => a[i] + vb,
-                        ArithMode::Sub => a[i] - vb,
-                        ArithMode::Mul => a[i] * vb,
+                        ArithMode::Add => va + vb,
+                        ArithMode::Sub => va - vb,
+                        ArithMode::Mul => va * vb,
                     };
                     *o = v.clamp(d.fact.0, d.fact.1);
                 }

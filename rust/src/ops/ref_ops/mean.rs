@@ -84,32 +84,43 @@ impl Kernel for MeanKernel {
         let kept: Vec<usize> = (0..rank).filter(|x| !d.axes.contains(x)).collect();
         let out_count: usize = kept.iter().map(|&a| dims[a]).product::<usize>().max(1);
         let red_count: usize = d.axes.iter().map(|&a| dims[a]).product::<usize>().max(1);
+        // Runtime batching: dims/strides describe one request lane; the
+        // batched tensors hold ctx.batch() contiguous lanes.
+        let in_count: usize = dims.iter().product::<usize>().max(1);
 
         match in_meta.dtype {
             DType::I8 => {
                 let input = ctx.input_i8(0)?;
                 let output = ctx.output_i8(0)?;
-                for (oi, o) in output.iter_mut().enumerate().take(out_count) {
-                    let base = offset_for(oi, &kept, &dims, &strides);
-                    let mut sum: i32 = 0;
-                    for ri in 0..red_count {
-                        sum += input[base + offset_for(ri, &d.axes, &dims, &strides)] as i32;
+                for lane in 0..ctx.batch() {
+                    let input = &input[lane * in_count..(lane + 1) * in_count];
+                    let output = &mut output[lane * out_count..(lane + 1) * out_count];
+                    for (oi, o) in output.iter_mut().enumerate() {
+                        let base = offset_for(oi, &kept, &dims, &strides);
+                        let mut sum: i32 = 0;
+                        for ri in 0..red_count {
+                            sum += input[base + offset_for(ri, &d.axes, &dims, &strides)] as i32;
+                        }
+                        // mean_real = in_scale*(sum - n*zp_in)/n, requantized.
+                        let q = d.mult.apply(sum - d.divisor * d.in_zp) + d.out_zp;
+                        *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
                     }
-                    // mean_real = in_scale*(sum - n*zp_in)/n, requantized.
-                    let q = d.mult.apply(sum - d.divisor * d.in_zp) + d.out_zp;
-                    *o = q.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
                 }
             }
             DType::F32 => {
                 let input = ctx.input_f32(0)?;
                 let output = ctx.output_f32(0)?;
-                for (oi, o) in output.iter_mut().enumerate().take(out_count) {
-                    let base = offset_for(oi, &kept, &dims, &strides);
-                    let mut sum = 0f32;
-                    for ri in 0..red_count {
-                        sum += input[base + offset_for(ri, &d.axes, &dims, &strides)];
+                for lane in 0..ctx.batch() {
+                    let input = &input[lane * in_count..(lane + 1) * in_count];
+                    let output = &mut output[lane * out_count..(lane + 1) * out_count];
+                    for (oi, o) in output.iter_mut().enumerate() {
+                        let base = offset_for(oi, &kept, &dims, &strides);
+                        let mut sum = 0f32;
+                        for ri in 0..red_count {
+                            sum += input[base + offset_for(ri, &d.axes, &dims, &strides)];
+                        }
+                        *o = sum / red_count as f32;
                     }
-                    *o = sum / red_count as f32;
                 }
             }
             other => return Err(ctx.fail(format!("unsupported dtype {other}"))),

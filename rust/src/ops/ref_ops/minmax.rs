@@ -67,12 +67,27 @@ impl Kernel for MinMaxKernel {
                 let a = ctx.input_i8(0)?;
                 let b = ctx.input_i8(1)?;
                 let out = ctx.output_i8(0)?;
-                let scalar_b = b.len() == 1;
+                // Batch/broadcast-aware indexing (see elementwise.rs):
+                // constants are shared across the ctx.batch() request
+                // lanes, arena operands carry one lane per request, and
+                // a scalar second operand is per-tensor (const) or
+                // per-lane (arena).
+                let out_n = out.len() / ctx.batch();
+                let a_shared = ctx.input_is_const(0);
+                let b_shared = ctx.input_is_const(1);
+                let b_scalar = ctx.input(1)?.shape.num_elements() == 1;
+                let b_at = |i: usize| match (b_scalar, b_shared) {
+                    (true, true) => 0,
+                    (true, false) => i / out_n,
+                    (false, true) => i % out_n,
+                    (false, false) => i,
+                };
                 for (i, o) in out.iter_mut().enumerate() {
-                    let vb = b[if scalar_b { 0 } else { i }];
+                    let va = a[if a_shared { i % out_n } else { i }];
+                    let vb = b[b_at(i)];
                     *o = match self.mode {
-                        MinMaxMode::Max => a[i].max(vb),
-                        MinMaxMode::Min => a[i].min(vb),
+                        MinMaxMode::Max => va.max(vb),
+                        MinMaxMode::Min => va.min(vb),
                     };
                 }
             }
@@ -80,12 +95,23 @@ impl Kernel for MinMaxKernel {
                 let a = ctx.input_f32(0)?;
                 let b = ctx.input_f32(1)?;
                 let out = ctx.output_f32(0)?;
-                let scalar_b = b.len() == 1;
+                // Same batch/broadcast indexing as the i8 arm above.
+                let out_n = out.len() / ctx.batch();
+                let a_shared = ctx.input_is_const(0);
+                let b_shared = ctx.input_is_const(1);
+                let b_scalar = ctx.input(1)?.shape.num_elements() == 1;
+                let b_at = |i: usize| match (b_scalar, b_shared) {
+                    (true, true) => 0,
+                    (true, false) => i / out_n,
+                    (false, true) => i % out_n,
+                    (false, false) => i,
+                };
                 for (i, o) in out.iter_mut().enumerate() {
-                    let vb = b[if scalar_b { 0 } else { i }];
+                    let va = a[if a_shared { i % out_n } else { i }];
+                    let vb = b[b_at(i)];
                     *o = match self.mode {
-                        MinMaxMode::Max => a[i].max(vb),
-                        MinMaxMode::Min => a[i].min(vb),
+                        MinMaxMode::Max => va.max(vb),
+                        MinMaxMode::Min => va.min(vb),
                     };
                 }
             }

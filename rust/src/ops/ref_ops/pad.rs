@@ -65,27 +65,34 @@ impl Kernel for PadKernel {
         let out_strides = out_meta.shape.strides();
 
         // Iterate over all input elements in row-major order, copying
-        // contiguous innermost runs.
+        // contiguous innermost runs. The static shapes/strides describe
+        // one request lane; runtime batching stacks ctx.batch() lanes
+        // contiguously in both tensors, so the walk repeats per lane at
+        // whole-tensor byte offsets.
         let inner = *in_dims.last().unwrap_or(&1);
         let outer: usize = in_dims[..rank.saturating_sub(1)].iter().product();
-        let mut idx = vec![0usize; rank.saturating_sub(1)];
-        for o in 0..outer {
-            // Destination offset: shift each coordinate by its before-pad.
-            let mut dst_elem = pads[(rank - 1) * 2] as usize; // innermost before-pad
-            for (d, &i) in idx.iter().enumerate() {
-                dst_elem += (i + pads[d * 2] as usize) * out_strides[d];
-            }
-            let src_off = o * inner * elem;
-            let dst_off = dst_elem * elem;
-            out_bytes[dst_off..dst_off + inner * elem]
-                .copy_from_slice(&in_bytes[src_off..src_off + inner * elem]);
-            // Increment the multi-index.
-            for d in (0..idx.len()).rev() {
-                idx[d] += 1;
-                if idx[d] < in_dims[d] {
-                    break;
+        let in_total = outer * inner * elem;
+        let out_total = out_meta.shape.num_elements() * elem;
+        for lane in 0..ctx.batch() {
+            let mut idx = vec![0usize; rank.saturating_sub(1)];
+            for o in 0..outer {
+                // Destination offset: shift each coordinate by its before-pad.
+                let mut dst_elem = pads[(rank - 1) * 2] as usize; // innermost before-pad
+                for (d, &i) in idx.iter().enumerate() {
+                    dst_elem += (i + pads[d * 2] as usize) * out_strides[d];
                 }
-                idx[d] = 0;
+                let src_off = lane * in_total + o * inner * elem;
+                let dst_off = lane * out_total + dst_elem * elem;
+                out_bytes[dst_off..dst_off + inner * elem]
+                    .copy_from_slice(&in_bytes[src_off..src_off + inner * elem]);
+                // Increment the multi-index.
+                for d in (0..idx.len()).rev() {
+                    idx[d] += 1;
+                    if idx[d] < in_dims[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
             }
         }
         Ok(())

@@ -149,7 +149,9 @@ fn pool_shape(ctx: &OpContext, data: &PoolData) -> Result<ConvShape> {
     };
     let (batch, in_h, in_w, in_c) = ctx.input(0)?.shape.as_nhwc()?;
     Ok(ConvShape {
-        batch,
+        // Runtime batching: ctx.batch() request lanes stacked on the
+        // static batch dimension (contiguous per-image slices).
+        batch: batch * ctx.batch(),
         in_h,
         in_w,
         in_c,

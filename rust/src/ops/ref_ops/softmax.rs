@@ -45,7 +45,10 @@ impl Kernel for SoftmaxKernel {
         let OpData::Softmax(d) = ctx.op_data() else {
             return Err(ctx.fail("op data missing"));
         };
+        // Runtime batching stacks ctx.batch() request lanes as extra rows
+        // (softmax is per-row, so lanes are independent by construction).
         let (rows, cols) = ctx.input(0)?.shape.as_matrix();
+        let rows = rows * ctx.batch();
         match ctx.input(0)?.dtype {
             DType::I8 => {
                 let input = ctx.input_i8(0)?;

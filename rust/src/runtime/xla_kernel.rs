@@ -296,6 +296,14 @@ impl Kernel for XlaFcKernel {
             return Err(ctx.fail("op data missing"));
         };
         let (batch, in_dim) = ctx.input(0)?.shape.as_matrix();
+        // Runtime batching stacks ctx.batch() request lanes as extra rows.
+        // The artifact contract pins an exact (batch, in_dim, out_dim), so
+        // a batched invoke fails the `offloadable` shape test below and
+        // silently takes the bit-exact CPU path for this call only — a
+        // shape mismatch is not a backend failure, so neither the degrade
+        // flag nor the runtime degrade counter moves, and batch-1 invokes
+        // keep offloading.
+        let batch = batch * ctx.batch();
         let (out_dim, _) = ctx.input(1)?.shape.as_matrix();
         match ctx.input(0)?.dtype {
             DType::I8 => {

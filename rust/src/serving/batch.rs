@@ -1,0 +1,169 @@
+//! Request coalescing for the batched serving path: the latency-bounded
+//! gather window plus the lane pack/scatter helpers.
+//!
+//! A worker pull with [`super::ServingConfig::max_batch`] > 1 blocks for
+//! the *first* request, then holds the queue lock while it gathers up to
+//! `max_batch - 1` more inside [`super::ServingConfig::batch_window`]
+//! ([`gather`]). Every request in one queue shares the compatibility key
+//! — submit validated the input length against the model — so any
+//! waiting request may join the batch. The batch is then examined
+//! (expired members shed individually), packed one request per lane
+//! ([`pack_lanes`]), run through one batched invoke, and scattered back
+//! to per-request responses ([`lane`]). The copy helpers are on the
+//! allocation-free warm path: forming a batch moves bytes, it never
+//! allocates.
+//!
+//! This file is on the `no_panic` lint surface: helpers return
+//! `bool`/`Option` instead of panicking on contract violations, and the
+//! callers count those as invoke errors.
+
+use super::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Gather a batch: `first` plus up to `max_batch - 1` more requests that
+/// arrive within `window`. Returns early when the batch fills or the
+/// queue closes; with `max_batch <= 1` it returns `[first]` immediately
+/// and never waits, so an unbatched config pays no window latency.
+pub(crate) fn gather(
+    rx: &Receiver<Request>,
+    first: Request,
+    max_batch: usize,
+    window: Duration,
+) -> Vec<Request> {
+    let cap = max_batch.max(1);
+    let mut batch = Vec::with_capacity(cap);
+    batch.push(first);
+    if cap == 1 {
+        return batch;
+    }
+    let expiry = Instant::now() + window;
+    while batch.len() < cap {
+        let remaining = expiry.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(remaining) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
+// lint:alloc_free — the batch-formation hot path: pure slice copies into
+// the batched input view, one lane per member.
+/// Copy each member's input into its lane of the batched input slice
+/// (lane `b` of an n-element tensor is `[b*n, (b+1)*n)`). Returns false
+/// — without touching `dst` further — when the lane arithmetic does not
+/// line up (a member input of the wrong length; unreachable after
+/// submit-time validation, but this is the no-panic surface).
+pub(crate) fn pack_lanes(dst: &mut [i8], members: &[Request]) -> bool {
+    if members.is_empty() || dst.len() % members.len() != 0 {
+        return false;
+    }
+    let lane_n = dst.len() / members.len();
+    if lane_n == 0 {
+        // chunks_exact_mut(0) would panic; a zero-size lane is a
+        // contract violation, not a batch to serve.
+        return false;
+    }
+    for (lane, req) in dst.chunks_exact_mut(lane_n).zip(members) {
+        if req.input.len() != lane_n {
+            return false;
+        }
+        lane.copy_from_slice(&req.input);
+    }
+    true
+}
+
+// lint:alloc_free — the scatter hot path: a bounds-checked subslice, no
+// copies (the caller copies straight into its response buffer).
+/// Lane `b` of a batched output slice whose per-request element count is
+/// `lane_n`. `None` when the lane falls outside the slice.
+pub(crate) fn lane(batched: &[i8], lane_n: usize, b: usize) -> Option<&[i8]> {
+    let start = b.checked_mul(lane_n)?;
+    let end = start.checked_add(lane_n)?;
+    batched.get(start..end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn gather_fills_from_waiting_requests() {
+        let (tx, rx) = sync_channel::<Request>(8);
+        for id in 0..5u64 {
+            tx.send(Request::new(id, vec![0i8; 2])).unwrap();
+        }
+        let first = rx.recv().unwrap();
+        let batch = gather(&rx, first, 3, Duration::from_secs(5));
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "gather stops at max_batch");
+        // The rest stay queued for the next pull.
+        assert_eq!(rx.recv().unwrap().id, 3);
+    }
+
+    #[test]
+    fn gather_window_bounds_the_wait() {
+        let (tx, rx) = sync_channel::<Request>(8);
+        tx.send(Request::new(7, vec![1i8])).unwrap();
+        let first = rx.recv().unwrap();
+        let t0 = Instant::now();
+        let batch = gather(&rx, first, 4, Duration::from_millis(20));
+        assert_eq!(batch.len(), 1, "nothing else arrived");
+        assert!(t0.elapsed() >= Duration::from_millis(20), "waited out the window");
+        assert!(t0.elapsed() < Duration::from_secs(2), "window bounded the wait");
+    }
+
+    #[test]
+    fn gather_unbatched_never_waits() {
+        let (_tx, rx) = sync_channel::<Request>(8);
+        let t0 = Instant::now();
+        let batch = gather(&rx, Request::new(1, vec![]), 1, Duration::from_secs(60));
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn gather_returns_early_when_queue_closes() {
+        let (tx, rx) = sync_channel::<Request>(8);
+        tx.send(Request::new(0, vec![])).unwrap();
+        drop(tx);
+        let first = rx.recv().unwrap();
+        let t0 = Instant::now();
+        let batch = gather(&rx, first, 8, Duration::from_secs(60));
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(2), "disconnect ends the window");
+    }
+
+    #[test]
+    fn pack_lanes_lays_members_contiguously() {
+        let members =
+            vec![Request::new(0, vec![1i8, 2]), Request::new(1, vec![3, 4]), Request::new(2, vec![5, 6])];
+        let mut dst = [0i8; 6];
+        assert!(pack_lanes(&mut dst, &members));
+        assert_eq!(dst, [1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn pack_lanes_rejects_mismatched_lengths() {
+        let members = vec![Request::new(0, vec![1i8, 2]), Request::new(1, vec![3])];
+        let mut dst = [0i8; 4];
+        assert!(!pack_lanes(&mut dst, &members), "short member input");
+        assert!(!pack_lanes(&mut dst[..3], &members), "non-divisible batched slice");
+        assert!(!pack_lanes(&mut dst, &[]), "empty batch");
+        assert!(!pack_lanes(&mut dst[..0], &members), "zero-size lanes rejected, no panic");
+    }
+
+    #[test]
+    fn lane_slices_and_bounds_checks() {
+        let out = [1i8, 2, 3, 4, 5, 6];
+        assert_eq!(lane(&out, 2, 0), Some(&out[0..2]));
+        assert_eq!(lane(&out, 2, 2), Some(&out[4..6]));
+        assert_eq!(lane(&out, 2, 3), None, "past the end");
+        assert_eq!(lane(&out, usize::MAX, 2), None, "overflow-safe");
+    }
+}

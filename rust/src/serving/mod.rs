@@ -22,6 +22,48 @@
 //! fleet was initializing, and a populate regression shows up there as a
 //! widening gap versus the steady-state percentiles.
 //!
+//! # Batched serving (request coalescing)
+//!
+//! With [`ServingConfig::max_batch`] > 1 the fleet serves from **one
+//! shared** [`crate::interpreter::PreparedModel`] built with the same
+//! `max_batch` (packed weights, folded biases, and VNNI side tables are
+//! batch-agnostic, so one copy serves every batch size); each worker
+//! owns only a private `ExecState`, and a worker pull becomes a small
+//! state machine:
+//!
+//! ```text
+//!  recv first request
+//!        │
+//!        ▼
+//!    GATHER ── holds the queue lock, recv_timeout until the batch
+//!        │     window expires, the batch reaches max_batch, or the
+//!        │     queue closes. Every request in this queue shares the
+//!        │     compatibility key (model identity + input length,
+//!        │     validated at submit), so any waiting request may join.
+//!        ▼
+//!    EXAMINE ── a member whose deadline already expired is shed
+//!        │      individually (`deadline_misses`); its batchmates are
+//!        │      kept and served.
+//!        ▼
+//!    INVOKE ── one batched invoke over the m surviving lanes,
+//!        │     bit-exact against m sequential single invokes.
+//!        ▼
+//!    SCATTER ── lane b becomes member b's response; latency and
+//!               `late_completions` are attributed from each request's
+//!               own `enqueued` timestamp, never from batch-formation
+//!               time.
+//! ```
+//!
+//! Fault semantics under coalescing: a kernel panic poisons the whole
+//! batch's execution state, but it is **one** supervision event (one
+//! `panics` row, one respawn-budget charge, one poisoned arena) that
+//! fails each member as its own counted loss (`panic_lost` grows by the
+//! batch size). A clean invoke error likewise counts each member in
+//! `invoke_errors`. With `max_batch` = 1 (the default) none of this
+//! machinery engages: workers run the per-worker
+//! [`MicroInterpreter`] path exactly as before and `panic_lost` equals
+//! `panics`.
+//!
 //! # Fault model
 //!
 //! Always-on deployments must survive bad inputs and flaky vendor kernels
@@ -105,6 +147,7 @@
 //! `queue_stall`, plus the lifecycle points `prepare_fail`,
 //! `canary_diverge`, and `version_panic`.
 
+mod batch;
 pub mod registry;
 
 pub use registry::{
@@ -114,12 +157,12 @@ pub use registry::{
 
 use crate::arena::Arena;
 use crate::error::{Error, Result};
-use crate::interpreter::MicroInterpreter;
+use crate::interpreter::{MicroInterpreter, PreparedModel};
 use crate::ops::OpResolver;
 use crate::schema::Model;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// First pause of the bounded exponential backoff used by blocking
@@ -148,6 +191,18 @@ pub struct ServingConfig {
     /// Default per-request deadline, measured from submit. Applied only
     /// to requests that don't carry their own [`Request::deadline`].
     pub default_deadline: Option<Duration>,
+    /// Largest batch a worker pull may coalesce. At the default of 1 the
+    /// fleet runs the classic per-worker `MicroInterpreter` path and
+    /// never waits on the batch window; above 1 the workers share one
+    /// `PreparedModel` built for this `max_batch` and gather compatible
+    /// waiting requests into single batched invokes (see the module
+    /// docs' batching state machine). `arena_bytes` is ignored in that
+    /// mode — the prepared plan sizes its own buffers.
+    pub max_batch: usize,
+    /// Latency bound on batch formation: after the first request of a
+    /// batch is pulled, a worker waits at most this long for more before
+    /// invoking with whatever it has. Irrelevant at `max_batch` = 1.
+    pub batch_window: Duration,
 }
 
 impl Default for ServingConfig {
@@ -159,6 +214,8 @@ impl Default for ServingConfig {
             max_respawns: 4,
             submit_timeout: None,
             default_deadline: None,
+            max_batch: 1,
+            batch_window: Duration::from_micros(500),
         }
     }
 }
@@ -206,11 +263,19 @@ pub struct Response {
 /// Error taxonomy for a serving run: every contained failure, counted.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultTaxonomy {
-    /// Kernel panics caught by worker supervision. Each panic loses
-    /// exactly the request being served; those lost requests are counted
-    /// *here*, not in `dropped` (which covers only requests still queued
-    /// when the fleet dies).
+    /// Kernel panics caught by worker supervision: one count per
+    /// supervision *event*, however many requests the panicking invoke
+    /// carried. The requests lost to those events are counted in
+    /// `panic_lost`, not in `dropped` (which covers only requests still
+    /// queued when the fleet dies).
     pub panics: usize,
+    /// Requests lost because the invoke serving them panicked. Equal to
+    /// `panics` when serving unbatched; under coalescing
+    /// ([`ServingConfig::max_batch`] > 1) a single mid-batch panic adds
+    /// the whole batch's membership here while `panics` grows by one —
+    /// per-event supervision accounting and per-request loss accounting,
+    /// side by side.
+    pub panic_lost: usize,
     /// Workers respawned with a fresh interpreter + arena after a panic.
     /// In registry runs, the panic that exhausts a version's respawn
     /// budget triggers a rollback (or opens the breaker) instead of a
@@ -237,8 +302,8 @@ pub struct FaultTaxonomy {
     /// Requests accepted into the queue but never served (fleet died
     /// with work still queued, or a registry worker pulled a request
     /// after every version was retired). Requests lost mid-invoke to a
-    /// panic are counted in `panics`, not here — total lost accepted
-    /// requests is `dropped + panics`.
+    /// panic are counted in `panic_lost`, not here — total lost accepted
+    /// requests is `dropped + panic_lost`.
     pub dropped: usize,
     /// Workers that failed to build an interpreter at all.
     pub worker_init_failures: usize,
@@ -260,8 +325,9 @@ impl FaultTaxonomy {
     /// Compact single-line rendering for logs.
     pub fn summary(&self) -> String {
         format!(
-            "panics {} respawns {} poisoned {} invoke-err {} deadline-miss {} late {} sheds {} rejected {} degraded {} dropped {} init-fail {} canary-reject {} rollbacks {}",
+            "panics {} panic-lost {} respawns {} poisoned {} invoke-err {} deadline-miss {} late {} sheds {} rejected {} degraded {} dropped {} init-fail {} canary-reject {} rollbacks {}",
             self.panics,
+            self.panic_lost,
             self.respawns,
             self.poisoned_arenas,
             self.invoke_errors,
@@ -349,6 +415,7 @@ struct FleetShared {
     breaker_open: AtomicBool,
     respawns_used: AtomicUsize,
     panics: AtomicUsize,
+    panic_lost: AtomicUsize,
     poisoned_arenas: AtomicUsize,
     invoke_errors: AtomicUsize,
     deadline_misses: AtomicUsize,
@@ -372,6 +439,7 @@ impl FleetShared {
             breaker_open: AtomicBool::new(false),
             respawns_used: AtomicUsize::new(0),
             panics: AtomicUsize::new(0),
+            panic_lost: AtomicUsize::new(0),
             poisoned_arenas: AtomicUsize::new(0),
             invoke_errors: AtomicUsize::new(0),
             deadline_misses: AtomicUsize::new(0),
@@ -391,6 +459,7 @@ impl FleetShared {
     fn taxonomy(&self) -> FaultTaxonomy {
         FaultTaxonomy {
             panics: self.panics.load(Ordering::SeqCst),
+            panic_lost: self.panic_lost.load(Ordering::SeqCst),
             respawns: self.respawns_used.load(Ordering::SeqCst),
             poisoned_arenas: self.poisoned_arenas.load(Ordering::SeqCst),
             invoke_errors: self.invoke_errors.load(Ordering::SeqCst),
@@ -537,6 +606,68 @@ impl Submitter<'_> {
     }
 }
 
+/// Streaming response accumulator shared by both serving runners
+/// (single-model and registry): latencies, per-worker counts, cold-start
+/// capture, and the percentile math — extracted so the edge cases are
+/// unit-testable without spinning up a fleet.
+pub(crate) struct Collector {
+    /// Completion latencies, sorted by [`Collector::percentiles`].
+    latencies: Vec<Duration>,
+    pub(crate) per_worker: Vec<usize>,
+    pub(crate) cold_start_ns: Vec<u64>,
+    pub(crate) completed: usize,
+}
+
+impl Collector {
+    pub(crate) fn new(workers: usize) -> Self {
+        Collector {
+            latencies: Vec::new(),
+            per_worker: vec![0usize; workers],
+            cold_start_ns: vec![0u64; workers],
+            completed: 0,
+        }
+    }
+
+    /// Record one completed response. A worker index out of range is
+    /// impossible from our own fleet but bounds-guarded anyway — this is
+    /// the no-panic surface.
+    pub(crate) fn record(&mut self, resp: &Response) {
+        if let Some(count) = self.per_worker.get_mut(resp.worker) {
+            if *count == 0 {
+                if let Some(slot) = self.cold_start_ns.get_mut(resp.worker) {
+                    *slot = resp.latency.as_nanos() as u64;
+                }
+            }
+            *count += 1;
+        }
+        self.latencies.push(resp.latency);
+        self.completed += 1;
+    }
+
+    /// Sort once, then report (p50, p95, p99) by nearest rank.
+    pub(crate) fn percentiles(&mut self) -> [Duration; 3] {
+        self.latencies.sort();
+        [self.percentile(0.50), self.percentile(0.95), self.percentile(0.99)]
+    }
+
+    /// Nearest-rank percentile over the (sorted) latencies: the smallest
+    /// sample with at least `p`·N samples at or below it,
+    /// `⌈N·p⌉`-th in rank. Well-defined at every edge the old truncating
+    /// `(N·p) as usize` index skewed: a batch of one reports its single
+    /// sample at every percentile, two samples report the *lower* as p50
+    /// (truncation reported the upper), and zero completions — an
+    /// all-shed batch, a run that never served — report `Duration::ZERO`
+    /// without dividing by or indexing anything.
+    pub(crate) fn percentile(&self, p: f64) -> Duration {
+        let n = self.latencies.len();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let idx = ((n as f64 * p).ceil() as usize).saturating_sub(1).min(n - 1);
+        self.latencies.get(idx).copied().unwrap_or(Duration::ZERO)
+    }
+}
+
 /// Run a closed-loop serving session: feed `requests` through `workers`
 /// interpreters and collect responses. Returns when all requests are done
 /// (completed, shed, or rejected — see the report's [`FaultTaxonomy`]).
@@ -598,6 +729,20 @@ where
     let shared = FleetShared::new(&cfg, expected_in_len);
     let degrades_before = crate::runtime::degrade_events();
 
+    // Coalescing mode: one shared PreparedModel planned for every batch
+    // size up to max_batch, built before the fleet spawns so a planning
+    // failure is one structural error, not N worker-init failures. The
+    // model bytes are re-owned (PreparedModel shares by Arc) — a one-time
+    // copy at run start, never on the request path.
+    let prepared: Option<Arc<PreparedModel>> = if cfg.max_batch > 1 {
+        let owned = Model::from_vec(model.data().to_vec())?;
+        let options =
+            crate::interpreter::Options { max_batch: cfg.max_batch, ..Default::default() };
+        Some(Arc::new(PreparedModel::build(Arc::new(owned), resolver, options)?))
+    } else {
+        None
+    };
+
     let (req_tx, req_rx): (SyncSender<Request>, Receiver<Request>) =
         sync_channel(cfg.queue_depth);
     let req_rx = Mutex::new(req_rx);
@@ -610,6 +755,122 @@ where
             let req_rx = &req_rx;
             let resp_tx = resp_tx.clone();
             let shared = &shared;
+            if let Some(pm) = &prepared {
+                // Coalescing worker: shared PreparedModel, private
+                // ExecState, batched pulls (see the module docs'
+                // batching state machine).
+                let pm = Arc::clone(pm);
+                scope.spawn(move || {
+                    shared.started.fetch_add(1, Ordering::SeqCst);
+                    let mut abnormal = false;
+                    let mut es = pm.exec_state();
+                    'pull: loop {
+                        // GATHER: block for the first request, then hold
+                        // the queue lock through the latency-bounded
+                        // window collecting batchmates.
+                        let gathered = {
+                            let rx = req_rx.lock().unwrap_or_else(|p| p.into_inner());
+                            let first = match rx.recv() {
+                                Ok(r) => r,
+                                Err(_) => break 'pull,
+                            };
+                            batch::gather(&rx, first, cfg.max_batch, cfg.batch_window)
+                        };
+                        // EXAMINE: a member whose deadline expired while
+                        // queued (or while the window ran) is shed
+                        // individually; its batchmates are served.
+                        let now = Instant::now();
+                        let mut kept: Vec<Request> = Vec::with_capacity(gathered.len());
+                        for req in gathered {
+                            if let Some(d) = req.deadline {
+                                if now >= d {
+                                    shared.deadline_misses.fetch_add(1, Ordering::SeqCst);
+                                    continue;
+                                }
+                            }
+                            kept.push(req);
+                        }
+                        if kept.is_empty() {
+                            continue;
+                        }
+                        crate::faults::queue_stall_point();
+                        let m = kept.len();
+                        // INVOKE: one batched pass over the op list.
+                        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || -> Result<Vec<i8>> {
+                                let mut view = pm.input_mut_batched(&mut es, 0, m)?;
+                                if !batch::pack_lanes(view.as_i8_mut()?, &kept) {
+                                    return Err(Error::Serving(
+                                        "batch member input length mismatch".into(),
+                                    ));
+                                }
+                                pm.invoke_batched(&mut es, m)?;
+                                Ok(pm.output_batched(&es, 0, m)?.as_i8()?.to_vec())
+                            },
+                        ));
+                        match unwound {
+                            Ok(Ok(output)) => {
+                                // SCATTER: lane b becomes member b's
+                                // response; latency and lateness come
+                                // from each request's own `enqueued`,
+                                // never batch-formation time.
+                                let lane_n = output.len() / m;
+                                for (b, req) in kept.iter().enumerate() {
+                                    if let Some(d) = req.deadline {
+                                        if Instant::now() >= d {
+                                            shared
+                                                .late_completions
+                                                .fetch_add(1, Ordering::SeqCst);
+                                        }
+                                    }
+                                    let Some(out) = batch::lane(&output, lane_n, b) else {
+                                        shared.invoke_errors.fetch_add(1, Ordering::SeqCst);
+                                        continue;
+                                    };
+                                    let resp = Response {
+                                        id: req.id,
+                                        output: out.to_vec(),
+                                        latency: req.enqueued.elapsed(),
+                                        worker: w,
+                                    };
+                                    if resp_tx.send(resp).is_err() {
+                                        break 'pull;
+                                    }
+                                }
+                            }
+                            Ok(Err(_)) => {
+                                // A clean error fails every member as its
+                                // own counted loss; the worker serves on.
+                                shared.invoke_errors.fetch_add(m, Ordering::SeqCst);
+                            }
+                            Err(_payload) => {
+                                // One supervision event — one panics row,
+                                // one respawn-budget charge, one poisoned
+                                // state — that loses all m members.
+                                shared.panics.fetch_add(1, Ordering::SeqCst);
+                                shared.panic_lost.fetch_add(m, Ordering::SeqCst);
+                                shared.poisoned_arenas.fetch_add(1, Ordering::SeqCst);
+                                let used =
+                                    shared.respawns_used.fetch_add(1, Ordering::SeqCst);
+                                if used >= shared.max_respawns {
+                                    shared.respawns_used.fetch_sub(1, Ordering::SeqCst);
+                                    shared.breaker_open.store(true, Ordering::SeqCst);
+                                    abnormal = true;
+                                    break 'pull;
+                                }
+                                // Fresh ExecState = the respawn: the
+                                // shared model is immutable at invoke, so
+                                // only this worker's state was poisoned.
+                                es = pm.exec_state();
+                            }
+                        }
+                    }
+                    if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 && abnormal {
+                        shared.breaker_open.store(true, Ordering::SeqCst);
+                    }
+                });
+                continue;
+            }
             scope.spawn(move || {
                 // One iteration per interpreter lifetime: the first build,
                 // then one more per respawn after a caught panic. A panic
@@ -710,6 +971,9 @@ where
                             }
                             Err(_payload) => {
                                 shared.panics.fetch_add(1, Ordering::SeqCst);
+                                // Unbatched: the one request being served
+                                // is the one loss.
+                                shared.panic_lost.fetch_add(1, Ordering::SeqCst);
                                 shared.poisoned_arenas.fetch_add(1, Ordering::SeqCst);
                                 let used = shared.respawns_used.fetch_add(1, Ordering::SeqCst);
                                 if used >= shared.max_respawns {
@@ -745,10 +1009,7 @@ where
         });
 
         // Collector.
-        let mut latencies = Vec::new();
-        let mut per_worker = vec![0usize; cfg.workers];
-        let mut cold_start_ns = vec![0u64; cfg.workers];
-        let mut completed = 0usize;
+        let mut col = Collector::new(cfg.workers);
         for resp in resp_rx.iter() {
             if resp.output.len() != expected_out_len {
                 // Contract violation, not a per-request fault: open the
@@ -760,13 +1021,8 @@ where
                     resp.output.len()
                 )));
             }
-            if per_worker[resp.worker] == 0 {
-                cold_start_ns[resp.worker] = resp.latency.as_nanos() as u64;
-            }
             on_response(&resp);
-            latencies.push(resp.latency);
-            per_worker[resp.worker] += 1;
-            completed += 1;
+            col.record(&resp);
         }
         let wall = t0.elapsed();
 
@@ -790,31 +1046,24 @@ where
             return Err(Error::Serving(format!("no worker could initialize: {first}")));
         }
 
-        latencies.sort();
-        let pick = |p: f64| -> Duration {
-            if latencies.is_empty() {
-                Duration::ZERO
-            } else {
-                latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
-            }
-        };
+        let [p50, p95, p99] = col.percentiles();
         let mut faults = shared.taxonomy();
         faults.dropped = dropped;
         Ok(ServingReport {
-            completed,
+            completed: col.completed,
             wall,
             // Guard the zero-completion case explicitly: an all-shed run
             // reports zeros, it does not divide by a ~zero wall.
-            throughput_rps: if completed == 0 {
+            throughput_rps: if col.completed == 0 {
                 0.0
             } else {
-                completed as f64 / wall.as_secs_f64().max(1e-9)
+                col.completed as f64 / wall.as_secs_f64().max(1e-9)
             },
-            latency_p50: pick(0.50),
-            latency_p95: pick(0.95),
-            latency_p99: pick(0.99),
-            per_worker,
-            cold_start_ns,
+            latency_p50: p50,
+            latency_p95: p95,
+            latency_p99: p99,
+            per_worker: col.per_worker,
+            cold_start_ns: col.cold_start_ns,
             faults,
             breaker_open: shared.breaker_open.load(Ordering::SeqCst),
             active_version: None,
@@ -907,6 +1156,103 @@ mod tests {
         // is nonzero and renders.
         assert!(report.cold_start_ns.iter().any(|&c| c > 0));
         assert!(report.summary().contains("cold-max"));
+    }
+
+    /// Satellite: the percentile accumulator's edge cases, unit-tested
+    /// directly — batch of one, zero completed, two-sample median — so
+    /// the nearest-rank math is pinned without spinning up a fleet.
+    #[test]
+    fn percentile_accumulator_edge_cases() {
+        let resp = |ms: u64, worker: usize| Response {
+            id: ms,
+            output: Vec::new(),
+            latency: Duration::from_millis(ms),
+            worker,
+        };
+
+        // Zero completed: every percentile is ZERO — no division, no
+        // indexing, no skew.
+        let mut c = Collector::new(2);
+        assert_eq!(c.percentiles(), [Duration::ZERO; 3]);
+        assert_eq!(c.completed, 0);
+
+        // Batch of one: the single sample IS every percentile.
+        let mut c = Collector::new(1);
+        c.record(&resp(7, 0));
+        assert_eq!(c.percentiles(), [Duration::from_millis(7); 3]);
+
+        // Two samples: nearest-rank p50 is the *lower* one (the old
+        // truncating index reported the upper), p95/p99 the upper.
+        let mut c = Collector::new(1);
+        c.record(&resp(20, 0));
+        c.record(&resp(10, 0));
+        assert_eq!(
+            c.percentiles(),
+            [
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(20)
+            ]
+        );
+
+        // 100 samples 1..=100 ms land exactly on their ranks.
+        let mut c = Collector::new(1);
+        for ms in 1u64..=100 {
+            c.record(&resp(ms, 0));
+        }
+        let [p50, p95, p99] = c.percentiles();
+        assert_eq!(p50, Duration::from_millis(50));
+        assert_eq!(p95, Duration::from_millis(95));
+        assert_eq!(p99, Duration::from_millis(99));
+
+        // An out-of-range worker id is bounds-guarded, not a panic; the
+        // latency still counts toward the percentiles.
+        let mut c = Collector::new(1);
+        c.record(&resp(3, 9));
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.per_worker, vec![0]);
+        assert_eq!(c.percentiles(), [Duration::from_millis(3); 3]);
+    }
+
+    /// Tentpole: coalesced serving returns the same bytes per request as
+    /// the classic unbatched fleet, with clean fault taxonomy.
+    #[test]
+    fn batched_coalescing_matches_unbatched_outputs() {
+        let model = tiny_fc_model();
+        let resolver = crate::ops::OpResolver::with_optimized_ops();
+        let run = |max_batch: usize| {
+            let mut outputs = std::collections::BTreeMap::new();
+            let cfg = ServingConfig {
+                workers: 2,
+                queue_depth: 16,
+                max_batch,
+                batch_window: Duration::from_millis(5),
+                ..Default::default()
+            };
+            let report = run_with_feeder(
+                &model,
+                &resolver,
+                cfg,
+                2,
+                |sub| {
+                    for id in 0..24u64 {
+                        sub.submit(Request::new(id, vec![(id as i8).wrapping_sub(5); 4]))
+                            .unwrap();
+                    }
+                },
+                |resp| {
+                    outputs.insert(resp.id, resp.output.clone());
+                },
+            )
+            .unwrap();
+            (report, outputs)
+        };
+        let (unbatched, want) = run(1);
+        let (batched, got) = run(4);
+        assert_eq!(unbatched.completed, 24);
+        assert_eq!(batched.completed, 24);
+        assert!(batched.faults.is_clean(), "{}", batched.faults.summary());
+        assert_eq!(got, want, "coalesced responses must be bit-exact vs unbatched");
     }
 
     #[test]

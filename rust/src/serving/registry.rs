@@ -35,7 +35,7 @@ use crate::schema::Model;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// One published model version: an immutable shared [`PreparedModel`]
 /// plus lifecycle bookkeeping.
@@ -507,90 +507,150 @@ where
                 // PreparedModel is immutable at invoke time, so a panic
                 // can poison only the ExecState.
                 let mut current: Option<(Arc<ModelVersion>, ExecState)> = None;
-                loop {
-                    let req = {
+                'pull: loop {
+                    // GATHER: with max_batch = 1 this returns the single
+                    // pulled request immediately (no window wait) — the
+                    // pre-batching behavior, verbatim.
+                    let gathered = {
                         let rx = req_rx.lock().unwrap_or_else(|p| p.into_inner());
-                        rx.recv()
+                        let first = match rx.recv() {
+                            Ok(r) => r,
+                            Err(_) => break 'pull,
+                        };
+                        super::batch::gather(&rx, first, cfg.max_batch, cfg.batch_window)
                     };
-                    let Ok(req) = req else { break };
-                    if let Some(d) = req.deadline {
-                        if Instant::now() >= d {
-                            shared.deadline_misses.fetch_add(1, Ordering::SeqCst);
-                            continue;
+                    // EXAMINE: shed expired members individually; their
+                    // batchmates stay pending and are served.
+                    let now = Instant::now();
+                    let mut pending: Vec<Request> = Vec::with_capacity(gathered.len());
+                    for req in gathered {
+                        if let Some(d) = req.deadline {
+                            if now >= d {
+                                shared.deadline_misses.fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
                         }
+                        pending.push(req);
+                    }
+                    if pending.is_empty() {
+                        continue;
                     }
                     crate::faults::queue_stall_point();
-                    // Version swap point: promotions and rollbacks take
-                    // effect here, between requests.
-                    let Some(live) = registry.live() else {
-                        // Every version retired: this request was
-                        // accepted but can never be served.
-                        dropped_after_pull.fetch_add(1, Ordering::SeqCst);
-                        shared.breaker_open.store(true, Ordering::SeqCst);
-                        abnormal = true;
-                        break;
-                    };
-                    let stale = match &current {
-                        Some((v, _)) => v.seq != live.seq,
-                        None => true,
-                    };
-                    if stale {
-                        current = Some((Arc::clone(&live), live.prepared.exec_state()));
-                    }
-                    let Some((cur, es)) = current.as_mut() else { continue };
-                    let ver = Arc::clone(cur);
-                    let pm = &ver.prepared;
-                    let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || -> Result<Vec<i8>> {
-                            crate::faults::version_panic_point(ver.name());
-                            pm.input_mut(es, 0)?.copy_from_i8(&req.input)?;
-                            pm.invoke(es)?;
-                            Ok(pm.output(es, 0)?.as_i8()?.to_vec())
-                        },
-                    ));
-                    match unwound {
-                        Ok(Ok(output)) => {
-                            if let Some(d) = req.deadline {
-                                if Instant::now() >= d {
-                                    shared.late_completions.fetch_add(1, Ordering::SeqCst);
+                    // Serve the gathered batch in chunks no larger than
+                    // the live version's own batch capability (a version
+                    // published without batch support serves lane by
+                    // lane — correctness never depends on the publish
+                    // options).
+                    let mut next = 0usize;
+                    while next < pending.len() {
+                        // Version swap point: promotions and rollbacks
+                        // take effect here, between (sub-)batches.
+                        let Some(live) = registry.live() else {
+                            // Every version retired: the rest of this
+                            // batch was accepted but can never be served.
+                            dropped_after_pull
+                                .fetch_add(pending.len() - next, Ordering::SeqCst);
+                            shared.breaker_open.store(true, Ordering::SeqCst);
+                            abnormal = true;
+                            break 'pull;
+                        };
+                        let stale = match &current {
+                            Some((v, _)) => v.seq != live.seq,
+                            None => true,
+                        };
+                        if stale {
+                            current = Some((Arc::clone(&live), live.prepared.exec_state()));
+                        }
+                        let Some((cur, es)) = current.as_mut() else { break 'pull };
+                        let ver = Arc::clone(cur);
+                        let pm = &ver.prepared;
+                        let cap = pm.max_batch().max(1);
+                        let end = (next + cap).min(pending.len());
+                        let chunk = &pending[next..end];
+                        let m = chunk.len();
+                        // INVOKE: one batched pass for this chunk.
+                        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || -> Result<Vec<i8>> {
+                                crate::faults::version_panic_point(ver.name());
+                                let mut view = pm.input_mut_batched(es, 0, m)?;
+                                if !super::batch::pack_lanes(view.as_i8_mut()?, chunk) {
+                                    return Err(Error::Serving(
+                                        "batch member input length mismatch".into(),
+                                    ));
+                                }
+                                pm.invoke_batched(es, m)?;
+                                Ok(pm.output_batched(es, 0, m)?.as_i8()?.to_vec())
+                            },
+                        ));
+                        next = end;
+                        match unwound {
+                            Ok(Ok(output)) => {
+                                // SCATTER: lateness and latency from each
+                                // request's own `enqueued`, never
+                                // batch-formation time.
+                                let lane_n = output.len() / m;
+                                for (b, req) in chunk.iter().enumerate() {
+                                    if let Some(d) = req.deadline {
+                                        if Instant::now() >= d {
+                                            shared
+                                                .late_completions
+                                                .fetch_add(1, Ordering::SeqCst);
+                                        }
+                                    }
+                                    let Some(out) = super::batch::lane(&output, lane_n, b)
+                                    else {
+                                        shared.invoke_errors.fetch_add(1, Ordering::SeqCst);
+                                        continue;
+                                    };
+                                    let resp = Response {
+                                        id: req.id,
+                                        output: out.to_vec(),
+                                        latency: req.enqueued.elapsed(),
+                                        worker: w,
+                                    };
+                                    if resp_tx.send(resp).is_err() {
+                                        break 'pull;
+                                    }
                                 }
                             }
-                            let resp = Response {
-                                id: req.id,
-                                output,
-                                latency: req.enqueued.elapsed(),
-                                worker: w,
-                            };
-                            if resp_tx.send(resp).is_err() {
-                                break;
+                            Ok(Err(_)) => {
+                                // A clean error fails every chunk member
+                                // as its own counted loss.
+                                shared.invoke_errors.fetch_add(m, Ordering::SeqCst);
                             }
-                        }
-                        Ok(Err(_)) => {
-                            shared.invoke_errors.fetch_add(1, Ordering::SeqCst);
-                        }
-                        Err(_payload) => {
-                            shared.panics.fetch_add(1, Ordering::SeqCst);
-                            shared.poisoned_arenas.fetch_add(1, Ordering::SeqCst);
-                            // Drop the poisoned ExecState; the next pull
-                            // rebuilds one (the respawn).
-                            current = None;
-                            let used = ver.panics.fetch_add(1, Ordering::SeqCst);
-                            if used >= shared.max_respawns {
-                                match registry.exhaust(&ver) {
-                                    ExhaustOutcome::RolledBack(_)
-                                    | ExhaustOutcome::AlreadyHandled(Some(_)) => {
-                                        // A good version serves from the
-                                        // next pull; the worker lives on.
+                            Err(_payload) => {
+                                // One supervision event that loses the
+                                // whole chunk's membership; batchmates in
+                                // later chunks still get served.
+                                shared.panics.fetch_add(1, Ordering::SeqCst);
+                                shared.panic_lost.fetch_add(m, Ordering::SeqCst);
+                                shared.poisoned_arenas.fetch_add(1, Ordering::SeqCst);
+                                // Drop the poisoned ExecState; the next
+                                // chunk/pull rebuilds one (the respawn).
+                                current = None;
+                                let used = ver.panics.fetch_add(1, Ordering::SeqCst);
+                                if used >= shared.max_respawns {
+                                    match registry.exhaust(&ver) {
+                                        ExhaustOutcome::RolledBack(_)
+                                        | ExhaustOutcome::AlreadyHandled(Some(_)) => {
+                                            // A good version serves from
+                                            // the next chunk; the worker
+                                            // lives on.
+                                        }
+                                        ExhaustOutcome::AlreadyHandled(None)
+                                        | ExhaustOutcome::Terminal => {
+                                            shared.breaker_open.store(true, Ordering::SeqCst);
+                                            dropped_after_pull.fetch_add(
+                                                pending.len() - next,
+                                                Ordering::SeqCst,
+                                            );
+                                            abnormal = true;
+                                            break 'pull;
+                                        }
                                     }
-                                    ExhaustOutcome::AlreadyHandled(None)
-                                    | ExhaustOutcome::Terminal => {
-                                        shared.breaker_open.store(true, Ordering::SeqCst);
-                                        abnormal = true;
-                                        break;
-                                    }
+                                } else {
+                                    shared.respawns_used.fetch_add(1, Ordering::SeqCst);
                                 }
-                            } else {
-                                shared.respawns_used.fetch_add(1, Ordering::SeqCst);
                             }
                         }
                     }
@@ -608,10 +668,7 @@ where
             drop(submitter);
         });
 
-        let mut latencies = Vec::new();
-        let mut per_worker = vec![0usize; cfg.workers];
-        let mut cold_start_ns = vec![0u64; cfg.workers];
-        let mut completed = 0usize;
+        let mut col = super::Collector::new(cfg.workers);
         for resp in resp_rx.iter() {
             if resp.output.len() != expected_out_len {
                 shared.breaker_open.store(true, Ordering::SeqCst);
@@ -621,13 +678,8 @@ where
                     resp.output.len()
                 )));
             }
-            if per_worker[resp.worker] == 0 {
-                cold_start_ns[resp.worker] = resp.latency.as_nanos() as u64;
-            }
             on_response(&resp);
-            latencies.push(resp.latency);
-            per_worker[resp.worker] += 1;
-            completed += 1;
+            col.record(&resp);
         }
         let wall = t0.elapsed();
 
@@ -639,32 +691,25 @@ where
             }
         }
 
-        latencies.sort();
-        let pick = |p: f64| -> Duration {
-            if latencies.is_empty() {
-                Duration::ZERO
-            } else {
-                latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
-            }
-        };
+        let [p50, p95, p99] = col.percentiles();
         let mut faults: FaultTaxonomy = shared.taxonomy();
         faults.dropped = dropped;
         let stats_after = registry.stats();
         faults.canary_rejects = stats_after.canary_rejects - stats_before.canary_rejects;
         faults.rollbacks = stats_after.rollbacks - stats_before.rollbacks;
         Ok(ServingReport {
-            completed,
+            completed: col.completed,
             wall,
-            throughput_rps: if completed == 0 {
+            throughput_rps: if col.completed == 0 {
                 0.0
             } else {
-                completed as f64 / wall.as_secs_f64().max(1e-9)
+                col.completed as f64 / wall.as_secs_f64().max(1e-9)
             },
-            latency_p50: pick(0.50),
-            latency_p95: pick(0.95),
-            latency_p99: pick(0.99),
-            per_worker,
-            cold_start_ns,
+            latency_p50: p50,
+            latency_p95: p95,
+            latency_p99: p99,
+            per_worker: col.per_worker,
+            cold_start_ns: col.cold_start_ns,
             faults,
             breaker_open: shared.breaker_open.load(Ordering::SeqCst),
             active_version: registry.active_version(),

@@ -419,6 +419,97 @@ fn f32_whole_model_simulated_pjrt_matches_interpreter_across_tiers() {
     assert!(baseline.is_some(), "scalar at minimum must have run");
 }
 
+// ---------------------------------------------------------------------------
+// Batched twin sweep: one batched invoke vs m sequential invokes
+// ---------------------------------------------------------------------------
+
+/// The batched-inference contract, swept across every dispatch tier: one
+/// `invoke_batched` over `m` stacked request lanes must be bit-identical
+/// to `m` sequential `invoke` calls on the same prepared model — under
+/// every forced backend, for ragged batch sizes (2, 3) and the packed
+/// block size (8). The batched scalar outputs must also equal every
+/// other tier's batched outputs, so batching cannot reintroduce a
+/// cross-tier divergence the unbatched sweep above rules out.
+fn batched_twin_sweep(name: &str, make: fn() -> Model) {
+    use std::sync::Arc;
+    use tfmicro::interpreter::{Options, PreparedModel};
+
+    let probe = make();
+    let inputs = random_inputs(&probe, 8, 0xBA7C);
+    let resolver = OpResolver::with_optimized_ops();
+
+    for m in [2usize, 3, 8] {
+        let mut scalar_batched: Option<Vec<i8>> = None;
+        for backend in GemmBackend::all() {
+            let Some(_guard) = ForceDispatch::force(backend) else {
+                eprintln!("SKIP {name} m={m}: backend {backend} unavailable on this machine");
+                continue;
+            };
+            // Build under the forced backend so populate-time packing and
+            // side tables come from this tier, exactly like the unbatched
+            // sweep.
+            let pm = PreparedModel::build(
+                Arc::new(make()),
+                &resolver,
+                Options { max_batch: m, ..Default::default() },
+            )
+            .expect("batched build");
+
+            // Ground truth: m sequential single invokes on the same
+            // prepared weights.
+            let mut es = pm.exec_state();
+            let mut seq = Vec::with_capacity(m);
+            for input in inputs.iter().take(m) {
+                pm.input_mut(&mut es, 0).unwrap().copy_from_i8(input).unwrap();
+                pm.invoke(&mut es).unwrap();
+                seq.push(pm.output(&es, 0).unwrap().as_i8().unwrap().to_vec());
+            }
+
+            // One batched invoke over the same m inputs, packed one
+            // request per lane.
+            let mut esb = pm.exec_state();
+            {
+                let mut view = pm.input_mut_batched(&mut esb, 0, m).unwrap();
+                let dst = view.as_i8_mut().unwrap();
+                let lane_n = dst.len() / m;
+                for (b, input) in inputs.iter().take(m).enumerate() {
+                    dst[b * lane_n..(b + 1) * lane_n].copy_from_slice(input);
+                }
+            }
+            pm.invoke_batched(&mut esb, m).unwrap();
+            let out = pm.output_batched(&esb, 0, m).unwrap().as_i8().unwrap().to_vec();
+
+            let lane_n = out.len() / m;
+            assert_eq!(lane_n * m, out.len(), "{name} m={m} {backend}: ragged batched output");
+            for (b, want) in seq.iter().enumerate() {
+                assert_eq!(
+                    &out[b * lane_n..(b + 1) * lane_n],
+                    &want[..],
+                    "{name} m={m} {backend}: lane {b} differs from its sequential invoke"
+                );
+            }
+            match &scalar_batched {
+                None => scalar_batched = Some(out),
+                Some(anchor) => assert_eq!(
+                    &out, anchor,
+                    "{name} m={m} {backend}: batched output differs from scalar tier"
+                ),
+            }
+        }
+        assert!(scalar_batched.is_some(), "{name} m={m}: scalar at minimum must have run");
+    }
+}
+
+#[test]
+fn hotword_like_batched_matches_sequential_across_tiers() {
+    batched_twin_sweep("hotword-like", hotword_like_model);
+}
+
+#[test]
+fn person_detection_like_batched_matches_sequential_across_tiers() {
+    batched_twin_sweep("person-detection-like", person_detection_like_model);
+}
+
 /// The real exported models, when `artifacts/` exists (otherwise the
 /// builder-made graphs above carry the sweep).
 #[test]

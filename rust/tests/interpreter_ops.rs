@@ -277,7 +277,7 @@ fn planner_choices_agree_on_results() {
             &model,
             &resolver,
             arena.as_mut_slice(),
-            Options { planner },
+            Options { planner, ..Default::default() },
         )
         .unwrap();
         interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();

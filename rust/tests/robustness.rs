@@ -207,7 +207,7 @@ fn offline_plan_end_to_end() {
     let run = |model: &Model, planner: PlannerChoice| -> (Vec<i8>, usize) {
         let mut arena = Arena::new(32 * 1024);
         let mut interp =
-            MicroInterpreter::with_options(model, &resolver, arena.as_mut_slice(), Options { planner })
+            MicroInterpreter::with_options(model, &resolver, arena.as_mut_slice(), Options { planner, ..Default::default() })
                 .unwrap();
         let input: Vec<i8> = (0..64).map(|i| (i - 32) as i8).collect();
         interp.input_mut(0).unwrap().copy_from_i8(&input).unwrap();
@@ -227,7 +227,7 @@ fn offline_plan_end_to_end() {
         &unplanned,
         &resolver,
         arena.as_mut_slice(),
-        Options { planner: PlannerChoice::Offline },
+        Options { planner: PlannerChoice::Offline, ..Default::default() },
     )
     .is_err());
 
@@ -238,7 +238,7 @@ fn offline_plan_end_to_end() {
         &bad,
         &resolver,
         arena.as_mut_slice(),
-        Options { planner: PlannerChoice::Offline },
+        Options { planner: PlannerChoice::Offline, ..Default::default() },
     )
     .is_err());
 }

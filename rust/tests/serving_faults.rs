@@ -585,6 +585,74 @@ fn serving_reports_degraded_ops_in_taxonomy() {
     }
 }
 
+/// Batched inference through an offloadable op: the XLA artifact
+/// contract pins the exact `(m, k)` input shape, so a stacked-lane
+/// batched input simply is not offloadable — the op must take the
+/// bit-exact CPU packed path as a *silent per-call* fallback. Neither
+/// the per-op degraded flag nor the process degrade counter may move
+/// (shape mismatch is not a backend failure), and the very next
+/// batch-of-one invoke must offload again.
+#[test]
+fn batched_request_takes_silent_cpu_fallback_without_degrading() {
+    use tfmicro::interpreter::{Options, PreparedModel};
+
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let Some((path, shape)) = fc_artifact() else { return };
+    let (model, input) = fc_model_at(shape);
+    let mut input2 = input.clone();
+    for v in input2.iter_mut() {
+        *v = v.wrapping_add(17);
+    }
+
+    // Pure-Rust ground truth per lane.
+    let rust_resolver = OpResolver::with_optimized_ops();
+    let want0 = baseline(&model, &rust_resolver, &input);
+    let want1 = baseline(&model, &rust_resolver, &input2);
+
+    let kernel = Arc::new(XlaFcKernel::load(&path, shape).expect("load artifact"));
+    let mut resolver = OpResolver::with_optimized_ops();
+    resolver.register(BuiltinOp::FullyConnected, kernel.clone()).unwrap();
+    let pm = PreparedModel::build(
+        Arc::new(Model::from_bytes(model.data()).unwrap()),
+        &resolver,
+        Options { max_batch: 2, ..Default::default() },
+    )
+    .expect("batched build with the offload kernel registered");
+    assert!(kernel.degraded_ops().is_empty());
+
+    // Batched invoke: both lanes bit-exact, zero backend traffic, zero
+    // degrade movement.
+    let degrades_before = degrade_events();
+    let counters_before = op_counters();
+    let mut es = pm.exec_state();
+    {
+        let mut view = pm.input_mut_batched(&mut es, 0, 2).unwrap();
+        let dst = view.as_i8_mut().unwrap();
+        let lane_n = dst.len() / 2;
+        dst[..lane_n].copy_from_slice(&input);
+        dst[lane_n..].copy_from_slice(&input2);
+    }
+    pm.invoke_batched(&mut es, 2).unwrap();
+    let out = pm.output_batched(&es, 0, 2).unwrap().as_i8().unwrap().to_vec();
+    let lane_n = out.len() / 2;
+    assert_eq!(&out[..lane_n], &want0[..], "lane 0 bit-exact via the CPU packed path");
+    assert_eq!(&out[lane_n..], &want1[..], "lane 1 bit-exact via the CPU packed path");
+
+    let d = op_counters().since(&counters_before);
+    assert_eq!(d.executes, 0, "batched call must not touch the backend");
+    assert_eq!(d.uploads, 0, "batched call must not transfer inputs");
+    assert_eq!(degrade_events(), degrades_before, "silent fallback: no degrade event");
+    assert!(kernel.degraded_ops().is_empty(), "silent fallback: no degraded flag");
+
+    // Batch-of-one on the same prepared model still offloads.
+    pm.input_mut(&mut es, 0).unwrap().copy_from_i8(&input).unwrap();
+    pm.invoke(&mut es).unwrap();
+    assert_eq!(pm.output(&es, 0).unwrap().as_i8().unwrap(), &want0[..]);
+    let d1 = op_counters().since(&counters_before);
+    assert_eq!(d1.executes, 1, "the artifact-shape invoke offloads again");
+    assert!(kernel.degraded_ops().is_empty());
+}
+
 // ---------------------------------------------------------------------------
 // (d) Seeded chaos: schedule in, matching taxonomy out
 // ---------------------------------------------------------------------------
@@ -826,4 +894,183 @@ fn post_promotion_panics_roll_back_to_last_known_good() {
     pm.input_mut(&mut es, 0).unwrap().copy_from_i8(&input).unwrap();
     pm.invoke(&mut es).unwrap();
     assert_eq!(pm.output(&es, 0).unwrap().as_i8().unwrap(), &want[..]);
+}
+
+// ---------------------------------------------------------------------------
+// (f) Batched coalescing: fault semantics through the batching window
+// ---------------------------------------------------------------------------
+
+/// A mid-batch kernel panic poisons the whole batch's arena but fails
+/// each member as its own counted loss: one `panics` event, one respawn
+/// charge, one poisoned state — and `panic_lost` grows by exactly the
+/// batch size. Batchmates in other batches are untouched and bit-exact.
+#[test]
+fn coalesced_batch_panic_loses_exactly_its_members() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    quiet_injected_panics();
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+
+    // A batched invoke crosses the per-op fault point once regardless of
+    // how many lanes it carries, so the schedule indexes *invokes*, not
+    // requests: hit 1 is the second batch (requests 4..8).
+    let guard = faults::install(
+        FaultPlan::new().fail_at(faults::KERNEL_PANIC, Some("FULLY_CONNECTED"), &[1]),
+    );
+    let cfg = ServingConfig {
+        workers: 1,
+        queue_depth: 16,
+        max_batch: 4,
+        batch_window: Duration::from_millis(250),
+        ..Default::default()
+    };
+    let mut outputs: Vec<Vec<i8>> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..12 {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+        },
+        |resp: &Response| outputs.push(resp.output.clone()),
+    )
+    .expect("a contained batch panic must not fail the run");
+
+    assert_eq!(faults::injected(faults::KERNEL_PANIC), 1, "one batched invoke panicked");
+    drop(guard);
+
+    assert_eq!(report.completed, 8, "exactly the poisoned batch's members are lost");
+    assert_eq!(report.faults.panics, 1, "one supervision event, not one per member");
+    assert_eq!(report.faults.panic_lost, 4, "…that lost all four batch members");
+    assert_eq!(report.faults.respawns, 1, "one respawn charge for the whole batch");
+    assert_eq!(report.faults.poisoned_arenas, 1);
+    assert_eq!(report.faults.invoke_errors, 0);
+    assert_eq!(report.faults.deadline_misses, 0);
+    assert_eq!(report.faults.dropped, 0);
+    assert!(!report.breaker_open);
+    assert!(report.faults.summary().contains("panic-lost 4"));
+    assert_eq!(outputs.len(), 8);
+    for out in &outputs {
+        assert_eq!(out, &want, "surviving batches bit-exact");
+    }
+}
+
+/// An expired member is shed from the gathered batch individually
+/// (counted in `deadline_misses`) without discarding its batchmates —
+/// which complete on time from their own `enqueued`, never the
+/// batch-formation time.
+#[test]
+fn expired_batch_member_shed_without_discarding_batchmates() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+    let want = baseline(&model, &resolver, &input);
+    // Empty plan: no faults, but serialized + isolated from other plans.
+    let guard = faults::install(FaultPlan::new());
+
+    let cfg = ServingConfig {
+        workers: 1,
+        queue_depth: 8,
+        max_batch: 4,
+        batch_window: Duration::from_millis(250),
+        ..Default::default()
+    };
+    let mut served: Vec<(u64, Vec<i8>)> = Vec::new();
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            // Request 1's deadline is already in the past when it is
+            // submitted; the other three are unconstrained. All four land
+            // in one gather window.
+            sub.submit(Request::new(0, input.clone())).expect("accepted");
+            sub.submit(Request::new(1, input.clone()).with_deadline(Instant::now()))
+                .expect("accepted");
+            sub.submit(Request::new(2, input.clone())).expect("accepted");
+            sub.submit(
+                Request::new(3, input.clone())
+                    .with_deadline(Instant::now() + Duration::from_secs(30)),
+            )
+            .expect("accepted");
+        },
+        |resp: &Response| served.push((resp.id, resp.output.clone())),
+    )
+    .unwrap();
+    drop(guard);
+
+    assert_eq!(report.completed, 3, "only the expired member is shed");
+    assert_eq!(report.faults.deadline_misses, 1);
+    assert_eq!(report.faults.late_completions, 0, "generous deadline met from own enqueued");
+    assert_eq!(report.faults.panics, 0);
+    assert_eq!(report.faults.dropped, 0);
+    served.sort_unstable_by_key(|(id, _)| *id);
+    let ids: Vec<u64> = served.iter().map(|(id, _)| *id).collect();
+    assert_eq!(ids, vec![0, 2, 3], "batchmates of the shed member are served");
+    for (_, out) in &served {
+        assert_eq!(out, &want, "served batchmates bit-exact");
+    }
+}
+
+/// Respawn-budget exhaustion with batching: each batch panic is one
+/// budget charge exactly as in the unbatched path, so two panicked
+/// batches against a budget of one open the breaker — and every lost
+/// request is accounted (members in `panic_lost`, the never-pulled rest
+/// in `dropped`).
+#[test]
+fn batched_respawn_budget_exhaustion_trips_the_breaker() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    if !injection_available() {
+        return;
+    }
+    quiet_injected_panics();
+    let (model, input) = fc_model();
+    let resolver = OpResolver::with_optimized_ops();
+
+    let guard = faults::install(
+        FaultPlan::new().fail_at(faults::KERNEL_PANIC, Some("FULLY_CONNECTED"), &[0, 1]),
+    );
+    let cfg = ServingConfig {
+        workers: 1,
+        queue_depth: 8,
+        max_respawns: 1,
+        max_batch: 2,
+        batch_window: Duration::from_millis(250),
+        ..Default::default()
+    };
+    let report = run_with_feeder(
+        &model,
+        &resolver,
+        cfg,
+        4,
+        |sub| {
+            for id in 0..8 {
+                sub.submit(Request::new(id, input.clone())).expect("accepted");
+            }
+        },
+        |_| {},
+    )
+    .expect("an exhausted fleet still reports, it does not error the run");
+
+    assert_eq!(faults::injected(faults::KERNEL_PANIC), 2);
+    drop(guard);
+
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.faults.panics, 2);
+    assert_eq!(report.faults.panic_lost, 4, "two batches of two lost to panics");
+    assert_eq!(report.faults.respawns, 1, "budget of 1 allows exactly one respawn");
+    assert_eq!(report.faults.poisoned_arenas, 2);
+    assert_eq!(report.faults.dropped, 4, "the never-pulled remainder is drained as dropped");
+    assert!(report.breaker_open);
 }
