@@ -30,6 +30,57 @@ if [[ "${1:-}" == "--bench" ]]; then
     if [[ -f BENCH_serving.json ]]; then
         echo "  serving bench archived: BENCH_serving.json"
     fi
+    # Planner bench: deterministic arena sizes per planning strategy
+    # (including the rewrite-on column). The synthetic cases need no
+    # artifacts, so BENCH_planner.json always materializes, and its
+    # arena columns are noise-free — gated below against
+    # BENCH_planner_baseline.json at the same >10% threshold.
+    echo "== cargo bench --bench bench_planner =="
+    cargo bench --bench bench_planner
+    if [[ -f BENCH_planner.json ]]; then
+        echo "  planner bench archived: BENCH_planner.json"
+    fi
+    if [[ -f BENCH_planner_baseline.json && -f BENCH_planner.json ]] \
+        && command -v python3 >/dev/null 2>&1; then
+        echo "== planner trajectory: BENCH_planner.json vs BENCH_planner_baseline.json (fail >10% regression) =="
+        python3 - <<'EOF'
+import json, sys
+
+TOLERANCE = 1.10  # fail on >10% arena growth (deterministic, not timing)
+COLUMNS = ("greedy_arena", "greedy_rw_arena")
+
+base = json.load(open("BENCH_planner_baseline.json"))
+cur = json.load(open("BENCH_planner.json"))
+basemap = {c["case"]: c for c in base.get("cases", [])}
+curnames = {c["case"] for c in cur.get("cases", [])}
+failed = False
+for name in basemap:
+    if name not in curnames:
+        print(f"  MISSING from current run: {name}")
+        failed = True
+for c in cur.get("cases", []):
+    b = basemap.get(c["case"])
+    if b is None:
+        print(f"  new case (no baseline): {c['case']}")
+        continue
+    for col in COLUMNS:
+        if col not in b or col not in c or not b[col]:
+            continue
+        ratio = c[col] / b[col]
+        tag = "REGRESSION" if ratio > TOLERANCE else "ok"
+        print(f"  {c['case']:<12} {col:<16} {b[col]:>10} -> {c[col]:>10} bytes "
+              f"(worse by {ratio:5.2f}x) {tag}")
+        if ratio > TOLERANCE:
+            failed = True
+if failed:
+    print("planner gate FAILED: >10% arena regression vs baseline", file=sys.stderr)
+    sys.exit(1)
+print("planner gate passed.")
+EOF
+    elif [[ ! -f BENCH_planner_baseline.json ]]; then
+        echo "warning: no BENCH_planner_baseline.json; skipping planner regression check." >&2
+        echo "         To seed it: cp BENCH_planner.json BENCH_planner_baseline.json and commit it." >&2
+    fi
     if [[ ! -f BENCH_baseline.json ]]; then
         echo "warning: no BENCH_baseline.json; skipping regression check." >&2
         echo "         To seed the trajectory gate: cp BENCH_kernels.json BENCH_baseline.json and commit it." >&2
@@ -142,6 +193,7 @@ else
     no_panic_gate rust/src/serving/registry.rs
     no_panic_gate rust/src/schema/reader.rs
     no_panic_gate rust/src/interpreter/prepared.rs
+    no_panic_gate rust/src/rewriter/mod.rs
     no_panic_gate rust/src/ops/opt_ops/conv.rs
     no_panic_gate rust/src/ops/opt_ops/fully_connected.rs
     no_panic_gate rust/src/ops/opt_ops/gemm/mod.rs

@@ -8,45 +8,62 @@
 //! the split's *direction* per model is the reproduced result:
 //! activation-heavy VWW is non-persistent-dominated, tiny-activation
 //! Hotword is persistent-dominated.
+//!
+//! The `NP(no-rw)` column is the `Options::skip_rewrite` ablation: the
+//! non-persistent high-water with the prepare-time graph rewriter off.
+//! The delta between it and `Nonpersistent` is what the rewriter buys.
 
 use tfmicro::arena::Arena;
-use tfmicro::interpreter::MicroInterpreter;
+use tfmicro::interpreter::{MicroInterpreter, Options};
 use tfmicro::ops::OpResolver;
 use tfmicro::schema::Model;
 use tfmicro::testutil::fmt_kb;
 
+fn measure(model: &Model, skip_rewrite: bool) -> Option<tfmicro::arena::ArenaUsage> {
+    let resolver = OpResolver::with_reference_ops();
+    let mut arena = Arena::new(1024 * 1024);
+    let interp = MicroInterpreter::with_options(
+        model,
+        &resolver,
+        arena.as_mut_slice(),
+        Options { skip_rewrite, ..Default::default() },
+    )
+    .ok()?;
+    Some(interp.arena_usage())
+}
+
 fn main() {
     println!("== Table 2: memory consumption (measured from the allocator) ==");
     println!(
-        "{:<16} {:>14} {:>16} {:>12} {:>12}",
-        "Model", "Persistent", "Nonpersistent", "Total", "Flash"
+        "{:<16} {:>14} {:>16} {:>14} {:>12} {:>12}",
+        "Model", "Persistent", "Nonpersistent", "NP(no-rw)", "Total", "Flash"
     );
     for name in ["conv_ref", "vww", "hotword"] {
         let Ok(model) = Model::from_file(format!("artifacts/{name}.tmf")) else {
             eprintln!("SKIP {name}: run `make artifacts`");
             continue;
         };
-        let resolver = OpResolver::with_reference_ops();
-        let mut arena = Arena::new(1024 * 1024);
-        let interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
-        let u = interp.arena_usage();
+        let u = measure(&model, false).unwrap();
+        let u_norw = measure(&model, true).unwrap();
         println!(
-            "{:<16} {:>14} {:>16} {:>12} {:>12}",
+            "{:<16} {:>14} {:>16} {:>14} {:>12} {:>12}",
             name,
             fmt_kb(u.persistent),
             fmt_kb(u.nonpersistent),
+            fmt_kb(u_norw.nonpersistent),
             fmt_kb(u.total),
             fmt_kb(model.serialized_size())
+        );
+        assert!(
+            u.nonpersistent <= u_norw.nonpersistent,
+            "{name}: rewriting must never grow the activation plan"
         );
     }
 
     // The paper's qualitative claims, checked mechanically.
     let check = |name: &str| -> Option<(usize, usize)> {
         let model = Model::from_file(format!("artifacts/{name}.tmf")).ok()?;
-        let resolver = OpResolver::with_reference_ops();
-        let mut arena = Arena::new(1024 * 1024);
-        let interp = MicroInterpreter::new(&model, &resolver, &mut arena).ok()?;
-        let u = interp.arena_usage();
+        let u = measure(&model, false)?;
         Some((u.persistent, u.nonpersistent))
     };
     if let (Some(vww), Some(hot)) = (check("vww"), check("hotword")) {

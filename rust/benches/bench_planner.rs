@@ -2,36 +2,59 @@
 //!
 //! Per model, compares the non-persistent region size under the naive
 //! no-reuse planner (Figure 4a), the greedy first-fit-decreasing planner
-//! (Figure 4b, the paper's production strategy), and the offline plan
-//! (§4.4.2), plus planning wall time (the "more overhead during model
-//! preparation" trade-off) and distance from the liveness lower bound.
+//! (Figure 4b, the paper's production strategy), the greedy planner over
+//! the *rewritten* graph (prepare-time rewriter on — pads folded, views
+//! elided), and the offline plan (§4.4.2), plus planning wall time (the
+//! "more overhead during model preparation" trade-off) and distance from
+//! the liveness lower bound.
+//!
+//! Emits machine-readable `BENCH_planner.json` at the crate root; the
+//! arena columns are deterministic (pure planning, no timing noise), so
+//! `ci.sh --bench` gates them at >10% regression vs
+//! `BENCH_planner_baseline.json`. The synthetic lifetime patterns below
+//! are seeded, so the gate has stable cases even without `artifacts/`.
 
 use std::time::Instant;
+use tfmicro::ops::OpResolver;
 use tfmicro::planner::{
-    analyze_lifetimes, plan_lower_bound, GreedyPlanner, LinearPlanner, MemoryPlanner,
-    OfflinePlanner,
+    analyze_lifetimes, plan_lower_bound, BufferRequest, GreedyPlanner, LinearPlanner,
+    MemoryPlanner, OfflinePlanner,
 };
+use tfmicro::rewriter::{self, RewriteOutcome};
 use tfmicro::schema::Model;
-use tfmicro::testutil::fmt_kb;
+use tfmicro::testutil::{fmt_kb, Rng};
 
 fn main() {
+    let mut json_cases: Vec<String> = Vec::new();
+
     println!("== Figure 4: memory-planner ablation (non-persistent region) ==");
     println!(
-        "{:<12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>12}",
-        "Model", "Linear", "Greedy-FFD", "Offline", "LowerBound", "Saving", "PlanTime"
+        "{:<12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "Model", "Linear", "Greedy-FFD", "Greedy+RW", "Offline", "LowerBound", "Saving", "PlanTime"
     );
     for name in ["conv_ref", "hotword", "vww"] {
         let Ok(model) = Model::from_file(format!("artifacts/{name}.tmf")) else {
             eprintln!("SKIP {name}: run `make artifacts`");
             continue;
         };
-        let info = analyze_lifetimes(&model);
+        let info = analyze_lifetimes(&model).unwrap();
         let reqs = &info.requests;
 
         let linear = LinearPlanner.plan(reqs, 16).unwrap();
         let t0 = Instant::now();
         let greedy = GreedyPlanner.plan(reqs, 16).unwrap();
         let greedy_time = t0.elapsed();
+
+        // Rewrite-on column: what the interpreter actually plans by
+        // default since the prepare-time rewriter landed.
+        let resolver = OpResolver::with_reference_ops();
+        let rw_arena = match rewriter::rewrite(&model, Some(&resolver)) {
+            Ok(RewriteOutcome::Rewritten { model: rewritten, .. }) => {
+                let rw_info = analyze_lifetimes(&rewritten).unwrap();
+                GreedyPlanner.plan(&rw_info.requests, 16).unwrap().arena_size
+            }
+            _ => greedy.arena_size,
+        };
 
         // Offline: precompute on the "host" then apply (near-zero work).
         let fixed = OfflinePlanner::precompute(reqs, 16).unwrap();
@@ -43,10 +66,11 @@ fn main() {
         let lb = plan_lower_bound(reqs);
         let saving = 100.0 * (1.0 - greedy.arena_size as f64 / linear.arena_size.max(1) as f64);
         println!(
-            "{:<12} {:>12} {:>12} {:>12} {:>12} {:>9.1}% {:>12}",
+            "{:<12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9.1}% {:>12}",
             name,
             fmt_kb(linear.arena_size),
             fmt_kb(greedy.arena_size),
+            fmt_kb(rw_arena),
             fmt_kb(offline.arena_size),
             fmt_kb(lb),
             saving,
@@ -54,36 +78,52 @@ fn main() {
         );
         assert!(greedy.arena_size <= linear.arena_size);
         assert!(greedy.arena_size >= lb);
+        assert!(rw_arena <= greedy.arena_size, "rewriting must never cost arena");
+        json_cases.push(format!(
+            "    {{\"case\": \"{name}\", \"linear_arena\": {}, \"greedy_arena\": {}, \
+             \"greedy_rw_arena\": {}, \"offline_arena\": {}, \"lower_bound\": {}, \
+             \"greedy_ns\": {}, \"offline_ns\": {}}}",
+            linear.arena_size,
+            greedy.arena_size,
+            rw_arena,
+            offline.arena_size,
+            lb,
+            greedy_time.as_nanos(),
+            offline_time.as_nanos(),
+        ));
     }
 
-    // Planner quality on adversarial synthetic lifetime patterns.
+    // Planner quality on adversarial synthetic lifetime patterns. The
+    // "views" pattern exercises the alias edges the rewriter's reshape
+    // elision emits: every second buffer is a view of its predecessor.
     println!("\n== Synthetic lifetime patterns (greedy vs naive vs bound) ==");
-    use tfmicro::planner::BufferRequest;
-    use tfmicro::testutil::Rng;
     let mut rng = Rng::seeded(0xF16);
     for (label, gen) in [
         ("chain", 0usize),
         ("pyramid", 1),
         ("random", 2),
+        ("views", 3),
     ] {
         let reqs: Vec<BufferRequest> = match gen {
-            0 => (0..40)
-                .map(|i| BufferRequest { size: 1024, first_use: i, last_use: i + 1 })
-                .collect(),
+            0 => (0..40).map(|i| BufferRequest::new(1024, i, i + 1)).collect(),
             1 => (0..40)
                 .map(|i| {
                     let half = if i < 20 { i } else { 39 - i };
-                    BufferRequest { size: (half + 1) * 256, first_use: i, last_use: i + 1 }
+                    BufferRequest::new((half + 1) * 256, i, i + 1)
                 })
                 .collect(),
-            _ => (0..40)
+            2 => (0..40)
                 .map(|_| {
                     let first = rng.below(32);
-                    BufferRequest {
-                        size: 64 + rng.below(4096),
-                        first_use: first,
-                        last_use: first + rng.below(8),
-                    }
+                    BufferRequest::new(64 + rng.below(4096), first, first + rng.below(8))
+                })
+                .collect(),
+            _ => (0..20)
+                .flat_map(|i| {
+                    [
+                        BufferRequest::new(2048, 2 * i, 2 * i + 1),
+                        BufferRequest::new(2048, 2 * i + 1, 2 * i + 2).with_alias(2 * i),
+                    ]
                 })
                 .collect(),
         };
@@ -97,5 +137,18 @@ fn main() {
             fmt_kb(lb),
             greedy.arena_size as f64 / lb.max(1) as f64
         );
+        json_cases.push(format!(
+            "    {{\"case\": \"{label}\", \"linear_arena\": {}, \"greedy_arena\": {}, \
+             \"lower_bound\": {}}}",
+            linear.arena_size, greedy.arena_size, lb,
+        ));
+    }
+
+    // --- machine-readable trajectory (BENCH_planner.json) -------------------
+    let json = format!("{{\n  \"cases\": [\n{}\n  ]\n}}\n", json_cases.join(",\n"));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_planner.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
     }
 }

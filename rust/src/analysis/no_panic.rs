@@ -17,13 +17,16 @@ use super::{Diagnostic, Severity};
 /// Files the contract applies to (paths relative to `rust/`). The old
 /// grep gate covered only the first three; this is the full
 /// crash-sensitive surface: serving, registry hot-swap, flatbuffer
-/// reading, prepared execution, and the kernel invoke paths.
+/// reading, prepared execution, the prepare-time graph rewriter (runs
+/// on every untrusted model before planning), and the kernel invoke
+/// paths.
 pub const SURFACE: &[&str] = &[
     "src/serving/mod.rs",
     "src/serving/batch.rs",
     "src/serving/registry.rs",
     "src/schema/reader.rs",
     "src/interpreter/prepared.rs",
+    "src/rewriter/mod.rs",
     "src/ops/opt_ops/conv.rs",
     "src/ops/opt_ops/fully_connected.rs",
     "src/ops/opt_ops/gemm/mod.rs",

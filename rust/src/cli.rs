@@ -6,6 +6,7 @@
 //! ```text
 //! tfmicro inspect  <model.tmf>
 //! tfmicro run      <model.tmf> [--kernels ref|opt] [--iters N] [--profile] [--arena-kb N]
+//! tfmicro opt      <model.tmf> [--kernels ref|opt]
 //! tfmicro mem      <model.tmf> [--planner greedy|linear|auto]
 //! tfmicro overhead <model.tmf> [--kernels ref|opt] [--iters N]
 //! tfmicro simulate <model.tmf> [--platform m4|dsp]
@@ -97,10 +98,14 @@ fn fill_random_input(interp: &mut MicroInterpreter, seed: u64) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tfmicro <inspect|run|mem|overhead|simulate|serve|cpu|lint> <model.tmf> [flags]
+const USAGE: &str = "usage: tfmicro <inspect|run|opt|mem|overhead|simulate|serve|cpu|lint> <model.tmf> [flags]
   inspect   print model structure
   run       execute with random inputs (--kernels ref|opt, --iters N, --profile, --arena-kb N)
-  mem       arena accounting, Table 2 style (--planner greedy|linear|auto, --kernels ref|opt)
+  opt       prepare-time graph rewriter report: pass-by-pass rewrite log
+            plus the activation-plan delta (--kernels ref|opt picks the
+            resolver the fuse pass consults)
+  mem       arena accounting, Table 2 style, with per-rewrite-pass arena
+            attribution (--planner greedy|linear|auto, --kernels ref|opt)
   overhead  measured interpreter overhead, Figure 6 methodology (--iters N)
   simulate  cycle-model Figure 6 row (--platform m4|dsp)
   serve     closed-loop serving demo (--workers N, --requests N, --arena-kb N,
@@ -282,6 +287,52 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
                 _ => {}
             }
         }
+        "opt" => {
+            use crate::planner::{analyze_lifetimes, GreedyPlanner, MemoryPlanner};
+            use crate::rewriter::{self, RewriteOutcome};
+
+            let model = load(model_path)?;
+            let resolver = resolver_for(args.get("kernels"))?;
+            println!("model: {}", model.description());
+            match rewriter::rewrite(&model, Some(&resolver))? {
+                RewriteOutcome::Unchanged => {
+                    println!("no rewrite fired: the graph is already in lowered form, \
+                              carries rewrite metadata, or opted out");
+                }
+                RewriteOutcome::Rewritten { model: optimized, log } => {
+                    println!("ops:     {} -> {}", log.ops_before, log.ops_after);
+                    println!("tensors: {} -> {}", log.tensors_before, log.tensors_after);
+                    for p in &log.passes {
+                        let fired =
+                            p.ops_removed + p.tensors_removed + p.fused + p.aliased > 0;
+                        if fired {
+                            println!(
+                                "pass {:<13} ops -{}, tensors -{}, fused {}, aliased {}",
+                                p.name, p.ops_removed, p.tensors_removed, p.fused, p.aliased
+                            );
+                        } else {
+                            println!("pass {:<13} (no-op)", p.name);
+                        }
+                        for d in &p.details {
+                            println!("    {d}");
+                        }
+                    }
+                    let bytes = |m: &Model| -> Result<usize> {
+                        let info = analyze_lifetimes(m)?;
+                        Ok(GreedyPlanner
+                            .plan(&info.requests, crate::arena::DEFAULT_ALIGN)?
+                            .arena_size)
+                    };
+                    let (before, after) = (bytes(&model)?, bytes(&optimized)?);
+                    println!(
+                        "activation plan (greedy): {} -> {} ({} saved)",
+                        fmt_kb(before),
+                        fmt_kb(after),
+                        fmt_kb(before.saturating_sub(after)),
+                    );
+                }
+            }
+        }
         "mem" => {
             let model = load(model_path)?;
             let resolver = resolver_for(args.get("kernels"))?;
@@ -308,6 +359,44 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             println!("flash (model): {}", fmt_kb(model.serialized_size()));
             if args.has("detail") {
                 println!("{}", interp.arena_usage_detail().report());
+            }
+            // Per-pass arena attribution: replan the activation region
+            // after each rewrite-pass prefix so each pass's saving is
+            // visible on its own. Offline plans pin offsets against the
+            // unrewritten tensor table, so attribution is moot there.
+            if !matches!(planner, PlannerChoice::Offline) {
+                use crate::planner::{
+                    analyze_lifetimes, GreedyPlanner, LinearPlanner, MemoryPlanner,
+                };
+                use crate::rewriter::{self, RewriteOutcome, PASS_NAMES};
+
+                let plan_bytes = |m: &Model| -> Result<usize> {
+                    let info = analyze_lifetimes(m)?;
+                    let plan = if matches!(planner, PlannerChoice::Linear) {
+                        LinearPlanner.plan(&info.requests, crate::arena::DEFAULT_ALIGN)?
+                    } else {
+                        GreedyPlanner.plan(&info.requests, crate::arena::DEFAULT_ALIGN)?
+                    };
+                    Ok(plan.arena_size)
+                };
+                let base = plan_bytes(&model)?;
+                println!("rewrite-pass arena attribution (activation plan):");
+                println!("  (no rewrite)     {}", fmt_kb(base));
+                let mut prev = base;
+                for n in 1..=PASS_NAMES.len() {
+                    let bytes = match rewriter::rewrite_prefix(&model, Some(&resolver), n)? {
+                        RewriteOutcome::Unchanged => base,
+                        RewriteOutcome::Rewritten { model: m, .. } => plan_bytes(&m)?,
+                    };
+                    let saved = prev.saturating_sub(bytes);
+                    println!(
+                        "  + {:<14} {} ({} saved by this pass)",
+                        PASS_NAMES[n - 1],
+                        fmt_kb(bytes),
+                        fmt_kb(saved),
+                    );
+                    prev = bytes;
+                }
             }
         }
         "overhead" => {

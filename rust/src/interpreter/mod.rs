@@ -5,7 +5,13 @@
 //! 1. the application builds an [`crate::ops::OpResolver`] (which controls
 //!    which kernels link into the binary),
 //! 2. supplies a contiguous memory **arena**,
-//! 3. constructs a `MicroInterpreter`, which performs *all* allocation up
+//! 3. constructs a `MicroInterpreter`, which first validates the model and
+//!    runs the prepare-time **graph rewriter** ([`crate::rewriter`]) —
+//!    folding pads into SAME convolutions, eliding no-op views, and fusing
+//!    requant epilogues, all provably bit-exact — unless
+//!    [`Options::skip_rewrite`] is set or an offline plan is in play
+//!    (offline offsets index the original tensor table), and then performs
+//!    *all* allocation up
 //!    front in the **prepare → plan → populate** sequence: kernel
 //!    `prepare` calls communicate scratch and persistent-buffer needs,
 //!    lifetimes are analyzed, the memory planner places every
@@ -40,8 +46,26 @@ use crate::ops::{DataLoc, Kernel, OpContext, OpData, OpResolver, PrepareContext}
 use crate::planner::{
     analyze_lifetimes, BufferRequest, GreedyPlanner, LinearPlanner, MemoryPlanner, OfflinePlanner,
 };
+use crate::rewriter::{self, RewriteOutcome};
 use crate::schema::Model;
 use crate::tensor::DType;
+
+/// The interpreter's model handle: borrowed when the graph rewriter left
+/// the caller's model untouched, owned when it produced a rewritten copy.
+enum ModelRef<'m> {
+    Borrowed(&'m Model),
+    Owned(Box<Model>),
+}
+
+impl<'m> std::ops::Deref for ModelRef<'m> {
+    type Target = Model;
+    fn deref(&self) -> &Model {
+        match self {
+            ModelRef::Borrowed(m) => m,
+            ModelRef::Owned(m) => m,
+        }
+    }
+}
 
 /// Which memory planner the interpreter should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -63,6 +87,13 @@ pub enum PlannerChoice {
 pub struct Options {
     /// Memory-planning strategy.
     pub planner: PlannerChoice,
+    /// Skip the prepare-time graph rewriter ([`crate::rewriter`]) and run
+    /// the model exactly as loaded. The default (`false`) rewrites
+    /// eligible graphs before planning; set this for ablation (`tfmicro
+    /// mem`/benches report the delta) or to debug a suspected rewrite.
+    /// The rewriter is also skipped automatically whenever an offline
+    /// plan is used, since its offsets index the original tensor table.
+    pub skip_rewrite: bool,
     /// Largest batch a [`PreparedModel`] built with these options can
     /// serve through [`PreparedModel::invoke_batched`]. The activation /
     /// scratch plan is laid out once per batch size `m ∈ 1..=max_batch`
@@ -75,7 +106,7 @@ pub struct Options {
 
 impl Default for Options {
     fn default() -> Self {
-        Options { planner: PlannerChoice::default(), max_batch: 1 }
+        Options { planner: PlannerChoice::default(), skip_rewrite: false, max_batch: 1 }
     }
 }
 
@@ -217,7 +248,7 @@ pub(crate) fn next_owner_token() -> u64 {
 
 /// The interpreter. See module docs for the life cycle.
 pub struct MicroInterpreter<'m, 'a> {
-    model: &'m Model,
+    model: ModelRef<'m>,
     backing: Backing<'a>,
     locs: Vec<DataLoc>,
     kernels: Vec<&'m dyn Kernel>,
@@ -328,6 +359,30 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         options: Options,
     ) -> Result<Self> {
         crate::schema::validate::validate(model)?;
+
+        // --- prepare-time graph rewrite ---------------------------------
+        // Optimize the graph before a single byte is planned. Skipped on
+        // request (ablation/debugging) and whenever an offline plan will
+        // be applied: its offsets index the original tensor table, and a
+        // host that wanted both will have precomputed the plan against an
+        // already-rewritten model.
+        let wants_offline = options.planner == PlannerChoice::Offline
+            || (options.planner == PlannerChoice::Auto && model.offline_plan().is_some());
+        let model: ModelRef<'m> = if options.skip_rewrite || wants_offline {
+            ModelRef::Borrowed(model)
+        } else {
+            match rewriter::rewrite(model, Some(resolver))? {
+                RewriteOutcome::Unchanged => ModelRef::Borrowed(model),
+                RewriteOutcome::Rewritten { model: rewritten, .. } => {
+                    // The rewritten graph must satisfy every invariant the
+                    // original did — a rewriter bug fails the build here,
+                    // never at invoke time.
+                    crate::schema::validate::validate(&rewritten)?;
+                    ModelRef::Owned(Box::new(rewritten))
+                }
+            }
+        };
+
         let owner = next_owner_token();
         let n_tensors = model.tensors().len();
         let n_ops = model.operators().len();
@@ -348,6 +403,25 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         let mut kernels: Vec<&'m dyn Kernel> = Vec::with_capacity(n_ops);
         for op in model.operators() {
             kernels.push(resolver.find(op.key())?);
+        }
+
+        // --- fused-epilogue records (rewrite metadata) ------------------
+        // The fuse-epilogue pass only fires when the resolved kernel
+        // advertises support, but a model rewritten elsewhere (or edited
+        // by hand) could pair a fused record with a kernel that keeps the
+        // default. Refuse to build rather than silently drop the fused
+        // arithmetic.
+        let fused = rewriter::fused_specs(&model)?;
+        for (i, f) in fused.iter().enumerate() {
+            if f.is_some() && !kernels[i].supports_fused_epilogue() {
+                return Err(Error::PrepareFailed {
+                    op_index: i,
+                    op_name: model.operators()[i].key().to_string(),
+                    reason: "model attaches a fused-epilogue record but the resolved kernel \
+                             cannot apply it"
+                        .into(),
+                });
+            }
         }
 
         // --- tensor data locations --------------------------------------
@@ -388,13 +462,14 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
             let mut ctx = PrepareContext::new(
                 i,
                 op,
-                model,
+                &model,
                 &mut sizes,
                 &mut psizes,
                 &mut op_data[i],
                 &mut persistent_opdata,
                 &mut external_kernel,
-            );
+            )
+            .with_fused(fused[i]);
             kernels[i].prepare(&mut ctx)?;
             scratch_sizes_per_op.push(sizes);
             persistent_sizes_per_op.push(psizes);
@@ -418,7 +493,9 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         }
 
         // --- lifetime analysis + planning --------------------------------
-        let info = analyze_lifetimes(model);
+        // Rewrite-alias metadata (elided views) rides along inside the
+        // requests; every planner places the aliased pair at one offset.
+        let info = analyze_lifetimes(&model)?;
         let mut requests: Vec<BufferRequest> = info.requests.clone();
         detail.tensors_sum = requests.iter().map(|r| r.size).sum();
         // Scratch buffers live exactly during their op.
@@ -427,7 +504,7 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
             let mut idxs = Vec::with_capacity(sizes.len());
             for &sz in sizes {
                 idxs.push(requests.len());
-                requests.push(BufferRequest { size: sz, first_use: i, last_use: i });
+                requests.push(BufferRequest::new(sz, i, i));
             }
             scratch_req_index.push(idxs);
         }
@@ -738,8 +815,11 @@ impl<'m, 'a> MicroInterpreter<'m, 'a> {
         self.kernels.len()
     }
 
-    /// The loaded model.
-    pub fn model(&self) -> &'m Model {
-        self.model
+    /// The model being executed. When the graph rewriter fired this is
+    /// the rewritten (owned) model, not the caller's original — op and
+    /// tensor indices reflect the optimized graph; graph I/O shape and
+    /// quantization are always preserved.
+    pub fn model(&self) -> &Model {
+        &self.model
     }
 }

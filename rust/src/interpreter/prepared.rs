@@ -35,6 +35,7 @@ use crate::ops::{DataLoc, Kernel, OpContext, OpData, OpResolver, PrepareContext}
 use crate::planner::{
     analyze_lifetimes, BufferRequest, GreedyPlanner, LinearPlanner, MemoryPlanner, OfflinePlanner,
 };
+use crate::rewriter::{self, RewriteOutcome};
 use crate::schema::Model;
 use crate::tensor::DType;
 
@@ -231,6 +232,25 @@ impl PreparedModel {
                 "offline plans describe the single-request layout; max_batch > 1 needs an online planner".into(),
             ));
         }
+        // --- prepare-time graph rewrite ------------------------------
+        // Same gating as MicroInterpreter::build: skipped on request and
+        // when an offline plan (whose offsets index the original tensor
+        // table) will be applied. The rewrite runs ONCE here; every
+        // batched layout below plans the already-optimized graph.
+        let wants_offline = options.planner == PlannerChoice::Offline
+            || (options.planner == PlannerChoice::Auto && model.offline_plan().is_some());
+        let model = if options.skip_rewrite || wants_offline {
+            model
+        } else {
+            match rewriter::rewrite(&model, Some(resolver))? {
+                RewriteOutcome::Unchanged => model,
+                RewriteOutcome::Rewritten { model: rewritten, .. } => {
+                    crate::schema::validate::validate(&rewritten)?;
+                    Arc::new(rewritten)
+                }
+            }
+        };
+
         let owner = next_owner_token();
         let n_tensors = model.tensors().len();
         let n_ops = model.operators().len();
@@ -251,6 +271,21 @@ impl PreparedModel {
         let mut kernels: Vec<Arc<dyn Kernel>> = Vec::with_capacity(n_ops);
         for op in model.operators() {
             kernels.push(resolver.find_arc(op.key())?);
+        }
+
+        // Fused-epilogue records: refuse a kernel that can't apply one
+        // (same backstop as MicroInterpreter::build).
+        let fused = rewriter::fused_specs(&model)?;
+        for (i, f) in fused.iter().enumerate() {
+            if f.is_some() && !kernels[i].supports_fused_epilogue() {
+                return Err(Error::PrepareFailed {
+                    op_index: i,
+                    op_name: model.operators()[i].key().to_string(),
+                    reason: "model attaches a fused-epilogue record but the resolved kernel \
+                             cannot apply it"
+                        .into(),
+                });
+            }
         }
 
         // --- tensor data locations ----------------------------------
@@ -298,7 +333,8 @@ impl PreparedModel {
                 &mut op_data[i],
                 &mut persistent_opdata,
                 &mut external_kernel,
-            );
+            )
+            .with_fused(fused[i]);
             kernels[i].prepare(&mut ctx)?;
             scratch_sizes_per_op.push(sizes);
             persistent_sizes_per_op.push(psizes);
@@ -322,7 +358,9 @@ impl PreparedModel {
         let persist = AlignedBuf::zeroed(persist_used);
 
         // --- lifetime analysis + planning ----------------------------
-        let info = analyze_lifetimes(&model);
+        // Rewrite-alias metadata (elided views) rides along inside the
+        // requests; every planner places the aliased pair at one offset.
+        let info = analyze_lifetimes(&model)?;
         let mut requests: Vec<BufferRequest> = info.requests.clone();
         detail.tensors_sum = requests.iter().map(|r| r.size).sum();
         let mut scratch_req_index: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
@@ -330,7 +368,7 @@ impl PreparedModel {
             let mut idxs = Vec::with_capacity(sizes.len());
             for &sz in sizes {
                 idxs.push(requests.len());
-                requests.push(BufferRequest { size: sz, first_use: i, last_use: i });
+                requests.push(BufferRequest::new(sz, i, i));
             }
             scratch_req_index.push(idxs);
         }
@@ -807,7 +845,7 @@ mod tests {
         let err = PreparedModel::build(
             Arc::new(tiny_fc_model()),
             &resolver,
-            Options { planner: PlannerChoice::Offline, max_batch: 2 },
+            Options { planner: PlannerChoice::Offline, max_batch: 2, ..Default::default() },
         );
         assert!(err.is_err());
     }

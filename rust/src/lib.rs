@@ -19,6 +19,8 @@
 //! * multitenancy over a shared arena (§4.5 / Figure 5),
 //! * profiling hooks and simulated embedded-platform cycle models
 //!   ([`profiler`], [`platform`], §5),
+//! * a prepare-time graph rewriter that folds pads, elides no-op views,
+//!   and fuses requant epilogues before planning ([`rewriter`]),
 //! * an XLA/PJRT runtime that loads AOT-compiled JAX/Pallas kernels as the
 //!   "vendor optimized library" path ([`runtime`]),
 //! * and a small std-only serving layer used by the end-to-end examples
@@ -54,6 +56,7 @@ pub mod ops;
 pub mod planner;
 pub mod platform;
 pub mod profiler;
+pub mod rewriter;
 pub mod runtime;
 pub mod schema;
 pub mod serving;

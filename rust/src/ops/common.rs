@@ -10,6 +10,128 @@ use crate::error::Result;
 use crate::schema::format::{Activation, Padding};
 use crate::tensor::{QuantizedMultiplier, TensorMeta};
 
+/// Shared TFLite int8 add/mul requantization constants: returns
+/// `(left_shift, mult1, mult2, mult_out)` for the shifted-add scheme
+/// (`is_mul == false`; TFLite `kLeftShift` = 20, also used by Sub) or the
+/// plain product rescale (`is_mul == true`; `mult1`/`mult2` unused). One
+/// helper so the elementwise kernel's prepare and the fused-epilogue
+/// prepare ([`FusedArith::from_spec`]) cannot drift: both paths must
+/// produce bit-identical multipliers for the rewriter's Add/Mul folding
+/// to be exact.
+pub fn arith_i8_multipliers(
+    is_mul: bool,
+    s1: f64,
+    s2: f64,
+    so: f64,
+) -> Result<(i32, QuantizedMultiplier, QuantizedMultiplier, QuantizedMultiplier)> {
+    if is_mul {
+        let mult_out = QuantizedMultiplier::try_from_real(s1 * s2 / so)?;
+        Ok((0, QuantizedMultiplier::default(), QuantizedMultiplier::default(), mult_out))
+    } else {
+        // TFLite: kLeftShift = 20.
+        let left_shift = 20;
+        let twice_max = 2.0 * s1.max(s2);
+        let mult1 = QuantizedMultiplier::try_from_real(s1 / twice_max)?;
+        let mult2 = QuantizedMultiplier::try_from_real(s2 / twice_max)?;
+        let mult_out =
+            QuantizedMultiplier::try_from_real(twice_max / ((1i64 << left_shift) as f64 * so))?;
+        Ok((left_shift, mult1, mult2, mult_out))
+    }
+}
+
+/// A scalar Add/Mul (+ optional trailing activation) folded into the
+/// requant epilogue of a producing conv/FC by the graph rewriter
+/// ([`crate::rewriter`]).
+///
+/// The producer requantizes against the recorded *intermediate*
+/// quantization (`inter_scale`/`inter_zp` — the elided elementwise op's
+/// first input, i.e. the producer's original output tensor) with no
+/// activation clamp beyond the i8 range, then applies [`FusedArith`] in
+/// place over its output slice. That two-step pipeline reproduces the
+/// standalone elementwise kernel's int8 arithmetic bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FusedSpec {
+    /// True for Mul, false for Add.
+    pub is_mul: bool,
+    /// The elided elementwise op's fused activation.
+    pub act: Activation,
+    /// The constant scalar operand's quantized (i8) value.
+    pub const_val: i32,
+    /// The constant operand's scale.
+    pub const_scale: f32,
+    /// The constant operand's zero point.
+    pub const_zp: i32,
+    /// Intermediate (producer-output) scale.
+    pub inter_scale: f32,
+    /// Intermediate (producer-output) zero point.
+    pub inter_zp: i32,
+}
+
+/// Invoke-time state of one fused scalar Add/Mul epilogue, precomputed at
+/// prepare time so the per-invoke body is integer-only.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedArith {
+    is_mul: bool,
+    left_shift: i32,
+    mult1: QuantizedMultiplier,
+    mult2: QuantizedMultiplier,
+    mult_out: QuantizedMultiplier,
+    /// -intermediate zero point.
+    offset1: i32,
+    /// -constant zero point.
+    offset2: i32,
+    /// Final-output zero point.
+    offset_out: i32,
+    const_val: i32,
+    act_min: i32,
+    act_max: i32,
+}
+
+impl FusedArith {
+    /// Build from a rewrite record and the op's final output tensor.
+    pub fn from_spec(f: &FusedSpec, out: &TensorMeta) -> Result<FusedArith> {
+        let (left_shift, mult1, mult2, mult_out) = arith_i8_multipliers(
+            f.is_mul,
+            f.inter_scale as f64,
+            f.const_scale as f64,
+            out.scale()? as f64,
+        )?;
+        let (act_min, act_max) = activation_range_i8(f.act, out)?;
+        Ok(FusedArith {
+            is_mul: f.is_mul,
+            left_shift,
+            mult1,
+            mult2,
+            mult_out,
+            offset1: -f.inter_zp,
+            offset2: -f.const_zp,
+            offset_out: out.zero_point()?,
+            const_val: f.const_val,
+            act_min,
+            act_max,
+        })
+    }
+
+    /// Apply the epilogue in place over the producer's output slice — the
+    /// elementwise kernel's int8 body with the scalar operand's rescale
+    /// hoisted out of the loop.
+    // lint:alloc_free
+    pub fn apply(&self, out: &mut [i8]) {
+        let vb = self.const_val + self.offset2;
+        let sb = if self.is_mul { 0 } else { self.mult2.apply(vb << self.left_shift) };
+        for o in out.iter_mut() {
+            let va = *o as i32 + self.offset1;
+            let raw = if self.is_mul {
+                self.mult_out.apply(va * vb)
+            } else {
+                let sa = self.mult1.apply(va << self.left_shift);
+                self.mult_out.apply(sa + sb)
+            } + self.offset_out;
+            *o = raw.clamp(self.act_min, self.act_max) as i8;
+        }
+    }
+}
+
 /// Computed spatial padding for one dimension pair.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PaddingValues {
@@ -169,6 +291,9 @@ pub struct ConvData {
     pub fact: (f32, f32),
     /// Packed-weight / folded-bias handles (optimized int8 path only).
     pub packed: Option<PackedSpec>,
+    /// Rewriter-fused scalar Add/Mul epilogue, applied in place after
+    /// requantization (see [`FusedSpec`]).
+    pub fused: Option<FusedArith>,
 }
 
 /// Prepared state for fully-connected kernels.
@@ -190,6 +315,9 @@ pub struct FcData {
     pub fact: (f32, f32),
     /// Packed-weight / folded-bias handles (optimized int8 path only).
     pub packed: Option<PackedSpec>,
+    /// Rewriter-fused scalar Add/Mul epilogue, applied in place after
+    /// requantization (see [`FusedSpec`]).
+    pub fused: Option<FusedArith>,
 }
 
 /// Prepared state for pooling kernels.

@@ -1,7 +1,12 @@
 //! Operators: the calculation units of the graph (§4.7).
 //!
-//! Kernels follow TF Micro's **prepare → plan → populate → invoke**
-//! protocol:
+//! The full model lifecycle is **load → validate → rewrite → prepare →
+//! plan → populate → invoke**: after structural validation and before any
+//! kernel runs, the graph rewriter ([`crate::rewriter`]) folds Pad ops
+//! into conv padding, elides no-op view ops, and fuses scalar Add/Mul
+//! epilogues (unless `Options::skip_rewrite`). Kernels themselves follow
+//! TF Micro's **prepare → plan → populate → invoke** protocol over the
+//! (possibly rewritten) graph:
 //!
 //! 1. **prepare** — called once per op during interpreter initialization.
 //!    The kernel validates shapes/dtypes, precomputes quantization state
@@ -165,6 +170,16 @@ pub trait Kernel: Send + Sync {
 
     /// Execute; called per inference, allocation-free.
     fn invoke(&self, ctx: &OpContext) -> Result<()>;
+
+    /// True if this kernel honors a rewriter-fused scalar Add/Mul
+    /// epilogue ([`common::FusedSpec`], delivered via
+    /// [`PrepareContext::fused`]). The interpreter refuses to build a
+    /// model whose rewrite metadata attaches a fused record to a kernel
+    /// that keeps the `false` default, so kernels can't silently drop a
+    /// fused op.
+    fn supports_fused_epilogue(&self) -> bool {
+        false
+    }
 }
 
 /// Prepare-phase view of one op, handed to [`Kernel::prepare`].
@@ -179,6 +194,7 @@ pub struct PrepareContext<'m, 'i> {
     op_data: &'i mut OpData,
     persistent_bytes: &'i mut usize,
     external_bytes: &'i mut usize,
+    fused: Option<common::FusedSpec>,
 }
 
 impl<'m, 'i> PrepareContext<'m, 'i> {
@@ -203,7 +219,20 @@ impl<'m, 'i> PrepareContext<'m, 'i> {
             op_data,
             persistent_bytes,
             external_bytes,
+            fused: None,
         }
+    }
+
+    /// Attach a rewriter-fused scalar Add/Mul epilogue record for this op
+    /// (the interpreter parses them from `tmf.rewrite.fused` metadata).
+    pub fn with_fused(mut self, fused: Option<common::FusedSpec>) -> Self {
+        self.fused = fused;
+        self
+    }
+
+    /// The fused-epilogue record attached to this op, if any.
+    pub fn fused(&self) -> Option<common::FusedSpec> {
+        self.fused
     }
 
     /// Number of declared inputs (including omitted optionals).
@@ -512,6 +541,18 @@ impl<'r> OpContext<'r> {
     /// Metadata of output `i`.
     pub fn output(&self, i: usize) -> Result<&'r TensorMeta> {
         Ok(&self.tensors[self.tensor_idx(&self.operator.outputs, i, "output")?])
+    }
+
+    /// Planned storage location of input `i`. Lets a view kernel detect
+    /// plan-level aliasing (input and output sharing one arena range)
+    /// *before* materializing slices, and skip its copy.
+    pub fn input_loc(&self, i: usize) -> Result<DataLoc> {
+        Ok(self.locs[self.tensor_idx(&self.operator.inputs, i, "input")?])
+    }
+
+    /// Planned storage location of output `i` (see [`OpContext::input_loc`]).
+    pub fn output_loc(&self, i: usize) -> Result<DataLoc> {
+        Ok(self.locs[self.tensor_idx(&self.operator.outputs, i, "output")?])
     }
 
     fn bytes_at(&self, loc: DataLoc) -> Result<&'r [u8]> {

@@ -219,6 +219,10 @@ impl Kernel for OptConvKernel {
         KernelFlavor::Optimized
     }
 
+    fn supports_fused_epilogue(&self) -> bool {
+        true
+    }
+
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
         prepare_conv(ctx)?;
         let input = ctx.input(0)?;
@@ -310,6 +314,9 @@ impl Kernel for OptConvKernel {
                             ctx.output_i8(0)?,
                         );
                     }
+                }
+                if let Some(f) = &data.fused {
+                    f.apply(ctx.output_i8(0)?);
                 }
             }
             DType::F32 => {

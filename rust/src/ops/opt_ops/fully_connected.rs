@@ -103,6 +103,10 @@ impl Kernel for OptFullyConnectedKernel {
         KernelFlavor::Optimized
     }
 
+    fn supports_fused_epilogue(&self) -> bool {
+        true
+    }
+
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
         prepare_fc(ctx)?;
         let input = ctx.input(0)?;
@@ -193,6 +197,9 @@ impl Kernel for OptFullyConnectedKernel {
                             bias, ctx.output_i8(0)?,
                         );
                     }
+                }
+                if let Some(f) = &data.fused {
+                    f.apply(ctx.output_i8(0)?);
                 }
             }
             DType::F32 => {

@@ -9,11 +9,11 @@
 use crate::error::Result;
 use crate::ops::common::{
     activation_range_f32, activation_range_i8, compute_out_size, compute_padding, conv_per_channel,
-    filter_exceeds_input, ChannelQuant, ConvData, PaddingValues,
+    filter_exceeds_input, ChannelQuant, ConvData, FusedArith, PaddingValues,
 };
 use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
-use crate::schema::format::OpOptions;
-use crate::tensor::DType;
+use crate::schema::format::{Activation, OpOptions};
+use crate::tensor::{DType, QuantParams};
 
 /// Geometry of one conv invocation (shared by ref/opt/depthwise kernels).
 #[derive(Debug, Clone, Copy, Default)]
@@ -197,13 +197,39 @@ pub(crate) fn prepare_conv(ctx: &mut PrepareContext) -> Result<()> {
         fact: activation_range_f32(opts.activation),
         ..Default::default()
     };
+    let fused = ctx.fused();
+    if fused.is_some() {
+        if input.dtype != DType::I8 {
+            return Err(ctx.fail("fused epilogue requires an int8 conv"));
+        }
+        if opts.activation != Activation::None {
+            return Err(ctx.fail("fused epilogue conflicts with a producer activation"));
+        }
+    }
     if input.dtype == DType::I8 {
-        data.per_channel = conv_per_channel(input, filter, output, out_c)?;
+        // With a fused epilogue the conv requantizes into the recorded
+        // *intermediate* quantization (the elided elementwise op's first
+        // input), clamped only to the i8 range; [`FusedArith`] then maps
+        // intermediate -> final output exactly as the standalone
+        // elementwise kernel would.
+        let requant_out = match fused {
+            Some(f) => {
+                let mut inter = output.clone();
+                inter.quant = Some(QuantParams::per_tensor(f.inter_scale, f.inter_zp));
+                inter
+            }
+            None => output.clone(),
+        };
+        data.per_channel = conv_per_channel(input, filter, &requant_out, out_c)?;
         data.input_offset = -input.zero_point()?;
-        data.output_offset = output.zero_point()?;
-        let (lo, hi) = activation_range_i8(opts.activation, output)?;
+        data.output_offset = requant_out.zero_point()?;
+        let (lo, hi) = activation_range_i8(opts.activation, &requant_out)?;
         data.act_min = lo;
         data.act_max = hi;
+        if let Some(f) = fused {
+            data.fused =
+                Some(FusedArith::from_spec(&f, output).map_err(|e| ctx.fail(e.to_string()))?);
+        }
     }
     ctx.set_op_data(OpData::Conv(data));
     Ok(())
@@ -246,6 +272,10 @@ impl Kernel for ConvKernel {
         prepare_conv(ctx)
     }
 
+    fn supports_fused_epilogue(&self) -> bool {
+        true
+    }
+
     fn invoke(&self, ctx: &OpContext) -> Result<()> {
         let OpData::Conv(data) = ctx.op_data() else {
             return Err(ctx.fail("op data missing"));
@@ -262,6 +292,9 @@ impl Kernel for ConvKernel {
                 };
                 let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
                 conv2d_i8(&s, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+                if let Some(f) = &data.fused {
+                    f.apply(ctx.output_i8(0)?);
+                }
             }
             DType::F32 => {
                 let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };

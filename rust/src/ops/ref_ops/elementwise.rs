@@ -8,10 +8,10 @@
 //! a scalar (the broadcast cases our models use).
 
 use crate::error::Result;
-use crate::ops::common::{activation_range_f32, activation_range_i8, ArithData};
+use crate::ops::common::{arith_i8_multipliers, activation_range_f32, activation_range_i8, ArithData};
 use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
 use crate::schema::format::OpOptions;
-use crate::tensor::{DType, QuantizedMultiplier};
+use crate::tensor::DType;
 
 /// Add or Mul.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,25 +71,14 @@ impl Kernel for ArithKernel {
             let (lo, hi) = activation_range_i8(activation, out)?;
             data.act_min = lo;
             data.act_max = hi;
-            match self.mode {
-                ArithMode::Add | ArithMode::Sub => {
-                    // TFLite: kLeftShift = 20.
-                    data.left_shift = 20;
-                    let twice_max = 2.0 * s1.max(s2);
-                    data.mult1 = QuantizedMultiplier::try_from_real(s1 / twice_max)
-                        .map_err(|e| ctx.fail(e.to_string()))?;
-                    data.mult2 = QuantizedMultiplier::try_from_real(s2 / twice_max)
-                        .map_err(|e| ctx.fail(e.to_string()))?;
-                    data.mult_out = QuantizedMultiplier::try_from_real(
-                        twice_max / ((1i64 << data.left_shift) as f64 * so),
-                    )
-                    .map_err(|e| ctx.fail(e.to_string()))?;
-                }
-                ArithMode::Mul => {
-                    data.mult_out = QuantizedMultiplier::try_from_real(s1 * s2 / so)
-                        .map_err(|e| ctx.fail(e.to_string()))?;
-                }
-            }
+            // Multipliers come from the shared helper so the rewriter's
+            // fused-epilogue path (`FusedArith`) stays bit-identical.
+            let (ls, m1, m2, mo) = arith_i8_multipliers(self.mode == ArithMode::Mul, s1, s2, so)
+                .map_err(|e| ctx.fail(e.to_string()))?;
+            data.left_shift = ls;
+            data.mult1 = m1;
+            data.mult2 = m2;
+            data.mult_out = mo;
         }
         ctx.set_op_data(OpData::Arith(data));
         Ok(())
@@ -174,6 +163,7 @@ impl Kernel for ArithKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::QuantizedMultiplier;
 
     /// The TFLite shifted-add math, reproduced standalone so the constants
     /// are pinned by a test independent of kernel plumbing.

@@ -5,10 +5,10 @@
 //! on the filter (the TFLite int8 FC spec).
 
 use crate::error::Result;
-use crate::ops::common::{activation_range_f32, activation_range_i8, FcData};
+use crate::ops::common::{activation_range_f32, activation_range_i8, FcData, FusedArith};
 use crate::ops::{Kernel, OpContext, OpData, PrepareContext};
-use crate::schema::format::OpOptions;
-use crate::tensor::{DType, QuantizedMultiplier};
+use crate::schema::format::{Activation, OpOptions};
+use crate::tensor::{DType, QuantParams, QuantizedMultiplier};
 
 /// Quantization parameters of one int8 FC invocation.
 #[derive(Debug, Clone, Copy)]
@@ -100,17 +100,41 @@ pub(crate) fn prepare_fc(ctx: &mut PrepareContext) -> Result<()> {
     if o_dim != out_dim {
         return Err(ctx.fail(format!("output dim {o_dim} != filter rows {out_dim}")));
     }
+    let fused = ctx.fused();
+    if fused.is_some() {
+        if input.dtype != DType::I8 {
+            return Err(ctx.fail("fused epilogue requires an int8 fully-connected"));
+        }
+        if activation != Activation::None {
+            return Err(ctx.fail("fused epilogue conflicts with a producer activation"));
+        }
+    }
     let mut data = FcData { fact: activation_range_f32(activation), ..Default::default() };
     if input.dtype == DType::I8 {
-        let real = input.scale()? as f64 * filter.scale()? as f64 / output.scale()? as f64;
+        // See `prepare_conv`: with a fused epilogue the matmul requantizes
+        // into the recorded intermediate quantization, and `FusedArith`
+        // finishes the job bit-exactly.
+        let requant_out = match fused {
+            Some(f) => {
+                let mut inter = output.clone();
+                inter.quant = Some(QuantParams::per_tensor(f.inter_scale, f.inter_zp));
+                inter
+            }
+            None => output.clone(),
+        };
+        let real = input.scale()? as f64 * filter.scale()? as f64 / requant_out.scale()? as f64;
         data.mult = QuantizedMultiplier::try_from_real(real)
             .map_err(|e| ctx.fail(e.to_string()))?;
         data.input_offset = -input.zero_point()?;
         data.filter_offset = -filter.zero_point()?;
-        data.output_offset = output.zero_point()?;
-        let (lo, hi) = activation_range_i8(activation, output)?;
+        data.output_offset = requant_out.zero_point()?;
+        let (lo, hi) = activation_range_i8(activation, &requant_out)?;
         data.act_min = lo;
         data.act_max = hi;
+        if let Some(f) = fused {
+            data.fused =
+                Some(FusedArith::from_spec(&f, output).map_err(|e| ctx.fail(e.to_string()))?);
+        }
     }
     ctx.set_op_data(OpData::FullyConnected(data));
     Ok(())
@@ -122,6 +146,10 @@ pub struct FullyConnectedKernel;
 impl Kernel for FullyConnectedKernel {
     fn prepare(&self, ctx: &mut PrepareContext) -> Result<()> {
         prepare_fc(ctx)
+    }
+
+    fn supports_fused_epilogue(&self) -> bool {
+        true
     }
 
     fn invoke(&self, ctx: &OpContext) -> Result<()> {
@@ -145,6 +173,9 @@ impl Kernel for FullyConnectedKernel {
                 };
                 let bias = if ctx.has_input(2) { Some(ctx.input_i32(2)?) } else { None };
                 fully_connected_i8(batch, in_dim, out_dim, &q, ctx.input_i8(0)?, ctx.input_i8(1)?, bias, ctx.output_i8(0)?);
+                if let Some(f) = &data.fused {
+                    f.apply(ctx.output_i8(0)?);
+                }
             }
             DType::F32 => {
                 let bias = if ctx.has_input(2) { Some(ctx.input_f32(2)?) } else { None };

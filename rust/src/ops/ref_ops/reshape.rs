@@ -1,9 +1,13 @@
 //! Reshape: metadata-only in principle, a byte copy in practice.
 //!
-//! TF Micro copies rather than aliasing so the planner keeps one
-//! owner per buffer (aliasing would complicate lifetime analysis for a
-//! negligible win at these tensor sizes). The new shape is carried by the
-//! output tensor's static dims.
+//! TF Micro copies rather than aliasing so the planner keeps one owner
+//! per buffer. Our graph rewriter ([`crate::rewriter`]) goes further and
+//! elides no-op reshapes entirely, recording a planner alias so input and
+//! output share one arena range — in which case this kernel never runs.
+//! When the rewriter is skipped, the kernel still detects a plan that put
+//! input and output at the same offset (e.g. an offline plan pinning an
+//! aliased pair) and skips the copy: the bytes are already in place. The
+//! new shape is carried by the output tensor's static dims.
 
 use crate::error::Result;
 use crate::ops::{Kernel, OpContext, PrepareContext};
@@ -26,6 +30,12 @@ impl Kernel for ReshapeKernel {
     }
 
     fn invoke(&self, ctx: &OpContext) -> Result<()> {
+        // Plan-level aliasing: if input and output occupy the same range
+        // the bytes are already in place — and materializing both slices
+        // would alias — so compare locations before touching any data.
+        if ctx.input_loc(0)? == ctx.output_loc(0)? {
+            return Ok(());
+        }
         let input = ctx.input_bytes(0)?;
         let output = ctx.output_bytes(0)?;
         output.copy_from_slice(input);
@@ -35,6 +45,47 @@ impl Kernel for ReshapeKernel {
 
 #[cfg(test)]
 mod tests {
-    // Exercised through interpreter integration tests (reshape needs real
-    // tensor storage to be meaningful).
+    use super::*;
+    use crate::ops::{DataLoc, OpData, OpContext};
+    use crate::schema::format::{BuiltinOp, OpOptions};
+    use crate::schema::Operator;
+
+    fn reshape_op() -> Operator {
+        Operator {
+            opcode: BuiltinOp::Reshape,
+            inputs: vec![0],
+            outputs: vec![1],
+            options: OpOptions::None,
+            custom_name: None,
+        }
+    }
+
+    /// Regression: a same-arena-offset Reshape must skip its memcpy (the
+    /// overlapping &/&mut pair would alias, and the copy is a no-op).
+    #[test]
+    fn same_offset_reshape_skips_copy() {
+        let op = reshape_op();
+        let data = OpData::None;
+        let mut arena = [1u8, 2, 3, 4];
+        let aliased = [DataLoc::Arena { off: 0, len: 4 }, DataLoc::Arena { off: 0, len: 4 }];
+        let ctx = OpContext::new(
+            0, &op, &[], &aliased, &[], arena.as_mut_ptr(), arena.len(), &[], &[], &data, 0,
+        );
+        ReshapeKernel.invoke(&ctx).unwrap();
+        assert_eq!(arena, [1, 2, 3, 4]);
+    }
+
+    /// Distinct offsets still copy input bytes to the output range.
+    #[test]
+    fn distinct_offset_reshape_copies() {
+        let op = reshape_op();
+        let data = OpData::None;
+        let mut arena = [9u8, 8, 7, 6, 0, 0, 0, 0];
+        let disjoint = [DataLoc::Arena { off: 0, len: 4 }, DataLoc::Arena { off: 4, len: 4 }];
+        let ctx = OpContext::new(
+            0, &op, &[], &disjoint, &[], arena.as_mut_ptr(), arena.len(), &[], &[], &data, 0,
+        );
+        ReshapeKernel.invoke(&ctx).unwrap();
+        assert_eq!(&arena[4..], &[9, 8, 7, 6]);
+    }
 }

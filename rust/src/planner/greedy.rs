@@ -7,7 +7,7 @@
 //! exists." — the paper, verbatim. This is also how TFLite Micro's
 //! `GreedyMemoryPlanner` works.
 
-use super::{BufferRequest, MemoryPlan, MemoryPlanner};
+use super::{resolve_aliases, BufferRequest, MemoryPlan, MemoryPlanner};
 use crate::error::Result;
 
 /// The production memory planner: first-fit decreasing.
@@ -21,24 +21,30 @@ fn align_up(v: usize, align: usize) -> usize {
 impl MemoryPlanner for GreedyPlanner {
     fn plan(&self, requests: &[BufferRequest], align: usize) -> Result<MemoryPlan> {
         assert!(align.is_power_of_two());
-        // Sort indices by descending size; ties by earlier first-use then
-        // index for determinism.
-        let mut order: Vec<usize> = (0..requests.len()).collect();
+        // Only storage roots are packed; aliases inherit their root's
+        // offset afterwards. Roots are packed against merged lifetimes
+        // (their own plus every alias's), so the storage stays reserved
+        // while any view of it is live.
+        let res = resolve_aliases(requests)?;
+        // Sort root indices by descending size; ties by earlier first-use
+        // then index for determinism.
+        let mut order: Vec<usize> =
+            (0..requests.len()).filter(|&i| res.root_of[i] == i).collect();
         order.sort_by(|&a, &b| {
             requests[b]
                 .size
                 .cmp(&requests[a].size)
-                .then(requests[a].first_use.cmp(&requests[b].first_use))
+                .then(res.merged[a].first_use.cmp(&res.merged[b].first_use))
                 .then(a.cmp(&b))
         });
 
         let mut offsets = vec![0usize; requests.len()];
         // Already-placed buffers, kept sorted by offset for gap search.
-        let mut placed: Vec<usize> = Vec::with_capacity(requests.len());
+        let mut placed: Vec<usize> = Vec::with_capacity(order.len());
         let mut arena_size = 0usize;
 
         for &idx in &order {
-            let req = &requests[idx];
+            let req = &res.merged[idx];
             if req.size == 0 {
                 offsets[idx] = 0;
                 continue;
@@ -47,7 +53,7 @@ impl MemoryPlanner for GreedyPlanner {
             // First fit: scan gaps between them in offset order.
             let mut candidate = 0usize;
             for &p in &placed {
-                let pr = &requests[p];
+                let pr = &res.merged[p];
                 if !req.overlaps_in_time(pr) {
                     continue;
                 }
@@ -67,6 +73,14 @@ impl MemoryPlanner for GreedyPlanner {
             placed.insert(pos, idx);
         }
 
+        // Aliases land exactly on their root's storage.
+        for i in 0..requests.len() {
+            let root = res.root_of[i];
+            if root != i {
+                offsets[i] = offsets[root];
+            }
+        }
+
         Ok(MemoryPlan { offsets, arena_size: align_up(arena_size, align) })
     }
 
@@ -82,7 +96,7 @@ mod tests {
     use crate::testutil::{check, Cases};
 
     fn req(size: usize, first: usize, last: usize) -> BufferRequest {
-        BufferRequest { size, first_use: first, last_use: last }
+        BufferRequest::new(size, first, last)
     }
 
     #[test]
@@ -157,6 +171,73 @@ mod tests {
             "greedy should be within 2x of lower bound ({} vs {lb})",
             plan.arena_size
         );
+    }
+
+    #[test]
+    fn aliases_share_their_roots_offset() {
+        // mid (1) is produced at t1; out (2) is an elided-reshape view of
+        // it read through t3. A fat unrelated buffer (0) overlaps the
+        // view's tail — it must not land on the root's bytes.
+        let reqs = vec![
+            req(512, 2, 3),
+            req(256, 1, 2),
+            req(256, 2, 3).with_alias(1),
+        ];
+        let plan = GreedyPlanner.plan(&reqs, 4).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        assert_eq!(plan.offsets[2], plan.offsets[1]);
+        // Root + alias count once: 512 + 256, not 512 + 2*256.
+        assert_eq!(plan.arena_size, 768);
+    }
+
+    #[test]
+    fn alias_chain_planned_once() {
+        // a <- b <- c chain with disjoint raw lifetimes: one storage
+        // range serves all three, sized by the root.
+        let reqs = vec![
+            req(128, 0, 1),
+            req(128, 1, 2).with_alias(0),
+            req(64, 2, 5).with_alias(1),
+        ];
+        let plan = GreedyPlanner.plan(&reqs, 1).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        assert_eq!(plan.offsets, vec![0, 0, 0]);
+        assert_eq!(plan.arena_size, 128);
+    }
+
+    #[test]
+    fn malformed_alias_edges_fail_plan() {
+        let reqs = vec![req(8, 0, 1).with_alias(9)];
+        assert!(GreedyPlanner.plan(&reqs, 1).is_err());
+    }
+
+    #[test]
+    fn property_aliased_plans_are_always_valid() {
+        // Random lists where a suffix of requests aliases earlier ones
+        // (always pointing backwards, like the rewriter's view edges —
+        // acyclic by construction, sized within the target).
+        check(Cases::n(300), |rng| {
+            let n = 2 + rng.below(20);
+            let horizon = 1 + rng.below(12);
+            let mut reqs: Vec<BufferRequest> = Vec::with_capacity(n);
+            for i in 0..n {
+                let first = rng.below(horizon);
+                let last = first + rng.below(horizon - first.min(horizon - 1));
+                let mut r = req(1 + rng.below(2048), first, last);
+                if i > 0 && rng.below(3) == 0 {
+                    let target = rng.below(i);
+                    if reqs[target].size >= r.size {
+                        r = r.with_alias(target);
+                    }
+                }
+                reqs.push(r);
+            }
+            let align = 1usize << rng.below(6);
+            let plan =
+                GreedyPlanner.plan(&reqs, align).map_err(|e| format!("plan failed: {e}"))?;
+            verify_plan(&reqs, &plan).map_err(|e| format!("invalid plan: {e}"))?;
+            Ok(())
+        });
     }
 
     #[test]

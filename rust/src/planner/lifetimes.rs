@@ -6,8 +6,14 @@
 //! Graph inputs are live from "before op 0" (step 0); graph outputs stay
 //! live through the final op so the application can read them after
 //! `invoke` returns.
+//!
+//! Rewritten models may carry planner alias metadata (the graph
+//! rewriter's elided reshapes, [`crate::rewriter`]): pairs of tensors
+//! that must share one arena range. Those edges are translated into
+//! [`BufferRequest::alias_of`] links here so every planner sees them.
 
 use super::BufferRequest;
+use crate::error::{Error, Result};
 use crate::schema::Model;
 
 /// Lifetime analysis result for one model.
@@ -25,7 +31,11 @@ pub struct LifetimeInfo {
 /// Variable tensors (persistent state) and constants are excluded — the
 /// interpreter gives variables interpreter-lifetime (tail) storage and
 /// constants live in the serialized model.
-pub fn analyze_lifetimes(model: &Model) -> LifetimeInfo {
+///
+/// Fails only when the model's rewrite-alias metadata references a tensor
+/// the planner does not manage (out of range, constant, or variable) —
+/// such a model cannot be planned soundly.
+pub fn analyze_lifetimes(model: &Model) -> Result<LifetimeInfo> {
     let n_tensors = model.tensors().len();
     let n_ops = model.operators().len();
     let mut first = vec![usize::MAX; n_tensors];
@@ -62,13 +72,33 @@ pub fn analyze_lifetimes(model: &Model) -> LifetimeInfo {
             first[ti] = 0;
         }
         tensor_indices.push(ti);
-        requests.push(BufferRequest {
-            size: meta.num_bytes(),
-            first_use: first[ti],
-            last_use: last[ti].max(first[ti]),
-        });
+        requests.push(BufferRequest::new(meta.num_bytes(), first[ti], last[ti].max(first[ti])));
     }
-    LifetimeInfo { tensor_indices, requests }
+
+    // Translate rewrite-alias metadata (tensor index -> tensor index)
+    // into request-index alias edges.
+    if let Some(alias_pairs) = model.rewrite_aliases() {
+        let mut req_of = vec![usize::MAX; n_tensors];
+        for (k, &ti) in tensor_indices.iter().enumerate() {
+            req_of[ti] = k;
+        }
+        for (alias, src) in alias_pairs {
+            let (a, s) = (alias as usize, src as usize);
+            if a >= n_tensors
+                || s >= n_tensors
+                || req_of[a] == usize::MAX
+                || req_of[s] == usize::MAX
+            {
+                return Err(Error::MalformedModel(format!(
+                    "rewrite alias ({alias} -> {src}) references a tensor the planner \
+                     does not manage"
+                )));
+            }
+            requests[req_of[a]].alias_of = Some(req_of[s]);
+        }
+    }
+
+    Ok(LifetimeInfo { tensor_indices, requests })
 }
 
 #[cfg(test)]
@@ -94,7 +124,7 @@ mod tests {
     #[test]
     fn chain_lifetimes() {
         let m = chain_model();
-        let info = analyze_lifetimes(&m);
+        let info = analyze_lifetimes(&m).unwrap();
         // Constants are excluded: only in, mid, out.
         assert_eq!(info.tensor_indices, vec![0, 1, 2]);
         let [r_in, r_mid, r_out] = info.requests[..] else { panic!() };
@@ -114,7 +144,7 @@ mod tests {
         b.add_op(BuiltinOp::Relu, &[t_in], &[t_late], vec![]);
         b.set_io(&[t_in], &[t_early, t_late]);
         let m = Model::from_bytes(&b.finish()).unwrap();
-        let info = analyze_lifetimes(&m);
+        let info = analyze_lifetimes(&m).unwrap();
         let early = &info.requests[1];
         assert_eq!(early.last_use, 1, "graph output must survive to the final op");
     }
@@ -129,16 +159,56 @@ mod tests {
         b.add_op(BuiltinOp::Add, &[t_in, t_state], &[t_out], crate::schema::writer::elementwise_options(Default::default()));
         b.set_io(&[t_in], &[t_out]);
         let m = Model::from_bytes(&b.finish()).unwrap();
-        let info = analyze_lifetimes(&m);
+        let info = analyze_lifetimes(&m).unwrap();
         assert!(!info.tensor_indices.contains(&(t_state as usize)));
     }
 
     #[test]
     fn sizes_match_tensor_bytes() {
         let m = chain_model();
-        let info = analyze_lifetimes(&m);
+        let info = analyze_lifetimes(&m).unwrap();
         for (&ti, r) in info.tensor_indices.iter().zip(&info.requests) {
             assert_eq!(r.size, m.tensors()[ti].num_bytes());
         }
+    }
+
+    #[test]
+    fn rewrite_alias_metadata_becomes_request_edges() {
+        // Same chain, plus alias metadata marking `out` a view of `mid`
+        // (what the rewriter emits for an elided reshape).
+        let mut b = ModelBuilder::new("chain-alias");
+        let t_in = b.add_tensor("in", DType::F32, &[4], None);
+        let t_mid = b.add_tensor("mid", DType::F32, &[4], None);
+        let t_out = b.add_tensor("out", DType::F32, &[4], None);
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_mid], vec![]);
+        b.add_op(BuiltinOp::Relu, &[t_mid], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&(t_out as u32).to_le_bytes());
+        blob.extend_from_slice(&(t_mid as u32).to_le_bytes());
+        b.add_metadata(crate::schema::REWRITE_ALIAS_KEY, &blob);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let info = analyze_lifetimes(&m).unwrap();
+        assert_eq!(info.requests[2].alias_of, Some(1));
+        assert_eq!(info.requests[0].alias_of, None);
+    }
+
+    #[test]
+    fn alias_to_unplannable_tensor_rejected() {
+        // Alias metadata naming a constant tensor: the planner never
+        // places constants, so the edge cannot be honored.
+        let mut b = ModelBuilder::new("bad-alias");
+        let t_in = b.add_tensor("in", DType::F32, &[4], None);
+        let t_out = b.add_tensor("out", DType::F32, &[4], None);
+        let buf = b.add_buffer(&[0u8; 16]);
+        let t_w = b.add_tensor("w", DType::F32, &[4], Some(buf));
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&(t_out as u32).to_le_bytes());
+        blob.extend_from_slice(&(t_w as u32).to_le_bytes());
+        b.add_metadata(crate::schema::REWRITE_ALIAS_KEY, &blob);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(analyze_lifetimes(&m).is_err());
     }
 }

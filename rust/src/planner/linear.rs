@@ -6,7 +6,7 @@
 //! `benches/bench_planner.rs`; the delta versus [`super::GreedyPlanner`]
 //! is the Figure 4 memory saving.
 
-use super::{BufferRequest, MemoryPlan, MemoryPlanner};
+use super::{resolve_aliases, BufferRequest, MemoryPlan, MemoryPlanner};
 use crate::error::Result;
 
 /// Allocates every buffer disjointly (no temporal reuse).
@@ -16,11 +16,25 @@ pub struct LinearPlanner;
 impl MemoryPlanner for LinearPlanner {
     fn plan(&self, requests: &[BufferRequest], align: usize) -> Result<MemoryPlan> {
         assert!(align.is_power_of_two());
-        let mut offsets = Vec::with_capacity(requests.len());
+        // Even the no-reuse baseline must honor alias edges: an alias is
+        // a *view* of its root (same bytes by definition), not a reuse
+        // optimization, so it gets the root's offset rather than its own
+        // slice.
+        let res = resolve_aliases(requests)?;
+        let mut offsets = vec![0usize; requests.len()];
         let mut cursor = 0usize;
-        for r in requests {
-            offsets.push(cursor);
+        for (i, r) in requests.iter().enumerate() {
+            if res.root_of[i] != i {
+                continue;
+            }
+            offsets[i] = cursor;
             cursor = (cursor + r.size + align - 1) & !(align - 1);
+        }
+        for i in 0..requests.len() {
+            let root = res.root_of[i];
+            if root != i {
+                offsets[i] = offsets[root];
+            }
         }
         Ok(MemoryPlan { offsets, arena_size: cursor })
     }
@@ -38,8 +52,8 @@ mod tests {
     #[test]
     fn no_reuse_sums_sizes() {
         let reqs = vec![
-            BufferRequest { size: 100, first_use: 0, last_use: 1 },
-            BufferRequest { size: 100, first_use: 5, last_use: 6 }, // could share, doesn't
+            BufferRequest::new(100, 0, 1),
+            BufferRequest::new(100, 5, 6), // could share, doesn't
         ];
         let plan = LinearPlanner.plan(&reqs, 16).unwrap();
         verify_plan(&reqs, &plan).unwrap();
@@ -49,10 +63,24 @@ mod tests {
 
     #[test]
     fn always_valid_by_construction() {
-        let reqs: Vec<BufferRequest> = (0..20)
-            .map(|i| BufferRequest { size: 10 * i + 1, first_use: 0, last_use: 100 })
-            .collect();
+        let reqs: Vec<BufferRequest> =
+            (0..20).map(|i| BufferRequest::new(10 * i + 1, 0, 100)).collect();
         let plan = LinearPlanner.plan(&reqs, 4).unwrap();
         verify_plan(&reqs, &plan).unwrap();
+    }
+
+    #[test]
+    fn aliases_share_even_without_reuse() {
+        // The alias gets no slice of its own — it is the root's bytes.
+        let reqs = vec![
+            BufferRequest::new(100, 0, 1),
+            BufferRequest::new(100, 1, 2).with_alias(0),
+            BufferRequest::new(50, 2, 3),
+        ];
+        let plan = LinearPlanner.plan(&reqs, 4).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        assert_eq!(plan.offsets[1], plan.offsets[0]);
+        assert_eq!(plan.offsets[2], 100);
+        assert_eq!(plan.arena_size, 152);
     }
 }

@@ -44,13 +44,88 @@ pub struct BufferRequest {
     pub first_use: usize,
     /// Index of the last op that needs the buffer live (inclusive).
     pub last_use: usize,
+    /// Index (into the same request list) of the request whose storage
+    /// this one aliases. An aliased pair is a *view* relationship (the
+    /// graph rewriter's elided reshapes): the two requests must receive
+    /// the same offset, and the storage root's lifetime is extended to
+    /// cover every alias. `None` for ordinary requests.
+    pub alias_of: Option<usize>,
 }
 
 impl BufferRequest {
+    /// A plain (non-alias) request.
+    pub fn new(size: usize, first_use: usize, last_use: usize) -> Self {
+        BufferRequest { size, first_use, last_use, alias_of: None }
+    }
+
+    /// Mark this request as an alias of `root`'s storage.
+    pub fn with_alias(mut self, root: usize) -> Self {
+        self.alias_of = Some(root);
+        self
+    }
+
     /// True if two requests are live at the same time.
     pub fn overlaps_in_time(&self, other: &BufferRequest) -> bool {
         self.first_use <= other.last_use && other.first_use <= self.last_use
     }
+}
+
+/// Alias edges collapsed to storage roots (see [`resolve_aliases`]).
+pub(crate) struct AliasResolution {
+    /// For each request, the index of its storage root — itself when the
+    /// request is not an alias. Chains (alias of an alias) resolve to the
+    /// final non-alias request.
+    pub root_of: Vec<usize>,
+    /// Copy of the requests with every root's lifetime widened to the
+    /// union of its own and all of its aliases' lifetimes. Placement and
+    /// conflict checks must use these lifetimes: the root's storage has
+    /// to stay reserved while any view of it is read.
+    pub merged: Vec<BufferRequest>,
+}
+
+/// Resolve alias chains to storage roots and merge lifetimes onto them.
+///
+/// Rejected (the request list is malformed): an `alias_of` index out of
+/// range, a cyclic alias chain, and an alias larger than its storage
+/// root (a view cannot read bytes its source does not own).
+pub(crate) fn resolve_aliases(requests: &[BufferRequest]) -> Result<AliasResolution> {
+    let n = requests.len();
+    let mut root_of = vec![0usize; n];
+    for i in 0..n {
+        let mut cur = i;
+        let mut steps = 0usize;
+        while let Some(next) = requests[cur].alias_of {
+            if next >= n {
+                return Err(Error::PlanFailed(format!(
+                    "request {cur} aliases out-of-range request {next} ({n} requests)"
+                )));
+            }
+            steps += 1;
+            if steps > n {
+                return Err(Error::PlanFailed(format!(
+                    "alias chain starting at request {i} contains a cycle"
+                )));
+            }
+            cur = next;
+        }
+        root_of[i] = cur;
+    }
+    let mut merged: Vec<BufferRequest> = requests.to_vec();
+    for i in 0..n {
+        let r = root_of[i];
+        if r == i {
+            continue;
+        }
+        if requests[i].size > requests[r].size {
+            return Err(Error::PlanFailed(format!(
+                "alias request {i} ({} bytes) larger than its storage root {r} ({} bytes)",
+                requests[i].size, requests[r].size
+            )));
+        }
+        merged[r].first_use = merged[r].first_use.min(requests[i].first_use);
+        merged[r].last_use = merged[r].last_use.max(requests[i].last_use);
+    }
+    Ok(AliasResolution { root_of, merged })
 }
 
 /// The planner's output: one offset per request, plus the region size.
@@ -72,9 +147,15 @@ pub trait MemoryPlanner {
     fn name(&self) -> &'static str;
 }
 
-/// Verify a plan: every pair of time-overlapping buffers must occupy
-/// disjoint byte ranges, and every buffer must fit in `arena_size`.
-/// Used by tests, the property suite, and offline-plan validation.
+/// Verify a plan: every pair of time-overlapping storage roots must
+/// occupy disjoint byte ranges, every buffer must fit in `arena_size`,
+/// and every alias must sit exactly at its storage root's offset. Roots
+/// are checked against *merged* lifetimes (their own plus all aliases'),
+/// so a plan that reuses a root's bytes while only a view of it is still
+/// live — the "alias outlives its source" hazard — is rejected. Alias
+/// edges that do not resolve (out of range, cyclic, alias larger than
+/// its root) are rejected outright. Used by tests, the property suite,
+/// and offline-plan validation.
 pub fn verify_plan(requests: &[BufferRequest], plan: &MemoryPlan) -> Result<()> {
     if plan.offsets.len() != requests.len() {
         return Err(Error::PlanFailed(format!(
@@ -83,6 +164,7 @@ pub fn verify_plan(requests: &[BufferRequest], plan: &MemoryPlan) -> Result<()> 
             requests.len()
         )));
     }
+    let res = resolve_aliases(requests)?;
     for (i, (r, &off)) in requests.iter().zip(&plan.offsets).enumerate() {
         if off + r.size > plan.arena_size {
             return Err(Error::PlanFailed(format!(
@@ -96,10 +178,22 @@ pub fn verify_plan(requests: &[BufferRequest], plan: &MemoryPlan) -> Result<()> 
                 r.first_use, r.last_use
             )));
         }
+        let root = res.root_of[i];
+        if root != i && plan.offsets[root] != off {
+            return Err(Error::PlanFailed(format!(
+                "alias buffer {i} placed at {off} but its storage root {root} is at {}",
+                plan.offsets[root]
+            )));
+        }
     }
-    for i in 0..requests.len() {
-        for j in (i + 1)..requests.len() {
-            let (a, b) = (&requests[i], &requests[j]);
+    // Spatial exclusivity over storage roots only: aliases share their
+    // root's range by construction (checked above), so an alias/root or
+    // alias/alias overlap within one chain is legal — that sharing is the
+    // point. Distinct roots conflict on their merged lifetimes.
+    let roots: Vec<usize> = (0..requests.len()).filter(|&i| res.root_of[i] == i).collect();
+    for (k, &i) in roots.iter().enumerate() {
+        for &j in roots.iter().skip(k + 1) {
+            let (a, b) = (&res.merged[i], &res.merged[j]);
             if a.size == 0 || b.size == 0 {
                 continue;
             }
@@ -120,16 +214,24 @@ pub fn verify_plan(requests: &[BufferRequest], plan: &MemoryPlan) -> Result<()> 
 }
 
 /// Lower bound on any valid plan's size: the max over op timesteps of the
-/// sum of sizes of buffers live at that step. Used to gauge plan quality.
+/// sum of sizes of buffers live at that step. Aliases contribute no bytes
+/// of their own (they share their root's storage); the root counts once,
+/// over its merged lifetime. Used to gauge plan quality.
 pub fn plan_lower_bound(requests: &[BufferRequest]) -> usize {
-    let max_t = requests.iter().map(|r| r.last_use).max().unwrap_or(0);
+    let reqs: Vec<BufferRequest> = match resolve_aliases(requests) {
+        Ok(res) => {
+            (0..requests.len()).filter(|&i| res.root_of[i] == i).map(|i| res.merged[i]).collect()
+        }
+        // Unresolvable alias edges: every planner will reject the list,
+        // but a conservative bound over the raw requests is still a
+        // lower bound.
+        Err(_) => requests.to_vec(),
+    };
+    let max_t = reqs.iter().map(|r| r.last_use).max().unwrap_or(0);
     let mut best = 0usize;
     for t in 0..=max_t {
-        let live: usize = requests
-            .iter()
-            .filter(|r| r.first_use <= t && t <= r.last_use)
-            .map(|r| r.size)
-            .sum();
+        let live: usize =
+            reqs.iter().filter(|r| r.first_use <= t && t <= r.last_use).map(|r| r.size).sum();
         best = best.max(live);
     }
     best
@@ -141,9 +243,9 @@ mod tests {
 
     #[test]
     fn overlap_predicate() {
-        let a = BufferRequest { size: 1, first_use: 0, last_use: 3 };
-        let b = BufferRequest { size: 1, first_use: 3, last_use: 5 };
-        let c = BufferRequest { size: 1, first_use: 4, last_use: 5 };
+        let a = BufferRequest::new(1, 0, 3);
+        let b = BufferRequest::new(1, 3, 5);
+        let c = BufferRequest::new(1, 4, 5);
         assert!(a.overlaps_in_time(&b)); // share step 3
         assert!(!a.overlaps_in_time(&c));
         assert!(b.overlaps_in_time(&c));
@@ -151,10 +253,7 @@ mod tests {
 
     #[test]
     fn verify_rejects_bad_plans() {
-        let reqs = vec![
-            BufferRequest { size: 100, first_use: 0, last_use: 2 },
-            BufferRequest { size: 100, first_use: 1, last_use: 3 },
-        ];
+        let reqs = vec![BufferRequest::new(100, 0, 2), BufferRequest::new(100, 1, 3)];
         // Overlapping placement of time-overlapping buffers.
         let bad = MemoryPlan { offsets: vec![0, 50], arena_size: 200 };
         assert!(verify_plan(&reqs, &bad).is_err());
@@ -169,9 +268,9 @@ mod tests {
     #[test]
     fn lower_bound_is_peak_liveness() {
         let reqs = vec![
-            BufferRequest { size: 100, first_use: 0, last_use: 1 },
-            BufferRequest { size: 50, first_use: 1, last_use: 2 },
-            BufferRequest { size: 60, first_use: 2, last_use: 3 },
+            BufferRequest::new(100, 0, 1),
+            BufferRequest::new(50, 1, 2),
+            BufferRequest::new(60, 2, 3),
         ];
         // Peak at t=1: 100 + 50.
         assert_eq!(plan_lower_bound(&reqs), 150);
@@ -179,11 +278,65 @@ mod tests {
 
     #[test]
     fn zero_sized_requests_never_conflict() {
-        let reqs = vec![
-            BufferRequest { size: 0, first_use: 0, last_use: 5 },
-            BufferRequest { size: 10, first_use: 0, last_use: 5 },
-        ];
+        let reqs = vec![BufferRequest::new(0, 0, 5), BufferRequest::new(10, 0, 5)];
         let plan = MemoryPlan { offsets: vec![0, 0], arena_size: 10 };
         assert!(verify_plan(&reqs, &plan).is_ok());
+    }
+
+    #[test]
+    fn alias_chains_resolve_to_final_root() {
+        // 2 -> 1 -> 0: an alias of an alias lands on the ultimate root,
+        // and the root's merged lifetime spans every link in the chain.
+        let reqs = vec![
+            BufferRequest::new(64, 0, 1),
+            BufferRequest::new(64, 2, 3).with_alias(0),
+            BufferRequest::new(32, 4, 6).with_alias(1),
+        ];
+        let res = resolve_aliases(&reqs).unwrap();
+        assert_eq!(res.root_of, vec![0, 0, 0]);
+        assert_eq!((res.merged[0].first_use, res.merged[0].last_use), (0, 6));
+        // A shared-offset plan passes; an alias elsewhere fails.
+        let good = MemoryPlan { offsets: vec![0, 0, 0], arena_size: 64 };
+        assert!(verify_plan(&reqs, &good).is_ok());
+        let bad = MemoryPlan { offsets: vec![0, 0, 64], arena_size: 128 };
+        assert!(verify_plan(&reqs, &bad).is_err());
+    }
+
+    #[test]
+    fn malformed_alias_edges_rejected() {
+        // Out-of-range target.
+        let reqs = vec![BufferRequest::new(8, 0, 1).with_alias(5)];
+        assert!(resolve_aliases(&reqs).is_err());
+        // Cycle.
+        let reqs = vec![
+            BufferRequest::new(8, 0, 1).with_alias(1),
+            BufferRequest::new(8, 0, 1).with_alias(0),
+        ];
+        assert!(resolve_aliases(&reqs).is_err());
+        // Alias larger than its storage root.
+        let reqs = vec![BufferRequest::new(8, 0, 1), BufferRequest::new(16, 1, 2).with_alias(0)];
+        assert!(resolve_aliases(&reqs).is_err());
+        // All three also fail plan verification (not just resolution).
+        let plan = MemoryPlan { offsets: vec![0, 0], arena_size: 16 };
+        assert!(verify_plan(&reqs, &plan).is_err());
+    }
+
+    #[test]
+    fn alias_outliving_source_blocks_root_reuse() {
+        // Root dies at t=1 but its alias is read until t=4. A plan that
+        // recycles the root's bytes for another buffer at t=3 would be
+        // legal on raw lifetimes — merged lifetimes reject it.
+        let reqs = vec![
+            BufferRequest::new(32, 0, 1),
+            BufferRequest::new(32, 2, 4).with_alias(0),
+            BufferRequest::new(32, 3, 5),
+        ];
+        let stale = MemoryPlan { offsets: vec![0, 0, 0], arena_size: 32 };
+        assert!(verify_plan(&reqs, &stale).is_err());
+        let safe = MemoryPlan { offsets: vec![0, 0, 32], arena_size: 64 };
+        assert!(verify_plan(&reqs, &safe).is_ok());
+        // The lower bound counts the root once, over the union lifetime:
+        // at t=3 both the aliased chain and buffer 2 are live.
+        assert_eq!(plan_lower_bound(&reqs), 64);
     }
 }

@@ -11,7 +11,7 @@
 //! near-zero on-device planning work, user ownership of layout, and the
 //! ability to pin specific tensors (e.g. to a faster memory bank).
 
-use super::{BufferRequest, GreedyPlanner, MemoryPlan, MemoryPlanner};
+use super::{resolve_aliases, BufferRequest, GreedyPlanner, MemoryPlan, MemoryPlanner};
 use crate::error::{Error, Result};
 
 /// Planner that applies host-computed fixed offsets, delegating unpinned
@@ -46,10 +46,17 @@ impl MemoryPlanner for OfflinePlanner {
                 requests.len()
             )));
         }
+        let res = resolve_aliases(requests)?;
         let mut offsets = vec![0usize; requests.len()];
         let mut arena_size = 0usize;
         let mut unpinned: Vec<usize> = Vec::new();
         for (i, &fo) in self.fixed_offsets.iter().enumerate() {
+            // Aliases are resolved after their root is placed; a pinned
+            // alias entry is honored below and cross-checked against its
+            // root by verify_plan.
+            if res.root_of[i] != i {
+                continue;
+            }
             if fo < 0 {
                 unpinned.push(i);
             } else {
@@ -63,12 +70,39 @@ impl MemoryPlanner for OfflinePlanner {
         // authoritative).
         if !unpinned.is_empty() {
             let base = (arena_size + align - 1) & !(align - 1);
-            let sub: Vec<BufferRequest> = unpinned.iter().map(|&i| requests[i]).collect();
+            // The sub-list is indexed locally, so alias edges (which point
+            // into the full list) must be stripped; merged lifetimes keep
+            // each root reserved for its views' whole read window.
+            let sub: Vec<BufferRequest> = unpinned
+                .iter()
+                .map(|&i| {
+                    BufferRequest::new(
+                        requests[i].size,
+                        res.merged[i].first_use,
+                        res.merged[i].last_use,
+                    )
+                })
+                .collect();
             let sub_plan = GreedyPlanner.plan(&sub, align)?;
             for (k, &i) in unpinned.iter().enumerate() {
                 offsets[i] = base + sub_plan.offsets[k];
             }
             arena_size = arena_size.max(base + sub_plan.arena_size);
+        }
+
+        // Aliases: honor an explicit pin (verify_plan rejects it if it
+        // disagrees with the root), otherwise inherit the root's offset.
+        for (i, &fo) in self.fixed_offsets.iter().enumerate() {
+            let root = res.root_of[i];
+            if root == i {
+                continue;
+            }
+            if fo >= 0 {
+                offsets[i] = fo as usize;
+                arena_size = arena_size.max(fo as usize + requests[i].size);
+            } else {
+                offsets[i] = offsets[root];
+            }
         }
 
         let plan = MemoryPlan { offsets, arena_size };
@@ -90,7 +124,7 @@ mod tests {
     use crate::planner::verify_plan;
 
     fn req(size: usize, first: usize, last: usize) -> BufferRequest {
-        BufferRequest { size, first_use: first, last_use: last }
+        BufferRequest::new(size, first, last)
     }
 
     #[test]
@@ -129,6 +163,33 @@ mod tests {
         verify_plan(&reqs, &plan).unwrap();
         assert_eq!(plan.offsets[0], 256);
         assert!(plan.arena_size >= 256 + 128);
+    }
+
+    #[test]
+    fn unpinned_alias_follows_its_root() {
+        // Root pinned, alias left to the planner: the alias must land on
+        // the root's bytes, not in the floating region.
+        let reqs = vec![req(128, 0, 1), req(128, 1, 3).with_alias(0), req(64, 2, 3)];
+        let planner = OfflinePlanner::new(vec![64, -1, -1]);
+        let plan = planner.plan(&reqs, 16).unwrap();
+        verify_plan(&reqs, &plan).unwrap();
+        assert_eq!(plan.offsets[1], 64);
+        // The floating buffer overlaps the alias's read window, so it
+        // must sit clear of the root's (merged-lifetime) range.
+        assert!(plan.offsets[2] >= 64 + 128 || plan.offsets[2] + 64 <= 64);
+    }
+
+    #[test]
+    fn pinned_alias_must_match_root() {
+        // A stale plan pinning an alias away from its root is rejected
+        // rather than silently splitting the view from its storage.
+        let reqs = vec![req(128, 0, 1), req(128, 1, 2).with_alias(0)];
+        let planner = OfflinePlanner::new(vec![0, 256]);
+        assert!(planner.plan(&reqs, 16).is_err());
+        // Pinning it *at* the root is fine.
+        let planner = OfflinePlanner::new(vec![0, 0]);
+        let plan = planner.plan(&reqs, 16).unwrap();
+        assert_eq!(plan.offsets, vec![0, 0]);
     }
 
     #[test]

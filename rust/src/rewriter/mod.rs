@@ -1,0 +1,1452 @@
+//! Prepare-time graph rewriter: optimize the graph before a single byte
+//! is planned.
+//!
+//! The rewriter lifts a validated [`Model`] into an owned, mutable graph
+//! IR, runs a fixed sequence of semantics-preserving passes over it, and
+//! lowers the result back to a serialized model. It runs between
+//! **validate** and **prepare** in the model lifecycle (load → validate →
+//! **rewrite** → prepare → plan → populate → invoke), so every downstream
+//! stage — kernel prepare, memory planning, invoke — sees the smaller
+//! graph. The passes, in order (see [`PASS_NAMES`]):
+//!
+//! 1. **fold-pad** — an explicit int8 `Pad` whose only consumer is a
+//!    VALID-padding conv, and whose geometry matches what SAME padding
+//!    would synthesize, is folded into the conv's implicit padding. The
+//!    pad fill value is the input zero point (see `ref_ops/pad.rs`), which
+//!    is exactly the value implicit SAME padding contributes, so the fold
+//!    is bit-exact.
+//! 2. **elide-views** — no-op `Reshape` ops are removed and their output
+//!    recorded as a planner *alias* of their input
+//!    ([`crate::schema::REWRITE_ALIAS_KEY`]); identity `Quantize` ops and
+//!    exact `Dequantize`→`Quantize` round trips are removed and their
+//!    consumers rewired.
+//! 3. **fuse-epilogue** — `Relu`/`Relu6` following a conv / FC /
+//!    elementwise op folds into that op's fused activation; a scalar-const
+//!    `Add`/`Mul` following a conv or FC becomes a requant epilogue
+//!    ([`FusedSpec`], [`crate::schema::REWRITE_FUSED_KEY`]) applied in
+//!    place by the producing kernel, using the same fixed-point multiplier
+//!    construction as the standalone elementwise kernel so results stay
+//!    bit-identical.
+//! 4. **dce** — tensors no longer referenced by any live op or graph
+//!    input/output are dropped from the tensor table (and their buffers
+//!    from the serialized model).
+//!
+//! Passes only fire when the rewritten graph is provably bit-exact with
+//! the original under this crate's kernels; anything uncertain is left
+//! alone. Models containing custom ops, or models that already carry
+//! `tmf.rewrite.*` metadata, are returned [`RewriteOutcome::Unchanged`].
+//! Offline memory plans ([`crate::schema::OFFLINE_PLAN_KEY`]) index the
+//! *original* tensor table, so the interpreter skips rewriting when an
+//! offline plan is in use; if a rewrite does happen the stale plan
+//! metadata is dropped from the lowered model.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::ops::common::{compute_out_size, compute_padding, FusedSpec};
+use crate::ops::OpResolver;
+use crate::schema::format::{Activation, BuiltinOp, OpOptions, Padding};
+use crate::schema::writer::{
+    concat_options, conv_options, elementwise_options, fully_connected_options, mean_options,
+    pool_options, softmax_options,
+};
+use crate::schema::{Model, ModelBuilder, OFFLINE_PLAN_KEY, REWRITE_ALIAS_KEY, REWRITE_FUSED_KEY};
+use crate::tensor::{DType, TensorMeta};
+
+/// Names of the rewrite passes, in execution order.
+pub const PASS_NAMES: [&str; 4] = ["fold-pad", "elide-views", "fuse-epilogue", "dce"];
+
+/// Size in bytes of one serialized [`FusedSpec`] record in the
+/// [`REWRITE_FUSED_KEY`] metadata blob.
+pub const FUSED_RECORD_SIZE: usize = 28;
+
+/// Diagnostics from one rewrite pass.
+#[derive(Debug, Clone, Default)]
+pub struct PassReport {
+    /// Pass name (one of [`PASS_NAMES`]).
+    pub name: &'static str,
+    /// Operators tombstoned by this pass.
+    pub ops_removed: usize,
+    /// Tensors marked dead by this pass (dce only).
+    pub tensors_removed: usize,
+    /// Scalar Add/Mul epilogues fused into a producer.
+    pub fused: usize,
+    /// Planner aliases recorded (elided views).
+    pub aliased: usize,
+    /// Human-readable one-liners describing each applied rewrite.
+    pub details: Vec<String>,
+}
+
+/// Full log of a rewrite run.
+#[derive(Debug, Clone, Default)]
+pub struct RewriteLog {
+    /// Per-pass diagnostics, in execution order.
+    pub passes: Vec<PassReport>,
+    /// Operator count before rewriting.
+    pub ops_before: usize,
+    /// Operator count after rewriting.
+    pub ops_after: usize,
+    /// Tensor count before rewriting.
+    pub tensors_before: usize,
+    /// Tensor count after rewriting.
+    pub tensors_after: usize,
+}
+
+impl RewriteLog {
+    /// Total operators removed across all passes.
+    pub fn ops_removed(&self) -> usize {
+        self.ops_before.saturating_sub(self.ops_after)
+    }
+}
+
+/// Result of [`rewrite`].
+pub enum RewriteOutcome {
+    /// No pass fired (or the model is ineligible); use the original model.
+    Unchanged,
+    /// At least one pass fired; `model` is the lowered rewritten model.
+    Rewritten {
+        /// The rewritten model.
+        model: Model,
+        /// What each pass did.
+        log: RewriteLog,
+    },
+}
+
+/// One operator in the mutable graph IR. Tensor indices refer to the
+/// original model's tensor table and stay stable through every pass;
+/// removed ops are tombstoned rather than spliced out so op indices stay
+/// stable too. Both are remapped in one step at lowering.
+struct IrOp {
+    opcode: BuiltinOp,
+    inputs: Vec<i32>,
+    outputs: Vec<i32>,
+    options: OpOptions,
+    removed: bool,
+    fused: Option<FusedSpec>,
+}
+
+/// Owned mutable graph lifted from a [`Model`].
+struct GraphIr {
+    tensors: Vec<TensorMeta>,
+    ops: Vec<IrOp>,
+    inputs: Vec<i32>,
+    outputs: Vec<i32>,
+    /// `aliases[t] = Some(s)`: tensor `t` is a read-only view of `s` and
+    /// must share its arena storage.
+    aliases: Vec<Option<usize>>,
+    /// Set by the dce pass; lowering drops tensors marked `true`.
+    dead: Vec<bool>,
+    /// Any pass mutated the graph.
+    mutated: bool,
+}
+
+impl GraphIr {
+    fn lift(model: &Model) -> GraphIr {
+        let ops = model
+            .operators()
+            .iter()
+            .map(|op| IrOp {
+                opcode: op.opcode,
+                inputs: op.inputs.clone(),
+                outputs: op.outputs.clone(),
+                options: op.options.clone(),
+                removed: false,
+                fused: None,
+            })
+            .collect();
+        GraphIr {
+            tensors: model.tensors().to_vec(),
+            ops,
+            inputs: model.inputs().to_vec(),
+            outputs: model.outputs().to_vec(),
+            aliases: vec![None; model.tensors().len()],
+            dead: vec![false; model.tensors().len()],
+            mutated: false,
+        }
+    }
+
+    /// Index of the live op producing tensor `t`, if any.
+    // lint:alloc_free — runs O(ops) times per build
+    fn producer_of(&self, t: i32) -> Option<usize> {
+        self.ops
+            .iter()
+            .enumerate()
+            .find(|(_, op)| !op.removed && op.outputs.contains(&t))
+            .map(|(i, _)| i)
+    }
+
+    /// Occurrences of `t` across all live ops' input lists.
+    // lint:alloc_free — runs O(ops) times per build
+    fn consumer_count(&self, t: i32) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| !op.removed)
+            .map(|op| op.inputs.iter().filter(|&&x| x == t).count())
+            .sum()
+    }
+
+    fn is_graph_output(&self, t: i32) -> bool {
+        self.outputs.contains(&t)
+    }
+
+    fn is_alias_source(&self, t: i32) -> bool {
+        t >= 0 && self.aliases.iter().any(|a| *a == Some(t as usize))
+    }
+
+    fn tensor(&self, t: i32) -> Option<&TensorMeta> {
+        if t < 0 {
+            return None;
+        }
+        self.tensors.get(t as usize)
+    }
+
+    /// Replace every read of tensor `from` (op inputs, graph outputs,
+    /// alias sources) with `to`. Used when an op is elided and its output
+    /// collapses onto its input.
+    // lint:alloc_free — rewires in place, once per elision
+    fn rewire_reads(&mut self, from: i32, to: i32) {
+        for op in self.ops.iter_mut().filter(|op| !op.removed) {
+            for i in op.inputs.iter_mut() {
+                if *i == from {
+                    *i = to;
+                }
+            }
+        }
+        for o in self.outputs.iter_mut() {
+            if *o == from {
+                *o = to;
+            }
+        }
+        if from >= 0 && to >= 0 {
+            for a in self.aliases.iter_mut() {
+                if *a == Some(from as usize) {
+                    *a = Some(to as usize);
+                }
+            }
+        }
+    }
+}
+
+/// Per-tensor quantization (scale, zero point), or `None` if the tensor
+/// is unquantized or per-axis quantized.
+// lint:alloc_free — eligibility check, runs per op per build
+fn per_tensor_quant(t: &TensorMeta) -> Option<(f32, i32)> {
+    let q = t.quant.as_ref()?;
+    if q.scales.len() != 1 || q.zero_points.len() != 1 || q.axis.is_some() {
+        return None;
+    }
+    Some((q.scales[0], q.zero_points[0]))
+}
+
+fn zp_in_i8_range(zp: i32) -> bool {
+    (i8::MIN as i32..=i8::MAX as i32).contains(&zp)
+}
+
+/// Models the rewriter refuses to touch: custom ops carry opaque option
+/// blobs this crate cannot re-encode, and pre-existing `tmf.rewrite.*`
+/// metadata means the model already went through a rewrite (op/tensor
+/// indices in those blobs would be invalidated by a second pass).
+fn eligible(model: &Model) -> bool {
+    if model.operators().iter().any(|op| op.opcode == BuiltinOp::Custom) {
+        return false;
+    }
+    if model.metadata_keys().any(|k| k.starts_with("tmf.rewrite.")) {
+        return false;
+    }
+    true
+}
+
+/// Run all rewrite passes over `model`.
+///
+/// `resolver` gates the scalar Add/Mul epilogue fusion: a fusion is only
+/// recorded when the resolver's kernel for the producing op reports
+/// [`crate::ops::Kernel::supports_fused_epilogue`]. Pass `None` to skip
+/// epilogue fusion (activation folding still runs — it lowers to standard
+/// fused-activation options every kernel understands).
+pub fn rewrite(model: &Model, resolver: Option<&OpResolver>) -> Result<RewriteOutcome> {
+    rewrite_prefix(model, resolver, PASS_NAMES.len())
+}
+
+/// Run only the first `n_passes` rewrite passes (for per-pass ablation;
+/// `tfmicro mem` uses this to attribute arena savings to each pass).
+/// With `n_passes < 4` the dce pass does not run and the lowered model
+/// keeps its full tensor table, so arena differences are attributable to
+/// the structural passes alone.
+pub fn rewrite_prefix(
+    model: &Model,
+    resolver: Option<&OpResolver>,
+    n_passes: usize,
+) -> Result<RewriteOutcome> {
+    if !eligible(model) {
+        return Ok(RewriteOutcome::Unchanged);
+    }
+    let mut ir = GraphIr::lift(model);
+    let mut log = RewriteLog {
+        ops_before: ir.ops.len(),
+        tensors_before: ir.tensors.len(),
+        ..Default::default()
+    };
+    let run_dce = n_passes >= PASS_NAMES.len();
+    for (i, name) in PASS_NAMES.iter().copied().enumerate().take(n_passes) {
+        let mut report = PassReport { name, ..Default::default() };
+        match i {
+            0 => fold_pad(&mut ir, model, &mut report)?,
+            1 => elide_views(&mut ir, &mut report),
+            2 => fuse_epilogue(&mut ir, model, resolver, &mut report)?,
+            3 => dce(&mut ir, &mut report),
+            _ => {}
+        }
+        log.passes.push(report);
+    }
+    if !ir.mutated {
+        return Ok(RewriteOutcome::Unchanged);
+    }
+    let rewritten = lower(&ir, model, run_dce)?;
+    log.ops_after = rewritten.operators().len();
+    log.tensors_after = rewritten.tensors().len();
+    Ok(RewriteOutcome::Rewritten { model: rewritten, log })
+}
+
+/// Parse the [`REWRITE_FUSED_KEY`] metadata blob into one optional
+/// [`FusedSpec`] per operator. Returns all-`None` when the metadata is
+/// absent; errors on malformed records.
+pub fn fused_specs(model: &Model) -> Result<Vec<Option<FusedSpec>>> {
+    let n_ops = model.operators().len();
+    let mut out = vec![None; n_ops];
+    let Some(raw) = model.metadata(REWRITE_FUSED_KEY) else {
+        return Ok(out);
+    };
+    if raw.is_empty() || raw.len() % FUSED_RECORD_SIZE != 0 {
+        return Err(Error::MalformedModel(format!(
+            "{REWRITE_FUSED_KEY} metadata length {} is not a positive multiple of {FUSED_RECORD_SIZE}",
+            raw.len()
+        )));
+    }
+    for rec in raw.chunks_exact(FUSED_RECORD_SIZE) {
+        let op_idx = le_u32(rec, 0) as usize;
+        if op_idx >= n_ops {
+            return Err(Error::MalformedModel(format!(
+                "{REWRITE_FUSED_KEY}: op index {op_idx} out of range ({n_ops} ops)"
+            )));
+        }
+        let is_mul = match rec[4] {
+            0 => false,
+            1 => true,
+            k => {
+                return Err(Error::MalformedModel(format!(
+                    "{REWRITE_FUSED_KEY}: unknown arith kind {k}"
+                )))
+            }
+        };
+        let act = match rec[5] {
+            0 => Activation::None,
+            1 => Activation::Relu,
+            2 => Activation::Relu6,
+            a => {
+                return Err(Error::MalformedModel(format!(
+                    "{REWRITE_FUSED_KEY}: unknown activation {a}"
+                )))
+            }
+        };
+        if out[op_idx].is_some() {
+            return Err(Error::MalformedModel(format!(
+                "{REWRITE_FUSED_KEY}: duplicate record for op {op_idx}"
+            )));
+        }
+        out[op_idx] = Some(FusedSpec {
+            is_mul,
+            act,
+            const_val: le_i32(rec, 8),
+            const_scale: le_f32(rec, 12),
+            const_zp: le_i32(rec, 16),
+            inter_scale: le_f32(rec, 20),
+            inter_zp: le_i32(rec, 24),
+        });
+    }
+    Ok(out)
+}
+
+fn le_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn le_i32(b: &[u8], off: usize) -> i32 {
+    le_u32(b, off) as i32
+}
+
+fn le_f32(b: &[u8], off: usize) -> f32 {
+    f32::from_bits(le_u32(b, off))
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: fold Pad into a following conv's implicit SAME padding.
+// ---------------------------------------------------------------------------
+
+/// Fold an explicit int8 `Pad` into the conv consuming it, when SAME
+/// padding over the *unpadded* input reproduces the exact same geometry.
+///
+/// Bit-exactness: the pad kernel fills with the input tensor's zero point
+/// (pad in/out quantization must be identical, which this pass requires),
+/// and the conv's implicit padding contributes `zp + input_offset = 0` to
+/// each accumulator tap — the same value the explicitly padded taps
+/// contribute. Restricted to int8: an f32 fold would turn `0.0 * w`
+/// products on padded taps into skipped taps, which differs under
+/// NaN/infinity weights.
+fn fold_pad(ir: &mut GraphIr, model: &Model, report: &mut PassReport) -> Result<()> {
+    for pi in 0..ir.ops.len() {
+        if ir.ops[pi].removed || ir.ops[pi].opcode != BuiltinOp::Pad {
+            continue;
+        }
+        if ir.ops[pi].inputs.len() != 2 || ir.ops[pi].outputs.len() != 1 {
+            continue;
+        }
+        let data_t = ir.ops[pi].inputs[0];
+        let pads_t = ir.ops[pi].inputs[1];
+        let padded_t = ir.ops[pi].outputs[0];
+        let (Some(data), Some(padded)) = (ir.tensor(data_t), ir.tensor(padded_t)) else {
+            continue;
+        };
+        // int8 only, and the pad must not requantize: identical in/out
+        // quantization makes the fill value equal the conv input zero
+        // point.
+        if data.dtype != DType::I8 || padded.dtype != DType::I8 {
+            continue;
+        }
+        if data.quant.is_none() || data.quant != padded.quant {
+            continue;
+        }
+        let Some((_, zp)) = per_tensor_quant(data) else { continue };
+        if !zp_in_i8_range(zp) {
+            continue;
+        }
+        // Constant NHWC pads: [4, 2] i32, batch and channel pads zero.
+        let Some(pt) = ir.tensor(pads_t) else { continue };
+        if pt.dtype != DType::I32 || pt.buffer.is_none() {
+            continue;
+        }
+        let Some(raw) = model.tensor_data(pads_t as usize)? else { continue };
+        if raw.len() != 32 {
+            continue;
+        }
+        let pads: Vec<i32> = raw.chunks_exact(4).map(|c| le_i32(c, 0)).collect();
+        if pads[0] != 0 || pads[1] != 0 || pads[6] != 0 || pads[7] != 0 {
+            continue;
+        }
+        let (pad_top, pad_bottom, pad_left, pad_right) = (pads[2], pads[3], pads[4], pads[5]);
+        if pad_top < 0 || pad_bottom < 0 || pad_left < 0 || pad_right < 0 {
+            continue;
+        }
+        let in_dims = data.shape.dims().to_vec();
+        let padded_dims = padded.shape.dims().to_vec();
+        if in_dims.len() != 4 || padded_dims.len() != 4 {
+            continue;
+        }
+        if padded_dims[0] != in_dims[0]
+            || padded_dims[1] != in_dims[1] + pad_top + pad_bottom
+            || padded_dims[2] != in_dims[2] + pad_left + pad_right
+            || padded_dims[3] != in_dims[3]
+        {
+            continue;
+        }
+        // Sole consumer must be a VALID-padding conv taking the padded
+        // tensor as its data input; the padded tensor must not escape as
+        // a graph output.
+        if ir.consumer_count(padded_t) != 1 || ir.is_graph_output(padded_t) {
+            continue;
+        }
+        let Some(ci) = ir
+            .ops
+            .iter()
+            .enumerate()
+            .find(|(_, op)| !op.removed && op.inputs.contains(&padded_t))
+            .map(|(i, _)| i)
+        else {
+            continue;
+        };
+        if !matches!(ir.ops[ci].opcode, BuiltinOp::Conv2d | BuiltinOp::DepthwiseConv2d) {
+            continue;
+        }
+        if ir.ops[ci].inputs.first() != Some(&padded_t) || ir.ops[ci].outputs.len() != 1 {
+            continue;
+        }
+        let OpOptions::Conv(conv) = ir.ops[ci].options.clone() else { continue };
+        if conv.padding != Padding::Valid {
+            continue;
+        }
+        let filter_t = match ir.ops[ci].inputs.get(1) {
+            Some(&f) => f,
+            None => continue,
+        };
+        let (Some(filter), Some(out)) = (ir.tensor(filter_t), ir.tensor(ir.ops[ci].outputs[0]))
+        else {
+            continue;
+        };
+        let f_dims = filter.shape.dims().to_vec();
+        let o_dims = out.shape.dims().to_vec();
+        if f_dims.len() != 4 || o_dims.len() != 4 {
+            continue;
+        }
+        let (kh, kw) = (f_dims[1], f_dims[2]);
+        let (oh, ow) = (o_dims[1], o_dims[2]);
+        let (sh, sw) = (conv.stride_h as i32, conv.stride_w as i32);
+        let (dh, dw) = (conv.dilation_h as i32, conv.dilation_w as i32);
+        if sh <= 0 || sw <= 0 || dh <= 0 || dw <= 0 {
+            continue;
+        }
+        // Geometry: the VALID conv over the padded input must already
+        // produce this output (consistency), and SAME padding over the
+        // *unpadded* input must reproduce both the output extent and the
+        // exact leading pad. TFLite's SAME padding is free to shortfall
+        // at the trailing edge, so pad_bottom/pad_right only need to
+        // satisfy the padded-extent consistency check above.
+        if compute_out_size(Padding::Valid, padded_dims[1], kh, sh, dh) != oh
+            || compute_out_size(Padding::Valid, padded_dims[2], kw, sw, dw) != ow
+        {
+            continue;
+        }
+        if compute_out_size(Padding::Same, in_dims[1], kh, sh, dh) != oh
+            || compute_out_size(Padding::Same, in_dims[2], kw, sw, dw) != ow
+        {
+            continue;
+        }
+        if compute_padding(sh, dh, in_dims[1], kh, oh) != pad_top
+            || compute_padding(sw, dw, in_dims[2], kw, ow) != pad_left
+        {
+            continue;
+        }
+        // Fold: rewire the conv onto the unpadded input, flip it to SAME
+        // padding, tombstone the Pad.
+        ir.ops[ci].inputs[0] = data_t;
+        if let OpOptions::Conv(c) = &mut ir.ops[ci].options {
+            c.padding = Padding::Same;
+        }
+        ir.ops[pi].removed = true;
+        ir.mutated = true;
+        report.ops_removed += 1;
+        report.details.push(format!(
+            "folded pad op {pi} ({pad_top},{pad_bottom})x({pad_left},{pad_right}) into conv op {ci} as SAME padding"
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: elide no-op view ops (Reshape, identity Quantize, Dequantize →
+// Quantize round trips).
+// ---------------------------------------------------------------------------
+
+fn elide_views(ir: &mut GraphIr, report: &mut PassReport) {
+    loop {
+        let mut changed = false;
+        changed |= elide_dequant_quant_pairs(ir, report);
+        changed |= elide_identity_quantize(ir, report);
+        changed |= elide_noop_reshapes(ir, report);
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// `Dequantize(i8→f32)` immediately re-`Quantize`d(f32→i8) with the exact
+/// source quantization is the identity on i8 values: `round(((x-z)*s)/s)`
+/// recovers `x-z` exactly for i8-range integers (the relative f32 error
+/// is far below 1/2 ulp of the integer grid).
+fn elide_dequant_quant_pairs(ir: &mut GraphIr, report: &mut PassReport) -> bool {
+    let mut changed = false;
+    for di in 0..ir.ops.len() {
+        if ir.ops[di].removed || ir.ops[di].opcode != BuiltinOp::Dequantize {
+            continue;
+        }
+        if ir.ops[di].inputs.len() != 1 || ir.ops[di].outputs.len() != 1 {
+            continue;
+        }
+        let d_in = ir.ops[di].inputs[0];
+        let d_out = ir.ops[di].outputs[0];
+        let (Some(src), Some(mid)) = (ir.tensor(d_in), ir.tensor(d_out)) else { continue };
+        if src.dtype != DType::I8 || mid.dtype != DType::F32 || src.quant.is_none() {
+            continue;
+        }
+        if per_tensor_quant(src).is_none() {
+            continue;
+        }
+        // The f32 intermediate must feed exactly one Quantize and nothing
+        // else (not a graph output, not an alias source).
+        if ir.consumer_count(d_out) != 1 || ir.is_graph_output(d_out) || ir.is_alias_source(d_out)
+        {
+            continue;
+        }
+        let Some(qi) = ir
+            .ops
+            .iter()
+            .enumerate()
+            .find(|(_, op)| !op.removed && op.inputs.contains(&d_out))
+            .map(|(i, _)| i)
+        else {
+            continue;
+        };
+        if ir.ops[qi].opcode != BuiltinOp::Quantize
+            || ir.ops[qi].inputs.len() != 1
+            || ir.ops[qi].outputs.len() != 1
+        {
+            continue;
+        }
+        let q_out = ir.ops[qi].outputs[0];
+        let (Some(src), Some(dst)) = (ir.tensor(d_in), ir.tensor(q_out)) else { continue };
+        if dst.dtype != DType::I8 || src.quant.is_none() || src.quant != dst.quant {
+            continue;
+        }
+        ir.ops[di].removed = true;
+        ir.ops[qi].removed = true;
+        ir.rewire_reads(q_out, d_in);
+        ir.mutated = true;
+        changed = true;
+        report.ops_removed += 2;
+        report
+            .details
+            .push(format!("elided dequantize op {di} + quantize op {qi} round trip"));
+    }
+    changed
+}
+
+/// `Quantize(i8→i8)` with identical input/output quantization is the
+/// identity (same argument as the dequant/quant round trip).
+fn elide_identity_quantize(ir: &mut GraphIr, report: &mut PassReport) -> bool {
+    let mut changed = false;
+    for qi in 0..ir.ops.len() {
+        if ir.ops[qi].removed || ir.ops[qi].opcode != BuiltinOp::Quantize {
+            continue;
+        }
+        if ir.ops[qi].inputs.len() != 1 || ir.ops[qi].outputs.len() != 1 {
+            continue;
+        }
+        let q_in = ir.ops[qi].inputs[0];
+        let q_out = ir.ops[qi].outputs[0];
+        if q_in == q_out {
+            continue;
+        }
+        let (Some(src), Some(dst)) = (ir.tensor(q_in), ir.tensor(q_out)) else { continue };
+        if src.dtype != DType::I8 || dst.dtype != DType::I8 {
+            continue;
+        }
+        if src.quant.is_none() || src.quant != dst.quant {
+            continue;
+        }
+        if per_tensor_quant(src).is_none() {
+            continue;
+        }
+        ir.ops[qi].removed = true;
+        ir.rewire_reads(q_out, q_in);
+        ir.mutated = true;
+        changed = true;
+        report.ops_removed += 1;
+        report.details.push(format!("elided identity quantize op {qi}"));
+    }
+    changed
+}
+
+/// A Reshape never moves bytes in this runtime (the output carries the
+/// new static dims); elide the op and record a planner alias so input
+/// and output share one arena range.
+fn elide_noop_reshapes(ir: &mut GraphIr, report: &mut PassReport) -> bool {
+    let mut changed = false;
+    for ri in 0..ir.ops.len() {
+        if ir.ops[ri].removed || ir.ops[ri].opcode != BuiltinOp::Reshape {
+            continue;
+        }
+        // Reshape may carry an optional second (shape) input; only the
+        // data input matters here.
+        if ir.ops[ri].inputs.is_empty() || ir.ops[ri].outputs.len() != 1 {
+            continue;
+        }
+        let r_in = ir.ops[ri].inputs[0];
+        let r_out = ir.ops[ri].outputs[0];
+        if r_in == r_out {
+            continue;
+        }
+        let (Some(src), Some(dst)) = (ir.tensor(r_in), ir.tensor(r_out)) else { continue };
+        // Both ends must be plain arena tensors: constants have no arena
+        // storage to share, and variables have their own persistent
+        // allocation the planner must not merge.
+        if !src.needs_arena() || src.is_variable || !dst.needs_arena() || dst.is_variable {
+            continue;
+        }
+        if src.num_bytes() != dst.num_bytes() {
+            continue;
+        }
+        if ir.aliases.get(r_out as usize).map(Option::is_some) != Some(false) {
+            continue;
+        }
+        ir.aliases[r_out as usize] = Some(r_in as usize);
+        ir.ops[ri].removed = true;
+        ir.mutated = true;
+        changed = true;
+        report.ops_removed += 1;
+        report.aliased += 1;
+        report
+            .details
+            .push(format!("elided reshape op {ri}; tensor {r_out} now aliases {r_in}"));
+    }
+    changed
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: fuse activation / scalar-arith chains into the producer's
+// requant epilogue.
+// ---------------------------------------------------------------------------
+
+fn fuse_epilogue(
+    ir: &mut GraphIr,
+    model: &Model,
+    resolver: Option<&OpResolver>,
+    report: &mut PassReport,
+) -> Result<()> {
+    // Activation folding first so a trailing Relu collapses into an
+    // elementwise op before that op is itself considered for epilogue
+    // fusion (conv → Add → Relu becomes conv+fused{add,relu}).
+    loop {
+        if !fold_activations(ir, report) {
+            break;
+        }
+    }
+    if let Some(res) = resolver {
+        fuse_scalar_arith(ir, model, res, report)?;
+    }
+    Ok(())
+}
+
+/// Fold a standalone Relu/Relu6 into the producing op's fused-activation
+/// option. int8 requires identical in/out quantization (exactly what the
+/// standalone ReluKernel requires) so the producer's
+/// `activation_range_i8` clamp equals the standalone kernel's clamp;
+/// f32 clamps are value-identical by inspection.
+fn fold_activations(ir: &mut GraphIr, report: &mut PassReport) -> bool {
+    let mut changed = false;
+    for ai in 0..ir.ops.len() {
+        if ir.ops[ai].removed
+            || !matches!(ir.ops[ai].opcode, BuiltinOp::Relu | BuiltinOp::Relu6)
+        {
+            continue;
+        }
+        if ir.ops[ai].inputs.len() != 1 || ir.ops[ai].outputs.len() != 1 {
+            continue;
+        }
+        let t = ir.ops[ai].inputs[0];
+        let a_out = ir.ops[ai].outputs[0];
+        if t == a_out {
+            continue;
+        }
+        let Some(pi) = ir.producer_of(t) else { continue };
+        if !matches!(
+            ir.ops[pi].opcode,
+            BuiltinOp::Conv2d
+                | BuiltinOp::DepthwiseConv2d
+                | BuiltinOp::FullyConnected
+                | BuiltinOp::Add
+                | BuiltinOp::Mul
+        ) {
+            continue;
+        }
+        if ir.ops[pi].outputs != vec![t] || ir.ops[pi].fused.is_some() {
+            continue;
+        }
+        let p_act = match &ir.ops[pi].options {
+            OpOptions::Conv(c) => c.activation,
+            OpOptions::FullyConnected { activation } | OpOptions::Elementwise { activation } => {
+                *activation
+            }
+            _ => continue,
+        };
+        if p_act != Activation::None {
+            continue;
+        }
+        // The intermediate must be private to this chain.
+        if ir.consumer_count(t) != 1 || ir.is_graph_output(t) || ir.is_alias_source(t) {
+            continue;
+        }
+        let (Some(mid), Some(out)) = (ir.tensor(t), ir.tensor(a_out)) else { continue };
+        if mid.dtype != out.dtype || mid.shape.dims() != out.shape.dims() {
+            continue;
+        }
+        match mid.dtype {
+            DType::I8 => {
+                // ReluKernel requires identical in/out quantization; the
+                // fold inherits that requirement so the producer's clamp
+                // is computed against the same (scale, zp). Positive
+                // scale and in-range zp keep clamp bounds ordered the
+                // same way the standalone kernel orders them.
+                if mid.quant.is_none() || mid.quant != out.quant {
+                    continue;
+                }
+                let Some((scale, zp)) = per_tensor_quant(mid) else { continue };
+                if scale <= 0.0 || !zp_in_i8_range(zp) {
+                    continue;
+                }
+            }
+            DType::F32 => {}
+            _ => continue,
+        }
+        let act = if ir.ops[ai].opcode == BuiltinOp::Relu6 {
+            Activation::Relu6
+        } else {
+            Activation::Relu
+        };
+        match &mut ir.ops[pi].options {
+            OpOptions::Conv(c) => c.activation = act,
+            OpOptions::FullyConnected { activation } | OpOptions::Elementwise { activation } => {
+                *activation = act
+            }
+            _ => continue,
+        }
+        ir.ops[pi].outputs[0] = a_out;
+        ir.ops[ai].removed = true;
+        ir.mutated = true;
+        changed = true;
+        report.ops_removed += 1;
+        report
+            .details
+            .push(format!("folded {act:?} op {ai} into producer op {pi}"));
+    }
+    changed
+}
+
+/// Fuse a scalar-constant int8 Add/Mul into the producing conv/FC as a
+/// requant epilogue ([`FusedSpec`]). The producer requantizes into the
+/// elided intermediate's quantization and the epilogue replays the exact
+/// elementwise fixed-point math (`arith_i8_multipliers` is shared with
+/// the standalone kernel), so results are bit-identical. Gated on the
+/// resolver's kernel reporting `supports_fused_epilogue`.
+fn fuse_scalar_arith(
+    ir: &mut GraphIr,
+    model: &Model,
+    resolver: &OpResolver,
+    report: &mut PassReport,
+) -> Result<()> {
+    for ei in 0..ir.ops.len() {
+        if ir.ops[ei].removed || !matches!(ir.ops[ei].opcode, BuiltinOp::Add | BuiltinOp::Mul) {
+            continue;
+        }
+        if ir.ops[ei].inputs.len() != 2 || ir.ops[ei].outputs.len() != 1 {
+            continue;
+        }
+        let e_act = match &ir.ops[ei].options {
+            OpOptions::Elementwise { activation } => *activation,
+            _ => continue,
+        };
+        let t = ir.ops[ei].inputs[0];
+        let c = ir.ops[ei].inputs[1];
+        let e_out = ir.ops[ei].outputs[0];
+        // Only the (producer, scalar-const) operand order fuses; a const
+        // first operand changes the broadcast semantics.
+        let Some(pi) = ir.producer_of(t) else { continue };
+        if !matches!(ir.ops[pi].opcode, BuiltinOp::Conv2d | BuiltinOp::FullyConnected) {
+            continue;
+        }
+        if ir.ops[pi].outputs != vec![t] || ir.ops[pi].fused.is_some() {
+            continue;
+        }
+        let p_act = match &ir.ops[pi].options {
+            OpOptions::Conv(cv) => cv.activation,
+            OpOptions::FullyConnected { activation } => *activation,
+            _ => continue,
+        };
+        if p_act != Activation::None {
+            continue;
+        }
+        if ir.consumer_count(t) != 1 || ir.is_graph_output(t) || ir.is_alias_source(t) {
+            continue;
+        }
+        let (Some(mid), Some(konst), Some(out)) = (ir.tensor(t), ir.tensor(c), ir.tensor(e_out))
+        else {
+            continue;
+        };
+        if mid.dtype != DType::I8 || konst.dtype != DType::I8 || out.dtype != DType::I8 {
+            continue;
+        }
+        if konst.buffer.is_none() || konst.num_elements() != 1 {
+            continue;
+        }
+        if mid.num_elements() != out.num_elements() {
+            continue;
+        }
+        let (Some((inter_scale, inter_zp)), Some((const_scale, const_zp)), Some((out_scale, _))) =
+            (per_tensor_quant(mid), per_tensor_quant(konst), per_tensor_quant(out))
+        else {
+            continue;
+        };
+        if inter_scale <= 0.0 || const_scale <= 0.0 || out_scale <= 0.0 {
+            continue;
+        }
+        // The producing kernel must implement the epilogue hook.
+        let Ok(kernel) = resolver.find(ir.ops[pi].opcode.name()) else { continue };
+        if !kernel.supports_fused_epilogue() {
+            continue;
+        }
+        let Some(raw) = model.tensor_data(c as usize)? else { continue };
+        if raw.is_empty() {
+            continue;
+        }
+        let const_val = raw[0] as i8 as i32;
+        let is_mul = ir.ops[ei].opcode == BuiltinOp::Mul;
+        ir.ops[pi].fused = Some(FusedSpec {
+            is_mul,
+            act: e_act,
+            const_val,
+            const_scale,
+            const_zp,
+            inter_scale,
+            inter_zp,
+        });
+        ir.ops[pi].outputs[0] = e_out;
+        ir.ops[ei].removed = true;
+        ir.mutated = true;
+        report.ops_removed += 1;
+        report.fused += 1;
+        report.details.push(format!(
+            "fused scalar {} op {ei} into producer op {pi} as requant epilogue",
+            if is_mul { "mul" } else { "add" }
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Pass 4: dead-tensor elimination.
+// ---------------------------------------------------------------------------
+
+fn dce(ir: &mut GraphIr, report: &mut PassReport) {
+    let n = ir.tensors.len();
+    let mut live = vec![false; n];
+    let mark = |live: &mut Vec<bool>, t: i32| {
+        if t >= 0 && (t as usize) < n {
+            live[t as usize] = true;
+        }
+    };
+    for op in ir.ops.iter().filter(|op| !op.removed) {
+        for &t in op.inputs.iter().chain(op.outputs.iter()) {
+            mark(&mut live, t);
+        }
+    }
+    for &t in ir.inputs.iter().chain(ir.outputs.iter()) {
+        mark(&mut live, t);
+    }
+    // An alias keeps its source alive (the view reads the source's
+    // storage), transitively along chains.
+    loop {
+        let mut changed = false;
+        for t in 0..n {
+            if live[t] {
+                if let Some(s) = ir.aliases[t] {
+                    if s < n && !live[s] {
+                        live[s] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let removed = live.iter().filter(|l| !**l).count();
+    if removed > 0 {
+        ir.dead = live.iter().map(|l| !l).collect();
+        ir.mutated = true;
+        report.tensors_removed = removed;
+        report.details.push(format!("dropped {removed} dead tensor(s)"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering: GraphIr -> serialized model.
+// ---------------------------------------------------------------------------
+
+fn encode_options(opcode: BuiltinOp, o: &OpOptions) -> Vec<u8> {
+    match o {
+        OpOptions::Conv(c) => conv_options(
+            c.padding,
+            c.activation,
+            (c.stride_h, c.stride_w),
+            (c.dilation_h, c.dilation_w),
+            if opcode == BuiltinOp::DepthwiseConv2d { Some(c.depth_multiplier) } else { None },
+        ),
+        OpOptions::Pool(p) => {
+            pool_options(p.padding, p.activation, (p.stride_h, p.stride_w), (p.filter_h, p.filter_w))
+        }
+        OpOptions::FullyConnected { activation } => fully_connected_options(*activation),
+        OpOptions::Softmax { beta } => softmax_options(*beta),
+        OpOptions::Elementwise { activation } => elementwise_options(*activation),
+        OpOptions::Concat { axis, activation } => concat_options(*axis, *activation),
+        OpOptions::Mean { keep_dims } => mean_options(*keep_dims),
+        OpOptions::None => Vec::new(),
+    }
+}
+
+/// Serialize the IR back to a model. Live ops and (when `strip_dead`)
+/// live tensors are compacted; buffers are deduplicated to only those a
+/// surviving tensor references. Metadata is carried over except the
+/// offline plan (its tensor indices are stale) and any previous rewrite
+/// blobs (replaced by this run's alias/fused records, remapped to the
+/// compacted index spaces).
+fn lower(ir: &GraphIr, model: &Model, strip_dead: bool) -> Result<Model> {
+    let keep: Vec<bool> = if strip_dead && ir.dead.len() == ir.tensors.len() {
+        ir.dead.iter().map(|d| !d).collect()
+    } else {
+        vec![true; ir.tensors.len()]
+    };
+
+    let mut b = ModelBuilder::new(model.description());
+    let mut tensor_map = vec![-1i32; ir.tensors.len()];
+    let mut buf_map: BTreeMap<u32, u32> = BTreeMap::new();
+    for (i, t) in ir.tensors.iter().enumerate() {
+        if !keep[i] {
+            continue;
+        }
+        let buffer = match t.buffer {
+            Some(ob) => Some(match buf_map.get(&ob) {
+                Some(&nb) => nb,
+                None => {
+                    let nb = b.add_buffer(model.buffer(ob)?);
+                    buf_map.insert(ob, nb);
+                    nb
+                }
+            }),
+            None => None,
+        };
+        let dims = t.shape.dims();
+        let idx = match &t.quant {
+            Some(q) => b.add_quant_tensor(&t.name, t.dtype, dims, buffer, q.clone()),
+            None => b.add_tensor(&t.name, t.dtype, dims, buffer),
+        };
+        if t.is_variable {
+            b.set_variable(idx);
+        }
+        tensor_map[i] = idx;
+    }
+
+    let map_t = |t: i32| -> Result<i32> {
+        if t < 0 {
+            return Ok(-1);
+        }
+        match tensor_map.get(t as usize) {
+            Some(&m) if m >= 0 => Ok(m),
+            _ => Err(Error::MalformedModel(format!(
+                "rewrite dropped tensor {t} that is still referenced"
+            ))),
+        }
+    };
+
+    let mut fused_records: Vec<(u32, FusedSpec)> = Vec::new();
+    let mut next_op = 0u32;
+    for op in ir.ops.iter() {
+        if op.removed {
+            continue;
+        }
+        let inputs: Vec<i32> = op.inputs.iter().map(|&t| map_t(t)).collect::<Result<_>>()?;
+        let outputs: Vec<i32> = op.outputs.iter().map(|&t| map_t(t)).collect::<Result<_>>()?;
+        b.add_op(op.opcode, &inputs, &outputs, encode_options(op.opcode, &op.options));
+        if let Some(f) = op.fused {
+            fused_records.push((next_op, f));
+        }
+        next_op += 1;
+    }
+
+    let ins: Vec<i32> = ir.inputs.iter().map(|&t| map_t(t)).collect::<Result<_>>()?;
+    let outs: Vec<i32> = ir.outputs.iter().map(|&t| map_t(t)).collect::<Result<_>>()?;
+    b.set_io(&ins, &outs);
+
+    let keys: Vec<String> = model.metadata_keys().map(str::to_string).collect();
+    for k in &keys {
+        if k == OFFLINE_PLAN_KEY || k == REWRITE_ALIAS_KEY || k == REWRITE_FUSED_KEY {
+            continue;
+        }
+        if let Some(v) = model.metadata(k) {
+            b.add_metadata(k, v);
+        }
+    }
+
+    let mut alias_blob: Vec<u8> = Vec::new();
+    for (t, a) in ir.aliases.iter().enumerate() {
+        let Some(src) = *a else { continue };
+        if !keep[t] {
+            continue;
+        }
+        let nt = map_t(t as i32)?;
+        let ns = map_t(src as i32)?;
+        alias_blob.extend_from_slice(&(nt as u32).to_le_bytes());
+        alias_blob.extend_from_slice(&(ns as u32).to_le_bytes());
+    }
+    if !alias_blob.is_empty() {
+        b.add_metadata(REWRITE_ALIAS_KEY, &alias_blob);
+    }
+
+    let mut fused_blob: Vec<u8> = Vec::new();
+    for (oi, f) in &fused_records {
+        fused_blob.extend_from_slice(&oi.to_le_bytes());
+        fused_blob.push(u8::from(f.is_mul));
+        fused_blob.push(f.act as u8);
+        fused_blob.extend_from_slice(&0u16.to_le_bytes());
+        fused_blob.extend_from_slice(&f.const_val.to_le_bytes());
+        fused_blob.extend_from_slice(&f.const_scale.to_le_bytes());
+        fused_blob.extend_from_slice(&f.const_zp.to_le_bytes());
+        fused_blob.extend_from_slice(&f.inter_scale.to_le_bytes());
+        fused_blob.extend_from_slice(&f.inter_zp.to_le_bytes());
+    }
+    if !fused_blob.is_empty() {
+        b.add_metadata(REWRITE_FUSED_KEY, &fused_blob);
+    }
+
+    Model::from_bytes(&b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::QuantParams;
+
+    fn q(scale: f32, zp: i32) -> QuantParams {
+        QuantParams::per_tensor(scale, zp)
+    }
+
+    fn pads_buffer(pt: i32, pb: i32, pl: i32, pr: i32) -> Vec<u8> {
+        [0, 0, pt, pb, pl, pr, 0, 0].iter().flat_map(|v: &i32| v.to_le_bytes()).collect()
+    }
+
+    /// in[1,4,4,1] -> Pad(1,1)x(1,1) -> Conv2d 3x3 s1 VALID -> out[1,4,4,1].
+    /// SAME over the unpadded input needs exactly pad 1 on each leading
+    /// edge, so the Pad folds.
+    fn pad_conv_model(pads: &[u8], kernel: u32, stride: u32, padded_hw: i32, out_hw: i32) -> Model {
+        let mut b = ModelBuilder::new("pad-conv");
+        let pb = b.add_buffer(pads);
+        let fb = b.add_buffer(&vec![1u8; (kernel * kernel) as usize]);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4, 4, 1], None, q(0.5, -1));
+        let t_pads = b.add_tensor("pads", DType::I32, &[4, 2], Some(pb));
+        let t_pad = b.add_quant_tensor(
+            "padded", DType::I8, &[1, padded_hw, padded_hw, 1], None, q(0.5, -1),
+        );
+        let k = kernel as i32;
+        let t_f = b.add_quant_tensor("w", DType::I8, &[1, k, k, 1], Some(fb), q(0.1, 0));
+        let t_out =
+            b.add_quant_tensor("out", DType::I8, &[1, out_hw, out_hw, 1], None, q(0.7, 3));
+        b.add_op(BuiltinOp::Pad, &[t_in, t_pads], &[t_pad], vec![]);
+        b.add_op(
+            BuiltinOp::Conv2d,
+            &[t_pad, t_f, -1],
+            &[t_out],
+            conv_options(Padding::Valid, Activation::None, (stride, stride), (1, 1), None),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        Model::from_bytes(&b.finish()).unwrap()
+    }
+
+    #[test]
+    fn pad_folds_into_matching_same_conv() {
+        let m = pad_conv_model(&pads_buffer(1, 1, 1, 1), 3, 1, 6, 4);
+        let RewriteOutcome::Rewritten { model, log } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(log.ops_removed(), 1);
+        assert_eq!(model.operators().len(), 1);
+        let op = &model.operators()[0];
+        assert_eq!(op.opcode, BuiltinOp::Conv2d);
+        let OpOptions::Conv(c) = &op.options else { panic!("conv options") };
+        assert_eq!(c.padding, Padding::Same);
+        // Conv now reads the original input; padded + pads tensors died.
+        assert_eq!(op.inputs[0], model.inputs()[0]);
+        assert_eq!(model.tensors().len(), 3);
+        assert!(log.tensors_before > log.tensors_after);
+    }
+
+    /// Even-kernel regression pin: in=4, pad(1,0), VALID 2x2 s2 gives
+    /// out=2, and SAME over in=4 s2 also gives out=2 — but SAME computes
+    /// a leading pad of 0, not 1, so the fold must be rejected.
+    #[test]
+    fn pad_fold_rejects_asymmetric_even_kernel() {
+        let m = pad_conv_model(&pads_buffer(1, 0, 1, 0), 2, 2, 5, 2);
+        assert!(matches!(rewrite(&m, None).unwrap(), RewriteOutcome::Unchanged));
+    }
+
+    #[test]
+    fn pad_fold_rejects_quant_mismatch() {
+        // Same geometry as the positive case but the pad requantizes
+        // (different zero point), so the fill value differs from the
+        // conv-input zero point and the fold must not fire.
+        let mut b = ModelBuilder::new("pad-requant");
+        let pb = b.add_buffer(&pads_buffer(1, 1, 1, 1));
+        let fb = b.add_buffer(&[1u8; 9]);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4, 4, 1], None, q(0.5, -1));
+        let t_pads = b.add_tensor("pads", DType::I32, &[4, 2], Some(pb));
+        let t_pad = b.add_quant_tensor("padded", DType::I8, &[1, 6, 6, 1], None, q(0.5, 7));
+        let t_f = b.add_quant_tensor("w", DType::I8, &[1, 3, 3, 1], Some(fb), q(0.1, 0));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4, 4, 1], None, q(0.7, 3));
+        b.add_op(BuiltinOp::Pad, &[t_in, t_pads], &[t_pad], vec![]);
+        b.add_op(
+            BuiltinOp::Conv2d,
+            &[t_pad, t_f, -1],
+            &[t_out],
+            conv_options(Padding::Valid, Activation::None, (1, 1), (1, 1), None),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(matches!(rewrite(&m, None).unwrap(), RewriteOutcome::Unchanged));
+    }
+
+    #[test]
+    fn noop_reshape_becomes_planner_alias() {
+        let mut b = ModelBuilder::new("reshape");
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 8], None, q(0.5, 0));
+        let t_mid = b.add_quant_tensor("mid", DType::I8, &[1, 8], None, q(0.5, 0));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[8], None, q(0.5, 0));
+        b.add_op(BuiltinOp::Relu, &[t_in], &[t_mid], vec![]);
+        b.add_op(BuiltinOp::Reshape, &[t_mid], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let RewriteOutcome::Rewritten { model, log } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(log.ops_removed(), 1);
+        assert_eq!(model.operators().len(), 1);
+        assert_eq!(model.operators()[0].opcode, BuiltinOp::Relu);
+        // Alias metadata: out aliases mid (indices remapped, here stable).
+        assert_eq!(model.rewrite_aliases().unwrap(), vec![(2, 1)]);
+    }
+
+    #[test]
+    fn identity_quantize_elided_and_outputs_rewired() {
+        let mut b = ModelBuilder::new("ident-quant");
+        let t_in = b.add_quant_tensor("in", DType::I8, &[4], None, q(0.25, 1));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[4], None, q(0.25, 1));
+        b.add_op(BuiltinOp::Quantize, &[t_in], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let RewriteOutcome::Rewritten { model, .. } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(model.operators().len(), 0);
+        // The graph output collapsed onto the input tensor.
+        assert_eq!(model.outputs(), model.inputs());
+        assert_eq!(model.tensors().len(), 1);
+    }
+
+    #[test]
+    fn requantizing_quantize_kept() {
+        let mut b = ModelBuilder::new("requant");
+        let t_in = b.add_quant_tensor("in", DType::I8, &[4], None, q(0.25, 1));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[4], None, q(0.5, 0));
+        b.add_op(BuiltinOp::Quantize, &[t_in], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(matches!(rewrite(&m, None).unwrap(), RewriteOutcome::Unchanged));
+    }
+
+    #[test]
+    fn dequant_quant_round_trip_elided() {
+        let mut b = ModelBuilder::new("dq-q");
+        let t_in = b.add_quant_tensor("in", DType::I8, &[4], None, q(0.25, 1));
+        let t_f = b.add_tensor("f", DType::F32, &[4], None);
+        let t_q = b.add_quant_tensor("q", DType::I8, &[4], None, q(0.25, 1));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[4], None, q(0.25, 1));
+        b.add_op(BuiltinOp::Dequantize, &[t_in], &[t_f], vec![]);
+        b.add_op(BuiltinOp::Quantize, &[t_f], &[t_q], vec![]);
+        b.add_op(BuiltinOp::Relu, &[t_q], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let RewriteOutcome::Rewritten { model, log } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        // Dequantize + Quantize removed, Relu rewired onto the input.
+        assert_eq!(log.ops_removed(), 2);
+        assert_eq!(model.operators().len(), 1);
+        assert_eq!(model.operators()[0].opcode, BuiltinOp::Relu);
+        assert_eq!(model.operators()[0].inputs, vec![model.inputs()[0]]);
+    }
+
+    fn fc_model(producer_act: Activation, tail: BuiltinOp, tail_act: Activation) -> Model {
+        let mut b = ModelBuilder::new("fc-chain");
+        let wb = b.add_buffer(&[1u8; 8]);
+        let cb = b.add_buffer(&[5u8]);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4], None, q(0.5, 0));
+        let t_w = b.add_quant_tensor("w", DType::I8, &[2, 4], Some(wb), q(0.1, 0));
+        let t_mid = b.add_quant_tensor("mid", DType::I8, &[1, 2], None, q(0.5, 0));
+        b.add_op(
+            BuiltinOp::FullyConnected,
+            &[t_in, t_w, -1],
+            &[t_mid],
+            fully_connected_options(producer_act),
+        );
+        match tail {
+            BuiltinOp::Relu | BuiltinOp::Relu6 => {
+                let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2], None, q(0.5, 0));
+                b.add_op(tail, &[t_mid], &[t_out], vec![]);
+                b.set_io(&[t_in], &[t_out]);
+            }
+            _ => {
+                let t_c = b.add_quant_tensor("c", DType::I8, &[1], Some(cb), q(0.25, 1));
+                let t_out = b.add_quant_tensor("out", DType::I8, &[1, 2], None, q(1.0, 2));
+                b.add_op(tail, &[t_mid, t_c], &[t_out], elementwise_options(tail_act));
+                b.set_io(&[t_in], &[t_out]);
+            }
+        }
+        Model::from_bytes(&b.finish()).unwrap()
+    }
+
+    #[test]
+    fn relu_folds_into_fc_activation() {
+        let m = fc_model(Activation::None, BuiltinOp::Relu6, Activation::None);
+        let RewriteOutcome::Rewritten { model, log } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(log.ops_removed(), 1);
+        assert_eq!(model.operators().len(), 1);
+        let OpOptions::FullyConnected { activation } = model.operators()[0].options else {
+            panic!("fc options")
+        };
+        assert_eq!(activation, Activation::Relu6);
+    }
+
+    #[test]
+    fn relu_not_folded_over_existing_activation() {
+        let m = fc_model(Activation::Relu, BuiltinOp::Relu6, Activation::None);
+        assert!(matches!(rewrite(&m, None).unwrap(), RewriteOutcome::Unchanged));
+    }
+
+    #[test]
+    fn scalar_add_fuses_into_fc_epilogue() {
+        let m = fc_model(Activation::None, BuiltinOp::Add, Activation::Relu);
+        let resolver = OpResolver::with_reference_ops();
+        let RewriteOutcome::Rewritten { model, log } = rewrite(&m, Some(&resolver)).unwrap()
+        else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(log.ops_removed(), 1);
+        assert_eq!(model.operators().len(), 1);
+        let specs = fused_specs(&model).unwrap();
+        let spec = specs[0].expect("fused record on the fc");
+        assert!(!spec.is_mul);
+        assert_eq!(spec.act, Activation::Relu);
+        assert_eq!(spec.const_val, 5);
+        assert_eq!(spec.const_scale, 0.25);
+        assert_eq!(spec.const_zp, 1);
+        assert_eq!(spec.inter_scale, 0.5);
+        assert_eq!(spec.inter_zp, 0);
+        // Without a resolver the fusion is skipped entirely.
+        assert!(matches!(rewrite(&m, None).unwrap(), RewriteOutcome::Unchanged));
+    }
+
+    #[test]
+    fn combined_graph_removes_three_ops() {
+        // in -> Pad -> Conv(VALID) -> Reshape -> Quantize(identity) -> out
+        let mut b = ModelBuilder::new("combined");
+        let pb = b.add_buffer(&pads_buffer(1, 1, 1, 1));
+        let fb = b.add_buffer(&[1u8; 9]);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4, 4, 1], None, q(0.5, -1));
+        let t_pads = b.add_tensor("pads", DType::I32, &[4, 2], Some(pb));
+        let t_pad = b.add_quant_tensor("padded", DType::I8, &[1, 6, 6, 1], None, q(0.5, -1));
+        let t_f = b.add_quant_tensor("w", DType::I8, &[1, 3, 3, 1], Some(fb), q(0.1, 0));
+        let t_conv = b.add_quant_tensor("conv", DType::I8, &[1, 4, 4, 1], None, q(0.7, 3));
+        let t_flat = b.add_quant_tensor("flat", DType::I8, &[1, 16], None, q(0.7, 3));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, 16], None, q(0.7, 3));
+        b.add_op(BuiltinOp::Pad, &[t_in, t_pads], &[t_pad], vec![]);
+        b.add_op(
+            BuiltinOp::Conv2d,
+            &[t_pad, t_f, -1],
+            &[t_conv],
+            conv_options(Padding::Valid, Activation::None, (1, 1), (1, 1), None),
+        );
+        b.add_op(BuiltinOp::Reshape, &[t_conv], &[t_flat], vec![]);
+        b.add_op(BuiltinOp::Quantize, &[t_flat], &[t_out], vec![]);
+        b.set_io(&[t_in], &[t_out]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let RewriteOutcome::Rewritten { model, log } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(log.ops_removed(), 3);
+        assert_eq!(model.operators().len(), 1);
+        assert_eq!(model.operators()[0].opcode, BuiltinOp::Conv2d);
+        // Pads + padded + the identity-quantize output died; the graph
+        // output is now the reshape alias of the conv output.
+        assert!(model.rewrite_aliases().is_some());
+        assert!(log.tensors_after < log.tensors_before);
+        assert_eq!(model.outputs().len(), 1);
+    }
+
+    #[test]
+    fn prefix_run_keeps_tensor_table() {
+        let m = pad_conv_model(&pads_buffer(1, 1, 1, 1), 3, 1, 6, 4);
+        let RewriteOutcome::Rewritten { model, log } = rewrite_prefix(&m, None, 1).unwrap()
+        else {
+            panic!("expected a rewrite");
+        };
+        // Pass 1 fired but dce did not run: all tensors survive.
+        assert_eq!(log.ops_removed(), 1);
+        assert_eq!(model.tensors().len(), m.tensors().len());
+    }
+
+    #[test]
+    fn custom_ops_and_prior_rewrites_are_ineligible() {
+        let mut b = ModelBuilder::new("custom");
+        let t0 = b.add_tensor("in", DType::F32, &[4], None);
+        let t1 = b.add_tensor("out", DType::F32, &[4], None);
+        b.add_custom_op("MY_OP", &[t0], &[t1], vec![]);
+        b.set_io(&[t0], &[t1]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(matches!(rewrite(&m, None).unwrap(), RewriteOutcome::Unchanged));
+
+        let m2 = pad_conv_model(&pads_buffer(1, 1, 1, 1), 3, 1, 6, 4);
+        let RewriteOutcome::Rewritten { model, .. } = rewrite(&m2, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        // A second rewrite over an already-rewritten model is a no-op.
+        assert!(matches!(rewrite(&model, None).unwrap(), RewriteOutcome::Unchanged));
+    }
+
+    #[test]
+    fn metadata_preserved_plan_dropped() {
+        let mut b = ModelBuilder::new("meta");
+        let pb = b.add_buffer(&pads_buffer(1, 1, 1, 1));
+        let fb = b.add_buffer(&[1u8; 9]);
+        let t_in = b.add_quant_tensor("in", DType::I8, &[1, 4, 4, 1], None, q(0.5, -1));
+        let t_pads = b.add_tensor("pads", DType::I32, &[4, 2], Some(pb));
+        let t_pad = b.add_quant_tensor("padded", DType::I8, &[1, 6, 6, 1], None, q(0.5, -1));
+        let t_f = b.add_quant_tensor("w", DType::I8, &[1, 3, 3, 1], Some(fb), q(0.1, 0));
+        let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4, 4, 1], None, q(0.7, 3));
+        b.add_op(BuiltinOp::Pad, &[t_in, t_pads], &[t_pad], vec![]);
+        b.add_op(
+            BuiltinOp::Conv2d,
+            &[t_pad, t_f, -1],
+            &[t_out],
+            conv_options(Padding::Valid, Activation::None, (1, 1), (1, 1), None),
+        );
+        b.set_io(&[t_in], &[t_out]);
+        b.add_metadata("note", b"hello");
+        let plan: Vec<u8> = [0i32; 5].iter().flat_map(|v| v.to_le_bytes()).collect();
+        b.add_metadata(OFFLINE_PLAN_KEY, &plan);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        let RewriteOutcome::Rewritten { model, .. } = rewrite(&m, None).unwrap() else {
+            panic!("expected a rewrite");
+        };
+        assert_eq!(model.metadata("note").unwrap(), b"hello");
+        assert!(model.offline_plan().is_none());
+        assert_eq!(model.description(), "meta");
+    }
+
+    #[test]
+    fn fused_specs_rejects_malformed_blobs() {
+        let mut b = ModelBuilder::new("bad-fused");
+        let t0 = b.add_tensor("t", DType::F32, &[1], None);
+        b.add_op(BuiltinOp::Relu, &[t0], &[t0], vec![]);
+        b.set_io(&[t0], &[t0]);
+        b.add_metadata(REWRITE_FUSED_KEY, &[1, 2, 3]);
+        let m = Model::from_bytes(&b.finish()).unwrap();
+        assert!(fused_specs(&m).is_err());
+
+        let mut rec = vec![0u8; FUSED_RECORD_SIZE];
+        rec[0] = 9; // op index out of range
+        let mut b2 = ModelBuilder::new("bad-fused-2");
+        let t0 = b2.add_tensor("t", DType::F32, &[1], None);
+        b2.add_op(BuiltinOp::Relu, &[t0], &[t0], vec![]);
+        b2.set_io(&[t0], &[t0]);
+        b2.add_metadata(REWRITE_FUSED_KEY, &rec);
+        let m2 = Model::from_bytes(&b2.finish()).unwrap();
+        assert!(fused_specs(&m2).is_err());
+    }
+}

@@ -48,3 +48,12 @@ pub const NO_BUFFER: u32 = u32::MAX;
 pub const BUFFER_ALIGN: usize = 16;
 /// Metadata key under which the offline memory plan is stored (§4.4.2).
 pub const OFFLINE_PLAN_KEY: &str = "OfflineMemoryAllocation";
+/// Metadata key carrying rewrite-produced tensor aliases: pairs of
+/// `(alias_tensor, source_tensor)` u32 LE indices. An aliased tensor is
+/// a pure view of its source (an elided no-op Reshape); the planner
+/// places both at one arena offset (see `crate::rewriter`).
+pub const REWRITE_ALIAS_KEY: &str = "tmf.rewrite.aliases";
+/// Metadata key carrying rewrite-produced fused-epilogue records: one
+/// 28-byte LE record per fused scalar Add/Mul folded into a producing
+/// conv/FC's requant epilogue (see `crate::rewriter::fused_specs`).
+pub const REWRITE_FUSED_KEY: &str = "tmf.rewrite.fused";

@@ -352,6 +352,26 @@ impl Model {
         Some(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
+    /// Rewrite-produced tensor aliases: `(alias_tensor, source_tensor)`
+    /// index pairs written by [`crate::rewriter`] when it elides a view
+    /// op (no-op Reshape). The alias tensor shares its source's arena
+    /// bytes; the planner merges their lifetimes onto one offset.
+    pub fn rewrite_aliases(&self) -> Option<Vec<(u32, u32)>> {
+        let raw = self.metadata(super::REWRITE_ALIAS_KEY)?;
+        if raw.is_empty() || raw.len() % 8 != 0 {
+            return None;
+        }
+        Some(
+            raw.chunks_exact(8)
+                .map(|c| {
+                    let a = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    let s = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+                    (a, s)
+                })
+                .collect(),
+        )
+    }
+
     /// Size of the serialized model in bytes (the "flash" footprint).
     pub fn serialized_size(&self) -> usize {
         self.data.len()

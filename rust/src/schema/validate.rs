@@ -5,11 +5,17 @@
 //! checks *graph-level* invariants the interpreter relies on:
 //!
 //! * the operator list is topologically consistent — every non-constant
-//!   op input is either a graph input, a variable, or produced by an
-//!   **earlier** op (the paper's sorted-list representation, §4.3.2);
+//!   op input is either a graph input, a variable, produced by an
+//!   **earlier** op (the paper's sorted-list representation, §4.3.2), or
+//!   an alias of such a tensor (rewrite metadata, see below);
 //! * no tensor is written by two ops;
 //! * graph outputs are actually produced;
-//! * constant tensors are never written.
+//! * constant tensors are never written;
+//! * rewrite aliases (`tmf.rewrite.aliases`, written by
+//!   [`crate::rewriter`] when it elides a view op) are well-formed: both
+//!   endpoints in range, the alias arena-resident and non-variable, and
+//!   never written by any op — an alias *is* its source's bytes, so it
+//!   becomes available exactly when its source does.
 
 use super::model::Model;
 use crate::error::{Error, Result};
@@ -50,6 +56,55 @@ pub fn validate_report(model: &Model) -> ValidationReport {
     let mut available = vec![false; n];
     let mut written_by: Vec<Option<usize>> = vec![None; n];
 
+    // Rewrite aliases: (alias, source) pairs. An alias tensor is a pure
+    // view of its source — no op writes it; it becomes available the
+    // moment its (transitive) source is.
+    let aliases = model.rewrite_aliases().unwrap_or_default();
+    let mut alias_of: Vec<Option<usize>> = vec![None; n];
+    for &(a, s) in &aliases {
+        let (a, s) = (a as usize, s as usize);
+        if a >= n || s >= n {
+            report
+                .issues
+                .push(format!("rewrite alias ({a} -> {s}) references out-of-range tensors"));
+            continue;
+        }
+        if a == s {
+            report.issues.push(format!("rewrite alias {a} aliases itself"));
+            continue;
+        }
+        if alias_of[a].is_some() {
+            report.issues.push(format!("tensor {a} appears twice as a rewrite alias"));
+            continue;
+        }
+        let meta = &model.tensors()[a];
+        if meta.buffer.is_some() || meta.is_variable {
+            report.issues.push(format!(
+                "rewrite alias tensor {a} ('{}') must be a plain arena tensor",
+                meta.name
+            ));
+            continue;
+        }
+        alias_of[a] = Some(s);
+    }
+    // Fixpoint propagation: alias availability follows its source's
+    // (chains of aliases resolve in ≤ n rounds; cycles simply never
+    // become available and surface as ordinary topology issues).
+    let propagate = |available: &mut Vec<bool>| loop {
+        let mut changed = false;
+        for (a, src) in alias_of.iter().enumerate() {
+            if let Some(s) = src {
+                if available[*s] && !available[a] {
+                    available[a] = true;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    };
+
     for &i in model.inputs() {
         available[i as usize] = true;
     }
@@ -58,6 +113,7 @@ pub fn validate_report(model: &Model) -> ValidationReport {
             available[idx] = true;
         }
     }
+    propagate(&mut available);
 
     for (op_idx, op) in model.operators().iter().enumerate() {
         for &t in &op.inputs {
@@ -91,9 +147,18 @@ pub fn validate_report(model: &Model) -> ValidationReport {
                     ));
                 }
             }
+            if alias_of[ti].is_some() {
+                report.issues.push(format!(
+                    "op #{op_idx} ({}) writes rewrite-alias tensor {t} ('{}') — aliases are \
+                     read-only views of their source",
+                    op.key(),
+                    meta.name
+                ));
+            }
             written_by[ti] = Some(op_idx);
             available[ti] = true;
         }
+        propagate(&mut available);
     }
 
     for &t in model.outputs() {

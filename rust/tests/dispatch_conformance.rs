@@ -510,6 +510,194 @@ fn person_detection_like_batched_matches_sequential_across_tiers() {
     batched_twin_sweep("person-detection-like", person_detection_like_model);
 }
 
+// ---------------------------------------------------------------------------
+// Rewrite conformance sweep: optimized graph vs skip_rewrite ablation
+// ---------------------------------------------------------------------------
+
+/// Synthetic graph built to trip every rewriter pass at once: an
+/// elidable `Pad` (SAME-compatible geometry feeding a VALID conv), a
+/// no-op `Reshape`, and an identity `Dequantize` → `Quantize` round
+/// trip, then an FC so the GEMM tiers stay exercised. The rewriter must
+/// remove at least 3 ops (it removes 4) and the planned graph must be
+/// bit-identical to the unrewritten one.
+fn pad_reshape_quant_model() -> Model {
+    let mut rng = Rng::seeded(0x9A0);
+    let mut b = ModelBuilder::new("pad-reshape-quant");
+    let t_in = b.add_quant_tensor("in", DType::I8, &[1, 8, 8, 4], None, q(0.5, -1));
+
+    // Explicit NHWC pad (1,1)x(1,1): [1,8,8,4] -> [1,10,10,4].
+    let pads: Vec<u8> =
+        [0i32, 0, 1, 1, 1, 1, 0, 0].iter().flat_map(|v| v.to_le_bytes()).collect();
+    let pbuf = b.add_buffer(&pads);
+    let t_pads = b.add_tensor("pads", DType::I32, &[4, 2], Some(pbuf));
+    let t_pad = b.add_quant_tensor("padded", DType::I8, &[1, 10, 10, 4], None, q(0.5, -1));
+    b.add_op(BuiltinOp::Pad, &[t_in, t_pads], &[t_pad], vec![]);
+
+    // VALID 3x3 conv over the padded input == SAME conv over the raw
+    // input: exactly the shape fold-pad rewrites.
+    let w0 = b.add_buffer(&i8_buf(&mut rng, 8 * 3 * 3 * 4));
+    let t_w0 = b.add_quant_tensor("w0", DType::I8, &[8, 3, 3, 4], Some(w0), q(0.004, 0));
+    let b0 = b.add_buffer(&i32_buf(&mut rng, 8, -600, 600));
+    let t_b0 = b.add_tensor("b0", DType::I32, &[8], Some(b0));
+    let t_c0 = b.add_quant_tensor("conv0", DType::I8, &[1, 8, 8, 8], None, q(0.4, 3));
+    b.add_op(
+        BuiltinOp::Conv2d,
+        &[t_pad, t_w0, t_b0],
+        &[t_c0],
+        conv_options(Padding::Valid, Activation::Relu, (1, 1), (1, 1), None),
+    );
+
+    // No-op reshape (same bytes): becomes a planner alias.
+    let t_flat = b.add_quant_tensor("flat", DType::I8, &[1, 512], None, q(0.4, 3));
+    b.add_op(BuiltinOp::Reshape, &[t_c0], &[t_flat], vec![]);
+
+    // Identity dequantize/quantize round trip (same scale/zp both ends).
+    let t_f = b.add_tensor("deq", DType::F32, &[1, 512], None);
+    b.add_op(BuiltinOp::Dequantize, &[t_flat], &[t_f], vec![]);
+    let t_q = b.add_quant_tensor("req", DType::I8, &[1, 512], None, q(0.4, 3));
+    b.add_op(BuiltinOp::Quantize, &[t_f], &[t_q], vec![]);
+
+    // FC 512 -> 4 keeps the packed GEMM path in the sweep.
+    let w1 = b.add_buffer(&i8_buf(&mut rng, 4 * 512));
+    let t_w1 = b.add_quant_tensor("w1", DType::I8, &[4, 512], Some(w1), q(0.01, 0));
+    let b1 = b.add_buffer(&i32_buf(&mut rng, 4, -500, 500));
+    let t_b1 = b.add_tensor("b1", DType::I32, &[4], Some(b1));
+    let t_out = b.add_quant_tensor("out", DType::I8, &[1, 4], None, q(1.0, -3));
+    b.add_op(
+        BuiltinOp::FullyConnected,
+        &[t_q, t_w1, t_b1],
+        &[t_out],
+        fully_connected_options(Activation::None),
+    );
+    b.set_io(&[t_in], &[t_out]);
+    Model::from_bytes(&b.finish()).unwrap()
+}
+
+/// The rewriter's headline numbers on the synthetic graph: >= 3 ops gone
+/// (pad fold + reshape elision + dequant/quant pair) and a strictly
+/// smaller activation high-water than the `skip_rewrite` ablation, while
+/// staying bit-exact.
+#[test]
+fn rewriter_shrinks_synthetic_graph_and_stays_bit_exact() {
+    use tfmicro::interpreter::Options;
+    use tfmicro::rewriter::{self, RewriteOutcome};
+
+    let model = pad_reshape_quant_model();
+    let resolver = OpResolver::with_reference_ops();
+
+    match rewriter::rewrite(&model, Some(&resolver)).unwrap() {
+        RewriteOutcome::Unchanged => panic!("synthetic graph must be rewritable"),
+        RewriteOutcome::Rewritten { log, .. } => {
+            assert!(
+                log.ops_removed() >= 3,
+                "expected >= 3 ops removed (pad + reshape + dequant/quant), got {}:\n{log:?}",
+                log.ops_removed()
+            );
+        }
+    }
+
+    let inputs = random_inputs(&model, 4, 0xA11A);
+    let run = |skip_rewrite: bool| -> (Vec<Vec<i8>>, usize) {
+        let mut arena = Arena::new(128 * 1024);
+        let mut interp = MicroInterpreter::with_options(
+            &model,
+            &resolver,
+            arena.as_mut_slice(),
+            Options { skip_rewrite, ..Default::default() },
+        )
+        .unwrap();
+        let mut outs = Vec::new();
+        for input in &inputs {
+            interp.input_mut(0).unwrap().copy_from_i8(input).unwrap();
+            interp.invoke().unwrap();
+            outs.push(interp.output(0).unwrap().as_i8().unwrap().to_vec());
+        }
+        (outs, interp.arena_usage().nonpersistent)
+    };
+
+    let (out_rw, mem_rw) = run(false);
+    let (out_skip, mem_skip) = run(true);
+    assert_eq!(out_rw, out_skip, "rewrite changed results");
+    assert!(
+        mem_rw < mem_skip,
+        "rewritten high-water {mem_rw} must be strictly below skip_rewrite {mem_skip}"
+    );
+}
+
+/// The rewrite ablation contract, swept across every dispatch tier and
+/// batch size: a model prepared with the rewriter on must produce
+/// bit-identical outputs to the same model prepared with
+/// `skip_rewrite`, under every forced backend, for m in {1, 2, 8}
+/// (single-lane plus ragged and packed batched layouts). This is the
+/// end-to-end guarantee behind every pass: rewrites are invisible
+/// except to the arena.
+fn rewrite_twin_sweep(name: &str, make: fn() -> Model) {
+    use std::sync::Arc;
+    use tfmicro::interpreter::{Options, PreparedModel};
+
+    let probe = make();
+    let inputs = random_inputs(&probe, 8, 0x5EED5);
+    let resolver = OpResolver::with_optimized_ops();
+
+    for m in [1usize, 2, 8] {
+        for backend in GemmBackend::all() {
+            let Some(_guard) = ForceDispatch::force(backend) else {
+                eprintln!("SKIP {name} m={m}: backend {backend} unavailable on this machine");
+                continue;
+            };
+            let run = |skip_rewrite: bool| -> Vec<Vec<i8>> {
+                let pm = PreparedModel::build(
+                    Arc::new(make()),
+                    &resolver,
+                    Options { skip_rewrite, max_batch: m, ..Default::default() },
+                )
+                .expect("build");
+                let mut es = pm.exec_state();
+                let mut outs = Vec::new();
+                for input in inputs.iter().take(4) {
+                    pm.input_mut(&mut es, 0).unwrap().copy_from_i8(input).unwrap();
+                    pm.invoke(&mut es).unwrap();
+                    outs.push(pm.output(&es, 0).unwrap().as_i8().unwrap().to_vec());
+                }
+                if m > 1 {
+                    let mut esb = pm.exec_state();
+                    {
+                        let mut view = pm.input_mut_batched(&mut esb, 0, m).unwrap();
+                        let dst = view.as_i8_mut().unwrap();
+                        let lane_n = dst.len() / m;
+                        for (b, input) in inputs.iter().take(m).enumerate() {
+                            dst[b * lane_n..(b + 1) * lane_n].copy_from_slice(input);
+                        }
+                    }
+                    pm.invoke_batched(&mut esb, m).unwrap();
+                    outs.push(pm.output_batched(&esb, 0, m).unwrap().as_i8().unwrap().to_vec());
+                }
+                outs
+            };
+            assert_eq!(
+                run(false),
+                run(true),
+                "{name} m={m} {backend}: rewritten graph differs from skip_rewrite"
+            );
+        }
+    }
+}
+
+#[test]
+fn hotword_like_rewrite_matches_skip_rewrite_across_tiers() {
+    rewrite_twin_sweep("hotword-like", hotword_like_model);
+}
+
+#[test]
+fn person_detection_like_rewrite_matches_skip_rewrite_across_tiers() {
+    rewrite_twin_sweep("person-detection-like", person_detection_like_model);
+}
+
+#[test]
+fn pad_reshape_quant_rewrite_matches_skip_rewrite_across_tiers() {
+    rewrite_twin_sweep("pad-reshape-quant", pad_reshape_quant_model);
+}
+
 /// The real exported models, when `artifacts/` exists (otherwise the
 /// builder-made graphs above carry the sweep).
 #[test]

@@ -398,7 +398,16 @@ fn arena_usage_detail_accounts_for_everything() {
     let model = Model::from_bytes(&b.finish()).unwrap();
     let resolver = OpResolver::with_reference_ops();
     let mut arena = Arena::new(16 * 1024);
-    let interp = MicroInterpreter::new(&model, &resolver, &mut arena).unwrap();
+    // The graph rewriter would fold the standalone Relu into the Add and
+    // drop `mid`; this test pins the *unoptimized* per-tensor accounting,
+    // so opt out explicitly.
+    let interp = MicroInterpreter::with_options(
+        &model,
+        &resolver,
+        arena.as_mut_slice(),
+        Options { skip_rewrite: true, ..Default::default() },
+    )
+    .unwrap();
 
     let d = interp.arena_usage_detail();
     let u = interp.arena_usage();

@@ -198,7 +198,7 @@ fn offline_plan_end_to_end() {
 
     // Compute the plan from an unplanned copy of the model.
     let unplanned = build(None);
-    let info = analyze_lifetimes(&unplanned);
+    let info = analyze_lifetimes(&unplanned).unwrap();
     let fixed = OfflinePlanner::precompute(&info.requests, 16).unwrap();
     let planned = build(Some(fixed));
     assert!(planned.offline_plan().is_some());
